@@ -1,0 +1,55 @@
+//! Gradient-accuracy study on the paper's toy problem (Eq. 27–29), pure
+//! Rust (no artifacts needed): compares naive / adjoint / ACA against the
+//! analytic gradient across solvers and tolerances — a richer version of
+//! the paper's Fig 6.
+//!
+//!     cargo run --release --offline --example gradient_error
+
+use anyhow::Result;
+
+use nodal::grad::{self, Method};
+use nodal::ode::analytic::Linear;
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+
+fn main() -> Result<()> {
+    let z0 = 1.0f32;
+    let k = 0.5f32;
+    let t_end = 5.0;
+    let f = Linear::new(k, 1);
+    let exact_z = f.exact_dl_dz0(z0, t_end);
+    let exact_k = f.exact_dl_dk(z0, t_end);
+    println!("dz/dt = {k}·z, T = {t_end};  dL/dz0 = {exact_z:.4}, dL/dk = {exact_k:.4}\n");
+
+    println!(
+        "{:<10} {:<9} {:>12} {:>12} {:>9} {:>7}",
+        "solver", "tol", "rel err dz0", "rel err dk", "method", "NFE"
+    );
+    for tab in [tableau::heun_euler(), tableau::rk23(), tableau::dopri5()] {
+        for tol in [1e-3, 1e-5, 1e-7] {
+            for method in Method::all() {
+                let opts = IntegrateOpts {
+                    record_trials: true,
+                    ..IntegrateOpts::with_tol(tol, tol * 1e-2)
+                };
+                let traj = integrate(&f, 0.0, t_end, &[z0], tab, &opts)?;
+                let zt = traj.last()[0];
+                let g = grad::backward(&f, tab, &traj, &[2.0 * zt], method, &opts)?;
+                let rz = ((g.dl_dz0[0] as f64 - exact_z) / exact_z).abs();
+                let rk = ((g.dl_dtheta[0] as f64 - exact_k) / exact_k).abs();
+                println!(
+                    "{:<10} {:<9.0e} {:>12.3e} {:>12.3e} {:>9} {:>7}",
+                    tab.name,
+                    tol,
+                    rz,
+                    rk,
+                    method.name(),
+                    g.meter.nfe_forward + g.meter.nfe_backward,
+                );
+            }
+        }
+        println!();
+    }
+    println!("note the naive method's h-chain washing out dL/dk (vanishing gradient,");
+    println!("paper Sec 3.3) and the adjoint method's drift growing with tolerance.");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: train a small Neural ODE classifier on the two-spirals task
+//! with the Adaptive Checkpoint Adjoint method, end to end through the
+//! Rust→PJRT stack.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+
+use nodal::data::SpiralDataset;
+use nodal::grad::Method;
+use nodal::models::NodeSystem;
+use nodal::ode::tableau;
+use nodal::runtime::{Engine, HloModel};
+use nodal::ode::OdeFunc;
+use nodal::train::{Optimizer, Sgd};
+
+fn main() -> Result<()> {
+    // 1. Load the AOT-compiled spiral NODE (built once by `make artifacts`).
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let dir = nodal::runtime::artifact_root().join("spiral");
+    let mut model = HloModel::load(&mut engine, &dir)?;
+    model.init_params(0)?;
+    let batch = model.manifest.batch;
+
+    // 2. Wrap it in a NodeSystem: HeunEuler adaptive solver + ACA gradients.
+    let system = NodeSystem::new(model, tableau::heun_euler(), Method::Aca);
+
+    // 3. Synthetic two-spirals data.
+    let data = SpiralDataset::generate(1024, 256, 0.03, 7);
+
+    // 4. Plain SGD training loop over the public API.
+    let mut system = system;
+    let mut opt = Sgd::new(0.1, 0.9, 1e-4);
+    let mut rng = nodal::util::Pcg64::seed(1);
+    for epoch in 0..8 {
+        let order = rng.permutation(data.len());
+        let mut loss_sum = 0.0;
+        let mut batches = 0;
+        for chunk in order.chunks(batch) {
+            if chunk.len() < batch {
+                continue;
+            }
+            let (x, y) = data.gather(chunk);
+            let (loss, grad, _meter) = system.loss_grad(&x, &y)?;
+            let mut params = system.model.params().to_vec();
+            opt.step(&mut params, &grad);
+            system.model.set_params(&params);
+            loss_sum += loss;
+            batches += 1;
+        }
+
+        // Evaluate.
+        let mut correct = 0;
+        let mut total = 0;
+        let mut idx = 0;
+        while idx + batch <= data.test_len() {
+            let ids: Vec<usize> = (idx..idx + batch).collect();
+            let (x, y) = data.gather_test(&ids);
+            let (_, pred) = system.predict(&x, &y)?;
+            if let nodal::runtime::hlo_model::Target::Classes(truth) = &y {
+                let hats = HloModel::argmax_classes(&pred, 2);
+                correct += hats.iter().zip(truth).filter(|(h, t)| **h == **t as usize).count();
+                total += truth.len();
+            }
+            idx += batch;
+        }
+        println!(
+            "epoch {epoch}: train loss {:.4}  test acc {:.3}",
+            loss_sum / batches as f64,
+            correct as f64 / total as f64
+        );
+    }
+    println!("done — see examples/image_classification.rs for the full driver");
+    Ok(())
+}

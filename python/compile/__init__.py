@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — `make artifacts` runs it once, the Rust
+coordinator consumes only the emitted HLO text + manifests.
+"""

@@ -1,0 +1,172 @@
+"""AOT lowering: JAX model zoo -> HLO text artifacts + manifests.
+
+``make artifacts`` runs this once; the Rust coordinator then loads the HLO
+text through the PJRT C API and Python never runs again.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--model spiral,img,...]
+"""
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so every
+    artifact's outputs unwrap uniformly on the Rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _spec_json(s) -> Dict[str, Any]:
+    return {"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+
+
+def lower_artifact(fn, arg_specs: List[jax.ShapeDtypeStruct], out_dir: str, name: str):
+    """Lower ``fn`` at the given example specs; write HLO text; return the
+    manifest entry."""
+    # keep_unused: autonomous dynamics ignore `t`, parameterless heads ignore
+    # theta — the artifact signature must stay stable regardless.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as fh:
+        fh.write(text)
+    # Output specs from the jitted abstract eval.
+    out_aval = jax.eval_shape(fn, *arg_specs)
+    outs = jax.tree_util.tree_leaves(out_aval)
+    return {
+        "file": fname,
+        "inputs": [_spec_json(s) for s in arg_specs],
+        "outputs": [_spec_json(s) for s in outs],
+    }
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_node_model(m: M.NodeModel, root: str) -> None:
+    out_dir = os.path.join(root, m.name)
+    os.makedirs(out_dir, exist_ok=True)
+    p, b, d = m.n_params, m.batch, m.dim_state
+    theta, t, z, w = f32(p), f32(1), f32(b, d), f32(b, d)
+    y = m.example_y()
+
+    arts = {
+        "init_params": lower_artifact(m.init_params_fn(), [i32(1)], out_dir, "init_params"),
+        "f_eval": lower_artifact(m.f_eval_fn(), [theta, t, z], out_dir, "f_eval"),
+        "f_vjp": lower_artifact(m.f_vjp_fn(), [theta, t, z, w], out_dir, "f_vjp"),
+        "f_jvp": lower_artifact(m.f_jvp_fn(), [theta, t, z, w], out_dir, "f_jvp"),
+        "decode_loss": lower_artifact(m.decode_loss_fn(), [theta, z, y], out_dir, "decode_loss"),
+        "decode_loss_vjp": lower_artifact(
+            m.decode_loss_vjp_fn(), [theta, z, y], out_dir, "decode_loss_vjp"
+        ),
+    }
+    if m.encode is not None:
+        x = f32(b, m.dim_in)
+        arts["encode"] = lower_artifact(m.encode_fn(), [theta, x], out_dir, "encode")
+        arts["encode_vjp"] = lower_artifact(
+            m.encode_vjp_fn(), [theta, x, w], out_dir, "encode_vjp"
+        )
+
+    manifest = {
+        "name": m.name,
+        "kind": "node",
+        "batch": b,
+        "dim_in": m.dim_in,
+        "dim_state": d,
+        "dim_out": m.dim_out,
+        "n_params": p,
+        "loss": m.loss,
+        "has_encoder": m.encode is not None,
+        "artifacts": arts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"  {m.name}: P={p} B={b} D={d} -> {len(arts)} artifacts")
+
+
+def export_recurrent_model(m: M.RecurrentModel, root: str) -> None:
+    out_dir = os.path.join(root, m.name)
+    os.makedirs(out_dir, exist_ok=True)
+    theta = f32(m.n_params)
+    x, y = m.example_x(), m.example_y()
+
+    arts = {
+        "init_params": lower_artifact(m.init_params_fn(), [i32(1)], out_dir, "init_params"),
+        "loss_grad": lower_artifact(m.loss_grad_fn(), [theta, x, y], out_dir, "loss_grad"),
+        "predict": lower_artifact(m.predict_fn(), [theta, x], out_dir, "predict"),
+    }
+    rollout = m.rollout_fn()
+    if rollout is not None:
+        arts["rollout"] = lower_artifact(
+            rollout, [theta, f32(m.batch, m.dim_in)], out_dir, "rollout"
+        )
+
+    manifest = {
+        "name": m.name,
+        "kind": "recurrent",
+        "batch": m.batch,
+        "seq_len": m.seq_len,
+        "dim_in": m.dim_in,
+        "dim_out": m.dim_out,
+        "hidden": m.hidden,
+        "cell": m.cell,
+        "n_params": m.n_params,
+        "rollout_steps": m.rollout_steps,
+        "artifacts": arts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"  {m.name}: P={m.n_params} B={m.batch} T={m.seq_len} -> {len(arts)} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root directory")
+    ap.add_argument("--model", default="", help="comma-separated model filter")
+    args = ap.parse_args()
+    wanted = {m for m in args.model.split(",") if m}
+    os.makedirs(args.out, exist_ok=True)
+
+    print("lowering NODE models:")
+    for m in M.node_models():
+        if not wanted or m.name in wanted:
+            export_node_model(m, args.out)
+    print("lowering recurrent baselines:")
+    for m in M.recurrent_models():
+        if not wanted or m.name in wanted:
+            export_recurrent_model(m, args.out)
+    # Freshness stamp for make.
+    with open(os.path.join(args.out, ".stamp"), "w") as fh:
+        fh.write("ok\n")
+    print(f"artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the ACA Neural-ODE stack.
+
+Kernels are authored for TPU-style tiling (VMEM blocks, MXU matmuls) but
+lowered with ``interpret=True`` so the resulting HLO runs on the CPU PJRT
+client — real-TPU lowering would emit Mosaic custom-calls the CPU plugin
+cannot execute (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .fused_linear import fused_linear
+from .pairwise_aug import pairwise_aug, AUG_FEATURES
+
+__all__ = ["fused_linear", "pairwise_aug", "AUG_FEATURES"]

@@ -1,0 +1,586 @@
+"""Layer-2 JAX model zoo for the ACA reproduction.
+
+Every model exposes a uniform artifact contract over a single flat parameter
+vector ``theta[P]`` (DESIGN.md §5):
+
+    init_params(seed[1] i32)                  -> theta[P]
+    encode(theta, x[B,Din])                   -> z0[B,D]          (optional)
+    encode_vjp(theta, x, w[B,D])              -> dtheta[P]
+    f_eval(theta, t[1], z[B,D])               -> dz[B,D]
+    f_vjp(theta, t, z, w[B,D])                -> (wJz[B,D], wJth[P])
+    f_jvp(theta, t, z, v[B,D])                -> Jv[B,D]
+    decode_loss(theta, zT[B,D], y[...])       -> (loss[1], pred[B,Dout])
+    decode_loss_vjp(theta, zT, y)             -> (dzT[B,D], dtheta[P], loss[1])
+
+Recurrent baselines (LSTM / GRU / RNN) instead export whole-graph
+``loss_grad`` and ``predict`` / ``rollout`` artifacts.
+
+The dynamics `f` are autonomous (paper Eq. 31) but take `t` for signature
+uniformity. MLP layers go through the L1 Pallas kernel
+(:func:`compile.kernels.fused_linear`); the three-body augmented features
+through :func:`compile.kernels.pairwise_aug`.
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import AUG_FEATURES, fused_linear, pairwise_aug
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor inside the flat theta vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    #: init std; biases use 0.0, weights 1/sqrt(fan_in) by default.
+    scale: Optional[float] = None
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def default_scale(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        if len(self.shape) <= 1:
+            return 0.0  # bias
+        fan_in = int(np.prod(self.shape[:-1]))
+        return float(1.0 / np.sqrt(max(fan_in, 1)))
+
+
+def n_params(specs: List[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def unpack(theta, specs: List[ParamSpec]) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors."""
+    out, off = {}, 0
+    for s in specs:
+        out[s.name] = theta[off : off + s.size].reshape(s.shape)
+        off += s.size
+    return out
+
+
+def make_init(specs: List[ParamSpec]) -> Callable:
+    """Build ``init_params(seed[1] i32) -> theta[P]`` (pure HLO via threefry)."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0].astype(jnp.uint32))
+        parts = []
+        for s in specs:
+            key, sub = jax.random.split(key)
+            sc = s.default_scale()
+            if sc == 0.0:
+                parts.append(jnp.zeros((s.size,), jnp.float32))
+            else:
+                parts.append(sc * jax.random.normal(sub, (s.size,), jnp.float32))
+        return jnp.concatenate(parts)
+
+    return init
+
+
+# --------------------------------------------------------------------------
+# NODE model definition
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NodeModel:
+    """A Neural-ODE model: encoder -> ODE block -> loss head."""
+
+    name: str
+    specs: List[ParamSpec]
+    batch: int
+    dim_in: int
+    dim_state: int
+    dim_out: int
+    #: "xent" (y: int32[B]) or "mse" (y: f32[B, dim_out]).
+    loss: str
+    f: Callable  # (params_dict, z[B,D]) -> dz[B,D]
+    encode: Optional[Callable]  # (params_dict, x[B,Din]) -> z0[B,D]
+    head: Callable  # (params_dict, z[B,D]) -> pred[B,Dout]
+
+    @property
+    def n_params(self) -> int:
+        return n_params(self.specs)
+
+    # ---- artifact functions (flat-theta signatures) ----
+
+    def init_params_fn(self):
+        return make_init(self.specs)
+
+    def f_eval_fn(self):
+        def f_eval(theta, t, z):
+            del t  # autonomous
+            return self.f(unpack(theta, self.specs), z)
+
+        return f_eval
+
+    def f_vjp_fn(self):
+        f_eval = self.f_eval_fn()
+
+        def f_vjp(theta, t, z, w):
+            _, pull = jax.vjp(lambda th, zz: f_eval(th, t, zz), theta, z)
+            dth, dz = pull(w)
+            return dz, dth
+
+        return f_vjp
+
+    def f_jvp_fn(self):
+        f_eval = self.f_eval_fn()
+
+        def f_jvp(theta, t, z, v):
+            _, jv = jax.jvp(lambda zz: f_eval(theta, t, zz), (z,), (v,))
+            return jv
+
+        return f_jvp
+
+    def encode_fn(self):
+        if self.encode is None:
+            return None
+        enc_impl = self.encode
+
+        def encode(theta, x):
+            return enc_impl(unpack(theta, self.specs), x)
+
+        return encode
+
+    def encode_vjp_fn(self):
+        enc = self.encode_fn()
+        if enc is None:
+            return None
+
+        def encode_vjp(theta, x, w):
+            _, pull = jax.vjp(lambda th: enc(th, x), theta)
+            (dth,) = pull(w)
+            return dth
+
+        return encode_vjp
+
+    def _loss(self, theta, z, y):
+        pred = self.head(unpack(theta, self.specs), z)
+        if self.loss == "xent":
+            logp = jax.nn.log_softmax(pred, axis=-1)
+            nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+            loss = jnp.mean(nll)
+        elif self.loss == "mse":
+            loss = jnp.mean((pred - y) ** 2)
+        else:
+            raise ValueError(self.loss)
+        return loss.reshape((1,)), pred
+
+    def decode_loss_fn(self):
+        def decode_loss(theta, z, y):
+            return self._loss(theta, z, y)
+
+        return decode_loss
+
+    def decode_loss_vjp_fn(self):
+        def decode_loss_vjp(theta, z, y):
+            def scalar_loss(th, zz):
+                return self._loss(th, zz, y)[0][0]
+
+            loss, pull = jax.vjp(scalar_loss, theta, z)
+            dth, dz = pull(jnp.float32(1.0))
+            return dz, dth, loss.reshape((1,))
+
+        return decode_loss_vjp
+
+    def example_y(self):
+        if self.loss == "xent":
+            return jax.ShapeDtypeStruct((self.batch,), jnp.int32)
+        return jax.ShapeDtypeStruct((self.batch, self.dim_out), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Spiral classifier (quickstart / 2-D sanity task)
+# --------------------------------------------------------------------------
+
+
+def spiral_model(batch: int = 64) -> NodeModel:
+    d, h = 16, 32
+    specs = [
+        ParamSpec("We", (2, d)),
+        ParamSpec("be", (d,)),
+        ParamSpec("W1", (d, h)),
+        ParamSpec("b1", (h,)),
+        ParamSpec("W2", (h, d), scale=0.1 / np.sqrt(h)),
+        ParamSpec("b2", (d,)),
+        ParamSpec("Wd", (d, 2)),
+        ParamSpec("bd", (2,)),
+    ]
+
+    def f(p, z):
+        u = fused_linear(z, p["W1"], p["b1"], "tanh")
+        return fused_linear(u, p["W2"], p["b2"], "none")
+
+    def encode(p, x):
+        return fused_linear(x, p["We"], p["be"], "none")
+
+    def head(p, z):
+        return fused_linear(z, p["Wd"], p["bd"], "none")
+
+    return NodeModel(
+        name="spiral",
+        specs=specs,
+        batch=batch,
+        dim_in=2,
+        dim_state=d,
+        dim_out=2,
+        loss="xent",
+        f=f,
+        encode=encode,
+        head=head,
+    )
+
+
+# --------------------------------------------------------------------------
+# Image classifier (the CIFAR substitute; conv-NODE, paper Sec 4.2)
+# --------------------------------------------------------------------------
+
+IMG_SIDE = 16
+IMG_CH = 8
+IMG_SP = IMG_SIDE // 2  # encoder downsamples 2x
+
+
+def _conv(x, w, stride: int = 1):
+    """NCHW conv3x3, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def img_model(batch: int = 64, classes: int = 10) -> NodeModel:
+    d = IMG_CH * IMG_SP * IMG_SP  # 8 * 8 * 8 = 512
+    specs = [
+        ParamSpec("Ke", (IMG_CH, 1, 3, 3), scale=1.0 / 3.0),
+        ParamSpec("be", (IMG_CH,)),
+        ParamSpec("K1", (IMG_CH, IMG_CH, 3, 3), scale=1.0 / (3.0 * np.sqrt(IMG_CH))),
+        ParamSpec("b1", (IMG_CH,)),
+        ParamSpec("K2", (IMG_CH, IMG_CH, 3, 3), scale=0.1 / (3.0 * np.sqrt(IMG_CH))),
+        ParamSpec("b2", (IMG_CH,)),
+        ParamSpec("Wd", (IMG_CH, classes)),
+        ParamSpec("bd", (classes,)),
+    ]
+
+    def to_img(z):
+        return z.reshape(-1, IMG_CH, IMG_SP, IMG_SP)
+
+    def f(p, z):
+        u = to_img(z)
+        u = jnp.tanh(_conv(u, p["K1"]) + p["b1"][None, :, None, None])
+        u = _conv(u, p["K2"]) + p["b2"][None, :, None, None]
+        return u.reshape(z.shape)
+
+    def encode(p, x):
+        img = x.reshape(-1, 1, IMG_SIDE, IMG_SIDE)
+        u = _conv(img, p["Ke"], stride=2) + p["be"][None, :, None, None]
+        u = jnp.maximum(u, 0.0)
+        return u.reshape(x.shape[0], -1)
+
+    def head(p, z):
+        # Global average pool over space, then the L1 kernel for the head.
+        u = to_img(z).mean(axis=(2, 3))
+        return fused_linear(u, p["Wd"], p["bd"], "none")
+
+    return NodeModel(
+        name="img",
+        specs=specs,
+        batch=batch,
+        dim_in=IMG_SIDE * IMG_SIDE,
+        dim_state=d,
+        dim_out=classes,
+        loss="xent",
+        f=f,
+        encode=encode,
+        head=head,
+    )
+
+
+# --------------------------------------------------------------------------
+# Time-series latent NODE (the Mujoco/Latent-ODE substitute, paper Sec 4.3)
+# --------------------------------------------------------------------------
+
+TS_OBS = 4
+TS_ENC_WINDOW = 5  # first K observations feed the encoder
+
+
+def ts_model(batch: int = 32) -> NodeModel:
+    d, h = 8, 32
+    din = TS_OBS * TS_ENC_WINDOW
+    specs = [
+        ParamSpec("We", (din, d)),
+        ParamSpec("be", (d,)),
+        ParamSpec("W1", (d, h)),
+        ParamSpec("b1", (h,)),
+        ParamSpec("W2", (h, d), scale=0.1 / np.sqrt(h)),
+        ParamSpec("b2", (d,)),
+        ParamSpec("Wd", (d, TS_OBS)),
+        ParamSpec("bd", (TS_OBS,)),
+    ]
+
+    def f(p, z):
+        u = fused_linear(z, p["W1"], p["b1"], "tanh")
+        return fused_linear(u, p["W2"], p["b2"], "none")
+
+    def encode(p, x):
+        return fused_linear(x, p["We"], p["be"], "none")
+
+    def head(p, z):
+        return fused_linear(z, p["Wd"], p["bd"], "none")
+
+    return NodeModel(
+        name="ts",
+        specs=specs,
+        batch=batch,
+        dim_in=din,
+        dim_state=d,
+        dim_out=TS_OBS,
+        loss="mse",
+        f=f,
+        encode=encode,
+        head=head,
+    )
+
+
+# --------------------------------------------------------------------------
+# Three-body NODE — FC over augmented pairwise features (paper Eq. 33/34)
+# --------------------------------------------------------------------------
+
+
+def threebody_node_model(batch: int = 4) -> NodeModel:
+    d = 18
+    specs = [
+        ParamSpec("Wa", (AUG_FEATURES, 9), scale=0.01),
+        ParamSpec("ba", (9,)),
+    ]
+
+    def f(p, z):
+        pos, vel = z[:, :9], z[:, 9:]
+        aug = pairwise_aug(pos)
+        acc = fused_linear(aug, p["Wa"], p["ba"], "none")
+        return jnp.concatenate([vel, acc], axis=-1)
+
+    def head(p, z):
+        del p
+        return z[:, :9]  # predicted positions
+
+    return NodeModel(
+        name="tb_node",
+        specs=specs,
+        batch=batch,
+        dim_in=d,
+        dim_state=d,
+        dim_out=9,
+        loss="mse",
+        f=f,
+        encode=None,
+        head=head,
+    )
+
+
+# --------------------------------------------------------------------------
+# Recurrent baselines: LSTM (three-body, Table 5), RNN/GRU (Table 4)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RecurrentModel:
+    """Sequence-to-sequence baseline trained by whole-graph AOT autodiff.
+
+    ``loss_grad(theta, x[B,T,Din], y[B,T,Dout]) -> (loss[1], dtheta[P])``
+    ``predict(theta, x)                          -> pred[B,T,Dout]``
+    ``rollout(theta, x0[B,Din])                  -> traj[B,steps,Dout]``
+    """
+
+    name: str
+    specs: List[ParamSpec]
+    batch: int
+    seq_len: int
+    dim_in: int
+    dim_out: int
+    cell: str  # "lstm" | "gru" | "rnn"
+    hidden: int
+    #: optional per-step input transform (e.g. pairwise_aug)
+    in_transform: Optional[Callable] = None
+    #: rollout feeds predictions back as inputs (requires dim_out == dim_in)
+    rollout_steps: int = 0
+
+    @property
+    def n_params(self) -> int:
+        return n_params(self.specs)
+
+    def init_params_fn(self):
+        return make_init(self.specs)
+
+    def _step(self, p, carry, x_t):
+        h, c = carry
+        if self.cell == "lstm":
+            gates = x_t @ p["Wx"] + h @ p["Wh"] + p["b"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        elif self.cell == "gru":
+            zu = jax.nn.sigmoid(x_t @ p["Wxz"] + h @ p["Whz"] + p["bz"])
+            r = jax.nn.sigmoid(x_t @ p["Wxr"] + h @ p["Whr"] + p["br"])
+            n = jnp.tanh(x_t @ p["Wxn"] + (r * h) @ p["Whn"] + p["bn"])
+            h = (1.0 - zu) * n + zu * h
+        elif self.cell == "rnn":
+            h = jnp.tanh(x_t @ p["Wx"] + h @ p["Wh"] + p["b"])
+        else:
+            raise ValueError(self.cell)
+        return (h, c)
+
+    def _apply(self, p, x):
+        """x: [B, T, Din] -> preds [B, T, Dout] (one-step-ahead)."""
+        bsz = x.shape[0]
+        h0 = jnp.zeros((bsz, self.hidden), jnp.float32)
+        carry0 = (h0, h0)
+
+        def scan_step(carry, x_t):
+            if self.in_transform is not None:
+                x_t = self.in_transform(x_t)
+            carry = self._step(p, carry, x_t)
+            out = carry[0] @ p["Wo"] + p["bo"]
+            return carry, out
+
+        _, outs = jax.lax.scan(scan_step, carry0, jnp.swapaxes(x, 0, 1))
+        return jnp.swapaxes(outs, 0, 1)
+
+    def predict_fn(self):
+        def predict(theta, x):
+            return self._apply(unpack(theta, self.specs), x)
+
+        return predict
+
+    def loss_grad_fn(self):
+        def loss(theta, x, y):
+            pred = self._apply(unpack(theta, self.specs), x)
+            return jnp.mean((pred - y) ** 2)
+
+        def loss_grad(theta, x, y):
+            l, g = jax.value_and_grad(loss)(theta, x, y)
+            return l.reshape((1,)), g
+
+        return loss_grad
+
+    def rollout_fn(self):
+        """Autoregressive rollout: feed each prediction back as input."""
+        if self.rollout_steps <= 0:
+            return None
+
+        def rollout(theta, x0):
+            p = unpack(theta, self.specs)
+            bsz = x0.shape[0]
+            h0 = jnp.zeros((bsz, self.hidden), jnp.float32)
+
+            def scan_step(carry, _):
+                (h, c), x = carry
+                x_in = self.in_transform(x) if self.in_transform is not None else x
+                hc = self._step(p, (h, c), x_in)
+                out = hc[0] @ p["Wo"] + p["bo"]
+                return (hc, out), out
+
+            (_, _), outs = jax.lax.scan(
+                scan_step, ((h0, h0), x0), None, length=self.rollout_steps
+            )
+            return jnp.swapaxes(outs, 0, 1)
+
+        return rollout
+
+    def example_x(self):
+        return jax.ShapeDtypeStruct((self.batch, self.seq_len, self.dim_in), jnp.float32)
+
+    def example_y(self):
+        return jax.ShapeDtypeStruct((self.batch, self.seq_len, self.dim_out), jnp.float32)
+
+
+def _rec_specs(cell: str, din_t: int, hidden: int, dout: int) -> List[ParamSpec]:
+    if cell == "lstm":
+        core = [
+            ParamSpec("Wx", (din_t, 4 * hidden)),
+            ParamSpec("Wh", (hidden, 4 * hidden)),
+            ParamSpec("b", (4 * hidden,)),
+        ]
+    elif cell == "gru":
+        core = []
+        for g in ("z", "r", "n"):
+            core += [
+                ParamSpec(f"Wx{g}", (din_t, hidden)),
+                ParamSpec(f"Wh{g}", (hidden, hidden)),
+                ParamSpec(f"b{g}", (hidden,)),
+            ]
+    elif cell == "rnn":
+        core = [
+            ParamSpec("Wx", (din_t, hidden)),
+            ParamSpec("Wh", (hidden, hidden)),
+            ParamSpec("b", (hidden,)),
+        ]
+    else:
+        raise ValueError(cell)
+    return core + [ParamSpec("Wo", (hidden, dout), scale=0.01), ParamSpec("bo", (dout,))]
+
+
+def lstm_tb_model(batch: int = 4, seq_len: int = 50, aug: bool = False) -> RecurrentModel:
+    """LSTM / LSTM-aug-input three-body baselines (paper Table 5)."""
+    din_t = AUG_FEATURES if aug else 9
+    hidden = 64
+    return RecurrentModel(
+        name="tb_lstm_aug" if aug else "tb_lstm",
+        specs=_rec_specs("lstm", din_t, hidden, 9),
+        batch=batch,
+        seq_len=seq_len,
+        dim_in=9,
+        dim_out=9,
+        cell="lstm",
+        hidden=hidden,
+        in_transform=pairwise_aug if aug else None,
+        rollout_steps=200,
+    )
+
+
+def rnn_ts_model(cell: str = "gru", batch: int = 32, seq_len: int = 40) -> RecurrentModel:
+    """RNN / RNN-GRU time-series baselines (paper Table 4). Input per step is
+    the observed value concat Δt since the previous observation."""
+    hidden = 32
+    return RecurrentModel(
+        name=f"ts_{cell}",
+        specs=_rec_specs(cell, TS_OBS + 1, hidden, TS_OBS),
+        batch=batch,
+        seq_len=seq_len,
+        dim_in=TS_OBS + 1,
+        dim_out=TS_OBS,
+        cell=cell,
+        hidden=hidden,
+    )
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+def node_models() -> List[NodeModel]:
+    return [spiral_model(), img_model(), ts_model(), threebody_node_model()]
+
+
+def recurrent_models() -> List[RecurrentModel]:
+    return [
+        lstm_tb_model(aug=False),
+        lstm_tb_model(aug=True),
+        rnn_ts_model("rnn"),
+        rnn_ts_model("gru"),
+    ]

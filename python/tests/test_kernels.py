@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py is the
+core correctness signal of the build (tolerances are f32-scale).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear, pairwise_aug, AUG_FEATURES
+from compile.kernels.ref import fused_linear_ref, pairwise_aug_ref
+
+import jax
+import jax.numpy as jnp
+
+
+def _arr(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    act=st.sampled_from(["none", "tanh", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(b, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = _arr(rng, b, k), _arr(rng, k, n), _arr(rng, n)
+    got = np.asarray(fused_linear(x, w, bias, act))
+    want = np.asarray(fused_linear_ref(x, w, bias, act))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([1, 2, 8, 128]),
+    bn=st.sampled_from([1, 4, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_tile_size_invariance(bm, bn, seed):
+    """The result must not depend on the tiling."""
+    rng = np.random.default_rng(seed)
+    x, w, bias = _arr(rng, 16, 12), _arr(rng, 12, 20), _arr(rng, 20)
+    a = np.asarray(fused_linear(x, w, bias, "tanh", bm=bm, bn=bn))
+    b = np.asarray(fused_linear_ref(x, w, bias, "tanh"))
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_linear_large_scale_values():
+    """tanh saturation and big magnitudes stay exact."""
+    rng = np.random.default_rng(0)
+    x, w, bias = _arr(rng, 8, 8, scale=100.0), _arr(rng, 8, 8, scale=100.0), _arr(rng, 8)
+    got = np.asarray(fused_linear(x, w, bias, "tanh"))
+    want = np.asarray(fused_linear_ref(x, w, bias, "tanh"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("act", ["none", "tanh", "relu"])
+def test_fused_linear_grad_matches_ref_grad(act):
+    """custom_jvp tangent: reverse-mode grads equal the jnp reference grads."""
+    rng = np.random.default_rng(7)
+    x, w, bias = _arr(rng, 6, 5), _arr(rng, 5, 4), _arr(rng, 4)
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(fused_linear_ref(x, w, b, act) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_linear_jvp_matches_ref_jvp():
+    rng = np.random.default_rng(3)
+    x, w, bias = _arr(rng, 4, 6), _arr(rng, 6, 3), _arr(rng, 3)
+    dx, dw, db = _arr(rng, 4, 6), _arr(rng, 6, 3), _arr(rng, 3)
+    _, jk = jax.jvp(lambda *a: fused_linear(*a, "tanh"), (x, w, bias), (dx, dw, db))
+    _, jr = jax.jvp(lambda *a: fused_linear_ref(*a, "tanh"), (x, w, bias), (dx, dw, db))
+    np.testing.assert_allclose(np.asarray(jk), np.asarray(jr), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_linear_rejects_bad_activation():
+    rng = np.random.default_rng(1)
+    with pytest.raises(ValueError):
+        fused_linear(_arr(rng, 2, 2), _arr(rng, 2, 2), _arr(rng, 2), "gelu")
+
+
+# ---------------------------------------------------------------------------
+# pairwise_aug
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 17),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_aug_matches_ref(b, scale, seed):
+    rng = np.random.default_rng(seed)
+    r = _arr(rng, b, 9, scale=scale)
+    got = np.asarray(pairwise_aug(r))
+    want = np.asarray(pairwise_aug_ref(r))
+    assert got.shape == (b, AUG_FEATURES)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_pairwise_aug_near_collision_softened():
+    """Coincident bodies must stay finite (softening)."""
+    r = np.zeros((2, 9), np.float32)
+    out = np.asarray(pairwise_aug(r))
+    assert np.isfinite(out).all()
+
+
+def test_pairwise_aug_translation_invariant_differences():
+    """All pairwise-difference features are translation invariant; only the
+    raw-coordinate block (first 9) shifts."""
+    rng = np.random.default_rng(5)
+    r = _arr(rng, 3, 9)
+    shift = np.tile(np.array([1.0, -2.0, 0.5], np.float32), 3)
+    a = np.asarray(pairwise_aug(r))
+    b = np.asarray(pairwise_aug(r + shift[None, :]))
+    np.testing.assert_allclose(a[:, 9:], b[:, 9:], rtol=1e-4, atol=1e-5)
+    assert np.abs(a[:, :9] - b[:, :9]).max() > 0.4
+
+
+def test_pairwise_aug_grad_matches_ref():
+    rng = np.random.default_rng(11)
+    r = _arr(rng, 4, 9)
+    gk = jax.grad(lambda r: jnp.sum(pairwise_aug(r) ** 2))(r)
+    gr = jax.grad(lambda r: jnp.sum(pairwise_aug_ref(r) ** 2))(r)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_aug_feature_layout():
+    """First 9 features are the raw positions; next 3 are r_0 − r_1."""
+    r = np.arange(9, dtype=np.float32)[None, :]
+    out = np.asarray(pairwise_aug(r))
+    np.testing.assert_allclose(out[0, :9], r[0])
+    np.testing.assert_allclose(out[0, 9:12], r[0, 0:3] - r[0, 3:6], rtol=1e-6)

@@ -1,0 +1,209 @@
+"""L2 correctness: model artifact functions vs jax autodiff ground truth."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+NODE_MODELS = {m.name: m for m in M.node_models()}
+REC_MODELS = {m.name: m for m in M.recurrent_models()}
+
+
+def _theta(m, seed=0):
+    return np.asarray(m.init_params_fn()(jnp.array([seed], jnp.int32)))
+
+
+def _rand(rng, *shape, scale=0.5):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_init_params_shape_and_determinism(name):
+    m = NODE_MODELS[name]
+    a = _theta(m, 1)
+    b = _theta(m, 1)
+    c = _theta(m, 2)
+    assert a.shape == (m.n_params,)
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a - c).max() > 0, "different seeds must differ"
+    assert np.isfinite(a).all()
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_f_eval_shape_finite(name):
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(0)
+    z = _rand(rng, m.batch, m.dim_state)
+    dz = np.asarray(m.f_eval_fn()(_theta(m), jnp.zeros(1), z))
+    assert dz.shape == (m.batch, m.dim_state)
+    assert np.isfinite(dz).all()
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_f_vjp_matches_jax_vjp(name):
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(1)
+    theta = _theta(m)
+    z = _rand(rng, m.batch, m.dim_state)
+    w = _rand(rng, m.batch, m.dim_state)
+    f_eval = m.f_eval_fn()
+    wjz, wjp = m.f_vjp_fn()(theta, jnp.zeros(1), z, w)
+    # ground truth through plain jax.vjp on the same function
+    _, pull = jax.vjp(lambda th, zz: f_eval(th, jnp.zeros(1), zz), theta, z)
+    dth, dz = pull(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(wjz), np.asarray(dz), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(wjp), np.asarray(dth), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_f_vjp_vs_finite_difference(name):
+    """Independent check: directional derivative of <w, f(z)> via FD."""
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(2)
+    theta = _theta(m)
+    z = _rand(rng, m.batch, m.dim_state)
+    w = _rand(rng, m.batch, m.dim_state)
+    v = _rand(rng, m.batch, m.dim_state)
+    f_eval = m.f_eval_fn()
+    wjz, _ = m.f_vjp_fn()(theta, jnp.zeros(1), z, w)
+    eps = 1e-3
+    fp = np.asarray(f_eval(theta, jnp.zeros(1), z + eps * v))
+    fm = np.asarray(f_eval(theta, jnp.zeros(1), z - eps * v))
+    fd = float(np.sum(w * (fp - fm) / (2 * eps)))
+    got = float(np.sum(np.asarray(wjz) * v))
+    assert abs(got - fd) < 5e-2 * max(abs(fd), 1.0), (got, fd)
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_f_jvp_adjoint_identity(name):
+    """<w, J v> == <w J, v>."""
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(3)
+    theta = _theta(m)
+    z = _rand(rng, m.batch, m.dim_state)
+    w = _rand(rng, m.batch, m.dim_state)
+    v = _rand(rng, m.batch, m.dim_state)
+    jv = np.asarray(m.f_jvp_fn()(theta, jnp.zeros(1), z, v))
+    wj, _ = m.f_vjp_fn()(theta, jnp.zeros(1), z, w)
+    lhs = float(np.sum(w * jv))
+    rhs = float(np.sum(np.asarray(wj) * v))
+    assert abs(lhs - rhs) < 1e-3 * max(abs(lhs), 1.0), (lhs, rhs)
+
+
+@pytest.mark.parametrize("name", list(NODE_MODELS))
+def test_decode_loss_and_vjp_consistent(name):
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(4)
+    theta = _theta(m)
+    z = _rand(rng, m.batch, m.dim_state)
+    if m.loss == "xent":
+        y = rng.integers(0, m.dim_out, size=(m.batch,)).astype(np.int32)
+    else:
+        y = _rand(rng, m.batch, m.dim_out)
+    loss, pred = m.decode_loss_fn()(theta, z, y)
+    dz, dth, loss2 = m.decode_loss_vjp_fn()(theta, z, y)
+    assert pred.shape == (m.batch, m.dim_out)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss2), rtol=1e-6)
+    assert np.isfinite(np.asarray(dz)).all()
+    assert np.isfinite(np.asarray(dth)).all()
+    # FD check on the z gradient along a random direction.
+    v = _rand(rng, m.batch, m.dim_state, scale=1.0)
+    eps = 1e-3
+    lp = float(np.asarray(m.decode_loss_fn()(theta, z + eps * v, y)[0])[0])
+    lm = float(np.asarray(m.decode_loss_fn()(theta, z - eps * v, y)[0])[0])
+    fd = (lp - lm) / (2 * eps)
+    got = float(np.sum(np.asarray(dz) * v))
+    assert abs(got - fd) < 5e-2 * max(abs(fd), 1e-3), (got, fd)
+
+
+@pytest.mark.parametrize("name", [n for n, m in NODE_MODELS.items() if m.encode is not None])
+def test_encode_and_vjp(name):
+    m = NODE_MODELS[name]
+    rng = np.random.default_rng(5)
+    theta = _theta(m)
+    x = _rand(rng, m.batch, m.dim_in)
+    z0 = np.asarray(m.encode_fn()(theta, x))
+    assert z0.shape == (m.batch, m.dim_state)
+    w = _rand(rng, m.batch, m.dim_state)
+    dth = np.asarray(m.encode_vjp_fn()(theta, x, w))
+    assert dth.shape == (m.n_params,)
+    # ground truth
+    _, pull = jax.vjp(lambda th: m.encode_fn()(th, x), theta)
+    (want,) = pull(jnp.asarray(w))
+    np.testing.assert_allclose(dth, np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_xent_loss_value():
+    """Cross-entropy of uniform logits is log(C)."""
+    m = NODE_MODELS["spiral"]
+    theta = np.zeros(m.n_params, np.float32)  # zero head -> uniform logits
+    z = np.random.default_rng(0).standard_normal((m.batch, m.dim_state)).astype(np.float32)
+    y = np.zeros((m.batch,), np.int32)
+    loss, _ = m.decode_loss_fn()(theta, z, y)
+    np.testing.assert_allclose(np.asarray(loss)[0], np.log(2.0), rtol=1e-5)
+
+
+def test_tb_node_velocity_passthrough():
+    """d(pos)/dt must be exactly the velocity block (paper Eq. 34 structure)."""
+    m = NODE_MODELS["tb_node"]
+    rng = np.random.default_rng(6)
+    theta = _theta(m)
+    z = _rand(rng, m.batch, 18, scale=1.0)
+    dz = np.asarray(m.f_eval_fn()(theta, jnp.zeros(1), z))
+    np.testing.assert_allclose(dz[:, :9], z[:, 9:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent baselines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(REC_MODELS))
+def test_recurrent_shapes_and_loss_grad(name):
+    m = REC_MODELS[name]
+    rng = np.random.default_rng(7)
+    theta = np.asarray(m.init_params_fn()(jnp.array([0], jnp.int32)))
+    assert theta.shape == (m.n_params,)
+    x = _rand(rng, m.batch, m.seq_len, m.dim_in)
+    y = _rand(rng, m.batch, m.seq_len, m.dim_out)
+    pred = np.asarray(m.predict_fn()(theta, x))
+    assert pred.shape == (m.batch, m.seq_len, m.dim_out)
+    loss, grad = m.loss_grad_fn()(theta, x, y)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.asarray(grad).shape == (m.n_params,)
+    assert np.isfinite(np.asarray(grad)).all()
+    # Gradient direction actually decreases the loss.
+    theta2 = theta - 0.5 * np.asarray(grad)
+    loss2, _ = m.loss_grad_fn()(theta2, x, y)
+    assert float(np.asarray(loss2)[0]) < float(np.asarray(loss)[0])
+
+
+@pytest.mark.parametrize("name", ["tb_lstm", "tb_lstm_aug"])
+def test_rollout_shape(name):
+    m = REC_MODELS[name]
+    rng = np.random.default_rng(8)
+    theta = np.asarray(m.init_params_fn()(jnp.array([0], jnp.int32)))
+    x0 = _rand(rng, m.batch, m.dim_in)
+    traj = np.asarray(m.rollout_fn()(theta, x0))
+    assert traj.shape == (m.batch, m.rollout_steps, m.dim_out)
+    assert np.isfinite(traj).all()
+
+
+def test_loss_grad_matches_fd():
+    m = REC_MODELS["ts_rnn"]
+    rng = np.random.default_rng(9)
+    theta = np.asarray(m.init_params_fn()(jnp.array([3], jnp.int32)))
+    x = _rand(rng, m.batch, m.seq_len, m.dim_in)
+    y = _rand(rng, m.batch, m.seq_len, m.dim_out)
+    loss, grad = m.loss_grad_fn()(theta, x, y)
+    v = rng.standard_normal(m.n_params).astype(np.float32) * 0.1
+    eps = 1e-2
+    lp, _ = m.loss_grad_fn()(theta + eps * v, x, y)
+    lm, _ = m.loss_grad_fn()(theta - eps * v, x, y)
+    fd = (float(np.asarray(lp)[0]) - float(np.asarray(lm)[0])) / (2 * eps)
+    got = float(np.sum(np.asarray(grad) * v))
+    assert abs(got - fd) < 0.1 * max(abs(fd), 1e-4), (got, fd)

@@ -1,0 +1,20 @@
+//! Fig 4 workload: forward + reverse van der Pol integration (the
+//! trajectory-reconstruction experiment) at the paper's tolerances.
+
+use nodal::bench::Runner;
+use nodal::ode::analytic::VanDerPol;
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+
+fn main() {
+    let mut r = Runner::new("fig4_reverse");
+    let f = VanDerPol::new(0.15);
+    let z0 = [2.0f32, 0.0];
+    for (name, rtol, atol) in [("loose_1e-3", 1e-3, 1e-6), ("tight_1e-9", 1e-9, 1e-12)] {
+        let opts = IntegrateOpts::with_tol(rtol, atol);
+        r.bench(&format!("fwd_rev_t25_{name}"), || {
+            let fwd = integrate(&f, 0.0, 25.0, &z0, tableau::dopri5(), &opts).unwrap();
+            let rev = integrate(&f, 25.0, 0.0, fwd.last(), tableau::dopri5(), &opts).unwrap();
+            std::hint::black_box(rev.last()[0]);
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! Fig 6 workload: gradient estimation on the toy problem for each method —
+//! the computation-cost column of Table 1 on the smallest system.
+
+use nodal::bench::Runner;
+use nodal::grad::{self, Method};
+use nodal::ode::analytic::Linear;
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+
+fn main() {
+    let mut r = Runner::new("fig6_toy_grad");
+    let f = Linear::new(-0.5, 1);
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts {
+        record_trials: true,
+        ..IntegrateOpts::with_tol(1e-5, 1e-8)
+    };
+    let traj = integrate(&f, 0.0, 10.0, &[1.0], tab, &opts).unwrap();
+    let zt = traj.last()[0];
+    let lam = [2.0 * zt];
+
+    for method in Method::all() {
+        r.bench(&format!("backward_{}", method.name()), || {
+            let g = grad::backward(&f, tab, &traj, &lam, method, &opts).unwrap();
+            std::hint::black_box(g.dl_dz0[0]);
+        });
+    }
+    r.bench("forward_only", || {
+        let t = integrate(&f, 0.0, 10.0, &[1.0], tab, &opts).unwrap();
+        std::hint::black_box(t.nfe);
+    });
+}

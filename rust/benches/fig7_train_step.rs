@@ -1,0 +1,43 @@
+//! Fig 7 workload: one full optimizer step (encode + solve + loss + backward
+//! + SGD) of the image NODE per gradient method — the end-to-end hot path of
+//! the training experiments.
+
+use nodal::bench::Runner;
+use nodal::data::ImageDataset;
+use nodal::grad::Method;
+use nodal::ode::{tableau, OdeFunc};
+use nodal::runtime::{Engine, HloModel};
+use nodal::train::{TrainConfig, Trainer};
+
+fn main() {
+    if !std::path::Path::new("artifacts/img/manifest.json").exists() {
+        println!("skipping fig7_train_step: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let mut model =
+        HloModel::load(&mut engine, &nodal::runtime::artifact_root().join("img")).unwrap();
+    model.init_params(0).unwrap();
+    let data = ImageDataset::generate(model.manifest.batch, 0, 0.05, 3);
+    let ids: Vec<usize> = (0..model.manifest.batch).collect();
+    let (x, y) = data.gather(&ids);
+    let tab = tableau::heun_euler();
+
+    let mut r = Runner::new("fig7_train_step");
+    for method in [Method::Aca, Method::Adjoint, Method::Naive] {
+        let cfg = TrainConfig { method, ..Default::default() };
+        let trainer = Trainer::new(cfg);
+        r.bench(&format!("train_step_{}", method.name()), || {
+            let (loss, dtheta, _) = trainer.loss_grad(&model, tab, &x, &y).unwrap();
+            // apply the update so consecutive iterations stay realistic
+            let params: Vec<f32> = model
+                .params()
+                .iter()
+                .zip(&dtheta)
+                .map(|(p, g)| p - 1e-3 * g)
+                .collect();
+            model.set_params(&params);
+            std::hint::black_box(loss);
+        });
+    }
+}

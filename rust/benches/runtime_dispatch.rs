@@ -1,0 +1,45 @@
+//! PJRT dispatch overhead: latency of the individual AOT executables
+//! (f_eval / f_vjp / encode / loss head) — the L3↔XLA boundary the perf
+//! pass optimizes against.
+
+use nodal::bench::Runner;
+use nodal::ode::OdeFunc;
+use nodal::runtime::hlo_model::Target;
+use nodal::runtime::{Engine, HloModel};
+
+fn main() {
+    if !std::path::Path::new("artifacts/spiral/manifest.json").exists() {
+        println!("skipping runtime_dispatch: run `make artifacts` first");
+        return;
+    }
+    let mut r = Runner::new("runtime_dispatch");
+    let mut engine = Engine::cpu().unwrap();
+
+    for name in ["spiral", "img"] {
+        let mut model =
+            HloModel::load(&mut engine, &nodal::runtime::artifact_root().join(name)).unwrap();
+        model.init_params(0).unwrap();
+        let n = model.dim();
+        let z: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut dz = vec![0.0f32; n];
+        r.bench(&format!("{name}_f_eval"), || {
+            model.eval(0.5, &z, &mut dz);
+            std::hint::black_box(dz[0]);
+        });
+        let w = z.clone();
+        let mut wjz = vec![0.0f32; n];
+        let mut wjp = vec![0.0f32; model.n_params()];
+        r.bench(&format!("{name}_f_vjp"), || {
+            model.vjp(0.5, &z, &w, &mut wjz, &mut wjp);
+            std::hint::black_box(wjz[0]);
+        });
+        let x = vec![0.1f32; model.manifest.batch * model.manifest.dim_in];
+        r.bench(&format!("{name}_encode"), || {
+            std::hint::black_box(model.encode(&x).unwrap()[0]);
+        });
+        let y = Target::Classes(vec![0; model.manifest.batch]);
+        r.bench(&format!("{name}_decode_loss"), || {
+            std::hint::black_box(model.decode_loss(&z, &y).unwrap().0);
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! Solver-core throughput: adaptive integration per tableau on analytic
+//! dynamics (supports the Table 2/6/7 solver sweeps).
+
+use nodal::bench::Runner;
+use nodal::ode::analytic::VanDerPol;
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+
+fn main() {
+    let mut r = Runner::new("solvers");
+    let f = VanDerPol::new(0.15);
+    let z0 = [2.0f32, 0.0];
+    for tab in [
+        tableau::euler(),
+        tableau::rk2(),
+        tableau::rk4(),
+        tableau::heun_euler(),
+        tableau::rk23(),
+        tableau::dopri5(),
+    ] {
+        let opts = if tab.adaptive() {
+            IntegrateOpts::with_tol(1e-6, 1e-8)
+        } else {
+            IntegrateOpts::fixed(0.01)
+        };
+        r.bench(&format!("vdp_t25_{}", tab.name), || {
+            let traj = integrate(&f, 0.0, 25.0, &z0, tab, &opts).unwrap();
+            std::hint::black_box(traj.len());
+        });
+    }
+
+    // Dimension scaling of the stepper arithmetic (conv flow: 256-d state).
+    let cf = nodal::ode::analytic::ConvFlow::random(16, 16, 1, 0.4);
+    let z: Vec<f32> = (0..256).map(|i| (i as f32 * 0.1).sin()).collect();
+    r.bench("convflow_256d_dopri5_t5", || {
+        let traj = integrate(
+            &cf,
+            0.0,
+            5.0,
+            &z,
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-6, 1e-8),
+        )
+        .unwrap();
+        std::hint::black_box(traj.nfe);
+    });
+}

@@ -1,0 +1,39 @@
+//! Table 1 workload: full fwd+bwd gradient pass of the image NODE per
+//! method, end to end through PJRT (requires `make artifacts`).
+
+use nodal::bench::Runner;
+use nodal::data::ImageDataset;
+use nodal::grad::{self, Method};
+use nodal::ode::{integrate, tableau, IntegrateOpts, OdeFunc};
+use nodal::runtime::{Engine, HloModel};
+
+fn main() {
+    if !std::path::Path::new("artifacts/img/manifest.json").exists() {
+        println!("skipping table1_costs: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let mut model =
+        HloModel::load(&mut engine, &nodal::runtime::artifact_root().join("img")).unwrap();
+    model.init_params(0).unwrap();
+    let data = ImageDataset::generate(model.manifest.batch, 0, 0.05, 3);
+    let ids: Vec<usize> = (0..model.manifest.batch).collect();
+    let (x, y) = data.gather(&ids);
+    let tab = tableau::dopri5();
+
+    let mut r = Runner::new("table1_costs");
+    for method in [Method::Aca, Method::Adjoint, Method::Naive] {
+        let opts = IntegrateOpts {
+            record_trials: method == Method::Naive,
+            ..IntegrateOpts::with_tol(1e-3, 1e-5)
+        };
+        r.bench(&format!("fwd_bwd_{}", method.name()), || {
+            let z0 = model.encode(&x).unwrap();
+            let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts).unwrap();
+            let mut dtheta = vec![0.0f32; model.n_params()];
+            let (lam, _) = model.decode_loss_vjp(traj.last(), &y, &mut dtheta).unwrap();
+            let g = grad::backward(&model, tab, &traj, &lam, method, &opts).unwrap();
+            std::hint::black_box(g.dl_dtheta[0]);
+        });
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 5 workload: one training epoch of the analytic three-body ODE
+//! (segmented fwd+bwd over the training year) per gradient method.
+
+use nodal::bench::Runner;
+use nodal::data::ThreeBodyDataset;
+use nodal::grad::{self, Method};
+use nodal::ode::analytic::ThreeBody;
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+
+fn main() {
+    let ds = ThreeBodyDataset::generate(1, 100);
+    let f = ThreeBody::new([0.6, 0.6, 0.6]);
+    let tab = tableau::dopri5();
+    let mut r = Runner::new("table5_threebody");
+
+    for method in Method::all() {
+        let opts = IntegrateOpts {
+            record_trials: method == Method::Naive,
+            ..IntegrateOpts::with_tol(1e-5, 1e-5)
+        };
+        r.bench(&format!("epoch_{}", method.name()), || {
+            let end = ds.train_end();
+            let mut z = ds.states[0].clone();
+            let mut segs = Vec::new();
+            let mut jumps = Vec::new();
+            for k in 1..=end {
+                let traj = integrate(&f, ds.times[k - 1], ds.times[k], &z, tab, &opts).unwrap();
+                z = traj.last().to_vec();
+                let target = ds.positions(k);
+                let mut lam = vec![0.0f32; 18];
+                for j in 0..9 {
+                    lam[j] = 2.0 * (z[j] - target[j]) / 9.0;
+                }
+                segs.push(traj);
+                jumps.push(lam);
+            }
+            let mut lam = vec![0.0f32; 18];
+            let mut dm = vec![0.0f32; 3];
+            for k in (0..end).rev() {
+                for (l, j) in lam.iter_mut().zip(&jumps[k]) {
+                    *l += j / end as f32;
+                }
+                let g = grad::backward(&f, tab, &segs[k], &lam, method, &opts).unwrap();
+                lam = g.dl_dz0;
+                for (d, s) in dm.iter_mut().zip(&g.dl_dtheta) {
+                    *d += s;
+                }
+            }
+            std::hint::black_box(dm[0]);
+        });
+    }
+
+    r.bench("ground_truth_simulation_2yr", || {
+        let t = integrate(
+            &ThreeBody::new(ds.masses),
+            0.0,
+            2.0,
+            &ds.z0,
+            tab,
+            &IntegrateOpts::with_tol(1e-9, 1e-9),
+        )
+        .unwrap();
+        std::hint::black_box(t.nfe);
+    });
+}

@@ -1,0 +1,115 @@
+//! Minimal benchmark harness (the offline build vendors no criterion).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module: auto-calibrated iteration counts, warm-up, mean/std/min
+//! reporting, and a `--save <id>` flag that appends JSON lines under
+//! `results/bench/` so the perf pass can diff before/after.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Runs and reports a group of benchmarks.
+pub struct Runner {
+    group: String,
+    target_s: f64,
+    results: Vec<Measurement>,
+}
+
+impl Runner {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        Runner { group: group.to_string(), target_s: 0.6, results: Vec::new() }
+    }
+
+    /// Benchmark a closure. The closure should return something observable
+    /// (use `std::hint::black_box` inside for values you must not DCE).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warm-up + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let warm = (0.05 / once).clamp(1.0, 20.0) as usize;
+        for _ in 0..warm {
+            f();
+        }
+        let iters = (self.target_s / once).clamp(5.0, 10_000.0) as usize;
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / samples.len().max(1) as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ms: mean,
+            std_ms: var.sqrt(),
+            min_ms: min,
+        };
+        println!(
+            "  {:<44} {:>10.4} ms/iter  (± {:>8.4}, min {:>8.4}, n={})",
+            m.name, m.mean_ms, m.std_ms, m.min_ms, m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Persist the group's results as JSON lines under `results/bench/`.
+    pub fn save(&self) {
+        use crate::util::json::obj;
+        let dir = crate::coordinator::results_dir().join("bench");
+        if std::fs::create_dir_all(&dir).is_err() {
+            return;
+        }
+        let mut lines = String::new();
+        for m in &self.results {
+            let j = obj(vec![
+                ("group", self.group.as_str().into()),
+                ("name", m.name.as_str().into()),
+                ("mean_ms", m.mean_ms.into()),
+                ("std_ms", m.std_ms.into()),
+                ("min_ms", m.min_ms.into()),
+                ("iters", m.iters.into()),
+            ]);
+            lines.push_str(&j.to_string());
+            lines.push('\n');
+        }
+        let _ = std::fs::write(dir.join(format!("{}.jsonl", self.group)), lines);
+    }
+}
+
+impl Drop for Runner {
+    fn drop(&mut self) {
+        self.save();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut r = Runner::new("unit");
+        let m = r.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(m.mean_ms >= 0.0);
+        assert!(m.min_ms <= m.mean_ms + 1e-9);
+        assert!(m.iters >= 5);
+    }
+}

@@ -1,0 +1,123 @@
+//! Experiment configuration: small JSON config files + CLI overrides.
+//!
+//! Experiments are launched as `nodal repro <id> [--key value ...]`; every
+//! knob has a paper-faithful default, and a JSON config (`--config f.json`)
+//! can override groups of them. JSON (not TOML) because the offline build
+//! vendors no TOML parser — see util::json.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Flat key-value config with typed getters; merged from defaults, an
+/// optional JSON file, and CLI `--key value` overrides (highest wins).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    /// Merge keys from a JSON object file (scalars only).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        for (k, v) in j.as_obj()? {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => format!("{n}"),
+                Json::Bool(b) => format!("{b}"),
+                other => other.to_string(),
+            };
+            self.values.insert(k.clone(), s);
+        }
+        Ok(())
+    }
+
+    /// Parse trailing CLI args of the form `--key value`.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "config" {
+                    let path = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+                    self.load_file(path)?;
+                    i += 2;
+                    continue;
+                }
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                self.set(key, val.clone());
+                i += 2;
+            } else {
+                anyhow::bail!("unexpected argument '{a}' (expected --key value)");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.values.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::new();
+        c.apply_args(&["--epochs".into(), "12".into(), "--method".into(), "aca".into()])
+            .unwrap();
+        assert_eq!(c.get_usize("epochs", 0), 12);
+        assert_eq!(c.get_str("method", ""), "aca");
+        assert_eq!(c.get_f64("rtol", 1e-2), 1e-2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let mut c = Config::new();
+        assert!(c.apply_args(&["epochs".into()]).is_err());
+        assert!(c.apply_args(&["--epochs".into()]).is_err());
+    }
+
+    #[test]
+    fn file_merge() {
+        let dir = std::env::temp_dir().join(format!("nodal_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"epochs": 5, "verbose": true, "method": "naive"}"#).unwrap();
+        let mut c = Config::new();
+        c.load_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.get_usize("epochs", 0), 5);
+        assert!(c.get_bool("verbose", false));
+        assert_eq!(c.get_str("method", ""), "naive");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,91 @@
+//! Fig 7 (a)/(b): test accuracy vs epoch and vs wall-clock for the image
+//! NODE trained with naive / adjoint / ACA.
+//!
+//! The paper's claim under test: for the same model, ACA reaches roughly
+//! half the error rate of the baselines at the same epoch count, in about
+//! half (adjoint) to a third (naive) of the wall-clock time.
+
+use anyhow::Result;
+
+use super::report::{save_series, Table};
+use crate::config::Config;
+use crate::data::ImageDataset;
+use crate::grad::Method;
+use crate::ode::tableau;
+use crate::runtime::{Engine, HloModel};
+use crate::train::{LrSchedule, TrainConfig, Trainer};
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let epochs = cfg.get_usize("epochs", 12);
+    let n_train = cfg.get_usize("n_train", 960);
+    let n_test = cfg.get_usize("n_test", 320);
+    let seed = cfg.get_usize("seed", 0) as u64;
+    let solver = cfg.get_str("solver", "heuneuler");
+    let tab = tableau::by_name(&solver).expect("unknown solver");
+
+    let data = ImageDataset::generate(n_train, n_test, 0.05, seed);
+    let mut table = Table::new(
+        "fig7",
+        "img-NODE: final accuracy + time per method",
+        &["method", "final err %", "best err %", "total time (s)", "s/epoch", "nfe f/b per batch"],
+    );
+
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    let mut curve_names: Vec<String> = Vec::new();
+
+    for method in [Method::Aca, Method::Adjoint, Method::Naive] {
+        let mut engine = Engine::cpu()?;
+        let dir = crate::runtime::artifact_root().join("img");
+        let mut model = HloModel::load(&mut engine, &dir)?;
+        model.init_params(seed as i32)?;
+
+        // Paper recipe scaled down: SGD momentum 0.9, step decay.
+        let tcfg = TrainConfig {
+            method,
+            epochs,
+            lr: LrSchedule::Step {
+                initial: cfg.get_f64("lr", 0.05),
+                factor: 0.1,
+                milestones: vec![epochs * 2 / 3, epochs * 9 / 10],
+            },
+            rtol: cfg.get_f64("rtol", 1e-2),
+            atol: cfg.get_f64("atol", 1e-2),
+            clip: cfg.get_f64("clip", 1.0),
+            seed,
+            verbose: cfg.get_bool("verbose", true),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(tcfg);
+        trainer.fit(&mut model, tab, &data)?;
+
+        let hist = &trainer.history;
+        let final_err = 100.0 * (1.0 - trainer.final_acc());
+        let best_err =
+            100.0 * (1.0 - hist.iter().map(|r| r.test_acc).fold(0.0f64, f64::max));
+        let total = hist.last().map(|r| r.wall_s).unwrap_or(0.0);
+        let nfe = hist
+            .last()
+            .map(|r| format!("{:.0}/{:.0}", r.nfe_forward, r.nfe_backward))
+            .unwrap_or_default();
+        table.row(vec![
+            method.name().to_string(),
+            format!("{final_err:.2}"),
+            format!("{best_err:.2}"),
+            format!("{total:.1}"),
+            format!("{:.2}", total / epochs.max(1) as f64),
+            nfe,
+        ]);
+
+        // Figure series: epoch, wall_s, accuracy.
+        curves.push(hist.iter().map(|r| r.epoch as f64).collect());
+        curves.push(hist.iter().map(|r| r.wall_s).collect());
+        curves.push(hist.iter().map(|r| r.test_acc).collect());
+        for suffix in ["epoch", "wall_s", "acc"] {
+            curve_names.push(format!("{}_{suffix}", method.name()));
+        }
+    }
+
+    let name_refs: Vec<&str> = curve_names.iter().map(|s| s.as_str()).collect();
+    save_series("fig7_curves", &name_refs, &curves)?;
+    table.emit()
+}

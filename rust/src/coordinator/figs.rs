@@ -1,0 +1,177 @@
+//! Figures 4, 5 and 6 — the paper's numerical-error studies. Pure-Rust
+//! analytic dynamics; no artifacts required.
+
+use anyhow::Result;
+
+use super::report::{save_series, Table};
+use crate::config::Config;
+use crate::grad::{self, Method};
+use crate::ode::analytic::{ConvFlow, Linear, VanDerPol};
+use crate::ode::{integrate, tableau, IntegrateOpts};
+use crate::tensor;
+
+/// Fig 4: solve van der Pol forward over `[0, T]`, then solve backward from
+/// `z(T)` — the adjoint method's reverse trajectory — and measure how far
+/// `z̄(0)` lands from `z(0)`, per tolerance.
+pub fn fig4(cfg: &Config) -> Result<()> {
+    let t_end = cfg.get_f64("t_end", 25.0);
+    let mu = cfg.get_f64("mu", 0.15) as f32;
+    let z0 = [2.0f32, 0.0];
+    let f = VanDerPol::new(mu);
+    let tab = tableau::dopri5();
+
+    let mut table = Table::new(
+        "fig4",
+        "van der Pol: reverse-trajectory reconstruction error (Dopri5)",
+        &["rtol", "atol", "fwd steps", "rev steps", "|z̄(0) − z(0)|∞"],
+    );
+    for (rtol, atol) in [(1e-3, 1e-6), (1e-6, 1e-9), (1e-9, 1e-12)] {
+        let opts = IntegrateOpts::with_tol(rtol, atol);
+        let fwd = integrate(&f, 0.0, t_end, &z0, tab, &opts)?;
+        let rev = integrate(&f, t_end, 0.0, fwd.last(), tab, &opts)?;
+        let err = tensor::max_abs_diff(rev.last(), &z0) as f64;
+        table.row(vec![
+            format!("{rtol:.0e}"),
+            format!("{atol:.0e}"),
+            fwd.len().to_string(),
+            rev.len().to_string(),
+            Table::fmt(err),
+        ]);
+        // Trajectory dump (the figure itself) for the loosest tolerance.
+        if rtol == 1e-3 {
+            let cols = vec![
+                fwd.ts.clone(),
+                fwd.zs.iter().map(|z| z[0] as f64).collect(),
+                fwd.zs.iter().map(|z| z[1] as f64).collect(),
+            ];
+            save_series("fig4_forward", &["t", "y1", "y2"], &cols)?;
+            let cols = vec![
+                rev.ts.clone(),
+                rev.zs.iter().map(|z| z[0] as f64).collect(),
+                rev.zs.iter().map(|z| z[1] as f64).collect(),
+            ];
+            save_series("fig4_reverse", &["t", "y1", "y2"], &cols)?;
+        }
+    }
+    table.emit()
+}
+
+/// Fig 5: evolve a 16×16 image under a random 3×3 conv flow, then reverse
+/// from `z(T)`; report relative reconstruction error.
+pub fn fig5(cfg: &Config) -> Result<()> {
+    let t_end = cfg.get_f64("t_end", 5.0);
+    let seed = cfg.get_usize("seed", 7) as u64;
+    let f = ConvFlow::random(16, 16, seed, 0.4);
+    let tab = tableau::dopri5();
+
+    // Input image: the class-0 (circle) pattern from the image dataset.
+    let data = crate::data::ImageDataset::generate(1, 0, 0.0, seed);
+    let z0 = &data.train_x[..256];
+
+    let mut table = Table::new(
+        "fig5",
+        "conv-flow: reverse reconstruction relative L2 error (Dopri5)",
+        &["rtol", "‖z(T)‖₂/‖z0‖₂", "rel. reconstruction err"],
+    );
+    for rtol in [1e-3, 1e-6, 1e-9] {
+        let opts = IntegrateOpts::with_tol(rtol, rtol * 1e-3);
+        let fwd = integrate(&f, 0.0, t_end, z0, tab, &opts)?;
+        let rev = integrate(&f, t_end, 0.0, fwd.last(), tab, &opts)?;
+        let diff: Vec<f32> = rev.last().iter().zip(z0).map(|(a, b)| a - b).collect();
+        let rel = tensor::norm2(&diff) / tensor::norm2(z0);
+        let growth = tensor::norm2(fwd.last()) / tensor::norm2(z0);
+        table.row(vec![format!("{rtol:.0e}"), Table::fmt(growth), Table::fmt(rel)]);
+        if rtol == 1e-3 {
+            save_series(
+                "fig5_images",
+                &["input", "evolved", "reconstructed"],
+                &[
+                    z0.iter().map(|&v| v as f64).collect(),
+                    fwd.last().iter().map(|&v| v as f64).collect(),
+                    rev.last().iter().map(|&v| v as f64).collect(),
+                ],
+            )?;
+        }
+    }
+    table.emit()
+}
+
+/// Fig 6: |gradient error| vs end time T on the toy problem (Eq. 27–29) for
+/// the three methods, Dopri5 at tol 1e-5.
+pub fn fig6(cfg: &Config) -> Result<()> {
+    let k = cfg.get_f64("k", -0.5) as f32;
+    let z0 = 1.0f32;
+    let tol = cfg.get_f64("tol", 1e-5);
+    let tab = tableau::dopri5();
+    let f = Linear::new(k, 1);
+
+    // Two gradients are compared against their analytic forms:
+    // dL/dz0 (Eq. 29) and the parameter gradient dL/dk. The latter is the
+    // sensitive one: the adjoint method computes ∫ λᵀ ∂f/∂k dt along its
+    // *reconstructed* reverse trajectory z̄ (Sec 3.2), so reverse-trajectory
+    // drift corrupts it directly, while ACA evaluates on the checkpoints.
+    let ts: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+    let mut cols: Vec<Vec<f64>> = vec![ts.clone(); 7];
+    for c in cols.iter_mut().skip(1) {
+        c.clear();
+    }
+    let mut table = Table::new(
+        "fig6",
+        "toy problem relative |grad error| vs T (Dopri5)",
+        &[
+            "T",
+            "dz0 naive",
+            "dz0 adjoint",
+            "dz0 ACA",
+            "dk naive",
+            "dk adjoint",
+            "dk ACA",
+        ],
+    );
+    for &t_end in &ts {
+        let exact_z = f.exact_dl_dz0(z0, t_end);
+        let exact_k = f.exact_dl_dk(z0, t_end);
+        let mut row = vec![format!("{t_end}")];
+        let mut errs_z = Vec::new();
+        let mut errs_k = Vec::new();
+        for method in [Method::Naive, Method::Adjoint, Method::Aca] {
+            let opts = IntegrateOpts {
+                record_trials: true,
+                ..IntegrateOpts::with_tol(tol, tol * 1e-3)
+            };
+            let traj = integrate(&f, 0.0, t_end, &[z0], tab, &opts)?;
+            let zt = traj.last()[0];
+            let g = grad::backward(&f, tab, &traj, &[2.0 * zt], method, &opts)?;
+            errs_z.push(((g.dl_dz0[0] as f64 - exact_z) / exact_z).abs());
+            errs_k.push(((g.dl_dtheta[0] as f64 - exact_k) / exact_k).abs());
+        }
+        for e in errs_z.iter().chain(&errs_k) {
+            row.push(Table::fmt(*e));
+        }
+        for (i, e) in errs_z.iter().chain(&errs_k).enumerate() {
+            cols[i + 1].push(*e);
+        }
+        table.row(row);
+    }
+    save_series(
+        "fig6_series",
+        &["T", "dz0_naive", "dz0_adjoint", "dz0_aca", "dk_naive", "dk_adjoint", "dk_aca"],
+        &cols,
+    )?;
+    table.emit()?;
+
+    let mean = |c: &[f64]| c.iter().sum::<f64>() / c.len() as f64;
+    println!(
+        "mean rel |dz0 err|: naive {:.3e}  adjoint {:.3e}  ACA {:.3e}",
+        mean(&cols[1]),
+        mean(&cols[2]),
+        mean(&cols[3])
+    );
+    println!(
+        "mean rel |dk  err|: naive {:.3e}  adjoint {:.3e}  ACA {:.3e}",
+        mean(&cols[4]),
+        mean(&cols[5]),
+        mean(&cols[6])
+    );
+    Ok(())
+}

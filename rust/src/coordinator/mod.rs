@@ -1,0 +1,58 @@
+//! Experiment coordinator: every table and figure of the paper, as a
+//! reproducible `nodal repro <id>` command (DESIGN.md §4).
+
+pub mod fig7;
+pub mod figs;
+pub mod pool;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+pub use report::{results_dir, save_series, Table};
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig4", "van der Pol forward vs reverse trajectory (adjoint inaccuracy)"),
+    ("fig5", "conv-flow image reverse reconstruction"),
+    ("fig6", "toy-problem gradient error vs T for naive/adjoint/ACA"),
+    ("fig7", "image classification: accuracy vs epoch and wall-clock per method"),
+    ("table1", "measured computation/memory/depth costs per method"),
+    ("table2", "error rates across training methods and test solvers"),
+    ("table3", "ICC test-retest reliability over repeated runs"),
+    ("table4", "irregular time-series MSE vs training-set fraction"),
+    ("table5", "three-body problem: LSTM / NODE / ODE x gradient methods"),
+    ("table6", "solver-robustness grid for the discrete baseline"),
+    ("table7", "solver-robustness grid for NODE"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, cfg: &Config) -> Result<()> {
+    match id {
+        "fig4" => figs::fig4(cfg),
+        "fig5" => figs::fig5(cfg),
+        "fig6" => figs::fig6(cfg),
+        "fig7" => fig7::run(cfg),
+        "table1" => table1::run(cfg),
+        "table2" => table2::run(cfg),
+        "table3" => table3::run(cfg),
+        "table4" => table4::run(cfg),
+        "table5" => table5::run(cfg),
+        "table6" => table2::table6(cfg),
+        "table7" => table2::table7(cfg),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                println!("\n################ {id} ################");
+                run(id, cfg)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' — see `nodal list`"),
+    }
+}

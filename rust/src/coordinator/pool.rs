@@ -1,0 +1,131 @@
+//! Multi-run worker pool for the repeated-training experiments
+//! (Table 3's ten independently-initialized runs, seed sweeps).
+//!
+//! PJRT objects are not `Send`, so each job constructs its own
+//! [`crate::runtime::Engine`] *inside* the worker thread; only the job
+//! closure and its plain-data result cross threads.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` on up to `workers` OS threads; results return in job order.
+///
+/// Panics in jobs are contained per-thread: the affected slot carries the
+/// panic message as `Err`.
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<Result<T, String>>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    let workers = workers.clamp(1, n.max(1));
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            let Some((idx, f)) = job else { break };
+            // NB: `&*e` — coercing `&Box<dyn Any>` itself to `&dyn Any`
+            // would downcast the Box, not the payload.
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+                .map_err(|e| panic_msg(&*e));
+            if tx.send((idx, out)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<Option<Result<T, String>>> = (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        results[idx] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|| Err("job vanished".to_string())))
+        .collect()
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "panic".to_string()
+    }
+}
+
+/// Number of worker threads to default to (respects `NODAL_WORKERS`).
+pub fn default_workers() -> usize {
+    if let Some(n) = std::env::var("NODAL_WORKERS").ok().and_then(|v| v.parse().ok()) {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || {
+                    // stagger so completion order != submission order
+                    std::thread::sleep(std::time::Duration::from_millis((16 - i) as u64));
+                    i * 10
+                }
+            })
+            .collect();
+        let out = run_parallel(4, jobs);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), i * 10);
+        }
+    }
+
+    #[test]
+    fn panics_are_contained() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let out = run_parallel(2, jobs);
+        assert_eq!(*out[0].as_ref().unwrap(), 1);
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(*out[2].as_ref().unwrap(), 3);
+    }
+
+    #[test]
+    fn single_worker_serial() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let jobs: Vec<_> = (0..5)
+            .map(|i| {
+                let order = order.clone();
+                move || {
+                    order.lock().unwrap().push(i);
+                    i
+                }
+            })
+            .collect();
+        let out = run_parallel(1, jobs);
+        assert_eq!(out.len(), 5);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<Result<usize, String>> = run_parallel(4, Vec::<fn() -> usize>::new());
+        assert!(out.is_empty());
+    }
+}

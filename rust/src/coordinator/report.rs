@@ -1,0 +1,194 @@
+//! Table/figure rendering: ASCII to stdout, CSV + JSON into `results/`.
+//!
+//! Every `nodal repro <id>` command emits its paper table/figure through
+//! this module so EXPERIMENTS.md can reference stable file names.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Output directory for experiment results (override: `NODAL_RESULTS`).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("NODAL_RESULTS")
+        .map(Into::into)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// A rendered result table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format a float with sensible precision for result tables.
+    pub fn fmt(v: f64) -> String {
+        if v.is_nan() {
+            "-".to_string()
+        } else if v == 0.0 {
+            "0".to_string()
+        } else if v.abs() >= 1000.0 || v.abs() < 1e-3 {
+            format!("{v:.3e}")
+        } else {
+            format!("{v:.4}")
+        }
+    }
+
+    /// ASCII rendering.
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV + JSON under `results/`.
+    pub fn emit(&self) -> Result<()> {
+        println!("{}", self.ascii());
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir).context("creating results dir")?;
+        // CSV
+        let mut csv = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(csv, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(csv, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
+        // JSON
+        let j = obj(vec![
+            ("id", self.id.as_str().into()),
+            ("title", self.title.as_str().into()),
+            ("headers", self.headers.iter().map(|h| Json::from(h.as_str())).collect::<Vec<_>>().into()),
+            (
+                "rows",
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::from(c.as_str())).collect()))
+                    .collect::<Vec<Json>>()
+                    .into(),
+            ),
+        ]);
+        std::fs::write(dir.join(format!("{}.json", self.id)), j.to_string())?;
+        Ok(())
+    }
+}
+
+/// Persist an x/y-series CSV (figure data).
+pub fn save_series(id: &str, headers: &[&str], cols: &[Vec<f64>]) -> Result<PathBuf> {
+    assert_eq!(headers.len(), cols.len());
+    let n = cols.first().map(|c| c.len()).unwrap_or(0);
+    assert!(cols.iter().all(|c| c.len() == n), "ragged series");
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = String::new();
+    let _ = writeln!(csv, "{}", headers.join(","));
+    for i in 0..n {
+        let row: Vec<String> = cols.iter().map(|c| format!("{}", c[i])).collect();
+        let _ = writeln!(csv, "{}", row.join(","));
+    }
+    let path = dir.join(format!("{id}.csv"));
+    std::fs::write(&path, csv)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_rendering_aligned() {
+        let mut t = Table::new("t", "demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.ascii();
+        assert!(s.contains("| name   | value |"), "{s}");
+        assert!(s.contains("| longer | 2.5   |"), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(Table::fmt(f64::NAN), "-");
+        assert_eq!(Table::fmt(0.5), "0.5000");
+        assert_eq!(Table::fmt(1234.5), "1.234e3");
+        assert_eq!(Table::fmt(1e-5), "1.000e-5");
+    }
+
+    #[test]
+    fn emit_writes_files() {
+        let dir = std::env::temp_dir().join(format!("nodal_res_{}", std::process::id()));
+        std::env::set_var("NODAL_RESULTS", &dir);
+        let mut t = Table::new("unit_test_table", "x", &["a,b", "c"]);
+        t.row(vec!["v,1".into(), "2".into()]);
+        t.emit().unwrap();
+        let csv = std::fs::read_to_string(dir.join("unit_test_table.csv")).unwrap();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"v,1\",2"));
+        let j = std::fs::read_to_string(dir.join("unit_test_table.json")).unwrap();
+        assert!(j.contains("unit_test_table"));
+        std::env::remove_var("NODAL_RESULTS");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn series_csv() {
+        let dir = std::env::temp_dir().join(format!("nodal_res2_{}", std::process::id()));
+        std::env::set_var("NODAL_RESULTS", &dir);
+        let p = save_series("unit_series", &["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "x,y\n1,3\n2,4\n");
+        std::env::remove_var("NODAL_RESULTS");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

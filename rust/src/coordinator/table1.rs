@@ -1,0 +1,93 @@
+//! Table 1 — measured computation / memory / graph-depth costs of the three
+//! gradient methods on one forward+backward pass of the image NODE.
+//!
+//! The paper states asymptotics; we report the instrumented counters from
+//! [`crate::grad::CostMeter`] on identical workloads so the *ordering and
+//! ratios* can be checked: ACA cheapest compute, adjoint smallest memory,
+//! naive deepest graph.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::config::Config;
+use crate::grad::{self, Method};
+use crate::ode::{integrate, tableau, IntegrateOpts, OdeFunc};
+use crate::runtime::{Engine, HloModel};
+use crate::util::Timer;
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join(cfg.get_str("model", "img"));
+    let mut model = HloModel::load(&mut engine, &dir)?;
+    model.init_params(cfg.get_usize("seed", 0) as i32)?;
+    // Freshly-initialized dynamics are nearly linear and trivially solvable;
+    // scale the weights up to the magnitude of a *trained* NODE so the solver
+    // works at a realistic N_t and step-size search depth m.
+    {
+        let boosted: Vec<f32> = OdeFunc::params(&model)
+            .iter()
+            .map(|p| p * cfg.get_f64("boost", 6.0) as f32)
+            .collect();
+        model.set_params(&boosted);
+    }
+    let tab = tableau::by_name(&cfg.get_str("solver", "dopri5")).unwrap();
+    let rtol = cfg.get_f64("rtol", 1e-3);
+
+    // One representative batch.
+    let data = crate::data::ImageDataset::generate(model.manifest.batch, 0, 0.05, 3);
+    let ids: Vec<usize> = (0..model.manifest.batch).collect();
+    let (x, y) = data.gather(&ids);
+
+    let mut table = Table::new(
+        "table1",
+        "measured cost per fwd+bwd pass (img NODE, Dopri5)",
+        &[
+            "method",
+            "NFE fwd",
+            "NFE bwd",
+            "VJP calls",
+            "graph depth",
+            "memory (KiB)",
+            "N_t",
+            "rejected",
+            "N_r",
+            "wall (ms)",
+        ],
+    );
+
+    for method in [Method::Naive, Method::Adjoint, Method::Aca] {
+        let opts = IntegrateOpts {
+            record_trials: method == Method::Naive,
+            // Force a nontrivial step-size search.
+            h0: Some(4.0),
+            ..IntegrateOpts::with_tol(rtol, rtol * 1e-2)
+        };
+        let timer = Timer::new();
+        let z0 = model.encode(&x)?;
+        let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts)?;
+        let mut dtheta = vec![0.0f32; crate::ode::OdeFunc::n_params(&model)];
+        let (lam, _loss) = model.decode_loss_vjp(traj.last(), &y, &mut dtheta)?;
+        let g = grad::backward(&model, tab, &traj, &lam, method, &opts)?;
+        let wall = timer.elapsed_ms();
+        let m = &g.meter;
+        table.row(vec![
+            method.name().to_string(),
+            m.nfe_forward.to_string(),
+            m.nfe_backward.to_string(),
+            m.vjp_calls.to_string(),
+            m.graph_depth.to_string(),
+            format!("{}", m.checkpoint_bytes / 1024),
+            m.n_steps.to_string(),
+            m.n_rejected.to_string(),
+            m.n_reverse_steps.to_string(),
+            format!("{wall:.1}"),
+        ]);
+    }
+    table.emit()?;
+    println!(
+        "paper Table 1 asymptotics — compute: naive O(Nf·Nt·m·2), adjoint O(Nf·(Nt+Nr)·m), \
+         ACA O(Nf·Nt·(m+1)); memory: naive O(Nf·Nt·m), adjoint O(Nf), ACA O(Nf+Nt); \
+         depth: naive O(Nf·Nt·m), adjoint O(Nf·Nr), ACA O(Nf·Nt)."
+    );
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Table 2 — test error rates: NODE trained with ACA (HeunEuler, tol 1e-2)
+//! evaluated with every solver **without retraining**, vs the same NODE
+//! trained with the adjoint and naive methods, vs the discrete baseline
+//! (paper: ResNet ≡ NODE with one-step Euler, App. D).
+//!
+//! Tables 6/7 (appendix) are the full solver-robustness grids for the
+//! discrete baseline and the NODE respectively.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::config::Config;
+use crate::data::{Dataset, ImageDataset};
+use crate::grad::Method;
+use crate::ode::{tableau, IntegrateOpts, Tableau};
+use crate::runtime::{Engine, HloModel};
+use crate::train::trainer::evaluate;
+use crate::train::{LrSchedule, TrainConfig, Trainer};
+
+fn data(cfg: &Config) -> Dataset {
+    ImageDataset::generate(
+        cfg.get_usize("n_train", 960),
+        cfg.get_usize("n_test", 320),
+        0.05,
+        cfg.get_usize("seed", 0) as u64,
+    )
+}
+
+fn train_once(
+    cfg: &Config,
+    data: &Dataset,
+    method: Method,
+    tab: &'static Tableau,
+    fixed_h: Option<f64>,
+) -> Result<HloModel> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join("img");
+    let mut model = HloModel::load(&mut engine, &dir)?;
+    let seed = cfg.get_usize("seed", 0) as u64;
+    model.init_params(seed as i32)?;
+    let epochs = cfg.get_usize("epochs", 10);
+    let tcfg = TrainConfig {
+        method,
+        epochs,
+        lr: LrSchedule::Step {
+            initial: cfg.get_f64("lr", 0.05),
+            factor: 0.1,
+            milestones: vec![epochs * 2 / 3],
+        },
+        rtol: cfg.get_f64("rtol", 1e-2),
+        atol: cfg.get_f64("atol", 1e-2),
+        fixed_h,
+        seed,
+        verbose: cfg.get_bool("verbose", false),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(tcfg);
+    trainer.fit(&mut model, tab, data)?;
+    // Engine must stay alive while the model's executables are used; leak it
+    // for the duration of the experiment (cheap: one client).
+    std::mem::forget(engine);
+    Ok(model)
+}
+
+/// Test error (%) of `model` under a given solver configuration.
+fn test_err(
+    model: &HloModel,
+    data: &Dataset,
+    tab: &Tableau,
+    rtol: f64,
+    fixed_h: Option<f64>,
+) -> Result<f64> {
+    let opts = IntegrateOpts { rtol, atol: rtol, fixed_h, ..Default::default() };
+    let (_, acc) = evaluate(model, tab, &opts, 1.0, data, true)?;
+    Ok(100.0 * (1.0 - acc))
+}
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let data = data(cfg);
+
+    // NODE trained with ACA + HeunEuler tol 1e-2 (the paper's recipe).
+    println!("training NODE-ACA (HeunEuler, tol 1e-2)…");
+    let node_aca = train_once(cfg, &data, Method::Aca, tableau::heun_euler(), None)?;
+    // Baselines trained and tested with their own method (Dopri5 for
+    // adjoint/naive as in the paper; discrete = fixed-step Euler).
+    println!("training NODE-adjoint (Dopri5)…");
+    let node_adj = train_once(cfg, &data, Method::Adjoint, tableau::dopri5(), None)?;
+    println!("training NODE-naive (Dopri5)…");
+    let node_naive = train_once(cfg, &data, Method::Naive, tableau::dopri5(), None)?;
+    println!("training discrete baseline (Euler, 1 step)…");
+    let discrete = train_once(cfg, &data, Method::Aca, tableau::euler(), Some(1.0))?;
+
+    let mut table = Table::new(
+        "table2",
+        "test error rate (%) — img dataset",
+        &["model / test solver", "err %"],
+    );
+    // NODE-ACA tested across solvers without retraining.
+    for (name, tab, rtol, fixed) in [
+        ("NODE-ACA / HeunEuler 1e-2", tableau::heun_euler(), 1e-2, None),
+        ("NODE-ACA / RK23 1e-2", tableau::rk23(), 1e-2, None),
+        ("NODE-ACA / RK45 1e-2", tableau::dopri5(), 1e-2, None),
+        ("NODE-ACA / Euler h=0.1", tableau::euler(), 1e-2, Some(0.1)),
+        ("NODE-ACA / RK2 h=0.1", tableau::rk2(), 1e-2, Some(0.1)),
+        ("NODE-ACA / RK4 h=0.1", tableau::rk4(), 1e-2, Some(0.1)),
+    ] {
+        table.row(vec![name.to_string(), format!("{:.2}", test_err(&node_aca, &data, tab, rtol, fixed)?)]);
+    }
+    table.row(vec![
+        "NODE-adjoint / Dopri5".into(),
+        format!("{:.2}", test_err(&node_adj, &data, tableau::dopri5(), 1e-2, None)?),
+    ]);
+    table.row(vec![
+        "NODE-naive / Dopri5".into(),
+        format!("{:.2}", test_err(&node_naive, &data, tableau::dopri5(), 1e-2, None)?),
+    ]);
+    table.row(vec![
+        "discrete (Euler 1-step)".into(),
+        format!("{:.2}", test_err(&discrete, &data, tableau::euler(), 1e-2, Some(1.0))?),
+    ]);
+    table.emit()
+}
+
+/// Shared grid used by Tables 6 and 7: test a trained model across fixed
+/// solvers × step sizes and adaptive solvers × tolerances; report the
+/// *increase* in error rate vs the train-matched configuration.
+fn robustness_grid(
+    id: &str,
+    title: &str,
+    model: &HloModel,
+    data: &Dataset,
+    base_err: f64,
+) -> Result<()> {
+    let mut table = Table::new(
+        id,
+        title,
+        &["solver", "h=1.0", "h=0.5", "h=0.2", "h=0.1", "tol 1e-1", "tol 1e-2", "tol 1e-3"],
+    );
+    for (name, tab) in [
+        ("Euler", tableau::euler()),
+        ("RK2", tableau::rk2()),
+        ("RK4", tableau::rk4()),
+    ] {
+        let mut row = vec![name.to_string()];
+        for h in [1.0, 0.5, 0.2, 0.1] {
+            let e = test_err(model, data, tab, 1e-2, Some(h))?;
+            row.push(format!("{:+.2}", e - base_err));
+        }
+        row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+        table.row(row);
+    }
+    for (name, tab) in [
+        ("HeunEuler", tableau::heun_euler()),
+        ("RK23", tableau::rk23()),
+        ("RK45", tableau::dopri5()),
+    ] {
+        let mut row = vec![name.to_string(), "-".into(), "-".into(), "-".into(), "-".into()];
+        for tol in [1e-1, 1e-2, 1e-3] {
+            let e = test_err(model, data, tab, tol, None)?;
+            row.push(format!("{:+.2}", e - base_err));
+        }
+        table.row(row);
+    }
+    println!("(entries are error-rate increases vs the train-matched config, {base_err:.2}%)");
+    table.emit()
+}
+
+/// Table 6: the discrete baseline (1-step Euler training) across solvers.
+pub fn table6(cfg: &Config) -> Result<()> {
+    let data = data(cfg);
+    println!("training discrete baseline (Euler, 1 step)…");
+    let discrete = train_once(cfg, &data, Method::Aca, tableau::euler(), Some(1.0))?;
+    let base = test_err(&discrete, &data, tableau::euler(), 1e-2, Some(1.0))?;
+    robustness_grid(
+        "table6",
+        "discrete baseline: error-rate increase across test solvers",
+        &discrete,
+        &data,
+        base,
+    )
+}
+
+/// Table 7: NODE trained with HeunEuler tol 1e-2 across solvers.
+pub fn table7(cfg: &Config) -> Result<()> {
+    let data = data(cfg);
+    println!("training NODE-ACA (HeunEuler, tol 1e-2)…");
+    let node = train_once(cfg, &data, Method::Aca, tableau::heun_euler(), None)?;
+    let base = test_err(&node, &data, tableau::heun_euler(), 1e-2, None)?;
+    robustness_grid(
+        "table7",
+        "NODE (HeunEuler-trained): error-rate increase across test solvers",
+        &node,
+        &data,
+        base,
+    )
+}

@@ -1,0 +1,97 @@
+//! Table 3 — test-retest reliability: ICC(1) and ICC(1,k) of per-sample
+//! correctness across independently-initialized training runs, on the whole
+//! test set and on the misclassified subset, NODE vs the discrete baseline.
+//!
+//! Runs execute in parallel on the worker pool (one PJRT client per thread).
+
+use anyhow::{anyhow, Result};
+
+use super::pool::{default_workers, run_parallel};
+use super::report::Table;
+use crate::config::Config;
+use crate::data::ImageDataset;
+use crate::grad::Method;
+use crate::metrics::{icc1, icc1k, IccInput};
+use crate::ode::{tableau, IntegrateOpts};
+use crate::runtime::{Engine, HloModel};
+use crate::train::trainer::per_sample_correct;
+use crate::train::{LrSchedule, TrainConfig, Trainer};
+
+/// One training run: returns the per-test-sample correctness vector.
+fn one_run(seed: u64, epochs: usize, discrete: bool, n_train: usize, n_test: usize) -> Vec<bool> {
+    let data = ImageDataset::generate(n_train, n_test, 0.05, 0); // same data every run
+    let mut engine = Engine::cpu().expect("engine");
+    let dir = crate::runtime::artifact_root().join("img");
+    let mut model = HloModel::load(&mut engine, &dir).expect("load img model");
+    model.init_params(seed as i32).expect("init");
+    let (tab, fixed_h) = if discrete {
+        (tableau::euler(), Some(1.0))
+    } else {
+        (tableau::heun_euler(), None)
+    };
+    let tcfg = TrainConfig {
+        method: Method::Aca,
+        epochs,
+        lr: LrSchedule::Step { initial: 0.05, factor: 0.1, milestones: vec![epochs * 2 / 3] },
+        fixed_h,
+        seed,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(tcfg);
+    trainer.fit(&mut model, tab, &data).expect("fit");
+    let opts = IntegrateOpts { rtol: 1e-2, atol: 1e-2, fixed_h, ..Default::default() };
+    per_sample_correct(&model, tab, &opts, 1.0, &data).expect("eval")
+}
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let runs = cfg.get_usize("runs", 10);
+    let epochs = cfg.get_usize("epochs", 8);
+    let n_train = cfg.get_usize("n_train", 640);
+    let n_test = cfg.get_usize("n_test", 320);
+    let workers = cfg.get_usize("workers", default_workers());
+
+    let mut table = Table::new(
+        "table3",
+        &format!("ICC over {runs} runs (img dataset)"),
+        &["model", "subset", "ICC1", "ICC1k", "mean acc"],
+    );
+
+    for (label, discrete) in [("NODE18-ACA", false), ("discrete", true)] {
+        println!("{label}: launching {runs} runs on {workers} workers…");
+        let jobs: Vec<_> = (0..runs)
+            .map(|r| {
+                let seed = 100 + r as u64;
+                move || one_run(seed, epochs, discrete, n_train, n_test)
+            })
+            .collect();
+        let results = run_parallel(workers, jobs);
+        let correctness: Vec<Vec<bool>> = results
+            .into_iter()
+            .collect::<Result<Vec<_>, String>>()
+            .map_err(|e| anyhow!("run failed: {e}"))?;
+
+        let mean_acc = correctness
+            .iter()
+            .map(|r| r.iter().filter(|&&b| b).count() as f64 / r.len() as f64)
+            .sum::<f64>()
+            / correctness.len() as f64;
+
+        let input = IccInput::from_correctness(&correctness);
+        table.row(vec![
+            label.to_string(),
+            "whole test set".into(),
+            Table::fmt(icc1(&input)),
+            Table::fmt(icc1k(&input)),
+            format!("{mean_acc:.4}"),
+        ]);
+        let mis = input.misclassified_subset();
+        table.row(vec![
+            label.to_string(),
+            "misclassified".into(),
+            Table::fmt(icc1(&mis)),
+            Table::fmt(icc1k(&mis)),
+            "-".into(),
+        ]);
+    }
+    table.emit()
+}

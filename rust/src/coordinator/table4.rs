@@ -1,0 +1,133 @@
+//! Table 4 — irregularly-sampled time series: interpolation MSE vs the
+//! fraction of training data, for RNN / GRU baselines and the latent NODE
+//! trained with adjoint / naive / ACA.
+
+use anyhow::Result;
+
+use super::report::Table;
+use crate::config::Config;
+use crate::data::timeseries::{Group, TimeSeriesDataset};
+use crate::grad::Method;
+use crate::ode::{tableau, IntegrateOpts, OdeFunc};
+use crate::runtime::hlo_model::Target;
+use crate::runtime::{Engine, HloModel, RecurrentBaseline};
+use crate::train::segmented::{segmented_eval, segmented_loss_grad};
+use crate::train::{Adam, Optimizer};
+
+fn node_mse(model: &HloModel, groups: &[&Group]) -> Result<f64> {
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts::with_tol(1e-3, 1e-4);
+    let mut acc = 0.0;
+    for g in groups {
+        let z0 = model.encode(&g.encoder_input())?;
+        let targets: Vec<Target> =
+            (0..g.n_targets()).map(|k| Target::Values(g.target_at(k))).collect();
+        let (mse, _) = segmented_eval(model, tab, &opts, &z0, g.target_times(), &targets)?;
+        acc += mse;
+    }
+    Ok(acc / groups.len().max(1) as f64)
+}
+
+fn train_node(
+    cfg: &Config,
+    groups: &[&Group],
+    method: Method,
+    seed: i32,
+) -> Result<HloModel> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join("ts");
+    let mut model = HloModel::load(&mut engine, &dir)?;
+    model.init_params(seed)?;
+    std::mem::forget(engine);
+
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts {
+        record_trials: method == Method::Naive,
+        ..IntegrateOpts::with_tol(1e-3, 1e-4)
+    };
+    let epochs = cfg.get_usize("epochs", 25);
+    let mut opt = Adam::new(cfg.get_f64("lr", 0.01));
+    for _epoch in 0..epochs {
+        for g in groups {
+            let z0 = model.encode(&g.encoder_input())?;
+            let targets: Vec<Target> =
+                (0..g.n_targets()).map(|k| Target::Values(g.target_at(k))).collect();
+            let sg = segmented_loss_grad(
+                &model,
+                tab,
+                &opts,
+                method,
+                &z0,
+                g.target_times(),
+                &targets,
+            )?;
+            let mut dtheta = sg.dtheta;
+            model.encode_vjp_accum(&g.encoder_input(), &sg.dl_dz0, &mut dtheta)?;
+            crate::train::clip_grad_norm(&mut dtheta, 5.0);
+            let mut params = crate::ode::OdeFunc::params(&model).to_vec();
+            opt.step(&mut params, &dtheta);
+            model.set_params(&params);
+        }
+    }
+    Ok(model)
+}
+
+fn train_rnn(cfg: &Config, name: &str, groups: &[&Group], seed: i32) -> Result<RecurrentBaseline> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join(name);
+    let mut m = RecurrentBaseline::load(&mut engine, &dir)?;
+    m.init_params(seed)?;
+    std::mem::forget(engine);
+    let epochs = cfg.get_usize("rnn_epochs", 60);
+    let mut opt = Adam::new(cfg.get_f64("rnn_lr", 0.01));
+    for _ in 0..epochs {
+        for g in groups {
+            let (loss, grad) = m.loss_grad(&g.rnn_inputs(), &g.rnn_targets())?;
+            debug_assert!(loss.is_finite());
+            opt.step(&mut m.params, &grad);
+        }
+    }
+    Ok(m)
+}
+
+fn rnn_mse(m: &RecurrentBaseline, groups: &[&Group]) -> Result<f64> {
+    let mut acc = 0.0;
+    for g in groups {
+        let pred = m.predict(&g.rnn_inputs())?;
+        acc += g.rnn_interp_mse(&pred);
+    }
+    Ok(acc / groups.len().max(1) as f64)
+}
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let group_size = 32; // must match the ts artifacts' batch
+    let n_groups = cfg.get_usize("n_groups", 10);
+    let n_test = cfg.get_usize("n_test_groups", 4);
+    let data = TimeSeriesDataset::generate(n_groups, n_test, group_size, 5.0, 11);
+    let test_groups: Vec<&Group> = data.test.iter().collect();
+
+    let mut table = Table::new(
+        "table4",
+        "irregular time-series interpolation MSE (x 1e-2 to match paper units)",
+        &["% train data", "RNN", "RNN-GRU", "NODE-adjoint", "NODE-naive", "NODE-ACA"],
+    );
+
+    for pct in [10usize, 20, 50] {
+        let groups = data.subset(pct);
+        println!("-- {pct}% of training data ({} groups) --", groups.len());
+        let mut row = vec![format!("{pct}%")];
+
+        for name in ["ts_rnn", "ts_gru"] {
+            println!("  training {name}…");
+            let m = train_rnn(cfg, name, &groups, 1)?;
+            row.push(format!("{:.3}", 100.0 * rnn_mse(&m, &test_groups)?));
+        }
+        for method in [Method::Adjoint, Method::Naive, Method::Aca] {
+            println!("  training NODE-{}…", method.name());
+            let m = train_node(cfg, &groups, method, 1)?;
+            row.push(format!("{:.3}", 100.0 * node_mse(&m, &test_groups)?));
+        }
+        table.row(row);
+    }
+    table.emit()
+}

@@ -1,0 +1,327 @@
+//! Table 5 + Fig 8 — the three-body problem: predict `[0, 2]` years of
+//! trajectory from training data on `[0, 1]` year, with increasing physical
+//! knowledge: LSTM (none) → LSTM-aug (pairwise geometry) → NODE over Aug
+//! features (structure) → ODE with unknown masses (full law), the latter two
+//! trained with adjoint / naive / ACA.
+
+use anyhow::Result;
+
+use super::report::{save_series, Table};
+use crate::config::Config;
+use crate::data::ThreeBodyDataset;
+use crate::grad::{self, Method};
+use crate::ode::analytic::ThreeBody;
+use crate::ode::{integrate, tableau, IntegrateOpts, OdeFunc, Trajectory};
+use crate::runtime::hlo_model::Target;
+use crate::runtime::{Engine, HloModel, RecurrentBaseline};
+use crate::train::segmented::{segmented_eval, segmented_loss_grad};
+use crate::train::{Adam, Optimizer};
+
+const N_PER_YEAR: usize = 100; // dt = 0.01 yr; LSTM rollout (200) covers 2 yr
+const CHUNKS: usize = 4; // tb_node artifact batch
+const TOL: f64 = 1e-5; // paper: rtol = atol = 1e-5
+
+// ---------------------------------------------------------------------------
+// LSTM baselines
+// ---------------------------------------------------------------------------
+
+fn train_lstm(
+    cfg: &Config,
+    name: &str,
+    ds: &ThreeBodyDataset,
+    seed: i32,
+) -> Result<RecurrentBaseline> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join(name);
+    let mut m = RecurrentBaseline::load(&mut engine, &dir)?;
+    m.init_params(seed)?;
+    std::mem::forget(engine);
+    let man = m.manifest.clone();
+    let (xs, ys) = ds.lstm_windows(man.seq_len, 10);
+    anyhow::ensure!(xs.len() >= man.batch, "not enough LSTM windows");
+    let epochs = cfg.get_usize("lstm_epochs", 300);
+    let mut opt = Adam::new(cfg.get_f64("lstm_lr", 0.01));
+    for e in 0..epochs {
+        // exponential decay (paper Eq. 83)
+        opt.set_lr(cfg.get_f64("lstm_lr", 0.01) * 0.999f64.powi(e as i32));
+        for chunk in xs.chunks(man.batch).zip(ys.chunks(man.batch)) {
+            let (cx, cy) = chunk;
+            if cx.len() < man.batch {
+                continue;
+            }
+            let x: Vec<f32> = cx.concat();
+            let y: Vec<f32> = cy.concat();
+            let (_, grad) = m.loss_grad(&x, &y)?;
+            opt.step(&mut m.params, &grad);
+        }
+    }
+    Ok(m)
+}
+
+fn lstm_mse(m: &RecurrentBaseline, ds: &ThreeBodyDataset) -> Result<f64> {
+    // Autoregressive rollout from the initial positions; compare the full
+    // [0, 2] yr range (paper measures mean trajectory MSE over 2 years).
+    let man = &m.manifest;
+    let mut x0 = Vec::with_capacity(man.batch * 9);
+    for _ in 0..man.batch {
+        x0.extend_from_slice(ds.positions(0));
+    }
+    let traj = m.rollout(&x0)?;
+    // row 0 of the batch
+    let steps = man.rollout_steps;
+    let preds: Vec<Vec<f32>> =
+        (0..steps).map(|k| traj[k * 9..(k + 1) * 9].to_vec()).collect();
+    Ok(ds.position_mse(&preds, 1))
+}
+
+// ---------------------------------------------------------------------------
+// NODE over Aug features (tb_node artifacts, batch = CHUNKS)
+// ---------------------------------------------------------------------------
+
+fn train_node(
+    cfg: &Config,
+    ds: &ThreeBodyDataset,
+    method: Method,
+    seed: i32,
+) -> Result<HloModel> {
+    let mut engine = Engine::cpu()?;
+    let dir = crate::runtime::artifact_root().join("tb_node");
+    let mut model = HloModel::load(&mut engine, &dir)?;
+    model.init_params(seed)?;
+    std::mem::forget(engine);
+
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts {
+        record_trials: method == Method::Naive,
+        ..IntegrateOpts::with_tol(TOL, TOL)
+    };
+    // Split the training year into CHUNKS contiguous chunks sharing one
+    // relative time grid; batch them.
+    let steps_per_chunk = N_PER_YEAR / CHUNKS; // 25
+    let dt = ds.t_train / N_PER_YEAR as f64;
+    let times: Vec<f64> = (0..=steps_per_chunk).map(|k| k as f64 * dt).collect();
+    let mut z0 = Vec::with_capacity(CHUNKS * 18);
+    for c in 0..CHUNKS {
+        z0.extend_from_slice(&ds.states[c * steps_per_chunk]);
+    }
+    let targets: Vec<Target> = (1..=steps_per_chunk)
+        .map(|k| {
+            let mut t = Vec::with_capacity(CHUNKS * 9);
+            for c in 0..CHUNKS {
+                t.extend_from_slice(ds.positions(c * steps_per_chunk + k));
+            }
+            Target::Values(t)
+        })
+        .collect();
+
+    let epochs = cfg.get_usize("node_epochs", 60);
+    let mut opt = Adam::new(cfg.get_f64("node_lr", 0.02));
+    for e in 0..epochs {
+        opt.set_lr(cfg.get_f64("node_lr", 0.02) * 0.99f64.powi(e as i32));
+        let sg = segmented_loss_grad(&model, tab, &opts, method, &z0, &times, &targets)?;
+        let mut dtheta = sg.dtheta.clone();
+        crate::train::clip_grad_norm(&mut dtheta, 5.0);
+        let mut params = OdeFunc::params(&model).to_vec();
+        opt.step(&mut params, &dtheta);
+        model.set_params(&params);
+        if !sg.loss.is_finite() {
+            anyhow::bail!("NODE-{} diverged at epoch {e}", method.name());
+        }
+    }
+    Ok(model)
+}
+
+fn node_mse(model: &HloModel, ds: &ThreeBodyDataset) -> Result<(f64, Vec<Vec<f32>>)> {
+    // Predict the whole [0, 2] yr from the true initial state (batch rows all
+    // start identically; row 0 is read out).
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts::with_tol(TOL, TOL);
+    let mut z0 = Vec::with_capacity(CHUNKS * 18);
+    for _ in 0..CHUNKS {
+        z0.extend_from_slice(&ds.states[0]);
+    }
+    let n = ds.times.len() - 1; // 200 segments
+    let targets: Vec<Target> = (1..=n)
+        .map(|k| {
+            let mut t = Vec::with_capacity(CHUNKS * 9);
+            for _ in 0..CHUNKS {
+                t.extend_from_slice(ds.positions(k));
+            }
+            Target::Values(t)
+        })
+        .collect();
+    let (_, preds_b) = segmented_eval(model, tab, &opts, &z0, &ds.times, &targets)?;
+    let preds: Vec<Vec<f32>> = preds_b.iter().map(|p| p[..9].to_vec()).collect();
+    Ok((ds.position_mse(&preds, 1), preds))
+}
+
+// ---------------------------------------------------------------------------
+// ODE with unknown masses (analytic dynamics, Rust)
+// ---------------------------------------------------------------------------
+
+/// Segmented loss+grad for the analytic three-body ODE: loss = mean position
+/// MSE at each training sample.
+fn phys_loss_grad(
+    f: &ThreeBody,
+    ds: &ThreeBodyDataset,
+    method: Method,
+    opts: &IntegrateOpts,
+) -> Result<(f64, Vec<f32>)> {
+    let tab = tableau::dopri5();
+    let end = ds.train_end();
+    let mut z = ds.states[0].clone();
+    let mut segs: Vec<Trajectory> = Vec::with_capacity(end);
+    let mut jumps: Vec<Vec<f32>> = Vec::with_capacity(end);
+    let mut loss = 0.0f64;
+    for k in 1..=end {
+        let traj = integrate(f, ds.times[k - 1], ds.times[k], &z, tab, opts)?;
+        z = traj.last().to_vec();
+        // L_k = mean_j (pos_j − target_j)²  over 9 position dims.
+        let target = ds.positions(k);
+        let mut lam = vec![0.0f32; 18];
+        for j in 0..9 {
+            let d = z[j] - target[j];
+            loss += (d as f64).powi(2) / 9.0;
+            lam[j] = 2.0 * d / 9.0;
+        }
+        segs.push(traj);
+        jumps.push(lam);
+    }
+    let n_obs = end as f32;
+    let mut lam = vec![0.0f32; 18];
+    let mut dtheta = vec![0.0f32; 3];
+    for k in (0..end).rev() {
+        for (l, j) in lam.iter_mut().zip(&jumps[k]) {
+            *l += j / n_obs;
+        }
+        let g = grad::backward(f, tab, &segs[k], &lam, method, opts)?;
+        lam = g.dl_dz0;
+        for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+            *d += s;
+        }
+    }
+    Ok((loss / end as f64, dtheta))
+}
+
+fn train_phys(cfg: &Config, ds: &ThreeBodyDataset, method: Method) -> Result<ThreeBody> {
+    let mut f = ThreeBody::new([0.6, 0.6, 0.6]); // unknown masses, neutral init
+    let opts = IntegrateOpts {
+        record_trials: method == Method::Naive,
+        ..IntegrateOpts::with_tol(TOL, TOL)
+    };
+    let epochs = cfg.get_usize("phys_epochs", 100);
+    let mut opt = Adam::new(cfg.get_f64("phys_lr", 0.05));
+    for e in 0..epochs {
+        opt.set_lr(cfg.get_f64("phys_lr", 0.05) * 0.99f64.powi(e as i32));
+        let (loss, mut grad) = phys_loss_grad(&f, ds, method, &opts)?;
+        if !loss.is_finite() {
+            anyhow::bail!("ODE-{} diverged at epoch {e}", method.name());
+        }
+        crate::train::clip_grad_norm(&mut grad, 10.0);
+        let mut m = f.params().to_vec();
+        opt.step(&mut m, &grad);
+        for v in m.iter_mut() {
+            *v = v.max(1e-3); // masses stay positive
+        }
+        f.set_params(&m);
+    }
+    Ok(f)
+}
+
+fn phys_mse(f: &ThreeBody, ds: &ThreeBodyDataset) -> Result<f64> {
+    let tab = tableau::dopri5();
+    let opts = IntegrateOpts::with_tol(TOL, TOL);
+    let mut z = ds.states[0].clone();
+    let mut preds = Vec::new();
+    for k in 1..ds.times.len() {
+        let traj = integrate(f, ds.times[k - 1], ds.times[k], &z, tab, &opts)?;
+        z = traj.last().to_vec();
+        preds.push(z[..9].to_vec());
+    }
+    Ok(ds.position_mse(&preds, 1))
+}
+
+// ---------------------------------------------------------------------------
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let n_runs = cfg.get_usize("runs", 3);
+    let mut table = Table::new(
+        "table5",
+        &format!("three-body [0,2]yr trajectory MSE over {n_runs} systems (mean ± std)"),
+        &["model", "mean MSE", "std"],
+    );
+
+    let mut rows: Vec<(String, Vec<f64>)> = vec![
+        ("LSTM".into(), vec![]),
+        ("LSTM-aug-input".into(), vec![]),
+        ("NODE-adjoint".into(), vec![]),
+        ("NODE-naive".into(), vec![]),
+        ("NODE-ACA".into(), vec![]),
+        ("ODE-adjoint".into(), vec![]),
+        ("ODE-naive".into(), vec![]),
+        ("ODE-ACA".into(), vec![]),
+    ];
+
+    for run in 0..n_runs {
+        let seed = 1 + run as u64;
+        println!("== system {seed} ==");
+        let ds = ThreeBodyDataset::generate(seed, N_PER_YEAR);
+        println!("  true masses: {:?}", ds.masses);
+
+        println!("  LSTM…");
+        let m = train_lstm(cfg, "tb_lstm", &ds, seed as i32)?;
+        rows[0].1.push(lstm_mse(&m, &ds)?);
+        println!("  LSTM-aug…");
+        let m = train_lstm(cfg, "tb_lstm_aug", &ds, seed as i32)?;
+        rows[1].1.push(lstm_mse(&m, &ds)?);
+
+        for (i, method) in [Method::Adjoint, Method::Naive, Method::Aca].iter().enumerate() {
+            println!("  NODE-{}…", method.name());
+            match train_node(cfg, &ds, *method, seed as i32) {
+                Ok(m) => {
+                    let (mse, preds) = node_mse(&m, &ds)?;
+                    rows[2 + i].1.push(mse);
+                    if *method == Method::Aca && run == 0 {
+                        // Fig 8 data: predicted vs true trajectory of planet 1.
+                        let cols = vec![
+                            ds.times[1..].to_vec(),
+                            preds.iter().map(|p| p[0] as f64).collect(),
+                            preds.iter().map(|p| p[1] as f64).collect(),
+                            preds.iter().map(|p| p[2] as f64).collect(),
+                            (1..ds.times.len()).map(|k| ds.positions(k)[0] as f64).collect(),
+                            (1..ds.times.len()).map(|k| ds.positions(k)[1] as f64).collect(),
+                            (1..ds.times.len()).map(|k| ds.positions(k)[2] as f64).collect(),
+                        ];
+                        save_series(
+                            "fig8_node_aca",
+                            &["t", "px", "py", "pz", "tx", "ty", "tz"],
+                            &cols,
+                        )?;
+                    }
+                }
+                Err(e) => println!("    diverged: {e}"),
+            }
+        }
+        for (i, method) in [Method::Adjoint, Method::Naive, Method::Aca].iter().enumerate() {
+            println!("  ODE-{} (3 masses)…", method.name());
+            match train_phys(cfg, &ds, *method) {
+                Ok(f) => {
+                    println!("    learned masses: {:?}", f.masses());
+                    rows[5 + i].1.push(phys_mse(&f, &ds)?);
+                }
+                Err(e) => println!("    diverged: {e}"),
+            }
+        }
+    }
+
+    for (name, vals) in rows {
+        if vals.is_empty() {
+            table.row(vec![name, "-".into(), "-".into()]);
+            continue;
+        }
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / vals.len() as f64;
+        table.row(vec![name, Table::fmt(mean), Table::fmt(var.sqrt())]);
+    }
+    table.emit()
+}

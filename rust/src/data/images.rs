@@ -1,0 +1,206 @@
+//! Procedural 16×16 image classification — the CIFAR substitute
+//! (DESIGN.md §6). Ten pattern classes with random translation, intensity
+//! jitter, and pixel noise, so the task needs real spatial features but
+//! trains in minutes on CPU.
+
+use super::Dataset;
+use crate::util::Pcg64;
+
+pub const SIDE: usize = 16;
+pub const CLASSES: usize = 10;
+
+/// Generator for the 10-class shapes/texture dataset.
+pub struct ImageDataset;
+
+fn paint(class: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; SIDE * SIDE];
+    let cx = 8 + rng.below(5) as isize - 2;
+    let cy = 8 + rng.below(5) as isize - 2;
+    let amp = 0.7 + 0.3 * rng.uniform_f32();
+    let mut set = |x: isize, y: isize, v: f32| {
+        if (0..SIDE as isize).contains(&x) && (0..SIDE as isize).contains(&y) {
+            img[(y as usize) * SIDE + x as usize] += v;
+        }
+    };
+    match class {
+        0 => {
+            // filled circle r=4
+            for y in -5..=5 {
+                for x in -5..=5 {
+                    if x * x + y * y <= 16 {
+                        set(cx + x, cy + y, amp);
+                    }
+                }
+            }
+        }
+        1 => {
+            // hollow square 9x9
+            for k in -4..=4 {
+                set(cx + k, cy - 4, amp);
+                set(cx + k, cy + 4, amp);
+                set(cx - 4, cy + k, amp);
+                set(cx + 4, cy + k, amp);
+            }
+        }
+        2 => {
+            // plus / cross
+            for k in -5..=5 {
+                set(cx + k, cy, amp);
+                set(cx, cy + k, amp);
+            }
+        }
+        3 => {
+            // horizontal stripes period 4
+            for y in 0..SIDE as isize {
+                if (y / 2) % 2 == 0 {
+                    for x in 0..SIDE as isize {
+                        set(x, y, amp * 0.8);
+                    }
+                }
+            }
+        }
+        4 => {
+            // vertical stripes period 4
+            for x in 0..SIDE as isize {
+                if (x / 2) % 2 == 0 {
+                    for y in 0..SIDE as isize {
+                        set(x, y, amp * 0.8);
+                    }
+                }
+            }
+        }
+        5 => {
+            // main diagonal band
+            for y in 0..SIDE as isize {
+                for x in 0..SIDE as isize {
+                    if (x - y).abs() <= 1 {
+                        set(x, y, amp);
+                    }
+                }
+            }
+        }
+        6 => {
+            // checkerboard 4x4 blocks
+            for y in 0..SIDE as isize {
+                for x in 0..SIDE as isize {
+                    if ((x / 4) + (y / 4)) % 2 == 0 {
+                        set(x, y, amp * 0.7);
+                    }
+                }
+            }
+        }
+        7 => {
+            // dot grid period 4
+            for y in (1..SIDE as isize).step_by(4) {
+                for x in (1..SIDE as isize).step_by(4) {
+                    set(x, y, amp);
+                    set(x + 1, y, amp);
+                    set(x, y + 1, amp);
+                    set(x + 1, y + 1, amp);
+                }
+            }
+        }
+        8 => {
+            // ring (hollow circle)
+            for y in -6..=6 {
+                for x in -6..=6isize {
+                    let r2 = x * x + y * y;
+                    if (16..=30).contains(&r2) {
+                        set(cx + x, cy + y, amp);
+                    }
+                }
+            }
+        }
+        9 => {
+            // filled triangle
+            for y in 0..8isize {
+                for x in -y..=y {
+                    set(cx + x, cy - 4 + y, amp);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+    img
+}
+
+impl ImageDataset {
+    /// Generate `n_train` + `n_test` images with pixel noise `noise`.
+    pub fn generate(n_train: usize, n_test: usize, noise: f32, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed, 20);
+        let mut make = |n: usize| {
+            let mut xs = Vec::with_capacity(n * SIDE * SIDE);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let class = i % CLASSES;
+                let mut img = paint(class, &mut rng);
+                for p in img.iter_mut() {
+                    *p = (*p + rng.normal_f32() * noise).clamp(-0.5, 1.5);
+                }
+                xs.extend_from_slice(&img);
+                ys.push(class as i32);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = make(n_train);
+        let (test_x, test_y) = make(n_test);
+        Dataset { dim_in: SIDE * SIDE, classes: CLASSES, train_x, train_y, test_x, test_y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let d = ImageDataset::generate(100, 50, 0.05, 1);
+        assert_eq!(d.dim_in, 256);
+        assert_eq!(d.train_x.len(), 100 * 256);
+        for c in 0..CLASSES as i32 {
+            assert_eq!(d.train_y.iter().filter(|&&y| y == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn all_classes_render_nonzero_patterns() {
+        let mut rng = Pcg64::seed(2);
+        for c in 0..CLASSES {
+            let img = paint(c, &mut rng);
+            let energy: f32 = img.iter().map(|v| v.abs()).sum();
+            assert!(energy > 1.0, "class {c} renders empty image");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean intra-class distance should be well below inter-class distance
+        // for noiseless canonical images.
+        let mut rng = Pcg64::seed(3);
+        let protos: Vec<Vec<f32>> = (0..CLASSES).map(|c| paint(c, &mut rng)).collect();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        for i in 0..CLASSES {
+            for j in (i + 1)..CLASSES {
+                assert!(
+                    dist(&protos[i], &protos[j]) > 1.0,
+                    "classes {i} and {j} are nearly identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pixels_bounded() {
+        let d = ImageDataset::generate(30, 0, 0.1, 4);
+        assert!(d.train_x.iter().all(|v| (-0.5..=1.5).contains(v)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ImageDataset::generate(10, 5, 0.05, 9);
+        let b = ImageDataset::generate(10, 5, 0.05, 9);
+        assert_eq!(a.train_x, b.train_x);
+    }
+}

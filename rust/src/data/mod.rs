@@ -1,0 +1,60 @@
+//! Synthetic dataset generators — the substitutes for the paper's CIFAR /
+//! Mujoco / three-body workloads (DESIGN.md §6).
+
+pub mod images;
+pub mod spirals;
+pub mod threebody;
+pub mod timeseries;
+
+pub use images::ImageDataset;
+pub use spirals::SpiralDataset;
+pub use threebody::ThreeBodyDataset;
+pub use timeseries::TimeSeriesDataset;
+
+use crate::runtime::hlo_model::Target;
+
+/// A labelled classification dataset with train/test splits, gatherable into
+/// fixed-size batches for the AOT executables.
+pub struct Dataset {
+    pub dim_in: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.train_y.is_empty()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    fn gather_from(&self, x: &[f32], y: &[i32], ids: &[usize]) -> (Vec<f32>, Target) {
+        let d = self.dim_in;
+        let mut bx = Vec::with_capacity(ids.len() * d);
+        let mut by = Vec::with_capacity(ids.len());
+        for &i in ids {
+            bx.extend_from_slice(&x[i * d..(i + 1) * d]);
+            by.push(y[i]);
+        }
+        (bx, Target::Classes(by))
+    }
+
+    /// Gather a train batch by indices.
+    pub fn gather(&self, ids: &[usize]) -> (Vec<f32>, Target) {
+        self.gather_from(&self.train_x, &self.train_y, ids)
+    }
+
+    /// Gather a test batch by indices.
+    pub fn gather_test(&self, ids: &[usize]) -> (Vec<f32>, Target) {
+        self.gather_from(&self.test_x, &self.test_y, ids)
+    }
+}

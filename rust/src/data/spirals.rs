@@ -1,0 +1,83 @@
+//! Two-class interleaved spirals — the 2-D sanity workload for the
+//! quickstart example and fast trainer tests.
+
+use super::Dataset;
+use crate::util::Pcg64;
+
+/// Generator for the two-spirals task.
+pub struct SpiralDataset;
+
+impl SpiralDataset {
+    /// `n_train`/`n_test` points per split, Gaussian noise `noise`.
+    pub fn generate(n_train: usize, n_test: usize, noise: f32, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed, 10);
+        let mut make = |n: usize| {
+            let mut xs = Vec::with_capacity(n * 2);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let class = (i % 2) as i32;
+                let t = 0.5 + 3.0 * rng.uniform(); // radians along the arm
+                let r = 0.25 * t;
+                let phase = if class == 0 { 0.0 } else { std::f64::consts::PI };
+                let x = (r * (t + phase).cos()) as f32 + rng.normal_f32() * noise;
+                let y = (r * (t + phase).sin()) as f32 + rng.normal_f32() * noise;
+                xs.push(x);
+                xs.push(y);
+                ys.push(class);
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = make(n_train);
+        let (test_x, test_y) = make(n_test);
+        Dataset { dim_in: 2, classes: 2, train_x, train_y, test_x, test_y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_labels() {
+        let d = SpiralDataset::generate(100, 40, 0.02, 1);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.test_len(), 40);
+        assert_eq!(d.train_x.len(), 200);
+        assert!(d.train_y.iter().all(|&y| y == 0 || y == 1));
+        // balanced classes
+        let ones: usize = d.train_y.iter().filter(|&&y| y == 1).count();
+        assert_eq!(ones, 50);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SpiralDataset::generate(10, 5, 0.01, 3);
+        let b = SpiralDataset::generate(10, 5, 0.01, 3);
+        assert_eq!(a.train_x, b.train_x);
+        let c = SpiralDataset::generate(10, 5, 0.01, 4);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn classes_are_separated_at_zero_noise() {
+        // With zero noise, nearest-neighbor across classes should not be
+        // trivially overlapping at the same angle.
+        let d = SpiralDataset::generate(200, 10, 0.0, 5);
+        for i in 0..d.len() {
+            let (x, y) = (d.train_x[2 * i], d.train_x[2 * i + 1]);
+            assert!(x.is_finite() && y.is_finite());
+            assert!(x.abs() < 1.2 && y.abs() < 1.2);
+        }
+    }
+
+    #[test]
+    fn gather_batches() {
+        let d = SpiralDataset::generate(10, 10, 0.01, 7);
+        let (x, y) = d.gather(&[0, 3, 5]);
+        assert_eq!(x.len(), 6);
+        match y {
+            crate::runtime::hlo_model::Target::Classes(c) => assert_eq!(c.len(), 3),
+            _ => panic!(),
+        }
+    }
+}

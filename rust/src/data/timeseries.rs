@@ -1,0 +1,291 @@
+//! Irregularly-sampled time-series workload — the Mujoco/Latent-ODE
+//! substitute (paper Sec 4.3, Table 4; DESIGN.md §6).
+//!
+//! Latent dynamics: two coupled damped harmonic oscillators (4-d latent
+//! state); observations are a random linear mixing of the latent state into
+//! `OBS_DIM = 4` channels. Observation times are drawn from a Poisson-like
+//! process (uniform order statistics). Sequences come in *groups* that share
+//! one irregular grid — grids differ across groups — so the AOT executables
+//! can batch a group while the task retains arbitrary time gaps.
+
+use crate::util::Pcg64;
+
+pub const OBS_DIM: usize = 4;
+/// Observations per sequence (= the AOT `ts_*` models' seq_len).
+pub const SEQ_OBS: usize = 40;
+/// Observations consumed by the NODE encoder.
+pub const ENC_WINDOW: usize = 5;
+
+/// A group of sequences sharing one irregular observation grid.
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// Observation times, strictly increasing in `[0, t_max]` (len SEQ_OBS).
+    pub times: Vec<f64>,
+    /// Per-sequence observed values, each `SEQ_OBS × OBS_DIM` row-major.
+    pub values: Vec<Vec<f32>>,
+}
+
+/// Train/test collection.
+pub struct TimeSeriesDataset {
+    pub train: Vec<Group>,
+    pub test: Vec<Group>,
+    pub t_max: f64,
+}
+
+fn irregular_grid(rng: &mut Pcg64, t_max: f64) -> Vec<f64> {
+    let mut times: Vec<f64> = (0..SEQ_OBS).map(|_| rng.uniform() * t_max).collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for i in 1..times.len() {
+        if times[i] <= times[i - 1] {
+            times[i] = times[i - 1] + 1e-4;
+        }
+    }
+    times
+}
+
+fn simulate_on(times: &[f64], rng: &mut Pcg64) -> Vec<f32> {
+    let w1 = 2.0 + rng.uniform() * 2.0;
+    let w2 = 3.0 + rng.uniform() * 3.0;
+    let zeta = 0.05 + 0.1 * rng.uniform();
+    let coupling = 0.4 * rng.uniform();
+    let a1 = 0.5 + rng.uniform();
+    let a2 = 0.5 + rng.uniform();
+    let p1 = rng.uniform() * std::f64::consts::TAU;
+    let p2 = rng.uniform() * std::f64::consts::TAU;
+    let mix: Vec<f64> = (0..16).map(|_| rng.normal() * 0.7).collect();
+
+    let mut values = Vec::with_capacity(times.len() * OBS_DIM);
+    for &t in times {
+        let e = (-zeta * t).exp();
+        let th1 = w1 * t + p1 + coupling * (w2 * t + p2).sin();
+        let th2 = w2 * t + p2 + coupling * (w1 * t + p1).sin();
+        let latent = [
+            a1 * e * th1.sin(),
+            a1 * e * th1.cos(),
+            a2 * e * th2.sin(),
+            a2 * e * th2.cos(),
+        ];
+        for r in 0..OBS_DIM {
+            let mut v = 0.0;
+            for (c, l) in latent.iter().enumerate() {
+                v += mix[r * 4 + c] * l;
+            }
+            values.push(v as f32);
+        }
+    }
+    values
+}
+
+impl TimeSeriesDataset {
+    /// `n_train`/`n_test` groups of `group_size` sequences each.
+    pub fn generate(
+        n_train: usize,
+        n_test: usize,
+        group_size: usize,
+        t_max: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::new(seed, 30);
+        let mut make = |n: usize| -> Vec<Group> {
+            (0..n)
+                .map(|_| {
+                    let times = irregular_grid(&mut rng, t_max);
+                    let values =
+                        (0..group_size).map(|_| simulate_on(&times, &mut rng)).collect();
+                    Group { times, values }
+                })
+                .collect()
+        };
+        let train = make(n_train);
+        let test = make(n_test);
+        TimeSeriesDataset { train, test, t_max }
+    }
+
+    /// Keep only `pct`% of the training groups (Table 4's x-axis).
+    pub fn subset(&self, pct: usize) -> Vec<&Group> {
+        let n = (self.train.len() * pct / 100).max(1);
+        self.train.iter().take(n).collect()
+    }
+}
+
+impl Group {
+    pub fn batch(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Encoder input for the whole group: `[B, ENC_WINDOW × OBS_DIM]` flat.
+    pub fn encoder_input(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.batch() * ENC_WINDOW * OBS_DIM);
+        for v in &self.values {
+            out.extend_from_slice(&v[..ENC_WINDOW * OBS_DIM]);
+        }
+        out
+    }
+
+    /// Integration grid: anchor at the last encoder observation, then every
+    /// later observation time.
+    pub fn target_times(&self) -> &[f64] {
+        &self.times[ENC_WINDOW - 1..]
+    }
+
+    /// Batched target at observation `k` (0-based among targets):
+    /// `[B × OBS_DIM]` values at `times[ENC_WINDOW + k]`.
+    pub fn target_at(&self, k: usize) -> Vec<f32> {
+        let idx = ENC_WINDOW + k;
+        let mut out = Vec::with_capacity(self.batch() * OBS_DIM);
+        for v in &self.values {
+            out.extend_from_slice(&v[idx * OBS_DIM..(idx + 1) * OBS_DIM]);
+        }
+        out
+    }
+
+    /// Number of target observations.
+    pub fn n_targets(&self) -> usize {
+        SEQ_OBS - ENC_WINDOW
+    }
+
+    /// RNN input encoding `[B, T, OBS_DIM+1]`: per-step value + Δt.
+    pub fn rnn_inputs(&self) -> Vec<f32> {
+        let b = self.batch();
+        let mut out = Vec::with_capacity(b * SEQ_OBS * (OBS_DIM + 1));
+        for v in &self.values {
+            let mut prev_t = 0.0f64;
+            for (i, &t) in self.times.iter().enumerate() {
+                out.extend_from_slice(&v[i * OBS_DIM..(i + 1) * OBS_DIM]);
+                out.push((t - prev_t) as f32);
+                prev_t = t;
+            }
+        }
+        out
+    }
+
+    /// RNN targets `[B, T, OBS_DIM]`: the next observation (last repeats).
+    pub fn rnn_targets(&self) -> Vec<f32> {
+        let b = self.batch();
+        let n = self.times.len();
+        let mut out = Vec::with_capacity(b * n * OBS_DIM);
+        for v in &self.values {
+            for i in 0..n {
+                let j = (i + 1).min(n - 1);
+                out.extend_from_slice(&v[j * OBS_DIM..(j + 1) * OBS_DIM]);
+            }
+        }
+        out
+    }
+
+    /// Per-step-ahead MSE of RNN predictions against `rnn_targets`, counting
+    /// only the interpolation region (after the encoder window) for parity
+    /// with the NODE evaluation.
+    pub fn rnn_interp_mse(&self, preds: &[f32]) -> f64 {
+        let b = self.batch();
+        let n = self.times.len();
+        let targets = self.rnn_targets();
+        let mut acc = 0.0;
+        let mut cnt = 0usize;
+        for s in 0..b {
+            for i in ENC_WINDOW..n - 1 {
+                for c in 0..OBS_DIM {
+                    let idx = (s * n + i) * OBS_DIM + c;
+                    let d = (preds[idx] - targets[idx]) as f64;
+                    acc += d * d;
+                    cnt += 1;
+                }
+            }
+        }
+        acc / cnt.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> TimeSeriesDataset {
+        TimeSeriesDataset::generate(4, 2, 8, 5.0, 1)
+    }
+
+    #[test]
+    fn shapes() {
+        let d = ds();
+        assert_eq!(d.train.len(), 4);
+        for g in &d.train {
+            assert_eq!(g.times.len(), SEQ_OBS);
+            assert_eq!(g.batch(), 8);
+            for v in &g.values {
+                assert_eq!(v.len(), SEQ_OBS * OBS_DIM);
+            }
+        }
+    }
+
+    #[test]
+    fn times_strictly_increasing_and_shared_within_group() {
+        let d = ds();
+        for g in &d.train {
+            for w in g.times.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+        }
+        // …but different across groups.
+        assert_ne!(d.train[0].times, d.train[1].times);
+    }
+
+    #[test]
+    fn irregular_gaps() {
+        let d = ds();
+        let gaps: Vec<f64> = d.train[0].times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        assert!(var > 1e-4, "sampling looks regular: var {var}");
+    }
+
+    #[test]
+    fn encoder_and_target_shapes() {
+        let d = ds();
+        let g = &d.train[0];
+        assert_eq!(g.encoder_input().len(), 8 * ENC_WINDOW * OBS_DIM);
+        assert_eq!(g.target_times().len(), SEQ_OBS - ENC_WINDOW + 1);
+        assert_eq!(g.n_targets(), SEQ_OBS - ENC_WINDOW);
+        assert_eq!(g.target_at(0).len(), 8 * OBS_DIM);
+        // target 0 is the observation right after the encoder window
+        assert_eq!(g.target_at(0)[..4], g.values[0][ENC_WINDOW * 4..ENC_WINDOW * 4 + 4]);
+    }
+
+    #[test]
+    fn rnn_shapes_and_dt() {
+        let d = ds();
+        let g = &d.train[0];
+        assert_eq!(g.rnn_inputs().len(), 8 * SEQ_OBS * (OBS_DIM + 1));
+        assert_eq!(g.rnn_targets().len(), 8 * SEQ_OBS * OBS_DIM);
+        // first Δt equals times[0] for every sequence
+        let inp = g.rnn_inputs();
+        let stride = SEQ_OBS * (OBS_DIM + 1);
+        for s in 0..8 {
+            assert!((inp[s * stride + OBS_DIM] as f64 - g.times[0]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn interp_mse_zero_for_perfect_preds() {
+        let d = ds();
+        let g = &d.train[0];
+        let preds = g.rnn_targets();
+        assert!(g.rnn_interp_mse(&preds) < 1e-12);
+    }
+
+    #[test]
+    fn subsets() {
+        let d = TimeSeriesDataset::generate(10, 0, 2, 5.0, 2);
+        assert_eq!(d.subset(10).len(), 1);
+        assert_eq!(d.subset(50).len(), 5);
+    }
+
+    #[test]
+    fn values_bounded() {
+        let d = ds();
+        for g in &d.train {
+            for v in &g.values {
+                assert!(v.iter().all(|x| x.abs() < 20.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Gradient estimation for Neural ODEs — the paper's Section 3.
+//!
+//! Three numerical realizations of the analytical adjoint solution
+//! (paper Theorem 2.1), all driven by the same forward [`crate::ode`] pass:
+//!
+//! * [`aca`] — **Adaptive Checkpoint Adjoint** (the paper's contribution,
+//!   Algo 2): replay each accepted step from the saved `(t_i, h_i, z_i)`
+//!   checkpoint and run the exact discrete step adjoint. Reverse-accurate,
+//!   shallow graph `O(N_f × N_t)`, memory `O(N_f + N_t)`.
+//! * [`naive`] — direct backprop through the solver *including* the
+//!   step-size search: the same step adjoints plus gradient flow through the
+//!   rejected trials and the `h_{i+1} = h_i · decay(ê_i)` recursion
+//!   (paper Eq. 23–26). Depth `O(N_f × N_t × m)`.
+//! * [`adjoint`] — the continuous adjoint of Chen et al. (2018): forget the
+//!   forward trajectory, solve the augmented ODE backward. Memory `O(N_f)`
+//!   but reverse-inaccurate (paper Theorem 3.2).
+//!
+//! All methods return a [`GradResult`] with `dL/dz0`, `dL/dθ`, and a
+//! [`CostMeter`] whose fields instrument the paper's Table 1 columns.
+
+pub mod aca;
+pub mod adjoint;
+pub mod naive;
+pub mod step_vjp;
+
+pub use aca::aca_backward;
+pub use adjoint::{adjoint_backward, AdjointOpts};
+pub use naive::naive_backward;
+pub use step_vjp::{err_norm_vjp, step_vjp, StepVjp};
+
+/// Which gradient-estimation method to use (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Adaptive Checkpoint Adjoint (ours / the paper's).
+    Aca,
+    /// Direct backprop through the solver incl. step-size search.
+    Naive,
+    /// Continuous adjoint (Chen et al. 2018).
+    Adjoint,
+}
+
+impl Method {
+    pub fn all() -> [Method; 3] {
+        [Method::Aca, Method::Naive, Method::Adjoint]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Aca => "aca",
+            Method::Naive => "naive",
+            Method::Adjoint => "adjoint",
+        }
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "aca" => Ok(Method::Aca),
+            "naive" => Ok(Method::Naive),
+            "adjoint" => Ok(Method::Adjoint),
+            other => Err(format!("unknown gradient method '{other}' (aca|naive|adjoint)")),
+        }
+    }
+}
+
+/// Instrumentation of one forward+backward pass — measured counterparts of
+/// the paper's Table 1 columns.
+#[derive(Debug, Clone, Default)]
+pub struct CostMeter {
+    /// `f` evaluations in the forward pass (`N_f × N_t × m` term).
+    pub nfe_forward: usize,
+    /// `f` evaluations in the backward pass (stage recomputation; ACA's
+    /// `(m+1)`-th pass, the adjoint's `N_r` reverse solve).
+    pub nfe_backward: usize,
+    /// VJP sweeps in the backward pass.
+    pub vjp_calls: usize,
+    /// Peak bytes held by trajectory checkpoints (`O(N_t)` memory term).
+    pub checkpoint_bytes: usize,
+    /// Longest chain of sequentially-dependent VJP applications — the
+    /// measured "depth of computation graph" column.
+    pub graph_depth: usize,
+    /// Accepted forward steps `N_t`.
+    pub n_steps: usize,
+    /// Rejected forward trials (`Σ (m_i − 1)`).
+    pub n_rejected: usize,
+    /// Reverse-solve steps `N_r` (adjoint method only).
+    pub n_reverse_steps: usize,
+}
+
+/// Gradients of a scalar loss w.r.t. the ODE initial state and parameters.
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    /// `dL/dz(0)` — flows to upstream layers (the encoder).
+    pub dl_dz0: Vec<f32>,
+    /// `dL/dθ` for the dynamics parameters.
+    pub dl_dtheta: Vec<f32>,
+    /// Cost instrumentation for Table 1.
+    pub meter: CostMeter,
+}
+
+/// Unified entry point: run the backward pass of `method` for a loss whose
+/// gradient at the final state is `lam_t1`.
+///
+/// `traj` must come from [`crate::ode::integrate`] over `[t0, t1]`; the naive
+/// method additionally requires it to have been recorded with
+/// `record_trials = true` when the solver is adaptive.
+pub fn backward<F: crate::ode::OdeFunc + ?Sized>(
+    f: &F,
+    tab: &crate::ode::Tableau,
+    traj: &crate::ode::Trajectory,
+    lam_t1: &[f32],
+    method: Method,
+    opts: &crate::ode::IntegrateOpts,
+) -> anyhow::Result<GradResult> {
+    match method {
+        Method::Aca => Ok(aca_backward(f, tab, traj, lam_t1)),
+        Method::Naive => Ok(naive_backward(f, tab, traj, lam_t1, opts)),
+        Method::Adjoint => adjoint_backward(f, tab, traj, lam_t1, &AdjointOpts::from_integrate(opts)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!("ACA".parse::<Method>().unwrap(), Method::Aca);
+        assert_eq!("adjoint".parse::<Method>().unwrap(), Method::Adjoint);
+        assert!("rk4".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in Method::all() {
+            assert_eq!(m.name().parse::<Method>().unwrap(), m);
+        }
+    }
+}

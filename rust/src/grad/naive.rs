@@ -1,0 +1,255 @@
+//! The **naive method**: direct back-propagation through the ODE solver,
+//! *including the step-size search* (paper Sec 3.1 / 3.3).
+//!
+//! The forward pass of an adaptive solver computes, per accepted step
+//! (paper Eq. 23–26):
+//!
+//! ```text
+//! err_0 = ê(t_i, h_0, z_i)          h_1 = h_0 · factor(err_0)    (rejected)
+//! …
+//! err_{m−1}                          h_m = h_{m−1} · factor(err_{m−1})
+//! z_{i+1} = ψ_{h_m}(t_i, z_i)        h_{i+1,0} = h_m · factor(err_m)
+//! ```
+//!
+//! PyTorch-style autograd treats every `h` as a recursive function of its
+//! predecessors, so gradients flow through the whole chain — `O(N_f·N_t·m)`
+//! graph depth. ACA instead treats `h_m` as a constant. This module
+//! reproduces the naive behaviour exactly: on top of the per-step adjoint it
+//! chains `dL/dh` backward through accepted and rejected trials via the
+//! controller derivative ([`crate::ode::Controller::dfactor_derr`]) and the
+//! error-estimate VJP ([`super::err_norm_vjp`]).
+//!
+//! For **fixed-step** solves there is no search and the naive gradient
+//! coincides with ACA (asserted by tests).
+
+use super::step_vjp::{err_norm_vjp, step_vjp};
+use super::{CostMeter, GradResult};
+use crate::ode::controller::Controller;
+use crate::ode::func::OdeFunc;
+use crate::ode::integrate::{IntegrateOpts, Trajectory};
+use crate::ode::tableau::Tableau;
+
+/// Run the naive backward pass over a trajectory recorded with
+/// `record_trials = true` (adaptive) or any trajectory (fixed-step).
+pub fn naive_backward<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    traj: &Trajectory,
+    lam_t1: &[f32],
+    opts: &IntegrateOpts,
+) -> GradResult {
+    assert_eq!(lam_t1.len(), f.dim());
+    let n = traj.len();
+    let adaptive = tab.adaptive() && opts.fixed_h.is_none();
+    let ctrl = opts.controller.unwrap_or_else(|| Controller::for_tableau(tab));
+
+    let mut lam = lam_t1.to_vec();
+    let mut dtheta = vec![0.0f32; f.n_params()];
+    let mut meter = CostMeter {
+        nfe_forward: traj.nfe,
+        n_steps: n,
+        n_rejected: traj.n_rejected,
+        ..Default::default()
+    };
+    // The naive method holds the whole graph: checkpoints *and* every trial's
+    // stage activations. Memory column of Table 1: O(N_f × N_t × m).
+    let per_step_graph = tab.stages * f.dim() * std::mem::size_of::<f32>();
+    meter.checkpoint_bytes =
+        traj.checkpoint_bytes() + (n + traj.n_rejected) * per_step_graph;
+
+    // ν = dL/d(h entering the current step's trial chain from the *previous*
+    // accepted step's controller update). Chained right-to-left.
+    let mut nu: f64 = 0.0;
+
+    for i in (0..n).rev() {
+        let t_i = traj.ts[i];
+        let h_i = traj.h(i);
+        let z_i = &traj.zs[i];
+
+        // (1) Adjoint of the accepted step ψ. The *final* step's h was
+        // clamped to land exactly on T (h = T − t_{N−1}); autograd through
+        // the clamp would distribute −dL/dh over all earlier steps' h. We
+        // treat the clamp as a constant (see DESIGN.md §6), so the final
+        // step contributes no h-gradient.
+        let want_dh = adaptive && i + 1 < n;
+        let out = step_vjp(f, tab, t_i, h_i, z_i, &lam, &mut dtheta, want_dh);
+        let mut lam_next = out.dz;
+        meter.nfe_backward += out.nfe;
+        meter.vjp_calls += out.nvjp;
+        meter.graph_depth += out.nvjp;
+
+        if adaptive {
+            // (2) dL/dh_i: explicit step path + the next step's initial-trial
+            //     path  h_{i+1,0} = h_i · factor(err_i).
+            let mut dl_dh = out.dh;
+            if nu != 0.0 {
+                let err_i = traj.errs[i];
+                let factor = ctrl.factor(err_i, 0.0);
+                dl_dh += nu * factor;
+                // ∂h_{i+1,0}/∂err_i = h_i · dfactor.
+                let dfac = ctrl.dfactor_derr(err_i, 0.0);
+                if dfac != 0.0 {
+                    let gbar_err = nu * h_i * dfac;
+                    let (deh, nfe, nvjp) = err_norm_vjp(
+                        f, tab, t_i, h_i, z_i, opts.atol, opts.rtol, gbar_err,
+                        &mut lam_next, &mut dtheta,
+                    );
+                    dl_dh += deh;
+                    meter.nfe_backward += nfe;
+                    meter.vjp_calls += nvjp;
+                    meter.graph_depth += nvjp;
+                }
+            }
+
+            // (3) Chain backward through this step's rejected trials:
+            //     h_{j+1} = h_j · factor(err(h_j, z_i, θ)).
+            let empty: Vec<crate::ode::TrialRecord> = Vec::new();
+            let trials = traj.trials.get(i).unwrap_or(&empty);
+            for tr in trials.iter().rev() {
+                if dl_dh == 0.0 {
+                    break;
+                }
+                if !tr.err.is_finite() {
+                    // Non-finite trial: the 0.5 halving has zero err-gradient.
+                    dl_dh *= 0.5;
+                    continue;
+                }
+                let factor = {
+                    // A rejected step's factor is clamped to <= 1.
+                    let raw = ctrl.factor(tr.err, 0.0);
+                    raw.min(1.0)
+                };
+                let dfac = if ctrl.factor(tr.err, 0.0) >= 1.0 {
+                    0.0 // the min(·,1) clamp was active
+                } else {
+                    ctrl.dfactor_derr(tr.err, 0.0)
+                };
+                if dfac != 0.0 {
+                    let gbar_err = dl_dh * tr.h * dfac;
+                    let (deh, nfe, nvjp) = err_norm_vjp(
+                        f, tab, t_i, tr.h, z_i, opts.atol, opts.rtol, gbar_err,
+                        &mut lam_next, &mut dtheta,
+                    );
+                    dl_dh = dl_dh * factor + deh;
+                    meter.nfe_backward += nfe;
+                    meter.vjp_calls += nvjp;
+                    meter.graph_depth += nvjp;
+                } else {
+                    dl_dh *= factor;
+                }
+            }
+            // What remains is the gradient w.r.t. this step's initial trial
+            // h_{i,0}, which came from step i−1's controller.
+            nu = dl_dh;
+        }
+
+        lam = lam_next;
+    }
+
+    GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::{integrate, tableau};
+
+    /// Fixed-step: naive must equal ACA bit-for-bit (no search to backprop
+    /// through — paper Sec 3.3 "the output of the forward pass is the same").
+    #[test]
+    fn fixed_step_equals_aca() {
+        let f = VanDerPol::new(0.15);
+        let tab = tableau::rk4();
+        let opts = IntegrateOpts::fixed(0.05);
+        let traj = integrate(&f, 0.0, 2.0, &[2.0, 0.0], tab, &opts).unwrap();
+        let lam = [1.0f32, -0.5];
+        let g_naive = naive_backward(&f, tab, &traj, &lam, &opts);
+        let g_aca = super::super::aca_backward(&f, tab, &traj, &lam);
+        assert_eq!(g_naive.dl_dz0, g_aca.dl_dz0);
+    }
+
+    /// Adaptive on the toy problem: the naive gradient stays close to the
+    /// analytic gradient, but its extra h-chain terms — legitimate gradients
+    /// of the discrete map the naive method differentiates — make it deviate
+    /// *more* than ACA (the paper's Fig 6 ordering).
+    #[test]
+    fn adaptive_toy_gradient_close_but_worse_than_aca() {
+        let f = Linear::new(-0.5, 1);
+        let tab = tableau::dopri5();
+        let opts = IntegrateOpts {
+            record_trials: true,
+            ..IntegrateOpts::with_tol(1e-6, 1e-8)
+        };
+        let traj = integrate(&f, 0.0, 4.0, &[1.0], tab, &opts).unwrap();
+        let zt = traj.last()[0];
+        let exact = f.exact_dl_dz0(1.0, 4.0);
+        let g_naive = naive_backward(&f, tab, &traj, &[2.0 * zt], &opts);
+        let g_aca = super::super::aca_backward(&f, tab, &traj, &[2.0 * zt]);
+        let rel_naive = ((g_naive.dl_dz0[0] as f64 - exact) / exact).abs();
+        let rel_aca = ((g_aca.dl_dz0[0] as f64 - exact) / exact).abs();
+        assert!(rel_naive < 5e-2, "naive diverged: {rel_naive}");
+        assert!(
+            rel_naive > rel_aca,
+            "naive ({rel_naive}) should be less accurate than ACA ({rel_aca})"
+        );
+    }
+
+    /// The naive method's accounted memory exceeds ACA's on the same solve
+    /// (Table 1: O(N_f·N_t·m) vs O(N_f + N_t)).
+    #[test]
+    fn memory_accounting_dominates_aca() {
+        let f = VanDerPol::new(2.0);
+        let tab = tableau::dopri5();
+        let opts = IntegrateOpts {
+            record_trials: true,
+            h0: Some(1.0),
+            ..IntegrateOpts::with_tol(1e-6, 1e-8)
+        };
+        let traj = integrate(&f, 0.0, 5.0, &[2.0, 0.0], tab, &opts).unwrap();
+        let lam = [1.0f32, 0.0];
+        let g_naive = naive_backward(&f, tab, &traj, &lam, &opts);
+        let g_aca = super::super::aca_backward(&f, tab, &traj, &lam);
+        assert!(
+            g_naive.meter.checkpoint_bytes > g_aca.meter.checkpoint_bytes,
+            "naive {} <= aca {}",
+            g_naive.meter.checkpoint_bytes,
+            g_aca.meter.checkpoint_bytes
+        );
+    }
+
+    /// Graph depth: naive >= ACA, strictly greater when rejections occurred.
+    #[test]
+    fn graph_depth_deeper_with_rejections() {
+        let f = VanDerPol::new(3.0);
+        let tab = tableau::dopri5();
+        let opts = IntegrateOpts {
+            record_trials: true,
+            h0: Some(2.0),
+            ..IntegrateOpts::with_tol(1e-5, 1e-7)
+        };
+        let traj = integrate(&f, 0.0, 4.0, &[2.0, 0.0], tab, &opts).unwrap();
+        assert!(traj.n_rejected > 0, "need rejections for this test");
+        let lam = [1.0f32, 0.0];
+        let g_naive = naive_backward(&f, tab, &traj, &lam, &opts);
+        let g_aca = super::super::aca_backward(&f, tab, &traj, &lam);
+        assert!(
+            g_naive.meter.graph_depth > g_aca.meter.graph_depth,
+            "naive depth {} <= aca depth {}",
+            g_naive.meter.graph_depth,
+            g_aca.meter.graph_depth
+        );
+    }
+
+    /// With a zero upstream gradient everything is zero and cheap.
+    #[test]
+    fn zero_gradient_propagates() {
+        let f = Linear::new(1.0, 2);
+        let tab = tableau::heun_euler();
+        let opts = IntegrateOpts { record_trials: true, ..Default::default() };
+        let traj = integrate(&f, 0.0, 1.0, &[1.0, 1.0], tab, &opts).unwrap();
+        let g = naive_backward(&f, tab, &traj, &[0.0, 0.0], &opts);
+        assert!(g.dl_dz0.iter().all(|&v| v == 0.0));
+        assert!(g.dl_dtheta.iter().all(|&v| v == 0.0));
+    }
+}

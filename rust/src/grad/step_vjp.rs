@@ -1,0 +1,442 @@
+//! Exact discrete adjoint of one RK step — the "local backward" of the
+//! paper's Algo 2.
+//!
+//! For a tableau `(A, b, c)` the step is
+//!
+//! ```text
+//! u_j = z + h Σ_{l<j} a_jl k_l        k_j = f(t + c_j h, u_j)
+//! y   = z + h Σ_j b_j k_j
+//! ```
+//!
+//! Given `λ = dL/dy`, the reverse sweep computes `dL/dz`, accumulates
+//! `dL/dθ`, and (for the naive method) the *explicit* `dL/dh`:
+//!
+//! ```text
+//! k̄_j  = h b_j λ                                    (seed)
+//! for j = s−1 .. 0:
+//!     w_j   = k̄_j
+//!     ŵ_j  = w_jᵀ ∂f/∂u |_{u_j}      (one VJP; also yields w_jᵀ ∂f/∂θ)
+//!     dz   += ŵ_j ;   k̄_l += h a_jl ŵ_j  (l < j)
+//! dz += λ
+//! dh  = λ·Σ_j b_j k_j + Σ_j ŵ_j·Σ_{l<j} a_jl k_l    (f autonomous: no ∂f/∂t)
+//! ```
+//!
+//! The stages are recomputed from the checkpoint (`m+1`-th evaluation in the
+//! paper's cost accounting) and freed immediately — "delete local
+//! computation graphs".
+
+use crate::ode::func::OdeFunc;
+use crate::ode::tableau::Tableau;
+use crate::tensor;
+
+/// Output of a step VJP.
+#[derive(Debug, Clone)]
+pub struct StepVjp {
+    /// `dL/dz` at the step's start state.
+    pub dz: Vec<f32>,
+    /// Explicit `dL/dh` (0 unless requested).
+    pub dh: f64,
+    /// `f` evaluations spent recomputing stages.
+    pub nfe: usize,
+    /// VJP calls spent.
+    pub nvjp: usize,
+}
+
+/// Recompute the stages of a step from `(t, h, z)`.
+///
+/// Returns `(us, ks)` where `us[j]` is the stage input and `ks[j]` the stage
+/// derivative.
+fn recompute_stages<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    t: f64,
+    h: f64,
+    z: &[f32],
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let s = tab.stages;
+    let dim = z.len();
+    let mut us: Vec<Vec<f32>> = Vec::with_capacity(s);
+    let mut ks: Vec<Vec<f32>> = Vec::with_capacity(s);
+    for j in 0..s {
+        let mut u = z.to_vec();
+        for (l, a) in tab.a[j].iter().enumerate() {
+            if *a != 0.0 {
+                tensor::axpy((h * *a) as f32, &ks[l], &mut u);
+            }
+        }
+        let mut k = vec![0.0f32; dim];
+        f.eval(t + tab.c[j] * h, &u, &mut k);
+        us.push(u);
+        ks.push(k);
+    }
+    (us, ks)
+}
+
+/// Shared reverse sweep: given per-stage seeds `k̄_j` (`bar_k`), run the
+/// stage-reverse recursion. Adds the result into `dz` and `dtheta`, returns
+/// the Σ_j ŵ_j · (Σ_{l<j} a_jl k_l) term of `dh` plus vjp count.
+#[allow(clippy::too_many_arguments)]
+fn reverse_sweep<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    t: f64,
+    h: f64,
+    us: &[Vec<f32>],
+    ks: &[Vec<f32>],
+    mut bar_k: Vec<Vec<f32>>,
+    dz: &mut [f32],
+    dtheta: &mut [f32],
+    want_dh: bool,
+) -> (f64, usize) {
+    let s = tab.stages;
+    let dim = dz.len();
+    let mut wjz = vec![0.0f32; dim];
+    let mut dh_inner = 0.0f64;
+    let mut nvjp = 0usize;
+    for j in (0..s).rev() {
+        // Skip dead stages (seed exactly zero and no downstream contribution).
+        if bar_k[j].iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        f.vjp(t + tab.c[j] * h, &us[j], &bar_k[j], &mut wjz, dtheta);
+        nvjp += 1;
+        tensor::axpy(1.0, &wjz, dz);
+        for (l, a) in tab.a[j].iter().enumerate() {
+            if *a != 0.0 {
+                let (lo, _) = bar_k.split_at_mut(j);
+                tensor::axpy((h * *a) as f32, &wjz, &mut lo[l]);
+            }
+        }
+        if want_dh {
+            // ŵ_j · (Σ_{l<j} a_jl k_l) = ŵ_j · (u_j − z)/h ; use the a-form
+            // to stay exact when h is tiny.
+            let mut acc = 0.0f64;
+            for (l, a) in tab.a[j].iter().enumerate() {
+                if *a != 0.0 {
+                    acc += *a * tensor::dot(&wjz, &ks[l]);
+                }
+            }
+            dh_inner += acc;
+        }
+    }
+    (dh_inner, nvjp)
+}
+
+/// Exact VJP of `ψ_h(t, z)` (see module docs). `dtheta` is accumulated into.
+pub fn step_vjp<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    t: f64,
+    h: f64,
+    z: &[f32],
+    lam: &[f32],
+    dtheta: &mut [f32],
+    want_dh: bool,
+) -> StepVjp {
+    let s = tab.stages;
+    let dim = z.len();
+    let (us, ks) = recompute_stages(f, tab, t, h, z);
+
+    // Seed: k̄_j = h b_j λ.
+    let bar_k: Vec<Vec<f32>> = (0..s)
+        .map(|j| {
+            if tab.b[j] == 0.0 {
+                vec![0.0f32; dim]
+            } else {
+                lam.iter().map(|&l| (h * tab.b[j]) as f32 * l).collect()
+            }
+        })
+        .collect();
+
+    let mut dz = vec![0.0f32; dim];
+    let (dh_inner, nvjp) =
+        reverse_sweep(f, tab, t, h, &us, &ks, bar_k, &mut dz, dtheta, want_dh);
+
+    // Direct z path of y = z + ...
+    tensor::axpy(1.0, lam, &mut dz);
+
+    let dh = if want_dh {
+        // λ · Σ_j b_j k_j
+        let mut d = 0.0f64;
+        for j in 0..s {
+            if tab.b[j] != 0.0 {
+                d += tab.b[j] * tensor::dot(lam, &ks[j]);
+            }
+        }
+        d + dh_inner
+    } else {
+        0.0
+    };
+
+    StepVjp { dz, dh, nfe: s, nvjp }
+}
+
+/// VJP of the *error norm* of a step attempt — the quantity the naive method
+/// backpropagates through the step-size controller (paper Sec 3.3).
+///
+/// `err = sqrt(mean_i (ev_i / sc_i)²)` with `ev = h Σ_j e_j k_j` and
+/// `sc_i = atol + rtol·|z_i|`. Both paths are differentiated: through the
+/// error vector (stage reverse sweep) and through the tolerance scale
+/// (`∂err/∂z_i ⊇ −ev_i²·rtol·sign(z_i)/(sc_i³·N·err)`) — the latter is what
+/// makes the error norm nearly scale-invariant for homogeneous dynamics, so
+/// dropping it would bias the naive method's h-chain.
+///
+/// Scales everything by the upstream gradient `gbar = dL/derr`; adds into
+/// `dz_accum`/`dtheta`, returns `dL/dh` (explicit) plus costs.
+#[allow(clippy::too_many_arguments)]
+pub fn err_norm_vjp<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    t: f64,
+    h: f64,
+    z: &[f32],
+    atol: f64,
+    rtol: f64,
+    gbar: f64,
+    dz_accum: &mut [f32],
+    dtheta: &mut [f32],
+) -> (f64, usize, usize) {
+    let e = tab
+        .b_err
+        .expect("err_norm_vjp requires an adaptive tableau");
+    let s = tab.stages;
+    let dim = z.len();
+    let (us, ks) = recompute_stages(f, tab, t, h, z);
+
+    // Recompute the error vector (the scale uses the start state only —
+    // matching rk_step — so `err` has no z_next dependence).
+    let mut ev = vec![0.0f32; dim];
+    for (c, k) in e.iter().zip(&ks) {
+        if *c != 0.0 {
+            tensor::axpy((h * *c) as f32, k, &mut ev);
+        }
+    }
+    let err = tensor::wrms_norm(&ev, z, z, atol, rtol);
+    if err <= 0.0 || !err.is_finite() {
+        return (0.0, s, 0);
+    }
+
+    // d err / d ev_i = ev_i / (sc_i² · N · err).
+    let n = dim as f64;
+    let w_ev: Vec<f32> = (0..dim)
+        .map(|i| {
+            let sc = atol + rtol * z[i].abs() as f64;
+            ((ev[i] as f64 / (sc * sc)) / (n * err) * gbar) as f32
+        })
+        .collect();
+
+    // Seed k̄_j = h e_j w_ev.
+    let bar_k: Vec<Vec<f32>> = (0..s)
+        .map(|j| {
+            if e[j] == 0.0 {
+                vec![0.0f32; dim]
+            } else {
+                w_ev.iter().map(|&l| (h * e[j]) as f32 * l).collect()
+            }
+        })
+        .collect();
+
+    let mut dz = vec![0.0f32; dim];
+    let (dh_inner, nvjp) = reverse_sweep(f, tab, t, h, &us, &ks, bar_k, &mut dz, dtheta, true);
+    tensor::axpy(1.0, &dz, dz_accum);
+
+    // Direct tolerance-scale path: ∂err/∂z_i = −ev_i²·rtol·sign(z_i)/(sc_i³·N·err).
+    if rtol != 0.0 {
+        for i in 0..dim {
+            if z[i] == 0.0 {
+                continue; // sub-gradient of |z| at 0
+            }
+            let sc = atol + rtol * z[i].abs() as f64;
+            let evi = ev[i] as f64;
+            let d = -(evi * evi) * rtol * z[i].signum() as f64 / (sc * sc * sc * n * err);
+            dz_accum[i] += (gbar * d) as f32;
+        }
+    }
+
+    // Explicit h path of ev = h Σ e_j k_j.
+    let mut dh = dh_inner;
+    for j in 0..s {
+        if e[j] != 0.0 {
+            dh += e[j] * tensor::dot(&w_ev, &ks[j]);
+        }
+    }
+    (dh, s, nvjp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::step::{rk_step, StepScratch};
+    use crate::ode::tableau;
+
+    /// For dz/dt = kz one RK step is linear: y = R(kh) z with a rational
+    /// stability polynomial. The VJP w.r.t. z must be R(kh) · λ.
+    #[test]
+    fn linear_step_vjp_exact() {
+        let k = -0.8f64;
+        let f = Linear::new(k as f32, 1);
+        for tab in [tableau::euler(), tableau::rk4(), tableau::dopri5()] {
+            let h = 0.3f64;
+            // Stability polynomial R = Σ_i (kh)^i / i! truncated at order.
+            // Compute R numerically by stepping z=1.
+            let mut y = [0.0f32];
+            let mut scratch = StepScratch::new();
+            rk_step(&f, tab, 0.0, h, &[1.0], None, 1e-9, 1e-9, &mut y, None, &mut scratch);
+            let r = y[0] as f64;
+            let lam = [2.5f32];
+            let mut dtheta = vec![0.0f32; 1];
+            let out = step_vjp(&f, tab, 0.0, h, &[1.0], &lam, &mut dtheta, false);
+            assert!(
+                (out.dz[0] as f64 - r * 2.5).abs() < 1e-5,
+                "{}: dz {} vs R*lam {}",
+                tab.name,
+                out.dz[0],
+                r * 2.5
+            );
+        }
+    }
+
+    /// Finite-difference check of dz, dθ, dh on a nonlinear system.
+    #[test]
+    fn step_vjp_matches_finite_difference() {
+        let f = VanDerPol::new(0.15);
+        let tab = tableau::dopri5();
+        let t = 0.4;
+        let h = 0.21;
+        let z = [1.7f32, -0.3];
+        let lam = [0.8f32, -1.2];
+        let mut dtheta: Vec<f32> = vec![];
+        let out = step_vjp(&f, tab, t, h, &z, &lam, &mut dtheta, true);
+
+        let step = |zz: &[f32], hh: f64| -> f64 {
+            let mut y = [0.0f32; 2];
+            let mut s = StepScratch::new();
+            rk_step(&f, tab, t, hh, zz, None, 1e-9, 1e-9, &mut y, None, &mut s);
+            lam.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+
+        // dz
+        for i in 0..2 {
+            let eps = 1e-3f32;
+            let mut zp = z;
+            zp[i] += eps;
+            let mut zm = z;
+            zm[i] -= eps;
+            let fd = (step(&zp, h) - step(&zm, h)) / (2.0 * eps as f64);
+            assert!(
+                (out.dz[i] as f64 - fd).abs() < 2e-3 * fd.abs().max(1.0),
+                "dz[{i}]: {} vs fd {}",
+                out.dz[i],
+                fd
+            );
+        }
+        // dh (eps sized for f32 state noise: curvature error O(eps²) vs
+        // roundoff O(1e-7/eps)).
+        let eps = 1e-3;
+        let fd_h = (step(&z, h + eps) - step(&z, h - eps)) / (2.0 * eps);
+        assert!(
+            (out.dh - fd_h).abs() < 5e-3 * fd_h.abs().max(1.0),
+            "dh: {} vs fd {}",
+            out.dh,
+            fd_h
+        );
+    }
+
+    /// dθ check on the linear system where dψ/dk is analytic-ish via FD.
+    #[test]
+    fn step_vjp_dtheta_matches_fd() {
+        let tab = tableau::rk23();
+        let h = 0.25f64;
+        let z = [1.4f32, -0.6, 0.9];
+        let lam = [1.0f32, 0.5, -0.25];
+        let f = Linear::new(-0.9, 3);
+        let mut dtheta = vec![0.0f32; 1];
+        step_vjp(&f, tab, 0.0, h, &z, &lam, &mut dtheta, false);
+
+        let loss_with_k = |k: f32| -> f64 {
+            let fk = Linear::new(k, 3);
+            let mut y = [0.0f32; 3];
+            let mut s = StepScratch::new();
+            rk_step(&fk, tab, 0.0, h, &z, None, 1e-9, 1e-9, &mut y, None, &mut s);
+            lam.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let fd = (loss_with_k(-0.9 + eps) - loss_with_k(-0.9 - eps)) / (2.0 * eps as f64);
+        assert!(
+            (dtheta[0] as f64 - fd).abs() < 2e-3 * fd.abs().max(1.0),
+            "dtheta {} vs fd {}",
+            dtheta[0],
+            fd
+        );
+    }
+
+    /// dtheta accumulates across calls.
+    #[test]
+    fn dtheta_accumulates() {
+        let f = Linear::new(0.5, 2);
+        let tab = tableau::heun_euler();
+        let mut dtheta = vec![0.0f32; 1];
+        let z = [1.0f32, 2.0];
+        let lam = [1.0f32, 1.0];
+        step_vjp(&f, tab, 0.0, 0.1, &z, &lam, &mut dtheta, false);
+        let first = dtheta[0];
+        step_vjp(&f, tab, 0.0, 0.1, &z, &lam, &mut dtheta, false);
+        assert!((dtheta[0] - 2.0 * first).abs() < 1e-6);
+    }
+
+    /// err_norm_vjp: finite-difference check of d err/d h and d err/d z.
+    #[test]
+    fn err_vjp_matches_finite_difference() {
+        let f = VanDerPol::new(0.15);
+        let tab = tableau::dopri5();
+        let (t, h) = (0.0, 0.4);
+        // Keep both components away from 0: |z| has a kink there and the
+        // central FD of the scale path would be biased.
+        let z = [2.0f32, 0.5];
+        let (atol, rtol) = (1e-6, 1e-4);
+
+        let err_of = |zz: &[f32], hh: f64| -> f64 {
+            let mut y = [0.0f32; 2];
+            let mut s = StepScratch::new();
+            rk_step(&f, tab, t, hh, zz, None, atol, rtol, &mut y, None, &mut s).err_norm
+        };
+
+        let mut dz = vec![0.0f32; 2];
+        let mut dtheta: Vec<f32> = vec![];
+        let (dh, _, _) = err_norm_vjp(&f, tab, t, h, &z, atol, rtol, 1.0, &mut dz, &mut dtheta);
+
+        let eps = 1e-4;
+        let fd_h = (err_of(&z, h + eps) - err_of(&z, h - eps)) / (2.0 * eps);
+        assert!(
+            (dh - fd_h).abs() < 1e-2 * fd_h.abs().max(1e-9),
+            "dh {} vs fd {}",
+            dh,
+            fd_h
+        );
+
+        for i in 0..2 {
+            let eps = 1e-3f32;
+            let mut zp = z;
+            zp[i] += eps;
+            let mut zm = z;
+            zm[i] -= eps;
+            let fd = (err_of(&zp, h) - err_of(&zm, h)) / (2.0 * eps as f64);
+            assert!(
+                (dz[i] as f64 - fd).abs() < 0.02 * fd.abs().max(1e-9),
+                "dz[{i}] {} vs fd {}",
+                dz[i],
+                fd
+            );
+        }
+    }
+
+    /// Gradient seeds that are zero must cost zero VJPs.
+    #[test]
+    fn zero_seed_short_circuits() {
+        let f = Linear::new(1.0, 1);
+        let out = step_vjp(&f, tableau::dopri5(), 0.0, 0.1, &[1.0], &[0.0], &mut vec![0.0], false);
+        assert_eq!(out.nvjp, 0);
+        assert_eq!(out.dz, vec![0.0]);
+    }
+}

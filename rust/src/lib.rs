@@ -1,0 +1,44 @@
+//! # nodal — Adaptive Checkpoint Adjoint gradient estimation for Neural ODEs
+//!
+//! Rust + JAX + Pallas reproduction of *"Adaptive Checkpoint Adjoint Method for
+//! Gradient Estimation in Neural ODE"* (Zhuang et al., ICML 2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — adaptive explicit Runge–Kutta solving with PI
+//!   step-size control ([`ode`]), the paper's trajectory-checkpoint data
+//!   structure and the three gradient-estimation strategies — **naive**,
+//!   **adjoint**, **ACA** ([`grad`]) — plus training ([`train`]), data
+//!   generation ([`data`]), metrics ([`metrics`]) and the experiment
+//!   coordinator ([`coordinator`]).
+//! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
+//!   encoders/decoders/loss heads, AOT-lowered to HLO text.
+//! * **L1 (Pallas, `python/compile/kernels/`)** — fused hot-path kernels
+//!   called from the L2 graphs.
+//!
+//! At runtime the coordinator executes the AOT artifacts through PJRT
+//! ([`runtime`]); Python never runs on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nodal::ode::{analytic::VanDerPol, integrate, IntegrateOpts, tableau};
+//!
+//! let f = VanDerPol::new(0.15);
+//! let traj = integrate(&f, 0.0, 25.0, &[2.0, 0.0], tableau::dopri5(),
+//!                      &IntegrateOpts::default()).unwrap();
+//! println!("steps: {} nfe: {}", traj.len(), traj.nfe);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod grad;
+pub mod metrics;
+pub mod models;
+pub mod ode;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,71 @@
+//! `nodal` — launcher for the ACA Neural-ODE framework.
+//!
+//! Subcommands:
+//!   repro <id> [--key value …]   regenerate a paper table/figure (see `list`)
+//!   list                          list reproducible experiments
+//!   info                          runtime + artifact status
+//!
+//! Every experiment accepts `--config file.json` plus `--key value`
+//! overrides; see `rust/src/config`.
+
+use anyhow::Result;
+
+use nodal::config::Config;
+use nodal::coordinator;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: nodal <command>\n\
+         \n\
+         commands:\n\
+           repro <id> [--key value …]   run an experiment (or `repro all`)\n\
+           list                          list experiments\n\
+           info                          show runtime + artifact status\n"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            println!("experiments (nodal repro <id>):");
+            for (id, desc) in coordinator::EXPERIMENTS {
+                println!("  {id:<8} {desc}");
+            }
+            println!("  all      run everything in sequence");
+            Ok(())
+        }
+        Some("info") => {
+            let engine = nodal::runtime::Engine::cpu()?;
+            println!("PJRT platform : {}", engine.platform());
+            let root = nodal::runtime::artifact_root();
+            println!("artifact root : {}", root.display());
+            let mut n = 0;
+            if let Ok(dirs) = std::fs::read_dir(&root) {
+                for d in dirs.flatten() {
+                    if d.path().join("manifest.json").exists() {
+                        let m = nodal::runtime::Manifest::load(&d.path())?;
+                        println!(
+                            "  {:<12} kind={:<10} P={:<6} B={}",
+                            m.name, m.kind, m.n_params, m.batch
+                        );
+                        n += 1;
+                    }
+                }
+            }
+            if n == 0 {
+                println!("  (no artifacts — run `make artifacts`)");
+            }
+            println!("results dir   : {}", coordinator::results_dir().display());
+            Ok(())
+        }
+        Some("repro") => {
+            let id = args.get(1).cloned().unwrap_or_else(|| usage());
+            let mut cfg = Config::new();
+            cfg.apply_args(&args[2..])?;
+            coordinator::run(&id, &cfg)
+        }
+        _ => usage(),
+    }
+}

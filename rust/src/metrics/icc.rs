@@ -1,0 +1,194 @@
+//! Intraclass correlation coefficients (Weir 2005) — the paper's
+//! test-retest reliability measure (Table 3).
+//!
+//! One-way random-effects model: `n` subjects (test samples) rated by `k`
+//! raters (independently-initialized training runs). Ratings here are the
+//! per-sample correctness indicators (1 = classified correctly).
+//!
+//! ```text
+//! ICC(1)   = (MSB − MSW) / (MSB + (k−1)·MSW)      single-rater reliability
+//! ICC(1,k) = (MSB − MSW) / MSB                     mean-of-k reliability
+//! ```
+
+/// Ratings matrix: `runs[r][s]` = rating of subject `s` by rater `r`.
+pub struct IccInput {
+    pub runs: Vec<Vec<f64>>,
+}
+
+impl IccInput {
+    /// Build from per-run boolean correctness vectors.
+    pub fn from_correctness(runs: &[Vec<bool>]) -> Self {
+        IccInput {
+            runs: runs
+                .iter()
+                .map(|r| r.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect())
+                .collect(),
+        }
+    }
+
+    /// Restrict to the subjects where at least one rater erred — the paper's
+    /// "misclassified test data" rows of Table 3.
+    pub fn misclassified_subset(&self) -> IccInput {
+        let n = self.runs[0].len();
+        let keep: Vec<usize> = (0..n)
+            .filter(|&s| self.runs.iter().any(|r| r[s] < 0.5))
+            .collect();
+        IccInput {
+            runs: self
+                .runs
+                .iter()
+                .map(|r| keep.iter().map(|&s| r[s]).collect())
+                .collect(),
+        }
+    }
+
+    fn n_subjects(&self) -> usize {
+        self.runs.first().map(|r| r.len()).unwrap_or(0)
+    }
+}
+
+/// One-way ANOVA mean squares (MSB between subjects, MSW within subjects).
+fn anova(input: &IccInput) -> Option<(f64, f64, usize)> {
+    let k = input.runs.len();
+    let n = input.n_subjects();
+    if k < 2 || n < 2 {
+        return None;
+    }
+    debug_assert!(input.runs.iter().all(|r| r.len() == n));
+    let grand: f64 = input.runs.iter().flat_map(|r| r.iter()).sum::<f64>() / (n * k) as f64;
+    // Subject means.
+    let mut ssb = 0.0;
+    let mut ssw = 0.0;
+    for s in 0..n {
+        let mean_s: f64 = input.runs.iter().map(|r| r[s]).sum::<f64>() / k as f64;
+        ssb += (mean_s - grand).powi(2);
+        for r in 0..k {
+            ssw += (input.runs[r][s] - mean_s).powi(2);
+        }
+    }
+    let msb = k as f64 * ssb / (n - 1) as f64;
+    let msw = ssw / (n * (k - 1)) as f64;
+    Some((msb, msw, k))
+}
+
+/// ICC(1): single-rater reliability. Returns NaN for degenerate inputs.
+pub fn icc1(input: &IccInput) -> f64 {
+    match anova(input) {
+        Some((msb, msw, k)) => {
+            let denom = msb + (k as f64 - 1.0) * msw;
+            if denom == 0.0 {
+                f64::NAN
+            } else {
+                (msb - msw) / denom
+            }
+        }
+        None => f64::NAN,
+    }
+}
+
+/// ICC(1,k): reliability of the mean of k raters.
+pub fn icc1k(input: &IccInput) -> f64 {
+    match anova(input) {
+        Some((msb, msw, _)) => {
+            if msb == 0.0 {
+                f64::NAN
+            } else {
+                (msb - msw) / msb
+            }
+        }
+        None => f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement_gives_one() {
+        // All raters agree exactly, subjects differ.
+        let runs = vec![vec![1.0, 0.0, 1.0, 0.0]; 5];
+        let input = IccInput { runs };
+        assert!((icc1(&input) - 1.0).abs() < 1e-12);
+        assert!((icc1k(&input) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pure_noise_gives_near_zero() {
+        // Ratings independent of subject: expected ICC ~ 0.
+        let mut rng = crate::util::Pcg64::seed(9);
+        let runs: Vec<Vec<f64>> = (0..20)
+            .map(|_| (0..200).map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let v = icc1(&IccInput { runs });
+        assert!(v.abs() < 0.05, "noise ICC should be ~0, got {v}");
+    }
+
+    #[test]
+    fn icc1k_geq_icc1() {
+        // Averaging raters can only help.
+        let runs = vec![
+            vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0],
+            vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+            vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0],
+        ];
+        let input = IccInput { runs };
+        let a = icc1(&input);
+        let b = icc1k(&input);
+        assert!(b >= a, "ICC1k {b} < ICC1 {a}");
+    }
+
+    #[test]
+    fn hand_computed_example() {
+        // 2 raters, 3 subjects; ratings chosen for a tractable ANOVA.
+        // subjects means: 1.0, 0.5, 0.0 ; grand = 0.5
+        let runs = vec![vec![1.0, 1.0, 0.0], vec![1.0, 0.0, 0.0]];
+        let input = IccInput { runs };
+        // ssb = (0.5^2 + 0 + 0.5^2) = 0.5 ; msb = 2*0.5/2 = 0.5
+        // ssw = 0 + 0.5 + 0 = 0.5 ; msw = 0.5/3
+        let msb = 0.5;
+        let msw = 0.5 / 3.0;
+        let want1 = (msb - msw) / (msb + msw);
+        let want1k = (msb - msw) / msb;
+        assert!((icc1(&input) - want1).abs() < 1e-12);
+        assert!((icc1k(&input) - want1k).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misclassified_subset_filters() {
+        let runs = vec![vec![true, true, false, true], vec![true, false, false, true]];
+        let input = IccInput::from_correctness(&runs);
+        let sub = input.misclassified_subset();
+        // subjects 1 and 2 had at least one error
+        assert_eq!(sub.runs[0].len(), 2);
+        assert_eq!(sub.runs[0], vec![1.0, 0.0]);
+        assert_eq!(sub.runs[1], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn degenerate_inputs_nan() {
+        assert!(icc1(&IccInput { runs: vec![] }).is_nan());
+        assert!(icc1(&IccInput { runs: vec![vec![1.0, 0.0]] }).is_nan());
+        // All identical ratings everywhere: 0/0.
+        let runs = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert!(icc1(&IccInput { runs }).is_nan());
+    }
+
+    #[test]
+    fn more_consistent_runs_higher_icc() {
+        let mut rng = crate::util::Pcg64::seed(4);
+        let base: Vec<f64> = (0..300).map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 }).collect();
+        let noisy = |p: f64, rng: &mut crate::util::Pcg64| -> Vec<Vec<f64>> {
+            (0..8)
+                .map(|_| {
+                    base.iter()
+                        .map(|&v| if rng.uniform() < p { 1.0 - v } else { v })
+                        .collect()
+                })
+                .collect()
+        };
+        let hi = icc1(&IccInput { runs: noisy(0.05, &mut rng) });
+        let lo = icc1(&IccInput { runs: noisy(0.4, &mut rng) });
+        assert!(hi > lo, "consistent {hi} should beat noisy {lo}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Evaluation metrics: accuracy, MSE, and the intraclass correlation
+//! coefficients ICC(1) / ICC(1,k) used for the paper's test-retest
+//! reliability analysis (Table 3).
+
+pub mod icc;
+
+pub use icc::{icc1, icc1k, IccInput};
+
+/// Classification accuracy from predicted and true labels.
+pub fn accuracy(pred: &[usize], truth: &[i32]) -> f64 {
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    let correct = pred.iter().zip(truth).filter(|(p, t)| **p == **t as usize).count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    crate::tensor::mse(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert!(accuracy(&[], &[]).is_nan());
+    }
+}

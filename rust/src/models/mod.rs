@@ -1,0 +1,59 @@
+//! High-level model API: a [`NodeSystem`] bundles an AOT-compiled NODE with
+//! a solver, tolerances, and a gradient method — the object the examples
+//! and the experiment coordinator train and evaluate.
+
+use anyhow::Result;
+
+use crate::grad::{self, CostMeter, Method};
+use crate::ode::{integrate, IntegrateOpts, OdeFunc, Tableau, Trajectory};
+use crate::runtime::hlo_model::{HloModel, Target};
+
+/// A Neural-ODE "system": model + solver + gradient method.
+pub struct NodeSystem {
+    pub model: HloModel,
+    pub tab: &'static Tableau,
+    pub opts: IntegrateOpts,
+    pub method: Method,
+    /// Integration span of the ODE block (paper: [0, 1]).
+    pub t1: f64,
+}
+
+impl NodeSystem {
+    pub fn new(model: HloModel, tab: &'static Tableau, method: Method) -> Self {
+        let opts = IntegrateOpts {
+            rtol: 1e-2,
+            atol: 1e-2,
+            record_trials: method == Method::Naive,
+            ..Default::default()
+        };
+        NodeSystem { model, tab, opts, method, t1: 1.0 }
+    }
+
+    /// Forward pass: encode + solve. Returns the trajectory (z0 implied by
+    /// `traj.zs[0]`).
+    pub fn forward(&self, x: &[f32]) -> Result<Trajectory> {
+        let z0 = self.model.encode(x)?;
+        integrate(&self.model, 0.0, self.t1, &z0, self.tab, &self.opts)
+    }
+
+    /// Full training step gradient: returns (loss, dθ, cost meter).
+    pub fn loss_grad(&self, x: &[f32], y: &Target) -> Result<(f64, Vec<f32>, CostMeter)> {
+        let traj = self.forward(x)?;
+        let mut dtheta = vec![0.0f32; self.model.n_params()];
+        let (lam, loss) = self.model.decode_loss_vjp(traj.last(), y, &mut dtheta)?;
+        let g = grad::backward(&self.model, self.tab, &traj, &lam, self.method, &self.opts)?;
+        for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+            *d += s;
+        }
+        self.model.encode_vjp_accum(x, &g.dl_dz0, &mut dtheta)?;
+        let mut meter = g.meter;
+        meter.nfe_forward = traj.nfe;
+        Ok((loss, dtheta, meter))
+    }
+
+    /// Inference: predictions for a batch.
+    pub fn predict(&self, x: &[f32], y: &Target) -> Result<(f64, Vec<f32>)> {
+        let traj = self.forward(x)?;
+        self.model.decode_loss(traj.last(), y)
+    }
+}

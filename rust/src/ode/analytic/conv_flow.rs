@@ -1,0 +1,146 @@
+//! Image evolving under a random 3×3 convolution — the paper's Fig 5 study:
+//! `dz/dt = conv3x3(z, K)` over a `H×W` single-channel image. Forward-solve
+//! the flow, then reverse-solve from `z(T)` with the adjoint method's
+//! forgotten trajectory and observe the reconstruction error.
+
+use crate::ode::func::OdeFunc;
+use crate::util::Pcg64;
+
+/// Linear convolution flow `f(z) = K * z` (zero padding, 3×3 kernel).
+#[derive(Debug, Clone)]
+pub struct ConvFlow {
+    h: usize,
+    w: usize,
+    kernel: [f32; 9],
+}
+
+impl ConvFlow {
+    pub fn new(h: usize, w: usize, kernel: [f32; 9]) -> Self {
+        ConvFlow { h, w, kernel }
+    }
+
+    /// Random kernel drawn N(0, scale²) — the paper's "random 3×3 kernel".
+    /// The kernel is mean-subtracted so the flow is neither uniformly
+    /// exploding nor uniformly decaying over the Fig 5 time span.
+    pub fn random(h: usize, w: usize, seed: u64, scale: f32) -> Self {
+        let mut rng = Pcg64::new(seed, 50);
+        let mut kernel = [0.0f32; 9];
+        for k in kernel.iter_mut() {
+            *k = rng.normal_f32() * scale;
+        }
+        let mean: f32 = kernel.iter().sum::<f32>() / 9.0;
+        for k in kernel.iter_mut() {
+            *k -= mean;
+        }
+        ConvFlow { h, w, kernel }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    #[inline]
+    fn at(&self, z: &[f32], r: isize, c: isize) -> f32 {
+        if r < 0 || c < 0 || r >= self.h as isize || c >= self.w as isize {
+            0.0
+        } else {
+            z[r as usize * self.w + c as usize]
+        }
+    }
+
+    /// Forward correlation with the kernel.
+    fn conv(&self, z: &[f32], out: &mut [f32], transpose: bool) {
+        for r in 0..self.h as isize {
+            for c in 0..self.w as isize {
+                let mut acc = 0.0f32;
+                for dr in -1..=1isize {
+                    for dc in -1..=1isize {
+                        let kidx = ((dr + 1) * 3 + (dc + 1)) as usize;
+                        let k = if transpose {
+                            // adjoint of correlation = correlation with the
+                            // flipped kernel
+                            self.kernel[8 - kidx]
+                        } else {
+                            self.kernel[kidx]
+                        };
+                        acc += k * self.at(z, r + dr, c + dc);
+                    }
+                }
+                out[(r as usize) * self.w + c as usize] = acc;
+            }
+        }
+    }
+}
+
+impl OdeFunc for ConvFlow {
+    fn dim(&self) -> usize {
+        self.h * self.w
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        self.conv(z, dz, false);
+    }
+
+    fn vjp(&self, _t: f64, _z: &[f32], w: &[f32], wjz: &mut [f32], _wjp: &mut [f32]) {
+        // Linear map: wᵀ ∂f/∂z = Kᵀ w.
+        self.conv(w, wjz, true);
+    }
+
+    fn jvp(&self, _t: f64, _z: &[f32], v: &[f32], out: &mut [f32]) {
+        self.conv(v, out, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_is_identity_map() {
+        let mut k = [0.0f32; 9];
+        k[4] = 1.0;
+        let f = ConvFlow::new(4, 4, k);
+        let z: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut dz = vec![0.0f32; 16];
+        f.eval(0.0, &z, &mut dz);
+        assert_eq!(dz, z);
+    }
+
+    #[test]
+    fn shift_kernel_shifts() {
+        // Kernel with a 1 at position (0,1)-offset (dr=-1, dc=0): output(r,c) = z(r-1,c).
+        let mut k = [0.0f32; 9];
+        k[1] = 1.0; // dr = -1, dc = 0
+        let f = ConvFlow::new(3, 3, k);
+        let z = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0f32];
+        let mut dz = [0.0f32; 9];
+        f.eval(0.0, &z, &mut dz);
+        // row 0 reads out of bounds (0), rows 1,2 read rows 0,1.
+        assert_eq!(&dz[0..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(&dz[3..6], &[1.0, 2.0, 3.0]);
+        assert_eq!(&dz[6..9], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn vjp_is_adjoint_of_jvp() {
+        // <w, Kv> == <K^T w, v>
+        let f = ConvFlow::random(5, 5, 3, 0.4);
+        let mut rng = Pcg64::seed(11);
+        let v: Vec<f32> = (0..25).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..25).map(|_| rng.normal_f32()).collect();
+        let mut kv = vec![0.0f32; 25];
+        f.jvp(0.0, &v, &v, &mut kv);
+        let mut ktw = vec![0.0f32; 25];
+        f.vjp(0.0, &v, &w, &mut ktw, &mut []);
+        let lhs = crate::tensor::dot(&w, &kv);
+        let rhs = crate::tensor::dot(&ktw, &v);
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn random_kernel_mean_zero() {
+        let f = ConvFlow::random(8, 8, 42, 0.5);
+        let s: f32 = f.kernel.iter().sum();
+        assert!(s.abs() < 1e-5);
+    }
+}

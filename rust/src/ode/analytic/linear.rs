@@ -1,0 +1,141 @@
+//! `dz/dt = k z` — the paper's Fig 6 toy problem (Eq. 27–29).
+//!
+//! With `L(z(T)) = z(T)^2` the exact parameter-free input gradient is
+//! `dL/dz0 = 2 z0 exp(2kT)`, giving a closed-form target against which the
+//! three gradient-estimation methods are compared. `k` is exposed as a
+//! single trainable parameter so parameter-gradient paths are exercised too:
+//! `dL/dk = 2 T z0² exp(2kT)`.
+
+use crate::ode::func::OdeFunc;
+
+/// Scalar-field linear dynamics `f(z) = k z` applied element-wise.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    k: [f32; 1],
+    dim: usize,
+}
+
+impl Linear {
+    pub fn new(k: f32, dim: usize) -> Self {
+        Linear { k: [k], dim }
+    }
+
+    pub fn k(&self) -> f32 {
+        self.k[0]
+    }
+
+    /// Exact flow: `z(t) = z0 · exp(k t)`.
+    pub fn exact(&self, z0: f32, t: f64) -> f64 {
+        z0 as f64 * (self.k[0] as f64 * t).exp()
+    }
+
+    /// Exact `dL/dz0` for `L = z(T)^2` (paper Eq. 29).
+    pub fn exact_dl_dz0(&self, z0: f32, t_end: f64) -> f64 {
+        2.0 * z0 as f64 * (2.0 * self.k[0] as f64 * t_end).exp()
+    }
+
+    /// Exact `dL/dk` for `L = z(T)^2`.
+    pub fn exact_dl_dk(&self, z0: f32, t_end: f64) -> f64 {
+        2.0 * t_end * (z0 as f64).powi(2) * (2.0 * self.k[0] as f64 * t_end).exp()
+    }
+}
+
+impl OdeFunc for Linear {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_params(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        for (d, &zi) in dz.iter_mut().zip(z) {
+            *d = self.k[0] * zi;
+        }
+    }
+
+    fn vjp(&self, _t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        // ∂f/∂z = k I ; ∂f/∂k = z.
+        for (o, &wi) in wjz.iter_mut().zip(w) {
+            *o = self.k[0] * wi;
+        }
+        wjp[0] += crate::tensor::dot(w, z) as f32;
+    }
+
+    fn jvp(&self, _t: f64, _z: &[f32], v: &[f32], out: &mut [f32]) {
+        for (o, &vi) in out.iter_mut().zip(v) {
+            *o = self.k[0] * vi;
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.k
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), 1);
+        self.k[0] = p[0];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_exact() {
+        let f = Linear::new(-0.5, 2);
+        let mut dz = [0.0f32; 2];
+        f.eval(0.0, &[2.0, -4.0], &mut dz);
+        assert_eq!(dz, [-1.0, 2.0]);
+        assert!((f.exact(1.0, 2.0) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference() {
+        let f = Linear::new(0.7, 3);
+        let z = [1.0f32, -2.0, 0.5];
+        let w = [0.2f32, 1.0, -0.3];
+        let mut wjz = [0.0f32; 3];
+        let mut wjp = [0.0f32; 1];
+        f.vjp(0.0, &z, &w, &mut wjz, &mut wjp);
+        // wjz = k w.
+        for i in 0..3 {
+            assert!((wjz[i] - 0.7 * w[i]).abs() < 1e-6);
+        }
+        // wjp = w.z
+        let expect: f32 = z.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert!((wjp[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vjp_accumulates_into_wjp() {
+        let f = Linear::new(1.0, 1);
+        let mut wjz = [0.0f32];
+        let mut wjp = [5.0f32];
+        f.vjp(0.0, &[2.0], &[3.0], &mut wjz, &mut wjp);
+        assert_eq!(wjp[0], 5.0 + 6.0);
+    }
+
+    #[test]
+    fn analytic_gradients_consistency() {
+        // dL/dk via finite difference on exact flow.
+        let z0 = 1.3f32;
+        let t = 2.0;
+        let f = Linear::new(-0.8, 1);
+        let eps = 1e-6;
+        let lp = (z0 as f64 * ((-0.8f64 + eps) * t).exp()).powi(2);
+        let lm = (z0 as f64 * ((-0.8f64 - eps) * t).exp()).powi(2);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!((f.exact_dl_dk(z0, t) - fd).abs() < 1e-5 * fd.abs().max(1.0));
+    }
+
+    #[test]
+    fn set_params() {
+        let mut f = Linear::new(1.0, 1);
+        f.set_params(&[-2.0]);
+        assert_eq!(f.k(), -2.0);
+        assert_eq!(f.params(), &[-2.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Closed-form dynamics used by the paper's numerical studies:
+//!
+//! * [`Linear`] — `dz/dt = k z`, the Fig 6 toy problem with analytic gradient;
+//! * [`VanDerPol`] — the Fig 4 reverse-trajectory study;
+//! * [`ConvFlow`] — image evolving under a random 3×3 convolution (Fig 5);
+//! * [`ThreeBody`] — Newtonian gravity with learnable masses (Table 5, also
+//!   the ground-truth simulator for the three-body dataset).
+
+mod conv_flow;
+mod linear;
+pub mod three_body;
+mod vdp;
+
+pub use conv_flow::ConvFlow;
+pub use linear::Linear;
+pub use three_body::ThreeBody;
+pub use vdp::VanDerPol;

@@ -1,0 +1,288 @@
+//! Newtonian three-body dynamics (paper Sec 4.4, Eq. 32):
+//!
+//! ```text
+//! r̈_i = − Σ_{j≠i} G m_j (r_i − r_j) / |r_i − r_j|³
+//! ```
+//!
+//! State layout (dim 18): `[r_1(3), r_2(3), r_3(3), v_1(3), v_2(3), v_3(3)]`.
+//! The three masses are the trainable parameters — the paper's "ODE" model
+//! where only `m_i` are unknown. Also used (with fixed masses) as the
+//! ground-truth simulator for the Table 5 dataset.
+//!
+//! Units: G = 4π² (AU, years, solar masses) so `t ∈ [0,1]` is one year as in
+//! the paper.
+
+use crate::ode::func::OdeFunc;
+
+/// Gravitational constant in AU³ yr⁻² M☉⁻¹.
+pub const G: f32 = 4.0 * std::f32::consts::PI * std::f32::consts::PI;
+
+/// Softening length to keep close encounters integrable (standard N-body
+/// practice; the paper's simulated systems avoid collisions but gradient
+/// trials may not).
+pub const SOFTENING: f32 = 1e-3;
+
+/// Three-body dynamics with learnable masses.
+#[derive(Debug, Clone)]
+pub struct ThreeBody {
+    masses: [f32; 3],
+}
+
+impl ThreeBody {
+    pub fn new(masses: [f32; 3]) -> Self {
+        ThreeBody { masses }
+    }
+
+    pub fn masses(&self) -> [f32; 3] {
+        self.masses
+    }
+
+    #[inline]
+    fn pos(z: &[f32], i: usize) -> [f32; 3] {
+        [z[3 * i], z[3 * i + 1], z[3 * i + 2]]
+    }
+
+    /// Pairwise inverse-cube kernel `(r_i − r_j)/|r_i − r_j|³` with softening.
+    #[inline]
+    fn inv_cube(di: [f32; 3]) -> ([f32; 3], f32) {
+        let r2 = di[0] * di[0] + di[1] * di[1] + di[2] * di[2] + SOFTENING * SOFTENING;
+        let r = r2.sqrt();
+        let ic = 1.0 / (r2 * r);
+        ([di[0] * ic, di[1] * ic, di[2] * ic], ic)
+    }
+}
+
+impl OdeFunc for ThreeBody {
+    fn dim(&self) -> usize {
+        18
+    }
+
+    fn n_params(&self) -> usize {
+        3
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        // ṙ = v
+        dz[..9].copy_from_slice(&z[9..18]);
+        // v̇_i = −G Σ_{j≠i} m_j (r_i − r_j)/|r_i − r_j|³
+        for i in 0..3 {
+            let ri = Self::pos(z, i);
+            let mut acc = [0.0f32; 3];
+            for j in 0..3 {
+                if i == j {
+                    continue;
+                }
+                let rj = Self::pos(z, j);
+                let d = [ri[0] - rj[0], ri[1] - rj[1], ri[2] - rj[2]];
+                let (k, _) = Self::inv_cube(d);
+                for a in 0..3 {
+                    acc[a] -= G * self.masses[j] * k[a];
+                }
+            }
+            for a in 0..3 {
+                dz[9 + 3 * i + a] = acc[a];
+            }
+        }
+    }
+
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        // Position block of J is dense & nonlinear; the mass gradient is
+        // analytic and cheap. Positions/velocities: finite differences over
+        // eval (18-dim — 36 evals; negligible next to neural-f costs, and
+        // this path is exercised only by the small Table 5 experiments).
+        // wᵀ∂f/∂m_j: v̇_i depends on m_j (j≠i) linearly:
+        //   ∂v̇_i/∂m_j = −G (r_i − r_j)/|·|³
+        for j in 0..3 {
+            let rj = Self::pos(z, j);
+            let mut g = 0.0f32;
+            for i in 0..3 {
+                if i == j {
+                    continue;
+                }
+                let ri = Self::pos(z, i);
+                let d = [ri[0] - rj[0], ri[1] - rj[1], ri[2] - rj[2]];
+                let (k, _) = Self::inv_cube(d);
+                for a in 0..3 {
+                    g += w[9 + 3 * i + a] * (-G * k[a]);
+                }
+            }
+            wjp[j] += g;
+        }
+        // wᵀ∂f/∂z by finite differences (central).
+        let n = 18;
+        let eps = 1e-4f32;
+        let mut zp = z.to_vec();
+        let mut fp = vec![0.0f32; n];
+        let mut fm = vec![0.0f32; n];
+        for c in 0..n {
+            let orig = zp[c];
+            zp[c] = orig + eps;
+            self.eval(t, &zp, &mut fp);
+            zp[c] = orig - eps;
+            self.eval(t, &zp, &mut fm);
+            zp[c] = orig;
+            let mut acc = 0.0f32;
+            for r in 0..n {
+                acc += w[r] * (fp[r] - fm[r]) / (2.0 * eps);
+            }
+            wjz[c] = acc;
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.masses
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), 3);
+        self.masses.copy_from_slice(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{integrate, tableau, IntegrateOpts};
+
+    fn sun_earth_like() -> (ThreeBody, Vec<f32>) {
+        // Central mass 1 M☉, two light bodies on circular-ish orbits.
+        let f = ThreeBody::new([1.0, 1e-5, 1e-5]);
+        let mut z = vec![0.0f32; 18];
+        // body 1 at origin; body 2 at 1 AU with circular speed 2π AU/yr.
+        z[3] = 1.0;
+        z[9 + 3 + 1] = std::f32::consts::TAU;
+        // body 3 at 1.5 AU.
+        z[6] = 1.5;
+        z[9 + 6 + 1] = (G / 1.5).sqrt();
+        (f, z)
+    }
+
+    #[test]
+    fn velocities_copied() {
+        let (f, mut z) = sun_earth_like();
+        z[9] = 0.123;
+        let mut dz = vec![0.0f32; 18];
+        f.eval(0.0, &z, &mut dz);
+        assert_eq!(&dz[..9], &z[9..18]);
+    }
+
+    #[test]
+    fn newton_third_law_momentum_conserved() {
+        // Σ m_i v̇_i ≈ 0 (equal & opposite forces).
+        let f = ThreeBody::new([1.0, 2.0, 0.5]);
+        let z: Vec<f32> = (0..18).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut dz = vec![0.0f32; 18];
+        f.eval(0.0, &z, &mut dz);
+        for a in 0..3 {
+            let total: f32 = (0..3).map(|i| f.masses[i] * dz[9 + 3 * i + a]).sum();
+            assert!(total.abs() < 1e-3, "axis {a}: net force {total}");
+        }
+    }
+
+    #[test]
+    fn circular_orbit_period() {
+        // Earth-like body must return near its start after 1 year.
+        let (f, z0) = sun_earth_like();
+        let traj = integrate(
+            &f,
+            0.0,
+            1.0,
+            &z0,
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-9, 1e-9),
+        )
+        .unwrap();
+        let zf = traj.last();
+        let d = ((zf[3] - z0[3]).powi(2) + (zf[4] - z0[4]).powi(2)).sqrt();
+        assert!(d < 0.05, "earth drifted {d} AU after one period");
+    }
+
+    #[test]
+    fn energy_conservation() {
+        let (f, z0) = sun_earth_like();
+        let energy = |z: &[f32]| -> f64 {
+            let m = f.masses();
+            let mut e = 0.0f64;
+            for i in 0..3 {
+                let v2: f32 = (0..3).map(|a| z[9 + 3 * i + a].powi(2)).sum();
+                e += 0.5 * m[i] as f64 * v2 as f64;
+            }
+            for i in 0..3 {
+                for j in (i + 1)..3 {
+                    let d2: f32 = (0..3).map(|a| (z[3 * i + a] - z[3 * j + a]).powi(2)).sum();
+                    e -= (G * m[i] * m[j]) as f64 / (d2.sqrt() as f64).max(1e-9);
+                }
+            }
+            e
+        };
+        let e0 = energy(&z0);
+        let traj = integrate(
+            &f,
+            0.0,
+            2.0,
+            &z0,
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-9, 1e-9),
+        )
+        .unwrap();
+        let e1 = energy(traj.last());
+        assert!(
+            ((e1 - e0) / e0.abs()).abs() < 1e-3,
+            "energy drift: {e0} -> {e1}"
+        );
+    }
+
+    #[test]
+    fn mass_vjp_matches_finite_difference() {
+        let z: Vec<f32> = (0..18).map(|i| 0.5 + (i as f32 * 0.61).cos()).collect();
+        let w: Vec<f32> = (0..18).map(|i| (i as f32 * 0.17).sin()).collect();
+        let mut wjz = vec![0.0f32; 18];
+        let mut wjp = vec![0.0f32; 3];
+        let f = ThreeBody::new([1.0, 0.8, 1.2]);
+        f.vjp(0.0, &z, &w, &mut wjz, &mut wjp);
+        let eps = 1e-3f32;
+        for j in 0..3 {
+            let mut mp = f.masses();
+            let mut mm = f.masses();
+            mp[j] += eps;
+            mm[j] -= eps;
+            let mut fp = vec![0.0f32; 18];
+            let mut fm = vec![0.0f32; 18];
+            ThreeBody::new(mp).eval(0.0, &z, &mut fp);
+            ThreeBody::new(mm).eval(0.0, &z, &mut fm);
+            let fd: f32 = (0..18).map(|r| w[r] * (fp[r] - fm[r]) / (2.0 * eps)).sum();
+            assert!(
+                (wjp[j] - fd).abs() < 1e-2 * fd.abs().max(1.0),
+                "mass {j}: analytic {} vs fd {}",
+                wjp[j],
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn state_vjp_adjoint_identity() {
+        // <w, J v> == <w^T J, v> with J from finite differences both ways.
+        let f = ThreeBody::new([1.0, 0.5, 0.7]);
+        // Well-separated bodies: finite-difference Jacobians are accurate in
+        // f32 only away from close encounters (1/r³ curvature).
+        let mut z: Vec<f32> = vec![
+            0.0, 0.0, 0.0, // r1
+            1.2, 0.3, -0.2, // r2
+            -0.8, 1.0, 0.5, // r3
+            0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+        ];
+        for (i, v) in z.iter_mut().enumerate().skip(9) {
+            *v = (i as f32 * 0.4).sin();
+        }
+        let v: Vec<f32> = (0..18).map(|i| (i as f32 * 0.71).cos()).collect();
+        let w: Vec<f32> = (0..18).map(|i| (i as f32 * 0.31).sin()).collect();
+        let mut jv = vec![0.0f32; 18];
+        f.jvp(0.0, &z, &v, &mut jv);
+        let mut wj = vec![0.0f32; 18];
+        f.vjp(0.0, &z, &w, &mut wj, &mut vec![0.0; 3]);
+        let lhs = crate::tensor::dot(&w, &jv);
+        let rhs = crate::tensor::dot(&wj, &v);
+        assert!((lhs - rhs).abs() < 2e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+}

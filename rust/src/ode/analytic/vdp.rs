@@ -1,0 +1,123 @@
+//! Van der Pol oscillator — the paper's Fig 4 / Appendix D.1 study of
+//! forward-vs-reverse trajectory mismatch (paper Eq. 81–82):
+//!
+//! ```text
+//! dy1/dt = y2
+//! dy2/dt = (mu − y1²) · y2 − y1
+//! ```
+//!
+//! with the paper's `mu = 0.15`, `y(0) = (2, 0)`.
+
+use crate::ode::func::OdeFunc;
+
+/// Van der Pol dynamics with damping parameter `mu` (fixed, not trained).
+#[derive(Debug, Clone)]
+pub struct VanDerPol {
+    mu: f32,
+}
+
+impl VanDerPol {
+    pub fn new(mu: f32) -> Self {
+        VanDerPol { mu }
+    }
+
+    /// The paper's configuration (Appendix D.1).
+    pub fn paper() -> Self {
+        VanDerPol::new(0.15)
+    }
+}
+
+impl OdeFunc for VanDerPol {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        let (y1, y2) = (z[0], z[1]);
+        dz[0] = y2;
+        dz[1] = (self.mu - y1 * y1) * y2 - y1;
+    }
+
+    fn vjp(&self, _t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], _wjp: &mut [f32]) {
+        // J = [[0, 1], [−2 y1 y2 − 1, mu − y1²]];  wjz = wᵀ J.
+        let (y1, y2) = (z[0], z[1]);
+        wjz[0] = w[1] * (-2.0 * y1 * y2 - 1.0);
+        wjz[1] = w[0] + w[1] * (self.mu - y1 * y1);
+    }
+
+    fn jvp(&self, _t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
+        let (y1, y2) = (z[0], z[1]);
+        out[0] = v[1];
+        out[1] = (-2.0 * y1 * y2 - 1.0) * v[0] + (self.mu - y1 * y1) * v[1];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{integrate, tableau, IntegrateOpts};
+
+    #[test]
+    fn eval_matches_equations() {
+        let f = VanDerPol::new(0.15);
+        let mut dz = [0.0f32; 2];
+        f.eval(0.0, &[2.0, 0.5], &mut dz);
+        assert_eq!(dz[0], 0.5);
+        assert!((dz[1] - ((0.15 - 4.0) * 0.5 - 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vjp_vs_jvp_adjoint_identity() {
+        // w.(J v) == (w^T J).v for random-ish vectors.
+        let f = VanDerPol::new(0.15);
+        let z = [1.5f32, -0.7];
+        let w = [0.3f32, 0.9];
+        let v = [-1.1f32, 0.4];
+        let mut jv = [0.0f32; 2];
+        f.jvp(0.0, &z, &v, &mut jv);
+        let mut wj = [0.0f32; 2];
+        f.vjp(0.0, &z, &w, &mut wj, &mut []);
+        let lhs: f32 = w.iter().zip(&jv).map(|(a, b)| a * b).sum();
+        let rhs: f32 = wj.iter().zip(&v).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-5, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference() {
+        let f = VanDerPol::new(0.15);
+        let z = [2.0f32, 0.0];
+        let v = [0.5f32, -1.0];
+        let mut analytic = [0.0f32; 2];
+        f.jvp(0.0, &z, &v, &mut analytic);
+        let eps = 1e-3f32;
+        let zp = [z[0] + eps * v[0], z[1] + eps * v[1]];
+        let zm = [z[0] - eps * v[0], z[1] - eps * v[1]];
+        let mut fp = [0.0f32; 2];
+        let mut fm = [0.0f32; 2];
+        f.eval(0.0, &zp, &mut fp);
+        f.eval(0.0, &zm, &mut fm);
+        for i in 0..2 {
+            let fd = (fp[i] - fm[i]) / (2.0 * eps);
+            assert!((analytic[i] - fd).abs() < 1e-2, "{analytic:?} vs fd {fd}");
+        }
+    }
+
+    /// Low-mu van der Pol is a slightly-damped oscillator; energy should not
+    /// explode over one period.
+    #[test]
+    fn trajectory_bounded() {
+        let f = VanDerPol::paper();
+        let traj = integrate(
+            &f,
+            0.0,
+            25.0,
+            &[2.0, 0.0],
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-6, 1e-8),
+        )
+        .unwrap();
+        for z in &traj.zs {
+            assert!(z[0].abs() < 5.0 && z[1].abs() < 5.0, "unbounded: {z:?}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Adaptive step-size control — the `decay_factor(ê)` of paper Algo 1.
+//!
+//! Standard I/PI controller (Hairer–Nørsett–Wanner II.4): after a step with
+//! weighted error norm `ê` (accept iff `ê <= 1`), the next step size is
+//! `h' = h · clamp(safety · ê^(−1/p) [· ê_prev^β], f_min, f_max)`.
+//!
+//! The controller is an explicit object because the **naive** gradient method
+//! differentiates through it (paper Sec 3.3, Eq 23–26): [`Controller::factor`]
+//! and [`Controller::dfactor_derr`] expose both the value and the derivative
+//! of the decay factor, and the clamped regions have exactly zero derivative.
+
+/// Accept/reject decision plus the next trial step size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepDecision {
+    pub accept: bool,
+    /// Next step size to try (for the same step if rejected, the next step if
+    /// accepted). Sign follows integration direction.
+    pub h_next: f64,
+    /// The raw multiplicative factor applied to `h` (after clamping).
+    pub factor: f64,
+}
+
+/// I-controller with safety factor and factor clamps; optional PI term.
+#[derive(Debug, Clone, Copy)]
+pub struct Controller {
+    pub safety: f64,
+    pub min_factor: f64,
+    pub max_factor: f64,
+    /// `1/p` exponent from the tableau (see [`crate::ode::Tableau::err_exponent`]).
+    pub err_exp: f64,
+    /// PI coefficient β on the previous error (0 disables the PI term).
+    pub beta: f64,
+}
+
+impl Controller {
+    /// Standard settings used throughout the paper reproduction (matching
+    /// torchdiffeq / torch-ACA defaults).
+    pub fn new(err_exp: f64) -> Self {
+        Controller {
+            safety: 0.9,
+            min_factor: 0.2,
+            max_factor: 10.0,
+            err_exp,
+            beta: 0.0,
+        }
+    }
+
+    /// Controller for a given tableau.
+    pub fn for_tableau(tab: &super::Tableau) -> Self {
+        Self::new(tab.err_exponent())
+    }
+
+    /// Unclamped decay factor `safety · err^(−err_exp)` (with optional PI
+    /// history term), before clamping.
+    fn raw_factor(&self, err: f64, err_prev: f64) -> f64 {
+        if err <= 0.0 {
+            return self.max_factor;
+        }
+        let mut f = self.safety * err.powf(-self.err_exp);
+        if self.beta != 0.0 && err_prev > 0.0 {
+            f *= err_prev.powf(self.beta);
+        }
+        f
+    }
+
+    /// The multiplicative factor on `h` after a step with error `err`.
+    pub fn factor(&self, err: f64, err_prev: f64) -> f64 {
+        self.raw_factor(err, err_prev).clamp(self.min_factor, self.max_factor)
+    }
+
+    /// Derivative `d factor / d err` — zero in the clamped regions. Used by
+    /// the naive method's backprop through the step-size search.
+    pub fn dfactor_derr(&self, err: f64, err_prev: f64) -> f64 {
+        if err <= 0.0 {
+            return 0.0;
+        }
+        let raw = self.raw_factor(err, err_prev);
+        if raw <= self.min_factor || raw >= self.max_factor {
+            return 0.0; // clamp kills the gradient
+        }
+        -self.err_exp * raw / err
+    }
+
+    /// Decide accept/reject for a step with error norm `err`, and compute the
+    /// next trial step size.
+    pub fn decide(&self, h: f64, err: f64, err_prev: f64) -> StepDecision {
+        let accept = err <= 1.0;
+        let mut factor = self.factor(err, err_prev);
+        if !accept {
+            // A rejected step must shrink.
+            factor = factor.min(1.0);
+        }
+        StepDecision { accept, h_next: h * factor, factor }
+    }
+
+    /// Conservative initial step size from the classic algorithm of
+    /// Hairer–Nørsett–Wanner I.7 (simplified): based on the scale of `f(t0,z0)`.
+    pub fn initial_step<F: super::OdeFunc + ?Sized>(
+        &self,
+        f: &F,
+        t0: f64,
+        z0: &[f32],
+        direction: f64,
+        atol: f64,
+        rtol: f64,
+    ) -> f64 {
+        let mut f0 = vec![0.0f32; z0.len()];
+        f.eval(t0, z0, &mut f0);
+        let d0 = crate::tensor::wrms_norm(z0, z0, z0, atol, rtol);
+        let d1 = crate::tensor::wrms_norm(&f0, z0, z0, atol, rtol);
+        let h0 = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * d0 / d1 };
+        h0.max(1e-8) * direction.signum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> Controller {
+        Controller::new(0.2) // dopri5-like
+    }
+
+    #[test]
+    fn accepts_small_error_grows_step() {
+        let d = c().decide(0.1, 1e-4, 0.0);
+        assert!(d.accept);
+        assert!(d.h_next > 0.1, "step should grow: {:?}", d);
+    }
+
+    #[test]
+    fn rejects_large_error_shrinks_step() {
+        let d = c().decide(0.1, 100.0, 0.0);
+        assert!(!d.accept);
+        assert!(d.h_next < 0.1, "step must shrink on reject: {:?}", d);
+        assert!(d.h_next > 0.0, "sign preserved");
+    }
+
+    #[test]
+    fn boundary_error_one_accepts() {
+        let d = c().decide(0.1, 1.0, 0.0);
+        assert!(d.accept);
+        // factor = safety = 0.9 < 1: step shrinks slightly even on accept.
+        assert!((d.factor - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_clamped() {
+        let ctrl = c();
+        assert_eq!(ctrl.factor(1e-30, 0.0), 10.0);
+        assert_eq!(ctrl.factor(1e30, 0.0), 0.2);
+        assert_eq!(ctrl.factor(0.0, 0.0), 10.0);
+    }
+
+    #[test]
+    fn derivative_zero_when_clamped_nonzero_inside() {
+        let ctrl = c();
+        assert_eq!(ctrl.dfactor_derr(1e-30, 0.0), 0.0);
+        assert_eq!(ctrl.dfactor_derr(1e30, 0.0), 0.0);
+        let err = 0.5;
+        let d = ctrl.dfactor_derr(err, 0.0);
+        // finite-difference check
+        let eps = 1e-7;
+        let fd = (ctrl.factor(err + eps, 0.0) - ctrl.factor(err - eps, 0.0)) / (2.0 * eps);
+        assert!((d - fd).abs() < 1e-5, "analytic {d} vs fd {fd}");
+        assert!(d < 0.0, "bigger error => smaller factor");
+    }
+
+    #[test]
+    fn negative_direction_preserved() {
+        let d = c().decide(-0.1, 0.5, 0.0);
+        assert!(d.accept);
+        assert!(d.h_next < 0.0);
+    }
+
+    #[test]
+    fn monotone_in_error() {
+        let ctrl = c();
+        let mut prev = f64::INFINITY;
+        for e in [0.01, 0.1, 0.5, 1.0, 2.0, 10.0] {
+            let f = ctrl.factor(e, 0.0);
+            assert!(f <= prev + 1e-12, "factor must be non-increasing in err");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn initial_step_reasonable() {
+        use crate::ode::analytic::Linear;
+        let ctrl = c();
+        let h = ctrl.initial_step(&Linear::new(-1.0, 1), 0.0, &[1.0], 1.0, 1e-6, 1e-3);
+        assert!(h > 0.0 && h < 1.0, "h0 = {h}");
+        let hb = ctrl.initial_step(&Linear::new(-1.0, 1), 1.0, &[1.0], -1.0, 1e-6, 1e-3);
+        assert!(hb < 0.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Dense output: evaluate a solved [`Trajectory`] at arbitrary times via
+//! cubic Hermite interpolation between checkpoints.
+//!
+//! Used by the Fig 4/5 trajectory plots and by inference-time decoding. (The
+//! time-series *training* path instead integrates segment-wise to the exact
+//! observation times so gradients stay exact — see
+//! [`crate::train::segmented`].)
+
+use super::func::OdeFunc;
+use super::integrate::Trajectory;
+
+/// Cubic-Hermite dense interpolant over a trajectory. Derivatives at the
+/// checkpoints are (re)computed with `f` at construction (`N_t + 1` extra
+/// evaluations — cheaper than storing all stage values).
+pub struct DenseOutput {
+    ts: Vec<f64>,
+    zs: Vec<Vec<f32>>,
+    fs: Vec<Vec<f32>>,
+}
+
+impl DenseOutput {
+    /// Build an interpolant from a trajectory and its dynamics.
+    pub fn new<F: OdeFunc + ?Sized>(f: &F, traj: &Trajectory) -> Self {
+        let dim = traj.zs[0].len();
+        let fs = traj
+            .ts
+            .iter()
+            .zip(&traj.zs)
+            .map(|(&t, z)| {
+                let mut d = vec![0.0f32; dim];
+                f.eval(t, z, &mut d);
+                d
+            })
+            .collect();
+        DenseOutput { ts: traj.ts.clone(), zs: traj.zs.clone(), fs }
+    }
+
+    /// Time domain `[t_min, t_max]` covered by the interpolant.
+    pub fn domain(&self) -> (f64, f64) {
+        let a = self.ts[0];
+        let b = *self.ts.last().unwrap();
+        (a.min(b), a.max(b))
+    }
+
+    /// Locate the segment containing `t` (clamps to the domain).
+    fn segment(&self, t: f64) -> usize {
+        let n = self.ts.len();
+        if n < 2 {
+            return 0;
+        }
+        let increasing = self.ts[n - 1] >= self.ts[0];
+        // Binary search over possibly-decreasing knots.
+        let mut lo = 0usize;
+        let mut hi = n - 2;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            let before = if increasing { self.ts[mid] <= t } else { self.ts[mid] >= t };
+            if before {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
+    /// Interpolated state at time `t` (clamped to the trajectory domain).
+    pub fn eval(&self, t: f64) -> Vec<f32> {
+        let i = self.segment(t);
+        if self.ts.len() < 2 {
+            return self.zs[0].clone();
+        }
+        let (t0, t1) = (self.ts[i], self.ts[i + 1]);
+        let h = t1 - t0;
+        let s = if h == 0.0 { 0.0 } else { ((t - t0) / h).clamp(0.0, 1.0) };
+        let (z0, z1) = (&self.zs[i], &self.zs[i + 1]);
+        let (f0, f1) = (&self.fs[i], &self.fs[i + 1]);
+        // Hermite basis.
+        let s2 = s * s;
+        let s3 = s2 * s;
+        let h00 = (2.0 * s3 - 3.0 * s2 + 1.0) as f32;
+        let h10 = ((s3 - 2.0 * s2 + s) * h) as f32;
+        let h01 = (-2.0 * s3 + 3.0 * s2) as f32;
+        let h11 = ((s3 - s2) * h) as f32;
+        z0.iter()
+            .zip(z1)
+            .zip(f0.iter().zip(f1))
+            .map(|((&a, &b), (&fa, &fb))| h00 * a + h10 * fa + h01 * b + h11 * fb)
+            .collect()
+    }
+
+    /// Sample the interpolant on a uniform grid of `n` points (inclusive).
+    pub fn sample(&self, n: usize) -> (Vec<f64>, Vec<Vec<f32>>) {
+        let (a, b) = (self.ts[0], *self.ts.last().unwrap());
+        let ts: Vec<f64> = (0..n)
+            .map(|i| a + (b - a) * i as f64 / (n - 1).max(1) as f64)
+            .collect();
+        let zs = ts.iter().map(|&t| self.eval(t)).collect();
+        (ts, zs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::Linear;
+    use crate::ode::{integrate, tableau, IntegrateOpts};
+
+    fn make() -> (Linear, Trajectory) {
+        let f = Linear::new(-1.0, 1);
+        let traj = integrate(
+            &f,
+            0.0,
+            2.0,
+            &[1.0],
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-8, 1e-10),
+        )
+        .unwrap();
+        (f, traj)
+    }
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let (f, traj) = make();
+        let dense = DenseOutput::new(&f, &traj);
+        for (i, &t) in traj.ts.iter().enumerate() {
+            let z = dense.eval(t);
+            assert!((z[0] - traj.zs[i][0]).abs() < 1e-7, "knot {i}");
+        }
+    }
+
+    #[test]
+    fn matches_exact_solution_between_knots() {
+        let (f, traj) = make();
+        let dense = DenseOutput::new(&f, &traj);
+        for k in 0..50 {
+            let t = 2.0 * k as f64 / 49.0;
+            let got = dense.eval(t)[0] as f64;
+            let exact = (-t).exp();
+            assert!((got - exact).abs() < 1e-5, "t={t}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn clamps_outside_domain() {
+        let (f, traj) = make();
+        let dense = DenseOutput::new(&f, &traj);
+        let before = dense.eval(-1.0);
+        let after = dense.eval(3.0);
+        assert!((before[0] - 1.0).abs() < 1e-6);
+        assert!((after[0] as f64 - (-2.0f64).exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn reverse_time_trajectory_interpolation() {
+        let f = Linear::new(-1.0, 1);
+        let z1 = [(-2.0f64).exp() as f32];
+        let traj = integrate(
+            &f,
+            2.0,
+            0.0,
+            &z1,
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-8, 1e-10),
+        )
+        .unwrap();
+        let dense = DenseOutput::new(&f, &traj);
+        let mid = dense.eval(1.0)[0] as f64;
+        assert!((mid - (-1.0f64).exp()).abs() < 1e-4, "{mid}");
+    }
+
+    #[test]
+    fn sample_grid_shape() {
+        let (f, traj) = make();
+        let dense = DenseOutput::new(&f, &traj);
+        let (ts, zs) = dense.sample(11);
+        assert_eq!(ts.len(), 11);
+        assert_eq!(zs.len(), 11);
+        assert_eq!(ts[0], 0.0);
+        assert_eq!(ts[10], 2.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! The dynamics interface `f(z, t, θ)` (paper Eq. 1).
+//!
+//! Implementations are either **analytic** (closed-form Rust, see
+//! [`super::analytic`]) or **AOT-compiled neural dynamics** executed through
+//! PJRT ([`crate::runtime::hlo_func::HloOdeFunc`]). The gradient methods in
+//! [`crate::grad`] only speak this trait, so every method runs unchanged on
+//! both kinds of dynamics.
+
+/// Continuous dynamics with parameters, evaluated by the solver hot loop.
+///
+/// The state is a flat `[f32]` buffer of length [`OdeFunc::dim`] (batch
+/// dimensions flattened). Times are `f64` to keep the step-size arithmetic
+/// exact; states are `f32` matching the XLA artifacts.
+pub trait OdeFunc {
+    /// Flat state dimension.
+    fn dim(&self) -> usize;
+
+    /// Number of trainable parameters (0 for fixed analytic dynamics).
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    /// `dz = f(t, z)`.
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]);
+
+    /// Vector-Jacobian product: given `w`, compute
+    /// `wjz = wᵀ ∂f/∂z` and accumulate `wᵀ ∂f/∂θ` into `wjp` (`+=`).
+    ///
+    /// `wjp` has length [`OdeFunc::n_params`] and is *accumulated into* so a
+    /// backward sweep can sum contributions without temporaries.
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]);
+
+    /// Jacobian-vector product `∂f/∂z · v`. Default: central finite
+    /// difference via two `eval` calls — adequate for the naive method's
+    /// step-size-chain terms; override for exactness.
+    fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
+        let n = self.dim();
+        let vnorm = crate::tensor::norm2(v);
+        if vnorm == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let eps = (1e-4 / vnorm).max(1e-7) as f32;
+        let mut zp = z.to_vec();
+        let mut zm = z.to_vec();
+        for i in 0..n {
+            zp[i] += eps * v[i];
+            zm[i] -= eps * v[i];
+        }
+        let mut fp = vec![0.0f32; n];
+        self.eval(t, &zp, &mut fp);
+        self.eval(t, &zm, out);
+        for i in 0..n {
+            out[i] = (fp[i] - out[i]) / (2.0 * eps);
+        }
+    }
+
+    /// Current parameter vector (empty for parameterless dynamics).
+    fn params(&self) -> &[f32] {
+        &[]
+    }
+
+    /// Replace the parameter vector. Panics if `p.len() != n_params()`.
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), 0, "dynamics has no parameters");
+    }
+}
+
+/// Blanket impl so `&F` works wherever `impl OdeFunc` is expected.
+impl<F: OdeFunc + ?Sized> OdeFunc for &F {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn n_params(&self) -> usize {
+        (**self).n_params()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        (**self).eval(t, z, dz)
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        (**self).vjp(t, z, w, wjz, wjp)
+    }
+    fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
+        (**self).jvp(t, z, v, out)
+    }
+    fn params(&self) -> &[f32] {
+        (**self).params()
+    }
+}
+
+/// Wraps any `OdeFunc` and counts evaluations — the paper's NFE metric
+/// (`N_f × N_t × m` accounting of Table 1).
+pub struct CountingFunc<F> {
+    pub inner: F,
+    evals: std::cell::Cell<usize>,
+    vjps: std::cell::Cell<usize>,
+    jvps: std::cell::Cell<usize>,
+}
+
+impl<F: OdeFunc> CountingFunc<F> {
+    pub fn new(inner: F) -> Self {
+        CountingFunc {
+            inner,
+            evals: std::cell::Cell::new(0),
+            vjps: std::cell::Cell::new(0),
+            jvps: std::cell::Cell::new(0),
+        }
+    }
+
+    pub fn evals(&self) -> usize {
+        self.evals.get()
+    }
+    pub fn vjps(&self) -> usize {
+        self.vjps.get()
+    }
+    pub fn jvps(&self) -> usize {
+        self.jvps.get()
+    }
+    pub fn reset(&self) {
+        self.evals.set(0);
+        self.vjps.set(0);
+        self.jvps.set(0);
+    }
+}
+
+impl<F: OdeFunc> OdeFunc for CountingFunc<F> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        self.evals.set(self.evals.get() + 1);
+        self.inner.eval(t, z, dz)
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.vjps.set(self.vjps.get() + 1);
+        self.inner.vjp(t, z, w, wjz, wjp)
+    }
+    fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
+        self.jvps.set(self.jvps.get() + 1);
+        self.inner.jvp(t, z, v, out)
+    }
+    fn params(&self) -> &[f32] {
+        self.inner.params()
+    }
+    fn set_params(&mut self, p: &[f32]) {
+        self.inner.set_params(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::Linear;
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let f = CountingFunc::new(Linear::new(-1.0, 1));
+        let mut dz = [0.0f32];
+        f.eval(0.0, &[1.0], &mut dz);
+        f.eval(0.0, &[1.0], &mut dz);
+        let mut wjp = [0.0f32];
+        let mut wjz = [0.0f32];
+        f.vjp(0.0, &[1.0], &[1.0], &mut wjz, &mut wjp);
+        assert_eq!(f.evals(), 2);
+        assert_eq!(f.vjps(), 1);
+        f.reset();
+        assert_eq!(f.evals(), 0);
+    }
+
+    #[test]
+    fn default_jvp_matches_analytic_for_linear() {
+        // f = kz  =>  J v = k v.
+        let f = Linear::new(-0.7, 3);
+        let z = [1.0f32, -2.0, 0.5];
+        let v = [0.3f32, 1.0, -1.0];
+        let mut out = [0.0f32; 3];
+        // Force the default finite-difference path.
+        struct NoJvp(Linear);
+        impl OdeFunc for NoJvp {
+            fn dim(&self) -> usize {
+                self.0.dim()
+            }
+            fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+                self.0.eval(t, z, dz)
+            }
+            fn vjp(&self, t: f64, z: &[f32], w: &[f32], a: &mut [f32], b: &mut [f32]) {
+                self.0.vjp(t, z, w, a, b)
+            }
+        }
+        NoJvp(f).jvp(0.0, &z, &v, &mut out);
+        for i in 0..3 {
+            assert!((out[i] - (-0.7 * v[i])).abs() < 1e-3, "{:?}", out);
+        }
+    }
+
+    #[test]
+    fn default_jvp_zero_vector() {
+        let f = Linear::new(2.0, 2);
+        let mut out = [9.0f32; 2];
+        f.jvp(0.0, &[1.0, 1.0], &[0.0, 0.0], &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,457 @@
+//! The adaptive integration loop — paper **Algorithm 1** — plus the
+//! trajectory record that ACA's checkpoint strategy consumes.
+//!
+//! The loop advances `t → T`, retrying each step with shrinking `h` until the
+//! embedded error estimate passes (`m` inner iterations in the paper's
+//! notation). Accepted `(t_i, z_i)` pairs are recorded — **values only, no
+//! computation graph** — which is exactly the paper's "trajectory checkpoint"
+//! (Algo 2, forward pass). Rejected trials can optionally be recorded too;
+//! the naive gradient method needs them to rebuild its deep computation graph.
+
+use super::controller::Controller;
+use super::func::OdeFunc;
+use super::step::{rk_step, StepScratch};
+use super::tableau::Tableau;
+use crate::tensor;
+use anyhow::{bail, Result};
+
+/// A rejected step attempt (the naive method differentiates through these).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialRecord {
+    /// Step size tried.
+    pub h: f64,
+    /// Weighted error norm observed.
+    pub err: f64,
+}
+
+/// Record of one forward integration: the accepted discretization points and
+/// state values (paper Algo 2 "trajectory checkpoint"), plus bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct Trajectory {
+    /// Accepted times `t_0 .. t_{N_t}` (monotone, endpoints exact).
+    pub ts: Vec<f64>,
+    /// State checkpoints `z_0 .. z_{N_t}` at those times.
+    pub zs: Vec<Vec<f32>>,
+    /// Accepted step sizes, stored exactly as used by the stepper (recovering
+    /// them from `ts` differences would lose a ulp and break ACA's bit-exact
+    /// replay guarantee).
+    pub hs: Vec<f64>,
+    /// Error norm of each *accepted* step `i -> i+1` (len = N_t).
+    pub errs: Vec<f64>,
+    /// Rejected trials per accepted step (len = N_t when recorded) — the
+    /// failed `h`s in the order tried, ending just before the accepted one.
+    pub trials: Vec<Vec<TrialRecord>>,
+    /// Total number of `f` evaluations.
+    pub nfe: usize,
+    /// Total rejected step attempts.
+    pub n_rejected: usize,
+}
+
+impl Trajectory {
+    /// Number of accepted steps `N_t`.
+    pub fn len(&self) -> usize {
+        self.ts.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Final state `z(T)`.
+    pub fn last(&self) -> &[f32] {
+        self.zs.last().expect("empty trajectory")
+    }
+
+    /// Accepted step size `h_i`, exactly as used in the forward pass.
+    pub fn h(&self, i: usize) -> f64 {
+        self.hs[i]
+    }
+
+    /// Bytes held by the checkpoint store (`O(N_f + N_t)` memory column of
+    /// paper Table 1 — the `N_t` part; the transient `N_f` part lives in the
+    /// step scratch).
+    pub fn checkpoint_bytes(&self) -> usize {
+        self.zs.iter().map(|z| z.len() * std::mem::size_of::<f32>()).sum::<usize>()
+            + self.ts.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Average inner iterations `m` (trials per accepted step, counting the
+    /// accepted attempt).
+    pub fn avg_m(&self) -> f64 {
+        if self.len() == 0 {
+            return 0.0;
+        }
+        (self.len() + self.n_rejected) as f64 / self.len() as f64
+    }
+}
+
+/// Options for [`integrate`].
+#[derive(Debug, Clone)]
+pub struct IntegrateOpts {
+    pub rtol: f64,
+    pub atol: f64,
+    /// Initial step size; `None` = auto (Hairer I.7-style heuristic).
+    pub h0: Option<f64>,
+    /// Fixed step size: forces non-adaptive stepping (used for the Euler /
+    /// RK2 / RK4 columns of paper Table 2 and the discrete baseline).
+    pub fixed_h: Option<f64>,
+    /// Hard cap on accepted + rejected step attempts.
+    pub max_steps: usize,
+    /// Record rejected trials for the naive method.
+    pub record_trials: bool,
+    /// Controller overrides; `None` = [`Controller::for_tableau`].
+    pub controller: Option<Controller>,
+}
+
+impl Default for IntegrateOpts {
+    fn default() -> Self {
+        IntegrateOpts {
+            rtol: 1e-3,
+            atol: 1e-6,
+            h0: None,
+            fixed_h: None,
+            max_steps: 100_000,
+            record_trials: false,
+            controller: None,
+        }
+    }
+}
+
+impl IntegrateOpts {
+    pub fn with_tol(rtol: f64, atol: f64) -> Self {
+        IntegrateOpts { rtol, atol, ..Default::default() }
+    }
+
+    pub fn fixed(h: f64) -> Self {
+        IntegrateOpts { fixed_h: Some(h), ..Default::default() }
+    }
+}
+
+/// Integrate `dz/dt = f(t, z)` from `(t0, z0)` to `t1` (paper Algo 1).
+///
+/// Works in both directions (`t1 < t0` integrates backward — used by the
+/// adjoint method and the Fig 4/5 reverse-trajectory studies). The returned
+/// [`Trajectory`] is the paper's trajectory checkpoint.
+pub fn integrate<F: OdeFunc + ?Sized>(
+    f: &F,
+    t0: f64,
+    t1: f64,
+    z0: &[f32],
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+) -> Result<Trajectory> {
+    assert_eq!(z0.len(), f.dim(), "state length != f.dim()");
+    let mut traj = Trajectory::default();
+    traj.ts.push(t0);
+    traj.zs.push(z0.to_vec());
+    if t0 == t1 {
+        return Ok(traj);
+    }
+
+    let dir = (t1 - t0).signum();
+    let span = (t1 - t0).abs();
+    let fixed = opts.fixed_h.is_some() || !tab.adaptive();
+    let ctrl = opts.controller.unwrap_or_else(|| Controller::for_tableau(tab));
+
+    let mut t = t0;
+    let mut z = z0.to_vec();
+    let mut z_next = vec![0.0f32; z.len()];
+    let mut scratch = StepScratch::new();
+    // Stage-0 derivative reuse: FSAL across accepted steps, and (for every
+    // tableau) across retries of the same step, since k_0 = f(t, z) does not
+    // depend on h. One persistent buffer — no allocation in the loop
+    // (§Perf iteration 1).
+    let mut k0_buf = vec![0.0f32; z.len()];
+    let mut k0_valid = false;
+
+    // Current trial step size.
+    let mut h = if fixed {
+        opts.fixed_h.map(|h| h.abs()).unwrap_or(span / 100.0) * dir
+    } else {
+        match opts.h0 {
+            Some(h0) => h0.abs().min(span) * dir,
+            None => {
+                let h = ctrl.initial_step(f, t0, &z, dir, opts.atol, opts.rtol);
+                traj.nfe += 1;
+                h.abs().min(span) * dir
+            }
+        }
+    };
+    assert!(h.abs() > 0.0, "initial step size must be nonzero");
+
+    let mut attempts = 0usize;
+    let mut trial_buf: Vec<TrialRecord> = Vec::new();
+    let eps_t = 1e-12 * span.max(1.0);
+
+    while (t1 - t) * dir > eps_t {
+        attempts += 1;
+        if attempts > opts.max_steps {
+            bail!(
+                "max_steps ({}) exceeded at t={t} (h={h}); solver may be stiff at these tolerances",
+                opts.max_steps
+            );
+        }
+        // Clamp the final step to land exactly on t1.
+        let h_try = if (t + h - t1) * dir > 0.0 { t1 - t } else { h };
+        if h_try.abs() < 1e-14 * span.max(1.0) {
+            bail!("step size underflow at t={t} (h={h_try})");
+        }
+
+        let out = rk_step(
+            f,
+            tab,
+            t,
+            h_try,
+            &z,
+            if k0_valid { Some(&k0_buf[..]) } else { None },
+            opts.atol,
+            opts.rtol,
+            &mut z_next,
+            None,
+            &mut scratch,
+        );
+        traj.nfe += out.nfe;
+
+        if !tensor::all_finite(&z_next) {
+            if fixed {
+                bail!("non-finite state in fixed-step integration at t={t}");
+            }
+            traj.n_rejected += 1;
+            if opts.record_trials {
+                trial_buf.push(TrialRecord { h: h_try, err: f64::INFINITY });
+            }
+            h = h_try * 0.5;
+            k0_buf.copy_from_slice(&scratch.ks[0]);
+            k0_valid = true;
+            continue;
+        }
+
+        let accepted = fixed || out.err_norm <= 1.0;
+        if !accepted {
+            let dec = ctrl.decide(h_try, out.err_norm, 0.0);
+            traj.n_rejected += 1;
+            if opts.record_trials {
+                trial_buf.push(TrialRecord { h: h_try, err: out.err_norm });
+            }
+            h = dec.h_next;
+            k0_buf.copy_from_slice(&scratch.ks[0]);
+            k0_valid = true;
+            continue;
+        }
+
+        // Accept: advance state, record the checkpoint (values only).
+        let t_new = if h_try == t1 - t { t1 } else { t + h_try };
+        std::mem::swap(&mut z, &mut z_next);
+        t = t_new;
+        traj.ts.push(t);
+        traj.zs.push(z.clone());
+        traj.hs.push(h_try);
+        traj.errs.push(out.err_norm);
+        if opts.record_trials {
+            traj.trials.push(std::mem::take(&mut trial_buf));
+        }
+
+        // Next trial size.
+        if !fixed {
+            h = ctrl.decide(h_try, out.err_norm, 0.0).h_next;
+        }
+        // FSAL: seed the next step's first stage.
+        if tab.fsal {
+            k0_buf.copy_from_slice(&scratch.ks[tab.stages - 1]);
+            k0_valid = true;
+        } else {
+            k0_valid = false;
+        }
+    }
+
+    Ok(traj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::tableau;
+
+    #[test]
+    fn exp_decay_accuracy_all_adaptive_solvers() {
+        let f = Linear::new(-1.0, 1);
+        for tab in tableau::adaptive_solvers() {
+            let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+            let traj = integrate(&f, 0.0, 2.0, &[1.0], tab, &opts).unwrap();
+            let exact = (-2.0f64).exp();
+            let got = traj.last()[0] as f64;
+            assert!(
+                (got - exact).abs() < 5e-5,
+                "{}: {} vs {} ({} steps)",
+                tab.name,
+                got,
+                exact,
+                traj.len()
+            );
+            assert_eq!(*traj.ts.last().unwrap(), 2.0, "endpoint must be exact");
+            assert_eq!(traj.errs.len(), traj.len());
+        }
+    }
+
+    #[test]
+    fn fixed_step_solvers_converge() {
+        let f = Linear::new(-1.0, 1);
+        let exact = (-1.0f64).exp();
+        for (tab, tol) in [
+            (tableau::euler(), 1e-2),
+            (tableau::rk2(), 1e-4),
+            (tableau::rk4(), 1e-8),
+        ] {
+            let traj = integrate(&f, 0.0, 1.0, &[1.0], tab, &IntegrateOpts::fixed(0.01)).unwrap();
+            assert_eq!(traj.len(), 100);
+            let got = traj.last()[0] as f64;
+            assert!((got - exact).abs() < tol, "{}: {} vs {}", tab.name, got, exact);
+        }
+    }
+
+    #[test]
+    fn backward_integration_inverts_forward() {
+        let f = VanDerPol::new(0.15);
+        let z0 = [2.0f32, 0.0];
+        let opts = IntegrateOpts::with_tol(1e-9, 1e-9);
+        let fwd = integrate(&f, 0.0, 5.0, &z0, tableau::dopri5(), &opts).unwrap();
+        let bwd = integrate(&f, 5.0, 0.0, fwd.last(), tableau::dopri5(), &opts).unwrap();
+        // At tight tolerance the reverse solve recovers z0 well; at loose
+        // tolerance it does NOT (paper Fig 4) — see the fig4 experiment.
+        let d = crate::tensor::max_abs_diff(bwd.last(), &z0);
+        assert!(d < 1e-3, "reverse error {d} too large at tight tol");
+    }
+
+    #[test]
+    fn tolerance_controls_step_count() {
+        let f = VanDerPol::new(0.15);
+        let loose = integrate(
+            &f,
+            0.0,
+            10.0,
+            &[2.0, 0.0],
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-3, 1e-6),
+        )
+        .unwrap();
+        let tight = integrate(
+            &f,
+            0.0,
+            10.0,
+            &[2.0, 0.0],
+            tableau::dopri5(),
+            &IntegrateOpts::with_tol(1e-9, 1e-12),
+        )
+        .unwrap();
+        assert!(
+            tight.len() > loose.len(),
+            "tighter tol must need more steps: {} vs {}",
+            tight.len(),
+            loose.len()
+        );
+    }
+
+    #[test]
+    fn times_monotone_and_exact_endpoints() {
+        let f = VanDerPol::new(1.0);
+        let traj = integrate(
+            &f,
+            0.0,
+            7.5,
+            &[1.0, 0.5],
+            tableau::rk23(),
+            &IntegrateOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(traj.ts[0], 0.0);
+        assert_eq!(*traj.ts.last().unwrap(), 7.5);
+        for w in traj.ts.windows(2) {
+            assert!(w[1] > w[0], "times must increase: {:?}", w);
+        }
+        assert_eq!(traj.zs.len(), traj.ts.len());
+    }
+
+    #[test]
+    fn record_trials_structure() {
+        let f = VanDerPol::new(5.0); // moderately stiff: rejections happen
+        let mut opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        opts.record_trials = true;
+        opts.h0 = Some(1.0); // force initial rejections
+        let traj = integrate(&f, 0.0, 3.0, &[2.0, 0.0], tableau::dopri5(), &opts).unwrap();
+        assert_eq!(traj.trials.len(), traj.len());
+        let total_rej: usize = traj.trials.iter().map(|t| t.len()).sum();
+        assert_eq!(total_rej, traj.n_rejected);
+        assert!(traj.n_rejected > 0, "expected at least one rejection");
+        for trials in &traj.trials {
+            for tr in trials {
+                assert!(tr.err > 1.0 || !tr.err.is_finite(), "recorded trial must be a rejection");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_span_returns_initial() {
+        let f = Linear::new(1.0, 2);
+        let traj =
+            integrate(&f, 1.0, 1.0, &[3.0, 4.0], tableau::dopri5(), &IntegrateOpts::default())
+                .unwrap();
+        assert_eq!(traj.len(), 0);
+        assert_eq!(traj.last(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn max_steps_errors_out() {
+        let f = Linear::new(1.0, 1);
+        let mut opts = IntegrateOpts::with_tol(1e-12, 1e-14);
+        opts.max_steps = 3;
+        let r = integrate(&f, 0.0, 100.0, &[1.0], tableau::heun_euler(), &opts);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn nfe_accounting_fixed_step() {
+        use crate::ode::func::CountingFunc;
+        let f = CountingFunc::new(Linear::new(-1.0, 1));
+        let traj =
+            integrate(&f, 0.0, 1.0, &[1.0], tableau::rk4(), &IntegrateOpts::fixed(0.1)).unwrap();
+        assert_eq!(traj.len(), 10);
+        assert_eq!(f.evals(), 40, "RK4 = 4 evals x 10 steps");
+        assert_eq!(traj.nfe, f.evals());
+    }
+
+    #[test]
+    fn fsal_saves_evaluations() {
+        use crate::ode::func::CountingFunc;
+        let f = CountingFunc::new(Linear::new(-1.0, 1));
+        let opts = IntegrateOpts { h0: Some(0.1), ..IntegrateOpts::with_tol(1e-6, 1e-8) };
+        let traj = integrate(&f, 0.0, 1.0, &[1.0], tableau::dopri5(), &opts).unwrap();
+        // With FSAL + no rejections: 7 evals first step, 6 thereafter.
+        let expect = 7 + 6 * (traj.len() - 1) + 6 * traj.n_rejected;
+        assert_eq!(
+            f.evals(),
+            expect,
+            "nfe {} != expected {} ({} steps, {} rejected)",
+            f.evals(),
+            expect,
+            traj.len(),
+            traj.n_rejected
+        );
+    }
+
+    #[test]
+    fn checkpoint_bytes_scale_with_steps() {
+        let f = Linear::new(-1.0, 4);
+        let traj = integrate(
+            &f,
+            0.0,
+            1.0,
+            &[1.0, 1.0, 1.0, 1.0],
+            tableau::rk4(),
+            &IntegrateOpts::fixed(0.1),
+        )
+        .unwrap();
+        // 11 checkpoints x 4 f32 + 11 f64 timestamps.
+        assert_eq!(traj.checkpoint_bytes(), 11 * 4 * 4 + 11 * 8);
+    }
+}

@@ -1,0 +1,22 @@
+//! Explicit Runge–Kutta ODE solving substrate (paper Sec 2.3, Algo 1).
+//!
+//! The solver is generic over [`func::OdeFunc`]: analytic dynamics (van der
+//! Pol, three-body, …) for the paper's numerical-error studies, or
+//! AOT-compiled neural dynamics executed through PJRT for the learning
+//! experiments. Stage arithmetic, the embedded error estimate, and the
+//! adaptive step-size controller all live here in Rust — one artifact set per
+//! model serves every solver in the paper's Table 2.
+
+pub mod analytic;
+pub mod controller;
+pub mod dense;
+pub mod func;
+pub mod integrate;
+pub mod step;
+pub mod tableau;
+
+pub use controller::{Controller, StepDecision};
+pub use func::OdeFunc;
+pub use integrate::{integrate, IntegrateOpts, Trajectory, TrialRecord};
+pub use step::{rk_step, StepOut, StepScratch};
+pub use tableau::Tableau;

@@ -1,0 +1,254 @@
+//! One explicit RK step `ψ_h(t, z)` with embedded error estimate
+//! (the inner body of the paper's Algo 1).
+//!
+//! The scratch arena ([`StepScratch`]) is reused across step attempts so the
+//! hot loop performs no allocation after warm-up (see EXPERIMENTS.md §Perf).
+
+use super::func::OdeFunc;
+use super::tableau::Tableau;
+use crate::tensor;
+
+/// Reusable buffers for step evaluation. One arena per integration; sized on
+/// first use for the tableau with the most stages seen.
+#[derive(Default, Debug)]
+pub struct StepScratch {
+    /// Stage derivatives `k_j`, each of length `dim`.
+    pub ks: Vec<Vec<f32>>,
+    /// Stage state `u_j = z + h Σ a_jl k_l`.
+    pub u: Vec<f32>,
+    /// Error-vector buffer (reused across step attempts; §Perf iteration 1 —
+    /// the per-attempt `vec![]` allocation showed up on the adaptive loop).
+    pub ev: Vec<f32>,
+}
+
+impl StepScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, stages: usize, dim: usize) {
+        while self.ks.len() < stages {
+            self.ks.push(vec![0.0; dim]);
+        }
+        for k in self.ks.iter_mut() {
+            if k.len() != dim {
+                k.resize(dim, 0.0);
+            }
+        }
+        if self.u.len() != dim {
+            self.u.resize(dim, 0.0);
+        }
+        if self.ev.len() != dim {
+            self.ev.resize(dim, 0.0);
+        }
+    }
+}
+
+/// Result of a single step attempt.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    /// Weighted-RMS error norm of the embedded estimate; `<= 1` means
+    /// acceptable at the given tolerances. `0` for fixed-step tableaus.
+    pub err_norm: f64,
+    /// Number of `f` evaluations spent (stage count minus FSAL reuse).
+    pub nfe: usize,
+}
+
+/// Advance one step: `z_next = z + h Σ b_j k_j`, error `= h Σ e_j k_j`.
+///
+/// * `k0`: optionally the precomputed `f(t, z)` (FSAL reuse from the previous
+///   accepted step, or shared across retries of the same step — stage 0 does
+///   not depend on `h`).
+/// * On return `scratch.ks[..stages]` holds the stage derivatives (consumed by
+///   [`crate::grad::step_vjp`] and by FSAL propagation).
+pub fn rk_step<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    t: f64,
+    h: f64,
+    z: &[f32],
+    k0: Option<&[f32]>,
+    atol: f64,
+    rtol: f64,
+    z_next: &mut [f32],
+    err_vec: Option<&mut Vec<f32>>,
+    scratch: &mut StepScratch,
+) -> StepOut {
+    let dim = z.len();
+    let s = tab.stages;
+    scratch.ensure(s, dim);
+    let mut nfe = 0;
+
+    // Stage 0.
+    if let Some(k0) = k0 {
+        scratch.ks[0].copy_from_slice(k0);
+    } else {
+        f.eval(t, z, &mut scratch.ks[0]);
+        nfe += 1;
+    }
+
+    // Stages 1..s. Split borrows: compute u from ks[..j], write ks[j].
+    for j in 1..s {
+        let (done, rest) = scratch.ks.split_at_mut(j);
+        let u = &mut scratch.u;
+        u.copy_from_slice(z);
+        for (l, a) in tab.a[j].iter().enumerate() {
+            if *a != 0.0 {
+                tensor::axpy((h * *a) as f32, &done[l], u);
+            }
+        }
+        f.eval(t + tab.c[j] * h, u, &mut rest[0]);
+        nfe += 1;
+    }
+
+    // Propagating solution.
+    tensor::combine(z, h, tab.b, &scratch.ks[..s], z_next);
+
+    // Embedded error estimate.
+    let err_norm = if let Some(e) = tab.b_err {
+        let ev = &mut scratch.ev;
+        ev.fill(0.0);
+        // err = h Σ e_j k_j  (note: combine adds z, so subtract-free variant)
+        for (c, k) in e.iter().zip(&scratch.ks[..s]) {
+            if *c != 0.0 {
+                tensor::axpy((h * *c) as f32, k, ev);
+            }
+        }
+        // Scale uses the step's *start* state only (scipy's `y0` convention).
+        // This makes the error norm independent of `z_next`, so the naive
+        // method's backprop through the error estimate (grad::err_norm_vjp)
+        // is exact in `h`.
+        let n = tensor::wrms_norm(ev, z, z, atol, rtol);
+        if let Some(out) = err_vec {
+            out.clear();
+            out.extend_from_slice(ev);
+        }
+        n
+    } else {
+        if let Some(out) = err_vec {
+            out.clear();
+        }
+        0.0
+    };
+
+    StepOut { err_norm, nfe }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::Linear;
+    use crate::ode::tableau;
+
+    /// One step of each method on dz/dt = z from z=1 must match the Taylor
+    /// polynomial of exp(h) to the method's order.
+    #[test]
+    fn step_matches_taylor_order() {
+        let f = Linear::new(1.0, 1);
+        let h = 0.1f64;
+        let exact = h.exp();
+        // Tolerances bounded below by f32 state precision (~1e-7 relative).
+        let cases: Vec<(&Tableau, f64)> = vec![
+            (tableau::euler(), 1e-2),
+            (tableau::rk2(), 1e-3),
+            (tableau::heun_euler(), 1e-3),
+            (tableau::rk23(), 1e-5),
+            (tableau::rk4(), 5e-7),
+            (tableau::dopri5(), 5e-7),
+        ];
+        for (tab, tol) in cases {
+            let mut z_next = [0.0f32];
+            let mut scratch = StepScratch::new();
+            rk_step(&f, tab, 0.0, h, &[1.0], None, 1e-9, 1e-9, &mut z_next, None, &mut scratch);
+            let err = (z_next[0] as f64 - exact).abs();
+            assert!(err < tol, "{}: |{} - {}| = {} >= {}", tab.name, z_next[0], exact, err, tol);
+        }
+    }
+
+    /// Error estimate of an adaptive pair scales like h^order.
+    #[test]
+    fn error_estimate_scaling() {
+        let f = Linear::new(1.0, 1);
+        for tab in [tableau::heun_euler(), tableau::rk23(), tableau::dopri5()] {
+            let mut scratch = StepScratch::new();
+            let mut z = [0.0f32];
+            let norms: Vec<f64> = [0.2, 0.1]
+                .iter()
+                .map(|&h| {
+                    rk_step(&f, tab, 0.0, h, &[1.0], None, 1.0, 0.0, &mut z, None, &mut scratch)
+                        .err_norm
+                })
+                .collect();
+            let rate = (norms[0] / norms[1]).log2();
+            // err ~ h^(q+1) where q = order - 1 (embedded), so rate ~= order.
+            let expect = tab.order as f64;
+            assert!(
+                (rate - expect).abs() < 0.7,
+                "{}: observed rate {} expected ~{}",
+                tab.name,
+                rate,
+                expect
+            );
+        }
+    }
+
+    /// FSAL: last stage of an accepted step equals f at (t+h, z_next).
+    #[test]
+    fn fsal_last_stage() {
+        let f = Linear::new(-0.5, 2);
+        for tab in [tableau::rk23(), tableau::dopri5()] {
+            let mut z_next = [0.0f32; 2];
+            let mut scratch = StepScratch::new();
+            rk_step(&f, tab, 0.0, 0.3, &[1.0, 2.0], None, 1e-6, 1e-6, &mut z_next, None, &mut scratch);
+            let mut expect = [0.0f32; 2];
+            f.eval(0.3, &z_next, &mut expect);
+            for i in 0..2 {
+                assert!(
+                    (scratch.ks[tab.stages - 1][i] - expect[i]).abs() < 1e-6,
+                    "{}: ks[-1]={:?} expect={:?}",
+                    tab.name,
+                    scratch.ks[tab.stages - 1],
+                    expect
+                );
+            }
+        }
+    }
+
+    /// Passing k0 must reproduce the same step with one fewer evaluation.
+    #[test]
+    fn k0_reuse_identical() {
+        let f = crate::ode::func::CountingFunc::new(Linear::new(0.8, 3));
+        let z = [1.0f32, -1.0, 0.5];
+        let tab = tableau::dopri5();
+        let mut scratch = StepScratch::new();
+        let mut z1 = [0.0f32; 3];
+        let o1 = rk_step(&f, tab, 0.0, 0.05, &z, None, 1e-6, 1e-6, &mut z1, None, &mut scratch);
+        assert_eq!(o1.nfe, 7);
+        let k0 = scratch.ks[0].clone();
+        let mut z2 = [0.0f32; 3];
+        let o2 = rk_step(&f, tab, 0.0, 0.05, &z, Some(&k0), 1e-6, 1e-6, &mut z2, None, &mut scratch);
+        assert_eq!(o2.nfe, 6);
+        assert_eq!(z1, z2);
+    }
+
+    /// Fixed-step tableaus report zero error.
+    #[test]
+    fn fixed_step_zero_error() {
+        let f = Linear::new(1.0, 1);
+        let mut z = [0.0f32];
+        let mut scratch = StepScratch::new();
+        let out = rk_step(&f, tableau::rk4(), 0.0, 0.5, &[1.0], None, 1e-9, 1e-9, &mut z, None, &mut scratch);
+        assert_eq!(out.err_norm, 0.0);
+    }
+
+    /// Negative step sizes integrate backward (needed by the adjoint method).
+    #[test]
+    fn negative_step() {
+        let f = Linear::new(1.0, 1);
+        let mut z = [0.0f32];
+        let mut scratch = StepScratch::new();
+        rk_step(&f, tableau::dopri5(), 1.0, -0.1, &[1.0], None, 1e-9, 1e-9, &mut z, None, &mut scratch);
+        let exact = (-0.1f64).exp();
+        assert!((z[0] as f64 - exact).abs() < 5e-7, "{} vs {}", z[0], exact);
+    }
+}

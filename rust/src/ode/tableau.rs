@@ -1,0 +1,330 @@
+//! Butcher tableaus for the explicit solvers evaluated in the paper
+//! (Table 2: HeunEuler, RK23, RK45 adaptive; Euler, RK2, RK4 fixed-step).
+//!
+//! A tableau `(A, b, c)` defines the step map
+//! `ψ_h(t, z) = z + h Σ_j b_j k_j`, `k_j = f(t + c_j h, z + h Σ_l a_jl k_l)`.
+//! Adaptive tableaus carry embedded error weights `e = b − b*` so the local
+//! truncation error estimate is `h Σ_j e_j k_j` (paper Eq. 10/13).
+
+/// An explicit Butcher tableau with optional embedded error weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tableau {
+    /// Human-readable solver name as used in the paper's tables.
+    pub name: &'static str,
+    /// Order `p` of the propagating solution.
+    pub order: u32,
+    /// Number of stages `s`.
+    pub stages: usize,
+    /// Strictly-lower-triangular stage coefficients; row `j` has `j` entries.
+    pub a: &'static [&'static [f64]],
+    /// Propagating solution weights (length `s`).
+    pub b: &'static [f64],
+    /// Embedded error weights `b − b*` (length `s`); `None` for fixed-step-only.
+    pub b_err: Option<&'static [f64]>,
+    /// Stage abscissae (length `s`).
+    pub c: &'static [f64],
+    /// First-Same-As-Last: last stage of an accepted step equals `f(t+h, z+h·Σb k)`
+    /// and can seed the next step's first stage.
+    pub fsal: bool,
+}
+
+impl Tableau {
+    /// True iff the tableau carries an embedded error estimate and can drive
+    /// an adaptive controller.
+    pub fn adaptive(&self) -> bool {
+        self.b_err.is_some()
+    }
+
+    /// Exponent used by the controller: `1 / (q + 1)` where `q` is the order
+    /// of the *lower* embedded method (local-extrapolation convention).
+    pub fn err_exponent(&self) -> f64 {
+        // For p(p-1) embedded pairs the error estimate is O(h^p); stepsize
+        // scales with err^(-1/p)... we follow the standard convention
+        // err ~ h^(q+1) with q = min(order, embedded order) = order - 1 for
+        // our pairs, except HeunEuler where the propagating order is 2 and
+        // the embedded is 1. Using the propagating order works uniformly:
+        1.0 / self.order as f64
+    }
+
+    /// Number of `f` evaluations for one step attempt, accounting for FSAL
+    /// reuse on accepted steps.
+    pub fn nfe_per_step(&self, fsal_reuse: bool) -> usize {
+        if self.fsal && fsal_reuse {
+            self.stages - 1
+        } else {
+            self.stages
+        }
+    }
+}
+
+/// Forward Euler (order 1, fixed step).
+pub fn euler() -> &'static Tableau {
+    &EULER
+}
+static EULER: Tableau = Tableau {
+    name: "Euler",
+    order: 1,
+    stages: 1,
+    a: &[&[]],
+    b: &[1.0],
+    b_err: None,
+    c: &[0.0],
+    fsal: false,
+};
+
+/// Explicit midpoint (RK2, order 2, fixed step) — the paper's "RK2".
+pub fn rk2() -> &'static Tableau {
+    &RK2
+}
+static RK2: Tableau = Tableau {
+    name: "RK2",
+    order: 2,
+    stages: 2,
+    a: &[&[], &[0.5]],
+    b: &[0.0, 1.0],
+    b_err: None,
+    c: &[0.0, 0.5],
+    fsal: false,
+};
+
+/// Classic RK4 (order 4, fixed step).
+pub fn rk4() -> &'static Tableau {
+    &RK4
+}
+static RK4: Tableau = Tableau {
+    name: "RK4",
+    order: 4,
+    stages: 4,
+    a: &[&[], &[0.5], &[0.0, 0.5], &[0.0, 0.0, 1.0]],
+    b: &[1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+    b_err: None,
+    c: &[0.0, 0.5, 0.5, 1.0],
+    fsal: false,
+};
+
+/// Heun–Euler 2(1) adaptive pair — the paper's training solver for NODE18.
+/// Propagates the order-2 (Heun) solution, error against forward Euler.
+pub fn heun_euler() -> &'static Tableau {
+    &HEUN_EULER
+}
+static HEUN_EULER: Tableau = Tableau {
+    name: "HeunEuler",
+    order: 2,
+    stages: 2,
+    a: &[&[], &[1.0]],
+    b: &[0.5, 0.5],
+    // b* (Euler) = [1, 0]  =>  e = b − b* = [−1/2, 1/2]
+    b_err: Some(&[-0.5, 0.5]),
+    c: &[0.0, 1.0],
+    fsal: false,
+};
+
+/// Bogacki–Shampine 3(2) ("RK23"), FSAL.
+pub fn rk23() -> &'static Tableau {
+    &BS23
+}
+static BS23: Tableau = Tableau {
+    name: "RK23",
+    order: 3,
+    stages: 4,
+    a: &[
+        &[],
+        &[0.5],
+        &[0.0, 0.75],
+        &[2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0],
+    ],
+    b: &[2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0],
+    // b* = [7/24, 1/4, 1/3, 1/8]
+    b_err: Some(&[
+        2.0 / 9.0 - 7.0 / 24.0,
+        1.0 / 3.0 - 0.25,
+        4.0 / 9.0 - 1.0 / 3.0,
+        -0.125,
+    ]),
+    c: &[0.0, 0.5, 0.75, 1.0],
+    fsal: true,
+};
+
+/// Dormand–Prince 5(4) ("RK45" / Dopri5 / MATLAB ode45), FSAL.
+pub fn dopri5() -> &'static Tableau {
+    &DOPRI5
+}
+static DOPRI5: Tableau = Tableau {
+    name: "RK45",
+    order: 5,
+    stages: 7,
+    a: &[
+        &[],
+        &[1.0 / 5.0],
+        &[3.0 / 40.0, 9.0 / 40.0],
+        &[44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+        &[
+            19372.0 / 6561.0,
+            -25360.0 / 2187.0,
+            64448.0 / 6561.0,
+            -212.0 / 729.0,
+        ],
+        &[
+            9017.0 / 3168.0,
+            -355.0 / 33.0,
+            46732.0 / 5247.0,
+            49.0 / 176.0,
+            -5103.0 / 18656.0,
+        ],
+        &[
+            35.0 / 384.0,
+            0.0,
+            500.0 / 1113.0,
+            125.0 / 192.0,
+            -2187.0 / 6784.0,
+            11.0 / 84.0,
+        ],
+    ],
+    b: &[
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+        0.0,
+    ],
+    // b* = [5179/57600, 0, 7571/16695, 393/640, −92097/339200, 187/2100, 1/40]
+    b_err: Some(&[
+        35.0 / 384.0 - 5179.0 / 57600.0,
+        0.0,
+        500.0 / 1113.0 - 7571.0 / 16695.0,
+        125.0 / 192.0 - 393.0 / 640.0,
+        -2187.0 / 6784.0 + 92097.0 / 339200.0,
+        11.0 / 84.0 - 187.0 / 2100.0,
+        -1.0 / 40.0,
+    ]),
+    c: &[0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+    fsal: true,
+};
+
+/// All tableaus by paper name; used by the CLI and the Table 2/6/7 sweeps.
+pub fn by_name(name: &str) -> Option<&'static Tableau> {
+    match name.to_ascii_lowercase().as_str() {
+        "euler" => Some(euler()),
+        "rk2" | "midpoint" => Some(rk2()),
+        "rk4" => Some(rk4()),
+        "heuneuler" | "heun_euler" | "heun-euler" => Some(heun_euler()),
+        "rk23" | "bs23" | "bogacki-shampine" => Some(rk23()),
+        "rk45" | "dopri5" | "dormand-prince" | "ode45" => Some(dopri5()),
+        _ => None,
+    }
+}
+
+/// The adaptive solvers of paper Table 2.
+pub fn adaptive_solvers() -> [&'static Tableau; 3] {
+    [heun_euler(), rk23(), dopri5()]
+}
+
+/// The fixed-step solvers of paper Table 2.
+pub fn fixed_solvers() -> [&'static Tableau; 3] {
+    [euler(), rk2(), rk4()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_consistency(t: &Tableau) {
+        assert_eq!(t.b.len(), t.stages);
+        assert_eq!(t.c.len(), t.stages);
+        assert_eq!(t.a.len(), t.stages);
+        for (j, row) in t.a.iter().enumerate() {
+            assert_eq!(row.len(), j, "{}: row {} must have {} entries", t.name, j, j);
+            // c_j must equal the row sum (standard consistency condition).
+            let row_sum: f64 = row.iter().sum();
+            assert!(
+                (row_sum - t.c[j]).abs() < 1e-12,
+                "{}: c[{}]={} != row sum {}",
+                t.name,
+                j,
+                t.c[j],
+                row_sum
+            );
+        }
+        // First order condition: sum b = 1.
+        let bs: f64 = t.b.iter().sum();
+        assert!((bs - 1.0).abs() < 1e-12, "{}: sum b = {}", t.name, bs);
+        if let Some(e) = t.b_err {
+            assert_eq!(e.len(), t.stages);
+            // The embedded method must also be consistent: sum b* = 1, i.e.
+            // sum e = 0.
+            let es: f64 = e.iter().sum();
+            assert!(es.abs() < 1e-12, "{}: sum e = {}", t.name, es);
+        }
+    }
+
+    #[test]
+    fn all_tableaus_consistent() {
+        for t in [euler(), rk2(), rk4(), heun_euler(), rk23(), dopri5()] {
+            check_consistency(t);
+        }
+    }
+
+    /// Second-order condition: b·c = 1/2 for every method of order >= 2.
+    #[test]
+    fn order2_condition() {
+        for t in [rk2(), rk4(), heun_euler(), rk23(), dopri5()] {
+            let bc: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c).sum();
+            assert!((bc - 0.5).abs() < 1e-12, "{}: b.c = {}", t.name, bc);
+        }
+    }
+
+    /// Third-order conditions for methods of order >= 3.
+    #[test]
+    fn order3_conditions() {
+        for t in [rk4(), rk23(), dopri5()] {
+            let bc2: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c).sum();
+            assert!((bc2 - 1.0 / 3.0).abs() < 1e-12, "{}: b.c^2 = {}", t.name, bc2);
+            // sum_j b_j sum_l a_jl c_l = 1/6
+            let mut bac = 0.0;
+            for j in 0..t.stages {
+                let inner: f64 = t.a[j].iter().zip(t.c).map(|(a, c)| a * c).sum();
+                bac += t.b[j] * inner;
+            }
+            assert!((bac - 1.0 / 6.0).abs() < 1e-12, "{}: b.A.c = {}", t.name, bac);
+        }
+    }
+
+    /// Fourth-order quadrature condition for methods of order >= 4.
+    #[test]
+    fn order4_condition() {
+        for t in [rk4(), dopri5()] {
+            let bc3: f64 = t.b.iter().zip(t.c).map(|(b, c)| b * c * c * c).sum();
+            assert!((bc3 - 0.25).abs() < 1e-12, "{}: b.c^3 = {}", t.name, bc3);
+        }
+    }
+
+    /// FSAL: last row of A equals b and c_s = 1.
+    #[test]
+    fn fsal_structure() {
+        for t in [rk23(), dopri5()] {
+            assert!(t.fsal);
+            let last = t.a[t.stages - 1];
+            for (l, (&a, &b)) in last.iter().zip(t.b).enumerate() {
+                assert!((a - b).abs() < 1e-12, "{}: a[s][{}]={} b={}", t.name, l, a, b);
+            }
+            assert!((t.c[t.stages - 1] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("dopri5").unwrap().name, "RK45");
+        assert_eq!(by_name("HeunEuler").unwrap().name, "HeunEuler");
+        assert_eq!(by_name("euler").unwrap().name, "Euler");
+        assert!(by_name("implicit-euler").is_none());
+    }
+
+    #[test]
+    fn nfe_accounting() {
+        assert_eq!(dopri5().nfe_per_step(true), 6);
+        assert_eq!(dopri5().nfe_per_step(false), 7);
+        assert_eq!(rk4().nfe_per_step(true), 4);
+    }
+}

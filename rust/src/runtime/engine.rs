@@ -1,0 +1,149 @@
+//! PJRT CPU client + compiled-executable cache + literal marshalling.
+//!
+//! HLO **text** is the interchange format (see python/compile/aot.py): the
+//! text parser reassigns instruction ids, avoiding the 64-bit-id proto
+//! incompatibility between jax ≥ 0.5 and xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name, for error messages.
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened tuple outputs.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// result literal is always a tuple (possibly of one element). Accepts
+    /// owned or borrowed literals so callers can mix cached inputs (the θ
+    /// literal) with per-call ones.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let res = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let lit = res[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{}'", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run and decode every output as an f32 vector.
+    pub fn run_f32<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?
+            .into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .with_context(|| format!("decoding f32 output of '{}'", self.name))
+            })
+            .collect()
+    }
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    /// Platform string (e.g. "cpu") — useful for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let name = path.file_stem().unwrap_or_default().to_string_lossy().into_owned();
+        let rc = std::rc::Rc::new(Executable { exe, name });
+        self.cache.insert(path.to_path_buf(), rc.clone());
+        Ok(rc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling helpers
+// ---------------------------------------------------------------------------
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32_1d(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 slice -> rank-2 literal `[rows, cols]`.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// f32 slice -> rank-3 literal.
+pub fn lit_f32_3d(v: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), a * b * c);
+    Ok(xla::Literal::vec1(v).reshape(&[a as i64, b as i64, c as i64])?)
+}
+
+/// i32 slice -> rank-1 literal.
+pub fn lit_i32_1d(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Scalar time value as the `t[1]` artifact input.
+pub fn lit_time(t: f64) -> xla::Literal {
+    xla::Literal::vec1(&[t as f32])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-level round-trip tests live in rust/tests/runtime_round_trip.rs
+    // (they need artifacts). Here: marshalling only.
+
+    #[test]
+    fn literal_shapes() {
+        let l = lit_f32_2d(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(l.element_count(), 6);
+        let back = l.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn literal_shape_mismatch_panics() {
+        let _ = lit_f32_2d(&[1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn time_literal() {
+        let l = lit_time(0.25);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.25]);
+    }
+}

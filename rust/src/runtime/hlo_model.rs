@@ -1,0 +1,375 @@
+//! AOT-compiled models as Rust objects.
+//!
+//! [`HloModel`] implements [`OdeFunc`] over the `f_eval` / `f_vjp` / `f_jvp`
+//! executables, so every solver and every gradient method in [`crate::grad`]
+//! runs the neural dynamics without touching Python. The encoder and loss
+//! head round out the full forward/backward training step.
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::engine::{lit_f32_1d, lit_f32_2d, lit_f32_3d, lit_i32_1d, lit_time, Engine, Executable};
+use super::manifest::Manifest;
+use crate::ode::OdeFunc;
+
+/// Supervision target for the loss head.
+#[derive(Debug, Clone)]
+pub enum Target {
+    /// Class indices (xent loss), length `batch`.
+    Classes(Vec<i32>),
+    /// Regression targets (mse loss), length `batch × dim_out`.
+    Values(Vec<f32>),
+}
+
+/// A Neural-ODE model backed by PJRT executables.
+pub struct HloModel {
+    pub manifest: Manifest,
+    params: Vec<f32>,
+    f_eval: Rc<Executable>,
+    f_vjp: Rc<Executable>,
+    f_jvp: Option<Rc<Executable>>,
+    encode: Option<Rc<Executable>>,
+    encode_vjp: Option<Rc<Executable>>,
+    decode_loss: Rc<Executable>,
+    decode_loss_vjp: Rc<Executable>,
+    init: Rc<Executable>,
+    /// PJRT dispatch counter (runtime_dispatch bench / Table 1 accounting).
+    dispatches: Cell<usize>,
+    /// Cached θ literal — parameters change once per optimizer step but are
+    /// marshalled on *every* dispatch otherwise (§Perf iteration 2).
+    theta_lit: RefCell<Option<xla::Literal>>,
+}
+
+impl HloModel {
+    /// Load and compile all artifacts of `dir` (e.g. `artifacts/spiral`).
+    pub fn load(engine: &mut Engine, dir: &Path) -> Result<HloModel> {
+        let manifest = Manifest::load(dir)?;
+        ensure!(
+            manifest.kind == "node",
+            "'{}' is a {} model, not a NODE model",
+            manifest.name,
+            manifest.kind
+        );
+        let mut get = |name: &str| -> Result<Rc<Executable>> {
+            engine.load(&manifest.artifact(name)?.file)
+        };
+        let f_eval = get("f_eval")?;
+        let f_vjp = get("f_vjp")?;
+        let f_jvp = get("f_jvp").ok();
+        let decode_loss = get("decode_loss")?;
+        let decode_loss_vjp = get("decode_loss_vjp")?;
+        let init = get("init_params")?;
+        let (encode, encode_vjp) = if manifest.has_encoder {
+            (Some(get("encode")?), Some(get("encode_vjp")?))
+        } else {
+            (None, None)
+        };
+        let params = vec![0.0f32; manifest.n_params];
+        Ok(HloModel {
+            manifest,
+            params,
+            f_eval,
+            f_vjp,
+            f_jvp,
+            encode,
+            encode_vjp,
+            decode_loss,
+            decode_loss_vjp,
+            init,
+            dispatches: Cell::new(0),
+            theta_lit: RefCell::new(None),
+        })
+    }
+
+    fn bump(&self) {
+        self.dispatches.set(self.dispatches.get() + 1);
+    }
+
+    /// θ as a literal, rebuilt only after a parameter update.
+    fn theta(&self) -> std::cell::Ref<'_, xla::Literal> {
+        {
+            let mut slot = self.theta_lit.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(lit_f32_1d(&self.params));
+            }
+        }
+        std::cell::Ref::map(self.theta_lit.borrow(), |o| o.as_ref().unwrap())
+    }
+
+    /// Number of PJRT executions since load (or the last reset).
+    pub fn dispatches(&self) -> usize {
+        self.dispatches.get()
+    }
+
+    pub fn reset_dispatches(&self) {
+        self.dispatches.set(0);
+    }
+
+    /// (Re)initialize parameters from a seed, via the AOT `init_params`
+    /// artifact (jax threefry — identical across Rust/Python).
+    pub fn init_params(&mut self, seed: i32) -> Result<()> {
+        self.bump();
+        let outs = self.init.run_f32(&[&lit_i32_1d(&[seed])])?;
+        ensure!(outs[0].len() == self.manifest.n_params);
+        self.params = outs[0].clone();
+        *self.theta_lit.borrow_mut() = None;
+        Ok(())
+    }
+
+    fn lit_z(&self, z: &[f32]) -> Result<xla::Literal> {
+        lit_f32_2d(z, self.manifest.batch, self.manifest.dim_state)
+    }
+
+    fn lit_y(&self, y: &Target) -> Result<xla::Literal> {
+        match y {
+            Target::Classes(c) => {
+                ensure!(c.len() == self.manifest.batch, "class target length");
+                ensure!(self.manifest.loss == "xent", "model expects {} loss", self.manifest.loss);
+                Ok(lit_i32_1d(c))
+            }
+            Target::Values(v) => {
+                ensure!(self.manifest.loss == "mse", "model expects {} loss", self.manifest.loss);
+                lit_f32_2d(v, self.manifest.batch, self.manifest.dim_out)
+            }
+        }
+    }
+
+    /// Encoder: `x[B×Din] -> z0[B×D]`. Identity for encoder-less models.
+    pub fn encode(&self, x: &[f32]) -> Result<Vec<f32>> {
+        match &self.encode {
+            None => Ok(x.to_vec()),
+            Some(exe) => {
+                self.bump();
+                let lit =
+                    lit_f32_2d(x, self.manifest.batch, self.manifest.dim_in)?;
+                let theta = self.theta();
+                Ok(exe.run_f32(&[&*theta, &lit])?.remove(0))
+            }
+        }
+    }
+
+    /// Accumulate `wᵀ ∂encode/∂θ` into `dtheta`.
+    pub fn encode_vjp_accum(&self, x: &[f32], w: &[f32], dtheta: &mut [f32]) -> Result<()> {
+        let Some(exe) = &self.encode_vjp else { return Ok(()) };
+        self.bump();
+        let theta = self.theta();
+        let xl = lit_f32_2d(x, self.manifest.batch, self.manifest.dim_in)?;
+        let wl = self.lit_z(w)?;
+        let outs = exe.run_f32(&[&*theta, &xl, &wl])?;
+        for (d, g) in dtheta.iter_mut().zip(&outs[0]) {
+            *d += g;
+        }
+        Ok(())
+    }
+
+    /// Loss head: `(loss, pred[B×Dout])`.
+    pub fn decode_loss(&self, z: &[f32], y: &Target) -> Result<(f64, Vec<f32>)> {
+        self.bump();
+        let theta = self.theta();
+        let (zl, yl) = (self.lit_z(z)?, self.lit_y(y)?);
+        let outs = self.decode_loss.run_f32(&[&*theta, &zl, &yl])?;
+        Ok((outs[0][0] as f64, outs[1].clone()))
+    }
+
+    /// Loss head VJP: `(dL/dzT[B×D], loss)`, accumulating `dL/dθ_head` into
+    /// `dtheta`.
+    pub fn decode_loss_vjp(
+        &self,
+        z: &[f32],
+        y: &Target,
+        dtheta: &mut [f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        self.bump();
+        let theta = self.theta();
+        let (zl, yl) = (self.lit_z(z)?, self.lit_y(y)?);
+        let outs = self.decode_loss_vjp.run_f32(&[&*theta, &zl, &yl])?;
+        let dz = outs[0].clone();
+        for (d, g) in dtheta.iter_mut().zip(&outs[1]) {
+            *d += g;
+        }
+        Ok((dz, outs[2][0] as f64))
+    }
+
+    /// Class predictions from logits/preds.
+    pub fn argmax_classes(pred: &[f32], classes: usize) -> Vec<usize> {
+        pred.chunks(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+impl OdeFunc for HloModel {
+    fn dim(&self) -> usize {
+        self.manifest.state_size()
+    }
+
+    fn n_params(&self) -> usize {
+        self.manifest.n_params
+    }
+
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        self.bump();
+        let theta = self.theta();
+        let (tl, zl) = (lit_time(t), self.lit_z(z).unwrap());
+        let outs = self
+            .f_eval
+            .run_f32(&[&*theta, &tl, &zl])
+            .expect("f_eval failed");
+        dz.copy_from_slice(&outs[0]);
+    }
+
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.bump();
+        let theta = self.theta();
+        let (tl, zl, wl) = (lit_time(t), self.lit_z(z).unwrap(), self.lit_z(w).unwrap());
+        let outs = self
+            .f_vjp
+            .run_f32(&[&*theta, &tl, &zl, &wl])
+            .expect("f_vjp failed");
+        wjz.copy_from_slice(&outs[0]);
+        for (d, g) in wjp.iter_mut().zip(&outs[1]) {
+            *d += g;
+        }
+    }
+
+    fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
+        let Some(exe) = &self.f_jvp else {
+            // fall back to finite differences from the trait default
+            return crate::ode::func::OdeFunc::jvp(&DefaultJvp(self), t, z, v, out);
+        };
+        self.bump();
+        let theta = self.theta();
+        let (tl, zl, vl) = (lit_time(t), self.lit_z(z).unwrap(), self.lit_z(v).unwrap());
+        let outs = exe
+            .run_f32(&[&*theta, &tl, &zl, &vl])
+            .expect("f_jvp failed");
+        out.copy_from_slice(&outs[0]);
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.manifest.n_params);
+        self.params.copy_from_slice(p);
+        *self.theta_lit.borrow_mut() = None;
+    }
+}
+
+/// Shim to reach the trait-default finite-difference jvp without recursion.
+struct DefaultJvp<'a>(&'a HloModel);
+impl OdeFunc for DefaultJvp<'_> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        self.0.eval(t, z, dz)
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], a: &mut [f32], b: &mut [f32]) {
+        self.0.vjp(t, z, w, a, b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recurrent baselines (LSTM / GRU / RNN)
+// ---------------------------------------------------------------------------
+
+/// A sequence baseline trained by whole-graph AOT autodiff (paper Tables 4/5).
+pub struct RecurrentBaseline {
+    pub manifest: Manifest,
+    pub params: Vec<f32>,
+    loss_grad: Rc<Executable>,
+    predict: Rc<Executable>,
+    rollout: Option<Rc<Executable>>,
+    init: Rc<Executable>,
+}
+
+impl RecurrentBaseline {
+    pub fn load(engine: &mut Engine, dir: &Path) -> Result<RecurrentBaseline> {
+        let manifest = Manifest::load(dir)?;
+        ensure!(
+            manifest.kind == "recurrent",
+            "'{}' is not a recurrent model",
+            manifest.name
+        );
+        let loss_grad = engine.load(&manifest.artifact("loss_grad")?.file)?;
+        let predict = engine.load(&manifest.artifact("predict")?.file)?;
+        let rollout = manifest
+            .artifacts
+            .get("rollout")
+            .map(|a| engine.load(&a.file))
+            .transpose()?;
+        let init = engine.load(&manifest.artifact("init_params")?.file)?;
+        let params = vec![0.0f32; manifest.n_params];
+        Ok(RecurrentBaseline { manifest, params, loss_grad, predict, rollout, init })
+    }
+
+    pub fn init_params(&mut self, seed: i32) -> Result<()> {
+        let outs = self.init.run_f32(&[&lit_i32_1d(&[seed])])?;
+        self.params = outs[0].clone();
+        Ok(())
+    }
+
+    /// `(loss, dθ)` for one batch `x[B,T,Din]`, `y[B,T,Dout]`.
+    pub fn loss_grad(&self, x: &[f32], y: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let m = &self.manifest;
+        let (tl, xl, yl) = (
+            lit_f32_1d(&self.params),
+            lit_f32_3d(x, m.batch, m.seq_len, m.dim_in)?,
+            lit_f32_3d(y, m.batch, m.seq_len, m.dim_out)?,
+        );
+        let outs = self.loss_grad.run_f32(&[&tl, &xl, &yl])?;
+        Ok((outs[0][0] as f64, outs[1].clone()))
+    }
+
+    /// One-step-ahead predictions `[B,T,Dout]`.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let (tl, xl) = (lit_f32_1d(&self.params), lit_f32_3d(x, m.batch, m.seq_len, m.dim_in)?);
+        let outs = self.predict.run_f32(&[&tl, &xl])?;
+        Ok(outs[0].clone())
+    }
+
+    /// Autoregressive rollout `[B, rollout_steps, Dout]` from `x0[B,Din]`.
+    pub fn rollout(&self, x0: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let exe = self
+            .rollout
+            .as_ref()
+            .with_context(|| format!("model '{}' has no rollout artifact", m.name))?;
+        let (tl, xl) = (lit_f32_1d(&self.params), lit_f32_2d(x0, m.batch, m.dim_in)?);
+        let outs = exe.run_f32(&[&tl, &xl])?;
+        Ok(outs[0].clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_classes_rows() {
+        let pred = [0.1f32, 0.9, 0.3, 0.2, 0.1, 0.05];
+        assert_eq!(HloModel::argmax_classes(&pred, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn target_variants() {
+        let t = Target::Classes(vec![1, 0]);
+        match t {
+            Target::Classes(c) => assert_eq!(c.len(), 2),
+            _ => unreachable!(),
+        }
+    }
+    // Full load/execute tests need artifacts: rust/tests/runtime_round_trip.rs.
+}

@@ -1,0 +1,239 @@
+//! Typed view of the `manifest.json` emitted per model by
+//! `python/compile/aot.py` (DESIGN.md §5).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed model manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    /// "node" or "recurrent".
+    pub kind: String,
+    pub batch: usize,
+    pub n_params: usize,
+    // NODE fields:
+    pub dim_in: usize,
+    pub dim_state: usize,
+    pub dim_out: usize,
+    pub loss: String,
+    pub has_encoder: bool,
+    // Recurrent fields:
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub rollout_steps: usize,
+    pub cell: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let kind = j.get("kind")?.as_str()?.to_string();
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: dir.join(art.get("file")?.as_str()?),
+                    inputs: art
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: art
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let get_usize = |k: &str| -> usize {
+            j.opt(k).and_then(|v| v.as_usize().ok()).unwrap_or(0)
+        };
+        let m = Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            kind: kind.clone(),
+            batch: j.get("batch")?.as_usize()?,
+            n_params: j.get("n_params")?.as_usize()?,
+            dim_in: get_usize("dim_in"),
+            dim_state: get_usize("dim_state"),
+            dim_out: get_usize("dim_out"),
+            loss: j.opt("loss").and_then(|v| v.as_str().ok()).unwrap_or("mse").to_string(),
+            has_encoder: j.opt("has_encoder").and_then(|v| v.as_bool().ok()).unwrap_or(false),
+            seq_len: get_usize("seq_len"),
+            hidden: get_usize("hidden"),
+            rollout_steps: get_usize("rollout_steps"),
+            cell: j.opt("cell").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let required: &[&str] = match self.kind.as_str() {
+            "node" => &["init_params", "f_eval", "f_vjp", "decode_loss", "decode_loss_vjp"],
+            "recurrent" => &["init_params", "loss_grad", "predict"],
+            k => bail!("unknown manifest kind '{k}'"),
+        };
+        for r in required {
+            if !self.artifacts.contains_key(*r) {
+                bail!("manifest '{}' missing required artifact '{r}'", self.name);
+            }
+        }
+        if self.kind == "node" {
+            let f = &self.artifacts["f_eval"];
+            if f.inputs[0].shape != [self.n_params] {
+                bail!("f_eval theta shape mismatch: {:?}", f.inputs[0].shape);
+            }
+            if f.inputs[2].shape != [self.batch, self.dim_state] {
+                bail!("f_eval z shape mismatch: {:?}", f.inputs[2].shape);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("model '{}' has no artifact '{name}'", self.name))
+    }
+
+    /// Flattened ODE state size (batch × dim_state).
+    pub fn state_size(&self) -> usize {
+        self.batch * self.dim_state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn minimal_node_manifest() -> String {
+        let art = |ins: &str, outs: &str| {
+            format!(r#"{{"file": "x.hlo.txt", "inputs": [{ins}], "outputs": [{outs}]}}"#)
+        };
+        let theta = r#"{"shape": [10], "dtype": "f32"}"#;
+        let t = r#"{"shape": [1], "dtype": "f32"}"#;
+        let z = r#"{"shape": [4, 3], "dtype": "f32"}"#;
+        format!(
+            r#"{{"name": "m", "kind": "node", "batch": 4, "n_params": 10,
+                "dim_in": 3, "dim_state": 3, "dim_out": 2, "loss": "mse",
+                "has_encoder": false,
+                "artifacts": {{
+                  "init_params": {},
+                  "f_eval": {},
+                  "f_vjp": {},
+                  "decode_loss": {},
+                  "decode_loss_vjp": {}
+                }}}}"#,
+            art(r#"{"shape": [1], "dtype": "i32"}"#, theta),
+            art(&format!("{theta}, {t}, {z}"), z),
+            art(&format!("{theta}, {t}, {z}, {z}"), &format!("{z}, {theta}")),
+            art(&format!("{theta}, {z}, {z}"), z),
+            art(&format!("{theta}, {z}, {z}"), z),
+        )
+    }
+
+    #[test]
+    fn loads_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("nodal_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &minimal_node_manifest());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.state_size(), 12);
+        assert!(m.artifact("f_eval").is_ok());
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let dir = std::env::temp_dir().join(format!("nodal_man2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            r#"{"name": "m", "kind": "node", "batch": 4, "n_params": 10,
+               "dim_state": 3, "artifacts": {}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let dir = std::env::temp_dir().join(format!("nodal_man3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            r#"{"name": "m", "kind": "tree", "batch": 1, "n_params": 1, "artifacts": {}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors_helpfully() {
+        let dir = std::env::temp_dir().join("definitely_missing_nodal_dir");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

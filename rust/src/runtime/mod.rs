@@ -1,0 +1,23 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! L3 hot loop. Python never runs here — `make artifacts` produced the
+//! `artifacts/<model>/*.hlo.txt` files once at build time.
+//!
+//! * [`engine`] — client + executable cache + literal marshalling;
+//! * [`manifest`] — typed view of `manifest.json`;
+//! * [`hlo_model`] — an [`crate::ode::OdeFunc`] (plus encoder / loss head)
+//!   backed by compiled executables.
+
+pub mod engine;
+pub mod hlo_model;
+pub mod manifest;
+
+pub use engine::{Engine, Executable};
+pub use hlo_model::{HloModel, RecurrentBaseline};
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifact root, overridable with `NODAL_ARTIFACTS`.
+pub fn artifact_root() -> std::path::PathBuf {
+    std::env::var_os("NODAL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,186 @@
+//! Flat f32 vector math used by the solver hot loop.
+//!
+//! ODE states, adjoint variables and parameter gradients are flat `[f32]`
+//! buffers (batch dimensions are flattened by the artifact contract, see
+//! DESIGN.md §5). The stage arithmetic of a Runge–Kutta step is a handful of
+//! axpy/scale/norm operations over those buffers; everything heavy (the
+//! dynamics `f` itself) runs inside XLA. These helpers are written to
+//! auto-vectorize and to allow buffer reuse from the integrator's arena.
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// out = z  (copy)
+#[inline]
+pub fn copy(z: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(z);
+}
+
+/// x *= a
+#[inline]
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// x = 0
+#[inline]
+pub fn zero(x: &mut [f32]) {
+    x.fill(0.0);
+}
+
+/// out = z + h * sum_j coeff[j] * ks[j]   (the RK update / error combination)
+///
+/// `ks` are the stage derivatives; entries with zero coefficient are skipped.
+/// The coefficient product is formed in f64 and cast once — the *same*
+/// rounding as the stage-u path in `rk_step`, which makes the FSAL identity
+/// (last stage input == next step state) bit-exact.
+#[inline]
+pub fn combine(z: &[f32], h: f64, coeff: &[f64], ks: &[Vec<f32>], out: &mut [f32]) {
+    out.copy_from_slice(z);
+    for (c, k) in coeff.iter().zip(ks) {
+        if *c != 0.0 {
+            axpy((h * *c) as f32, k, out);
+        }
+    }
+}
+
+/// Weighted RMS norm used by the adaptive step controller:
+/// `sqrt(mean_i (e_i / (atol + rtol * max(|z0_i|, |z1_i|)))^2)`.
+///
+/// An accepted step has `wrms <= 1`.
+#[inline]
+pub fn wrms_norm(err: &[f32], z0: &[f32], z1: &[f32], atol: f64, rtol: f64) -> f64 {
+    debug_assert_eq!(err.len(), z0.len());
+    debug_assert_eq!(err.len(), z1.len());
+    if err.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for i in 0..err.len() {
+        let sc = atol + rtol * (z0[i].abs().max(z1[i].abs())) as f64;
+        let r = err[i] as f64 / sc;
+        acc += r * r;
+    }
+    (acc / err.len() as f64).sqrt()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Dot product in f64 accumulation.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// Max |x_i - y_i|.
+#[inline]
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+}
+
+/// Mean squared error between two flat buffers.
+#[inline]
+pub fn mse(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+/// True iff every element is finite.
+#[inline]
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn combine_matches_manual() {
+        let z = [1.0f32, -1.0];
+        let ks = vec![vec![2.0f32, 0.5], vec![-1.0, 4.0]];
+        let mut out = [0.0f32; 2];
+        combine(&z, 0.1f64, &[0.5, 0.5], &ks, &mut out);
+        assert!((out[0] - (1.0 + 0.1 * 0.5 * (2.0 - 1.0))).abs() < 1e-6);
+        assert!((out[1] - (-1.0 + 0.1 * 0.5 * (0.5 + 4.0))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn combine_skips_zero_coefficients() {
+        let z = [1.0f32];
+        let ks = vec![vec![f32::NAN], vec![2.0f32]];
+        let mut out = [0.0f32];
+        // coefficient 0 for the NaN stage: must be skipped, not multiplied.
+        combine(&z, 1.0f64, &[0.0, 1.0], &ks, &mut out);
+        assert_eq!(out[0], 3.0);
+    }
+
+    #[test]
+    fn wrms_accept_boundary() {
+        // err exactly atol everywhere, z = 0 => wrms = 1.
+        let err = [1e-6f32; 8];
+        let z = [0.0f32; 8];
+        let n = wrms_norm(&err, &z, &z, 1e-6, 0.0);
+        assert!((n - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wrms_scales_with_rtol() {
+        let err = [0.01f32; 4];
+        let z = [10.0f32; 4];
+        // scale = rtol * 10 = 0.01 -> wrms 1.
+        let n = wrms_norm(&err, &z, &z, 0.0, 1e-3);
+        assert!((n - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let x = [3.0f32, 4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-9);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-9);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn mse_empty_is_zero() {
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn finite_detection() {
+        assert!(all_finite(&[1.0, -2.0]));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+}

@@ -1,0 +1,184 @@
+//! First-order optimizers matching the paper's training recipes
+//! (SGD+momentum for classification, Adam for the three-body problem).
+
+/// Clip a gradient to a maximum L2 norm (in place); returns the pre-clip
+/// norm. Standard stabilizer for NODE training: a bad step can push the
+/// dynamics into a stiff region where NFE explodes (see EXPERIMENTS.md).
+pub fn clip_grad_norm(grad: &mut [f32], max_norm: f64) -> f64 {
+    let n = crate::tensor::norm2(grad);
+    if n > max_norm && n > 0.0 {
+        let s = (max_norm / n) as f32;
+        for g in grad.iter_mut() {
+            *g *= s;
+        }
+    }
+    n
+}
+
+/// A stateful first-order optimizer over a flat parameter vector.
+pub trait Optimizer {
+    /// In-place parameter update from gradients.
+    fn step(&mut self, params: &mut [f32], grads: &[f32]);
+    /// Current learning rate.
+    fn lr(&self) -> f64;
+    /// Override the learning rate (driven by an [`super::LrSchedule`]).
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// SGD with classical momentum and decoupled weight decay.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    lr: f64,
+    momentum: f64,
+    weight_decay: f64,
+    buf: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, weight_decay: f64) -> Self {
+        Sgd { lr, momentum, weight_decay, buf: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        if self.buf.len() != params.len() {
+            self.buf = vec![0.0; params.len()];
+        }
+        let (lr, mu, wd) = (self.lr as f32, self.momentum as f32, self.weight_decay as f32);
+        for i in 0..params.len() {
+            let g = grads[i] + wd * params[i];
+            self.buf[i] = mu * self.buf[i] + g;
+            params[i] -= lr * self.buf[i];
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+        }
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let alpha = self.lr * bc2.sqrt() / bc1;
+        for i in 0..params.len() {
+            let g = grads[i] as f64;
+            self.m[i] = (b1 * self.m[i] as f64 + (1.0 - b1) * g) as f32;
+            self.v[i] = (b2 * self.v[i] as f64 + (1.0 - b2) * g * g) as f32;
+            params[i] -= (alpha * self.m[i] as f64 / ((self.v[i] as f64).sqrt() + self.eps)) as f32;
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Both optimizers minimize the quadratic f(x) = Σ (x_i − c_i)².
+    fn run<O: Optimizer>(mut opt: O, iters: usize) -> f32 {
+        let c = [1.0f32, -2.0, 0.5, 3.0];
+        let mut x = [0.0f32; 4];
+        for _ in 0..iters {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.step(&mut x, &g);
+        }
+        x.iter().zip(&c).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(run(Sgd::new(0.1, 0.0, 0.0), 200) < 1e-4);
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        assert!(run(Sgd::new(0.05, 0.9, 0.0), 300) < 1e-3);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        assert!(run(Adam::new(0.1), 500) < 1e-2);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = Sgd::new(0.1, 0.0, 0.5);
+        let mut x = [2.0f32];
+        for _ in 0..50 {
+            opt.step(&mut x, &[0.0]);
+        }
+        assert!(x[0] < 0.2, "decay should shrink: {}", x[0]);
+    }
+
+    #[test]
+    fn clip_grad() {
+        let mut g = vec![3.0f32, 4.0];
+        let n = clip_grad_norm(&mut g, 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((crate::tensor::norm2(&g) - 1.0).abs() < 1e-6);
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4], "below-threshold gradients untouched");
+    }
+
+    #[test]
+    fn lr_setter() {
+        let mut opt = Adam::new(0.1);
+        opt.set_lr(0.01);
+        assert_eq!(opt.lr(), 0.01);
+    }
+
+    #[test]
+    fn momentum_accelerates_along_consistent_gradient() {
+        let mut plain = Sgd::new(0.01, 0.0, 0.0);
+        let mut mom = Sgd::new(0.01, 0.9, 0.0);
+        let mut xp = [0.0f32];
+        let mut xm = [0.0f32];
+        for _ in 0..20 {
+            plain.step(&mut xp, &[-1.0]);
+            mom.step(&mut xm, &[-1.0]);
+        }
+        assert!(xm[0] > xp[0] * 2.0, "momentum should move farther: {} vs {}", xm[0], xp[0]);
+    }
+}

@@ -1,0 +1,76 @@
+//! Learning-rate schedules from the paper's experimental setups:
+//! step decay (×0.1 at epochs 30/60 — Fig 7; 150/250 — Table 2) and
+//! exponential decay (`lr · d^epoch` — the three-body recipe, paper Eq. 83).
+
+/// Learning-rate schedule (epoch-indexed).
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    /// Constant `lr`.
+    Constant(f64),
+    /// `initial × factor^(number of milestones passed)`.
+    Step { initial: f64, factor: f64, milestones: Vec<usize> },
+    /// `initial × decay^epoch` (paper Eq. 83).
+    Exp { initial: f64, decay: f64 },
+}
+
+impl LrSchedule {
+    /// Paper Fig 7 recipe: 0.01, ×0.1 at epochs 30 and 60.
+    pub fn paper_fig7() -> Self {
+        LrSchedule::Step { initial: 0.01, factor: 0.1, milestones: vec![30, 60] }
+    }
+
+    /// Paper three-body recipe for NODE: 0.1 × 0.99^epoch.
+    pub fn paper_threebody() -> Self {
+        LrSchedule::Exp { initial: 0.1, decay: 0.99 }
+    }
+
+    pub fn at(&self, epoch: usize) -> f64 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::Step { initial, factor, milestones } => {
+                let k = milestones.iter().filter(|&&m| epoch >= m).count();
+                initial * factor.powi(k as i32)
+            }
+            LrSchedule::Exp { initial, decay } => initial * decay.powi(epoch as i32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_milestones() {
+        let s = LrSchedule::Step { initial: 0.1, factor: 0.1, milestones: vec![30, 60] };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(29), 0.1);
+        assert!((s.at(30) - 0.01).abs() < 1e-12);
+        assert!((s.at(59) - 0.01).abs() < 1e-12);
+        assert!((s.at(60) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_decay() {
+        let s = LrSchedule::Exp { initial: 0.1, decay: 0.99 };
+        assert!((s.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.at(100) - 0.1 * 0.99f64.powi(100)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant() {
+        assert_eq!(LrSchedule::Constant(0.5).at(1000), 0.5);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        for s in [LrSchedule::paper_fig7(), LrSchedule::paper_threebody()] {
+            let mut prev = f64::INFINITY;
+            for e in 0..100 {
+                let lr = s.at(e);
+                assert!(lr <= prev + 1e-15);
+                prev = lr;
+            }
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Segmented integration for losses at multiple observation times —
+//! the Latent-ODE (Table 4) and three-body (Table 5) training path.
+//!
+//! The trajectory is solved segment-by-segment between consecutive
+//! observation times (so gradients at the observation points are *exact* —
+//! no dense-output interpolation on the training path). The backward sweep
+//! runs reverse over segments with adjoint jumps `λ ← λ + dL_k/dz(t_k)` at
+//! each observation, exactly as Latent-ODE training does through
+//! torchdiffeq.
+
+use anyhow::{ensure, Result};
+
+use crate::grad::{self, CostMeter, Method};
+use crate::ode::{integrate, IntegrateOpts, OdeFunc, Tableau, Trajectory};
+use crate::runtime::hlo_model::{HloModel, Target};
+
+/// Result of a segmented forward+backward pass.
+pub struct SegmentedGrad {
+    /// Mean loss over observations.
+    pub loss: f64,
+    /// `dL/dθ` (dynamics + head parameters combined — flat θ).
+    pub dtheta: Vec<f32>,
+    /// `dL/dz(t_0)` for the encoder.
+    pub dl_dz0: Vec<f32>,
+    /// Aggregate cost across segments.
+    pub meter: CostMeter,
+}
+
+/// Forward + backward through a trajectory observed at `times[1..]`
+/// (`times[0]` is the initial time of `z0`; a target may also be supplied
+/// for it via `targets[0]` = target at `times[1]`, i.e. `targets[k]`
+/// corresponds to `times[k+1]`).
+///
+/// Loss = mean over observations of the model head loss.
+pub fn segmented_loss_grad(
+    model: &HloModel,
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+    method: Method,
+    z0: &[f32],
+    times: &[f64],
+    targets: &[Target],
+) -> Result<SegmentedGrad> {
+    ensure!(times.len() >= 2, "need at least one observation after t0");
+    ensure!(
+        targets.len() == times.len() - 1,
+        "targets ({}) must match observation times ({})",
+        targets.len(),
+        times.len() - 1
+    );
+    let n_obs = targets.len();
+    let p = model.n_params();
+
+    // ---- forward: one trajectory per segment ----
+    let mut segs: Vec<Trajectory> = Vec::with_capacity(n_obs);
+    let mut z = z0.to_vec();
+    let mut loss_sum = 0.0f64;
+    let mut dtheta = vec![0.0f32; p];
+    let mut lam_jumps: Vec<Vec<f32>> = Vec::with_capacity(n_obs);
+    let mut meter = CostMeter::default();
+
+    for k in 0..n_obs {
+        let traj = integrate(model, times[k], times[k + 1], &z, tab, opts)?;
+        z = traj.last().to_vec();
+        meter.nfe_forward += traj.nfe;
+        meter.n_steps += traj.len();
+        meter.n_rejected += traj.n_rejected;
+        meter.checkpoint_bytes += traj.checkpoint_bytes();
+
+        // Loss + dL/dz at this observation; head-θ gradient accumulates.
+        let (lam_k, loss_k) = model.decode_loss_vjp(&z, &targets[k], &mut dtheta)?;
+        loss_sum += loss_k;
+        lam_jumps.push(lam_k);
+        segs.push(traj);
+    }
+
+    // Normalize: total loss = (1/n_obs) Σ loss_k. decode_loss_vjp already
+    // used per-call means, so scale everything by 1/n_obs.
+    let scale = 1.0 / n_obs as f32;
+    for d in dtheta.iter_mut() {
+        *d *= scale;
+    }
+
+    // ---- backward: reverse over segments with λ jumps ----
+    let dim = model.dim();
+    let mut lam = vec![0.0f32; dim];
+    for k in (0..n_obs).rev() {
+        // Jump at t_{k+1}.
+        for (l, j) in lam.iter_mut().zip(&lam_jumps[k]) {
+            *l += j * scale;
+        }
+        let g = grad::backward(model, tab, &segs[k], &lam, method, opts)?;
+        lam = g.dl_dz0;
+        for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+            *d += s;
+        }
+        meter.nfe_backward += g.meter.nfe_backward;
+        meter.vjp_calls += g.meter.vjp_calls;
+        meter.graph_depth += g.meter.graph_depth;
+        meter.n_reverse_steps += g.meter.n_reverse_steps;
+    }
+
+    Ok(SegmentedGrad { loss: loss_sum / n_obs as f64, dtheta, dl_dz0: lam, meter })
+}
+
+/// Forward-only evaluation: predictions and mean loss at observation times.
+pub fn segmented_eval(
+    model: &HloModel,
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+    z0: &[f32],
+    times: &[f64],
+    targets: &[Target],
+) -> Result<(f64, Vec<Vec<f32>>)> {
+    let mut z = z0.to_vec();
+    let mut loss_sum = 0.0;
+    let mut preds = Vec::new();
+    for k in 0..targets.len() {
+        let traj = integrate(model, times[k], times[k + 1], &z, tab, opts)?;
+        z = traj.last().to_vec();
+        let (l, pred) = model.decode_loss(&z, &targets[k])?;
+        loss_sum += l;
+        preds.push(pred);
+    }
+    Ok((loss_sum / targets.len().max(1) as f64, preds))
+}
+
+// Integration-level tests (require artifacts) live in
+// rust/tests/training_integration.rs.

@@ -1,0 +1,256 @@
+//! Classification trainer — the Fig 7 / Table 2 / Table 3 training loop.
+//!
+//! Drives a [`HloModel`] through encode → adaptive ODE solve → loss head,
+//! with the gradient method under study (ACA / naive / adjoint), SGD with
+//! momentum + step-decay LR (the paper's recipe), per-epoch evaluation, and
+//! a full cost/time record per epoch.
+
+use anyhow::Result;
+
+use super::optim::{Optimizer, Sgd};
+use super::schedule::LrSchedule;
+use crate::data::Dataset;
+use crate::grad::{self, Method};
+use crate::ode::{integrate, IntegrateOpts, OdeFunc, Tableau};
+use crate::runtime::hlo_model::{HloModel, Target};
+use crate::util::{Pcg64, Timer};
+
+/// Trainer configuration (defaults follow the paper's Appendix D recipe,
+/// scaled to the substitute workload).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub epochs: usize,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    /// Integration span of the ODE block (paper: [0, 1]).
+    pub t1: f64,
+    pub rtol: f64,
+    pub atol: f64,
+    /// Fixed step (discrete baseline / fixed-solver columns of Table 2).
+    pub fixed_h: Option<f64>,
+    pub seed: u64,
+    /// Limit batches per epoch (0 = all) — keeps CPU experiments tractable.
+    pub max_batches: usize,
+    /// Max gradient L2 norm (0 disables clipping).
+    pub clip: f64,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::Aca,
+            epochs: 10,
+            lr: LrSchedule::Step { initial: 0.05, factor: 0.1, milestones: vec![6, 9] },
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            t1: 1.0,
+            rtol: 1e-2,
+            atol: 1e-2,
+            fixed_h: None,
+            seed: 0,
+            max_batches: 0,
+            clip: 5.0,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-epoch record of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    pub test_loss: f64,
+    /// Cumulative wall-clock seconds since training started (Fig 7b x-axis).
+    pub wall_s: f64,
+    /// Mean forward NFE per batch this epoch.
+    pub nfe_forward: f64,
+    /// Mean backward NFE (+VJPs) per batch this epoch.
+    pub nfe_backward: f64,
+}
+
+/// The training driver.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub history: Vec<TrainRecord>,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Self {
+        Trainer { cfg, history: Vec::new() }
+    }
+
+    fn opts(&self) -> IntegrateOpts {
+        IntegrateOpts {
+            rtol: self.cfg.rtol,
+            atol: self.cfg.atol,
+            fixed_h: self.cfg.fixed_h,
+            record_trials: self.cfg.method == Method::Naive,
+            ..Default::default()
+        }
+    }
+
+    /// One full forward+backward step on a batch; returns (loss, dθ, meters).
+    pub fn loss_grad(
+        &self,
+        model: &HloModel,
+        tab: &Tableau,
+        x: &[f32],
+        y: &Target,
+    ) -> Result<(f64, Vec<f32>, grad::CostMeter)> {
+        let opts = self.opts();
+        let z0 = model.encode(x)?;
+        let traj = integrate(model, 0.0, self.cfg.t1, &z0, tab, &opts)?;
+        let mut dtheta = vec![0.0f32; model.n_params()];
+        let (lam, loss) = model.decode_loss_vjp(traj.last(), y, &mut dtheta)?;
+        let g = grad::backward(model, tab, &traj, &lam, self.cfg.method, &opts)?;
+        for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+            *d += s;
+        }
+        model.encode_vjp_accum(x, &g.dl_dz0, &mut dtheta)?;
+        let mut meter = g.meter;
+        meter.nfe_forward = traj.nfe;
+        Ok((loss, dtheta, meter))
+    }
+
+    /// Train `model` on `data`, filling `self.history`.
+    pub fn fit(&mut self, model: &mut HloModel, tab: &Tableau, data: &Dataset) -> Result<()> {
+        let b = model.manifest.batch;
+        let mut opt = Sgd::new(self.cfg.lr.at(0), self.cfg.momentum, self.cfg.weight_decay);
+        let mut rng = Pcg64::new(self.cfg.seed, 77);
+        let timer = Timer::new();
+
+        for epoch in 0..self.cfg.epochs {
+            opt.set_lr(self.cfg.lr.at(epoch));
+            let mut order = rng.permutation(data.len());
+            if self.cfg.max_batches > 0 {
+                order.truncate(self.cfg.max_batches * b);
+            }
+            let mut loss_sum = 0.0;
+            let mut n_batches = 0usize;
+            let mut nfe_f = 0usize;
+            let mut nfe_b = 0usize;
+            for chunk in order.chunks(b) {
+                if chunk.len() < b {
+                    continue; // drop ragged tail (paper drops last batch too)
+                }
+                let (x, y) = data.gather(chunk);
+                let (loss, mut dtheta, meter) = self.loss_grad(model, tab, &x, &y)?;
+                if self.cfg.clip > 0.0 {
+                    super::optim::clip_grad_norm(&mut dtheta, self.cfg.clip);
+                }
+                let mut params = model.params().to_vec();
+                opt.step(&mut params, &dtheta);
+                model.set_params(&params);
+                loss_sum += loss;
+                n_batches += 1;
+                nfe_f += meter.nfe_forward;
+                nfe_b += meter.nfe_backward + meter.vjp_calls;
+            }
+
+            let (test_loss, test_acc) = evaluate(model, tab, &self.opts(), self.cfg.t1, data, true)?;
+            let rec = TrainRecord {
+                epoch,
+                train_loss: loss_sum / n_batches.max(1) as f64,
+                test_acc,
+                test_loss,
+                wall_s: timer.elapsed_s(),
+                nfe_forward: nfe_f as f64 / n_batches.max(1) as f64,
+                nfe_backward: nfe_b as f64 / n_batches.max(1) as f64,
+            };
+            if self.cfg.verbose {
+                println!(
+                    "  [{}] epoch {:>3}  train_loss {:.4}  test_acc {:.4}  ({:.1}s, nfe {:.0}/{:.0})",
+                    self.cfg.method.name(),
+                    epoch,
+                    rec.train_loss,
+                    rec.test_acc,
+                    rec.wall_s,
+                    rec.nfe_forward,
+                    rec.nfe_backward,
+                );
+            }
+            self.history.push(rec);
+        }
+        Ok(())
+    }
+
+    /// Final test accuracy (last epoch's evaluation).
+    pub fn final_acc(&self) -> f64 {
+        self.history.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+}
+
+/// Evaluate accuracy/loss on the dataset's test split (or train split).
+pub fn evaluate(
+    model: &HloModel,
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+    t1: f64,
+    data: &Dataset,
+    test_split: bool,
+) -> Result<(f64, f64)> {
+    let b = model.manifest.batch;
+    let n = if test_split { data.test_len() } else { data.len() };
+    let classes = model.manifest.dim_out;
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut idx = 0;
+    while idx + b <= n {
+        let ids: Vec<usize> = (idx..idx + b).collect();
+        let (x, y) = if test_split { data.gather_test(&ids) } else { data.gather(&ids) };
+        let z0 = model.encode(&x)?;
+        let traj = integrate(model, 0.0, t1, &z0, tab, opts)?;
+        let (loss, pred) = model.decode_loss(traj.last(), &y)?;
+        loss_sum += loss;
+        if let Target::Classes(truth) = &y {
+            let hats = HloModel::argmax_classes(&pred, classes);
+            for (h, t) in hats.iter().zip(truth) {
+                if *h == *t as usize {
+                    correct += 1;
+                }
+            }
+            total += truth.len();
+        }
+        idx += b;
+    }
+    let batches = (n / b).max(1) as f64;
+    let acc = if total > 0 { correct as f64 / total as f64 } else { f64::NAN };
+    Ok((loss_sum / batches, acc))
+}
+
+/// Per-sample correctness vector on the test split — the input to the
+/// ICC test-retest analysis (Table 3).
+pub fn per_sample_correct(
+    model: &HloModel,
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+    t1: f64,
+    data: &Dataset,
+) -> Result<Vec<bool>> {
+    let b = model.manifest.batch;
+    let classes = model.manifest.dim_out;
+    let mut out = Vec::with_capacity(data.test_len());
+    let mut idx = 0;
+    while idx + b <= data.test_len() {
+        let ids: Vec<usize> = (idx..idx + b).collect();
+        let (x, y) = data.gather_test(&ids);
+        let z0 = model.encode(&x)?;
+        let traj = integrate(model, 0.0, t1, &z0, tab, opts)?;
+        let (_, pred) = model.decode_loss(traj.last(), &y)?;
+        if let Target::Classes(truth) = &y {
+            let hats = HloModel::argmax_classes(&pred, classes);
+            for (h, t) in hats.iter().zip(truth) {
+                out.push(*h == *t as usize);
+            }
+        }
+        idx += b;
+    }
+    Ok(out)
+}

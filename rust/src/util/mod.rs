@@ -1,0 +1,8 @@
+//! Small shared utilities: deterministic RNG, timing, logging helpers.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,49 @@
+//! Wall-clock timing helper used by the experiment harness and perf logs.
+
+use std::time::Instant;
+
+/// A simple stopwatch that accumulates named spans.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since construction or the last `reset`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotone() {
+        let t = Timer::new();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

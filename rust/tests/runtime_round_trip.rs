@@ -1,0 +1,200 @@
+//! Integration: the python-AOT → rust-PJRT bridge on real artifacts.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` at the repo root
+//! (tests are skipped with a message otherwise, so `cargo test` stays green
+//! on a fresh checkout — CI runs `make test` which builds artifacts first).
+
+use nodal::grad::{self, Method};
+use nodal::ode::{integrate, tableau, IntegrateOpts, OdeFunc};
+use nodal::runtime::{hlo_model::Target, Engine, HloModel, RecurrentBaseline};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/spiral/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn load_spiral() -> (Engine, HloModel) {
+    let mut engine = Engine::cpu().unwrap();
+    let mut model = HloModel::load(&mut engine, std::path::Path::new("artifacts/spiral")).unwrap();
+    model.init_params(42).unwrap();
+    (engine, model)
+}
+
+#[test]
+fn spiral_f_eval_shapes_and_finiteness() {
+    require_artifacts!();
+    let (_e, model) = load_spiral();
+    let n = model.dim();
+    let z: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.01).sin()).collect();
+    let mut dz = vec![0.0f32; n];
+    model.eval(0.0, &z, &mut dz);
+    assert!(dz.iter().all(|v| v.is_finite()));
+    assert!(dz.iter().any(|&v| v != 0.0), "dynamics must be nontrivial");
+}
+
+#[test]
+fn spiral_vjp_consistent_with_finite_difference() {
+    require_artifacts!();
+    let (_e, model) = load_spiral();
+    let n = model.dim();
+    let z: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.037).cos() * 0.5).collect();
+    let w: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.051).sin()).collect();
+    let v: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.013).cos()).collect();
+
+    let mut wjz = vec![0.0f32; n];
+    let mut wjp = vec![0.0f32; model.n_params()];
+    model.vjp(0.0, &z, &w, &mut wjz, &mut wjp);
+
+    // <w^T J, v> vs FD of <w, f(z + eps v)>
+    let eps = 1e-3f32;
+    let zp: Vec<f32> = z.iter().zip(&v).map(|(a, b)| a + eps * b).collect();
+    let zm: Vec<f32> = z.iter().zip(&v).map(|(a, b)| a - eps * b).collect();
+    let mut fp = vec![0.0f32; n];
+    let mut fm = vec![0.0f32; n];
+    model.eval(0.0, &zp, &mut fp);
+    model.eval(0.0, &zm, &mut fm);
+    let fd: f64 = (0..n)
+        .map(|i| w[i] as f64 * ((fp[i] - fm[i]) / (2.0 * eps)) as f64)
+        .sum();
+    let got = nodal::tensor::dot(&wjz, &v);
+    assert!(
+        (got - fd).abs() < 0.05 * fd.abs().max(0.1),
+        "vjp {got} vs fd {fd}"
+    );
+}
+
+#[test]
+fn spiral_jvp_adjoint_identity() {
+    require_artifacts!();
+    let (_e, model) = load_spiral();
+    let n = model.dim();
+    let z: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.023).sin()).collect();
+    let w: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.041).cos()).collect();
+    let v: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.017).sin()).collect();
+    let mut jv = vec![0.0f32; n];
+    model.jvp(0.0, &z, &v, &mut jv);
+    let mut wj = vec![0.0f32; n];
+    let mut wjp = vec![0.0f32; model.n_params()];
+    model.vjp(0.0, &z, &w, &mut wj, &mut wjp);
+    let lhs = nodal::tensor::dot(&w, &jv);
+    let rhs = nodal::tensor::dot(&wj, &v);
+    assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+}
+
+#[test]
+fn spiral_full_training_step_all_methods_reduce_loss() {
+    require_artifacts!();
+    let (_e, mut model) = load_spiral();
+    let b = model.manifest.batch;
+    let din = model.manifest.dim_in;
+
+    // Tiny synthetic batch: class = x0 > 0.
+    let mut x = vec![0.0f32; b * din];
+    let mut y = vec![0i32; b];
+    for i in 0..b {
+        let v = if i % 2 == 0 { 0.8 } else { -0.8 };
+        x[i * din] = v;
+        x[i * din + 1] = -v * 0.3;
+        y[i] = (v > 0.0) as i32;
+    }
+    let target = Target::Classes(y);
+    let tab = tableau::heun_euler();
+    let opts = IntegrateOpts {
+        record_trials: true,
+        ..IntegrateOpts::with_tol(1e-2, 1e-2)
+    };
+
+    for method in Method::all() {
+        model.init_params(7).unwrap();
+        let mut last_loss = f64::INFINITY;
+        for step in 0..8 {
+            let z0 = model.encode(&x).unwrap();
+            let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts).unwrap();
+            let mut dtheta = vec![0.0f32; model.n_params()];
+            let (lam, loss) = model
+                .decode_loss_vjp(traj.last(), &target, &mut dtheta)
+                .unwrap();
+            let g = grad::backward(&model, tab, &traj, &lam, method, &opts).unwrap();
+            for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+                *d += s;
+            }
+            model.encode_vjp_accum(&x, &g.dl_dz0, &mut dtheta).unwrap();
+            // plain SGD
+            let lr = 0.5f32;
+            let p: Vec<f32> = model
+                .params()
+                .iter()
+                .zip(&dtheta)
+                .map(|(p, g)| p - lr * g)
+                .collect();
+            model.set_params(&p);
+            if step == 0 {
+                last_loss = loss;
+            } else if step == 7 {
+                assert!(
+                    loss < last_loss,
+                    "{}: loss did not decrease: {last_loss} -> {loss}",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn init_params_deterministic_across_loads() {
+    require_artifacts!();
+    let mut engine = Engine::cpu().unwrap();
+    let mut a = HloModel::load(&mut engine, std::path::Path::new("artifacts/spiral")).unwrap();
+    let mut b = HloModel::load(&mut engine, std::path::Path::new("artifacts/spiral")).unwrap();
+    a.init_params(5).unwrap();
+    b.init_params(5).unwrap();
+    assert_eq!(a.params(), b.params());
+    b.init_params(6).unwrap();
+    assert_ne!(a.params(), b.params());
+}
+
+#[test]
+fn recurrent_baseline_round_trip() {
+    require_artifacts!();
+    let mut engine = Engine::cpu().unwrap();
+    let mut m =
+        RecurrentBaseline::load(&mut engine, std::path::Path::new("artifacts/ts_rnn")).unwrap();
+    m.init_params(1).unwrap();
+    let man = m.manifest.clone();
+    let x = vec![0.1f32; man.batch * man.seq_len * man.dim_in];
+    let y = vec![0.2f32; man.batch * man.seq_len * man.dim_out];
+    let (loss, grad) = m.loss_grad(&x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grad.len(), man.n_params);
+    // One SGD step reduces this loss.
+    for (p, g) in m.params.iter_mut().zip(&grad) {
+        *p -= 0.5 * g;
+    }
+    let (loss2, _) = m.loss_grad(&x, &y).unwrap();
+    assert!(loss2 < loss, "{loss} -> {loss2}");
+    let pred = m.predict(&x).unwrap();
+    assert_eq!(pred.len(), man.batch * man.seq_len * man.dim_out);
+}
+
+#[test]
+fn lstm_rollout_round_trip() {
+    require_artifacts!();
+    let mut engine = Engine::cpu().unwrap();
+    let mut m =
+        RecurrentBaseline::load(&mut engine, std::path::Path::new("artifacts/tb_lstm")).unwrap();
+    m.init_params(2).unwrap();
+    let man = m.manifest.clone();
+    let x0 = vec![0.5f32; man.batch * man.dim_in];
+    let traj = m.rollout(&x0).unwrap();
+    assert_eq!(traj.len(), man.batch * man.rollout_steps * man.dim_out);
+    assert!(traj.iter().all(|v| v.is_finite()));
+}
