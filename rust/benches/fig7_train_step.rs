@@ -1,17 +1,73 @@
 //! Fig 7 workload: one full optimizer step (encode + solve + loss + backward
 //! + SGD) of the image NODE per gradient method — the end-to-end hot path of
 //! the training experiments.
+//!
+//! The first group needs no artifacts: it pits the batched engine
+//! (`integrate_batch` + `aca_backward_batch`) against the per-sample loop on
+//! a B=8 mini-batch of analytic stand-in dynamics, isolating the solver-side
+//! win (shared stage sweeps, arena checkpoints, no per-step allocation).
 
 use nodal::bench::Runner;
 use nodal::data::ImageDataset;
-use nodal::grad::Method;
-use nodal::ode::{tableau, OdeFunc};
+use nodal::grad::{aca_backward, aca_backward_batch, Method};
+use nodal::ode::analytic::{ConvFlow, Linear};
+use nodal::ode::{integrate, integrate_batch, tableau, IntegrateOpts, OdeFunc};
 use nodal::runtime::{Engine, HloModel};
 use nodal::train::{TrainConfig, Trainer};
+use nodal::util::Pcg64;
+
+/// fwd+bwd of B independent samples: per-sample loop vs the batch engine.
+fn bench_batched_vs_loop(r: &mut Runner) {
+    const B: usize = 8;
+    let tab = tableau::dopri5();
+
+    // Conv-flow dynamics (256-d state — the image-NODE stand-in).
+    let f = ConvFlow::random(16, 16, 9, 0.4);
+    let dim = f.dim();
+    let mut rng = Pcg64::seed(4);
+    let z0: Vec<f32> = (0..B * dim).map(|_| rng.normal_f32() * 0.5).collect();
+    let lam: Vec<f32> = (0..B * dim).map(|_| rng.normal_f32()).collect();
+    let opts = IntegrateOpts::with_tol(1e-5, 1e-7);
+    r.bench("convflow_b8_fwd_bwd_per_sample_loop", || {
+        for i in 0..B {
+            let traj = integrate(&f, 0.0, 1.0, &z0[i * dim..(i + 1) * dim], tab, &opts).unwrap();
+            let g = aca_backward(&f, tab, &traj, &lam[i * dim..(i + 1) * dim]);
+            std::hint::black_box(g.dl_dz0[0]);
+        }
+    });
+    r.bench("convflow_b8_fwd_bwd_batched", || {
+        let bt = integrate_batch(&f, 0.0, 1.0, &z0, tab, &opts).unwrap();
+        let gs = aca_backward_batch(&f, tab, &bt, &lam);
+        std::hint::black_box(gs[0].dl_dz0[0]);
+    });
+
+    // Cheap element-wise dynamics at a small fixed step: many accepted steps,
+    // so the forward pass is dominated by per-step bookkeeping — the case the
+    // checkpoint arena + flat buffers target.
+    let f = Linear::new(-0.9, 64);
+    let dim = f.dim();
+    let z0: Vec<f32> = (0..B * dim).map(|_| rng.normal_f32()).collect();
+    let opts = IntegrateOpts::fixed(1e-3);
+    r.bench("linear64_b8_fixed1k_steps_per_sample_loop", || {
+        for i in 0..B {
+            let traj =
+                integrate(&f, 0.0, 1.0, &z0[i * dim..(i + 1) * dim], tableau::rk4(), &opts)
+                    .unwrap();
+            std::hint::black_box(traj.last()[0]);
+        }
+    });
+    r.bench("linear64_b8_fixed1k_steps_batched", || {
+        let bt = integrate_batch(&f, 0.0, 1.0, &z0, tableau::rk4(), &opts).unwrap();
+        std::hint::black_box(bt.last(0)[0]);
+    });
+}
 
 fn main() {
+    let mut r = Runner::new("fig7_train_step");
+    bench_batched_vs_loop(&mut r);
+
     if !std::path::Path::new("artifacts/img/manifest.json").exists() {
-        println!("skipping fig7_train_step: run `make artifacts` first");
+        println!("skipping PJRT train-step benches: run `make artifacts` first");
         return;
     }
     let mut engine = Engine::cpu().unwrap();
@@ -23,7 +79,6 @@ fn main() {
     let (x, y) = data.gather(&ids);
     let tab = tableau::heun_euler();
 
-    let mut r = Runner::new("fig7_train_step");
     for method in [Method::Aca, Method::Adjoint, Method::Naive] {
         let cfg = TrainConfig { method, ..Default::default() };
         let trainer = Trainer::new(cfg);

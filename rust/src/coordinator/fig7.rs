@@ -4,16 +4,25 @@
 //! The paper's claim under test: for the same model, ACA reaches roughly
 //! half the error rate of the baselines at the same epoch count, in about
 //! half (adjoint) to a third (naive) of the wall-clock time.
+//!
+//! The three method runs are independent, so they can be sharded across the
+//! worker pool (one PJRT client per worker thread — PJRT objects are not
+//! `Send`, so each job builds its own engine/model inside the worker).
+//! Default is `--workers 1`: the per-method wall-clock comparison is the
+//! experiment's headline metric, and concurrent runs contending for cores
+//! would bias exactly those ratios. Pass `--workers 3` when only the
+//! accuracy columns matter and throughput is the priority.
 
 use anyhow::Result;
 
+use super::pool::{default_workers, run_parallel};
 use super::report::{save_series, Table};
 use crate::config::Config;
 use crate::data::ImageDataset;
 use crate::grad::Method;
 use crate::ode::tableau;
 use crate::runtime::{Engine, HloModel};
-use crate::train::{LrSchedule, TrainConfig, Trainer};
+use crate::train::{LrSchedule, TrainConfig, TrainRecord, Trainer};
 
 pub fn run(cfg: &Config) -> Result<()> {
     let epochs = cfg.get_usize("epochs", 12);
@@ -22,44 +31,75 @@ pub fn run(cfg: &Config) -> Result<()> {
     let seed = cfg.get_usize("seed", 0) as u64;
     let solver = cfg.get_str("solver", "heuneuler");
     let tab = tableau::by_name(&solver).expect("unknown solver");
+    let lr = cfg.get_f64("lr", 0.05);
+    let rtol = cfg.get_f64("rtol", 1e-2);
+    let atol = cfg.get_f64("atol", 1e-2);
+    let clip = cfg.get_f64("clip", 1.0);
+    let verbose = cfg.get_bool("verbose", true);
 
-    let data = ImageDataset::generate(n_train, n_test, 0.05, seed);
+    let methods = [Method::Aca, Method::Adjoint, Method::Naive];
+    let jobs: Vec<_> = methods
+        .iter()
+        .map(|&method| {
+            let dir = crate::runtime::artifact_root().join("img");
+            move || -> Result<Vec<TrainRecord>> {
+                // Dataset regenerated per worker (deterministic from the
+                // seed) — plain data only crosses the thread boundary.
+                let data = ImageDataset::generate(n_train, n_test, 0.05, seed);
+                let mut engine = Engine::cpu()?;
+                let mut model = HloModel::load(&mut engine, &dir)?;
+                model.init_params(seed as i32)?;
+
+                // Paper recipe scaled down: SGD momentum 0.9, step decay.
+                let tcfg = TrainConfig {
+                    method,
+                    epochs,
+                    lr: LrSchedule::Step {
+                        initial: lr,
+                        factor: 0.1,
+                        milestones: vec![epochs * 2 / 3, epochs * 9 / 10],
+                    },
+                    rtol,
+                    atol,
+                    clip,
+                    seed,
+                    verbose,
+                    ..Default::default()
+                };
+                let mut trainer = Trainer::new(tcfg);
+                trainer.fit(&mut model, tab, &data)?;
+                Ok(trainer.history)
+            }
+        })
+        .collect();
+
+    let workers =
+        cfg.get_usize("workers", 1).min(default_workers()).min(methods.len());
+    if workers > 1 {
+        println!(
+            "fig7: sharding {} training runs over {workers} workers — per-method wall-clock \
+             columns are contended and not comparable across methods",
+            methods.len()
+        );
+    }
+    let results = run_parallel(workers, jobs);
+
     let mut table = Table::new(
         "fig7",
         "img-NODE: final accuracy + time per method",
         &["method", "final err %", "best err %", "total time (s)", "s/epoch", "nfe f/b per batch"],
     );
-
     let mut curves: Vec<Vec<f64>> = Vec::new();
     let mut curve_names: Vec<String> = Vec::new();
 
-    for method in [Method::Aca, Method::Adjoint, Method::Naive] {
-        let mut engine = Engine::cpu()?;
-        let dir = crate::runtime::artifact_root().join("img");
-        let mut model = HloModel::load(&mut engine, &dir)?;
-        model.init_params(seed as i32)?;
-
-        // Paper recipe scaled down: SGD momentum 0.9, step decay.
-        let tcfg = TrainConfig {
-            method,
-            epochs,
-            lr: LrSchedule::Step {
-                initial: cfg.get_f64("lr", 0.05),
-                factor: 0.1,
-                milestones: vec![epochs * 2 / 3, epochs * 9 / 10],
-            },
-            rtol: cfg.get_f64("rtol", 1e-2),
-            atol: cfg.get_f64("atol", 1e-2),
-            clip: cfg.get_f64("clip", 1.0),
-            seed,
-            verbose: cfg.get_bool("verbose", true),
-            ..Default::default()
+    for (method, res) in methods.iter().zip(results) {
+        let hist = match res {
+            Ok(Ok(h)) => h,
+            Ok(Err(e)) => anyhow::bail!("fig7 {} run failed: {e}", method.name()),
+            Err(p) => anyhow::bail!("fig7 {} run panicked: {p}", method.name()),
         };
-        let mut trainer = Trainer::new(tcfg);
-        trainer.fit(&mut model, tab, &data)?;
-
-        let hist = &trainer.history;
-        let final_err = 100.0 * (1.0 - trainer.final_acc());
+        let final_acc = hist.last().map(|r| r.test_acc).unwrap_or(0.0);
+        let final_err = 100.0 * (1.0 - final_acc);
         let best_err =
             100.0 * (1.0 - hist.iter().map(|r| r.test_acc).fold(0.0f64, f64::max));
         let total = hist.last().map(|r| r.wall_s).unwrap_or(0.0);

@@ -64,12 +64,21 @@ fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Hard cap on `NODAL_WORKERS` overrides (OS-thread pools stop helping far
+/// below this; mostly a guard against fat-fingered values).
+const MAX_WORKERS: usize = 256;
+
 /// Number of worker threads to default to (respects `NODAL_WORKERS`).
+///
+/// The override is parsed **and clamped at the source**: `NODAL_WORKERS=0`
+/// used to flow a zero-thread pool to every caller and only survived because
+/// `run_parallel` re-clamped it — callers sizing their own pools from this
+/// value would deadlock. Unparseable values fall back to the hardware count.
 pub fn default_workers() -> usize {
-    if let Some(n) = std::env::var("NODAL_WORKERS").ok().and_then(|v| v.parse().ok()) {
-        return n;
+    match std::env::var("NODAL_WORKERS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.clamp(1, MAX_WORKERS),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
 }
 
 #[cfg(test)]
@@ -127,5 +136,23 @@ mod tests {
     fn empty_jobs() {
         let out: Vec<Result<usize, String>> = run_parallel(4, Vec::<fn() -> usize>::new());
         assert!(out.is_empty());
+    }
+
+    /// All `NODAL_WORKERS` cases live in ONE test: the process environment is
+    /// shared across the parallel test harness, so splitting these up would
+    /// race on the variable.
+    #[test]
+    fn default_workers_env_parse_and_clamp() {
+        std::env::set_var("NODAL_WORKERS", "0");
+        assert_eq!(default_workers(), 1, "zero must clamp to one worker");
+        std::env::set_var("NODAL_WORKERS", "3");
+        assert_eq!(default_workers(), 3);
+        std::env::set_var("NODAL_WORKERS", "1000000");
+        assert_eq!(default_workers(), MAX_WORKERS);
+        std::env::set_var("NODAL_WORKERS", "not-a-number");
+        let d = default_workers();
+        assert!((1..=8).contains(&d), "unparseable falls back to hardware: {d}");
+        std::env::remove_var("NODAL_WORKERS");
+        assert!(default_workers() >= 1);
     }
 }

@@ -140,6 +140,11 @@ pub fn save_series(id: &str, headers: &[&str], cols: &[Vec<f64>]) -> Result<Path
 mod tests {
     use super::*;
 
+    /// `NODAL_RESULTS` is process-global and the test harness runs tests on
+    /// parallel threads — every test that touches it must hold this lock or
+    /// the tests race each other's set/remove.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn ascii_rendering_aligned() {
         let mut t = Table::new("t", "demo", &["name", "value"]);
@@ -167,6 +172,7 @@ mod tests {
 
     #[test]
     fn emit_writes_files() {
+        let _guard = ENV_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!("nodal_res_{}", std::process::id()));
         std::env::set_var("NODAL_RESULTS", &dir);
         let mut t = Table::new("unit_test_table", "x", &["a,b", "c"]);
@@ -183,6 +189,7 @@ mod tests {
 
     #[test]
     fn series_csv() {
+        let _guard = ENV_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!("nodal_res2_{}", std::process::id()));
         std::env::set_var("NODAL_RESULTS", &dir);
         let p = save_series("unit_series", &["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();

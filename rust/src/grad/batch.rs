@@ -1,0 +1,168 @@
+//! Batched ACA backward pass: replay each sample's saved `(t_i, h_i, z_i)`
+//! checkpoints straight out of the [`BatchTrajectory`]'s shared arena and
+//! run the exact discrete step adjoint — per-sample results are
+//! bit-identical to [`aca_backward`](super::aca_backward) over the
+//! equivalent per-sample [`Trajectory`](crate::ode::Trajectory) (asserted by
+//! `rust/tests/proptests.rs`).
+//!
+//! The naive and continuous-adjoint methods keep their per-sample
+//! formulations (the naive h-chain and the reverse augmented solve have no
+//! shared structure across samples); [`backward_batch`] routes them through
+//! [`BatchTrajectory::to_trajectory`].
+
+use super::step_vjp::step_vjp;
+use super::{CostMeter, GradResult, Method};
+use crate::ode::batch::BatchTrajectory;
+use crate::ode::func::OdeFunc;
+use crate::ode::integrate::IntegrateOpts;
+use crate::ode::tableau::Tableau;
+
+/// Run the ACA backward pass for every sample of a batched trajectory.
+///
+/// * `lam_t1` — `dL/dz(T)` for all samples, row-major `[B × D]`.
+///
+/// Returns one [`GradResult`] per sample, with per-sample exact cost meters
+/// (forward NFE, checkpoint bytes, rejected-trial counts).
+pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    traj: &BatchTrajectory,
+    lam_t1: &[f32],
+) -> Vec<GradResult> {
+    let d = f.dim();
+    assert_eq!(d, traj.dim, "dynamics dim != trajectory dim");
+    assert_eq!(lam_t1.len(), traj.batch * d, "lam length != B × D");
+
+    (0..traj.batch)
+        .map(|i| {
+            let tr = &traj.tracks[i];
+            let n = tr.steps();
+            let mut lam = lam_t1[i * d..(i + 1) * d].to_vec();
+            let mut dtheta = vec![0.0f32; f.n_params()];
+            let mut meter = CostMeter {
+                nfe_forward: tr.nfe,
+                checkpoint_bytes: traj.checkpoint_bytes(i),
+                n_steps: n,
+                n_rejected: tr.n_rejected,
+                ..Default::default()
+            };
+            // Reverse sweep over the sample's saved discretization points
+            // (paper Algo 2), reading states from the shared arena.
+            for k in (0..n).rev() {
+                let out =
+                    step_vjp(f, tab, tr.ts[k], tr.hs[k], traj.z(i, k), &lam, &mut dtheta, false);
+                lam = out.dz;
+                meter.nfe_backward += out.nfe;
+                meter.vjp_calls += out.nvjp;
+                meter.graph_depth += out.nvjp;
+            }
+            GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
+        })
+        .collect()
+}
+
+/// Batched counterpart of [`super::backward`]: run the backward pass of
+/// `method` for every sample of a batched trajectory.
+pub fn backward_batch<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    traj: &BatchTrajectory,
+    lam_t1: &[f32],
+    method: Method,
+    opts: &IntegrateOpts,
+) -> anyhow::Result<Vec<GradResult>> {
+    let d = f.dim();
+    match method {
+        Method::Aca => Ok(aca_backward_batch(f, tab, traj, lam_t1)),
+        Method::Naive => Ok((0..traj.batch)
+            .map(|i| {
+                super::naive_backward(
+                    f,
+                    tab,
+                    &traj.to_trajectory(i),
+                    &lam_t1[i * d..(i + 1) * d],
+                    opts,
+                )
+            })
+            .collect()),
+        Method::Adjoint => (0..traj.batch)
+            .map(|i| {
+                super::adjoint_backward(
+                    f,
+                    tab,
+                    &traj.to_trajectory(i),
+                    &lam_t1[i * d..(i + 1) * d],
+                    &super::AdjointOpts::from_integrate(opts),
+                )
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::aca_backward;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::{integrate, integrate_batch, tableau, IntegrateOpts};
+
+    #[test]
+    fn matches_per_sample_aca_bitwise() {
+        let f = VanDerPol::new(0.4);
+        let z0 = [2.0f32, 0.0, -1.2, 0.7, 0.4, 1.1];
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let tab = tableau::dopri5();
+        let bt = integrate_batch(&f, 0.0, 2.5, &z0, tab, &opts).unwrap();
+        let lam = [1.0f32, -0.5, 0.3, 0.9, -1.0, 0.2];
+        let gb = aca_backward_batch(&f, tab, &bt, &lam);
+        for i in 0..3 {
+            let traj = integrate(&f, 0.0, 2.5, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+            let ga = aca_backward(&f, tab, &traj, &lam[i * 2..(i + 1) * 2]);
+            assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "sample {i}");
+            assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward);
+            assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls);
+            assert_eq!(gb[i].meter.checkpoint_bytes, ga.meter.checkpoint_bytes);
+        }
+    }
+
+    /// The paper's toy problem per sample: dL/dz0 = 2 z0 exp(2kT).
+    #[test]
+    fn toy_gradient_accuracy_per_sample() {
+        let k = -0.5f32;
+        let f = Linear::new(k, 1);
+        let z0 = [1.0f32, 2.0, -1.5];
+        let t_end = 3.0;
+        let opts = IntegrateOpts::with_tol(1e-7, 1e-9);
+        let bt = integrate_batch(&f, 0.0, t_end, &z0, tableau::dopri5(), &opts).unwrap();
+        let lam: Vec<f32> = (0..3).map(|i| 2.0 * bt.last(i)[0]).collect();
+        let g = aca_backward_batch(&f, tableau::dopri5(), &bt, &lam);
+        for i in 0..3 {
+            let exact = f.exact_dl_dz0(z0[i], t_end);
+            let rel = ((g[i].dl_dz0[0] as f64 - exact) / exact).abs();
+            assert!(rel < 1e-4, "sample {i}: {} vs {exact} (rel {rel})", g[i].dl_dz0[0]);
+        }
+    }
+
+    #[test]
+    fn backward_batch_dispatches_all_methods() {
+        let f = Linear::new(-0.3, 2);
+        let z0 = [1.0f32, -1.0, 0.5, 2.0];
+        let opts = IntegrateOpts { record_trials: true, ..IntegrateOpts::with_tol(1e-6, 1e-8) };
+        let tab = tableau::dopri5();
+        let bt = integrate_batch(&f, 0.0, 2.0, &z0, tab, &opts).unwrap();
+        let lam = [1.0f32, 0.0, 0.0, 1.0];
+        for method in Method::all() {
+            let gs = backward_batch(&f, tab, &bt, &lam, method, &opts).unwrap();
+            assert_eq!(gs.len(), 2, "{}", method.name());
+            let exact = (-0.3f64 * 2.0).exp(); // dz(T)/dz0 = e^{kT} per component
+            for (i, g) in gs.iter().enumerate() {
+                let nz: f64 = g.dl_dz0.iter().map(|v| *v as f64).sum();
+                assert!(
+                    (nz - exact).abs() < 0.05 * exact,
+                    "{} sample {i}: {nz} vs {exact}",
+                    method.name()
+                );
+            }
+        }
+    }
+}

@@ -20,11 +20,13 @@
 
 pub mod aca;
 pub mod adjoint;
+pub mod batch;
 pub mod naive;
 pub mod step_vjp;
 
 pub use aca::aca_backward;
 pub use adjoint::{adjoint_backward, AdjointOpts};
+pub use batch::{aca_backward_batch, backward_batch};
 pub use naive::naive_backward;
 pub use step_vjp::{err_norm_vjp, step_vjp, StepVjp};
 

@@ -10,7 +10,13 @@
 //!   structure and the three gradient-estimation strategies — **naive**,
 //!   **adjoint**, **ACA** ([`grad`]) — plus training ([`train`]), data
 //!   generation ([`data`]), metrics ([`metrics`]) and the experiment
-//!   coordinator ([`coordinator`]).
+//!   coordinator ([`coordinator`]). Independent solves batch through the
+//!   **batched engine** ([`ode::integrate_batch`] +
+//!   [`grad::aca_backward_batch`]): flat `[B × D]` state buffers, a shared
+//!   checkpoint arena, per-sample adaptive step control with per-sample
+//!   exact `nfe`/`avg_m`/memory meters, and one
+//!   [`ode::OdeFunc::eval_batch`] stage sweep over all live samples — the
+//!   hook a batched backend (single HLO dispatch, SIMD) overrides.
 //! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
 //!   encoders/decoders/loss heads, AOT-lowered to HLO text.
 //! * **L1 (Pallas, `python/compile/kernels/`)** — fused hot-path kernels
@@ -28,6 +34,25 @@
 //! let traj = integrate(&f, 0.0, 25.0, &[2.0, 0.0], tableau::dopri5(),
 //!                      &IntegrateOpts::default()).unwrap();
 //! println!("steps: {} nfe: {}", traj.len(), traj.nfe);
+//! ```
+//!
+//! ## Batched solving
+//!
+//! `B` independent solves of the same dynamics advance together; per-sample
+//! results are bit-identical to `B` scalar [`ode::integrate`] calls:
+//!
+//! ```no_run
+//! use nodal::grad::aca_backward_batch;
+//! use nodal::ode::{analytic::VanDerPol, integrate_batch, tableau, IntegrateOpts};
+//!
+//! let f = VanDerPol::new(0.15);
+//! let z0 = [2.0f32, 0.0, -1.5, 0.5]; // B = 2 samples × D = 2, row-major
+//! let bt = integrate_batch(&f, 0.0, 5.0, &z0, tableau::dopri5(),
+//!                          &IntegrateOpts::default()).unwrap();
+//! let lam = [1.0f32, 0.0, 1.0, 0.0]; // dL/dz(T) per sample
+//! let grads = aca_backward_batch(&f, tableau::dopri5(), &bt, &lam);
+//! println!("sample 0: steps {} nfe {} dL/dz0 {:?}",
+//!          bt.steps(0), bt.tracks[0].nfe, grads[0].dl_dz0);
 //! ```
 
 pub mod bench;

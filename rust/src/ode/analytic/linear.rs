@@ -55,6 +55,15 @@ impl OdeFunc for Linear {
         }
     }
 
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        // Time-invariant and element-wise: the whole batch is one flat axpy
+        // (bit-identical to the per-sample path — same op per element).
+        debug_assert_eq!(zs.len(), ts.len() * self.dim);
+        for (d, &zi) in dzs.iter_mut().zip(zs) {
+            *d = self.k[0] * zi;
+        }
+    }
+
     fn vjp(&self, _t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         // ∂f/∂z = k I ; ∂f/∂k = z.
         for (o, &wi) in wjz.iter_mut().zip(w) {

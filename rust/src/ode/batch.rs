@@ -1,0 +1,518 @@
+//! Batched adaptive integration: advance `B` independent solves of the same
+//! dynamics in lock-step rounds, with **per-sample** step-size control.
+//!
+//! Layout: current states, stage derivatives and stage inputs live in flat
+//! row-major `[B × D]` buffers; accepted checkpoints are appended to one
+//! shared arena ([`BatchTrajectory::zbuf`]-internal) instead of one `Vec`
+//! allocation per accepted step per sample. Each sample keeps its own
+//! `(ts, hs, errs, trials)` track plus exact `nfe` / `n_rejected`
+//! bookkeeping, so the per-sample cost meters of paper Table 1 are identical
+//! to what `B` separate [`integrate`](crate::ode::integrate) calls report.
+//!
+//! Equivalence guarantee: every per-sample arithmetic operation (stage
+//! combination, embedded error norm, controller decision, FSAL/stage-0
+//! reuse) mirrors the scalar loop exactly, and the default
+//! [`OdeFunc::eval_batch`] evaluates samples one by one — so per-sample
+//! results are **bit-identical** to the scalar path on both the fixed-step
+//! and the adaptive path (asserted by `rust/tests/proptests.rs`). What the
+//! batch engine buys today is amortized allocation and a single stage sweep
+//! over all live samples; what it enables next is an `eval_batch` override
+//! that dispatches one batched HLO call instead of `B` host round trips.
+
+use super::controller::Controller;
+use super::func::OdeFunc;
+use super::integrate::{IntegrateOpts, Trajectory, TrialRecord};
+use super::tableau::Tableau;
+use crate::tensor;
+use anyhow::{bail, ensure, Result};
+
+/// Per-sample record of one batched integration: the accepted
+/// discretization points (`ts`), the step sizes exactly as stepped (`hs`),
+/// per-step error norms, optional rejected trials, and cost bookkeeping.
+/// Checkpoint states live in the shared arena of the owning
+/// [`BatchTrajectory`]; `slots[k]` names the arena slot of checkpoint `k`.
+#[derive(Debug, Clone, Default)]
+pub struct SampleTrack {
+    /// Accepted times `t_0 .. t_{N_t}` (monotone, endpoints exact).
+    pub ts: Vec<f64>,
+    /// Accepted step sizes, exactly as used by the stepper.
+    pub hs: Vec<f64>,
+    /// Error norm of each accepted step.
+    pub errs: Vec<f64>,
+    /// Rejected trials per accepted step (when recorded).
+    pub trials: Vec<Vec<TrialRecord>>,
+    /// Arena slot of each checkpoint (len == `ts.len()`).
+    pub slots: Vec<usize>,
+    /// `f` evaluations spent on this sample.
+    pub nfe: usize,
+    /// Rejected step attempts for this sample.
+    pub n_rejected: usize,
+}
+
+impl SampleTrack {
+    /// Number of accepted steps `N_t`.
+    pub fn steps(&self) -> usize {
+        self.ts.len().saturating_sub(1)
+    }
+
+    /// Average inner iterations `m` (trials per accepted step, counting the
+    /// accepted attempt) — per-sample exact.
+    pub fn avg_m(&self) -> f64 {
+        if self.steps() == 0 {
+            return 0.0;
+        }
+        (self.steps() + self.n_rejected) as f64 / self.steps() as f64
+    }
+}
+
+/// Record of one batched forward integration over `B` samples.
+#[derive(Debug, Clone, Default)]
+pub struct BatchTrajectory {
+    /// Number of samples `B`.
+    pub batch: usize,
+    /// Per-sample state dimension `D`.
+    pub dim: usize,
+    /// Shared checkpoint arena: slot `s` is `zbuf[s*dim .. (s+1)*dim]`.
+    zbuf: Vec<f32>,
+    /// Per-sample checkpoint tracks.
+    pub tracks: Vec<SampleTrack>,
+}
+
+impl BatchTrajectory {
+    /// Checkpoint `k` of sample `i`.
+    pub fn z(&self, i: usize, k: usize) -> &[f32] {
+        let s = self.tracks[i].slots[k];
+        &self.zbuf[s * self.dim..(s + 1) * self.dim]
+    }
+
+    /// Final state `z(T)` of sample `i`.
+    pub fn last(&self, i: usize) -> &[f32] {
+        self.z(i, self.tracks[i].slots.len() - 1)
+    }
+
+    /// Accepted steps `N_t` of sample `i`.
+    pub fn steps(&self, i: usize) -> usize {
+        self.tracks[i].steps()
+    }
+
+    /// Bytes held by sample `i`'s checkpoint store — full accounting (state
+    /// checkpoints, times, step sizes, error norms, and recorded trials),
+    /// matching [`Trajectory::checkpoint_bytes`].
+    pub fn checkpoint_bytes(&self, i: usize) -> usize {
+        use std::mem::size_of;
+        let tr = &self.tracks[i];
+        tr.slots.len() * self.dim * size_of::<f32>()
+            + tr.ts.len() * size_of::<f64>()
+            + tr.hs.len() * size_of::<f64>()
+            + tr.errs.len() * size_of::<f64>()
+            + tr.trials.iter().map(|t| t.len() * size_of::<TrialRecord>()).sum::<usize>()
+    }
+
+    /// Total checkpoint bytes across the batch.
+    pub fn checkpoint_bytes_total(&self) -> usize {
+        (0..self.batch).map(|i| self.checkpoint_bytes(i)).sum()
+    }
+
+    /// Total `f` evaluations across the batch.
+    pub fn nfe_total(&self) -> usize {
+        self.tracks.iter().map(|t| t.nfe).sum()
+    }
+
+    /// Materialize sample `i` as a standalone [`Trajectory`] (copies the
+    /// checkpoints out of the arena) — the interop path for per-sample
+    /// consumers such as the naive / continuous-adjoint backward passes.
+    pub fn to_trajectory(&self, i: usize) -> Trajectory {
+        let tr = &self.tracks[i];
+        Trajectory {
+            ts: tr.ts.clone(),
+            zs: (0..tr.slots.len()).map(|k| self.z(i, k).to_vec()).collect(),
+            hs: tr.hs.clone(),
+            errs: tr.errs.clone(),
+            trials: tr.trials.clone(),
+            nfe: tr.nfe,
+            n_rejected: tr.n_rejected,
+        }
+    }
+}
+
+/// Integrate `B` independent copies of `dz/dt = f(t, z)` from `(t0, z0_i)`
+/// to `t1` (paper Algo 1, vectorized over samples).
+///
+/// `z0` is row-major `[B × D]` with `D = f.dim()`; `B` is inferred. Each
+/// sample runs the exact scalar control flow (per-sample `h`, retries,
+/// FSAL/stage-0 reuse, trial recording); stage derivatives for all samples
+/// still in flight are evaluated with one [`OdeFunc::eval_batch`] call per
+/// stage per round.
+pub fn integrate_batch<F: OdeFunc + ?Sized>(
+    f: &F,
+    t0: f64,
+    t1: f64,
+    z0: &[f32],
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+) -> Result<BatchTrajectory> {
+    let dim = f.dim();
+    ensure!(dim > 0, "dynamics must have a positive dimension");
+    ensure!(
+        !z0.is_empty() && z0.len() % dim == 0,
+        "batch state length {} is not a positive multiple of dim {}",
+        z0.len(),
+        dim
+    );
+    let b = z0.len() / dim;
+    let s = tab.stages;
+
+    let mut out = BatchTrajectory {
+        batch: b,
+        dim,
+        zbuf: z0.to_vec(), // slots 0..b are the initial checkpoints
+        tracks: (0..b)
+            .map(|i| SampleTrack { ts: vec![t0], slots: vec![i], ..Default::default() })
+            .collect(),
+    };
+    if t0 == t1 {
+        return Ok(out);
+    }
+
+    let dir = (t1 - t0).signum();
+    let span = (t1 - t0).abs();
+    let fixed = opts.fixed_h.is_some() || !tab.adaptive();
+    let ctrl = opts.controller.unwrap_or_else(|| Controller::for_tableau(tab));
+    let eps_t = 1e-12 * span.max(1.0);
+
+    // Per-sample mutable state (indexed by sample id).
+    let mut t = vec![t0; b];
+    let mut z = z0.to_vec();
+    let mut z_next = vec![0.0f32; b * dim];
+    let mut k0 = vec![0.0f32; b * dim];
+    let mut k0_valid = vec![false; b];
+    let mut h = vec![0.0f64; b];
+    let mut attempts = vec![0usize; b];
+    let mut trial_buf: Vec<Vec<TrialRecord>> = vec![Vec::new(); b];
+
+    for i in 0..b {
+        h[i] = if fixed {
+            opts.fixed_h.map(|h| h.abs()).unwrap_or(span / 100.0) * dir
+        } else {
+            match opts.h0 {
+                Some(h0) => h0.abs().min(span) * dir,
+                None => {
+                    let zi = &z[i * dim..(i + 1) * dim];
+                    let hi = ctrl.initial_step(f, t0, zi, dir, opts.atol, opts.rtol);
+                    out.tracks[i].nfe += 1;
+                    hi.abs().min(span) * dir
+                }
+            }
+        };
+        assert!(h[i].abs() > 0.0, "initial step size must be nonzero");
+    }
+
+    // Round scratch, packed in active order (slot `a` of a round buffer is
+    // the `a`-th live sample). No allocation inside the loop. A span below
+    // eps_t never enters the loop — same as the scalar path.
+    let mut active: Vec<usize> = if span > eps_t { (0..b).collect() } else { Vec::new() };
+    let mut h_try = vec![0.0f64; b];
+    let mut ks: Vec<Vec<f32>> = (0..s).map(|_| vec![0.0f32; b * dim]).collect();
+    let mut us = vec![0.0f32; b * dim];
+    let mut dz_scratch = vec![0.0f32; b * dim];
+    let mut ts_stage = vec![0.0f64; b];
+    let mut ev = vec![0.0f32; dim];
+    let mut need_k0: Vec<usize> = Vec::with_capacity(b);
+
+    while !active.is_empty() {
+        let na = active.len();
+
+        // ---- step setup: per-sample trial size, clamped onto t1 ----
+        for (a, &i) in active.iter().enumerate() {
+            attempts[i] += 1;
+            if attempts[i] > opts.max_steps {
+                bail!(
+                    "sample {i}: max_steps ({}) exceeded at t={} (h={}); solver may be stiff \
+                     at these tolerances",
+                    opts.max_steps,
+                    t[i],
+                    h[i]
+                );
+            }
+            let ht = if (t[i] + h[i] - t1) * dir > 0.0 { t1 - t[i] } else { h[i] };
+            if ht.abs() < 1e-14 * span.max(1.0) {
+                bail!("sample {i}: step size underflow at t={} (h={ht})", t[i]);
+            }
+            h_try[a] = ht;
+        }
+
+        // ---- stage 0: k_0 = f(t, z); reused across retries and via FSAL ----
+        need_k0.clear();
+        for (a, &i) in active.iter().enumerate() {
+            if k0_valid[i] {
+                ks[0][a * dim..(a + 1) * dim].copy_from_slice(&k0[i * dim..(i + 1) * dim]);
+            } else {
+                need_k0.push(a);
+            }
+        }
+        if !need_k0.is_empty() {
+            for (p, &a) in need_k0.iter().enumerate() {
+                let i = active[a];
+                us[p * dim..(p + 1) * dim].copy_from_slice(&z[i * dim..(i + 1) * dim]);
+                ts_stage[p] = t[i];
+            }
+            let np = need_k0.len();
+            f.eval_batch(&ts_stage[..np], &us[..np * dim], &mut dz_scratch[..np * dim]);
+            for (p, &a) in need_k0.iter().enumerate() {
+                ks[0][a * dim..(a + 1) * dim]
+                    .copy_from_slice(&dz_scratch[p * dim..(p + 1) * dim]);
+                out.tracks[active[a]].nfe += 1;
+            }
+        }
+
+        // ---- stages 1..s: one batched eval per stage over live samples ----
+        for j in 1..s {
+            for (a, &i) in active.iter().enumerate() {
+                let u = &mut us[a * dim..(a + 1) * dim];
+                u.copy_from_slice(&z[i * dim..(i + 1) * dim]);
+                for (l, aa) in tab.a[j].iter().enumerate() {
+                    if *aa != 0.0 {
+                        tensor::axpy((h_try[a] * *aa) as f32, &ks[l][a * dim..(a + 1) * dim], u);
+                    }
+                }
+                ts_stage[a] = t[i] + tab.c[j] * h_try[a];
+            }
+            f.eval_batch(&ts_stage[..na], &us[..na * dim], &mut ks[j][..na * dim]);
+            for &i in &active {
+                out.tracks[i].nfe += 1;
+            }
+        }
+
+        // ---- per-sample solution, error estimate, accept/reject ----
+        let mut next_active: Vec<usize> = Vec::with_capacity(na);
+        for (a, &i) in active.iter().enumerate() {
+            let (ar, hta) = (a * dim..(a + 1) * dim, h_try[a]);
+            // Propagating solution: z_next = z + h Σ b_j k_j (same axpy
+            // sequence as `tensor::combine` / `rk_step`).
+            {
+                let zn = &mut z_next[i * dim..(i + 1) * dim];
+                zn.copy_from_slice(&z[i * dim..(i + 1) * dim]);
+                for (c, ksj) in tab.b.iter().zip(&ks) {
+                    if *c != 0.0 {
+                        tensor::axpy((hta * *c) as f32, &ksj[ar.clone()], zn);
+                    }
+                }
+            }
+            // Embedded error estimate (scale from the step's start state,
+            // matching `rk_step`).
+            let en = if let Some(e) = tab.b_err {
+                ev.fill(0.0);
+                for (c, ksj) in e.iter().zip(&ks) {
+                    if *c != 0.0 {
+                        tensor::axpy((hta * *c) as f32, &ksj[ar.clone()], &mut ev);
+                    }
+                }
+                let zi = &z[i * dim..(i + 1) * dim];
+                tensor::wrms_norm(&ev, zi, zi, opts.atol, opts.rtol)
+            } else {
+                0.0
+            };
+
+            if !tensor::all_finite(&z_next[i * dim..(i + 1) * dim]) {
+                if fixed {
+                    bail!("sample {i}: non-finite state in fixed-step integration at t={}", t[i]);
+                }
+                out.tracks[i].n_rejected += 1;
+                if opts.record_trials {
+                    trial_buf[i].push(TrialRecord { h: hta, err: f64::INFINITY });
+                }
+                h[i] = hta * 0.5;
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][ar.clone()]);
+                k0_valid[i] = true;
+                next_active.push(i);
+                continue;
+            }
+
+            let accepted = fixed || en <= 1.0;
+            if !accepted {
+                let dec = ctrl.decide(hta, en, 0.0);
+                out.tracks[i].n_rejected += 1;
+                if opts.record_trials {
+                    trial_buf[i].push(TrialRecord { h: hta, err: en });
+                }
+                h[i] = dec.h_next;
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][ar.clone()]);
+                k0_valid[i] = true;
+                next_active.push(i);
+                continue;
+            }
+
+            // Accept: advance state, record the checkpoint into the arena.
+            let t_new = if hta == t1 - t[i] { t1 } else { t[i] + hta };
+            z[i * dim..(i + 1) * dim].copy_from_slice(&z_next[i * dim..(i + 1) * dim]);
+            t[i] = t_new;
+            let slot = out.zbuf.len() / dim;
+            out.zbuf.extend_from_slice(&z[i * dim..(i + 1) * dim]);
+            let track = &mut out.tracks[i];
+            track.ts.push(t_new);
+            track.slots.push(slot);
+            track.hs.push(hta);
+            track.errs.push(en);
+            if opts.record_trials {
+                track.trials.push(std::mem::take(&mut trial_buf[i]));
+            }
+            if !fixed {
+                h[i] = ctrl.decide(hta, en, 0.0).h_next;
+            }
+            if tab.fsal {
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[s - 1][ar]);
+                k0_valid[i] = true;
+            } else {
+                k0_valid[i] = false;
+            }
+            if (t1 - t[i]) * dir > eps_t {
+                next_active.push(i);
+            }
+        }
+        active = next_active;
+    }
+
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::func::CountingFunc;
+    use crate::ode::{integrate, tableau};
+
+    fn scalar_ref(
+        f: &impl OdeFunc,
+        t1: f64,
+        z0: &[f32],
+        dim: usize,
+        tab: &Tableau,
+        opts: &IntegrateOpts,
+    ) -> Vec<Trajectory> {
+        (0..z0.len() / dim)
+            .map(|i| integrate(f, 0.0, t1, &z0[i * dim..(i + 1) * dim], tab, opts).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn b1_fixed_step_bit_exact() {
+        let f = Linear::new(-1.0, 4);
+        let z0 = [1.0f32, 2.0, -1.0, 0.5];
+        let opts = IntegrateOpts::fixed(0.1);
+        let tab = tableau::rk4();
+        let bt = integrate_batch(&f, 0.0, 1.0, &z0, tab, &opts).unwrap();
+        let traj = integrate(&f, 0.0, 1.0, &z0, tab, &opts).unwrap();
+        assert_eq!(bt.batch, 1);
+        assert_eq!(bt.steps(0), traj.len());
+        assert_eq!(bt.tracks[0].ts, traj.ts);
+        assert_eq!(bt.tracks[0].hs, traj.hs);
+        for k in 0..=traj.len() {
+            assert_eq!(bt.z(0, k), &traj.zs[k][..], "checkpoint {k}");
+        }
+        assert_eq!(bt.tracks[0].nfe, traj.nfe);
+        assert_eq!(bt.checkpoint_bytes(0), traj.checkpoint_bytes());
+    }
+
+    #[test]
+    fn adaptive_batch_matches_scalar_bitwise() {
+        let f = VanDerPol::new(0.6);
+        let z0 = [2.0f32, 0.0, -1.0, 0.5, 0.3, -0.8];
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let tab = tableau::dopri5();
+        let bt = integrate_batch(&f, 0.0, 3.0, &z0, tab, &opts).unwrap();
+        let refs = scalar_ref(&f, 3.0, &z0, 2, tab, &opts);
+        for (i, traj) in refs.iter().enumerate() {
+            assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
+            assert_eq!(bt.tracks[i].hs, traj.hs, "sample {i} steps");
+            assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+            assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
+            assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected);
+        }
+    }
+
+    #[test]
+    fn trial_recording_per_sample() {
+        let f = VanDerPol::new(5.0);
+        let z0 = [2.0f32, 0.0, 1.0, -1.0];
+        let mut opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        opts.record_trials = true;
+        opts.h0 = Some(1.0);
+        let bt = integrate_batch(&f, 0.0, 2.0, &z0, tableau::dopri5(), &opts).unwrap();
+        for i in 0..2 {
+            let tr = &bt.tracks[i];
+            assert_eq!(tr.trials.len(), tr.steps());
+            let total: usize = tr.trials.iter().map(|t| t.len()).sum();
+            assert_eq!(total, tr.n_rejected, "sample {i}");
+            assert!(tr.n_rejected > 0, "h0=1 must reject at least once");
+        }
+    }
+
+    #[test]
+    fn zero_span_returns_initial_states() {
+        let f = Linear::new(1.0, 2);
+        let z0 = [3.0f32, 4.0, -1.0, 2.0];
+        let bt =
+            integrate_batch(&f, 1.0, 1.0, &z0, tableau::dopri5(), &IntegrateOpts::default())
+                .unwrap();
+        assert_eq!(bt.steps(0), 0);
+        assert_eq!(bt.last(0), &[3.0, 4.0]);
+        assert_eq!(bt.last(1), &[-1.0, 2.0]);
+    }
+
+    #[test]
+    fn samples_can_finish_at_different_rounds() {
+        // Different initial conditions => different step counts; the batch
+        // must keep advancing the slower samples after the fast ones finish.
+        let f = VanDerPol::new(1.0);
+        let z0 = [0.01f32, 0.0, 2.0, 2.0];
+        let opts = IntegrateOpts::with_tol(1e-7, 1e-9);
+        let bt = integrate_batch(&f, 0.0, 5.0, &z0, tableau::rk23(), &opts).unwrap();
+        assert_ne!(bt.steps(0), bt.steps(1), "workloads should differ");
+        for i in 0..2 {
+            assert_eq!(*bt.tracks[i].ts.last().unwrap(), 5.0, "sample {i} endpoint exact");
+        }
+    }
+
+    #[test]
+    fn nfe_matches_scalar_accounting() {
+        let f = CountingFunc::new(Linear::new(-1.0, 1));
+        let z0 = [1.0f32, 2.0, 3.0];
+        let traj =
+            integrate_batch(&f, 0.0, 1.0, &z0, tableau::rk4(), &IntegrateOpts::fixed(0.1))
+                .unwrap();
+        // RK4 = 4 evals × 10 steps × 3 samples.
+        assert_eq!(f.evals(), 120);
+        assert_eq!(traj.nfe_total(), f.evals());
+        for i in 0..3 {
+            assert_eq!(traj.tracks[i].nfe, 40);
+        }
+    }
+
+    #[test]
+    fn max_steps_names_the_offending_sample() {
+        let f = Linear::new(1.0, 1);
+        let mut opts = IntegrateOpts::with_tol(1e-12, 1e-14);
+        opts.max_steps = 3;
+        let err = integrate_batch(&f, 0.0, 100.0, &[1.0, 1.0], tableau::heun_euler(), &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("max_steps"), "{err}");
+    }
+
+    #[test]
+    fn to_trajectory_round_trips() {
+        let f = VanDerPol::new(0.3);
+        let z0 = [1.5f32, -0.5, 0.5, 1.0];
+        let opts = IntegrateOpts::with_tol(1e-5, 1e-7);
+        let bt = integrate_batch(&f, 0.0, 2.0, &z0, tableau::dopri5(), &opts).unwrap();
+        for i in 0..2 {
+            let tr = bt.to_trajectory(i);
+            let direct = integrate(&f, 0.0, 2.0, &z0[i * 2..(i + 1) * 2], tableau::dopri5(), &opts)
+                .unwrap();
+            assert_eq!(tr.ts, direct.ts);
+            assert_eq!(tr.zs, direct.zs);
+            assert_eq!(tr.hs, direct.hs);
+            assert_eq!(tr.checkpoint_bytes(), direct.checkpoint_bytes());
+        }
+    }
+}

@@ -23,6 +23,24 @@ pub trait OdeFunc {
     /// `dz = f(t, z)`.
     fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]);
 
+    /// Evaluate the dynamics for `ts.len()` independent samples packed
+    /// row-major in `zs` (`n × dim`), each at its own time `ts[i]`, writing
+    /// the derivatives into `dzs` with the same layout.
+    ///
+    /// Default: one `eval` per sample, bit-identical to the scalar path —
+    /// which is what [`crate::ode::integrate_batch`]'s equivalence guarantee
+    /// relies on. Backends that can amortize dispatch overhead (a single
+    /// batched HLO call through the PJRT engine, SIMD over the batch axis)
+    /// override this.
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        let d = self.dim();
+        debug_assert_eq!(zs.len(), ts.len() * d);
+        debug_assert_eq!(dzs.len(), ts.len() * d);
+        for (i, &t) in ts.iter().enumerate() {
+            self.eval(t, &zs[i * d..(i + 1) * d], &mut dzs[i * d..(i + 1) * d]);
+        }
+    }
+
     /// Vector-Jacobian product: given `w`, compute
     /// `wjz = wᵀ ∂f/∂z` and accumulate `wᵀ ∂f/∂θ` into `wjp` (`+=`).
     ///
@@ -76,6 +94,9 @@ impl<F: OdeFunc + ?Sized> OdeFunc for &F {
     }
     fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
         (**self).eval(t, z, dz)
+    }
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        (**self).eval_batch(ts, zs, dzs)
     }
     fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         (**self).vjp(t, z, w, wjz, wjp)
@@ -193,6 +214,22 @@ mod tests {
         NoJvp(f).jvp(0.0, &z, &v, &mut out);
         for i in 0..3 {
             assert!((out[i] - (-0.7 * v[i])).abs() < 1e-3, "{:?}", out);
+        }
+    }
+
+    #[test]
+    fn default_eval_batch_matches_scalar_and_counts() {
+        let f = CountingFunc::new(Linear::new(-0.5, 2));
+        let ts = [0.0f64, 1.0, 2.0];
+        let zs = [1.0f32, 2.0, -1.0, 0.5, 4.0, -4.0];
+        let mut dzs = [0.0f32; 6];
+        f.eval_batch(&ts, &zs, &mut dzs);
+        // The default loops `eval`, so the NFE meter sees every sample.
+        assert_eq!(f.evals(), 3);
+        let mut expect = [0.0f32; 2];
+        for i in 0..3 {
+            f.inner.eval(ts[i], &zs[i * 2..(i + 1) * 2], &mut expect);
+            assert_eq!(&dzs[i * 2..(i + 1) * 2], &expect, "sample {i}");
         }
     }
 

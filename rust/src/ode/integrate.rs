@@ -69,10 +69,16 @@ impl Trajectory {
 
     /// Bytes held by the checkpoint store (`O(N_f + N_t)` memory column of
     /// paper Table 1 — the `N_t` part; the transient `N_f` part lives in the
-    /// step scratch).
+    /// step scratch). Full accounting: state checkpoints, times, step sizes,
+    /// error norms, and any recorded trials — earlier versions omitted the
+    /// `hs`/`errs`/`trials` vectors and under-reported the Table 1 column.
     pub fn checkpoint_bytes(&self) -> usize {
-        self.zs.iter().map(|z| z.len() * std::mem::size_of::<f32>()).sum::<usize>()
-            + self.ts.len() * std::mem::size_of::<f64>()
+        use std::mem::size_of;
+        self.zs.iter().map(|z| z.len() * size_of::<f32>()).sum::<usize>()
+            + self.ts.len() * size_of::<f64>()
+            + self.hs.len() * size_of::<f64>()
+            + self.errs.len() * size_of::<f64>()
+            + self.trials.iter().map(|t| t.len() * size_of::<TrialRecord>()).sum::<usize>()
     }
 
     /// Average inner iterations `m` (trials per accepted step, counting the
@@ -451,7 +457,8 @@ mod tests {
             &IntegrateOpts::fixed(0.1),
         )
         .unwrap();
-        // 11 checkpoints x 4 f32 + 11 f64 timestamps.
-        assert_eq!(traj.checkpoint_bytes(), 11 * 4 * 4 + 11 * 8);
+        // 11 checkpoints x 4 f32 + 11 f64 timestamps + 10 f64 step sizes
+        // + 10 f64 error norms (no trials recorded on a fixed-step run).
+        assert_eq!(traj.checkpoint_bytes(), 11 * 4 * 4 + 11 * 8 + 10 * 8 + 10 * 8);
     }
 }

@@ -8,6 +8,7 @@
 //! model serves every solver in the paper's Table 2.
 
 pub mod analytic;
+pub mod batch;
 pub mod controller;
 pub mod dense;
 pub mod func;
@@ -15,6 +16,7 @@ pub mod integrate;
 pub mod step;
 pub mod tableau;
 
+pub use batch::{integrate_batch, BatchTrajectory, SampleTrack};
 pub use controller::{Controller, StepDecision};
 pub use func::OdeFunc;
 pub use integrate::{integrate, IntegrateOpts, Trajectory, TrialRecord};

@@ -11,7 +11,7 @@ use super::optim::{Optimizer, Sgd};
 use super::schedule::LrSchedule;
 use crate::data::Dataset;
 use crate::grad::{self, Method};
-use crate::ode::{integrate, IntegrateOpts, OdeFunc, Tableau};
+use crate::ode::{integrate, integrate_batch, IntegrateOpts, OdeFunc, Tableau};
 use crate::runtime::hlo_model::{HloModel, Target};
 use crate::util::{Pcg64, Timer};
 
@@ -153,7 +153,8 @@ impl Trainer {
                 nfe_b += meter.nfe_backward + meter.vjp_calls;
             }
 
-            let (test_loss, test_acc) = evaluate(model, tab, &self.opts(), self.cfg.t1, data, true)?;
+            let (test_loss, test_acc) =
+                evaluate(model, tab, &self.opts(), self.cfg.t1, data, true)?;
             let rec = TrainRecord {
                 epoch,
                 train_loss: loss_sum / n_batches.max(1) as f64,
@@ -186,6 +187,49 @@ impl Trainer {
     }
 }
 
+/// Evaluation solves at most this many HLO-batches per `integrate_batch`
+/// call: the batch engine keeps every live sample's checkpoints until the
+/// call returns, and evaluation only consumes the final states — chunking
+/// bounds the transient checkpoint memory at `CHUNK × (per-batch arena)`
+/// instead of growing linearly with the split size.
+const EVAL_CHUNK_BATCHES: usize = 16;
+
+/// Encode the full mini-batches of a split and solve them through
+/// [`integrate_batch`] — each HLO-batch state is one "sample" of the batch
+/// engine, so every batch keeps its own adaptive step control exactly as
+/// the old one-`integrate`-per-batch loop did, while the solver advances
+/// a chunk of them together (shared checkpoint arena, one stage sweep per
+/// round). Returns the final states `z(T)` alongside the gathered targets.
+fn solve_split_batched(
+    model: &HloModel,
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+    t1: f64,
+    data: &Dataset,
+    test_split: bool,
+) -> Result<(Vec<Vec<f32>>, Vec<Target>)> {
+    let b = model.manifest.batch;
+    let n = if test_split { data.test_len() } else { data.len() };
+    let n_batches = n / b;
+    let mut finals: Vec<Vec<f32>> = Vec::with_capacity(n_batches);
+    let mut ys = Vec::with_capacity(n_batches);
+    let mut start = 0;
+    while start < n_batches {
+        let end = (start + EVAL_CHUNK_BATCHES).min(n_batches);
+        let mut z0s = Vec::with_capacity((end - start) * model.dim());
+        for k in start..end {
+            let ids: Vec<usize> = (k * b..(k + 1) * b).collect();
+            let (x, y) = if test_split { data.gather_test(&ids) } else { data.gather(&ids) };
+            z0s.extend_from_slice(&model.encode(&x)?);
+            ys.push(y);
+        }
+        let btraj = integrate_batch(model, 0.0, t1, &z0s, tab, opts)?;
+        finals.extend((0..end - start).map(|k| btraj.last(k).to_vec()));
+        start = end;
+    }
+    Ok((finals, ys))
+}
+
 /// Evaluate accuracy/loss on the dataset's test split (or train split).
 pub fn evaluate(
     model: &HloModel,
@@ -198,18 +242,14 @@ pub fn evaluate(
     let b = model.manifest.batch;
     let n = if test_split { data.test_len() } else { data.len() };
     let classes = model.manifest.dim_out;
+    let (finals, ys) = solve_split_batched(model, tab, opts, t1, data, test_split)?;
     let mut loss_sum = 0.0;
     let mut correct = 0usize;
     let mut total = 0usize;
-    let mut idx = 0;
-    while idx + b <= n {
-        let ids: Vec<usize> = (idx..idx + b).collect();
-        let (x, y) = if test_split { data.gather_test(&ids) } else { data.gather(&ids) };
-        let z0 = model.encode(&x)?;
-        let traj = integrate(model, 0.0, t1, &z0, tab, opts)?;
-        let (loss, pred) = model.decode_loss(traj.last(), &y)?;
+    for (zt, y) in finals.iter().zip(&ys) {
+        let (loss, pred) = model.decode_loss(zt, y)?;
         loss_sum += loss;
-        if let Target::Classes(truth) = &y {
+        if let Target::Classes(truth) = y {
             let hats = HloModel::argmax_classes(&pred, classes);
             for (h, t) in hats.iter().zip(truth) {
                 if *h == *t as usize {
@@ -218,7 +258,6 @@ pub fn evaluate(
             }
             total += truth.len();
         }
-        idx += b;
     }
     let batches = (n / b).max(1) as f64;
     let acc = if total > 0 { correct as f64 / total as f64 } else { f64::NAN };
@@ -234,23 +273,17 @@ pub fn per_sample_correct(
     t1: f64,
     data: &Dataset,
 ) -> Result<Vec<bool>> {
-    let b = model.manifest.batch;
     let classes = model.manifest.dim_out;
+    let (finals, ys) = solve_split_batched(model, tab, opts, t1, data, true)?;
     let mut out = Vec::with_capacity(data.test_len());
-    let mut idx = 0;
-    while idx + b <= data.test_len() {
-        let ids: Vec<usize> = (idx..idx + b).collect();
-        let (x, y) = data.gather_test(&ids);
-        let z0 = model.encode(&x)?;
-        let traj = integrate(model, 0.0, t1, &z0, tab, opts)?;
-        let (_, pred) = model.decode_loss(traj.last(), &y)?;
-        if let Target::Classes(truth) = &y {
+    for (zt, y) in finals.iter().zip(&ys) {
+        let (_, pred) = model.decode_loss(zt, y)?;
+        if let Target::Classes(truth) = y {
             let hats = HloModel::argmax_classes(&pred, classes);
             for (h, t) in hats.iter().zip(truth) {
                 out.push(*h == *t as usize);
             }
         }
-        idx += b;
     }
     Ok(out)
 }

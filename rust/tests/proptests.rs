@@ -3,9 +3,11 @@
 //! proptest). Each property sweeps many random cases; failures print the
 //! case seed for replay.
 
-use nodal::grad::{aca_backward, naive_backward, step_vjp};
+use nodal::grad::{aca_backward, aca_backward_batch, naive_backward, step_vjp};
 use nodal::ode::analytic::{Linear, VanDerPol};
-use nodal::ode::{integrate, rk_step, tableau, IntegrateOpts, StepScratch, Tableau};
+use nodal::ode::{
+    integrate, integrate_batch, rk_step, tableau, IntegrateOpts, StepScratch, Tableau,
+};
 use nodal::util::Pcg64;
 
 const CASES: usize = 40;
@@ -233,7 +235,9 @@ fn prop_permutation_batching_covers_all() {
     }
 }
 
-/// Property: trajectory memory accounting equals the analytic formula.
+/// Property: trajectory memory accounting equals the analytic formula —
+/// full accounting: states (f32) + times + step sizes + error norms (f64
+/// each); no trials on a fixed-step run.
 #[test]
 fn prop_checkpoint_bytes_formula() {
     let mut rng = Pcg64::seed(707);
@@ -244,6 +248,68 @@ fn prop_checkpoint_bytes_formula() {
         let traj =
             integrate(&f, 0.0, 1.0, &z0, tableau::rk4(), &IntegrateOpts::fixed(0.05)).unwrap();
         let n_pts = traj.len() + 1;
-        assert_eq!(traj.checkpoint_bytes(), n_pts * dim * 4 + n_pts * 8);
+        let steps = traj.len();
+        assert_eq!(
+            traj.checkpoint_bytes(),
+            n_pts * dim * 4 + n_pts * 8 + steps * 8 + steps * 8
+        );
+    }
+}
+
+/// Property: `integrate_batch` + `aca_backward_batch` reproduce per-sample
+/// `integrate` + `aca_backward` — bit-exact on the fixed-step path and to
+/// ≤ 1e-6 relative on the adaptive path — for B ∈ {1, 3, 8} across random
+/// dynamics, spans, step sizes and tolerances.
+#[test]
+fn prop_batch_matches_per_sample_solves() {
+    let mut rng = Pcg64::seed(808);
+    let rel_close =
+        |a: f32, b: f32| -> bool { (a - b).abs() as f64 <= 1e-6 * (b.abs() as f64).max(1.0) };
+    for case in 0..12 {
+        let fixed = case % 2 == 0;
+        for &bsz in &[1usize, 3, 8] {
+            let tab = if fixed { tabs()[rng.below(6)] } else { tabs()[3 + rng.below(3)] };
+            let f = VanDerPol::new(rng.range(0.2, 1.2) as f32);
+            let t1 = rng.range(0.5, 2.0);
+            let z0: Vec<f32> = (0..bsz * 2).map(|_| rng.range(-1.5, 1.5) as f32).collect();
+            let lam: Vec<f32> = (0..bsz * 2).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let opts = if fixed {
+                IntegrateOpts::fixed(rng.range(0.01, 0.05))
+            } else {
+                IntegrateOpts::with_tol(10f64.powf(rng.range(-7.0, -4.0)), 1e-9)
+            };
+
+            let bt = integrate_batch(&f, 0.0, t1, &z0, tab, &opts).unwrap();
+            let gb = aca_backward_batch(&f, tab, &bt, &lam);
+
+            for i in 0..bsz {
+                let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+                let ga = aca_backward(&f, tab, &traj, &lam[i * 2..(i + 1) * 2]);
+                let ctx = format!("case {case} ({}) B={bsz} sample {i}", tab.name);
+
+                // Grid + bookkeeping equivalence (both paths).
+                assert_eq!(bt.steps(i), traj.len(), "{ctx}: steps");
+                assert_eq!(bt.tracks[i].nfe, traj.nfe, "{ctx}: nfe");
+                assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "{ctx}: rejected");
+                assert_eq!(bt.checkpoint_bytes(i), traj.checkpoint_bytes(), "{ctx}: bytes");
+
+                if fixed {
+                    // Fixed-step path: bit-exact, checkpoints included.
+                    assert_eq!(bt.tracks[i].ts, traj.ts, "{ctx}: grid");
+                    assert_eq!(bt.tracks[i].hs, traj.hs, "{ctx}: step sizes");
+                    for k in 0..=traj.len() {
+                        assert_eq!(bt.z(i, k), &traj.zs[k][..], "{ctx}: checkpoint {k}");
+                    }
+                    assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "{ctx}: gradient");
+                } else {
+                    for (a, b) in bt.last(i).iter().zip(traj.last()) {
+                        assert!(rel_close(*a, *b), "{ctx}: endpoint {a} vs {b}");
+                    }
+                    for (a, b) in gb[i].dl_dz0.iter().zip(&ga.dl_dz0) {
+                        assert!(rel_close(*a, *b), "{ctx}: gradient {a} vs {b}");
+                    }
+                }
+            }
+        }
     }
 }

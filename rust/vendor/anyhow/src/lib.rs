@@ -1,0 +1,216 @@
+//! Minimal offline drop-in for the `anyhow` error crate.
+//!
+//! The build environment vendors no external crates, so this crate
+//! re-implements the subset of the anyhow API the workspace uses:
+//!
+//! * [`Error`] — a context-chained error value (message + cause chain);
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter, so
+//!   `Result<T, String>` still names the std result type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that is what allows the blanket
+//! `impl<E: std::error::Error> From<E> for Error` to coexist with the
+//! standard library's identity `From` impl.
+
+use std::fmt;
+
+/// A context-chained error: the outermost message plus its causes,
+/// outermost-first.
+pub struct Error {
+    msg: String,
+    /// Cause messages, outermost cause first.
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error { msg: c.to_string(), causes }
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(String::as_str))
+    }
+
+    /// The innermost cause message.
+    pub fn root_cause(&self) -> &str {
+        self.causes.last().unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.causes.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for (i, c) in self.causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], capturing its source chain.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), causes }
+    }
+}
+
+/// `anyhow::Result<T>`; the defaulted parameter keeps `Result<T, E>` usable
+/// as the std result type under a `use anyhow::Result` import.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failing `Result`s and empty `Option`s.
+pub trait Context<T> {
+    /// Wrap the error value with a context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    /// Wrap the error value with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        let _: u32 = "nope".parse()?; // std error converts via `?`
+        Ok(())
+    }
+
+    #[test]
+    fn std_error_converts() {
+        let e = fails().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn context_chains_and_displays_outermost() {
+        let e = fails().context("reading the config").unwrap_err();
+        assert_eq!(e.to_string(), "reading the config");
+        assert!(e.root_cause().contains("invalid digit"));
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "inner 7"]);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            ensure!(x != 1);
+            if x == 2 {
+                bail!("two is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert!(f(1).unwrap_err().to_string().contains("Condition failed"));
+        assert_eq!(f(2).unwrap_err().to_string(), "two is right out");
+    }
+}

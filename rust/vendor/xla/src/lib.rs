@@ -1,0 +1,250 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The container bakes no `xla_extension` shared library, so this crate
+//! implements the API surface `nodal::runtime` compiles against:
+//!
+//! * [`Literal`] — host tensor marshalling (`vec1` / `reshape` / `to_vec` /
+//!   `element_count`) is **fully functional**; the runtime's literal round
+//!   trips and unit tests run against it unchanged.
+//! * PJRT client / compilation / execution ([`PjRtClient`],
+//!   [`PjRtLoadedExecutable`], [`HloModuleProto`], [`XlaComputation`]) are
+//!   **gated**: constructors return a descriptive [`Error`] instead of
+//!   aborting, so artifact-driven tests and experiments skip cleanly on
+//!   machines without the native runtime.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml`; no call sites change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla_rs::Error` (implements `std::error::Error`, so
+/// `anyhow` context adapters apply).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: the native xla_extension PJRT runtime is not linked into this offline \
+             build — rebuild with the real xla-rs bindings to execute AOT artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Data::F32(_) => "f32",
+            Data::I32(_) => "i32",
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types a [`Literal`] can hold (mirrors xla-rs `NativeType`).
+pub trait NativeType: sealed::Sealed + Copy {
+    #[doc(hidden)]
+    fn lit_from(v: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn lit_from(v: &[f32]) -> Literal {
+        Literal { data: Data::F32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal holds {}, not f32", other.dtype()))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn lit_from(v: &[i32]) -> Literal {
+        Literal { data: Data::I32(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            other => Err(Error(format!("literal holds {}, not i32", other.dtype()))),
+        }
+    }
+}
+
+/// A host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::lit_from(v)
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Shape of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret under a new shape; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements into {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal into its elements. The stand-in never
+    /// produces tuple literals (they only come back from PJRT execution).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stand-in: parsing requires the native runtime).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path:?}")))
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (stand-in: construction requires the native runtime).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A device-resident buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let l = Literal::vec1(&[5i32, -6]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -6]);
+        assert!(l.to_vec::<f32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn reshape_count_mismatch_errors() {
+        let l = Literal::vec1(&[1.0f32; 5]);
+        assert!(l.reshape(&[2, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_is_gated_not_panicking() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla_extension"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
