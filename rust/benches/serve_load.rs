@@ -1,0 +1,134 @@
+//! Closed-loop load test of the solve server: C client threads each keep
+//! one request outstanding (submit → wait → submit …) against a 64-request
+//! mixed workload, versus the sequential one-request-at-a-time baseline the
+//! server replaces. Reports throughput for both and the server's batching
+//! metrics; the batched server must sustain ≥ the sequential baseline.
+
+use nodal::bench::Runner;
+use nodal::grad::aca_backward;
+use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
+use nodal::ode::{integrate, tableau, IntegrateOpts};
+use nodal::serve::{ServeConfig, SolveRequest, SolveServer};
+use nodal::util::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TOTAL: usize = 64;
+const CLIENTS: usize = 8;
+
+/// The 64-request mixed workload: three dynamics, adaptive and fixed-step
+/// tolerance classes, and a sprinkle of gradient requests — per-request cost
+/// is deliberately heterogeneous (nfe varies per initial condition).
+fn workload() -> Vec<SolveRequest> {
+    let mut rng = Pcg64::seed(20);
+    (0..TOTAL)
+        .map(|i| match i % 4 {
+            0 => SolveRequest::adaptive(
+                "vdp",
+                0.0,
+                5.0,
+                vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
+                1e-6,
+                1e-8,
+            ),
+            1 => SolveRequest::fixed(
+                "linear",
+                0.0,
+                1.0,
+                (0..16).map(|_| rng.normal_f32()).collect(),
+                0.01,
+            ),
+            2 => SolveRequest::adaptive(
+                "conv",
+                0.0,
+                2.0,
+                (0..64).map(|_| rng.normal_f32() * 0.5).collect(),
+                1e-5,
+                1e-7,
+            ),
+            _ => SolveRequest::adaptive(
+                "vdp",
+                0.0,
+                5.0,
+                vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
+                1e-6,
+                1e-8,
+            )
+            .with_grad(vec![1.0, 0.0]),
+        })
+        .collect()
+}
+
+fn register(b: nodal::serve::SolveServerBuilder) -> nodal::serve::SolveServerBuilder {
+    b.register("vdp", VanDerPol::new(0.5))
+        .register("linear", Linear::new(-0.9, 16))
+        .register("conv", ConvFlow::random(8, 8, 11, 0.4))
+}
+
+/// Closed-loop: each client thread owns a slice of the workload and keeps
+/// exactly one request in flight.
+fn run_server_closed_loop(server: &Arc<SolveServer>, reqs: &[SolveRequest]) {
+    std::thread::scope(|scope| {
+        for chunk in reqs.chunks(TOTAL / CLIENTS) {
+            let server = server.clone();
+            scope.spawn(move || {
+                for req in chunk {
+                    let h = server.submit(req.clone()).expect("admission");
+                    h.wait().expect("solve");
+                }
+            });
+        }
+    });
+}
+
+/// Baseline: the same requests solved directly, one at a time.
+fn run_sequential(reqs: &[SolveRequest]) {
+    let vdp = VanDerPol::new(0.5);
+    let lin = Linear::new(-0.9, 16);
+    let conv = ConvFlow::random(8, 8, 11, 0.4);
+    for req in reqs {
+        let f: &dyn nodal::ode::OdeFunc = match req.dynamics.as_str() {
+            "vdp" => &vdp,
+            "linear" => &lin,
+            _ => &conv,
+        };
+        let traj = integrate(f, req.t0, req.t1, &req.z0, req.tab, &req.opts()).unwrap();
+        if let Some(lam) = &req.grad {
+            let g = aca_backward(f, req.tab, &traj, lam);
+            std::hint::black_box(g.dl_dz0[0]);
+        }
+        std::hint::black_box(traj.last()[0]);
+    }
+}
+
+fn main() {
+    let reqs = workload();
+    let mut r = Runner::new("serve_load");
+
+    let seq = r.bench("sequential_64req_mixed", || run_sequential(&reqs)).clone();
+
+    let cfg = ServeConfig {
+        max_batch_size: 16,
+        max_queue_delay: Duration::from_micros(200),
+        queue_capacity: 1024,
+        workers: nodal::coordinator::pool::default_workers(),
+    };
+    let server = Arc::new(register(SolveServer::builder()).config(cfg).start());
+    let srv = r
+        .bench("server_closed_loop_8clients_64req", || run_server_closed_loop(&server, &reqs))
+        .clone();
+
+    let m = server.metrics();
+    println!("\nserver metrics over the whole bench run:\n{m}");
+    let seq_rps = TOTAL as f64 / (seq.mean_ms * 1e-3);
+    let srv_rps = TOTAL as f64 / (srv.mean_ms * 1e-3);
+    println!(
+        "\nthroughput: sequential {seq_rps:.0} req/s vs batched server {srv_rps:.0} req/s \
+         ({:.2}x)",
+        srv_rps / seq_rps
+    );
+    if srv_rps < seq_rps {
+        println!("WARNING: batched server below the sequential baseline on this host");
+    }
+    server.shutdown();
+}

@@ -69,8 +69,19 @@ impl Runner {
     }
 
     /// Persist the group's results as JSON lines under `results/bench/`.
+    ///
+    /// The group id is interpolated into the output filename; ids with path
+    /// separators or parent references are rejected (a stray `--save ../x`
+    /// must not write outside the bench results dir).
     pub fn save(&self) {
         use crate::util::json::obj;
+        if !safe_bench_id(&self.group) {
+            eprintln!(
+                "bench: refusing to save group {:?}: id must be a plain filename component",
+                self.group
+            );
+            return;
+        }
         let dir = crate::coordinator::results_dir().join("bench");
         if std::fs::create_dir_all(&dir).is_err() {
             return;
@@ -98,9 +109,32 @@ impl Drop for Runner {
     }
 }
 
+/// True iff `id` is safe to use as a single filename component under
+/// `results/bench/`: non-empty, no path separators, no parent references,
+/// no leading dot, and nothing outside `[A-Za-z0-9._-]`.
+pub fn safe_bench_id(id: &str) -> bool {
+    !id.is_empty()
+        && !id.starts_with('.')
+        && !id.contains("..")
+        && id.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn save_ids_reject_path_escapes() {
+        assert!(safe_bench_id("serve_load"));
+        assert!(safe_bench_id("fig7.train-step_2"));
+        assert!(!safe_bench_id(""));
+        assert!(!safe_bench_id("../evil"));
+        assert!(!safe_bench_id("a/b"));
+        assert!(!safe_bench_id("a\\b"));
+        assert!(!safe_bench_id(".."));
+        assert!(!safe_bench_id(".hidden"));
+        assert!(!safe_bench_id("nul\0byte"));
+    }
 
     #[test]
     fn bench_measures_something() {

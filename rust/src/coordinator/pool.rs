@@ -54,7 +54,9 @@ where
         .collect()
 }
 
-fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+/// Human-readable message from a `catch_unwind` payload (also reused by the
+/// serve workers' panic containment).
+pub(crate) fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<String>() {
         s.clone()
     } else if let Some(s) = e.downcast_ref::<&str>() {

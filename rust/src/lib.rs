@@ -16,7 +16,11 @@
 //!   checkpoint arena, per-sample adaptive step control with per-sample
 //!   exact `nfe`/`avg_m`/memory meters, and one
 //!   [`ode::OdeFunc::eval_batch`] stage sweep over all live samples — the
-//!   hook a batched backend (single HLO dispatch, SIMD) overrides.
+//!   hook a batched backend (single HLO dispatch, SIMD) overrides. On top of
+//!   the batched engine sits the **solve server** ([`serve`]): a dynamic
+//!   micro-batching layer that coalesces concurrent solve requests under a
+//!   `max_batch_size`/`max_queue_delay` flush policy, with admission
+//!   control, p50/p95/p99 latency metrics, and `NODAL_SERVE_*` tuning knobs.
 //! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
 //!   encoders/decoders/loss heads, AOT-lowered to HLO text.
 //! * **L1 (Pallas, `python/compile/kernels/`)** — fused hot-path kernels
@@ -54,6 +58,25 @@
 //! println!("sample 0: steps {} nfe {} dL/dz0 {:?}",
 //!          bt.steps(0), bt.tracks[0].nfe, grads[0].dl_dz0);
 //! ```
+//!
+//! ## Serving
+//!
+//! Concurrent solve requests from independent callers coalesce dynamically
+//! ([`serve`]); per-request results are exactly what a direct solve returns:
+//!
+//! ```no_run
+//! use nodal::ode::analytic::VanDerPol;
+//! use nodal::serve::{SolveRequest, SolveServer};
+//!
+//! let server = SolveServer::builder().register("vdp", VanDerPol::new(0.15)).start();
+//! let h = server
+//!     .submit(SolveRequest::adaptive("vdp", 0.0, 25.0, vec![2.0, 0.0], 1e-6, 1e-8))
+//!     .unwrap();
+//! let resp = h.wait().unwrap();
+//! println!("z(T) = {:?}  nfe {}  batched with {} requests",
+//!          resp.z_t1, resp.stats.nfe, resp.stats.batch_size);
+//! println!("{}", server.metrics());
+//! ```
 
 pub mod bench;
 pub mod config;
@@ -64,6 +87,7 @@ pub mod metrics;
 pub mod models;
 pub mod ode;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -81,6 +81,17 @@ impl OdeFunc for ConvFlow {
         self.conv(z, dz, false);
     }
 
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        // Time-invariant linear map: convolve each image in the flat
+        // [n × H·W] buffer without per-sample dynamic dispatch. Same kernel
+        // sweep as `eval`, so results are bit-identical per sample.
+        let d = self.h * self.w;
+        debug_assert_eq!(zs.len(), ts.len() * d);
+        for (z, dz) in zs.chunks_exact(d).zip(dzs.chunks_exact_mut(d)) {
+            self.conv(z, dz, false);
+        }
+    }
+
     fn vjp(&self, _t: f64, _z: &[f32], w: &[f32], wjz: &mut [f32], _wjp: &mut [f32]) {
         // Linear map: wᵀ ∂f/∂z = Kᵀ w.
         self.conv(w, wjz, true);

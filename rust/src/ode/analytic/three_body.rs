@@ -50,18 +50,10 @@ impl ThreeBody {
         let ic = 1.0 / (r2 * r);
         ([di[0] * ic, di[1] * ic, di[2] * ic], ic)
     }
-}
 
-impl OdeFunc for ThreeBody {
-    fn dim(&self) -> usize {
-        18
-    }
-
-    fn n_params(&self) -> usize {
-        3
-    }
-
-    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+    /// One sample's derivative — shared by `eval` and the batched sweep.
+    #[inline]
+    fn eval_one(&self, z: &[f32], dz: &mut [f32]) {
         // ṙ = v
         dz[..9].copy_from_slice(&z[9..18]);
         // v̇_i = −G Σ_{j≠i} m_j (r_i − r_j)/|r_i − r_j|³
@@ -82,6 +74,30 @@ impl OdeFunc for ThreeBody {
             for a in 0..3 {
                 dz[9 + 3 * i + a] = acc[a];
             }
+        }
+    }
+}
+
+impl OdeFunc for ThreeBody {
+    fn dim(&self) -> usize {
+        18
+    }
+
+    fn n_params(&self) -> usize {
+        3
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        self.eval_one(z, dz);
+    }
+
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        // Time-invariant: sweep the flat [n × 18] buffer with the inlined
+        // per-sample kernel (no per-sample dynamic dispatch); arithmetic is
+        // identical to `eval`, so results are bit-identical per sample.
+        debug_assert_eq!(zs.len(), ts.len() * 18);
+        for (z, dz) in zs.chunks_exact(18).zip(dzs.chunks_exact_mut(18)) {
+            self.eval_one(z, dz);
         }
     }
 

@@ -1,0 +1,297 @@
+//! The batch former: coalesces pending requests into batches under a
+//! `max_batch_size` / `max_queue_delay` policy — a batch flushes on
+//! whichever trips first.
+//!
+//! [`BatchFormer`] is a **pure state machine**: it never reads a clock, never
+//! sleeps, and never spawns a thread. Every method takes the current time as
+//! an argument, so the flush policies are unit-testable with a
+//! [`super::ManualClock`]-driven virtual timeline and no timing assertions.
+//! The server's batcher thread drives the same code with wall time.
+//!
+//! Grouping: requests coalesce by [`BatchKey`] (same dynamics, solver, span,
+//! tolerance, gradient flag); only the initial state may differ inside a
+//! batch — which is exactly the axis `integrate_batch` vectorizes over
+//! without changing any per-sample result.
+
+use super::request::{BatchKey, ResponseSlot, SolveRequest};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A request waiting to be batched, with its completion slot and submit time
+/// (in the server clock's timeline).
+pub struct Pending {
+    pub req: SolveRequest,
+    pub slot: Arc<ResponseSlot>,
+    pub submitted: Duration,
+}
+
+/// Why a batch left the former.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The group reached `max_batch_size`.
+    Size,
+    /// The group's oldest request aged past `max_queue_delay`.
+    Deadline,
+    /// An explicit drain/shutdown flushed it regardless of policy.
+    Drain,
+}
+
+/// A group of co-batchable requests ready to execute.
+pub struct FormedBatch {
+    pub key: BatchKey,
+    pub items: Vec<Pending>,
+    pub reason: FlushReason,
+    /// When the flush condition tripped (virtual/server time).
+    pub triggered_at: Duration,
+}
+
+struct Group {
+    key: BatchKey,
+    items: Vec<Pending>,
+    /// Submit time of the group's oldest member — the deadline anchor.
+    oldest: Duration,
+}
+
+/// Coalesces [`Pending`] requests into [`FormedBatch`]es.
+pub struct BatchFormer {
+    max_batch: usize,
+    max_delay: Duration,
+    groups: Vec<Group>,
+    ready: VecDeque<FormedBatch>,
+}
+
+impl BatchFormer {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        BatchFormer {
+            max_batch: max_batch.max(1),
+            max_delay,
+            groups: Vec::new(),
+            ready: VecDeque::new(),
+        }
+    }
+
+    /// Add a request at time `now`. If its group reaches `max_batch_size`
+    /// the group is moved to the ready queue immediately (size flush).
+    ///
+    /// The group's flush deadline anchors to the oldest member's **submit**
+    /// time, not its push time: a request that sat in the submission queue
+    /// (e.g. while the batcher slept toward another group's deadline) has
+    /// already spent part of its `max_queue_delay` budget.
+    pub fn push(&mut self, pending: Pending, now: Duration) {
+        let key = pending.req.batch_key();
+        let submitted = pending.submitted;
+        let idx = match self.groups.iter().position(|g| g.key == key) {
+            Some(i) => {
+                let g = &mut self.groups[i];
+                g.items.push(pending);
+                g.oldest = g.oldest.min(submitted);
+                i
+            }
+            None => {
+                self.groups.push(Group { key, items: vec![pending], oldest: submitted });
+                self.groups.len() - 1
+            }
+        };
+        if self.groups[idx].items.len() >= self.max_batch {
+            let g = self.groups.remove(idx);
+            self.ready.push_back(FormedBatch {
+                key: g.key,
+                items: g.items,
+                reason: FlushReason::Size,
+                triggered_at: now,
+            });
+        }
+    }
+
+    /// Collect every batch whose flush condition has tripped by `now`:
+    /// size-flushed batches (in the order they filled) and groups whose
+    /// oldest member has waited at least `max_queue_delay`. Batches are
+    /// returned in trigger order — a size flush that fired before another
+    /// group's deadline comes out first.
+    pub fn poll(&mut self, now: Duration) -> Vec<FormedBatch> {
+        let mut out: Vec<FormedBatch> = self.ready.drain(..).collect();
+        let mut i = 0;
+        while i < self.groups.len() {
+            let deadline = self.groups[i].oldest + self.max_delay;
+            if deadline <= now {
+                let g = self.groups.remove(i);
+                out.push(FormedBatch {
+                    key: g.key,
+                    items: g.items,
+                    reason: FlushReason::Deadline,
+                    triggered_at: deadline,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|b| b.triggered_at);
+        out
+    }
+
+    /// Flush everything regardless of policy (explicit `drain()`/shutdown).
+    pub fn drain(&mut self, now: Duration) -> Vec<FormedBatch> {
+        let mut out = self.poll(now);
+        for g in self.groups.drain(..) {
+            out.push(FormedBatch {
+                key: g.key,
+                items: g.items,
+                reason: FlushReason::Drain,
+                triggered_at: now,
+            });
+        }
+        out
+    }
+
+    /// Earliest instant at which [`BatchFormer::poll`] would flush something
+    /// new; `None` when no partial group is pending.
+    pub fn next_deadline(&self) -> Option<Duration> {
+        if !self.ready.is_empty() {
+            return Some(Duration::ZERO); // already flushable
+        }
+        self.groups.iter().map(|g| g.oldest + self.max_delay).min()
+    }
+
+    /// Requests currently held (partial groups + ready batches).
+    pub fn pending(&self) -> usize {
+        self.groups.iter().map(|g| g.items.len()).sum::<usize>()
+            + self.ready.iter().map(|b| b.items.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty() && self.ready.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::ResponseHandle;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn pending(dynamics: &str, t1: f64, submitted: Duration) -> Pending {
+        let (_, slot) = ResponseHandle::new();
+        Pending {
+            req: SolveRequest::adaptive(dynamics, 0.0, t1, vec![1.0, 0.0], 1e-6, 1e-8),
+            slot,
+            submitted,
+        }
+    }
+
+    #[test]
+    fn size_flush_trips_before_deadline() {
+        let mut f = BatchFormer::new(3, ms(100));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("vdp", 5.0, ms(1)), ms(1));
+        assert!(f.poll(ms(1)).is_empty(), "under size and under deadline");
+        f.push(pending("vdp", 5.0, ms(2)), ms(2));
+        let out = f.poll(ms(2));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].reason, FlushReason::Size);
+        assert_eq!(out[0].items.len(), 3);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn deadline_flush_fires_when_oldest_ages_out() {
+        let mut f = BatchFormer::new(16, ms(10));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("vdp", 5.0, ms(4)), ms(4));
+        assert!(f.poll(ms(9)).is_empty(), "deadline anchored to the OLDEST member");
+        let out = f.poll(ms(10));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].reason, FlushReason::Deadline);
+        assert_eq!(out[0].items.len(), 2, "the young member rides along");
+        assert_eq!(out[0].triggered_at, ms(10));
+    }
+
+    #[test]
+    fn flush_order_is_trigger_order() {
+        // Group A (vdp) deadline-expires at t=10; group B (other span) size-
+        // flushes at t=5. Poll at t=12 must yield B before A.
+        let mut f = BatchFormer::new(2, ms(10));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("vdp", 7.0, ms(4)), ms(4));
+        f.push(pending("vdp", 7.0, ms(5)), ms(5)); // B size-flushes here
+        let out = f.poll(ms(12));
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].reason, FlushReason::Size);
+        assert_eq!(out[0].triggered_at, ms(5));
+        assert_eq!(out[1].reason, FlushReason::Deadline);
+        assert_eq!(out[1].triggered_at, ms(10));
+    }
+
+    #[test]
+    fn deadline_anchored_to_submit_time_not_push_time() {
+        let mut f = BatchFormer::new(8, ms(10));
+        // Submitted at t=0, but only pushed into the former at t=6 (it sat
+        // in the submission queue): the deadline is still submit + delay.
+        f.push(pending("vdp", 5.0, ms(0)), ms(6));
+        assert_eq!(f.next_deadline(), Some(ms(10)));
+        assert!(f.poll(ms(9)).is_empty());
+        let out = f.poll(ms(10));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].reason, FlushReason::Deadline);
+        assert_eq!(out[0].triggered_at, ms(10));
+    }
+
+    #[test]
+    fn incompatible_requests_never_share_a_batch() {
+        let mut f = BatchFormer::new(2, ms(100));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("linear", 5.0, ms(0)), ms(0));
+        assert!(f.poll(ms(0)).is_empty(), "two singleton groups, neither full");
+        let out = f.drain(ms(1));
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|b| b.items.len() == 1));
+        assert!(out.iter().all(|b| b.reason == FlushReason::Drain));
+    }
+
+    #[test]
+    fn drain_flushes_partial_groups() {
+        let mut f = BatchFormer::new(8, ms(1000));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("vdp", 5.0, ms(1)), ms(1));
+        assert_eq!(f.pending(), 2);
+        let out = f.drain(ms(2));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].items.len(), 2);
+        assert_eq!(out[0].reason, FlushReason::Drain);
+        assert!(f.is_empty());
+        assert_eq!(f.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_group() {
+        let mut f = BatchFormer::new(8, ms(10));
+        assert_eq!(f.next_deadline(), None);
+        f.push(pending("vdp", 5.0, ms(3)), ms(3));
+        f.push(pending("linear", 5.0, ms(1)), ms(1));
+        assert_eq!(f.next_deadline(), Some(ms(11)), "min over groups");
+        let flushed = f.poll(ms(11));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(f.next_deadline(), Some(ms(13)), "remaining group");
+    }
+
+    #[test]
+    fn zero_delay_flushes_on_first_poll() {
+        let mut f = BatchFormer::new(64, Duration::ZERO);
+        f.push(pending("vdp", 5.0, ms(7)), ms(7));
+        let out = f.poll(ms(7));
+        assert_eq!(out.len(), 1, "max_queue_delay = 0 degenerates to flush-per-poll");
+        assert_eq!(out[0].reason, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn size_one_flushes_immediately_on_push() {
+        let mut f = BatchFormer::new(1, ms(1000));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        let out = f.poll(ms(0));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].reason, FlushReason::Size);
+    }
+}

@@ -1,0 +1,311 @@
+//! Server instrumentation: request counters, queue-wait and service latency
+//! quantiles, batch-size histogram, and per-request NFE aggregates.
+//!
+//! Latencies go into fixed log₂-bucketed histograms (64 buckets over
+//! nanoseconds — sub-µs to ~584 years), so recording is O(1), lock-free
+//! reads are unnecessary, and quantiles are bucket-resolution estimates
+//! (within a factor of 2), which is what a serving dashboard needs; exact
+//! per-request numbers ride on every [`super::SolveResponse`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+const BUCKETS: usize = 64;
+
+/// Log₂-bucketed histogram over `u64` magnitudes (latency nanoseconds,
+/// NFE counts). Bucket `i` holds values `v` with `floor(log2(v)) == i`
+/// (bucket 0 also holds 0).
+#[derive(Debug)]
+pub struct LogHistogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+// std ships `Default` for arrays only up to length 32; build the 64 buckets
+// explicitly.
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    fn bucket(v: u64) -> usize {
+        (63 - (v | 1).leading_zeros()) as usize
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of every recorded value.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate: the upper edge of the first bucket whose
+    /// cumulative count reaches `q` of the total (0 when empty). Accurate to
+    /// bucket resolution (a factor of 2).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        let mut last_nonempty = 0usize;
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if c > 0 {
+                last_nonempty = i;
+            }
+            cum += c;
+            if cum >= target {
+                return upper_edge(i);
+            }
+        }
+        // Racing concurrent records can make `total` momentarily exceed the
+        // bucket sum (both are Relaxed); bound the answer by the largest
+        // recorded bucket instead of falling through to u64::MAX.
+        upper_edge(last_nonempty)
+    }
+}
+
+fn upper_edge(bucket: usize) -> u64 {
+    if bucket >= 63 {
+        u64::MAX
+    } else {
+        (2u64 << bucket) - 1
+    }
+}
+
+/// Quantile summary of one latency histogram, in milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    fn from_hist(h: &LogHistogram) -> Self {
+        let ns_to_ms = 1e-6;
+        LatencySummary {
+            count: h.count(),
+            mean_ms: h.mean() * ns_to_ms,
+            p50_ms: h.quantile(0.50) as f64 * ns_to_ms,
+            p95_ms: h.quantile(0.95) as f64 * ns_to_ms,
+            p99_ms: h.quantile(0.99) as f64 * ns_to_ms,
+            max_ms: h.max() as f64 * ns_to_ms,
+        }
+    }
+}
+
+/// Live metrics shared by the server, its workers, and callers.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests accepted by admission control.
+    pub submitted: AtomicU64,
+    /// Requests answered successfully.
+    pub completed: AtomicU64,
+    /// Requests bounced with `Overloaded`.
+    pub rejected: AtomicU64,
+    /// Requests answered with a solver error.
+    pub failed: AtomicU64,
+    /// Forward `f` evaluations served (per-request exact, summed).
+    pub nfe: LogHistogram,
+    /// Time between submit and batch execution start.
+    pub queue_wait: LogHistogram,
+    /// Time between batch execution start and response delivery.
+    pub service: LogHistogram,
+    /// `batch_sizes[s]` counts executed batches of size `s` (index 0 unused).
+    batch_sizes: Mutex<Vec<u64>>,
+}
+
+impl ServeMetrics {
+    pub fn record_batch(&self, size: usize) {
+        let mut sizes = self.batch_sizes.lock().unwrap();
+        if sizes.len() <= size {
+            sizes.resize(size + 1, 0);
+        }
+        sizes[size] += 1;
+    }
+
+    pub fn record_request(&self, queue_wait: Duration, service: Duration, nfe: usize) {
+        self.queue_wait.record(queue_wait.as_nanos().min(u64::MAX as u128) as u64);
+        self.service.record(service.as_nanos().min(u64::MAX as u128) as u64);
+        self.nfe.record(nfe as u64);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every aggregate.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let sizes = self.batch_sizes.lock().unwrap().clone();
+        // The size histogram is the single source of truth for batch counts.
+        let batches: u64 = sizes.iter().sum();
+        let weighted: u64 = sizes.iter().enumerate().map(|(s, c)| s as u64 * c).sum();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 { 0.0 } else { weighted as f64 / batches as f64 },
+            batch_sizes: sizes,
+            queue_wait: LatencySummary::from_hist(&self.queue_wait),
+            service: LatencySummary::from_hist(&self.service),
+            nfe_total: self.nfe.sum(),
+            nfe_mean: self.nfe.mean(),
+            nfe_max: self.nfe.max(),
+        }
+    }
+}
+
+/// Frozen view of [`ServeMetrics`] for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    /// `batch_sizes[s]` = executed batches of size `s`.
+    pub batch_sizes: Vec<u64>,
+    pub queue_wait: LatencySummary,
+    pub service: LatencySummary,
+    pub nfe_total: u64,
+    pub nfe_mean: f64,
+    pub nfe_max: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests: {} submitted, {} completed, {} rejected, {} failed",
+            self.submitted, self.completed, self.rejected, self.failed
+        )?;
+        writeln!(
+            f,
+            "batches:  {} executed, mean size {:.2}, sizes {:?}",
+            self.batches, self.mean_batch_size, self.batch_sizes
+        )?;
+        let q = &self.queue_wait;
+        writeln!(
+            f,
+            "queue-wait ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}",
+            q.mean_ms, q.p50_ms, q.p95_ms, q.p99_ms, q.max_ms
+        )?;
+        let s = &self.service;
+        writeln!(
+            f,
+            "service ms:    mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}",
+            s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.max_ms
+        )?;
+        write!(
+            f,
+            "nfe: total {}, mean {:.1}/request, max {}",
+            self.nfe_total, self.nfe_mean, self.nfe_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(LogHistogram::bucket(0), 0);
+        assert_eq!(LogHistogram::bucket(1), 0);
+        assert_eq!(LogHistogram::bucket(2), 1);
+        assert_eq!(LogHistogram::bucket(3), 1);
+        assert_eq!(LogHistogram::bucket(4), 2);
+        assert_eq!(LogHistogram::bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_accurate() {
+        let h = LogHistogram::default();
+        for _ in 0..99 {
+            h.record(1_000_000); // 1 ms
+        }
+        h.record(100_000_000); // one 100 ms outlier
+        let p50 = h.quantile(0.50);
+        assert!((1_000_000..=2_097_152).contains(&p50), "p50 within 1ms bucket: {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 <= 2_097_152, "p99 still in the 1ms bucket: {p99}");
+        let p999 = h.quantile(0.9999);
+        assert!(p999 >= 67_108_864, "tail quantile sees the outlier: {p999}");
+        assert_eq!(h.max(), 100_000_000);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LogHistogram::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn batch_size_histogram_and_mean() {
+        let m = ServeMetrics::default();
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batch_sizes[4], 2);
+        assert_eq!(s.batch_sizes[2], 1);
+        assert!((s.mean_batch_size - 10.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_recording_rolls_up() {
+        let m = ServeMetrics::default();
+        m.record_request(Duration::from_micros(10), Duration::from_millis(2), 120);
+        m.record_request(Duration::from_micros(30), Duration::from_millis(4), 80);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.queue_wait.count, 2);
+        assert_eq!(s.nfe_total, 200, "exact sum, not mean*count round-trip");
+        assert!((s.nfe_mean - 100.0).abs() < 1e-9);
+        assert_eq!(s.nfe_max, 120);
+        assert!(s.service.p50_ms > 0.0);
+        let _ = format!("{s}"); // Display must not panic
+    }
+}

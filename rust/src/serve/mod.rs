@@ -1,0 +1,621 @@
+//! `serve` — a dynamic micro-batching solve server over the batched engine.
+//!
+//! The ROADMAP's north star is serving heavy solve traffic; this subsystem
+//! is the serving layer over [`crate::ode::integrate_batch`] /
+//! [`crate::grad::aca_backward_batch`]. Adaptive solvers make per-request
+//! cost variable (NFE differs per initial condition), which is exactly the
+//! workload where **dynamic batching** beats both one-request-at-a-time
+//! dispatch and fixed-size batching: the engine's per-sample step control
+//! means heterogeneous requests share a batch *without changing any
+//! per-sample result* (the ACA equivalence guarantee), so the batch former
+//! is free to coalesce whatever compatible traffic is pending.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! submit() ── admission ──▶ submission queue (bounded; full ⇒ Overloaded)
+//!                               │ batcher thread
+//!                               ▼
+//!                         BatchFormer  — groups by BatchKey, flushes on
+//!                               │        max_batch_size OR max_queue_delay,
+//!                               ▼        whichever trips first
+//!                          work queue ──▶ worker shard (N threads)
+//!                                            │  integrate_batch
+//!                                            │  (+ aca_backward_batch)
+//!                                            ▼
+//!                               per-request ResponseHandle + metrics
+//! ```
+//!
+//! * [`SolveServer::submit`] returns a [`ResponseHandle`] immediately, or
+//!   [`ServeError::Overloaded`] when `queue_capacity` requests are already
+//!   in flight (admission control — the queue never grows unboundedly).
+//! * [`SolveServer::drain`] flushes partial batches and blocks until every
+//!   admitted request is answered; [`SolveServer::shutdown`] additionally
+//!   stops the threads (in-flight work is still drained, never dropped).
+//! * Determinism: the flush policy lives in the pure
+//!   [`batcher::BatchFormer`] state machine and all timing flows through an
+//!   injected [`Clock`], so policies are unit-testable with a
+//!   [`ManualClock`] and explicit `drain()` — no sleeps anywhere in the
+//!   tests.
+//!
+//! ## Tuning knobs (`NODAL_SERVE_*`)
+//!
+//! [`ServeConfig::from_env`] reads, parses **and clamps at the source**
+//! (mirroring [`crate::coordinator::pool::default_workers`]):
+//!
+//! | env var                    | meaning                     | default, clamp |
+//! |----------------------------|-----------------------------|----------------|
+//! | `NODAL_SERVE_MAX_BATCH`    | max samples per batch       | 16, 1..=1024   |
+//! | `NODAL_SERVE_MAX_DELAY_US` | max queue delay (µs)        | 500, 0..=10⁶   |
+//! | `NODAL_SERVE_QUEUE_CAP`    | admitted-unanswered cap     | 1024, 1..=10⁶  |
+//! | `NODAL_SERVE_WORKERS`      | worker threads              | [`crate::coordinator::pool::default_workers`], 1..=256 |
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+mod worker;
+
+pub use batcher::{BatchFormer, FlushReason, FormedBatch, Pending};
+pub use metrics::{LatencySummary, MetricsSnapshot, ServeMetrics};
+pub use request::{
+    BatchKey, RequestStats, ResponseHandle, ServeError, SolveRequest, SolveResponse, Tolerance,
+};
+
+use crate::coordinator::pool::default_workers;
+use crate::ode::OdeFunc;
+use queue::{Channel, ChannelState};
+use request::ResponseSlot;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Time source injected into the server. Returns a monotone `Duration`
+/// since the clock's own epoch; all queue-delay arithmetic happens on that
+/// timeline, so tests can substitute a [`ManualClock`].
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Duration;
+}
+
+/// Production clock: monotonic wall time since construction.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+/// Test clock: time advances only when the test says so.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    nanos: std::sync::atomic::AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ManualClock::default())
+    }
+
+    pub fn advance(&self, by: Duration) {
+        self.nanos.fetch_add(by.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, to: Duration) {
+        self.nanos.store(to.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+}
+
+/// Batching/backpressure policy of one server.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Flush a group as soon as it holds this many requests.
+    pub max_batch_size: usize,
+    /// Flush a group once its oldest request has waited this long.
+    pub max_queue_delay: Duration,
+    /// Admission cap: maximum admitted-but-unanswered requests; beyond it
+    /// `submit` returns [`ServeError::Overloaded`].
+    pub queue_capacity: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig::from_env()
+    }
+}
+
+/// Parse-and-clamp an env override at the source (the `default_workers`
+/// convention): unset or unparseable falls back to `default`.
+fn env_clamped(name: &str, default: usize, lo: usize, hi: usize) -> usize {
+    match std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.clamp(lo, hi),
+        None => default,
+    }
+}
+
+impl ServeConfig {
+    /// Defaults with `NODAL_SERVE_*` overrides (see module docs).
+    pub fn from_env() -> Self {
+        ServeConfig {
+            max_batch_size: env_clamped("NODAL_SERVE_MAX_BATCH", 16, 1, 1024),
+            max_queue_delay: Duration::from_micros(env_clamped(
+                "NODAL_SERVE_MAX_DELAY_US",
+                500,
+                0,
+                1_000_000,
+            ) as u64),
+            queue_capacity: env_clamped("NODAL_SERVE_QUEUE_CAP", 1024, 1, 1_000_000),
+            // Same hard cap as the coordinator pool's NODAL_WORKERS clamp.
+            workers: env_clamped("NODAL_SERVE_WORKERS", default_workers(), 1, 256),
+        }
+    }
+}
+
+/// Shared server state (registry, queues, clock, metrics, lifecycle flags).
+pub(crate) struct Core {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) clock: Arc<dyn Clock>,
+    pub(crate) registry: HashMap<String, Arc<dyn OdeFunc + Send + Sync>>,
+    pub(crate) metrics: ServeMetrics,
+    pub(crate) submit_q: Channel<Pending>,
+    pub(crate) work_q: Channel<FormedBatch>,
+    /// Admitted-but-unanswered requests; the admission-control meter.
+    inflight: Mutex<usize>,
+    idle: Condvar,
+    /// `drain()` callers currently waiting — the batcher flushes partial
+    /// groups whenever this is non-zero.
+    drain_waiters: AtomicUsize,
+    closed: AtomicBool,
+}
+
+impl Core {
+    /// Deliver a result and release the request's admission slot.
+    pub(crate) fn complete(
+        &self,
+        slot: &ResponseSlot,
+        result: Result<SolveResponse, ServeError>,
+    ) {
+        slot.fulfill(result);
+        let mut n = self.inflight.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.idle.notify_all();
+        }
+    }
+}
+
+/// The dynamic micro-batching solve server. Construct via
+/// [`SolveServer::builder`]; see the module docs for the architecture.
+pub struct SolveServer {
+    core: Arc<Core>,
+    batcher: Mutex<Option<JoinHandle<()>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Builder: register dynamics, then [`SolveServerBuilder::start`].
+pub struct SolveServerBuilder {
+    cfg: ServeConfig,
+    clock: Option<Arc<dyn Clock>>,
+    registry: HashMap<String, Arc<dyn OdeFunc + Send + Sync>>,
+}
+
+impl SolveServerBuilder {
+    /// Register a dynamics under `id`; requests name it by this id.
+    pub fn register<F>(mut self, id: &str, f: F) -> Self
+    where
+        F: OdeFunc + Send + Sync + 'static,
+    {
+        self.registry.insert(id.to_string(), Arc::new(f));
+        self
+    }
+
+    pub fn config(mut self, cfg: ServeConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Inject a time source (tests pass a [`ManualClock`]).
+    pub fn clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = Some(clock);
+        self
+    }
+
+    /// Spawn the batcher thread and the worker shard and start serving.
+    ///
+    /// Hand-built configs are clamped the way [`ServeConfig::from_env`]
+    /// clamps env overrides: `workers: 0` would deadlock every request (no
+    /// one executes batches) and `queue_capacity: 0` would bounce every
+    /// submission — the exact zero-pool footgun `default_workers` guards
+    /// against.
+    pub fn start(self) -> SolveServer {
+        let cfg = ServeConfig {
+            max_batch_size: self.cfg.max_batch_size.max(1),
+            max_queue_delay: self.cfg.max_queue_delay,
+            queue_capacity: self.cfg.queue_capacity.max(1),
+            workers: self.cfg.workers.clamp(1, 256),
+        };
+        let clock = self.clock.unwrap_or_else(|| Arc::new(WallClock::default()));
+        let core = Arc::new(Core {
+            submit_q: Channel::bounded(cfg.queue_capacity),
+            work_q: Channel::unbounded(),
+            cfg,
+            clock,
+            registry: self.registry,
+            metrics: ServeMetrics::default(),
+            inflight: Mutex::new(0),
+            idle: Condvar::new(),
+            drain_waiters: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        });
+        let batcher = {
+            let core = core.clone();
+            std::thread::spawn(move || batcher_loop(&core))
+        };
+        let workers = (0..core.cfg.workers)
+            .map(|_| {
+                let core = core.clone();
+                std::thread::spawn(move || worker::worker_loop(&core))
+            })
+            .collect();
+        SolveServer { core, batcher: Mutex::new(Some(batcher)), workers: Mutex::new(workers) }
+    }
+}
+
+impl SolveServer {
+    pub fn builder() -> SolveServerBuilder {
+        SolveServerBuilder {
+            cfg: ServeConfig::default(),
+            clock: None,
+            registry: HashMap::new(),
+        }
+    }
+
+    /// Submit one request. Returns immediately with a handle, or with
+    /// [`ServeError::Overloaded`] / [`ServeError::ShuttingDown`] /
+    /// a validation error — admission happens before any queuing.
+    pub fn submit(&self, req: SolveRequest) -> Result<ResponseHandle, ServeError> {
+        if self.core.closed.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        self.validate(&req)?;
+        {
+            let mut n = self.core.inflight.lock().unwrap();
+            if *n >= self.core.cfg.queue_capacity {
+                self.core.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Overloaded);
+            }
+            *n += 1;
+        }
+        let (handle, slot) = ResponseHandle::new();
+        let pending = Pending { req, slot, submitted: self.core.clock.now() };
+        match self.core.submit_q.push(pending) {
+            // Count as submitted only once actually queued, so the
+            // submitted == completed + failed + rejected ledger balances
+            // even when a push loses the race against close().
+            Ok(()) => {
+                self.core.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(handle)
+            }
+            // Closed between the flag check and the push: release the
+            // admission slot and report the shutdown.
+            Err(p) => {
+                self.core.complete(&p.slot, Err(ServeError::ShuttingDown));
+                Err(ServeError::ShuttingDown)
+            }
+        }
+    }
+
+    fn validate(&self, req: &SolveRequest) -> Result<(), ServeError> {
+        let f = self
+            .core
+            .registry
+            .get(&req.dynamics)
+            .ok_or_else(|| ServeError::UnknownDynamics(req.dynamics.clone()))?;
+        let dim = f.dim();
+        if req.z0.len() != dim {
+            return Err(ServeError::BadRequest(format!(
+                "z0 length {} != dynamics dim {dim}",
+                req.z0.len()
+            )));
+        }
+        if !req.z0.iter().all(|v| v.is_finite()) {
+            return Err(ServeError::BadRequest("non-finite initial state".into()));
+        }
+        if let Some(lam) = &req.grad {
+            if lam.len() != dim {
+                return Err(ServeError::BadRequest(format!(
+                    "grad cotangent length {} != dynamics dim {dim}",
+                    lam.len()
+                )));
+            }
+            if !lam.iter().all(|v| v.is_finite()) {
+                return Err(ServeError::BadRequest("non-finite cotangent".into()));
+            }
+        }
+        if !req.t0.is_finite() || !req.t1.is_finite() {
+            return Err(ServeError::BadRequest("non-finite time span".into()));
+        }
+        match req.tol {
+            Tolerance::Adaptive { rtol, atol } => {
+                if !req.tab.adaptive() {
+                    return Err(ServeError::BadRequest(format!(
+                        "tableau {} has no embedded error estimate; use Tolerance::Fixed",
+                        req.tab.name
+                    )));
+                }
+                if !(rtol > 0.0) || !(atol >= 0.0) {
+                    return Err(ServeError::BadRequest(format!(
+                        "bad tolerances rtol={rtol} atol={atol}"
+                    )));
+                }
+            }
+            Tolerance::Fixed { h } => {
+                if !(h > 0.0) || !h.is_finite() {
+                    return Err(ServeError::BadRequest(format!("bad fixed step h={h}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush all partial batches and block until every admitted request has
+    /// been answered. Concurrent submitters can extend the wait.
+    pub fn drain(&self) {
+        self.core.drain_waiters.fetch_add(1, Ordering::SeqCst);
+        self.core.submit_q.kick();
+        let n = self.core.inflight.lock().unwrap();
+        let _n = self.core.idle.wait_while(n, |n| *n > 0).unwrap();
+        self.core.drain_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Stop accepting work, drain everything in flight, and join all server
+    /// threads. Idempotent; also invoked on drop.
+    pub fn shutdown(&self) {
+        self.core.closed.store(true, Ordering::SeqCst);
+        self.core.submit_q.close();
+        if let Some(h) = self.batcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // The batcher has dispatched everything it will ever dispatch;
+        // closing the work queue lets workers drain the remainder and exit.
+        self.core.work_q.close();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Point-in-time aggregate metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+
+    /// Admitted-but-unanswered requests right now.
+    pub fn inflight(&self) -> usize {
+        *self.core.inflight.lock().unwrap()
+    }
+
+    /// The server's configuration (after env clamping).
+    pub fn config(&self) -> &ServeConfig {
+        &self.core.cfg
+    }
+}
+
+impl Drop for SolveServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batch-former thread: pull submissions, coalesce, dispatch.
+fn batcher_loop(core: &Core) {
+    let mut former = BatchFormer::new(core.cfg.max_batch_size, core.cfg.max_queue_delay);
+    let mut pulled: Vec<Pending> = Vec::new();
+    loop {
+        // Receive before flushing. While a drain() is waiting the receive is
+        // non-blocking, so every request already in the submission queue
+        // reaches the former before the drain flush — a drain that follows a
+        // burst of submits coalesces the full burst instead of whatever
+        // subset happened to be pulled already. Otherwise sleep until new
+        // work arrives, a drain() kicks us, or the earliest group deadline
+        // passes (with a ManualClock that wall wait is just an upper bound —
+        // drain()'s kick is what actually wakes us; tests never sleep it
+        // out).
+        let draining = core.drain_waiters.load(Ordering::SeqCst) > 0;
+        let timeout = if draining && !former.is_empty() {
+            Some(Duration::ZERO)
+        } else if draining {
+            None // everything flushed; block until new work or shutdown
+        } else {
+            former
+                .next_deadline()
+                .map(|d| d.saturating_sub(core.clock.now()).max(Duration::from_micros(50)))
+        };
+        let state = core.submit_q.recv_all(timeout, &mut pulled);
+        let now = core.clock.now();
+        for p in pulled.drain(..) {
+            former.push(p, now);
+        }
+        // Re-check the drain flag after the receive, and if it is set scoop
+        // the queue once more without blocking: every submit that
+        // happened-before the drain() call is already in the queue by the
+        // time the flag reads true, so the drain flush below sees the whole
+        // pre-drain burst — never a subset.
+        let draining = draining || core.drain_waiters.load(Ordering::SeqCst) > 0;
+        if draining {
+            core.submit_q.recv_all(Some(Duration::ZERO), &mut pulled);
+            for p in pulled.drain(..) {
+                former.push(p, now);
+            }
+        }
+        let flushed = if draining { former.drain(now) } else { former.poll(now) };
+        for b in flushed {
+            dispatch(core, b);
+        }
+        if state == ChannelState::Closed {
+            for b in former.drain(core.clock.now()) {
+                dispatch(core, b);
+            }
+            return;
+        }
+    }
+}
+
+fn dispatch(core: &Core, batch: FormedBatch) {
+    if let Err(b) = core.work_q.push(batch) {
+        // Unreachable in normal operation (the work queue is unbounded and
+        // closes only after this thread exits); fail the batch cleanly
+        // rather than dropping its requests.
+        for item in &b.items {
+            core.complete(&item.slot, Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::VanDerPol;
+
+    /// All `NODAL_SERVE_*` cases in ONE test: the process environment is
+    /// shared across parallel test threads (same pattern as the pool's
+    /// `NODAL_WORKERS` test).
+    #[test]
+    fn config_env_parse_and_clamp() {
+        std::env::set_var("NODAL_SERVE_MAX_BATCH", "0");
+        std::env::set_var("NODAL_SERVE_MAX_DELAY_US", "250");
+        std::env::set_var("NODAL_SERVE_QUEUE_CAP", "9999999");
+        std::env::set_var("NODAL_SERVE_WORKERS", "3");
+        let cfg = ServeConfig::from_env();
+        assert_eq!(cfg.max_batch_size, 1, "zero clamps to one");
+        assert_eq!(cfg.max_queue_delay, Duration::from_micros(250));
+        assert_eq!(cfg.queue_capacity, 1_000_000, "cap clamps high");
+        assert_eq!(cfg.workers, 3);
+
+        std::env::set_var("NODAL_SERVE_MAX_BATCH", "not-a-number");
+        let cfg = ServeConfig::from_env();
+        assert_eq!(cfg.max_batch_size, 16, "unparseable falls back to default");
+
+        for k in [
+            "NODAL_SERVE_MAX_BATCH",
+            "NODAL_SERVE_MAX_DELAY_US",
+            "NODAL_SERVE_QUEUE_CAP",
+            "NODAL_SERVE_WORKERS",
+        ] {
+            std::env::remove_var(k);
+        }
+        let cfg = ServeConfig::from_env();
+        assert_eq!(cfg.max_batch_size, 16);
+        assert_eq!(cfg.max_queue_delay, Duration::from_micros(500));
+        assert_eq!(cfg.queue_capacity, 1024);
+        assert!(cfg.workers >= 1);
+    }
+
+    #[test]
+    fn manual_clock_advances_only_on_demand() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(5));
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), Duration::from_millis(10));
+        c.set(Duration::from_secs(1));
+        assert_eq!(c.now(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn submit_validation_errors() {
+        let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
+        let err = server
+            .submit(SolveRequest::adaptive("nope", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::UnknownDynamics(_)), "{err}");
+
+        let err = server
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0], 1e-6, 1e-8))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "dim mismatch: {err}");
+
+        let err = server
+            .submit(SolveRequest::fixed("vdp", 0.0, 1.0, vec![1.0, 0.0], -0.1))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "negative h: {err}");
+
+        let mut bad_tab = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8);
+        bad_tab.tab = crate::ode::tableau::rk4();
+        let err = server.submit(bad_tab).unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "fixed tab + tol: {err}");
+
+        let err = server
+            .submit(
+                SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8)
+                    .with_grad(vec![1.0]),
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "lam mismatch: {err}");
+
+        server.shutdown();
+        let err = server
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8))
+            .unwrap_err();
+        assert_eq!(err, ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn start_clamps_degenerate_configs() {
+        // workers: 0 would leave dispatched batches unexecuted forever and
+        // queue_capacity: 0 would bounce every submission.
+        let server = SolveServer::builder()
+            .register("vdp", VanDerPol::new(0.5))
+            .config(ServeConfig {
+                max_batch_size: 0,
+                max_queue_delay: Duration::ZERO,
+                queue_capacity: 0,
+                workers: 0,
+            })
+            .start();
+        assert_eq!(server.config().workers, 1);
+        assert_eq!(server.config().queue_capacity, 1);
+        assert_eq!(server.config().max_batch_size, 1);
+        let h = server
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .unwrap();
+        assert!(h.wait().is_ok(), "clamped server must still serve");
+    }
+
+    #[test]
+    fn smoke_submit_and_wait() {
+        let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
+        let h = server
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8))
+            .unwrap();
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.z_t1.len(), 2);
+        assert!(resp.stats.nfe > 0);
+        assert!(resp.stats.batch_size >= 1);
+        // `wait` can return between the slot fulfillment and the admission
+        // release; drain() waits for the release before we assert on it.
+        server.drain();
+        let m = server.metrics();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(server.inflight(), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Bounded multi-producer channel used for both the submission queue
+//! (request intake → batch former) and the work queue (formed batches →
+//! worker shard).
+//!
+//! Unlike `std::sync::mpsc`, pushes on a full channel fail immediately —
+//! that is the server's backpressure primitive: admission control turns a
+//! full submission queue into [`super::ServeError::Overloaded`] instead of
+//! letting the queue grow without bound. Closing the channel wakes all
+//! waiters; receivers drain whatever is left before observing the close, so
+//! shutdown never drops accepted work.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// Set by [`Channel::kick`]; makes the next `recv_all` return even with
+    /// nothing to deliver, so the receiver re-checks its out-of-band state
+    /// (the batcher's drain flag).
+    kicked: bool,
+}
+
+/// A bounded MPMC queue with blocking receives and a non-blocking,
+/// fail-on-full send.
+pub struct Channel<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+/// Outcome of a receive: whether the channel can still produce more items.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelState {
+    /// More items may arrive.
+    Open,
+    /// Closed and fully drained — no item will ever arrive again.
+    Closed,
+}
+
+impl<T> Channel<T> {
+    /// A channel that holds at most `capacity` items (clamped to ≥ 1).
+    pub fn bounded(capacity: usize) -> Self {
+        Channel {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, kicked: false }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// An effectively unbounded channel (used for the internal work queue,
+    /// whose depth is already bounded by submission admission control).
+    pub fn unbounded() -> Self {
+        Self::bounded(usize::MAX)
+    }
+
+    /// Push one item. Fails with `Err(item)` when the channel is full or
+    /// closed (the item is handed back so the caller can report it).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Move every queued item into `buf`, blocking until at least one item
+    /// is available, the channel is closed and empty, or `timeout` expires.
+    /// Returns [`ChannelState::Closed`] only once the channel is closed
+    /// *and* drained.
+    pub fn recv_all(&self, timeout: Option<Duration>, buf: &mut Vec<T>) -> ChannelState {
+        let mut g = self.inner.lock().unwrap();
+        if g.items.is_empty() && !g.closed && !g.kicked {
+            let pending = |s: &mut Inner<T>| s.items.is_empty() && !s.closed && !s.kicked;
+            match timeout {
+                Some(d) => {
+                    let (guard, _) = self.ready.wait_timeout_while(g, d, pending).unwrap();
+                    g = guard;
+                }
+                None => {
+                    g = self.ready.wait_while(g, pending).unwrap();
+                }
+            }
+        }
+        g.kicked = false;
+        buf.extend(g.items.drain(..));
+        if g.closed && buf.is_empty() {
+            ChannelState::Closed
+        } else {
+            ChannelState::Open
+        }
+    }
+
+    /// Receive one item, blocking indefinitely; `None` once the channel is
+    /// closed and drained.
+    pub fn recv_one(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Close the channel: future pushes fail, waiters wake, queued items
+    /// remain receivable.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Wake a blocked [`Channel::recv_all`] without delivering anything
+    /// (used by `drain()` to get the batch former's attention). The wake-up
+    /// is latched, so a kick that lands just before the receiver starts
+    /// waiting is not lost.
+    pub fn kick(&self) {
+        self.inner.lock().unwrap().kicked = true;
+        self.ready.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_fails_when_full() {
+        let ch = Channel::bounded(2);
+        assert!(ch.push(1).is_ok());
+        assert!(ch.push(2).is_ok());
+        assert_eq!(ch.push(3), Err(3), "third push must bounce");
+        let mut buf = Vec::new();
+        assert_eq!(ch.recv_all(Some(Duration::ZERO), &mut buf), ChannelState::Open);
+        assert_eq!(buf, vec![1, 2]);
+        assert!(ch.push(3).is_ok(), "space freed after receive");
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let ch = Channel::bounded(8);
+        ch.push(1).unwrap();
+        ch.push(2).unwrap();
+        ch.close();
+        assert_eq!(ch.push(3), Err(3), "push after close fails");
+        assert_eq!(ch.recv_one(), Some(1), "queued items survive close");
+        assert_eq!(ch.recv_one(), Some(2));
+        assert_eq!(ch.recv_one(), None);
+        let mut buf = Vec::new();
+        assert_eq!(ch.recv_all(None, &mut buf), ChannelState::Closed);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn recv_all_wakes_on_push() {
+        let ch = std::sync::Arc::new(Channel::bounded(4));
+        let c2 = ch.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let state = c2.recv_all(None, &mut buf);
+            (state, buf)
+        });
+        ch.push(42).unwrap();
+        let (state, buf) = t.join().unwrap();
+        assert_eq!(state, ChannelState::Open);
+        assert_eq!(buf, vec![42]);
+    }
+
+    #[test]
+    fn recv_all_timeout_returns_open_and_empty() {
+        let ch: Channel<u32> = Channel::bounded(4);
+        let mut buf = Vec::new();
+        let state = ch.recv_all(Some(Duration::from_millis(1)), &mut buf);
+        assert_eq!(state, ChannelState::Open);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn kick_is_latched_and_consumed() {
+        let ch: Channel<u32> = Channel::bounded(4);
+        ch.kick(); // lands before the receiver waits — must not be lost
+        let mut buf = Vec::new();
+        let state = ch.recv_all(None, &mut buf);
+        assert_eq!(state, ChannelState::Open);
+        assert!(buf.is_empty(), "kick delivers nothing");
+        // Consumed: the next receive with a timeout waits it out normally.
+        let state = ch.recv_all(Some(Duration::from_millis(1)), &mut buf);
+        assert_eq!(state, ChannelState::Open);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let ch = Channel::bounded(0);
+        assert!(ch.push(7).is_ok());
+        assert_eq!(ch.push(8), Err(8));
+    }
+}

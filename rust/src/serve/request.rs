@@ -1,0 +1,323 @@
+//! Request/response vocabulary of the solve server.
+//!
+//! A [`SolveRequest`] names a registered dynamics, one initial state, a
+//! t-span, a solver tableau, and a tolerance; optionally it carries a
+//! terminal cotangent `dL/dz(T)` to request the batched ACA backward pass.
+//! Requests that agree on everything except the initial state (same
+//! [`BatchKey`]) can share one [`crate::ode::integrate_batch`] call — the
+//! engine's per-sample adaptive step control guarantees the co-batched
+//! results are the ones each request would have gotten alone.
+
+use crate::grad::GradResult;
+use crate::ode::integrate::IntegrateOpts;
+use crate::ode::tableau::Tableau;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Step-size policy of one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tolerance {
+    /// Adaptive stepping at `(rtol, atol)` (requires an adaptive tableau).
+    Adaptive { rtol: f64, atol: f64 },
+    /// Fixed step size `h > 0`.
+    Fixed { h: f64 },
+}
+
+/// One solve submitted to the server: a single sample (`z0.len() == dim`).
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    /// Registry id of the dynamics to solve.
+    pub dynamics: String,
+    /// Integration span `[t0, t1]`.
+    pub t0: f64,
+    pub t1: f64,
+    /// Initial state; length must equal the dynamics' `dim()`.
+    pub z0: Vec<f32>,
+    /// Solver tableau.
+    pub tab: &'static Tableau,
+    /// Step-size policy.
+    pub tol: Tolerance,
+    /// `Some(dL/dz(T))` requests the batched ACA backward pass; length must
+    /// equal `dim()`.
+    pub grad: Option<Vec<f32>>,
+}
+
+impl SolveRequest {
+    /// Forward-only request with adaptive tolerances and dopri5.
+    pub fn adaptive(dynamics: &str, t0: f64, t1: f64, z0: Vec<f32>, rtol: f64, atol: f64) -> Self {
+        SolveRequest {
+            dynamics: dynamics.to_string(),
+            t0,
+            t1,
+            z0,
+            tab: crate::ode::tableau::dopri5(),
+            tol: Tolerance::Adaptive { rtol, atol },
+            grad: None,
+        }
+    }
+
+    /// Forward-only fixed-step request.
+    pub fn fixed(dynamics: &str, t0: f64, t1: f64, z0: Vec<f32>, h: f64) -> Self {
+        SolveRequest {
+            dynamics: dynamics.to_string(),
+            t0,
+            t1,
+            z0,
+            tab: crate::ode::tableau::rk4(),
+            tol: Tolerance::Fixed { h },
+            grad: None,
+        }
+    }
+
+    /// Attach a terminal cotangent, turning this into a gradient request.
+    pub fn with_grad(mut self, lam_t1: Vec<f32>) -> Self {
+        self.grad = Some(lam_t1);
+        self
+    }
+
+    /// The solver options this request maps to.
+    pub fn opts(&self) -> IntegrateOpts {
+        match self.tol {
+            Tolerance::Adaptive { rtol, atol } => IntegrateOpts::with_tol(rtol, atol),
+            Tolerance::Fixed { h } => IntegrateOpts::fixed(h),
+        }
+    }
+
+    /// Coalescing key: requests with equal keys run in one batched solve.
+    pub fn batch_key(&self) -> BatchKey {
+        let (tol_kind, tol_a, tol_b) = match self.tol {
+            Tolerance::Adaptive { rtol, atol } => (0u8, rtol.to_bits(), atol.to_bits()),
+            Tolerance::Fixed { h } => (1u8, h.to_bits(), 0),
+        };
+        BatchKey {
+            dynamics: self.dynamics.clone(),
+            tab: self.tab.name,
+            t0: self.t0.to_bits(),
+            t1: self.t1.to_bits(),
+            tol_kind,
+            tol_a,
+            tol_b,
+            wants_grad: self.grad.is_some(),
+        }
+    }
+}
+
+/// What makes two requests co-batchable: same dynamics, solver, span and
+/// tolerance bits, and the same gradient flag (a batch either runs the
+/// backward pass for all its samples or for none).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub dynamics: String,
+    pub tab: &'static str,
+    pub t0: u64,
+    pub t1: u64,
+    pub tol_kind: u8,
+    pub tol_a: u64,
+    pub tol_b: u64,
+    pub wants_grad: bool,
+}
+
+/// Per-request timing and solver-cost report.
+#[derive(Debug, Clone, Default)]
+pub struct RequestStats {
+    /// Accepted steps `N_t`.
+    pub steps: usize,
+    /// `f` evaluations spent on this sample's forward pass.
+    pub nfe: usize,
+    /// Rejected step attempts.
+    pub n_rejected: usize,
+    /// Average inner iterations `m` per accepted step.
+    pub avg_m: f64,
+    /// Bytes the sample's checkpoints held during service.
+    pub checkpoint_bytes: usize,
+    /// Number of co-batched samples this request was served with.
+    pub batch_size: usize,
+    /// Time spent queued before its batch started executing.
+    pub queue_wait: Duration,
+    /// Time from batch start to response (shared by the whole batch).
+    pub service: Duration,
+}
+
+/// The server's answer to one [`SolveRequest`].
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    /// Final state `z(t1)`.
+    pub z_t1: Vec<f32>,
+    /// `Some` iff the request asked for gradients.
+    pub grad: Option<GradResult>,
+    /// Timing and solver-cost bookkeeping.
+    pub stats: RequestStats,
+}
+
+/// Why the server refused or failed a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control: the submission queue is at capacity. Retry later.
+    Overloaded,
+    /// The server is shutting down and no longer accepts work.
+    ShuttingDown,
+    /// The request names a dynamics id that was never registered.
+    UnknownDynamics(String),
+    /// The request is malformed (wrong state length, bad span, bad step…).
+    BadRequest(String),
+    /// The solver failed (stiffness blow-up, step underflow, …).
+    Solver(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "server overloaded: submission queue full"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::UnknownDynamics(id) => write!(f, "unknown dynamics id '{id}'"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServeError::Solver(msg) => write!(f, "solver error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One-shot completion slot shared between a request's handle and the worker
+/// that eventually serves it.
+#[derive(Debug, Default)]
+pub struct ResponseSlot {
+    value: Mutex<Option<Result<SolveResponse, ServeError>>>,
+    ready: Condvar,
+    /// Sticky: set on first delivery and never cleared, even after the
+    /// caller takes the value — lets panic cleanup tell "never delivered"
+    /// apart from "delivered and already consumed".
+    fulfilled: std::sync::atomic::AtomicBool,
+}
+
+impl ResponseSlot {
+    /// Deliver the result; wakes any waiter. Later calls are ignored (the
+    /// first delivery wins, including when the caller already consumed it).
+    pub fn fulfill(&self, result: Result<SolveResponse, ServeError>) {
+        let mut v = self.value.lock().unwrap();
+        if !self.fulfilled.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            *v = Some(result);
+            self.ready.notify_all();
+        }
+    }
+
+    /// True once a result has ever been delivered.
+    pub fn is_fulfilled(&self) -> bool {
+        self.fulfilled.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    fn wait_take(&self) -> Result<SolveResponse, ServeError> {
+        let mut v = self.value.lock().unwrap();
+        loop {
+            if let Some(r) = v.take() {
+                return r;
+            }
+            v = self.ready.wait(v).unwrap();
+        }
+    }
+
+    fn try_take(&self) -> Option<Result<SolveResponse, ServeError>> {
+        self.value.lock().unwrap().take()
+    }
+}
+
+/// The caller's side of a submitted request (one-shot: `wait` consumes it).
+#[derive(Debug)]
+pub struct ResponseHandle {
+    pub(crate) slot: Arc<ResponseSlot>,
+}
+
+impl ResponseHandle {
+    pub(crate) fn new() -> (Self, Arc<ResponseSlot>) {
+        let slot = Arc::new(ResponseSlot::default());
+        (ResponseHandle { slot: slot.clone() }, slot)
+    }
+
+    /// Block until the response is delivered and take it.
+    pub fn wait(self) -> Result<SolveResponse, ServeError> {
+        self.slot.wait_take()
+    }
+
+    /// Take the response if it has already been delivered.
+    pub fn try_take(&self) -> Option<Result<SolveResponse, ServeError>> {
+        self.slot.try_take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> SolveRequest {
+        SolveRequest::adaptive("vdp", 0.0, 5.0, vec![2.0, 0.0], 1e-6, 1e-8)
+    }
+
+    #[test]
+    fn same_parameters_same_key() {
+        let a = req();
+        let mut b = req();
+        b.z0 = vec![-1.0, 0.5]; // the state is the only thing allowed to differ
+        assert_eq!(a.batch_key(), b.batch_key());
+    }
+
+    #[test]
+    fn key_separates_incompatible_requests() {
+        let base = req();
+        let mut other = req();
+        other.t1 = 6.0;
+        assert_ne!(base.batch_key(), other.batch_key(), "span");
+        let mut other = req();
+        other.tol = Tolerance::Adaptive { rtol: 1e-5, atol: 1e-8 };
+        assert_ne!(base.batch_key(), other.batch_key(), "tolerance");
+        let mut other = req();
+        other.tab = crate::ode::tableau::rk23();
+        assert_ne!(base.batch_key(), other.batch_key(), "tableau");
+        let other = req().with_grad(vec![1.0, 0.0]);
+        assert_ne!(base.batch_key(), other.batch_key(), "grad flag");
+        let mut other = req();
+        other.dynamics = "linear".into();
+        assert_ne!(base.batch_key(), other.batch_key(), "dynamics");
+    }
+
+    #[test]
+    fn fixed_vs_adaptive_keys_differ() {
+        let a = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.01);
+        let mut b = req();
+        b.tab = a.tab;
+        assert_ne!(a.batch_key(), b.batch_key());
+    }
+
+    #[test]
+    fn response_slot_one_shot() {
+        let (handle, slot) = ResponseHandle::new();
+        assert!(handle.try_take().is_none());
+        assert!(!slot.is_fulfilled());
+        slot.fulfill(Err(ServeError::Overloaded));
+        slot.fulfill(Err(ServeError::ShuttingDown)); // ignored: first wins
+        assert!(slot.is_fulfilled());
+        assert_eq!(handle.try_take().unwrap().unwrap_err(), ServeError::Overloaded);
+        // A late delivery after the caller consumed the value must not
+        // resurrect the slot (fulfilled is sticky).
+        slot.fulfill(Err(ServeError::ShuttingDown));
+        assert!(handle.try_take().is_none());
+        assert!(slot.is_fulfilled());
+    }
+
+    #[test]
+    fn response_slot_wakes_waiter() {
+        let (handle, slot) = ResponseHandle::new();
+        let t = std::thread::spawn(move || handle.wait());
+        slot.fulfill(Err(ServeError::Overloaded));
+        assert_eq!(t.join().unwrap().unwrap_err(), ServeError::Overloaded);
+    }
+
+    #[test]
+    fn opts_round_trip() {
+        let o = req().opts();
+        assert_eq!(o.rtol, 1e-6);
+        assert_eq!(o.atol, 1e-8);
+        assert!(o.fixed_h.is_none());
+        let o = SolveRequest::fixed("vdp", 0.0, 1.0, vec![0.0, 0.0], 0.05).opts();
+        assert_eq!(o.fixed_h, Some(0.05));
+    }
+}

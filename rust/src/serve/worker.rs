@@ -1,0 +1,165 @@
+//! Batch execution: a shard of worker threads pulls [`FormedBatch`]es off
+//! the work queue, runs them through the batched engine
+//! ([`crate::ode::integrate_batch`] + [`crate::grad::aca_backward_batch`]),
+//! and scatters per-sample results back to each request's response slot.
+//!
+//! Poison isolation: `integrate_batch` fails the whole batch when any one
+//! sample blows up (stiffness, step underflow). A serving layer must not let
+//! one bad request fail its co-batched neighbors, so on batch failure the
+//! worker falls back to per-sample scalar solves — bit-identical to the
+//! batched path by the engine's equivalence guarantee — and only the
+//! offending samples report [`ServeError::Solver`].
+
+use super::batcher::FormedBatch;
+use super::request::{RequestStats, ServeError, SolveResponse};
+use super::Core;
+use crate::coordinator::pool::panic_msg;
+use crate::grad::{aca_backward, aca_backward_batch, GradResult};
+use crate::ode::{integrate, integrate_batch};
+
+/// Worker thread body: serve batches until the work queue closes and drains.
+///
+/// Panic containment (same discipline as `coordinator::pool::run_parallel`):
+/// a panicking dynamics `eval`/`vjp` — arbitrary user trait impls — must not
+/// kill the worker thread. An uncontained panic would leave every
+/// co-batched `ResponseHandle::wait` blocked forever, leak their admission
+/// slots until `submit` returns `Overloaded` for all traffic, and deadlock
+/// `drain`/`shutdown`. Instead the panicking batch's undelivered requests
+/// are failed with [`ServeError::Solver`] and the worker keeps serving.
+pub(crate) fn worker_loop(core: &Core) {
+    while let Some(batch) = core.work_q.recv_one() {
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| execute_batch(core, &batch)));
+        if let Err(payload) = outcome {
+            let err =
+                ServeError::Solver(format!("panic in batch execution: {}", panic_msg(&*payload)));
+            for item in &batch.items {
+                // complete() releases the admission slot exactly once; skip
+                // requests the panicking pass already delivered.
+                if !item.slot.is_fulfilled() {
+                    core.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    core.complete(&item.slot, Err(err.clone()));
+                }
+            }
+        }
+    }
+}
+
+type SampleOutcome = Result<(Vec<f32>, Option<GradResult>, RequestStats), ServeError>;
+
+/// Run one formed batch and deliver every member's response.
+pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
+    let started = core.clock.now();
+    let n = batch.items.len();
+    core.metrics.record_batch(n);
+
+    let Some(f) = core.registry.get(&batch.key.dynamics).cloned() else {
+        // submit() validates ids, so this only guards registry mutation bugs.
+        let err = ServeError::UnknownDynamics(batch.key.dynamics.clone());
+        for item in &batch.items {
+            core.complete(&item.slot, Err(err.clone()));
+        }
+        return;
+    };
+    let dim = f.dim();
+    let first = &batch.items[0].req;
+    let (t0, t1, tab) = (first.t0, first.t1, first.tab);
+    let opts = first.opts();
+    let wants_grad = batch.key.wants_grad;
+
+    let mut z0 = Vec::with_capacity(n * dim);
+    for item in &batch.items {
+        z0.extend_from_slice(&item.req.z0);
+    }
+
+    // The whole batched attempt — forward AND backward — is panic-contained
+    // like it is error-contained: a dynamics whose `eval` or `vjp` panics on
+    // one sample's state sends the batch down the same per-sample fallback
+    // an integration error does.
+    let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> anyhow::Result<Vec<SampleOutcome>> {
+            let bt = integrate_batch(&*f, t0, t1, &z0, tab, &opts)?;
+            let grads = wants_grad.then(|| {
+                let mut lam = Vec::with_capacity(n * dim);
+                for item in &batch.items {
+                    lam.extend_from_slice(item.req.grad.as_ref().expect("keyed wants_grad"));
+                }
+                aca_backward_batch(&*f, tab, &bt, &lam)
+            });
+            Ok((0..n)
+                .map(|i| {
+                    let tr = &bt.tracks[i];
+                    Ok((
+                        bt.last(i).to_vec(),
+                        grads.as_ref().map(|g| g[i].clone()),
+                        RequestStats {
+                            steps: tr.steps(),
+                            nfe: tr.nfe,
+                            n_rejected: tr.n_rejected,
+                            avg_m: tr.avg_m(),
+                            checkpoint_bytes: bt.checkpoint_bytes(i),
+                            ..Default::default()
+                        },
+                    ))
+                })
+                .collect())
+        },
+    ));
+    let outcomes: Vec<SampleOutcome> = match batched {
+        Ok(Ok(v)) => v,
+        // Per-sample fallback: isolate the poison sample(s) — error or
+        // panic — while the healthy ones still get their (bit-identical)
+        // scalar results.
+        Ok(Err(_)) | Err(_) => batch
+            .items
+            .iter()
+            .map(|item| {
+                let one = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> SampleOutcome {
+                        match integrate(&*f, t0, t1, &item.req.z0, tab, &opts) {
+                            Ok(traj) => {
+                                let grad = wants_grad.then(|| {
+                                    aca_backward(&*f, tab, &traj, item.req.grad.as_ref().unwrap())
+                                });
+                                Ok((
+                                    traj.last().to_vec(),
+                                    grad,
+                                    RequestStats {
+                                        steps: traj.len(),
+                                        nfe: traj.nfe,
+                                        n_rejected: traj.n_rejected,
+                                        avg_m: traj.avg_m(),
+                                        checkpoint_bytes: traj.checkpoint_bytes(),
+                                        ..Default::default()
+                                    },
+                                ))
+                            }
+                            Err(e) => Err(ServeError::Solver(e.to_string())),
+                        }
+                    },
+                ));
+                one.unwrap_or_else(|p| {
+                    Err(ServeError::Solver(format!("panic in solve: {}", panic_msg(&*p))))
+                })
+            })
+            .collect(),
+    };
+
+    let service = core.clock.now().saturating_sub(started);
+    for (item, outcome) in batch.items.iter().zip(outcomes) {
+        let queue_wait = started.saturating_sub(item.submitted);
+        match outcome {
+            Ok((z_t1, grad, mut stats)) => {
+                stats.batch_size = n;
+                stats.queue_wait = queue_wait;
+                stats.service = service;
+                core.metrics.record_request(queue_wait, service, stats.nfe);
+                core.complete(&item.slot, Ok(SolveResponse { z_t1, grad, stats }));
+            }
+            Err(e) => {
+                core.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                core.complete(&item.slot, Err(e));
+            }
+        }
+    }
+}

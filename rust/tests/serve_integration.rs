@@ -1,0 +1,350 @@
+//! End-to-end tests of the solve server: equivalence with direct engine
+//! calls, admission control/backpressure, and shutdown/drain semantics.
+//!
+//! No `sleep`-based assertions anywhere: timing-sensitive behavior runs
+//! under an injected [`ManualClock`] with explicit `drain()`, and blocking
+//! behavior is forced with a condition-variable-gated dynamics instead of
+//! timing races.
+
+use nodal::grad::aca_backward;
+use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
+use nodal::ode::{integrate, integrate_batch, tableau, IntegrateOpts, OdeFunc};
+use nodal::serve::{Clock, ManualClock, ServeConfig, ServeError, SolveRequest, SolveServer};
+use nodal::util::Pcg64;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A dynamics whose evaluations block until the test opens the gate —
+/// deterministic worker stalling without sleeps.
+struct Gated {
+    inner: Linear,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Gated {
+    fn new() -> (Self, Arc<(Mutex<bool>, Condvar)>) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        (Gated { inner: Linear::new(-0.5, 2), gate: gate.clone() }, gate)
+    }
+}
+
+fn open_gate(gate: &(Mutex<bool>, Condvar)) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+/// Opens the gate on drop, so an assertion failure while workers are gated
+/// still lets the server's Drop → shutdown() join its threads instead of
+/// turning the test failure into a permanent hang.
+struct GateOpener(Arc<(Mutex<bool>, Condvar)>);
+
+impl Drop for GateOpener {
+    fn drop(&mut self) {
+        open_gate(&self.0);
+    }
+}
+
+impl OdeFunc for Gated {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        let open = self.gate.0.lock().unwrap();
+        let _open = self.gate.1.wait_while(open, |o| !*o).unwrap();
+        self.inner.eval(t, z, dz);
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.inner.vjp(t, z, w, wjz, wjp);
+    }
+}
+
+fn test_config(max_batch: usize, cap: usize, workers: usize) -> ServeConfig {
+    ServeConfig {
+        max_batch_size: max_batch,
+        // Far beyond anything a test waits out — deadline flushes can only
+        // come from the policy logic, never from wall time passing.
+        max_queue_delay: Duration::from_secs(3600),
+        queue_capacity: cap,
+        workers,
+    }
+}
+
+/// Served results are bit-identical to direct `integrate` /
+/// `integrate_batch` calls for fixed-step requests, and within adaptive
+/// tolerance (in fact the engine guarantees bit-equality there too) for
+/// adaptive ones — co-batching must never change a request's answer.
+#[test]
+fn served_results_match_direct_solves() {
+    let vdp = VanDerPol::new(0.5);
+    let conv = ConvFlow::random(4, 4, 7, 0.4);
+    let server = SolveServer::builder()
+        .register("vdp", vdp.clone())
+        .register("conv", conv.clone())
+        .config(test_config(8, 256, 2))
+        .start();
+
+    let mut rng = Pcg64::seed(42);
+    let fixed_z0: Vec<Vec<f32>> =
+        (0..6).map(|_| (0..2).map(|_| rng.range(-1.5, 1.5) as f32).collect()).collect();
+    let adaptive_z0: Vec<Vec<f32>> =
+        (0..5).map(|_| (0..16).map(|_| rng.range(-1.0, 1.0) as f32).collect()).collect();
+
+    // Mixed traffic: fixed-step van der Pol + adaptive conv-flow, all
+    // submitted concurrently so the former is free to co-batch them.
+    let fixed_handles: Vec<_> = fixed_z0
+        .iter()
+        .map(|z0| {
+            server.submit(SolveRequest::fixed("vdp", 0.0, 1.5, z0.clone(), 0.05)).unwrap()
+        })
+        .collect();
+    let adaptive_handles: Vec<_> = adaptive_z0
+        .iter()
+        .map(|z0| {
+            server
+                .submit(SolveRequest::adaptive("conv", 0.0, 2.0, z0.clone(), 1e-6, 1e-8))
+                .unwrap()
+        })
+        .collect();
+    server.drain();
+
+    // Fixed-step: bit-identical to the scalar path AND the batch engine.
+    let fixed_opts = IntegrateOpts::fixed(0.05);
+    let flat: Vec<f32> = fixed_z0.iter().flatten().copied().collect();
+    let bt = integrate_batch(&vdp, 0.0, 1.5, &flat, tableau::rk4(), &fixed_opts).unwrap();
+    for (i, (h, z0)) in fixed_handles.into_iter().zip(&fixed_z0).enumerate() {
+        let resp = h.wait().unwrap();
+        let direct = integrate(&vdp, 0.0, 1.5, z0, tableau::rk4(), &fixed_opts).unwrap();
+        assert_eq!(resp.z_t1, direct.last(), "sample {i}: served != scalar");
+        assert_eq!(resp.z_t1, bt.last(i), "sample {i}: served != integrate_batch");
+        assert_eq!(resp.stats.nfe, direct.nfe, "sample {i}: nfe accounting");
+        assert_eq!(resp.stats.steps, direct.len());
+        assert!(resp.stats.batch_size >= 1);
+    }
+
+    // Adaptive: within tolerance of the scalar path (per-sample step
+    // control makes this bit-exact in practice; assert the guarantee).
+    let ad_opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+    for (i, (h, z0)) in adaptive_handles.into_iter().zip(&adaptive_z0).enumerate() {
+        let resp = h.wait().unwrap();
+        let direct = integrate(&conv, 0.0, 2.0, z0, tableau::dopri5(), &ad_opts).unwrap();
+        for (a, b) in resp.z_t1.iter().zip(direct.last()) {
+            assert!(
+                (a - b).abs() as f64 <= 1e-6 * (b.abs() as f64).max(1.0),
+                "adaptive sample {i}: {a} vs {b}"
+            );
+        }
+        assert_eq!(resp.stats.nfe, direct.nfe, "adaptive sample {i}: nfe");
+    }
+
+    let m = server.metrics();
+    assert_eq!(m.completed, 11);
+    assert_eq!(m.rejected, 0);
+    assert!(m.batches >= 2, "two incompatible groups can never share a batch");
+}
+
+/// Gradient requests return the exact batched-ACA gradients.
+#[test]
+fn served_gradients_match_aca_backward() {
+    let vdp = VanDerPol::new(0.4);
+    let server = SolveServer::builder()
+        .register("vdp", vdp.clone())
+        .config(test_config(8, 64, 2))
+        .start();
+    let mut rng = Pcg64::seed(7);
+    let cases: Vec<(Vec<f32>, Vec<f32>)> = (0..5)
+        .map(|_| {
+            let z0 = vec![rng.range(-1.5, 1.5) as f32, rng.range(-1.5, 1.5) as f32];
+            let lam = vec![rng.normal_f32(), rng.normal_f32()];
+            (z0, lam)
+        })
+        .collect();
+    let handles: Vec<_> = cases
+        .iter()
+        .map(|(z0, lam)| {
+            server
+                .submit(
+                    SolveRequest::fixed("vdp", 0.0, 1.0, z0.clone(), 0.02)
+                        .with_grad(lam.clone()),
+                )
+                .unwrap()
+        })
+        .collect();
+    server.drain();
+    let opts = IntegrateOpts::fixed(0.02);
+    for (i, (h, (z0, lam))) in handles.into_iter().zip(&cases).enumerate() {
+        let resp = h.wait().unwrap();
+        let traj = integrate(&vdp, 0.0, 1.0, z0, tableau::rk4(), &opts).unwrap();
+        let direct = aca_backward(&vdp, tableau::rk4(), &traj, lam);
+        let served = resp.grad.expect("gradient requested");
+        assert_eq!(served.dl_dz0, direct.dl_dz0, "sample {i}: dL/dz0");
+        assert_eq!(served.meter.nfe_backward, direct.meter.nfe_backward, "sample {i}");
+    }
+}
+
+/// Admission control: with workers deterministically stalled, the
+/// `queue_capacity`-th + 1 submission bounces with `Overloaded`; once the
+/// gate opens and the backlog drains, the server admits again.
+#[test]
+fn overloaded_on_full_queue_then_recovers() {
+    let (gated, gate) = Gated::new();
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("gated", gated)
+        .config(test_config(1, 4, 1))
+        .clock(clock)
+        .start();
+    // Declared AFTER `server` so it drops FIRST during a panic unwind —
+    // the gate must open before SolveServer::drop joins the gated worker.
+    let opener = GateOpener(gate);
+
+    let req = || SolveRequest::fixed("gated", 0.0, 1.0, vec![1.0, 0.0], 0.25);
+    let handles: Vec<_> = (0..4).map(|_| server.submit(req()).unwrap()).collect();
+    let err = server.submit(req()).unwrap_err();
+    assert_eq!(err, ServeError::Overloaded, "capacity 4 must bounce the 5th request");
+    assert_eq!(server.metrics().rejected, 1);
+
+    drop(opener); // open the gate
+    server.drain();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.stats.batch_size, 1, "request {i} served with max_batch_size=1");
+    }
+    let h = server.submit(req()).unwrap();
+    assert!(h.wait().is_ok(), "admission must recover after the backlog drains");
+}
+
+/// `drain()` flushes partial groups below both flush thresholds — the
+/// virtual clock never reaches the deadline and the group never fills, yet
+/// every request completes.
+#[test]
+fn drain_flushes_partial_batches_without_deadline() {
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("linear", Linear::new(-0.8, 4))
+        .config(test_config(64, 256, 2))
+        .clock(clock.clone())
+        .start();
+    let handles: Vec<_> = (0..3)
+        .map(|i| {
+            server
+                .submit(SolveRequest::fixed(
+                    "linear",
+                    0.0,
+                    1.0,
+                    vec![i as f32, 1.0, -1.0, 0.5],
+                    0.1,
+                ))
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(clock.now(), Duration::ZERO, "virtual time never advanced");
+    server.drain();
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.stats.batch_size, 3, "one coalesced batch of all three");
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.batch_sizes[3], 1);
+}
+
+/// Shutdown must answer every admitted request (drain, not drop) and then
+/// reject new work.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let server = SolveServer::builder()
+        .register("linear", Linear::new(-0.5, 2))
+        .config(test_config(4, 256, 2))
+        .start();
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            server
+                .submit(SolveRequest::fixed("linear", 0.0, 1.0, vec![i as f32, -1.0], 0.05))
+                .unwrap()
+        })
+        .collect();
+    server.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.wait();
+        assert!(resp.is_ok(), "request {i} dropped during shutdown: {resp:?}");
+    }
+    assert_eq!(
+        server
+            .submit(SolveRequest::fixed("linear", 0.0, 1.0, vec![0.0, 0.0], 0.05))
+            .unwrap_err(),
+        ServeError::ShuttingDown
+    );
+    assert_eq!(server.metrics().completed, 32);
+}
+
+/// Dynamics with a panic landmine: evaluating a state with `z[0]` above the
+/// threshold panics (user dynamics are arbitrary trait impls).
+struct PanickyAbove(f32);
+
+impl OdeFunc for PanickyAbove {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        assert!(z[0] <= self.0, "landmine: z[0]={} above {}", z[0], self.0);
+        dz[0] = -0.5 * z[0];
+        dz[1] = -0.5 * z[1];
+    }
+    fn vjp(&self, _t: f64, _z: &[f32], w: &[f32], wjz: &mut [f32], _wjp: &mut [f32]) {
+        wjz[0] = -0.5 * w[0];
+        wjz[1] = -0.5 * w[1];
+    }
+}
+
+/// A panicking dynamics must not kill the worker (which would hang every
+/// co-batched caller, leak admission slots, and deadlock drain/shutdown):
+/// the panicking sample fails alone, its healthy neighbor answers, and the
+/// server keeps serving afterwards.
+#[test]
+fn panicking_sample_is_contained_and_isolated() {
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("mine", PanickyAbove(5.0))
+        .config(test_config(16, 64, 1))
+        .clock(clock)
+        .start();
+    let mk = |z0: Vec<f32>| SolveRequest::fixed("mine", 0.0, 1.0, z0, 0.1);
+    let good = server.submit(mk(vec![0.5, 1.0])).unwrap();
+    let bad = server.submit(mk(vec![9.0, 0.0])).unwrap(); // first eval panics
+    server.drain();
+    let good = good.wait();
+    let bad = bad.wait();
+    assert!(good.is_ok(), "healthy neighbor lost to a co-batched panic: {good:?}");
+    match bad {
+        Err(ServeError::Solver(msg)) => assert!(msg.contains("panic"), "{msg}"),
+        other => panic!("panicking sample must fail with Solver: {other:?}"),
+    }
+    // The single worker survived; the server still serves.
+    let h = server.submit(mk(vec![1.0, -1.0])).unwrap();
+    server.drain();
+    assert!(h.wait().is_ok(), "worker died on the panic");
+}
+
+/// A poison request (solver failure) must not take down its co-batched
+/// neighbors: the healthy samples still answer, the poison one reports a
+/// solver error.
+#[test]
+fn poison_sample_is_isolated_from_its_batch() {
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("vdp", VanDerPol::new(5.0))
+        .config(test_config(16, 64, 1))
+        .clock(clock)
+        .start();
+    // The huge initial state overflows `y1²` to infinity, so its solve
+    // rejects every trial down to step-size underflow; the tame state
+    // co-batched under the same key must still answer.
+    let mk = |z0: Vec<f32>| SolveRequest::adaptive("vdp", 0.0, 4.0, z0, 1e-9, 1e-12);
+    let good = server.submit(mk(vec![0.05, 0.0])).unwrap();
+    let bad = server.submit(mk(vec![f32::MAX.sqrt(), 1.0])).unwrap();
+    server.drain();
+    let good = good.wait();
+    let bad = bad.wait();
+    assert!(good.is_ok(), "healthy neighbor failed: {good:?}");
+    assert!(matches!(bad, Err(ServeError::Solver(_))), "poison must fail alone: {bad:?}");
+}
