@@ -1,0 +1,148 @@
+//! Backward-pass workload: shared-stage batched reverse sweep
+//! (`aca_backward_batch` → `step_vjp_batch`, one `eval_batch`/`vjp_batch`
+//! dispatch per stage per reverse round) versus the per-sample replay it
+//! replaced (one scalar `step_vjp` per sample per step, reading the same
+//! shared checkpoint arena). Both paths produce bit-identical per-sample
+//! gradients — the comparison isolates the dispatch/allocation amortization,
+//! which is the entire point of the shared sweep.
+//!
+//! `--smoke` shrinks workloads and the sampling budget for CI: the bench
+//! still runs end-to-end and appends its JSON lines to
+//! `results/bench/grad_backward.jsonl` (via `bench::Runner::save`), so the
+//! perf trajectory accumulates on every pipeline run.
+
+use nodal::bench::Runner;
+use nodal::grad::{aca_backward_batch, step_vjp, GradResult};
+use nodal::ode::analytic::{ConvFlow, Linear, ThreeBody, VanDerPol};
+use nodal::ode::{integrate_batch, tableau, BatchTrajectory, IntegrateOpts, OdeFunc, Tableau};
+use nodal::util::Pcg64;
+
+/// The pre-shared-stage backward: replay every sample's reverse sweep
+/// independently, one scalar `step_vjp` per step, straight out of the shared
+/// arena — exactly what `aca_backward_batch` used to do.
+fn per_sample_replay<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    traj: &BatchTrajectory,
+    lam_t1: &[f32],
+) -> Vec<GradResult> {
+    let d = f.dim();
+    (0..traj.batch)
+        .map(|i| {
+            let tr = &traj.tracks[i];
+            let n = tr.steps();
+            let mut lam = lam_t1[i * d..(i + 1) * d].to_vec();
+            let mut dtheta = vec![0.0f32; f.n_params()];
+            let mut meter = nodal::grad::CostMeter::default();
+            for k in (0..n).rev() {
+                let out =
+                    step_vjp(f, tab, tr.ts[k], tr.hs[k], traj.z(i, k), &lam, &mut dtheta, false);
+                lam = out.dz;
+                meter.nfe_backward += out.nfe;
+                meter.vjp_calls += out.nvjp;
+            }
+            GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
+        })
+        .collect()
+}
+
+/// Forward-solve once, then bench shared-stage vs per-sample replay over the
+/// same recorded trajectory. Returns (replay_ms, shared_ms).
+#[allow(clippy::too_many_arguments)]
+fn bench_pair<F: OdeFunc>(
+    r: &mut Runner,
+    name: &str,
+    f: &F,
+    b: usize,
+    t1: f64,
+    tab: &'static Tableau,
+    opts: &IntegrateOpts,
+    rng: &mut Pcg64,
+    z_scale: f32,
+) -> (f64, f64) {
+    let d = f.dim();
+    let z0: Vec<f32> = (0..b * d).map(|_| rng.normal_f32() * z_scale).collect();
+    let lam: Vec<f32> = (0..b * d).map(|_| rng.normal_f32()).collect();
+    let bt = integrate_batch(f, 0.0, t1, &z0, tab, opts).unwrap();
+    let steps: usize = (0..b).map(|i| bt.steps(i)).sum();
+    println!("  [{name}] B={b} d={d} total accepted steps {steps}");
+
+    // Sanity: both paths must agree bit-for-bit before we time them.
+    let gs = aca_backward_batch(f, tab, &bt, &lam);
+    let gr = per_sample_replay(f, tab, &bt, &lam);
+    for (s, p) in gs.iter().zip(&gr) {
+        assert_eq!(s.dl_dz0, p.dl_dz0, "{name}: shared-stage diverged from replay");
+        assert_eq!(s.dl_dtheta, p.dl_dtheta, "{name}: dθ diverged");
+    }
+
+    let replay = r
+        .bench(&format!("{name}_backward_replay"), || {
+            let g = per_sample_replay(f, tab, &bt, &lam);
+            std::hint::black_box(g[0].dl_dz0[0]);
+        })
+        .mean_ms;
+    let shared = r
+        .bench(&format!("{name}_backward_shared"), || {
+            let g = aca_backward_batch(f, tab, &bt, &lam);
+            std::hint::black_box(g[0].dl_dz0[0]);
+        })
+        .mean_ms;
+    (replay, shared)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut r = Runner::new("grad_backward");
+    if smoke {
+        r.set_target_s(0.05);
+    }
+    let mut rng = Pcg64::seed(31);
+    // Scale knobs: smoke keeps every variant but shrinks batch and span.
+    let (b_small, b_large, span) = if smoke { (2, 4, 1.0) } else { (8, 32, 3.0) };
+
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+
+    // Labels carry the *actual* batch size so smoke rows in the persisted
+    // jsonl are never confused with full-size runs of the same workload.
+
+    // Small-state oscillator: dispatch-bound — the case the shared sweep
+    // targets hardest (per-sample replay pays one dynamic call per 2 floats).
+    let f = VanDerPol::new(0.5);
+    let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+    let name = format!("vdp_b{b_large}");
+    let (rp, sh) =
+        bench_pair(&mut r, &name, &f, b_large, span, tableau::dopri5(), &opts, &mut rng, 1.0);
+    pairs.push((name, rp, sh));
+
+    // Element-wise linear at a fixed step: many steps, parameterful (dθ
+    // accumulation rides the shared sweep too).
+    let f = Linear::new(-0.9, 64);
+    let opts = IntegrateOpts::fixed(0.01);
+    let name = format!("linear64_b{}", b_large / 2);
+    let (rp, sh) =
+        bench_pair(&mut r, &name, &f, b_large / 2, 1.0, tableau::rk4(), &opts, &mut rng, 1.0);
+    pairs.push((name, rp, sh));
+
+    // Image-sized state: compute-heavier per stage, so the win shifts from
+    // dispatch amortization toward allocation reuse.
+    let f = ConvFlow::random(16, 16, 9, 0.4);
+    let opts = IntegrateOpts::with_tol(1e-5, 1e-7);
+    let name = format!("convflow256_b{b_small}");
+    let (rp, sh) =
+        bench_pair(&mut r, &name, &f, b_small, 1.0, tableau::dopri5(), &opts, &mut rng, 0.5);
+    pairs.push((name, rp, sh));
+
+    // Three-body with trainable masses: FD-heavy vjp — per-sample cost
+    // dominates, the shared sweep should at least break even.
+    let f = ThreeBody::new([1e-3, 8e-4, 1.2e-3]);
+    let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+    let name = format!("threebody_b{b_small}");
+    let (rp, sh) =
+        bench_pair(&mut r, &name, &f, b_small, 0.5, tableau::dopri5(), &opts, &mut rng, 0.6);
+    pairs.push((name, rp, sh));
+
+    println!("-- shared-stage speedup over per-sample replay --");
+    for (name, replay, shared) in &pairs {
+        println!("  {:<20} {:>6.2}x  ({:.4} ms -> {:.4} ms)", name, replay / shared, replay, shared);
+    }
+}

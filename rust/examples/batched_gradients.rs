@@ -1,7 +1,9 @@
 //! Batched gradient estimation: solve a mini-batch of B independent van der
 //! Pol initial states through one `integrate_batch` call, run the batched
-//! ACA backward pass, and verify per-sample equivalence with the scalar
-//! path. Pure Rust dynamics (no artifacts needed).
+//! ACA backward pass — a shared-stage reverse sweep: one
+//! `eval_batch`/`vjp_batch` dispatch per stage per reverse round across all
+//! live samples — and verify per-sample equivalence with the scalar path.
+//! Pure Rust dynamics (no artifacts needed).
 //!
 //!     cargo run --release --offline --example batched_gradients
 

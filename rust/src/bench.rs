@@ -30,6 +30,14 @@ impl Runner {
         Runner { group: group.to_string(), target_s: 0.6, results: Vec::new() }
     }
 
+    /// Override the per-benchmark sampling budget in seconds (clamped to
+    /// [0.01, 10]). The 0.6 s default suits local perf runs; CI smoke
+    /// passes use a small budget so every bench still executes — and
+    /// persists a results line — without stalling the pipeline.
+    pub fn set_target_s(&mut self, s: f64) {
+        self.target_s = s.clamp(0.01, 10.0);
+    }
+
     /// Benchmark a closure. The closure should return something observable
     /// (use `std::hint::black_box` inside for values you must not DCE).
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {

@@ -1,6 +1,15 @@
-//! Batched ACA backward pass: replay each sample's saved `(t_i, h_i, z_i)`
-//! checkpoints straight out of the [`BatchTrajectory`]'s shared arena and
-//! run the exact discrete step adjoint — per-sample results are
+//! Batched ACA backward pass with **shared stage recomputation**: replay
+//! each sample's saved `(t_i, h_i, z_i)` checkpoints straight out of the
+//! [`BatchTrajectory`]'s shared arena and run the exact discrete step
+//! adjoint for all samples sharing a reverse round at once — one
+//! [`OdeFunc::eval_batch`]/[`OdeFunc::vjp_batch`] sweep per stage per round
+//! ([`super::step_vjp_batch`]) instead of one scalar call per sample,
+//! mirroring the forward engine's stage sweeps in `ode/batch.rs`.
+//!
+//! Samples have different step counts, so the loop keeps an **active set**
+//! symmetric to the forward loop's: each sample starts at its own last step
+//! and retires from the shared sweep when its reverse index underflows.
+//! Per-sample results — `dL/dz0`, `dL/dθ`, and every meter — are
 //! bit-identical to [`aca_backward`](super::aca_backward) over the
 //! equivalent per-sample [`Trajectory`](crate::ode::Trajectory) (asserted by
 //! `rust/tests/proptests.rs`).
@@ -10,14 +19,15 @@
 //! shared structure across samples); [`backward_batch`] routes them through
 //! [`BatchTrajectory::to_trajectory`].
 
-use super::step_vjp::step_vjp;
+use super::step_vjp::{step_vjp_batch, StepVjpBatchScratch};
 use super::{CostMeter, GradResult, Method};
 use crate::ode::batch::BatchTrajectory;
 use crate::ode::func::OdeFunc;
 use crate::ode::integrate::IntegrateOpts;
 use crate::ode::tableau::Tableau;
 
-/// Run the ACA backward pass for every sample of a batched trajectory.
+/// Run the ACA backward pass for every sample of a batched trajectory,
+/// sharing stage recomputation across samples.
 ///
 /// * `lam_t1` — `dL/dz(T)` for all samples, row-major `[B × D]`.
 ///
@@ -30,33 +40,93 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
     lam_t1: &[f32],
 ) -> Vec<GradResult> {
     let d = f.dim();
+    let p = f.n_params();
     assert_eq!(d, traj.dim, "dynamics dim != trajectory dim");
     assert_eq!(lam_t1.len(), traj.batch * d, "lam length != B × D");
+    let b = traj.batch;
 
-    (0..traj.batch)
+    // Per-sample running state, indexed by sample id.
+    let mut lams = lam_t1.to_vec();
+    let mut dthetas = vec![0.0f32; b * p];
+    let mut nfe_back = vec![0usize; b];
+    let mut nvjp_tot = vec![0usize; b];
+    // Reverse cursor: steps left to process; the sample retires at 0.
+    let mut rem: Vec<usize> = traj.tracks.iter().map(|t| t.steps()).collect();
+
+    // Round scratch, packed in active order (slot `a` of a round buffer is
+    // the `a`-th live sample) — no allocation inside the loop beyond the
+    // next-active vec, same discipline as the forward loop.
+    let mut active: Vec<usize> = (0..b).filter(|&i| rem[i] > 0).collect();
+    let mut ts_p = vec![0.0f64; b];
+    let mut hs_p = vec![0.0f64; b];
+    let mut zs_p = vec![0.0f32; b * d];
+    let mut lam_p = vec![0.0f32; b * d];
+    let mut dz_p = vec![0.0f32; b * d];
+    let mut dth_p = vec![0.0f32; b * p];
+    let mut nv_p = vec![0usize; b];
+    let mut scratch = StepVjpBatchScratch::new();
+
+    // Reverse sweep over the saved discretization points (paper Algo 2),
+    // vectorized over samples: every round runs one shared-stage step
+    // adjoint over all samples whose reverse index is still in range.
+    while !active.is_empty() {
+        let na = active.len();
+        for (a, &i) in active.iter().enumerate() {
+            let k = rem[i] - 1;
+            let tr = &traj.tracks[i];
+            ts_p[a] = tr.ts[k];
+            hs_p[a] = tr.hs[k];
+            zs_p[a * d..(a + 1) * d].copy_from_slice(traj.z(i, k));
+            lam_p[a * d..(a + 1) * d].copy_from_slice(&lams[i * d..(i + 1) * d]);
+            // Gather the running dθ so the shared sweep accumulates straight
+            // onto it (the scatter below copies it back bit-for-bit).
+            dth_p[a * p..(a + 1) * p].copy_from_slice(&dthetas[i * p..(i + 1) * p]);
+            nv_p[a] = 0;
+        }
+        let nfe_each = step_vjp_batch(
+            f,
+            tab,
+            &ts_p[..na],
+            &hs_p[..na],
+            &zs_p[..na * d],
+            &lam_p[..na * d],
+            &mut dz_p[..na * d],
+            &mut dth_p[..na * p],
+            &mut nv_p[..na],
+            &mut scratch,
+        );
+        let mut next_active: Vec<usize> = Vec::with_capacity(na);
+        for (a, &i) in active.iter().enumerate() {
+            lams[i * d..(i + 1) * d].copy_from_slice(&dz_p[a * d..(a + 1) * d]);
+            dthetas[i * p..(i + 1) * p].copy_from_slice(&dth_p[a * p..(a + 1) * p]);
+            nfe_back[i] += nfe_each;
+            nvjp_tot[i] += nv_p[a];
+            rem[i] -= 1;
+            if rem[i] > 0 {
+                next_active.push(i);
+            }
+        }
+        active = next_active;
+    }
+
+    (0..b)
         .map(|i| {
             let tr = &traj.tracks[i];
-            let n = tr.steps();
-            let mut lam = lam_t1[i * d..(i + 1) * d].to_vec();
-            let mut dtheta = vec![0.0f32; f.n_params()];
-            let mut meter = CostMeter {
-                nfe_forward: tr.nfe,
-                checkpoint_bytes: traj.checkpoint_bytes(i),
-                n_steps: n,
-                n_rejected: tr.n_rejected,
-                ..Default::default()
-            };
-            // Reverse sweep over the sample's saved discretization points
-            // (paper Algo 2), reading states from the shared arena.
-            for k in (0..n).rev() {
-                let out =
-                    step_vjp(f, tab, tr.ts[k], tr.hs[k], traj.z(i, k), &lam, &mut dtheta, false);
-                lam = out.dz;
-                meter.nfe_backward += out.nfe;
-                meter.vjp_calls += out.nvjp;
-                meter.graph_depth += out.nvjp;
+            GradResult {
+                dl_dz0: lams[i * d..(i + 1) * d].to_vec(),
+                dl_dtheta: dthetas[i * p..(i + 1) * p].to_vec(),
+                meter: CostMeter {
+                    nfe_forward: tr.nfe,
+                    nfe_backward: nfe_back[i],
+                    vjp_calls: nvjp_tot[i],
+                    // Depth: one chained VJP sweep per accepted step.
+                    graph_depth: nvjp_tot[i],
+                    checkpoint_bytes: traj.checkpoint_bytes(i),
+                    n_steps: tr.steps(),
+                    n_rejected: tr.n_rejected,
+                    ..Default::default()
+                },
             }
-            GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
         })
         .collect()
 }
@@ -105,6 +175,105 @@ mod tests {
     use crate::grad::aca_backward;
     use crate::ode::analytic::{Linear, VanDerPol};
     use crate::ode::{integrate, integrate_batch, tableau, IntegrateOpts};
+    use std::cell::Cell;
+
+    /// Counts batched *dispatches* (not per-sample work) — the quantity the
+    /// shared-stage sweep is supposed to collapse.
+    struct DispatchCounting<F> {
+        inner: F,
+        eval_batch_calls: Cell<usize>,
+        vjp_batch_calls: Cell<usize>,
+        scalar_vjp_calls: Cell<usize>,
+    }
+    impl<F> DispatchCounting<F> {
+        fn new(inner: F) -> Self {
+            DispatchCounting {
+                inner,
+                eval_batch_calls: Cell::new(0),
+                vjp_batch_calls: Cell::new(0),
+                scalar_vjp_calls: Cell::new(0),
+            }
+        }
+    }
+    impl<F: OdeFunc> OdeFunc for DispatchCounting<F> {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn n_params(&self) -> usize {
+            self.inner.n_params()
+        }
+        fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+            self.inner.eval(t, z, dz)
+        }
+        fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+            self.eval_batch_calls.set(self.eval_batch_calls.get() + 1);
+            self.inner.eval_batch(ts, zs, dzs)
+        }
+        fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+            self.scalar_vjp_calls.set(self.scalar_vjp_calls.get() + 1);
+            self.inner.vjp(t, z, w, wjz, wjp)
+        }
+        fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+            self.vjp_batch_calls.set(self.vjp_batch_calls.get() + 1);
+            self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
+        }
+        fn params(&self) -> &[f32] {
+            self.inner.params()
+        }
+    }
+
+    /// The shared-stage sweep must issue one `eval_batch`/`vjp_batch`
+    /// dispatch per stage per reverse round — not one scalar `vjp` per
+    /// sample per stage (the pre-shared-stage behavior).
+    #[test]
+    fn shared_stage_dispatch_counts() {
+        let f = DispatchCounting::new(Linear::new(-0.4, 2));
+        let z0 = [1.0f32, -1.0, 0.5, 2.0, -0.3, 0.9]; // B = 3
+        let tab = tableau::rk4();
+        let opts = IntegrateOpts::fixed(0.25); // 8 steps for every sample
+        let bt = integrate_batch(&f, 0.0, 2.0, &z0, tab, &opts).unwrap();
+        for tr in &bt.tracks {
+            assert_eq!(tr.steps(), 8);
+        }
+
+        f.eval_batch_calls.set(0);
+        let lam = [1.0f32; 6];
+        let gs = aca_backward_batch(&f, tab, &bt, &lam);
+        // 8 rounds × 4 stages, each one batched dispatch over all 3 samples.
+        assert_eq!(f.eval_batch_calls.get(), 8 * 4, "stage recompute dispatches");
+        assert_eq!(f.vjp_batch_calls.get(), 8 * 4, "reverse sweep dispatches");
+        assert_eq!(f.scalar_vjp_calls.get(), 0, "no per-sample scalar fallback");
+        // Per-sample meters still count per-sample work, like the scalar path.
+        for g in &gs {
+            assert_eq!(g.meter.nfe_backward, 8 * 4);
+            assert_eq!(g.meter.vjp_calls, 8 * 4);
+        }
+    }
+
+    /// Retirement path: samples with different step counts share rounds
+    /// until the shallow one's reverse index underflows, and every result
+    /// stays bit-identical to the scalar backward over the same trajectory.
+    #[test]
+    fn mismatched_step_counts_retire_and_match_scalar() {
+        // Same setup as ode::batch's `samples_can_finish_at_different_rounds`:
+        // initial conditions guaranteed to produce different step counts.
+        let f = VanDerPol::new(1.0);
+        let z0 = [0.01f32, 0.0, 2.0, 2.0];
+        let opts = IntegrateOpts::with_tol(1e-7, 1e-9);
+        let tab = tableau::rk23();
+        let bt = integrate_batch(&f, 0.0, 5.0, &z0, tab, &opts).unwrap();
+        assert_ne!(bt.steps(0), bt.steps(1), "workloads should differ");
+
+        let lam = [1.0f32, -0.5, 0.3, 0.9];
+        let gb = aca_backward_batch(&f, tab, &bt, &lam);
+        for i in 0..2 {
+            let traj = bt.to_trajectory(i);
+            let ga = aca_backward(&f, tab, &traj, &lam[i * 2..(i + 1) * 2]);
+            assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "sample {i}");
+            assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward, "sample {i}");
+            assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls, "sample {i}");
+        }
+    }
 
     #[test]
     fn matches_per_sample_aca_bitwise() {

@@ -17,6 +17,14 @@
 //!
 //! All methods return a [`GradResult`] with `dL/dz0`, `dL/dθ`, and a
 //! [`CostMeter`] whose fields instrument the paper's Table 1 columns.
+//!
+//! Batched trajectories go through [`aca_backward_batch`] /
+//! [`backward_batch`]: the ACA reverse sweep is **shared-stage** — all
+//! samples sharing a reverse round run their stage recomputation and
+//! ŵ-sweep through one [`step_vjp_batch`] call (one
+//! [`crate::ode::OdeFunc::eval_batch`] / `vjp_batch` dispatch per stage),
+//! symmetric to the forward engine's stage sweeps, while per-sample results
+//! and meters stay bit-identical to the scalar path.
 
 pub mod aca;
 pub mod adjoint;
@@ -28,7 +36,7 @@ pub use aca::aca_backward;
 pub use adjoint::{adjoint_backward, AdjointOpts};
 pub use batch::{aca_backward_batch, backward_batch};
 pub use naive::naive_backward;
-pub use step_vjp::{err_norm_vjp, step_vjp, StepVjp};
+pub use step_vjp::{err_norm_vjp, step_vjp, step_vjp_batch, StepVjp, StepVjpBatchScratch};
 
 /// Which gradient-estimation method to use (paper Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

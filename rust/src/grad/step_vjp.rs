@@ -171,6 +171,201 @@ pub fn step_vjp<F: OdeFunc + ?Sized>(
     StepVjp { dz, dh, nfe: s, nvjp }
 }
 
+/// Reusable buffers for [`step_vjp_batch`] — one allocation for the whole
+/// reverse sweep instead of fresh stage vectors per step per sample (the
+/// per-call `Vec<Vec<f32>>` of the scalar [`step_vjp`] is what the shared
+/// sweep amortizes away, alongside the per-sample dispatch).
+#[derive(Debug, Default)]
+pub struct StepVjpBatchScratch {
+    /// Stage inputs `u_j`, one packed `[n × dim]` buffer per stage.
+    us: Vec<Vec<f32>>,
+    /// Stage derivatives `k_j`, same layout.
+    ks: Vec<Vec<f32>>,
+    /// Reverse seeds `k̄_j`, same layout.
+    bar_k: Vec<Vec<f32>>,
+    /// Per-sample stage times for the `eval_batch` sweep.
+    ts_stage: Vec<f64>,
+    /// Samples whose seed for the current stage is non-zero.
+    live: Vec<usize>,
+    /// Packed live-sample buffers for the `vjp_batch` sweep.
+    ts_live: Vec<f64>,
+    us_live: Vec<f32>,
+    ws_live: Vec<f32>,
+    wjz_live: Vec<f32>,
+    wjp_live: Vec<f32>,
+}
+
+impl StepVjpBatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, stages: usize, n: usize, dim: usize, n_params: usize) {
+        for buf in [&mut self.us, &mut self.ks, &mut self.bar_k] {
+            while buf.len() < stages {
+                buf.push(Vec::new());
+            }
+            for b in buf.iter_mut().take(stages) {
+                if b.len() < n * dim {
+                    b.resize(n * dim, 0.0);
+                }
+            }
+        }
+        if self.ts_stage.len() < n {
+            self.ts_stage.resize(n, 0.0);
+            self.ts_live.resize(n, 0.0);
+        }
+        if self.us_live.len() < n * dim {
+            self.us_live.resize(n * dim, 0.0);
+            self.ws_live.resize(n * dim, 0.0);
+            self.wjz_live.resize(n * dim, 0.0);
+        }
+        if self.wjp_live.len() < n * n_params {
+            self.wjp_live.resize(n * n_params, 0.0);
+        }
+        self.live.reserve(n);
+    }
+}
+
+/// Shared-stage batched counterpart of [`step_vjp`]: run the stage
+/// recomputation and reverse ŵ-sweep for `n` samples that share a reverse
+/// step index, with one [`OdeFunc::eval_batch`] call per stage (forward
+/// recompute) and one [`OdeFunc::vjp_batch`] call per live stage (reverse)
+/// instead of `n` scalar calls each.
+///
+/// Inputs are packed row-major: `ts`/`hs` are each sample's step start time
+/// and step size (`[n]`), `zs` the step-start states and `lams` the incoming
+/// cotangents (`[n × dim]`).
+///
+/// Outputs, per sample `i`:
+/// * `dzs` row `i` is **overwritten** with `dL/dz` at the step's start;
+/// * `dthetas` row `i` (`[n × n_params]`) is **accumulated into**, one
+///   stage-contribution at a time — the identical floating-point sequence
+///   the scalar `step_vjp` applies to its `dtheta`, so per-sample parameter
+///   gradients stay bit-identical;
+/// * `nvjps[i]` is incremented by the sample's VJP count (dead stages —
+///   seed exactly zero — are skipped per sample, matching the scalar
+///   short-circuit and its meter accounting).
+///
+/// Returns the `f` evaluations spent *per sample* (= `tab.stages`, as in
+/// the scalar path). Explicit `dL/dh` is not offered here: only the naive
+/// method consumes it, and that method has no shared-stage formulation.
+#[allow(clippy::too_many_arguments)]
+pub fn step_vjp_batch<F: OdeFunc + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    ts: &[f64],
+    hs: &[f64],
+    zs: &[f32],
+    lams: &[f32],
+    dzs: &mut [f32],
+    dthetas: &mut [f32],
+    nvjps: &mut [usize],
+    scratch: &mut StepVjpBatchScratch,
+) -> usize {
+    let s = tab.stages;
+    let n = ts.len();
+    let dim = f.dim();
+    let p = f.n_params();
+    debug_assert_eq!(hs.len(), n);
+    debug_assert_eq!(zs.len(), n * dim);
+    debug_assert_eq!(lams.len(), n * dim);
+    debug_assert_eq!(dzs.len(), n * dim);
+    debug_assert_eq!(dthetas.len(), n * p);
+    debug_assert_eq!(nvjps.len(), n);
+    scratch.ensure(s, n, dim, p);
+
+    // ---- forward: recompute all stages, one eval_batch per stage ----
+    for j in 0..s {
+        let (ks_lo, ks_hi) = scratch.ks.split_at_mut(j);
+        let u_j = &mut scratch.us[j];
+        for i in 0..n {
+            let u = &mut u_j[i * dim..(i + 1) * dim];
+            u.copy_from_slice(&zs[i * dim..(i + 1) * dim]);
+            for (l, a) in tab.a[j].iter().enumerate() {
+                if *a != 0.0 {
+                    tensor::axpy((hs[i] * *a) as f32, &ks_lo[l][i * dim..(i + 1) * dim], u);
+                }
+            }
+            scratch.ts_stage[i] = ts[i] + tab.c[j] * hs[i];
+        }
+        f.eval_batch(&scratch.ts_stage[..n], &u_j[..n * dim], &mut ks_hi[0][..n * dim]);
+    }
+
+    // ---- seeds: k̄_j = h b_j λ, per sample ----
+    for j in 0..s {
+        let bk = &mut scratch.bar_k[j];
+        if tab.b[j] == 0.0 {
+            bk[..n * dim].fill(0.0);
+        } else {
+            for i in 0..n {
+                let hb = (hs[i] * tab.b[j]) as f32;
+                for (o, &l) in
+                    bk[i * dim..(i + 1) * dim].iter_mut().zip(&lams[i * dim..(i + 1) * dim])
+                {
+                    *o = hb * l;
+                }
+            }
+        }
+    }
+
+    // ---- reverse ŵ-sweep: one vjp_batch over the live samples per stage ----
+    dzs[..n * dim].fill(0.0);
+    for j in (0..s).rev() {
+        scratch.live.clear();
+        {
+            // Skip dead stages per sample (seed exactly zero and no
+            // downstream contribution) — same short-circuit as the scalar
+            // sweep, so per-sample VJP meters agree.
+            let bk = &scratch.bar_k[j];
+            for i in 0..n {
+                if bk[i * dim..(i + 1) * dim].iter().any(|&v| v != 0.0) {
+                    scratch.live.push(i);
+                }
+            }
+        }
+        if scratch.live.is_empty() {
+            continue;
+        }
+        let nl = scratch.live.len();
+        for (q, &i) in scratch.live.iter().enumerate() {
+            scratch.ts_live[q] = ts[i] + tab.c[j] * hs[i];
+            scratch.us_live[q * dim..(q + 1) * dim]
+                .copy_from_slice(&scratch.us[j][i * dim..(i + 1) * dim]);
+            scratch.ws_live[q * dim..(q + 1) * dim]
+                .copy_from_slice(&scratch.bar_k[j][i * dim..(i + 1) * dim]);
+            // Gather the running dθ rows so the vjp accumulates straight
+            // onto them (scatter-back below is a bit-preserving copy).
+            scratch.wjp_live[q * p..(q + 1) * p].copy_from_slice(&dthetas[i * p..(i + 1) * p]);
+        }
+        f.vjp_batch(
+            &scratch.ts_live[..nl],
+            &scratch.us_live[..nl * dim],
+            &scratch.ws_live[..nl * dim],
+            &mut scratch.wjz_live[..nl * dim],
+            &mut scratch.wjp_live[..nl * p],
+        );
+        let (bk_lo, _) = scratch.bar_k.split_at_mut(j);
+        for (q, &i) in scratch.live.iter().enumerate() {
+            let wjz = &scratch.wjz_live[q * dim..(q + 1) * dim];
+            tensor::axpy(1.0, wjz, &mut dzs[i * dim..(i + 1) * dim]);
+            for (l, a) in tab.a[j].iter().enumerate() {
+                if *a != 0.0 {
+                    tensor::axpy((hs[i] * *a) as f32, wjz, &mut bk_lo[l][i * dim..(i + 1) * dim]);
+                }
+            }
+            dthetas[i * p..(i + 1) * p].copy_from_slice(&scratch.wjp_live[q * p..(q + 1) * p]);
+            nvjps[i] += 1;
+        }
+    }
+
+    // Direct z path of y = z + ...
+    for i in 0..n {
+        tensor::axpy(1.0, &lams[i * dim..(i + 1) * dim], &mut dzs[i * dim..(i + 1) * dim]);
+    }
+    s
+}
+
 /// VJP of the *error norm* of a step attempt — the quantity the naive method
 /// backpropagates through the step-size controller (paper Sec 3.3).
 ///
@@ -438,5 +633,80 @@ mod tests {
         let out = step_vjp(&f, tableau::dopri5(), 0.0, 0.1, &[1.0], &[0.0], &mut vec![0.0], false);
         assert_eq!(out.nvjp, 0);
         assert_eq!(out.dz, vec![0.0]);
+    }
+
+    /// Shared-stage batched step adjoint: dz, accumulated dθ and the
+    /// per-sample VJP meters must be bit-identical to n scalar `step_vjp`
+    /// calls — including mixed per-sample step sizes and times, parameterful
+    /// dynamics, and dθ accumulation across consecutive steps.
+    #[test]
+    fn step_vjp_batch_bit_identical_to_scalar() {
+        let f = Linear::new(-0.9, 2);
+        for tab in [tableau::euler(), tableau::rk4(), tableau::heun_euler(), tableau::dopri5()] {
+            let n = 3;
+            let ts = [0.1f64, 0.7, 1.3];
+            let hs = [0.25f64, 0.1, 0.31];
+            let zs = [1.4f32, -0.6, 0.9, 0.2, -1.1, 0.5];
+            let lams = [1.0f32, 0.5, -0.25, 0.8, 0.0, -1.0];
+
+            let mut dzs = vec![0.0f32; n * 2];
+            let mut dthetas = vec![0.3f32; n]; // nonzero: accumulation path
+            let mut nvjps = vec![0usize; n];
+            let mut scratch = StepVjpBatchScratch::new();
+            let nfe = step_vjp_batch(
+                &f, tab, &ts, &hs, &zs, &lams, &mut dzs, &mut dthetas, &mut nvjps, &mut scratch,
+            );
+            // Second step through the same scratch: dθ keeps accumulating.
+            let nfe2 = step_vjp_batch(
+                &f, tab, &ts, &hs, &zs, &dzs.clone(), &mut dzs, &mut dthetas, &mut nvjps,
+                &mut scratch,
+            );
+            assert_eq!(nfe, tab.stages, "{}", tab.name);
+            assert_eq!(nfe2, tab.stages);
+
+            for i in 0..n {
+                let mut dtheta = vec![0.3f32; 1];
+                let out1 = step_vjp(
+                    &f,
+                    tab,
+                    ts[i],
+                    hs[i],
+                    &zs[i * 2..(i + 1) * 2],
+                    &lams[i * 2..(i + 1) * 2],
+                    &mut dtheta,
+                    false,
+                );
+                let out2 = step_vjp(
+                    &f, tab, ts[i], hs[i], &zs[i * 2..(i + 1) * 2], &out1.dz, &mut dtheta, false,
+                );
+                assert_eq!(&dzs[i * 2..(i + 1) * 2], &out2.dz[..], "{} sample {i}", tab.name);
+                assert_eq!(dthetas[i], dtheta[0], "{} sample {i} dθ", tab.name);
+                assert_eq!(nvjps[i], out1.nvjp + out2.nvjp, "{} sample {i} nvjp", tab.name);
+            }
+        }
+    }
+
+    /// A sample with an all-zero cotangent must cost zero VJPs in the shared
+    /// sweep while its neighbors still get full-precision results.
+    #[test]
+    fn step_vjp_batch_skips_dead_samples_per_stage() {
+        let f = VanDerPol::new(0.2);
+        let tab = tableau::dopri5();
+        let ts = [0.0f64, 0.0];
+        let hs = [0.2f64, 0.2];
+        let zs = [1.5f32, -0.4, 1.5, -0.4];
+        let lams = [0.0f32, 0.0, 1.0, -0.5]; // sample 0 dead, sample 1 live
+        let mut dzs = vec![9.0f32; 4];
+        let mut dthetas: Vec<f32> = vec![];
+        let mut nvjps = vec![0usize; 2];
+        let mut scratch = StepVjpBatchScratch::new();
+        step_vjp_batch(
+            &f, tab, &ts, &hs, &zs, &lams, &mut dzs, &mut dthetas, &mut nvjps, &mut scratch,
+        );
+        assert_eq!(nvjps[0], 0, "dead sample must be skipped stage-by-stage");
+        assert_eq!(&dzs[0..2], &[0.0, 0.0]);
+        let out = step_vjp(&f, tab, 0.0, 0.2, &zs[2..4], &lams[2..4], &mut vec![], false);
+        assert_eq!(&dzs[2..4], &out.dz[..]);
+        assert_eq!(nvjps[1], out.nvjp);
     }
 }

@@ -16,7 +16,14 @@
 //!   checkpoint arena, per-sample adaptive step control with per-sample
 //!   exact `nfe`/`avg_m`/memory meters, and one
 //!   [`ode::OdeFunc::eval_batch`] stage sweep over all live samples — the
-//!   hook a batched backend (single HLO dispatch, SIMD) overrides. On top of
+//!   hook a batched backend (single HLO dispatch, SIMD) overrides. The
+//!   backward pass is symmetric: the **shared-stage reverse sweep**
+//!   ([`grad::step_vjp_batch`]) replays the recorded discretization for all
+//!   samples sharing a reverse round with one `eval_batch` stage recompute
+//!   and one [`ode::OdeFunc::vjp_batch`] pullback per stage, retiring each
+//!   sample as its reverse index underflows — per-sample gradients and
+//!   meters stay bit-identical to the scalar path (`cargo bench --bench
+//!   grad_backward` measures the speedup over per-sample replay). On top of
 //!   the batched engine sits the **solve server** ([`serve`]): a dynamic
 //!   micro-batching layer that coalesces concurrent solve requests under a
 //!   `max_batch_size`/`max_queue_delay` flush policy, with admission

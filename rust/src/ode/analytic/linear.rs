@@ -72,6 +72,24 @@ impl OdeFunc for Linear {
         wjp[0] += crate::tensor::dot(w, z) as f32;
     }
 
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        // Time-invariant and element-wise: the state pullback is one flat
+        // sweep over the whole batch; the parameter pullback is one dot per
+        // sample row — the same ops per sample as `vjp`, so results stay
+        // bit-identical to the scalar path.
+        debug_assert_eq!(zs.len(), ts.len() * self.dim);
+        debug_assert_eq!(wjps.len(), ts.len());
+        for (o, &wi) in wjzs.iter_mut().zip(ws) {
+            *o = self.k[0] * wi;
+        }
+        for (i, p) in wjps.iter_mut().enumerate() {
+            *p += crate::tensor::dot(
+                &ws[i * self.dim..(i + 1) * self.dim],
+                &zs[i * self.dim..(i + 1) * self.dim],
+            ) as f32;
+        }
+    }
+
     fn jvp(&self, _t: f64, _z: &[f32], v: &[f32], out: &mut [f32]) {
         for (o, &vi) in out.iter_mut().zip(v) {
             *o = self.k[0] * vi;
@@ -138,6 +156,24 @@ mod tests {
         let lm = (z0 as f64 * ((-0.8f64 - eps) * t).exp()).powi(2);
         let fd = (lp - lm) / (2.0 * eps);
         assert!((f.exact_dl_dk(z0, t) - fd).abs() < 1e-5 * fd.abs().max(1.0));
+    }
+
+    #[test]
+    fn vjp_batch_bit_identical_to_scalar() {
+        let f = Linear::new(0.7, 3);
+        let ts = [0.0f64, 1.0, -0.5];
+        let zs: Vec<f32> = (0..9).map(|i| (i as f32 * 0.43).sin() * 2.0).collect();
+        let ws: Vec<f32> = (0..9).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut wjzs = vec![0.0f32; 9];
+        let mut wjps = vec![0.5f32; 3]; // nonzero: the override must accumulate
+        f.vjp_batch(&ts, &zs, &ws, &mut wjzs, &mut wjps);
+        for i in 0..3 {
+            let mut wjz = [0.0f32; 3];
+            let mut wjp = [0.5f32; 1];
+            f.vjp(ts[i], &zs[i * 3..(i + 1) * 3], &ws[i * 3..(i + 1) * 3], &mut wjz, &mut wjp);
+            assert_eq!(&wjzs[i * 3..(i + 1) * 3], &wjz, "sample {i}");
+            assert_eq!(wjps[i], wjp[0], "sample {i}");
+        }
     }
 
     #[test]

@@ -76,36 +76,14 @@ impl ThreeBody {
             }
         }
     }
-}
 
-impl OdeFunc for ThreeBody {
-    fn dim(&self) -> usize {
-        18
-    }
-
-    fn n_params(&self) -> usize {
-        3
-    }
-
-    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
-        self.eval_one(z, dz);
-    }
-
-    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
-        // Time-invariant: sweep the flat [n × 18] buffer with the inlined
-        // per-sample kernel (no per-sample dynamic dispatch); arithmetic is
-        // identical to `eval`, so results are bit-identical per sample.
-        debug_assert_eq!(zs.len(), ts.len() * 18);
-        for (z, dz) in zs.chunks_exact(18).zip(dzs.chunks_exact_mut(18)) {
-            self.eval_one(z, dz);
-        }
-    }
-
-    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
-        // Position block of J is dense & nonlinear; the mass gradient is
-        // analytic and cheap. Positions/velocities: finite differences over
-        // eval (18-dim — 36 evals; negligible next to neural-f costs, and
-        // this path is exercised only by the small Table 5 experiments).
+    /// One sample's pullback — shared by `vjp` and the batched sweep.
+    ///
+    /// Position block of J is dense & nonlinear; the mass gradient is
+    /// analytic and cheap. Positions/velocities: finite differences over
+    /// eval (18-dim — 36 evals; negligible next to neural-f costs, and
+    /// this path is exercised only by the small Table 5 experiments).
+    fn vjp_one(&self, _t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         // wᵀ∂f/∂m_j: v̇_i depends on m_j (j≠i) linearly:
         //   ∂v̇_i/∂m_j = −G (r_i − r_j)/|·|³
         for j in 0..3 {
@@ -133,15 +111,61 @@ impl OdeFunc for ThreeBody {
         for c in 0..n {
             let orig = zp[c];
             zp[c] = orig + eps;
-            self.eval(t, &zp, &mut fp);
+            self.eval_one(&zp, &mut fp);
             zp[c] = orig - eps;
-            self.eval(t, &zp, &mut fm);
+            self.eval_one(&zp, &mut fm);
             zp[c] = orig;
             let mut acc = 0.0f32;
             for r in 0..n {
                 acc += w[r] * (fp[r] - fm[r]) / (2.0 * eps);
             }
             wjz[c] = acc;
+        }
+    }
+}
+
+impl OdeFunc for ThreeBody {
+    fn dim(&self) -> usize {
+        18
+    }
+
+    fn n_params(&self) -> usize {
+        3
+    }
+
+    fn eval(&self, _t: f64, z: &[f32], dz: &mut [f32]) {
+        self.eval_one(z, dz);
+    }
+
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        // Time-invariant: sweep the flat [n × 18] buffer with the inlined
+        // per-sample kernel (no per-sample dynamic dispatch); arithmetic is
+        // identical to `eval`, so results are bit-identical per sample.
+        debug_assert_eq!(zs.len(), ts.len() * 18);
+        for (z, dz) in zs.chunks_exact(18).zip(dzs.chunks_exact_mut(18)) {
+            self.eval_one(z, dz);
+        }
+    }
+
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.vjp_one(t, z, w, wjz, wjp);
+    }
+
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        // Sweep the flat [n × 18] buffers with the inlined per-sample kernel
+        // (no per-sample dynamic dispatch); each sample's mass pullback
+        // accumulates into its own [3] row. Arithmetic is identical to
+        // `vjp`, so results are bit-identical per sample.
+        debug_assert_eq!(zs.len(), ts.len() * 18);
+        debug_assert_eq!(wjps.len(), ts.len() * 3);
+        for (i, &t) in ts.iter().enumerate() {
+            self.vjp_one(
+                t,
+                &zs[i * 18..(i + 1) * 18],
+                &ws[i * 18..(i + 1) * 18],
+                &mut wjzs[i * 18..(i + 1) * 18],
+                &mut wjps[i * 3..(i + 1) * 3],
+            );
         }
     }
 
@@ -273,6 +297,25 @@ mod tests {
                 wjp[j],
                 fd
             );
+        }
+    }
+
+    #[test]
+    fn vjp_batch_bit_identical_to_scalar() {
+        let f = ThreeBody::new([1.0, 0.8, 1.2]);
+        let n = 3;
+        let ts = [0.0f64, 0.5, 1.0];
+        let zs: Vec<f32> = (0..n * 18).map(|i| 0.6 + (i as f32 * 0.23).cos()).collect();
+        let ws: Vec<f32> = (0..n * 18).map(|i| (i as f32 * 0.41).sin()).collect();
+        let mut wjzs = vec![0.0f32; n * 18];
+        let mut wjps = vec![0.1f32; n * 3]; // nonzero: the override must accumulate
+        f.vjp_batch(&ts, &zs, &ws, &mut wjzs, &mut wjps);
+        for i in 0..n {
+            let mut wjz = vec![0.0f32; 18];
+            let mut wjp = vec![0.1f32; 3];
+            f.vjp(ts[i], &zs[i * 18..(i + 1) * 18], &ws[i * 18..(i + 1) * 18], &mut wjz, &mut wjp);
+            assert_eq!(&wjzs[i * 18..(i + 1) * 18], &wjz[..], "sample {i} state pullback");
+            assert_eq!(&wjps[i * 3..(i + 1) * 3], &wjp[..], "sample {i} mass pullback");
         }
     }
 

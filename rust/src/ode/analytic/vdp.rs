@@ -33,6 +33,15 @@ impl VanDerPol {
         dz[0] = y2;
         dz[1] = (self.mu - y1 * y1) * y2 - y1;
     }
+
+    /// One sample's state pullback — shared by `vjp` and the batched sweep.
+    #[inline]
+    fn vjp_one(&self, z: &[f32], w: &[f32], wjz: &mut [f32]) {
+        // J = [[0, 1], [−2 y1 y2 − 1, mu − y1²]];  wjz = wᵀ J.
+        let (y1, y2) = (z[0], z[1]);
+        wjz[0] = w[1] * (-2.0 * y1 * y2 - 1.0);
+        wjz[1] = w[0] + w[1] * (self.mu - y1 * y1);
+    }
 }
 
 impl OdeFunc for VanDerPol {
@@ -55,10 +64,20 @@ impl OdeFunc for VanDerPol {
     }
 
     fn vjp(&self, _t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], _wjp: &mut [f32]) {
-        // J = [[0, 1], [−2 y1 y2 − 1, mu − y1²]];  wjz = wᵀ J.
-        let (y1, y2) = (z[0], z[1]);
-        wjz[0] = w[1] * (-2.0 * y1 * y2 - 1.0);
-        wjz[1] = w[0] + w[1] * (self.mu - y1 * y1);
+        self.vjp_one(z, w, wjz);
+    }
+
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], _wjps: &mut [f32]) {
+        // Time-invariant, parameter-free: one monomorphized pass over the
+        // flat [n × 2] buffers, no per-sample dynamic dispatch. Same
+        // arithmetic per sample as `vjp`, so results stay bit-identical.
+        debug_assert_eq!(zs.len(), ts.len() * 2);
+        debug_assert_eq!(ws.len(), ts.len() * 2);
+        for ((z, w), wjz) in
+            zs.chunks_exact(2).zip(ws.chunks_exact(2)).zip(wjzs.chunks_exact_mut(2))
+        {
+            self.vjp_one(z, w, wjz);
+        }
     }
 
     fn jvp(&self, _t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
@@ -115,6 +134,21 @@ mod tests {
         for i in 0..2 {
             let fd = (fp[i] - fm[i]) / (2.0 * eps);
             assert!((analytic[i] - fd).abs() < 1e-2, "{analytic:?} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn vjp_batch_bit_identical_to_scalar() {
+        let f = VanDerPol::new(0.4);
+        let ts = [0.0f64, 1.0, 2.0, -1.0];
+        let zs: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin() * 1.5).collect();
+        let ws: Vec<f32> = (0..8).map(|i| (i as f32 * 0.53).cos()).collect();
+        let mut wjzs = vec![0.0f32; 8];
+        f.vjp_batch(&ts, &zs, &ws, &mut wjzs, &mut []);
+        for i in 0..4 {
+            let mut wjz = [0.0f32; 2];
+            f.vjp(ts[i], &zs[i * 2..(i + 1) * 2], &ws[i * 2..(i + 1) * 2], &mut wjz, &mut []);
+            assert_eq!(&wjzs[i * 2..(i + 1) * 2], &wjz, "sample {i}");
         }
     }
 

@@ -48,6 +48,36 @@ pub trait OdeFunc {
     /// backward sweep can sum contributions without temporaries.
     fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]);
 
+    /// Vector-Jacobian products for `ts.len()` independent samples packed
+    /// row-major: states `zs` and cotangents `ws` are `[n × dim]`, the state
+    /// pullbacks land in `wjzs` (same layout, overwritten), and each sample's
+    /// parameter pullback is *accumulated* into its own `[n_params]` row of
+    /// `wjps` (`[n × n_params]`) — mirroring the scalar [`OdeFunc::vjp`]
+    /// contract per sample.
+    ///
+    /// Default: one `vjp` per sample, bit-identical to the scalar path —
+    /// the contract the batched backward pass
+    /// ([`crate::grad::step_vjp_batch`]) relies on for its per-sample
+    /// equivalence guarantee. Backends that can amortize dispatch overhead
+    /// (a batched HLO pullback, a flat monomorphized sweep) override this.
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        let d = self.dim();
+        let p = self.n_params();
+        debug_assert_eq!(zs.len(), ts.len() * d);
+        debug_assert_eq!(ws.len(), ts.len() * d);
+        debug_assert_eq!(wjzs.len(), ts.len() * d);
+        debug_assert_eq!(wjps.len(), ts.len() * p);
+        for (i, &t) in ts.iter().enumerate() {
+            self.vjp(
+                t,
+                &zs[i * d..(i + 1) * d],
+                &ws[i * d..(i + 1) * d],
+                &mut wjzs[i * d..(i + 1) * d],
+                &mut wjps[i * p..(i + 1) * p],
+            );
+        }
+    }
+
     /// Jacobian-vector product `∂f/∂z · v`. Default: central finite
     /// difference via two `eval` calls — adequate for the naive method's
     /// step-size-chain terms; override for exactness.
@@ -58,7 +88,13 @@ pub trait OdeFunc {
             out.fill(0.0);
             return;
         }
-        let eps = (1e-4 / vnorm).max(1e-7) as f32;
+        // Perturbation ‖eps·v‖ ≈ 1e-4 · max(1, ‖z‖): relative to the state
+        // magnitude so large states don't cancel catastrophically (an
+        // absolute 1e-4 nudge on ‖z‖ ~ 1e5 is below one f32 ulp and the
+        // difference quotient collapses to 0/eps), with the max(1, ·) floor
+        // keeping tiny states at a sane absolute perturbation.
+        let znorm = crate::tensor::norm2(z);
+        let eps = (1e-4 * znorm.max(1.0) / vnorm).max(1e-7) as f32;
         let mut zp = z.to_vec();
         let mut zm = z.to_vec();
         for i in 0..n {
@@ -100,6 +136,9 @@ impl<F: OdeFunc + ?Sized> OdeFunc for &F {
     }
     fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         (**self).vjp(t, z, w, wjz, wjp)
+    }
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        (**self).vjp_batch(ts, zs, ws, wjzs, wjps)
     }
     fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
         (**self).jvp(t, z, v, out)
@@ -155,9 +194,20 @@ impl<F: OdeFunc> OdeFunc for CountingFunc<F> {
         self.evals.set(self.evals.get() + 1);
         self.inner.eval(t, z, dz)
     }
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        // Forward to the inner dynamics so wrapping never disables its fast
+        // path (the trait default would silently loop `eval` instead); the
+        // NFE meter still counts per sample, identical to the scalar path.
+        self.evals.set(self.evals.get() + ts.len());
+        self.inner.eval_batch(ts, zs, dzs)
+    }
     fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         self.vjps.set(self.vjps.get() + 1);
         self.inner.vjp(t, z, w, wjz, wjp)
+    }
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        self.vjps.set(self.vjps.get() + ts.len());
+        self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
     }
     fn jvp(&self, t: f64, z: &[f32], v: &[f32], out: &mut [f32]) {
         self.jvps.set(self.jvps.get() + 1);
@@ -224,7 +274,8 @@ mod tests {
         let zs = [1.0f32, 2.0, -1.0, 0.5, 4.0, -4.0];
         let mut dzs = [0.0f32; 6];
         f.eval_batch(&ts, &zs, &mut dzs);
-        // The default loops `eval`, so the NFE meter sees every sample.
+        // Forwarded to the inner batch sweep, counted per sample — the same
+        // accounting the scalar loop produced.
         assert_eq!(f.evals(), 3);
         let mut expect = [0.0f32; 2];
         for i in 0..3 {
@@ -239,5 +290,163 @@ mod tests {
         let mut out = [9.0f32; 2];
         f.jvp(0.0, &[1.0, 1.0], &[0.0, 0.0], &mut out);
         assert_eq!(out, [0.0, 0.0]);
+    }
+
+    /// Strips every override so the trait defaults are what run.
+    struct DefaultsOnly<F>(F);
+    impl<F: OdeFunc> OdeFunc for DefaultsOnly<F> {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+        fn n_params(&self) -> usize {
+            self.0.n_params()
+        }
+        fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+            self.0.eval(t, z, dz)
+        }
+        fn vjp(&self, t: f64, z: &[f32], w: &[f32], a: &mut [f32], b: &mut [f32]) {
+            self.0.vjp(t, z, w, a, b)
+        }
+        fn params(&self) -> &[f32] {
+            self.0.params()
+        }
+    }
+
+    /// The default finite-difference `jvp` must stay accurate when the state
+    /// is many orders of magnitude larger or smaller than O(1): the
+    /// perturbation scales with max(1, ‖z‖), so a huge state no longer
+    /// swallows an absolute 1e-4 nudge below its f32 ulp (which used to
+    /// collapse the difference quotient to 0) and a tiny state is not
+    /// over-perturbed relative to its own magnitude.
+    #[test]
+    fn default_jvp_accurate_at_extreme_state_scales() {
+        for scale in [1e-6f32, 1e-3, 1.0, 1e3, 1e5] {
+            // Linear: J v = k v exactly, at any state scale.
+            let f = DefaultsOnly(Linear::new(-0.7, 3));
+            let z = [scale, -2.0 * scale, 0.5 * scale];
+            let v = [0.3f32, 1.0, -1.0];
+            let mut out = [0.0f32; 3];
+            f.jvp(0.0, &z, &v, &mut out);
+            for i in 0..3 {
+                // Pre-fix failure mode was a ~100% error (FD collapsed to 0
+                // at large ‖z‖), so a 2% band is ample to pin the fix while
+                // leaving room for f32 rounding in the difference quotient.
+                let exact = -0.7 * v[i];
+                assert!(
+                    (out[i] - exact).abs() < 2e-2 * exact.abs().max(1e-3),
+                    "linear scale {scale}: jvp[{i}] {} vs {exact}",
+                    out[i]
+                );
+            }
+            // Van der Pol: nonlinear, analytic J available as reference.
+            let f = DefaultsOnly(crate::ode::analytic::VanDerPol::new(0.15));
+            let z = [1.7 * scale, -0.4 * scale];
+            let v = [0.5f32, -1.0];
+            let mut fd = [0.0f32; 2];
+            f.jvp(0.0, &z, &v, &mut fd);
+            let mut exact = [0.0f32; 2];
+            f.0.jvp(0.0, &z, &v, &mut exact);
+            // Row 1 mixes O(scale²) Jacobian entries with O(1) ones; compare
+            // against the row magnitude, not element-wise.
+            let mag = exact.iter().fold(0.0f32, |m, &e| m.max(e.abs())).max(1e-3);
+            for i in 0..2 {
+                assert!(
+                    (fd[i] - exact[i]).abs() < 2e-2 * mag,
+                    "vdp scale {scale}: jvp[{i}] {} vs {} (mag {mag})",
+                    fd[i],
+                    exact[i]
+                );
+            }
+        }
+    }
+
+    /// Default `vjp_batch` loops `vjp` bit-identically per sample.
+    #[test]
+    fn default_vjp_batch_matches_scalar() {
+        let f = Linear::new(-0.5, 2);
+        let ts = [0.0f64, 1.0, 2.0];
+        let zs = [1.0f32, 2.0, -1.0, 0.5, 4.0, -4.0];
+        let ws = [0.3f32, -0.7, 1.0, 0.2, -0.1, 0.8];
+        let mut wjzs = [0.0f32; 6];
+        let mut wjps = [0.0f32; 3];
+        f.vjp_batch(&ts, &zs, &ws, &mut wjzs, &mut wjps);
+        for i in 0..3 {
+            let mut wjz = [0.0f32; 2];
+            let mut wjp = [0.0f32; 1];
+            f.vjp(ts[i], &zs[i * 2..(i + 1) * 2], &ws[i * 2..(i + 1) * 2], &mut wjz, &mut wjp);
+            assert_eq!(&wjzs[i * 2..(i + 1) * 2], &wjz, "sample {i}");
+            assert_eq!(wjps[i], wjp[0], "sample {i} param row");
+        }
+    }
+
+    /// An inner dynamics that records which entry points actually ran —
+    /// stand-in for a backend whose `eval_batch`/`vjp_batch` overrides are
+    /// the fast path (single dispatch) that wrapping must not disable.
+    struct BatchMarking {
+        inner: Linear,
+        batch_evals: std::cell::Cell<usize>,
+        scalar_evals: std::cell::Cell<usize>,
+        batch_vjps: std::cell::Cell<usize>,
+    }
+    impl OdeFunc for BatchMarking {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn n_params(&self) -> usize {
+            self.inner.n_params()
+        }
+        fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+            self.scalar_evals.set(self.scalar_evals.get() + 1);
+            self.inner.eval(t, z, dz)
+        }
+        fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+            self.batch_evals.set(self.batch_evals.get() + 1);
+            self.inner.eval_batch(ts, zs, dzs)
+        }
+        fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+            self.inner.vjp(t, z, w, wjz, wjp)
+        }
+        fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+            self.batch_vjps.set(self.batch_vjps.get() + 1);
+            self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
+        }
+        fn params(&self) -> &[f32] {
+            self.inner.params()
+        }
+    }
+
+    /// Regression: `CountingFunc` must forward `eval_batch`/`vjp_batch` to
+    /// the inner dynamics (one batched dispatch, zero scalar calls) while
+    /// still counting per sample — previously the trait default looped the
+    /// wrapper's scalar `eval`, silently disabling any inner fast path and
+    /// making batched-vs-scalar NFE comparisons measure different code.
+    #[test]
+    fn counting_wrapper_forwards_batch_entry_points() {
+        let f = CountingFunc::new(BatchMarking {
+            inner: Linear::new(-0.5, 2),
+            batch_evals: std::cell::Cell::new(0),
+            scalar_evals: std::cell::Cell::new(0),
+            batch_vjps: std::cell::Cell::new(0),
+        });
+        let ts = [0.0f64, 0.5, 1.0];
+        let zs = [1.0f32, 2.0, -1.0, 0.5, 4.0, -4.0];
+        let mut dzs = [0.0f32; 6];
+        f.eval_batch(&ts, &zs, &mut dzs);
+        assert_eq!(f.inner.batch_evals.get(), 1, "inner override must run once");
+        assert_eq!(f.inner.scalar_evals.get(), 0, "fast path must not fall back to eval");
+        assert_eq!(f.evals(), 3, "NFE meter counts per sample");
+        // Results are the inner fast path's, bit-identical to scalar.
+        let mut expect = [0.0f32; 2];
+        for i in 0..3 {
+            f.inner.inner.eval(ts[i], &zs[i * 2..(i + 1) * 2], &mut expect);
+            assert_eq!(&dzs[i * 2..(i + 1) * 2], &expect, "sample {i}");
+        }
+
+        let ws = [0.3f32, -0.7, 1.0, 0.2, -0.1, 0.8];
+        let mut wjzs = [0.0f32; 6];
+        let mut wjps = [0.0f32; 3];
+        f.vjp_batch(&ts, &zs, &ws, &mut wjzs, &mut wjps);
+        assert_eq!(f.inner.batch_vjps.get(), 1);
+        assert_eq!(f.vjps(), 3, "VJP meter counts per sample");
     }
 }

@@ -2,6 +2,11 @@
 //! the work queue, runs them through the batched engine
 //! ([`crate::ode::integrate_batch`] + [`crate::grad::aca_backward_batch`]),
 //! and scatters per-sample results back to each request's response slot.
+//! Gradient batches share stage sweeps in **both** directions: the forward
+//! solve amortizes `eval_batch` across co-batched requests and the backward
+//! pass runs the shared-stage reverse sweep (`step_vjp_batch` — one
+//! `eval_batch`/`vjp_batch` dispatch per stage per reverse round), so
+//! co-batching gradient traffic costs per-stage dispatch, not per-request.
 //!
 //! Poison isolation: `integrate_batch` fails the whole batch when any one
 //! sample blows up (stiffness, step underflow). A serving layer must not let

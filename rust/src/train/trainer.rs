@@ -35,6 +35,13 @@ pub struct TrainConfig {
     pub max_batches: usize,
     /// Max gradient L2 norm (0 disables clipping).
     pub clip: f64,
+    /// Mini-batches accumulated per optimizer step (≥1, clamped). Groups of
+    /// `grad_accum` batches solve through the batched engine — one
+    /// [`integrate_batch`] + shared-stage [`grad::backward_batch`] pair over
+    /// the group's flattened states — and their summed gradient drives a
+    /// single update (standard gradient accumulation; scale `lr`
+    /// accordingly). `1` keeps the scalar per-batch path bit-for-bit.
+    pub grad_accum: usize,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -54,6 +61,7 @@ impl Default for TrainConfig {
             seed: 0,
             max_batches: 0,
             clip: 5.0,
+            grad_accum: 1,
             verbose: false,
         }
     }
@@ -118,6 +126,57 @@ impl Trainer {
         Ok((loss, dtheta, meter))
     }
 
+    /// Forward + backward over a *group* of mini-batches through the batched
+    /// engine: the group's encoded states solve in one [`integrate_batch`]
+    /// call (each HLO-batch is one batch-engine "sample" with its own
+    /// adaptive step control) and differentiate in one shared-stage
+    /// [`grad::backward_batch`] call, instead of one scalar solve + reverse
+    /// sweep per batch.
+    ///
+    /// Returns (mean loss over the group, **summed** dθ, summed meters) —
+    /// gradient-accumulation semantics: per-batch results are bit-identical
+    /// to [`Self::loss_grad`] by the engine's equivalence guarantees; only
+    /// the final summation order differs.
+    pub fn loss_grad_accum(
+        &self,
+        model: &HloModel,
+        tab: &Tableau,
+        group: &[(Vec<f32>, Target)],
+    ) -> Result<(f64, Vec<f32>, grad::CostMeter)> {
+        assert!(!group.is_empty(), "empty accumulation group");
+        let opts = self.opts();
+        let d = model.dim();
+        let mut z0s = Vec::with_capacity(group.len() * d);
+        for (x, _) in group {
+            z0s.extend_from_slice(&model.encode(x)?);
+        }
+        let bt = integrate_batch(model, 0.0, self.cfg.t1, &z0s, tab, &opts)?;
+        let mut dtheta = vec![0.0f32; model.n_params()];
+        let mut lams = Vec::with_capacity(group.len() * d);
+        let mut loss_sum = 0.0;
+        for (i, (_, y)) in group.iter().enumerate() {
+            let (lam, loss) = model.decode_loss_vjp(bt.last(i), y, &mut dtheta)?;
+            lams.extend_from_slice(&lam);
+            loss_sum += loss;
+        }
+        let gs = grad::backward_batch(model, tab, &bt, &lams, self.cfg.method, &opts)?;
+        let mut meter = grad::CostMeter::default();
+        for ((x, _), g) in group.iter().zip(&gs) {
+            for (dst, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
+                *dst += *s;
+            }
+            model.encode_vjp_accum(x, &g.dl_dz0, &mut dtheta)?;
+            meter.nfe_forward += g.meter.nfe_forward;
+            meter.nfe_backward += g.meter.nfe_backward;
+            meter.vjp_calls += g.meter.vjp_calls;
+            meter.checkpoint_bytes += g.meter.checkpoint_bytes;
+            meter.graph_depth = meter.graph_depth.max(g.meter.graph_depth);
+            meter.n_steps += g.meter.n_steps;
+            meter.n_rejected += g.meter.n_rejected;
+        }
+        Ok((loss_sum / group.len() as f64, dtheta, meter))
+    }
+
     /// Train `model` on `data`, filling `self.history`.
     pub fn fit(&mut self, model: &mut HloModel, tab: &Tableau, data: &Dataset) -> Result<()> {
         let b = model.manifest.batch;
@@ -132,23 +191,39 @@ impl Trainer {
                 order.truncate(self.cfg.max_batches * b);
             }
             let mut loss_sum = 0.0;
-            let mut n_batches = 0usize;
+            let mut n_mb = 0usize; // full mini-batches consumed (NFE/loss denominator)
             let mut nfe_f = 0usize;
             let mut nfe_b = 0usize;
-            for chunk in order.chunks(b) {
-                if chunk.len() < b {
-                    continue; // drop ragged tail (paper drops last batch too)
-                }
-                let (x, y) = data.gather(chunk);
-                let (loss, mut dtheta, meter) = self.loss_grad(model, tab, &x, &y)?;
+            let accum = self.cfg.grad_accum.max(1);
+            // Full mini-batches only (the ragged sub-batch tail is dropped,
+            // paper drops the last batch too), grouped `accum` at a time; a
+            // ragged trailing *group* still trains — otherwise an epoch with
+            // fewer than `accum` batches would silently take zero steps.
+            let full_chunks: Vec<&[usize]> =
+                order.chunks(b).filter(|c| c.len() == b).collect();
+            for gchunk in full_chunks.chunks(accum) {
+                let group: Vec<(Vec<f32>, Target)> =
+                    gchunk.iter().map(|c| data.gather(c)).collect();
+                let (loss, mut dtheta, meter) = if group.len() == 1 {
+                    let (x, y) = &group[0];
+                    self.loss_grad(model, tab, x, y)?
+                } else {
+                    // Accumulation groups run through the batched engine:
+                    // one integrate_batch + shared-stage backward_batch.
+                    self.loss_grad_accum(model, tab, &group)?
+                };
                 if self.cfg.clip > 0.0 {
                     super::optim::clip_grad_norm(&mut dtheta, self.cfg.clip);
                 }
                 let mut params = model.params().to_vec();
                 opt.step(&mut params, &dtheta);
                 model.set_params(&params);
-                loss_sum += loss;
-                n_batches += 1;
+                // Per-mini-batch accounting: `loss` is the group mean and the
+                // meters sum over the group, so weight by group size — the
+                // recorded per-batch NFE/loss stay comparable across
+                // grad_accum settings.
+                loss_sum += loss * group.len() as f64;
+                n_mb += group.len();
                 nfe_f += meter.nfe_forward;
                 nfe_b += meter.nfe_backward + meter.vjp_calls;
             }
@@ -157,12 +232,12 @@ impl Trainer {
                 evaluate(model, tab, &self.opts(), self.cfg.t1, data, true)?;
             let rec = TrainRecord {
                 epoch,
-                train_loss: loss_sum / n_batches.max(1) as f64,
+                train_loss: loss_sum / n_mb.max(1) as f64,
                 test_acc,
                 test_loss,
                 wall_s: timer.elapsed_s(),
-                nfe_forward: nfe_f as f64 / n_batches.max(1) as f64,
-                nfe_backward: nfe_b as f64 / n_batches.max(1) as f64,
+                nfe_forward: nfe_f as f64 / n_mb.max(1) as f64,
+                nfe_backward: nfe_b as f64 / n_mb.max(1) as f64,
             };
             if self.cfg.verbose {
                 println!(

@@ -344,6 +344,73 @@ fn prop_batch_solves_match_scalar_all_dynamics() {
     }
 }
 
+/// Property: the shared-stage batched backward pass is **bit-equal** to the
+/// scalar `aca_backward` over the same recorded trajectory — `dL/dz0`,
+/// `dL/dθ`, and every meter — for all four analytic dynamics (each with its
+/// own `eval_batch`/`vjp_batch` override), B ∈ {1, 3, 8}, fixed-step and
+/// adaptive, including mismatched per-sample step counts (the retirement
+/// path of the active-set loop).
+///
+/// The scalar reference reads the *same* checkpoints
+/// (`BatchTrajectory::to_trajectory`), so this pins the reverse sweep itself
+/// — stage recomputation, ŵ-sweep, dθ accumulation order, dead-stage
+/// skipping — independent of the (already-pinned) forward equivalence.
+#[test]
+fn prop_shared_stage_backward_bit_equals_scalar_all_dynamics() {
+    let mut rng = Pcg64::seed(1212);
+    let mut saw_mismatched_steps = false;
+    for (name, f) in all_dynamics() {
+        let d = f.dim();
+        for case in 0..6 {
+            let fixed = case % 2 == 0;
+            let b = [1usize, 3, 8][case % 3];
+            let tab = if fixed { tableau::rk4() } else { tableau::dopri5() };
+            let t1 = rng.range(0.2, 0.8);
+            // Spread magnitudes so adaptive per-sample step counts differ
+            // (exercises retirement); short spans keep the stiff dynamics
+            // (three-body close encounters) inside solver reach.
+            let z0: Vec<f32> = (0..b * d)
+                .map(|i| {
+                    let scale = if (i / d) % 2 == 0 { 1.0 } else { 0.5 };
+                    rng.range(-1.2, 1.2) as f32 * scale
+                })
+                .collect();
+            let opts = if fixed {
+                IntegrateOpts::fixed(rng.range(0.01, 0.04))
+            } else {
+                IntegrateOpts::with_tol(1e-6, 1e-8)
+            };
+            let bt = integrate_batch(&*f, 0.0, t1, &z0, tab, &opts).unwrap();
+            let lam: Vec<f32> = (0..b * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let gb = aca_backward_batch(&*f, tab, &bt, &lam);
+            let step_counts: Vec<usize> = (0..b).map(|i| bt.steps(i)).collect();
+            saw_mismatched_steps |= step_counts.windows(2).any(|w| w[0] != w[1]);
+            for i in 0..b {
+                let traj = bt.to_trajectory(i);
+                let ga = aca_backward(&*f, tab, &traj, &lam[i * d..(i + 1) * d]);
+                let ctx = format!("{name} case {case} B={b} sample {i} ({})", tab.name);
+                assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "{ctx}: dl_dz0");
+                assert_eq!(gb[i].dl_dtheta, ga.dl_dtheta, "{ctx}: dl_dtheta");
+                assert_eq!(gb[i].meter.nfe_forward, ga.meter.nfe_forward, "{ctx}: nfe_f");
+                assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward, "{ctx}: nfe_b");
+                assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls, "{ctx}: vjps");
+                assert_eq!(gb[i].meter.graph_depth, ga.meter.graph_depth, "{ctx}: depth");
+                assert_eq!(gb[i].meter.n_steps, ga.meter.n_steps, "{ctx}: steps");
+                assert_eq!(gb[i].meter.n_rejected, ga.meter.n_rejected, "{ctx}: rejected");
+                assert_eq!(
+                    gb[i].meter.checkpoint_bytes,
+                    ga.meter.checkpoint_bytes,
+                    "{ctx}: bytes"
+                );
+            }
+        }
+    }
+    assert!(
+        saw_mismatched_steps,
+        "sweep never exercised the retirement path (all step counts equal)"
+    );
+}
+
 /// Property: `integrate_batch` + `aca_backward_batch` reproduce per-sample
 /// `integrate` + `aca_backward` — bit-exact on the fixed-step path and to
 /// ≤ 1e-6 relative on the adaptive path — for B ∈ {1, 3, 8} across random

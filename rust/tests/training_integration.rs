@@ -199,6 +199,52 @@ fn gradient_methods_agree_on_smooth_model() {
 }
 
 #[test]
+fn loss_grad_accum_matches_per_batch_sum() {
+    require_artifacts!();
+    // An accumulation group driven through the batched engine (one
+    // integrate_batch + shared-stage backward_batch) must reproduce the sum
+    // of per-batch scalar loss_grad results: per-sample solves and reverse
+    // sweeps are bit-identical by the engine's equivalence guarantees, so
+    // only the final gradient summation order may differ (O(ulp)).
+    let mut engine = Engine::cpu().unwrap();
+    let mut model =
+        HloModel::load(&mut engine, &nodal::runtime::artifact_root().join("spiral")).unwrap();
+    model.init_params(7).unwrap();
+    let b = model.manifest.batch;
+    let data = SpiralDataset::generate(2 * b, 0, 0.03, 4);
+    let tr = Trainer::new(TrainConfig { method: Method::Aca, ..Default::default() });
+
+    let group: Vec<(Vec<f32>, Target)> = (0..2)
+        .map(|k| {
+            let ids: Vec<usize> = (k * b..(k + 1) * b).collect();
+            data.gather(&ids)
+        })
+        .collect();
+    let (loss_acc, dtheta_acc, meter_acc) =
+        tr.loss_grad_accum(&model, tableau::dopri5(), &group).unwrap();
+
+    let mut loss_ref = 0.0;
+    let mut dtheta_ref = vec![0.0f32; model.n_params()];
+    let mut nfe_ref = 0usize;
+    for (x, y) in &group {
+        let (loss, dtheta, meter) = tr.loss_grad(&model, tableau::dopri5(), x, y).unwrap();
+        loss_ref += loss / group.len() as f64;
+        for (d, s) in dtheta_ref.iter_mut().zip(&dtheta) {
+            *d += s;
+        }
+        nfe_ref += meter.nfe_forward;
+    }
+    assert!((loss_acc - loss_ref).abs() < 1e-9 * loss_ref.abs().max(1.0));
+    assert_eq!(meter_acc.nfe_forward, nfe_ref, "per-sample NFE accounting");
+    let scale = nodal::tensor::norm2(&dtheta_ref).max(1e-9);
+    let diff: Vec<f32> = dtheta_acc.iter().zip(&dtheta_ref).map(|(a, b)| a - b).collect();
+    assert!(
+        nodal::tensor::norm2(&diff) < 1e-5 * scale,
+        "accumulated gradient diverged from per-batch sum"
+    );
+}
+
+#[test]
 fn dispatch_counter_tracks_pjrt_calls() {
     require_artifacts!();
     let mut engine = Engine::cpu().unwrap();
