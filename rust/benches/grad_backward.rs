@@ -143,6 +143,12 @@ fn main() {
 
     println!("-- shared-stage speedup over per-sample replay --");
     for (name, replay, shared) in &pairs {
-        println!("  {:<20} {:>6.2}x  ({:.4} ms -> {:.4} ms)", name, replay / shared, replay, shared);
+        println!(
+            "  {:<20} {:>6.2}x  ({:.4} ms -> {:.4} ms)",
+            name,
+            replay / shared,
+            replay,
+            shared
+        );
     }
 }

@@ -1,32 +1,48 @@
 //! Closed-loop load test of the solve server: C client threads each keep
-//! one request outstanding (submit → wait → submit …) against a 64-request
-//! mixed workload, versus the sequential one-request-at-a-time baseline the
-//! server replaces. Reports throughput for both and the server's batching
-//! metrics; the batched server must sustain ≥ the sequential baseline.
+//! one request outstanding (submit → wait → submit …) against a mixed
+//! workload, versus the sequential one-request-at-a-time baseline the
+//! server replaces. The workload is heterogeneous on every axis the former
+//! can coalesce: three dynamics, adaptive and fixed-step tolerance classes,
+//! a sprinkle of gradient requests, and — since `BatchKey` stopped pinning
+//! `t1` — **mixed integration spans** inside each class, so the
+//! batch-occupancy numbers show the cross-request span alignment win.
+//!
+//! Reports throughput for both paths and the server's batching metrics, and
+//! persists them (req/s, speedup, mean batch occupancy) via
+//! [`Runner::record`] + `Runner::save` to `results/bench/serve_load.jsonl`.
+//!
+//! `--smoke` shrinks the workload and the sampling budget for CI: the bench
+//! still runs end-to-end and appends its JSON lines, so the serve perf
+//! trajectory accumulates on every pipeline run alongside the backward
+//! pass's (`grad_backward.jsonl`).
 
 use nodal::bench::Runner;
 use nodal::grad::aca_backward;
 use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
-use nodal::ode::{integrate, tableau, IntegrateOpts};
+use nodal::ode::integrate;
 use nodal::serve::{ServeConfig, SolveRequest, SolveServer};
 use nodal::util::Pcg64;
 use std::sync::Arc;
 use std::time::Duration;
 
-const TOTAL: usize = 64;
 const CLIENTS: usize = 8;
 
-/// The 64-request mixed workload: three dynamics, adaptive and fixed-step
-/// tolerance classes, and a sprinkle of gradient requests — per-request cost
-/// is deliberately heterogeneous (nfe varies per initial condition).
-fn workload() -> Vec<SolveRequest> {
+/// The mixed workload: three dynamics, adaptive and fixed-step tolerance
+/// classes, a sprinkle of gradient requests — and per-request spans drawn
+/// from a small set inside each class, so co-batchable traffic differs in
+/// `t1` (the axis the former coalesces across since `BatchKey` dropped it).
+/// Per-request cost is deliberately heterogeneous (nfe varies per initial
+/// condition *and* per span).
+fn workload(total: usize) -> Vec<SolveRequest> {
     let mut rng = Pcg64::seed(20);
-    (0..TOTAL)
+    let vdp_spans = [4.0f64, 5.0, 6.0];
+    let conv_spans = [1.5f64, 2.0];
+    (0..total)
         .map(|i| match i % 4 {
             0 => SolveRequest::adaptive(
                 "vdp",
                 0.0,
-                5.0,
+                vdp_spans[i % vdp_spans.len()],
                 vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
                 1e-6,
                 1e-8,
@@ -34,14 +50,16 @@ fn workload() -> Vec<SolveRequest> {
             1 => SolveRequest::fixed(
                 "linear",
                 0.0,
-                1.0,
+                1.0 + 0.5 * (i % 3) as f64,
                 (0..16).map(|_| rng.normal_f32()).collect(),
                 0.01,
             ),
             2 => SolveRequest::adaptive(
                 "conv",
                 0.0,
-                2.0,
+                // (i / 4), not i: class-2 indices are all even, so `i % 2`
+                // would alias every conv request to the same span.
+                conv_spans[(i / 4) % conv_spans.len()],
                 (0..64).map(|_| rng.normal_f32() * 0.5).collect(),
                 1e-5,
                 1e-7,
@@ -49,7 +67,7 @@ fn workload() -> Vec<SolveRequest> {
             _ => SolveRequest::adaptive(
                 "vdp",
                 0.0,
-                5.0,
+                vdp_spans[(i / 4) % vdp_spans.len()],
                 vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
                 1e-6,
                 1e-8,
@@ -69,7 +87,7 @@ fn register(b: nodal::serve::SolveServerBuilder) -> nodal::serve::SolveServerBui
 /// exactly one request in flight.
 fn run_server_closed_loop(server: &Arc<SolveServer>, reqs: &[SolveRequest]) {
     std::thread::scope(|scope| {
-        for chunk in reqs.chunks(TOTAL / CLIENTS) {
+        for chunk in reqs.chunks(reqs.len().div_ceil(CLIENTS)) {
             let server = server.clone();
             scope.spawn(move || {
                 for req in chunk {
@@ -102,10 +120,17 @@ fn run_sequential(reqs: &[SolveRequest]) {
 }
 
 fn main() {
-    let reqs = workload();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let total = if smoke { 16 } else { 64 };
+    let reqs = workload(total);
     let mut r = Runner::new("serve_load");
+    if smoke {
+        r.set_target_s(0.05);
+    }
 
-    let seq = r.bench("sequential_64req_mixed", || run_sequential(&reqs)).clone();
+    // Labels carry the actual request count so smoke rows in the persisted
+    // jsonl are never confused with full-size runs.
+    let seq = r.bench(&format!("sequential_{total}req_mixed"), || run_sequential(&reqs)).clone();
 
     let cfg = ServeConfig {
         max_batch_size: 16,
@@ -115,20 +140,30 @@ fn main() {
     };
     let server = Arc::new(register(SolveServer::builder()).config(cfg).start());
     let srv = r
-        .bench("server_closed_loop_8clients_64req", || run_server_closed_loop(&server, &reqs))
+        .bench(&format!("server_closed_loop_{CLIENTS}clients_{total}req"), || {
+            run_server_closed_loop(&server, &reqs)
+        })
         .clone();
 
     let m = server.metrics();
     println!("\nserver metrics over the whole bench run:\n{m}");
-    let seq_rps = TOTAL as f64 / (seq.mean_ms * 1e-3);
-    let srv_rps = TOTAL as f64 / (srv.mean_ms * 1e-3);
+    let seq_rps = total as f64 / (seq.mean_ms * 1e-3);
+    let srv_rps = total as f64 / (srv.mean_ms * 1e-3);
     println!(
         "\nthroughput: sequential {seq_rps:.0} req/s vs batched server {srv_rps:.0} req/s \
-         ({:.2}x)",
-        srv_rps / seq_rps
+         ({:.2}x)  |  mean batch occupancy {:.2}",
+        srv_rps / seq_rps,
+        m.mean_batch_size
     );
     if srv_rps < seq_rps {
         println!("WARNING: batched server below the sequential baseline on this host");
     }
+    // Persist the serving trajectory: raw timings are already in the result
+    // rows; add the derived req/s and the occupancy the span alignment is
+    // supposed to move.
+    r.record(&format!("sequential_{total}req_rps"), seq_rps);
+    r.record(&format!("server_{total}req_rps"), srv_rps);
+    r.record("server_speedup_x", srv_rps / seq_rps);
+    r.record("mean_batch_occupancy", m.mean_batch_size);
     server.shutdown();
 }

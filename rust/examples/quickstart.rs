@@ -10,8 +10,8 @@ use nodal::data::SpiralDataset;
 use nodal::grad::Method;
 use nodal::models::NodeSystem;
 use nodal::ode::tableau;
-use nodal::runtime::{Engine, HloModel};
 use nodal::ode::OdeFunc;
+use nodal::runtime::{Engine, HloModel};
 use nodal::train::{Optimizer, Sgd};
 
 fn main() -> Result<()> {

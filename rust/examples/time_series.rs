@@ -52,7 +52,8 @@ fn main() -> Result<()> {
         let mut test_mse = 0.0;
         for g in &data.test {
             let z0 = model.encode(&g.encoder_input())?;
-            let (mse, _) = segmented_eval(&model, tab, &opts, &z0, g.target_times(), &targets_of(g))?;
+            let (mse, _) =
+                segmented_eval(&model, tab, &opts, &z0, g.target_times(), &targets_of(g))?;
             test_mse += mse;
         }
         println!(

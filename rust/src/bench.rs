@@ -76,6 +76,24 @@ impl Runner {
         self.results.last().unwrap()
     }
 
+    /// Record a derived scalar (throughput in req/s, mean batch occupancy,
+    /// a speedup ratio, …) as a result row so it persists in the group's
+    /// jsonl next to the timing measurements. The value lands in the
+    /// `mean_ms`/`min_ms` fields — they are the generic value slots of the
+    /// row format — with `iters = 1` and zero spread marking it as a
+    /// recorded quantity rather than a sampled timing.
+    pub fn record(&mut self, name: &str, value: f64) {
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_ms: value,
+            std_ms: 0.0,
+            min_ms: value,
+        };
+        println!("  {:<44} {:>10.4}  (recorded)", m.name, m.mean_ms);
+        self.results.push(m);
+    }
+
     /// Persist the group's results as JSON lines under `results/bench/`.
     ///
     /// The group id is interpolated into the output filename; ids with path
@@ -142,6 +160,18 @@ mod tests {
         assert!(!safe_bench_id(".."));
         assert!(!safe_bench_id(".hidden"));
         assert!(!safe_bench_id("nul\0byte"));
+    }
+
+    #[test]
+    fn record_appends_a_result_row() {
+        let mut r = Runner::new("unit-record");
+        r.record("throughput_rps", 1234.5);
+        let m = r.results.last().unwrap();
+        assert_eq!(m.name, "throughput_rps");
+        assert_eq!(m.mean_ms, 1234.5);
+        assert_eq!(m.min_ms, 1234.5);
+        assert_eq!(m.iters, 1);
+        assert_eq!(m.std_ms, 0.0);
     }
 
     #[test]

@@ -94,7 +94,8 @@ impl Table {
                 c.to_string()
             }
         };
-        let _ = writeln!(csv, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        let _ =
+            writeln!(csv, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
         for row in &self.rows {
             let _ = writeln!(csv, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
         }
@@ -103,7 +104,10 @@ impl Table {
         let j = obj(vec![
             ("id", self.id.as_str().into()),
             ("title", self.title.as_str().into()),
-            ("headers", self.headers.iter().map(|h| Json::from(h.as_str())).collect::<Vec<_>>().into()),
+            (
+                "headers",
+                self.headers.iter().map(|h| Json::from(h.as_str())).collect::<Vec<_>>().into(),
+            ),
             (
                 "rows",
                 self.rows

@@ -104,7 +104,10 @@ pub fn run(cfg: &Config) -> Result<()> {
         ("NODE-ACA / RK2 h=0.1", tableau::rk2(), 1e-2, Some(0.1)),
         ("NODE-ACA / RK4 h=0.1", tableau::rk4(), 1e-2, Some(0.1)),
     ] {
-        table.row(vec![name.to_string(), format!("{:.2}", test_err(&node_aca, &data, tab, rtol, fixed)?)]);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", test_err(&node_aca, &data, tab, rtol, fixed)?),
+        ]);
     }
     table.row(vec![
         "NODE-adjoint / Dopri5".into(),

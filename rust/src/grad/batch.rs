@@ -9,6 +9,11 @@
 //! Samples have different step counts, so the loop keeps an **active set**
 //! symmetric to the forward loop's: each sample starts at its own last step
 //! and retires from the shared sweep when its reverse index underflows.
+//! Nothing here assumes a shared span: every reverse round reads per-sample
+//! `(t, h, z)` straight off each sample's own track, so trajectories
+//! recorded by [`integrate_batch_spans`](crate::ode::integrate_batch_spans)
+//! — mixed endpoints, even mixed directions — replay exactly like
+//! shared-span ones, each sample's meters keyed off its own step count.
 //! Per-sample results — `dL/dz0`, `dL/dθ`, and every meter — are
 //! bit-identical to [`aca_backward`](super::aca_backward) over the
 //! equivalent per-sample [`Trajectory`](crate::ode::Trajectory) (asserted by
@@ -213,7 +218,14 @@ mod tests {
             self.scalar_vjp_calls.set(self.scalar_vjp_calls.get() + 1);
             self.inner.vjp(t, z, w, wjz, wjp)
         }
-        fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        fn vjp_batch(
+            &self,
+            ts: &[f64],
+            zs: &[f32],
+            ws: &[f32],
+            wjzs: &mut [f32],
+            wjps: &mut [f32],
+        ) {
             self.vjp_batch_calls.set(self.vjp_batch_calls.get() + 1);
             self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
         }
@@ -272,6 +284,31 @@ mod tests {
             assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "sample {i}");
             assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward, "sample {i}");
             assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls, "sample {i}");
+        }
+    }
+
+    /// Mixed per-sample spans: the reverse sweep keys every round off each
+    /// sample's own `(t, h, z)` track, so trajectories with different
+    /// endpoints co-batch bit-identically to scalar backward passes.
+    #[test]
+    fn mixed_span_batch_backward_matches_scalar() {
+        use crate::ode::integrate_batch_spans;
+        let f = VanDerPol::new(0.5);
+        let z0 = [2.0f32, 0.0, -1.2, 0.7, 0.4, 1.1];
+        let t1s = [1.0f64, 2.5, 0.6];
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let tab = tableau::dopri5();
+        let bt = integrate_batch_spans(&f, 0.0, &t1s, &z0, tab, &opts).unwrap();
+        let lam = [1.0f32, -0.5, 0.3, 0.9, -1.0, 0.2];
+        let gb = aca_backward_batch(&f, tab, &bt, &lam);
+        for (i, &t1) in t1s.iter().enumerate() {
+            let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+            let ga = aca_backward(&f, tab, &traj, &lam[i * 2..(i + 1) * 2]);
+            assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "sample {i} dl_dz0");
+            assert_eq!(gb[i].dl_dtheta, ga.dl_dtheta, "sample {i} dl_dtheta");
+            assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward, "sample {i}");
+            assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls, "sample {i}");
+            assert_eq!(gb[i].meter.checkpoint_bytes, ga.meter.checkpoint_bytes, "sample {i}");
         }
     }
 

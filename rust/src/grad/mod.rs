@@ -127,7 +127,9 @@ pub fn backward<F: crate::ode::OdeFunc + ?Sized>(
     match method {
         Method::Aca => Ok(aca_backward(f, tab, traj, lam_t1)),
         Method::Naive => Ok(naive_backward(f, tab, traj, lam_t1, opts)),
-        Method::Adjoint => adjoint_backward(f, tab, traj, lam_t1, &AdjointOpts::from_integrate(opts)),
+        Method::Adjoint => {
+            adjoint_backward(f, tab, traj, lam_t1, &AdjointOpts::from_integrate(opts))
+        }
     }
 }
 

@@ -235,7 +235,11 @@ impl StepVjpBatchScratch {
 ///
 /// Inputs are packed row-major: `ts`/`hs` are each sample's step start time
 /// and step size (`[n]`), `zs` the step-start states and `lams` the incoming
-/// cotangents (`[n × dim]`).
+/// cotangents (`[n × dim]`). Times, step sizes and signs are fully
+/// independent per sample — co-batched samples never need to share a span
+/// (or even a direction), which is what lets `aca_backward_batch` replay
+/// [`integrate_batch_spans`](crate::ode::integrate_batch_spans)
+/// trajectories unchanged.
 ///
 /// Outputs, per sample `i`:
 /// * `dzs` row `i` is **overwritten** with `dL/dz` at the step's start;

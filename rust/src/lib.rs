@@ -11,12 +11,14 @@
 //!   **adjoint**, **ACA** ([`grad`]) — plus training ([`train`]), data
 //!   generation ([`data`]), metrics ([`metrics`]) and the experiment
 //!   coordinator ([`coordinator`]). Independent solves batch through the
-//!   **batched engine** ([`ode::integrate_batch`] +
-//!   [`grad::aca_backward_batch`]): flat `[B × D]` state buffers, a shared
-//!   checkpoint arena, per-sample adaptive step control with per-sample
-//!   exact `nfe`/`avg_m`/memory meters, and one
-//!   [`ode::OdeFunc::eval_batch`] stage sweep over all live samples — the
-//!   hook a batched backend (single HLO dispatch, SIMD) overrides. The
+//!   **batched engine** ([`ode::integrate_batch`] /
+//!   [`ode::integrate_batch_spans`] + [`grad::aca_backward_batch`]): flat
+//!   `[B × D]` state buffers, a shared checkpoint arena, per-sample
+//!   adaptive step control **and per-sample integration spans** (each
+//!   sample stops at its own `t1`) with per-sample exact
+//!   `nfe`/`avg_m`/memory meters, and one [`ode::OdeFunc::eval_batch`]
+//!   stage sweep over all live samples — the hook a batched backend
+//!   (single HLO dispatch, SIMD) overrides. The
 //!   backward pass is symmetric: the **shared-stage reverse sweep**
 //!   ([`grad::step_vjp_batch`]) replays the recorded discretization for all
 //!   samples sharing a reverse round with one `eval_batch` stage recompute
@@ -25,7 +27,9 @@
 //!   meters stay bit-identical to the scalar path (`cargo bench --bench
 //!   grad_backward` measures the speedup over per-sample replay). On top of
 //!   the batched engine sits the **solve server** ([`serve`]): a dynamic
-//!   micro-batching layer that coalesces concurrent solve requests under a
+//!   micro-batching layer that coalesces concurrent solve requests —
+//!   including requests with **different integration spans** (the batch key
+//!   pins dynamics/solver/tolerance/`t0`/direction, not `t1`) — under a
 //!   `max_batch_size`/`max_queue_delay` flush policy, with admission
 //!   control, p50/p95/p99 latency metrics, and `NODAL_SERVE_*` tuning knobs.
 //! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
@@ -49,17 +53,19 @@
 //!
 //! ## Batched solving
 //!
-//! `B` independent solves of the same dynamics advance together; per-sample
-//! results are bit-identical to `B` scalar [`ode::integrate`] calls:
+//! `B` independent solves of the same dynamics advance together — each to
+//! its **own endpoint** if desired ([`ode::integrate_batch_spans`]); all
+//! per-sample results are bit-identical to `B` scalar [`ode::integrate`]
+//! calls over the same spans:
 //!
 //! ```no_run
 //! use nodal::grad::aca_backward_batch;
-//! use nodal::ode::{analytic::VanDerPol, integrate_batch, tableau, IntegrateOpts};
+//! use nodal::ode::{analytic::VanDerPol, integrate_batch_spans, tableau, IntegrateOpts};
 //!
 //! let f = VanDerPol::new(0.15);
 //! let z0 = [2.0f32, 0.0, -1.5, 0.5]; // B = 2 samples × D = 2, row-major
-//! let bt = integrate_batch(&f, 0.0, 5.0, &z0, tableau::dopri5(),
-//!                          &IntegrateOpts::default()).unwrap();
+//! let bt = integrate_batch_spans(&f, 0.0, &[5.0, 3.0], &z0, tableau::dopri5(),
+//!                                &IntegrateOpts::default()).unwrap();
 //! let lam = [1.0f32, 0.0, 1.0, 0.0]; // dL/dz(T) per sample
 //! let grads = aca_backward_batch(&f, tableau::dopri5(), &bt, &lam);
 //! println!("sample 0: steps {} nfe {} dL/dz0 {:?}",

@@ -177,7 +177,8 @@ mod tests {
     #[test]
     fn more_consistent_runs_higher_icc() {
         let mut rng = crate::util::Pcg64::seed(4);
-        let base: Vec<f64> = (0..300).map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 }).collect();
+        let base: Vec<f64> =
+            (0..300).map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 }).collect();
         let noisy = |p: f64, rng: &mut crate::util::Pcg64| -> Vec<Vec<f64>> {
             (0..8)
                 .map(|_| {

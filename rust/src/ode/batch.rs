@@ -1,5 +1,6 @@
 //! Batched adaptive integration: advance `B` independent solves of the same
-//! dynamics in lock-step rounds, with **per-sample** step-size control.
+//! dynamics in lock-step rounds, with **per-sample** step-size control and
+//! **per-sample integration spans**.
 //!
 //! Layout: current states, stage derivatives and stage inputs live in flat
 //! row-major `[B × D]` buffers; accepted checkpoints are appended to one
@@ -18,6 +19,16 @@
 //! batch engine buys today is amortized allocation and a single stage sweep
 //! over all live samples; what it enables next is an `eval_batch` override
 //! that dispatches one batched HLO call instead of `B` host round trips.
+//!
+//! Spans are per-sample: [`integrate_batch_spans`] takes `t1s: &[f64]` and
+//! integrates sample `i` over `[t0, t1s[i]]` — each sample derives its own
+//! direction, endpoint epsilon and final-step clamp from its own span
+//! (exactly what the scalar loop derives from *its* span, so bit-equality
+//! holds span by span) and retires through the active set at its own `t1`.
+//! Nothing in the checkpoint math couples co-batched samples, so mixed
+//! spans — and even mixed directions — share stage sweeps for the rounds
+//! they are jointly live. [`integrate_batch`] is the shared-span
+//! convenience wrapper.
 
 use super::controller::Controller;
 use super::func::OdeFunc;
@@ -136,7 +147,8 @@ impl BatchTrajectory {
 }
 
 /// Integrate `B` independent copies of `dz/dt = f(t, z)` from `(t0, z0_i)`
-/// to `t1` (paper Algo 1, vectorized over samples).
+/// to a shared `t1` (paper Algo 1, vectorized over samples) — the
+/// shared-span convenience wrapper over [`integrate_batch_spans`].
 ///
 /// `z0` is row-major `[B × D]` with `D = f.dim()`; `B` is inferred. Each
 /// sample runs the exact scalar control flow (per-sample `h`, retries,
@@ -153,6 +165,32 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
 ) -> Result<BatchTrajectory> {
     let dim = f.dim();
     ensure!(dim > 0, "dynamics must have a positive dimension");
+    integrate_batch_spans(f, t0, &vec![t1; z0.len() / dim], z0, tab, opts)
+}
+
+/// Integrate `B` independent copies of `dz/dt = f(t, z)`, sample `i` over
+/// its **own** span `[t0, t1s[i]]`.
+///
+/// Per-sample span geometry: direction, endpoint epsilon, final-step clamp
+/// and the initial-step bound all derive from `t1s[i]` exactly the way the
+/// scalar [`integrate`](super::integrate) derives them from its span, so
+/// every sample's grid, checkpoints and meters are bit-identical to a
+/// scalar solve over the same `[t0, t1s[i]]`. A sample whose span is zero
+/// (`t1s[i] == t0`) never enters the round loop and costs zero evaluations
+/// — its track is just the initial checkpoint, matching the scalar
+/// zero-span early return. Samples retire from the shared stage sweeps as
+/// they land on their own `t1`, via the same active-set machinery that
+/// already retires fast samples under a shared span.
+pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
+    f: &F,
+    t0: f64,
+    t1s: &[f64],
+    z0: &[f32],
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+) -> Result<BatchTrajectory> {
+    let dim = f.dim();
+    ensure!(dim > 0, "dynamics must have a positive dimension");
     ensure!(
         !z0.is_empty() && z0.len() % dim == 0,
         "batch state length {} is not a positive multiple of dim {}",
@@ -160,6 +198,11 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
         dim
     );
     let b = z0.len() / dim;
+    ensure!(
+        t1s.len() == b,
+        "t1s length {} != batch size {b} (z0 holds {b} samples of dim {dim})",
+        t1s.len()
+    );
     let s = tab.stages;
 
     let mut out = BatchTrajectory {
@@ -170,15 +213,14 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
             .map(|i| SampleTrack { ts: vec![t0], slots: vec![i], ..Default::default() })
             .collect(),
     };
-    if t0 == t1 {
-        return Ok(out);
-    }
 
-    let dir = (t1 - t0).signum();
-    let span = (t1 - t0).abs();
+    // Per-sample span geometry — exactly what the scalar loop computes from
+    // its single span, evaluated per sample.
+    let dir: Vec<f64> = t1s.iter().map(|t1| (t1 - t0).signum()).collect();
+    let span: Vec<f64> = t1s.iter().map(|t1| (t1 - t0).abs()).collect();
+    let eps_t: Vec<f64> = span.iter().map(|sp| 1e-12 * sp.max(1.0)).collect();
     let fixed = opts.fixed_h.is_some() || !tab.adaptive();
     let ctrl = opts.controller.unwrap_or_else(|| Controller::for_tableau(tab));
-    let eps_t = 1e-12 * span.max(1.0);
 
     // Per-sample mutable state (indexed by sample id).
     let mut t = vec![t0; b];
@@ -191,16 +233,19 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
     let mut trial_buf: Vec<Vec<TrialRecord>> = vec![Vec::new(); b];
 
     for i in 0..b {
+        if t1s[i] == t0 {
+            continue; // zero-span: scalar early return — no h init, no nfe
+        }
         h[i] = if fixed {
-            opts.fixed_h.map(|h| h.abs()).unwrap_or(span / 100.0) * dir
+            opts.fixed_h.map(|h| h.abs()).unwrap_or(span[i] / 100.0) * dir[i]
         } else {
             match opts.h0 {
-                Some(h0) => h0.abs().min(span) * dir,
+                Some(h0) => h0.abs().min(span[i]) * dir[i],
                 None => {
                     let zi = &z[i * dim..(i + 1) * dim];
-                    let hi = ctrl.initial_step(f, t0, zi, dir, opts.atol, opts.rtol);
+                    let hi = ctrl.initial_step(f, t0, zi, dir[i], opts.atol, opts.rtol);
                     out.tracks[i].nfe += 1;
-                    hi.abs().min(span) * dir
+                    hi.abs().min(span[i]) * dir[i]
                 }
             }
         };
@@ -209,8 +254,8 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
 
     // Round scratch, packed in active order (slot `a` of a round buffer is
     // the `a`-th live sample). No allocation inside the loop. A span below
-    // eps_t never enters the loop — same as the scalar path.
-    let mut active: Vec<usize> = if span > eps_t { (0..b).collect() } else { Vec::new() };
+    // its eps_t never enters the loop — same as the scalar path.
+    let mut active: Vec<usize> = (0..b).filter(|&i| span[i] > eps_t[i]).collect();
     let mut h_try = vec![0.0f64; b];
     let mut ks: Vec<Vec<f32>> = (0..s).map(|_| vec![0.0f32; b * dim]).collect();
     let mut us = vec![0.0f32; b * dim];
@@ -222,7 +267,7 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
     while !active.is_empty() {
         let na = active.len();
 
-        // ---- step setup: per-sample trial size, clamped onto t1 ----
+        // ---- step setup: per-sample trial size, clamped onto its own t1 ----
         for (a, &i) in active.iter().enumerate() {
             attempts[i] += 1;
             if attempts[i] > opts.max_steps {
@@ -234,8 +279,8 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
                     h[i]
                 );
             }
-            let ht = if (t[i] + h[i] - t1) * dir > 0.0 { t1 - t[i] } else { h[i] };
-            if ht.abs() < 1e-14 * span.max(1.0) {
+            let ht = if (t[i] + h[i] - t1s[i]) * dir[i] > 0.0 { t1s[i] - t[i] } else { h[i] };
+            if ht.abs() < 1e-14 * span[i].max(1.0) {
                 bail!("sample {i}: step size underflow at t={} (h={ht})", t[i]);
             }
             h_try[a] = ht;
@@ -343,7 +388,7 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
             }
 
             // Accept: advance state, record the checkpoint into the arena.
-            let t_new = if hta == t1 - t[i] { t1 } else { t[i] + hta };
+            let t_new = if hta == t1s[i] - t[i] { t1s[i] } else { t[i] + hta };
             z[i * dim..(i + 1) * dim].copy_from_slice(&z_next[i * dim..(i + 1) * dim]);
             t[i] = t_new;
             let slot = out.zbuf.len() / dim;
@@ -365,7 +410,7 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
             } else {
                 k0_valid[i] = false;
             }
-            if (t1 - t[i]) * dir > eps_t {
+            if (t1s[i] - t[i]) * dir[i] > eps_t[i] {
                 next_active.push(i);
             }
         }
@@ -487,6 +532,83 @@ mod tests {
         for i in 0..3 {
             assert_eq!(traj.tracks[i].nfe, 40);
         }
+    }
+
+    #[test]
+    fn mixed_spans_match_scalar_bitwise() {
+        // Each sample integrates to its own t1; grids, checkpoints and
+        // meters must be bit-identical to scalar solves over those spans —
+        // on both the adaptive and the fixed-step path.
+        let f = VanDerPol::new(0.6);
+        let z0 = [2.0f32, 0.0, -1.0, 0.5, 0.3, -0.8];
+        let t1s = [1.0f64, 2.5, 0.4];
+        for opts in [IntegrateOpts::with_tol(1e-6, 1e-8), IntegrateOpts::fixed(0.05)] {
+            let tab = if opts.fixed_h.is_some() { tableau::rk4() } else { tableau::dopri5() };
+            let bt = integrate_batch_spans(&f, 0.0, &t1s, &z0, tab, &opts).unwrap();
+            for (i, &t1) in t1s.iter().enumerate() {
+                let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+                assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
+                assert_eq!(bt.tracks[i].hs, traj.hs, "sample {i} steps");
+                assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+                assert_eq!(*bt.tracks[i].ts.last().unwrap(), t1, "sample {i} lands on its t1");
+                assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
+                assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "sample {i} rejected");
+                assert_eq!(bt.checkpoint_bytes(i), traj.checkpoint_bytes(), "sample {i} bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_directions_match_scalar_bitwise() {
+        // Per-sample spans make direction per-sample too: a forward and a
+        // backward solve can share a batch (serve keys still separate them,
+        // but the engine itself must not care).
+        let f = Linear::new(-0.4, 2);
+        let z0 = [1.0f32, -0.5, 0.8, 0.2];
+        let t1s = [1.5f64, -1.0];
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let tab = tableau::dopri5();
+        let bt = integrate_batch_spans(&f, 0.0, &t1s, &z0, tab, &opts).unwrap();
+        for (i, &t1) in t1s.iter().enumerate() {
+            let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+            assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
+            assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+            assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
+        }
+    }
+
+    #[test]
+    fn zero_span_sample_rides_along_for_free() {
+        // One sample with t1 == t0 co-batched with live ones: it must report
+        // its initial state, zero steps and zero nfe (the scalar zero-span
+        // early return), without perturbing its neighbors.
+        let f = CountingFunc::new(VanDerPol::new(0.5));
+        let z0 = [2.0f32, 0.0, -1.0, 0.5];
+        let t1s = [0.0f64, 2.0];
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let bt = integrate_batch_spans(&f, 0.0, &t1s, &z0, tableau::dopri5(), &opts).unwrap();
+        assert_eq!(bt.steps(0), 0);
+        assert_eq!(bt.last(0), &[2.0, 0.0]);
+        assert_eq!(bt.tracks[0].nfe, 0, "zero-span sample must cost nothing");
+        let traj = integrate(&f.inner, 0.0, 2.0, &z0[2..4], tableau::dopri5(), &opts).unwrap();
+        assert_eq!(bt.last(1), traj.last(), "live neighbor unperturbed");
+        assert_eq!(bt.tracks[1].nfe, traj.nfe);
+        assert_eq!(f.evals(), traj.nfe, "batch spent exactly the live sample's evals");
+    }
+
+    #[test]
+    fn t1s_length_mismatch_errors() {
+        let f = Linear::new(-1.0, 2);
+        let err = integrate_batch_spans(
+            &f,
+            0.0,
+            &[1.0],
+            &[1.0, 2.0, 3.0, 4.0],
+            tableau::rk4(),
+            &IntegrateOpts::fixed(0.1),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("t1s length"), "{err}");
     }
 
     #[test]

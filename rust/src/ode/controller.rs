@@ -8,6 +8,13 @@
 //! differentiates through it (paper Sec 3.3, Eq 23–26): [`Controller::factor`]
 //! and [`Controller::dfactor_derr`] expose both the value and the derivative
 //! of the decay factor, and the clamped regions have exactly zero derivative.
+//!
+//! Every decision is a pure function of `(h, err, err_prev)` — the
+//! controller keeps no cross-step state. That statelessness is what lets
+//! the batched engine ([`crate::ode::integrate_batch_spans`]) drive `B`
+//! independent per-sample control loops, each clamping its final step onto
+//! its **own** `t1`, through one shared `Controller` value without any
+//! per-sample divergence from the scalar path.
 
 /// Accept/reject decision plus the next trial step size.
 #[derive(Debug, Clone, Copy, PartialEq)]

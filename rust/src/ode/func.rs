@@ -406,7 +406,14 @@ mod tests {
         fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
             self.inner.vjp(t, z, w, wjz, wjp)
         }
-        fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        fn vjp_batch(
+            &self,
+            ts: &[f64],
+            zs: &[f32],
+            ws: &[f32],
+            wjzs: &mut [f32],
+            wjps: &mut [f32],
+        ) {
             self.batch_vjps.set(self.batch_vjps.get() + 1);
             self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
         }

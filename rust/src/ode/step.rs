@@ -199,7 +199,19 @@ mod tests {
         for tab in [tableau::rk23(), tableau::dopri5()] {
             let mut z_next = [0.0f32; 2];
             let mut scratch = StepScratch::new();
-            rk_step(&f, tab, 0.0, 0.3, &[1.0, 2.0], None, 1e-6, 1e-6, &mut z_next, None, &mut scratch);
+            rk_step(
+                &f,
+                tab,
+                0.0,
+                0.3,
+                &[1.0, 2.0],
+                None,
+                1e-6,
+                1e-6,
+                &mut z_next,
+                None,
+                &mut scratch,
+            );
             let mut expect = [0.0f32; 2];
             f.eval(0.3, &z_next, &mut expect);
             for i in 0..2 {
@@ -226,7 +238,8 @@ mod tests {
         assert_eq!(o1.nfe, 7);
         let k0 = scratch.ks[0].clone();
         let mut z2 = [0.0f32; 3];
-        let o2 = rk_step(&f, tab, 0.0, 0.05, &z, Some(&k0), 1e-6, 1e-6, &mut z2, None, &mut scratch);
+        let o2 =
+            rk_step(&f, tab, 0.0, 0.05, &z, Some(&k0), 1e-6, 1e-6, &mut z2, None, &mut scratch);
         assert_eq!(o2.nfe, 6);
         assert_eq!(z1, z2);
     }
@@ -237,7 +250,19 @@ mod tests {
         let f = Linear::new(1.0, 1);
         let mut z = [0.0f32];
         let mut scratch = StepScratch::new();
-        let out = rk_step(&f, tableau::rk4(), 0.0, 0.5, &[1.0], None, 1e-9, 1e-9, &mut z, None, &mut scratch);
+        let out = rk_step(
+            &f,
+            tableau::rk4(),
+            0.0,
+            0.5,
+            &[1.0],
+            None,
+            1e-9,
+            1e-9,
+            &mut z,
+            None,
+            &mut scratch,
+        );
         assert_eq!(out.err_norm, 0.0);
     }
 
@@ -247,7 +272,19 @@ mod tests {
         let f = Linear::new(1.0, 1);
         let mut z = [0.0f32];
         let mut scratch = StepScratch::new();
-        rk_step(&f, tableau::dopri5(), 1.0, -0.1, &[1.0], None, 1e-9, 1e-9, &mut z, None, &mut scratch);
+        rk_step(
+            &f,
+            tableau::dopri5(),
+            1.0,
+            -0.1,
+            &[1.0],
+            None,
+            1e-9,
+            1e-9,
+            &mut z,
+            None,
+            &mut scratch,
+        );
         let exact = (-0.1f64).exp();
         assert!((z[0] as f64 - exact).abs() < 5e-7, "{} vs {}", z[0], exact);
     }

@@ -8,10 +8,12 @@
 //! [`super::ManualClock`]-driven virtual timeline and no timing assertions.
 //! The server's batcher thread drives the same code with wall time.
 //!
-//! Grouping: requests coalesce by [`BatchKey`] (same dynamics, solver, span,
-//! tolerance, gradient flag); only the initial state may differ inside a
-//! batch — which is exactly the axis `integrate_batch` vectorizes over
-//! without changing any per-sample result.
+//! Grouping: requests coalesce by [`BatchKey`] (same dynamics, solver,
+//! start time `t0`, direction, tolerance, gradient flag); the initial state
+//! *and the endpoint `t1`* may differ inside a batch — exactly the axes
+//! `integrate_batch_spans` vectorizes over without changing any per-sample
+//! result. Under mixed-span traffic this is the occupancy lever: requests
+//! that previously split into one group per span now fill one batch.
 
 use super::request::{BatchKey, ResponseSlot, SolveRequest};
 use std::collections::VecDeque;
@@ -211,18 +213,35 @@ mod tests {
 
     #[test]
     fn flush_order_is_trigger_order() {
-        // Group A (vdp) deadline-expires at t=10; group B (other span) size-
-        // flushes at t=5. Poll at t=12 must yield B before A.
+        // Group A (vdp) deadline-expires at t=10; group B (other dynamics)
+        // size-flushes at t=5. Poll at t=12 must yield B before A.
         let mut f = BatchFormer::new(2, ms(10));
         f.push(pending("vdp", 5.0, ms(0)), ms(0));
-        f.push(pending("vdp", 7.0, ms(4)), ms(4));
-        f.push(pending("vdp", 7.0, ms(5)), ms(5)); // B size-flushes here
+        f.push(pending("linear", 7.0, ms(4)), ms(4));
+        f.push(pending("linear", 7.0, ms(5)), ms(5)); // B size-flushes here
         let out = f.poll(ms(12));
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].reason, FlushReason::Size);
         assert_eq!(out[0].triggered_at, ms(5));
         assert_eq!(out[1].reason, FlushReason::Deadline);
         assert_eq!(out[1].triggered_at, ms(10));
+    }
+
+    /// Requests that differ only in `t1` are one group now: the former must
+    /// size-flush them together instead of keeping one group per span.
+    #[test]
+    fn mixed_spans_coalesce_into_one_group() {
+        let mut f = BatchFormer::new(3, ms(100));
+        f.push(pending("vdp", 5.0, ms(0)), ms(0));
+        f.push(pending("vdp", 7.0, ms(1)), ms(1));
+        assert!(f.poll(ms(1)).is_empty(), "one group of two, under size");
+        f.push(pending("vdp", 3.0, ms(2)), ms(2));
+        let out = f.poll(ms(2));
+        assert_eq!(out.len(), 1, "three spans, one batch");
+        assert_eq!(out[0].reason, FlushReason::Size);
+        assert_eq!(out[0].items.len(), 3);
+        let t1s: Vec<f64> = out[0].items.iter().map(|p| p.req.t1).collect();
+        assert_eq!(t1s, vec![5.0, 7.0, 3.0], "per-request endpoints preserved in order");
     }
 
     #[test]

@@ -1,14 +1,15 @@
 //! `serve` — a dynamic micro-batching solve server over the batched engine.
 //!
 //! The ROADMAP's north star is serving heavy solve traffic; this subsystem
-//! is the serving layer over [`crate::ode::integrate_batch`] /
+//! is the serving layer over [`crate::ode::integrate_batch_spans`] /
 //! [`crate::grad::aca_backward_batch`]. Adaptive solvers make per-request
 //! cost variable (NFE differs per initial condition), which is exactly the
 //! workload where **dynamic batching** beats both one-request-at-a-time
 //! dispatch and fixed-size batching: the engine's per-sample step control
-//! means heterogeneous requests share a batch *without changing any
-//! per-sample result* (the ACA equivalence guarantee), so the batch former
-//! is free to coalesce whatever compatible traffic is pending.
+//! and per-sample spans mean heterogeneous requests — different initial
+//! states *and different endpoints `t1`* — share a batch *without changing
+//! any per-sample result* (the ACA equivalence guarantee), so the batch
+//! former is free to coalesce whatever compatible traffic is pending.
 //!
 //! ## Architecture
 //!
@@ -16,12 +17,16 @@
 //! submit() ── admission ──▶ submission queue (bounded; full ⇒ Overloaded)
 //!                               │ batcher thread
 //!                               ▼
-//!                         BatchFormer  — groups by BatchKey, flushes on
+//!                         BatchFormer  — groups by BatchKey (dynamics,
+//!                               │        solver, t0, direction, tolerance,
+//!                               │        grad flag — z0 AND t1 free per
+//!                               │        request), flushes on
 //!                               │        max_batch_size OR max_queue_delay,
 //!                               ▼        whichever trips first
 //!                          work queue ──▶ worker shard (N threads)
-//!                                            │  integrate_batch
-//!                                            │  (+ aca_backward_batch)
+//!                                            │  integrate_batch_spans
+//!                                            │  (one t1 per sample;
+//!                                            │  + aca_backward_batch)
 //!                                            ▼
 //!                               per-request ResponseHandle + metrics
 //! ```
@@ -354,6 +359,16 @@ impl SolveServer {
         if !req.t0.is_finite() || !req.t1.is_finite() {
             return Err(ServeError::BadRequest("non-finite time span".into()));
         }
+        // A zero-length span is an identity solve; letting it reach the
+        // solver wastes a batch slot and (before per-span batching) used to
+        // depend on engine edge-case behavior. Reject it at admission so the
+        // caller hears about the no-op immediately.
+        if req.t0 == req.t1 {
+            return Err(ServeError::BadRequest(format!(
+                "zero-length span: t0 == t1 == {}",
+                req.t0
+            )));
+        }
         match req.tol {
             Tolerance::Adaptive { rtol, atol } => {
                 if !req.tab.adaptive() {
@@ -576,6 +591,32 @@ mod tests {
             .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8))
             .unwrap_err();
         assert_eq!(err, ServeError::ShuttingDown);
+    }
+
+    /// Admission bugfix: a zero-length span used to sail through validation
+    /// (t0/t1 are finite) and reach the solver. It must bounce at submit.
+    #[test]
+    fn zero_span_rejected_at_admission() {
+        let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
+        for t in [0.0, 2.5, -1.0] {
+            let err = server
+                .submit(SolveRequest::adaptive("vdp", t, t, vec![1.0, 0.0], 1e-6, 1e-8))
+                .unwrap_err();
+            match err {
+                ServeError::BadRequest(msg) => {
+                    assert!(msg.contains("zero-length span"), "{msg}")
+                }
+                other => panic!("zero span must be BadRequest, got {other:?}"),
+            }
+        }
+        // Nothing was admitted: the ledger is untouched and a real request
+        // still goes through.
+        assert_eq!(server.inflight(), 0);
+        assert_eq!(server.metrics().submitted, 0);
+        let h = server
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .unwrap();
+        assert!(h.wait().is_ok());
     }
 
     #[test]

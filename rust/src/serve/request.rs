@@ -3,10 +3,13 @@
 //! A [`SolveRequest`] names a registered dynamics, one initial state, a
 //! t-span, a solver tableau, and a tolerance; optionally it carries a
 //! terminal cotangent `dL/dz(T)` to request the batched ACA backward pass.
-//! Requests that agree on everything except the initial state (same
-//! [`BatchKey`]) can share one [`crate::ode::integrate_batch`] call — the
-//! engine's per-sample adaptive step control guarantees the co-batched
-//! results are the ones each request would have gotten alone.
+//! Requests that agree on everything except the initial state **and the
+//! endpoint `t1`** (same [`BatchKey`]) can share one
+//! [`crate::ode::integrate_batch_spans`] call — the engine's per-sample
+//! adaptive step control and per-sample spans guarantee the co-batched
+//! results are the ones each request would have gotten alone. The key still
+//! pins `t0` and the integration direction (equal starts, same-sign spans);
+//! only where each sample *stops* is free per request.
 
 use crate::grad::GradResult;
 use crate::ode::integrate::IntegrateOpts;
@@ -84,6 +87,10 @@ impl SolveRequest {
     }
 
     /// Coalescing key: requests with equal keys run in one batched solve.
+    /// `t1` is deliberately **not** part of the key — the batched engine
+    /// stops each sample at its own endpoint, so mixed-span requests
+    /// coalesce freely (the direction still is: a forward and a backward
+    /// solve never share a batch).
     pub fn batch_key(&self) -> BatchKey {
         let (tol_kind, tol_a, tol_b) = match self.tol {
             Tolerance::Adaptive { rtol, atol } => (0u8, rtol.to_bits(), atol.to_bits()),
@@ -93,7 +100,7 @@ impl SolveRequest {
             dynamics: self.dynamics.clone(),
             tab: self.tab.name,
             t0: self.t0.to_bits(),
-            t1: self.t1.to_bits(),
+            dir: if self.t1 >= self.t0 { 1 } else { -1 },
             tol_kind,
             tol_a,
             tol_b,
@@ -102,15 +109,20 @@ impl SolveRequest {
     }
 }
 
-/// What makes two requests co-batchable: same dynamics, solver, span and
-/// tolerance bits, and the same gradient flag (a batch either runs the
-/// backward pass for all its samples or for none).
+/// What makes two requests co-batchable: same dynamics, solver, start time
+/// `t0`, integration direction and tolerance bits, and the same gradient
+/// flag (a batch either runs the backward pass for all its samples or for
+/// none). The endpoint `t1` is free: the engine integrates each co-batched
+/// sample to its own `t1` ([`crate::ode::integrate_batch_spans`]), retiring
+/// it from the shared stage sweeps when it lands there.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub dynamics: String,
     pub tab: &'static str,
     pub t0: u64,
-    pub t1: u64,
+    /// Sign of `t1 - t0`: kept in the key so forward and backward solves
+    /// group separately even though `t1` itself is not keyed.
+    pub dir: i8,
     pub tol_kind: u8,
     pub tol_a: u64,
     pub tol_b: u64,
@@ -256,16 +268,31 @@ mod tests {
     fn same_parameters_same_key() {
         let a = req();
         let mut b = req();
-        b.z0 = vec![-1.0, 0.5]; // the state is the only thing allowed to differ
+        b.z0 = vec![-1.0, 0.5]; // the state may differ inside a batch
         assert_eq!(a.batch_key(), b.batch_key());
+    }
+
+    /// The endpoint is the other free axis: requests that differ only in
+    /// `t1` (same start, same direction) coalesce — the engine stops each
+    /// sample at its own endpoint.
+    #[test]
+    fn mixed_endpoints_share_a_key() {
+        let a = req();
+        let mut b = req();
+        b.t1 = 6.0;
+        b.z0 = vec![-1.0, 0.5];
+        assert_eq!(a.batch_key(), b.batch_key(), "t1 must not split batches");
     }
 
     #[test]
     fn key_separates_incompatible_requests() {
         let base = req();
         let mut other = req();
-        other.t1 = 6.0;
-        assert_ne!(base.batch_key(), other.batch_key(), "span");
+        other.t0 = 1.0;
+        assert_ne!(base.batch_key(), other.batch_key(), "start time");
+        let mut other = req();
+        other.t1 = -5.0; // backward span from the same t0
+        assert_ne!(base.batch_key(), other.batch_key(), "direction");
         let mut other = req();
         other.tol = Tolerance::Adaptive { rtol: 1e-5, atol: 1e-8 };
         assert_ne!(base.batch_key(), other.batch_key(), "tolerance");

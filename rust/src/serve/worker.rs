@@ -1,15 +1,19 @@
 //! Batch execution: a shard of worker threads pulls [`FormedBatch`]es off
 //! the work queue, runs them through the batched engine
-//! ([`crate::ode::integrate_batch`] + [`crate::grad::aca_backward_batch`]),
-//! and scatters per-sample results back to each request's response slot.
+//! ([`crate::ode::integrate_batch_spans`] +
+//! [`crate::grad::aca_backward_batch`]), and scatters per-sample results
+//! back to each request's response slot. Co-batched requests share `t0`,
+//! solver and tolerance (the [`super::request::BatchKey`]) but each keeps
+//! its **own endpoint**: the worker hands the engine one `t1` per sample
+//! and every sample retires from the shared stage sweeps at its own `t1`.
 //! Gradient batches share stage sweeps in **both** directions: the forward
 //! solve amortizes `eval_batch` across co-batched requests and the backward
 //! pass runs the shared-stage reverse sweep (`step_vjp_batch` — one
 //! `eval_batch`/`vjp_batch` dispatch per stage per reverse round), so
 //! co-batching gradient traffic costs per-stage dispatch, not per-request.
 //!
-//! Poison isolation: `integrate_batch` fails the whole batch when any one
-//! sample blows up (stiffness, step underflow). A serving layer must not let
+//! Poison isolation: `integrate_batch_spans` fails the whole batch when any
+//! one sample blows up (stiffness, step underflow). A serving layer must not let
 //! one bad request fail its co-batched neighbors, so on batch failure the
 //! worker falls back to per-sample scalar solves — bit-identical to the
 //! batched path by the engine's equivalence guarantee — and only the
@@ -20,7 +24,7 @@ use super::request::{RequestStats, ServeError, SolveResponse};
 use super::Core;
 use crate::coordinator::pool::panic_msg;
 use crate::grad::{aca_backward, aca_backward_batch, GradResult};
-use crate::ode::{integrate, integrate_batch};
+use crate::ode::{integrate, integrate_batch_spans};
 
 /// Worker thread body: serve batches until the work queue closes and drains.
 ///
@@ -68,13 +72,16 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     };
     let dim = f.dim();
     let first = &batch.items[0].req;
-    let (t0, t1, tab) = (first.t0, first.t1, first.tab);
+    // t0/tab/opts are key-equal across the batch; t1 is per-request.
+    let (t0, tab) = (first.t0, first.tab);
     let opts = first.opts();
     let wants_grad = batch.key.wants_grad;
 
     let mut z0 = Vec::with_capacity(n * dim);
+    let mut t1s = Vec::with_capacity(n);
     for item in &batch.items {
         z0.extend_from_slice(&item.req.z0);
+        t1s.push(item.req.t1);
     }
 
     // The whole batched attempt — forward AND backward — is panic-contained
@@ -83,7 +90,7 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     // an integration error does.
     let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<Vec<SampleOutcome>> {
-            let bt = integrate_batch(&*f, t0, t1, &z0, tab, &opts)?;
+            let bt = integrate_batch_spans(&*f, t0, &t1s, &z0, tab, &opts)?;
             let grads = wants_grad.then(|| {
                 let mut lam = Vec::with_capacity(n * dim);
                 for item in &batch.items {
@@ -121,7 +128,7 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
             .map(|item| {
                 let one = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || -> SampleOutcome {
-                        match integrate(&*f, t0, t1, &item.req.z0, tab, &opts) {
+                        match integrate(&*f, t0, item.req.t1, &item.req.z0, tab, &opts) {
                             Ok(traj) => {
                                 let grad = wants_grad.then(|| {
                                     aca_backward(&*f, tab, &traj, item.req.grad.as_ref().unwrap())

@@ -131,7 +131,12 @@ impl Trainer {
     /// call (each HLO-batch is one batch-engine "sample" with its own
     /// adaptive step control) and differentiate in one shared-stage
     /// [`grad::backward_batch`] call, instead of one scalar solve + reverse
-    /// sweep per batch.
+    /// sweep per batch. Training always integrates every group member over
+    /// the same `[0, cfg.t1]`, so it stays on the shared-span wrapper; the
+    /// per-sample-span entry point
+    /// ([`crate::ode::integrate_batch_spans`]) exists for callers whose
+    /// samples genuinely end at different times (the serve worker's
+    /// mixed-span batches, time-series with ragged horizons).
     ///
     /// Returns (mean loss over the group, **summed** dθ, summed meters) —
     /// gradient-accumulation semantics: per-batch results are bit-identical

@@ -6,7 +6,8 @@
 use nodal::grad::{aca_backward, aca_backward_batch, naive_backward, step_vjp};
 use nodal::ode::analytic::{ConvFlow, Linear, ThreeBody, VanDerPol};
 use nodal::ode::{
-    integrate, integrate_batch, rk_step, tableau, IntegrateOpts, OdeFunc, StepScratch, Tableau,
+    integrate, integrate_batch, integrate_batch_spans, rk_step, tableau, IntegrateOpts, OdeFunc,
+    StepScratch, Tableau,
 };
 use nodal::util::Pcg64;
 
@@ -409,6 +410,68 @@ fn prop_shared_stage_backward_bit_equals_scalar_all_dynamics() {
         saw_mismatched_steps,
         "sweep never exercised the retirement path (all step counts equal)"
     );
+}
+
+/// Property: per-sample spans — `integrate_batch_spans` with every
+/// sample's `t1` drawn independently, chained into `aca_backward_batch` —
+/// reproduce scalar `integrate` + `aca_backward` over each sample's own
+/// span **bit-for-bit**: forward finals (and full grids), `dl_dz0`,
+/// `dl_dtheta`, and all per-sample meters, for all four analytic dynamics,
+/// B ∈ {1, 3, 8}, fixed-step and adaptive. Each sample derives its span
+/// geometry (direction, endpoint epsilon, step clamps) from its own `t1`
+/// exactly as a scalar solve would, so mixed spans add no tolerance at all.
+#[test]
+fn prop_mixed_span_batch_matches_scalar_all_dynamics() {
+    let mut rng = Pcg64::seed(1313);
+    let mut saw_mixed_spans = false;
+    for (name, f) in all_dynamics() {
+        let d = f.dim();
+        for case in 0..6 {
+            let fixed = case % 2 == 0;
+            let b = [1usize, 3, 8][case % 3];
+            let tab = if fixed { tableau::rk4() } else { tableau::dopri5() };
+            // Per-sample endpoints, drawn independently; short spans keep
+            // the stiff dynamics (three-body close encounters) inside
+            // solver reach at every random initial condition.
+            let t1s: Vec<f64> = (0..b).map(|_| rng.range(0.2, 0.8)).collect();
+            saw_mixed_spans |= t1s.windows(2).any(|w| w[0] != w[1]);
+            let z0: Vec<f32> = (0..b * d).map(|_| rng.range(-1.2, 1.2) as f32).collect();
+            let opts = if fixed {
+                IntegrateOpts::fixed(rng.range(0.01, 0.04))
+            } else {
+                IntegrateOpts::with_tol(1e-6, 1e-8)
+            };
+            let bt = integrate_batch_spans(&*f, 0.0, &t1s, &z0, tab, &opts).unwrap();
+            let lam: Vec<f32> = (0..b * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let gb = aca_backward_batch(&*f, tab, &bt, &lam);
+            for (i, &t1) in t1s.iter().enumerate() {
+                let traj = integrate(&*f, 0.0, t1, &z0[i * d..(i + 1) * d], tab, &opts).unwrap();
+                let ga = aca_backward(&*f, tab, &traj, &lam[i * d..(i + 1) * d]);
+                let ctx = format!("{name} case {case} B={b} sample {i} t1={t1}");
+                assert_eq!(bt.tracks[i].ts, traj.ts, "{ctx}: grid");
+                assert_eq!(bt.tracks[i].hs, traj.hs, "{ctx}: step sizes");
+                assert_eq!(bt.last(i), traj.last(), "{ctx}: forward final");
+                assert_eq!(*bt.tracks[i].ts.last().unwrap(), t1, "{ctx}: lands on its t1");
+                assert_eq!(bt.tracks[i].nfe, traj.nfe, "{ctx}: nfe");
+                assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "{ctx}: rejected");
+                assert_eq!(bt.checkpoint_bytes(i), traj.checkpoint_bytes(), "{ctx}: bytes");
+                assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "{ctx}: dl_dz0");
+                assert_eq!(gb[i].dl_dtheta, ga.dl_dtheta, "{ctx}: dl_dtheta");
+                assert_eq!(gb[i].meter.nfe_forward, ga.meter.nfe_forward, "{ctx}: nfe_f");
+                assert_eq!(gb[i].meter.nfe_backward, ga.meter.nfe_backward, "{ctx}: nfe_b");
+                assert_eq!(gb[i].meter.vjp_calls, ga.meter.vjp_calls, "{ctx}: vjps");
+                assert_eq!(gb[i].meter.graph_depth, ga.meter.graph_depth, "{ctx}: depth");
+                assert_eq!(gb[i].meter.n_steps, ga.meter.n_steps, "{ctx}: steps");
+                assert_eq!(gb[i].meter.n_rejected, ga.meter.n_rejected, "{ctx}: rej");
+                assert_eq!(
+                    gb[i].meter.checkpoint_bytes,
+                    ga.meter.checkpoint_bytes,
+                    "{ctx}: meter bytes"
+                );
+            }
+        }
+    }
+    assert!(saw_mixed_spans, "sweep never drew two distinct spans in one batch");
 }
 
 /// Property: `integrate_batch` + `aca_backward_batch` reproduce per-sample

@@ -277,6 +277,186 @@ fn shutdown_drains_in_flight_requests() {
     assert_eq!(server.metrics().completed, 32);
 }
 
+/// Wraps Van der Pol and counts which engine entry points ran: the batched
+/// stage sweeps (`eval_batch`/`vjp_batch` — the `integrate_batch_spans` /
+/// `aca_backward_batch` path) versus the scalar entry points (`eval`/`vjp`
+/// — what the per-sample fallback and direct `integrate` calls use). Zero
+/// scalar calls proves the whole batch was served by the batched engine.
+struct EntryCounting {
+    inner: VanDerPol,
+    scalar_evals: Arc<std::sync::atomic::AtomicUsize>,
+    batch_evals: Arc<std::sync::atomic::AtomicUsize>,
+    scalar_vjps: Arc<std::sync::atomic::AtomicUsize>,
+    batch_vjps: Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl EntryCounting {
+    #[allow(clippy::type_complexity)]
+    fn new(
+        inner: VanDerPol,
+    ) -> (
+        Self,
+        Arc<std::sync::atomic::AtomicUsize>,
+        Arc<std::sync::atomic::AtomicUsize>,
+        Arc<std::sync::atomic::AtomicUsize>,
+        Arc<std::sync::atomic::AtomicUsize>,
+    ) {
+        let mk = || Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let (se, be, sv, bv) = (mk(), mk(), mk(), mk());
+        let f = EntryCounting {
+            inner,
+            scalar_evals: se.clone(),
+            batch_evals: be.clone(),
+            scalar_vjps: sv.clone(),
+            batch_vjps: bv.clone(),
+        };
+        (f, se, be, sv, bv)
+    }
+}
+
+impl OdeFunc for EntryCounting {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        self.scalar_evals.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.eval(t, z, dz)
+    }
+    fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
+        self.batch_evals.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.eval_batch(ts, zs, dzs)
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.scalar_vjps.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.vjp(t, z, w, wjz, wjp)
+    }
+    fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
+        self.batch_vjps.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)
+    }
+}
+
+/// The tentpole guarantee, forward half: four requests with identical
+/// dynamics/solver/tolerance but four **distinct `t1` values** form ONE
+/// batch and execute as ONE `integrate_batch_spans` call — asserted by
+/// dispatch accounting (exactly one executed batch of size 4, stage-sweep
+/// dispatch count matching the batched engine's schedule, zero scalar
+/// entry-point calls) — and every response is bit-identical to its direct
+/// single-request solve, NFE accounting included.
+#[test]
+fn mixed_span_forward_batch_runs_once_and_matches_direct() {
+    let vdp = VanDerPol::new(0.5);
+    let (f, scalar_evals, batch_evals, _, _) = EntryCounting::new(vdp.clone());
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("vdp", f)
+        .config(test_config(16, 64, 1))
+        .clock(clock)
+        .start();
+
+    // Distinct spans, distinct states; fixed step keeps every dispatch on
+    // the batched sweeps (adaptive auto-h0 probes f through scalar `eval`).
+    // The step and the endpoints are dyadic, so per-sample step counts are
+    // exact (16/24/32/40) and the dispatch accounting below is not hostage
+    // to float accumulation.
+    let t1s = [1.0f64, 1.5, 2.0, 2.5];
+    let z0s: Vec<Vec<f32>> = (0..4).map(|i| vec![0.4 * i as f32 - 0.5, 0.3]).collect();
+    let handles: Vec<_> = t1s
+        .iter()
+        .zip(&z0s)
+        .map(|(&t1, z0)| {
+            server.submit(SolveRequest::fixed("vdp", 0.0, t1, z0.clone(), 0.0625)).unwrap()
+        })
+        .collect();
+    server.drain();
+
+    let m = server.metrics();
+    assert_eq!(m.batches, 1, "four spans must execute as ONE batch");
+    assert_eq!(m.batch_sizes[4], 1);
+    assert_eq!(
+        scalar_evals.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "no scalar fallback: the batch ran through integrate_batch_spans alone"
+    );
+    // Dispatch accounting: rk4 (4 stages, no FSAL) costs 4 eval_batch
+    // sweeps per round; rounds = the longest sample's step count
+    // (2.5 / 0.0625 = 40) since shorter samples retire from the active set.
+    assert_eq!(batch_evals.load(std::sync::atomic::Ordering::SeqCst), 4 * 40);
+
+    let opts = IntegrateOpts::fixed(0.0625);
+    for ((h, &t1), z0) in handles.into_iter().zip(&t1s).zip(&z0s) {
+        let resp = h.wait().unwrap();
+        let direct = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
+        assert_eq!(resp.z_t1, direct.last(), "t1={t1}: served != direct solve");
+        assert_eq!(resp.stats.nfe, direct.nfe, "t1={t1}: NFE accounting");
+        assert_eq!(resp.stats.steps, direct.len(), "t1={t1}: steps");
+        assert_eq!(resp.stats.batch_size, 4, "t1={t1}: co-batched with all four");
+    }
+}
+
+/// The tentpole guarantee, gradient half: three gradient requests with
+/// distinct `t1` values run as ONE forward `integrate_batch_spans` + ONE
+/// shared-stage `aca_backward_batch` pass (zero scalar `eval`/`vjp` calls),
+/// with `dL/dz0` and every backward meter bit-identical to the direct
+/// per-request solve-and-backward.
+#[test]
+fn mixed_span_gradient_batch_runs_once_and_matches_direct() {
+    let vdp = VanDerPol::new(0.5);
+    let (f, scalar_evals, batch_evals, scalar_vjps, batch_vjps) = EntryCounting::new(vdp.clone());
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("vdp", f)
+        .config(test_config(16, 64, 1))
+        .clock(clock)
+        .start();
+
+    // Dyadic step and endpoints: exact per-sample step counts 12/20/24.
+    let t1s = [0.75f64, 1.25, 1.5];
+    let cases: Vec<(Vec<f32>, Vec<f32>)> = (0..3)
+        .map(|i| (vec![0.5 * i as f32 - 0.4, 0.6], vec![1.0, -0.5 - 0.25 * i as f32]))
+        .collect();
+    let handles: Vec<_> = t1s
+        .iter()
+        .zip(&cases)
+        .map(|(&t1, (z0, lam))| {
+            server
+                .submit(
+                    SolveRequest::fixed("vdp", 0.0, t1, z0.clone(), 0.0625)
+                        .with_grad(lam.clone()),
+                )
+                .unwrap()
+        })
+        .collect();
+    server.drain();
+
+    let m = server.metrics();
+    assert_eq!(m.batches, 1, "three spans must execute as ONE gradient batch");
+    assert_eq!(m.batch_sizes[3], 1);
+    assert_eq!(scalar_evals.load(std::sync::atomic::Ordering::SeqCst), 0, "no scalar eval");
+    assert_eq!(scalar_vjps.load(std::sync::atomic::Ordering::SeqCst), 0, "no scalar vjp");
+    // Dispatch accounting. Forward: 4 rk4 sweeps × 24 rounds (1.5 / 0.0625,
+    // the deepest sample). Backward: the shared-stage sweep recomputes 4
+    // stages per reverse round (eval_batch) and runs 4 live pullback sweeps
+    // (vjp_batch; all stages live — rk4 has no zero b_j and the cotangents
+    // are nonzero), again over 24 rounds keyed to the deepest sample.
+    assert_eq!(batch_evals.load(std::sync::atomic::Ordering::SeqCst), 4 * 24 + 4 * 24);
+    assert_eq!(batch_vjps.load(std::sync::atomic::Ordering::SeqCst), 4 * 24);
+
+    let opts = IntegrateOpts::fixed(0.0625);
+    for ((h, &t1), (z0, lam)) in handles.into_iter().zip(&t1s).zip(&cases) {
+        let resp = h.wait().unwrap();
+        let traj = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
+        let direct = aca_backward(&vdp, tableau::rk4(), &traj, lam);
+        assert_eq!(resp.z_t1, traj.last(), "t1={t1}: forward");
+        let served = resp.grad.expect("gradient requested");
+        assert_eq!(served.dl_dz0, direct.dl_dz0, "t1={t1}: dL/dz0");
+        assert_eq!(served.dl_dtheta, direct.dl_dtheta, "t1={t1}: dL/dθ");
+        assert_eq!(served.meter.nfe_backward, direct.meter.nfe_backward, "t1={t1}");
+        assert_eq!(served.meter.vjp_calls, direct.meter.vjp_calls, "t1={t1}");
+        assert_eq!(resp.stats.batch_size, 3, "t1={t1}: co-batched with all three");
+    }
+}
+
 /// Dynamics with a panic landmine: evaluating a state with `z[0]` above the
 /// threshold panics (user dynamics are arbitrary trait impls).
 struct PanickyAbove(f32);

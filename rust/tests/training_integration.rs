@@ -102,8 +102,9 @@ fn segmented_training_reduces_timeseries_loss_all_methods() {
         let mut last = f64::NAN;
         for step in 0..6 {
             let z0 = model.encode(&g.encoder_input()).unwrap();
-            let sg = segmented_loss_grad(&model, tab, &opts, method, &z0, g.target_times(), &targets)
-                .unwrap();
+            let sg =
+                segmented_loss_grad(&model, tab, &opts, method, &z0, g.target_times(), &targets)
+                    .unwrap();
             if step == 0 {
                 first = sg.loss;
             }
