@@ -1,0 +1,142 @@
+//! Checkpoint-memory workload: peak checkpoint bytes and replay-NFE
+//! overhead of a **budgeted** store versus the dense store, plus backward
+//! wall time for both, over long-horizon batched solves.
+//!
+//! Before timing anything, every workload asserts the ckpt guarantee on the
+//! actual bench trajectories: grids, finals and gradients from the
+//! budgeted store are **bit-identical** to the dense store, the budget
+//! holds at its mid-solve peak, and the byte reduction is ≥ 4× (the
+//! acceptance bar; the budget is dense/8, so ~8× is expected).
+//!
+//! `--smoke` shrinks spans and the sampling budget for CI: the bench still
+//! runs end-to-end and appends its rows — peak bytes, reduction ratio,
+//! replay-NFE overhead, timings — to `results/bench/ckpt_memory.jsonl`
+//! (via `bench::Runner`), so the memory trajectory accumulates per commit
+//! alongside `grad_backward.jsonl` and `serve_load.jsonl`.
+
+use nodal::bench::Runner;
+use nodal::ckpt::CkptPolicy;
+use nodal::grad::aca_backward_batch;
+use nodal::ode::analytic::{Linear, VanDerPol};
+use nodal::ode::{integrate_batch, tableau, IntegrateOpts, OdeFunc, Tableau};
+use nodal::util::Pcg64;
+
+#[allow(clippy::too_many_arguments)]
+fn bench_workload<F: OdeFunc>(
+    r: &mut Runner,
+    name: &str,
+    f: &F,
+    b: usize,
+    t1: f64,
+    tab: &'static Tableau,
+    base: &IntegrateOpts,
+    rng: &mut Pcg64,
+) {
+    let d = f.dim();
+    let z0: Vec<f32> = (0..b * d).map(|_| rng.normal_f32() * 0.8).collect();
+    let lam: Vec<f32> = (0..b * d).map(|_| rng.normal_f32()).collect();
+
+    let dense = integrate_batch(f, 0.0, t1, &z0, tab, base).unwrap();
+    let dense_peak: usize = (0..b).map(|i| dense.peak_state_bytes(i)).max().unwrap();
+    // Budget: 1/8 of the *smallest* sample's dense state footprint, so the
+    // ≥4× reduction bar holds per sample with slack.
+    let budget = (0..b).map(|i| dense.state_bytes(i)).min().unwrap() / 8;
+    let opts = IntegrateOpts { ckpt: CkptPolicy::Budgeted(budget), ..base.clone() };
+    let thin = integrate_batch(f, 0.0, t1, &z0, tab, &opts).unwrap();
+
+    // ---- bit-equality + budget assertions BEFORE timing ----
+    let gd = aca_backward_batch(f, tab, &dense, &lam);
+    let gt = aca_backward_batch(f, tab, &thin, &lam);
+    let mut replay_nfe = 0usize;
+    let mut forward_nfe = 0usize;
+    for i in 0..b {
+        assert_eq!(thin.tracks[i].ts, dense.tracks[i].ts, "{name} sample {i}: grid");
+        assert_eq!(thin.last(i), dense.last(i), "{name} sample {i}: final");
+        assert_eq!(gt[i].dl_dz0, gd[i].dl_dz0, "{name} sample {i}: dl_dz0");
+        assert_eq!(gt[i].dl_dtheta, gd[i].dl_dtheta, "{name} sample {i}: dl_dtheta");
+        assert!(
+            thin.peak_state_bytes(i) <= budget,
+            "{name} sample {i}: peak {} over budget {budget}",
+            thin.peak_state_bytes(i)
+        );
+        assert!(
+            thin.peak_state_bytes(i) * 4 <= dense.peak_state_bytes(i),
+            "{name} sample {i}: byte reduction below 4x"
+        );
+        replay_nfe += gt[i].meter.nfe_replay;
+        forward_nfe += gt[i].meter.nfe_forward;
+        assert!(gt[i].meter.nfe_replay > 0, "{name} sample {i}: budget never replayed");
+        assert_eq!(gd[i].meter.nfe_replay, 0, "{name} sample {i}: dense replayed");
+    }
+    let thin_peak: usize = (0..b).map(|i| thin.peak_state_bytes(i)).max().unwrap();
+    let steps: usize = (0..b).map(|i| dense.steps(i)).sum();
+    println!(
+        "  [{name}] B={b} d={d} steps {steps}: peak {dense_peak} B dense -> {thin_peak} B \
+         budgeted ({:.1}x), replay {replay_nfe} evals ({:.1}% of forward)",
+        dense_peak as f64 / thin_peak as f64,
+        100.0 * replay_nfe as f64 / forward_nfe.max(1) as f64
+    );
+
+    // Persisted rows: the memory trajectory + the recompute overhead.
+    r.record(&format!("{name}_peak_bytes_dense"), dense_peak as f64);
+    r.record(&format!("{name}_peak_bytes_budgeted"), thin_peak as f64);
+    r.record(&format!("{name}_bytes_reduction"), dense_peak as f64 / thin_peak as f64);
+    r.record(
+        &format!("{name}_replay_nfe_overhead"),
+        replay_nfe as f64 / forward_nfe.max(1) as f64,
+    );
+    // The backward pass's transient segment buffer — the memory the budget
+    // trades against (resident anchors down, one replayed segment up).
+    let replay_peak = (0..b).map(|i| gt[i].meter.replay_peak_bytes).max().unwrap();
+    r.record(&format!("{name}_replay_peak_bytes"), replay_peak as f64);
+
+    // Timings: the price of replay on the backward pass, dense vs budgeted.
+    r.bench(&format!("{name}_backward_dense"), || {
+        let g = aca_backward_batch(f, tab, &dense, &lam);
+        std::hint::black_box(g[0].dl_dz0[0]);
+    });
+    r.bench(&format!("{name}_backward_budgeted"), || {
+        let g = aca_backward_batch(f, tab, &thin, &lam);
+        std::hint::black_box(g[0].dl_dz0[0]);
+    });
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut r = Runner::new("ckpt_memory");
+    if smoke {
+        r.set_target_s(0.05);
+    }
+    let mut rng = Pcg64::seed(47);
+    // Long horizons are exactly the workloads a budget exists for; smoke
+    // keeps both variants but shrinks span and batch.
+    let (b, span) = if smoke { (2usize, 6.0) } else { (8usize, 20.0) };
+
+    // Adaptive oscillator: many accepted steps, per-sample step counts vary.
+    let f = VanDerPol::new(0.5);
+    let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+    bench_workload(
+        &mut r,
+        &format!("vdp_b{b}"),
+        &f,
+        b,
+        span,
+        tableau::dopri5(),
+        &opts,
+        &mut rng,
+    );
+
+    // Wide fixed-step linear system: state bytes dominate the footprint.
+    let f = Linear::new(-0.9, 64);
+    let opts = IntegrateOpts::fixed(0.005);
+    bench_workload(
+        &mut r,
+        &format!("linear64_b{}", b.max(2) / 2),
+        &f,
+        b.max(2) / 2,
+        span / 4.0,
+        tableau::rk4(),
+        &opts,
+        &mut rng,
+    );
+}

@@ -13,8 +13,9 @@ fn main() {
         let opts = IntegrateOpts::with_tol(rtol, atol);
         r.bench(&format!("fwd_rev_t25_{name}"), || {
             let fwd = integrate(&f, 0.0, 25.0, &z0, tableau::dopri5(), &opts).unwrap();
-            let rev = integrate(&f, 25.0, 0.0, fwd.last(), tableau::dopri5(), &opts).unwrap();
-            std::hint::black_box(rev.last()[0]);
+            let zt = fwd.last().unwrap();
+            let rev = integrate(&f, 25.0, 0.0, zt, tableau::dopri5(), &opts).unwrap();
+            std::hint::black_box(rev.last().unwrap()[0]);
         });
     }
 }

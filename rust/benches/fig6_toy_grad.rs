@@ -15,7 +15,7 @@ fn main() {
         ..IntegrateOpts::with_tol(1e-5, 1e-8)
     };
     let traj = integrate(&f, 0.0, 10.0, &[1.0], tab, &opts).unwrap();
-    let zt = traj.last()[0];
+    let zt = traj.last().unwrap()[0];
     let lam = [2.0 * zt];
 
     for method in Method::all() {

@@ -53,7 +53,7 @@ fn bench_batched_vs_loop(r: &mut Runner) {
             let traj =
                 integrate(&f, 0.0, 1.0, &z0[i * dim..(i + 1) * dim], tableau::rk4(), &opts)
                     .unwrap();
-            std::hint::black_box(traj.last()[0]);
+            std::hint::black_box(traj.last().unwrap()[0]);
         }
     });
     r.bench("linear64_b8_fixed1k_steps_batched", || {

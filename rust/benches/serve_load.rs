@@ -115,7 +115,7 @@ fn run_sequential(reqs: &[SolveRequest]) {
             let g = aca_backward(f, req.tab, &traj, lam);
             std::hint::black_box(g.dl_dz0[0]);
         }
-        std::hint::black_box(traj.last()[0]);
+        std::hint::black_box(traj.last().unwrap()[0]);
     }
 }
 
@@ -137,6 +137,8 @@ fn main() {
         max_queue_delay: Duration::from_micros(200),
         queue_capacity: 1024,
         workers: nodal::coordinator::pool::default_workers(),
+        ckpt_budget_bytes: 0,
+        mem_budget_bytes: 0,
     };
     let server = Arc::new(register(SolveServer::builder()).config(cfg).start());
     let srv = r

@@ -31,7 +31,8 @@ fn main() {
             let z0 = model.encode(&x).unwrap();
             let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts).unwrap();
             let mut dtheta = vec![0.0f32; model.n_params()];
-            let (lam, _) = model.decode_loss_vjp(traj.last(), &y, &mut dtheta).unwrap();
+            let zt = traj.last().unwrap();
+            let (lam, _) = model.decode_loss_vjp(zt, &y, &mut dtheta).unwrap();
             let g = grad::backward(&model, tab, &traj, &lam, method, &opts).unwrap();
             std::hint::black_box(g.dl_dtheta[0]);
         });

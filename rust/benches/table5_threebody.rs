@@ -25,7 +25,7 @@ fn main() {
             let mut jumps = Vec::new();
             for k in 1..=end {
                 let traj = integrate(&f, ds.times[k - 1], ds.times[k], &z, tab, &opts).unwrap();
-                z = traj.last().to_vec();
+                z = traj.last().unwrap().to_vec();
                 let target = ds.positions(k);
                 let mut lam = vec![0.0f32; 18];
                 for j in 0..9 {

@@ -32,7 +32,7 @@ fn main() -> Result<()> {
                     ..IntegrateOpts::with_tol(tol, tol * 1e-2)
                 };
                 let traj = integrate(&f, 0.0, t_end, &[z0], tab, &opts)?;
-                let zt = traj.last()[0];
+                let zt = traj.last().unwrap()[0];
                 let g = grad::backward(&f, tab, &traj, &[2.0 * zt], method, &opts)?;
                 let rz = ((g.dl_dz0[0] as f64 - exact_z) / exact_z).abs();
                 let rk = ((g.dl_dtheta[0] as f64 - exact_k) / exact_k).abs();

@@ -104,7 +104,7 @@ fn main() -> Result<()> {
     let served = h.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
     let direct =
         integrate(&VanDerPol::paper(), 0.0, 5.0, &z0, tableau::rk4(), &IntegrateOpts::fixed(0.05))?;
-    assert_eq!(served.z_t1, direct.last(), "served result must be bit-identical");
+    assert_eq!(served.z_t1, direct.last().unwrap(), "served result must be bit-identical");
     println!("\nequivalence check: served z(T) == direct integrate z(T) (bit-exact)");
 
     server.shutdown();

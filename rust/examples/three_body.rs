@@ -31,7 +31,7 @@ fn loss_grad(
     let mut loss = 0.0;
     for k in 1..=end {
         let traj = integrate(f, ds.times[k - 1], ds.times[k], &z, tab, &opts)?;
-        z = traj.last().to_vec();
+        z = traj.last().unwrap().to_vec();
         let target = ds.positions(k);
         let mut lam = vec![0.0f32; 18];
         for j in 0..9 {

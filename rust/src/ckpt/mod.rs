@@ -1,0 +1,672 @@
+//! `ckpt` — memory-budgeted checkpoint storage with **bit-exact** segment
+//! replay.
+//!
+//! ACA (paper Algo 2) records every accepted state of the forward solve so
+//! the backward pass can replay each step from its exact start state. That
+//! makes checkpoint memory `O(N_t · D)` — the one resource axis a
+//! long-horizon or large-batch solve can blow through. ANODE (Gholami et
+//! al.) and MALI (Zhuang et al.) show the same gradient accuracy is
+//! reachable under a **memory budget**: keep sparse anchor states, recompute
+//! the dropped ones from the nearest anchor when the backward pass asks for
+//! them.
+//!
+//! ## Why bit-exactness survives thinning
+//!
+//! The trajectory spine keeps the accepted step sizes `hs` **exactly as the
+//! stepper used them** (recovering them from `ts` differences would lose a
+//! ulp). Re-running [`rk_step`](crate::ode::rk_step) from an anchor `z_a`
+//! with the recorded `h` sequence therefore performs the *identical*
+//! floating-point computation the forward pass performed — stage 0 is
+//! `f(t, z)` at bitwise-equal arguments whether it was FSAL-reused or
+//! evaluated fresh (pinned by `prop_checkpoint_replay_is_bit_exact`) — so a
+//! replayed state equals the dropped state **bit-for-bit**, and every
+//! gradient computed through a thinned store equals the dense-store gradient
+//! bit-for-bit (pinned by `prop_budgeted_ckpt_grads_bit_equal_dense`).
+//! ACA's accuracy guarantee is a statement about *which* states the backward
+//! pass sees, not about where they are stored.
+//!
+//! ## Recompute-vs-store trade-off
+//!
+//! | policy                    | states held        | extra forward cost      |
+//! |---------------------------|--------------------|-------------------------|
+//! | [`CkptPolicy::Dense`]     | all `N_t + 1`      | none (today's behavior) |
+//! | [`CkptPolicy::EveryK`]    | `~N_t / K` + tail  | ≤ `K − 1` steps/segment |
+//! | [`CkptPolicy::Budgeted`]  | `≤ budget / (4D)`  | ≤ stride − 1 steps/seg  |
+//!
+//! A reverse sweep with a [`SegmentCache`] replays each segment **once**
+//! (the cache holds the segment while the sweep walks down through it), so
+//! the amortized overhead is one extra forward evaluation per *dropped*
+//! state — ANODE's recompute bound. Replay evaluations are metered into
+//! [`CostMeter::nfe_replay`](crate::grad::CostMeter::nfe_replay), never into
+//! `nfe_backward`, so the paper's Table 1/2 accounting stays honest.
+//!
+//! `Budgeted` thins **live**: whenever storing the next state would push the
+//! anchor count over `budget / (4D)`, the keep-stride doubles and off-stride
+//! anchors are dropped immediately — the budget holds *mid-solve*, not just
+//! at the end. Anchors stay evenly spread (multiples of the stride, plus the
+//! initial state and the running tail), which is the `~√N_t`-anchor layout
+//! when the budget is chosen `∝ √N_t`.
+//!
+//! Follow-on headroom (see ROADMAP): MALI-style O(1) *reversible* storage —
+//! reconstruct `z_i` from `z_{i+1}` instead of replaying from an anchor —
+//! would drop even the anchors.
+
+use crate::ode::func::OdeFunc;
+use crate::ode::step::{rk_step, StepScratch};
+use crate::ode::tableau::Tableau;
+
+/// What the store keeps (policy of a [`CheckpointStore`] or of one
+/// [`BatchTrajectory`](crate::ode::BatchTrajectory) track).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CkptPolicy {
+    /// Keep every accepted state — today's behavior, bit-for-bit.
+    #[default]
+    Dense,
+    /// Keep every `K`-th state (plus the initial state and the tail).
+    /// `K = 0` or `1` degenerates to `Dense`.
+    EveryK(usize),
+    /// Keep at most `budget_bytes / (4 · dim)` evenly-spread anchors
+    /// (clamped to at least 2 — the initial state and the tail), thinning
+    /// live as the solve grows so the budget holds mid-flight.
+    Budgeted(usize),
+}
+
+impl CkptPolicy {
+    /// `Dense` for `budget_bytes == 0`, `Budgeted` otherwise — the shape the
+    /// `NODAL_CKPT_BUDGET_BYTES` knob maps through.
+    pub fn from_budget(budget_bytes: usize) -> Self {
+        if budget_bytes == 0 {
+            CkptPolicy::Dense
+        } else {
+            CkptPolicy::Budgeted(budget_bytes)
+        }
+    }
+}
+
+/// Clamp range for byte-budget knobs (nonzero values).
+const BUDGET_MIN_BYTES: usize = 64;
+const BUDGET_MAX_BYTES: usize = 1 << 40;
+
+/// Clamp a byte budget to the supported range; `0` passes through (it means
+/// "no budget"). The single clamp rule every budget knob — env-read or
+/// hand-built config — goes through.
+pub fn clamp_budget(bytes: usize) -> usize {
+    if bytes == 0 {
+        0
+    } else {
+        bytes.clamp(BUDGET_MIN_BYTES, BUDGET_MAX_BYTES)
+    }
+}
+
+/// Parse a byte-budget env var **clamped at the source** like
+/// `NODAL_WORKERS`: unset, unparseable or `0` means "no budget"; anything
+/// else goes through [`clamp_budget`].
+pub fn parse_budget_env(var: &str) -> usize {
+    match std::env::var(var).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => clamp_budget(n),
+        None => 0,
+    }
+}
+
+/// Read `NODAL_CKPT_BUDGET_BYTES` — the per-sample checkpoint budget both
+/// the serve worker and the trainer default to.
+pub fn env_budget_bytes() -> usize {
+    parse_budget_env("NODAL_CKPT_BUDGET_BYTES")
+}
+
+/// The thinning state machine shared by the scalar [`CheckpointStore`] and
+/// the batched per-track stores: decides, for each new state, which
+/// previously stored anchors to drop so the policy's invariant holds
+/// *before* the new state lands.
+///
+/// Invariants maintained over the stored index set:
+/// * index `0` is always kept (the replay base of the earliest segment);
+/// * the most recently pushed state is always kept (the tail — `last()`
+///   never replays);
+/// * every other kept index is a multiple of the current `stride`;
+/// * under `Budgeted`, the kept count never exceeds `cap` — the stride
+///   doubles (and off-stride anchors drop) as soon as it would.
+#[derive(Debug, Clone)]
+pub struct Thinner {
+    stride: usize,
+    cap: Option<usize>,
+}
+
+impl Default for Thinner {
+    fn default() -> Self {
+        Thinner { stride: 1, cap: None }
+    }
+}
+
+impl Thinner {
+    /// Build the policy state for states of `dim` f32 components.
+    pub fn new(policy: CkptPolicy, dim: usize) -> Self {
+        match policy {
+            CkptPolicy::Dense => Thinner { stride: 1, cap: None },
+            CkptPolicy::EveryK(k) => Thinner { stride: k.max(1), cap: None },
+            CkptPolicy::Budgeted(bytes) => {
+                let state_bytes = dim.max(1) * std::mem::size_of::<f32>();
+                Thinner { stride: 1, cap: Some((bytes / state_bytes).max(2)) }
+            }
+        }
+    }
+
+    fn on_grid(&self, j: usize) -> bool {
+        j % self.stride.max(1) == 0
+    }
+
+    /// Plan the drops that must precede storing the next state. `stored` is
+    /// the current anchor index set (ascending); `drops` is filled with the
+    /// *positions* into `stored` to remove (ascending). May double the
+    /// stride (Budgeted) until the post-push count fits the cap.
+    pub fn plan_push(&mut self, stored: &[usize], drops: &mut Vec<usize>) {
+        drops.clear();
+        // The previous tail was only kept because it was the tail; once a
+        // newer state arrives it must earn its place on the stride grid.
+        if let Some(&j) = stored.last() {
+            if j != 0 && !self.on_grid(j) {
+                drops.push(stored.len() - 1);
+            }
+        }
+        if let Some(cap) = self.cap {
+            let mut kept = stored.len() - drops.len();
+            while kept + 1 > cap {
+                self.stride = self.stride.saturating_mul(2);
+                drops.clear();
+                kept = 0;
+                for (p, &j) in stored.iter().enumerate() {
+                    if j == 0 || self.on_grid(j) {
+                        kept += 1;
+                    } else {
+                        drops.push(p);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current keep-stride (1 = dense).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+}
+
+/// Position of state `k` in a sorted anchor index set recorded under
+/// `policy` — the single lookup rule the scalar store and the batched
+/// tracks share (`Dense` never thins, so `idx[k] == k` and the search is
+/// skipped on the default hot path).
+pub(crate) fn anchor_pos(policy: CkptPolicy, idx: &[usize], k: usize) -> Option<usize> {
+    if matches!(policy, CkptPolicy::Dense) {
+        (k < idx.len()).then_some(k)
+    } else {
+        idx.binary_search(&k).ok()
+    }
+}
+
+/// Greatest stored index `≤ k` in a sorted anchor index set (index 0 is
+/// always stored) — shared by both stores.
+pub(crate) fn anchor_floor(idx: &[usize], k: usize) -> usize {
+    match idx.binary_search(&k) {
+        Ok(p) => idx[p],
+        Err(p) => idx[p.saturating_sub(1)],
+    }
+}
+
+/// Drop-compaction driver shared by the scalar store and the batched
+/// tracks — the one place that encodes [`Thinner::plan_push`]'s contract
+/// (drops are **ascending positions**). Walks positions `0..len`, calling
+/// `f(r, None)` for each dropped position and `f(r, Some(w))` for each
+/// survivor (`r` = read position, `w` = its new write position); returns
+/// the surviving count. One linear sweep, so a thin event costs
+/// `O(anchors)` moves, never `O(anchors²)`.
+pub(crate) fn compact_drops(
+    len: usize,
+    drops: &[usize],
+    mut f: impl FnMut(usize, Option<usize>),
+) -> usize {
+    let mut w = 0usize;
+    let mut di = 0usize;
+    for r in 0..len {
+        if di < drops.len() && drops[di] == r {
+            di += 1;
+            f(r, None);
+            continue;
+        }
+        f(r, Some(w));
+        w += 1;
+    }
+    w
+}
+
+/// State storage of one [`Trajectory`](crate::ode::Trajectory) behind a
+/// [`CkptPolicy`]: a flat anchor arena plus the sorted anchor index set.
+/// The trajectory spine (`ts`, `hs`, `errs`, `trials`) stays on the
+/// trajectory itself — it is tiny (`O(N_t)` scalars) and is exactly what
+/// replay needs to regenerate any dropped state bit-exactly.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointStore {
+    dim: usize,
+    policy: CkptPolicy,
+    thin: Thinner,
+    /// Total states recorded (`N_t + 1` after a solve), stored or not.
+    n: usize,
+    /// Stored state indices, ascending. `idx[p]`'s state is
+    /// `buf[p·dim .. (p+1)·dim]`.
+    idx: Vec<usize>,
+    buf: Vec<f32>,
+    drop_scratch: Vec<usize>,
+    peak_bytes: usize,
+}
+
+impl CheckpointStore {
+    /// Empty store for states of `dim` components under `policy`.
+    pub fn new(dim: usize, policy: CkptPolicy) -> Self {
+        CheckpointStore {
+            dim,
+            policy,
+            thin: Thinner::new(policy, dim),
+            ..Default::default()
+        }
+    }
+
+    /// Rebuild a store from exported parts (the
+    /// [`BatchTrajectory::to_trajectory`](crate::ode::BatchTrajectory::to_trajectory)
+    /// interop path). `idx` must be ascending and `buf` flat `[idx.len() × dim]`.
+    pub fn from_parts(
+        dim: usize,
+        policy: CkptPolicy,
+        thin: Thinner,
+        n: usize,
+        idx: Vec<usize>,
+        buf: Vec<f32>,
+        peak_bytes: usize,
+    ) -> Self {
+        debug_assert_eq!(buf.len(), idx.len() * dim);
+        CheckpointStore { dim, policy, thin, n, idx, buf, drop_scratch: Vec::new(), peak_bytes }
+    }
+
+    /// Record the next state (index = number of states recorded so far).
+    /// Stores or thins per the policy; the budget invariant holds before
+    /// and after every push.
+    pub fn push(&mut self, z: &[f32]) {
+        if self.dim == 0 {
+            debug_assert!(!z.is_empty(), "checkpoint state must be non-empty");
+            self.dim = z.len();
+            self.thin = Thinner::new(self.policy, self.dim);
+        }
+        debug_assert_eq!(z.len(), self.dim);
+        let i = self.n;
+        self.n += 1;
+
+        let mut drops = std::mem::take(&mut self.drop_scratch);
+        self.thin.plan_push(&self.idx, &mut drops);
+        if !drops.is_empty() {
+            let dim = self.dim;
+            let (idx, buf) = (&mut self.idx, &mut self.buf);
+            let w = compact_drops(idx.len(), &drops, |r, dst| {
+                if let Some(w) = dst {
+                    if w != r {
+                        idx[w] = idx[r];
+                        buf.copy_within(r * dim..(r + 1) * dim, w * dim);
+                    }
+                }
+            });
+            idx.truncate(w);
+            buf.truncate(w * dim);
+        }
+        self.drop_scratch = drops;
+
+        self.idx.push(i);
+        self.buf.extend_from_slice(z);
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    /// Total states recorded (stored or thinned) — `N_t + 1` after a solve.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Anchors currently held.
+    pub fn n_stored(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// State `k` if it is stored (`None` means it was thinned — fetch it
+    /// through a [`SegmentCache`] instead).
+    pub fn stored(&self, k: usize) -> Option<&[f32]> {
+        if k >= self.n {
+            return None;
+        }
+        let p = anchor_pos(self.policy, &self.idx, k)?;
+        Some(&self.buf[p * self.dim..(p + 1) * self.dim])
+    }
+
+    /// The final recorded state — always stored (the tail anchor); `None`
+    /// only for an empty store.
+    pub fn last(&self) -> Option<&[f32]> {
+        let p = self.idx.len().checked_sub(1)?;
+        Some(&self.buf[p * self.dim..(p + 1) * self.dim])
+    }
+
+    /// Greatest stored index `≤ k` (index 0 is always stored).
+    pub fn anchor_at_or_before(&self, k: usize) -> usize {
+        anchor_floor(&self.idx, k)
+    }
+
+    /// Bytes currently held by stored anchor states.
+    pub fn bytes(&self) -> usize {
+        self.idx.len() * self.dim * std::mem::size_of::<f32>()
+    }
+
+    /// High-water mark of [`Self::bytes`] over the store's lifetime — the
+    /// quantity a budget must bound *mid-solve*.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn policy(&self) -> CkptPolicy {
+        self.policy
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Clone of the thinning state (for exporting per-track stores).
+    pub fn thinner(&self) -> Thinner {
+        self.thin.clone()
+    }
+}
+
+/// Read access to sparse anchors, abstract over where they live: the scalar
+/// [`CheckpointStore`] owns its arena; a batched track's anchors live in the
+/// shared [`BatchTrajectory`](crate::ode::BatchTrajectory) arena. `Copy`
+/// receivers keep the returned borrows tied to the underlying storage, not
+/// to a local handle.
+pub trait AnchorSource<'a>: Copy {
+    fn dim(self) -> usize;
+    /// State `k` if stored.
+    fn stored(self, k: usize) -> Option<&'a [f32]>;
+    /// Greatest stored index `≤ k`.
+    fn anchor_at_or_before(self, k: usize) -> usize;
+}
+
+impl<'a> AnchorSource<'a> for &'a CheckpointStore {
+    fn dim(self) -> usize {
+        CheckpointStore::dim(self)
+    }
+    fn stored(self, k: usize) -> Option<&'a [f32]> {
+        CheckpointStore::stored(self, k)
+    }
+    fn anchor_at_or_before(self, k: usize) -> usize {
+        CheckpointStore::anchor_at_or_before(self, k)
+    }
+}
+
+/// One-segment replay cache for reverse sweeps over a (possibly thinned)
+/// store.
+///
+/// `state(k)` returns the stored anchor when one exists; otherwise it
+/// replays forward from the nearest anchor `a ≤ k` with the recorded
+/// `(ts, hs)` — bit-identical to the forward pass (see module docs) — and
+/// caches the whole segment `a+1 ..= k`. A reverse sweep (`k`, `k−1`, …)
+/// therefore replays each segment **once**: amortized one extra forward
+/// step per dropped state. Replay `f` evaluations accumulate in
+/// [`Self::nfe_replay`]; FSAL tableaus chain stage 0 across replayed steps
+/// exactly like the forward loop, so the replay cost matches the forward
+/// cost profile.
+///
+/// Transient memory: the cache holds one full inter-anchor segment —
+/// `O(stride × D)` bytes, i.e. up to the states the store thinned away
+/// from that segment (the classic checkpoint/recompute buffer; metered by
+/// [`Self::peak_bytes`]). Bounding this *below* one segment requires
+/// multi-level / recursive checkpointing (treeverse-style), which is
+/// follow-on headroom — see ROADMAP.
+#[derive(Debug, Default)]
+pub struct SegmentCache {
+    /// Cached replayed states for indices `lo .. lo + count`, flat.
+    buf: Vec<f32>,
+    lo: usize,
+    count: usize,
+    /// Running replay state + scratch (no allocation after warm-up).
+    z: Vec<f32>,
+    z_next: Vec<f32>,
+    k0: Vec<f32>,
+    scratch: StepScratch,
+    peak_bytes: usize,
+    /// Total `f` evaluations spent replaying dropped states.
+    pub nfe_replay: usize,
+}
+
+impl SegmentCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// High-water mark of the replay buffer — the backward pass's transient
+    /// segment memory (`O(stride × D)`), on top of the store's budget.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Fetch state `k`: the stored anchor, the cached replay, or a fresh
+    /// segment replay from the nearest anchor. `ts`/`hs` are the trajectory
+    /// spine (`ts.len() == hs.len() + 1`); `k` must be a recorded state
+    /// index.
+    pub fn state<'a, F, S>(
+        &'a mut self,
+        f: &F,
+        tab: &Tableau,
+        ts: &[f64],
+        hs: &[f64],
+        src: S,
+        k: usize,
+    ) -> &'a [f32]
+    where
+        F: OdeFunc + ?Sized,
+        S: AnchorSource<'a>,
+    {
+        if let Some(z) = src.stored(k) {
+            return z;
+        }
+        let dim = src.dim();
+        if !(self.lo <= k && k < self.lo + self.count) {
+            let a = src.anchor_at_or_before(k);
+            let za = src.stored(a).expect("anchor_at_or_before returned an unstored index");
+            self.buf.clear();
+            self.lo = a + 1;
+            self.count = 0;
+            self.z.clear();
+            self.z.extend_from_slice(za);
+            self.z_next.resize(dim, 0.0);
+            self.k0.resize(dim, 0.0);
+            let mut k0_valid = false;
+            for j in a..k {
+                // Error-norm tolerances do not influence the propagated
+                // state; pass arbitrary finite values.
+                let out = rk_step(
+                    f,
+                    tab,
+                    ts[j],
+                    hs[j],
+                    &self.z,
+                    if k0_valid { Some(&self.k0[..]) } else { None },
+                    1.0,
+                    1.0,
+                    &mut self.z_next,
+                    None,
+                    &mut self.scratch,
+                );
+                self.nfe_replay += out.nfe;
+                if tab.fsal {
+                    self.k0.copy_from_slice(&self.scratch.ks[tab.stages - 1]);
+                    k0_valid = true;
+                }
+                std::mem::swap(&mut self.z, &mut self.z_next);
+                self.buf.extend_from_slice(&self.z);
+                self.count += 1;
+            }
+            self.peak_bytes =
+                self.peak_bytes.max(self.buf.len() * std::mem::size_of::<f32>());
+        }
+        let off = (k - self.lo) * dim;
+        &self.buf[off..off + dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::{Linear, VanDerPol};
+    use crate::ode::{integrate, tableau, IntegrateOpts};
+
+    fn states_of(n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|i| vec![i as f32; dim]).collect()
+    }
+
+    #[test]
+    fn dense_stores_everything() {
+        let mut s = CheckpointStore::new(3, CkptPolicy::Dense);
+        for z in states_of(10, 3) {
+            s.push(&z);
+        }
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.n_stored(), 10);
+        for k in 0..10 {
+            assert_eq!(s.stored(k).unwrap(), &[k as f32; 3]);
+        }
+        assert_eq!(s.bytes(), 10 * 3 * 4);
+        assert_eq!(s.peak_bytes(), s.bytes());
+        assert_eq!(s.last().unwrap(), &[9.0f32; 3]);
+    }
+
+    #[test]
+    fn every_k_keeps_grid_plus_tail() {
+        let mut s = CheckpointStore::new(1, CkptPolicy::EveryK(4));
+        for z in states_of(11, 1) {
+            s.push(&z);
+        }
+        // Kept: 0, 4, 8 (grid) + 10 (tail); 1..3, 5..7, 9 thinned.
+        for k in [0usize, 4, 8, 10] {
+            assert!(s.stored(k).is_some(), "state {k} must be an anchor");
+        }
+        for k in [1usize, 2, 3, 5, 6, 7, 9] {
+            assert!(s.stored(k).is_none(), "state {k} must be thinned");
+        }
+        assert_eq!(s.anchor_at_or_before(7), 4);
+        assert_eq!(s.anchor_at_or_before(4), 4);
+        assert_eq!(s.anchor_at_or_before(3), 0);
+        assert_eq!(s.last().unwrap(), &[10.0f32]);
+    }
+
+    #[test]
+    fn budgeted_holds_budget_mid_flight() {
+        // Budget for exactly 5 single-f32 states.
+        let budget = 5 * 4;
+        let mut s = CheckpointStore::new(1, CkptPolicy::Budgeted(budget));
+        for (i, z) in states_of(64, 1).into_iter().enumerate() {
+            s.push(&z);
+            assert!(
+                s.bytes() <= budget,
+                "after push {i}: {} bytes over the {budget}-byte budget",
+                s.bytes()
+            );
+            assert!(s.stored(0).is_some(), "state 0 must always be stored");
+            assert_eq!(s.last().unwrap(), &[i as f32], "tail must always be stored");
+        }
+        assert!(s.peak_bytes() <= budget);
+        // Anchors are evenly spread: every stored non-tail index is a
+        // multiple of the final stride.
+        let stride = s.thinner().stride();
+        assert!(stride >= 16, "64 states / 5 anchors needs stride ≥ 16, got {stride}");
+        for &j in &s.idx[..s.idx.len() - 1] {
+            assert_eq!(j % stride, 0, "anchor {j} off the stride-{stride} grid");
+        }
+    }
+
+    #[test]
+    fn tiny_budget_degenerates_to_endpoints() {
+        let mut s = CheckpointStore::new(4, CkptPolicy::Budgeted(1)); // < one state
+        for z in states_of(20, 4) {
+            s.push(&z);
+        }
+        // cap clamps to 2: initial state + tail.
+        assert_eq!(s.n_stored(), 2);
+        assert!(s.stored(0).is_some());
+        assert_eq!(s.last().unwrap(), &[19.0f32; 4]);
+    }
+
+    #[test]
+    fn replay_is_bit_exact_against_dense() {
+        let f = VanDerPol::new(0.7);
+        let tab = tableau::dopri5();
+        let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let dense = integrate(&f, 0.0, 4.0, &[1.8, -0.3], tab, &opts).unwrap();
+        assert!(dense.len() >= 12, "need enough steps to thin");
+
+        for policy in [
+            CkptPolicy::EveryK(4),
+            CkptPolicy::Budgeted(dense.store.bytes() / 4),
+        ] {
+            let mut thin = CheckpointStore::new(2, policy);
+            for k in 0..dense.store.len() {
+                thin.push(dense.store.stored(k).unwrap());
+            }
+            assert!(thin.n_stored() < dense.store.n_stored(), "{policy:?} thinned nothing");
+            let mut cache = SegmentCache::new();
+            // Reverse order — the access pattern of the backward sweep.
+            for k in (0..dense.store.len()).rev() {
+                let z = cache.state(&f, tab, &dense.ts, &dense.hs, &thin, k);
+                assert_eq!(z, dense.store.stored(k).unwrap(), "{policy:?}: state {k}");
+            }
+            assert!(cache.nfe_replay > 0, "{policy:?}: replay must have evaluated f");
+            // Each dropped state is replayed exactly once: replay evals are
+            // bounded by one step's stage cost per dropped state.
+            let dropped = dense.store.n_stored() - thin.n_stored();
+            assert!(
+                cache.nfe_replay <= dropped * tab.stages,
+                "{policy:?}: {} replay evals for {dropped} dropped states",
+                cache.nfe_replay
+            );
+        }
+    }
+
+    #[test]
+    fn segment_cache_returns_stored_anchors_without_replay() {
+        let f = Linear::new(-0.5, 2);
+        let tab = tableau::rk4();
+        let traj = integrate(&f, 0.0, 1.0, &[1.0, 2.0], tab, &IntegrateOpts::fixed(0.1)).unwrap();
+        let mut cache = SegmentCache::new();
+        for k in 0..traj.store.len() {
+            let z = cache.state(&f, tab, &traj.ts, &traj.hs, &traj.store, k);
+            assert_eq!(z, traj.store.stored(k).unwrap());
+        }
+        assert_eq!(cache.nfe_replay, 0, "dense store must never replay");
+    }
+
+    #[test]
+    fn env_budget_parse_and_clamp() {
+        // One test for all cases: the process env is shared across threads.
+        std::env::set_var("NODAL_CKPT_BUDGET_BYTES", "0");
+        assert_eq!(env_budget_bytes(), 0, "0 means unbudgeted");
+        std::env::set_var("NODAL_CKPT_BUDGET_BYTES", "7");
+        assert_eq!(env_budget_bytes(), BUDGET_MIN_BYTES, "clamps up");
+        std::env::set_var("NODAL_CKPT_BUDGET_BYTES", "1048576");
+        assert_eq!(env_budget_bytes(), 1 << 20);
+        std::env::set_var("NODAL_CKPT_BUDGET_BYTES", "not-a-number");
+        assert_eq!(env_budget_bytes(), 0, "unparseable falls back to unbudgeted");
+        std::env::remove_var("NODAL_CKPT_BUDGET_BYTES");
+        assert_eq!(env_budget_bytes(), 0);
+        assert_eq!(CkptPolicy::from_budget(0), CkptPolicy::Dense);
+        assert_eq!(CkptPolicy::from_budget(4096), CkptPolicy::Budgeted(4096));
+        // The shared clamp rule hand-built configs go through too.
+        assert_eq!(clamp_budget(0), 0, "0 = off passes through");
+        assert_eq!(clamp_budget(1), BUDGET_MIN_BYTES);
+        assert_eq!(clamp_budget(usize::MAX), BUDGET_MAX_BYTES);
+        assert_eq!(clamp_budget(4096), 4096);
+    }
+}

@@ -28,8 +28,9 @@ pub fn fig4(cfg: &Config) -> Result<()> {
     for (rtol, atol) in [(1e-3, 1e-6), (1e-6, 1e-9), (1e-9, 1e-12)] {
         let opts = IntegrateOpts::with_tol(rtol, atol);
         let fwd = integrate(&f, 0.0, t_end, &z0, tab, &opts)?;
-        let rev = integrate(&f, t_end, 0.0, fwd.last(), tab, &opts)?;
-        let err = tensor::max_abs_diff(rev.last(), &z0) as f64;
+        let zt = fwd.last().expect("non-empty trajectory").to_vec();
+        let rev = integrate(&f, t_end, 0.0, &zt, tab, &opts)?;
+        let err = tensor::max_abs_diff(rev.last().unwrap(), &z0) as f64;
         table.row(vec![
             format!("{rtol:.0e}"),
             format!("{atol:.0e}"),
@@ -41,14 +42,14 @@ pub fn fig4(cfg: &Config) -> Result<()> {
         if rtol == 1e-3 {
             let cols = vec![
                 fwd.ts.clone(),
-                fwd.zs.iter().map(|z| z[0] as f64).collect(),
-                fwd.zs.iter().map(|z| z[1] as f64).collect(),
+                fwd.states().map(|z| z[0] as f64).collect(),
+                fwd.states().map(|z| z[1] as f64).collect(),
             ];
             save_series("fig4_forward", &["t", "y1", "y2"], &cols)?;
             let cols = vec![
                 rev.ts.clone(),
-                rev.zs.iter().map(|z| z[0] as f64).collect(),
-                rev.zs.iter().map(|z| z[1] as f64).collect(),
+                rev.states().map(|z| z[0] as f64).collect(),
+                rev.states().map(|z| z[1] as f64).collect(),
             ];
             save_series("fig4_reverse", &["t", "y1", "y2"], &cols)?;
         }
@@ -76,10 +77,11 @@ pub fn fig5(cfg: &Config) -> Result<()> {
     for rtol in [1e-3, 1e-6, 1e-9] {
         let opts = IntegrateOpts::with_tol(rtol, rtol * 1e-3);
         let fwd = integrate(&f, 0.0, t_end, z0, tab, &opts)?;
-        let rev = integrate(&f, t_end, 0.0, fwd.last(), tab, &opts)?;
-        let diff: Vec<f32> = rev.last().iter().zip(z0).map(|(a, b)| a - b).collect();
+        let zt = fwd.last().expect("non-empty trajectory").to_vec();
+        let rev = integrate(&f, t_end, 0.0, &zt, tab, &opts)?;
+        let diff: Vec<f32> = rev.last().unwrap().iter().zip(z0).map(|(a, b)| a - b).collect();
         let rel = tensor::norm2(&diff) / tensor::norm2(z0);
-        let growth = tensor::norm2(fwd.last()) / tensor::norm2(z0);
+        let growth = tensor::norm2(fwd.last().unwrap()) / tensor::norm2(z0);
         table.row(vec![format!("{rtol:.0e}"), Table::fmt(growth), Table::fmt(rel)]);
         if rtol == 1e-3 {
             save_series(
@@ -87,8 +89,8 @@ pub fn fig5(cfg: &Config) -> Result<()> {
                 &["input", "evolved", "reconstructed"],
                 &[
                     z0.iter().map(|&v| v as f64).collect(),
-                    fwd.last().iter().map(|&v| v as f64).collect(),
-                    rev.last().iter().map(|&v| v as f64).collect(),
+                    fwd.last().unwrap().iter().map(|&v| v as f64).collect(),
+                    rev.last().unwrap().iter().map(|&v| v as f64).collect(),
                 ],
             )?;
         }
@@ -140,7 +142,7 @@ pub fn fig6(cfg: &Config) -> Result<()> {
                 ..IntegrateOpts::with_tol(tol, tol * 1e-3)
             };
             let traj = integrate(&f, 0.0, t_end, &[z0], tab, &opts)?;
-            let zt = traj.last()[0];
+            let zt = traj.last().unwrap()[0];
             let g = grad::backward(&f, tab, &traj, &[2.0 * zt], method, &opts)?;
             errs_z.push(((g.dl_dz0[0] as f64 - exact_z) / exact_z).abs());
             errs_k.push(((g.dl_dtheta[0] as f64 - exact_k) / exact_k).abs());

@@ -66,7 +66,8 @@ pub fn run(cfg: &Config) -> Result<()> {
         let z0 = model.encode(&x)?;
         let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts)?;
         let mut dtheta = vec![0.0f32; crate::ode::OdeFunc::n_params(&model)];
-        let (lam, _loss) = model.decode_loss_vjp(traj.last(), &y, &mut dtheta)?;
+        let (lam, _loss) =
+            model.decode_loss_vjp(traj.last().expect("non-empty trajectory"), &y, &mut dtheta)?;
         let g = grad::backward(&model, tab, &traj, &lam, method, &opts)?;
         let wall = timer.elapsed_ms();
         let m = &g.meter;

@@ -175,7 +175,7 @@ fn phys_loss_grad(
     let mut loss = 0.0f64;
     for k in 1..=end {
         let traj = integrate(f, ds.times[k - 1], ds.times[k], &z, tab, opts)?;
-        z = traj.last().to_vec();
+        z = traj.last().expect("non-empty trajectory").to_vec();
         // L_k = mean_j (pos_j − target_j)²  over 9 position dims.
         let target = ds.positions(k);
         let mut lam = vec![0.0f32; 18];
@@ -235,7 +235,7 @@ fn phys_mse(f: &ThreeBody, ds: &ThreeBodyDataset) -> Result<f64> {
     let mut preds = Vec::new();
     for k in 1..ds.times.len() {
         let traj = integrate(f, ds.times[k - 1], ds.times[k], &z, tab, &opts)?;
-        z = traj.last().to_vec();
+        z = traj.last().expect("non-empty trajectory").to_vec();
         preds.push(z[..9].to_vec());
     }
     Ok(ds.position_mse(&preds, 1))

@@ -13,6 +13,7 @@
 
 use super::step_vjp::step_vjp;
 use super::{CostMeter, GradResult};
+use crate::ckpt::SegmentCache;
 use crate::ode::func::OdeFunc;
 use crate::ode::integrate::Trajectory;
 use crate::ode::tableau::Tableau;
@@ -20,6 +21,12 @@ use crate::ode::tableau::Tableau;
 /// Run the ACA backward pass over a recorded trajectory.
 ///
 /// * `lam_t1` — `dL/dz(T)` from the loss head.
+///
+/// Checkpoints are fetched through a [`SegmentCache`]: a dense store hands
+/// them out directly (bit-for-bit the old behavior); a thinned store
+/// ([`crate::ckpt`]) replays each dropped state from its nearest anchor
+/// **once per segment** — bit-identical to the forward state, with the
+/// replay evaluations metered into [`CostMeter::nfe_replay`].
 ///
 /// Returns `dL/dz(0)`, `dL/dθ` and the cost instrumentation.
 pub fn aca_backward<F: OdeFunc + ?Sized>(
@@ -39,12 +46,13 @@ pub fn aca_backward<F: OdeFunc + ?Sized>(
         n_rejected: traj.n_rejected,
         ..Default::default()
     };
+    let mut cache = SegmentCache::new();
 
     // Reverse sweep over the saved discretization points (Algo 2).
     for i in (0..n).rev() {
         let t_i = traj.ts[i];
         let h_i = traj.h(i);
-        let z_i = &traj.zs[i];
+        let z_i = traj.state(f, tab, i, &mut cache);
         // Local forward + local backward; local graph freed on return.
         let out = step_vjp(f, tab, t_i, h_i, z_i, &lam, &mut dtheta, false);
         lam = out.dz;
@@ -53,6 +61,8 @@ pub fn aca_backward<F: OdeFunc + ?Sized>(
         // Depth: one chained VJP sweep per accepted step.
         meter.graph_depth += out.nvjp;
     }
+    meter.nfe_replay = cache.nfe_replay;
+    meter.replay_peak_bytes = cache.peak_bytes();
 
     GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
 }
@@ -73,7 +83,7 @@ mod tests {
             let f = Linear::new(k, 1);
             let opts = IntegrateOpts::with_tol(1e-7, 1e-9);
             let traj = integrate(&f, 0.0, t_end, &[z0], tableau::dopri5(), &opts).unwrap();
-            let zt = traj.last()[0];
+            let zt = traj.last().unwrap()[0];
             let lam = [2.0 * zt];
             let g = aca_backward(&f, tableau::dopri5(), &traj, &lam);
             let exact = f.exact_dl_dz0(z0, t_end);
@@ -93,9 +103,9 @@ mod tests {
         let f = Linear::new(-1.0, 1);
         let tab = tableau::rk4();
         let traj = integrate(&f, 0.0, 1.0, &[1.0], tab, &IntegrateOpts::fixed(0.1)).unwrap();
-        let zt = traj.last()[0] as f64;
+        let zt = traj.last().unwrap()[0] as f64;
         // R per step:
-        let r = (traj.zs[1][0] as f64) / (traj.zs[0][0] as f64);
+        let r = (traj.z(1).unwrap()[0] as f64) / (traj.z(0).unwrap()[0] as f64);
         let lam = [(2.0 * zt) as f32];
         let g = aca_backward(&f, tab, &traj, &lam);
         let exact = 2.0 * zt * r.powi(10);
@@ -118,6 +128,45 @@ mod tests {
         assert_eq!(g.meter.nfe_backward, 4 * 4);
         assert_eq!(g.meter.vjp_calls, 4 * 4);
         assert!(g.meter.checkpoint_bytes > 0);
+    }
+
+    /// A memory-budgeted checkpoint store changes *where* states live, not
+    /// what the backward pass sees: gradients, dθ and every classic meter
+    /// stay bit-identical to the dense store; only `nfe_replay` (and the
+    /// smaller `checkpoint_bytes`) differ.
+    #[test]
+    fn thinned_store_gradients_bit_equal_dense() {
+        use crate::ckpt::CkptPolicy;
+        let f = crate::ode::analytic::VanDerPol::new(0.5);
+        let tab = tableau::dopri5();
+        let dense_opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        let dense = integrate(&f, 0.0, 3.0, &[1.8, -0.2], tab, &dense_opts).unwrap();
+        let lam = [1.0f32, -0.5];
+        let gd = aca_backward(&f, tab, &dense, &lam);
+        assert_eq!(gd.meter.nfe_replay, 0, "dense store never replays");
+
+        let budget = dense.store.bytes() / 4;
+        for policy in [CkptPolicy::EveryK(4), CkptPolicy::Budgeted(budget)] {
+            let opts = IntegrateOpts { ckpt: policy, ..IntegrateOpts::with_tol(1e-6, 1e-8) };
+            let thin = integrate(&f, 0.0, 3.0, &[1.8, -0.2], tab, &opts).unwrap();
+            assert_eq!(thin.ts, dense.ts, "{policy:?}: grid");
+            assert_eq!(thin.last(), dense.last(), "{policy:?}: final state");
+            let gt = aca_backward(&f, tab, &thin, &lam);
+            assert_eq!(gt.dl_dz0, gd.dl_dz0, "{policy:?}: dl_dz0");
+            assert_eq!(gt.dl_dtheta, gd.dl_dtheta, "{policy:?}: dl_dtheta");
+            assert_eq!(gt.meter.nfe_backward, gd.meter.nfe_backward, "{policy:?}");
+            assert_eq!(gt.meter.vjp_calls, gd.meter.vjp_calls, "{policy:?}");
+            assert!(gt.meter.nfe_replay > 0, "{policy:?}: thinning must replay");
+            assert!(
+                gt.meter.replay_peak_bytes > 0,
+                "{policy:?}: the replay buffer must be metered"
+            );
+            assert_eq!(gd.meter.replay_peak_bytes, 0, "dense never buffers a segment");
+            assert!(
+                gt.meter.checkpoint_bytes < gd.meter.checkpoint_bytes,
+                "{policy:?}: thinned store must hold fewer bytes"
+            );
+        }
     }
 
     /// Multi-dimensional state: gradient distributes element-wise for the

@@ -100,7 +100,7 @@ pub fn adjoint_backward<F: OdeFunc + ?Sized>(
 
     let aug = Augmented { f, dim: d, n_params: p };
     let mut y1 = vec![0.0f32; 2 * d + p];
-    y1[..d].copy_from_slice(traj.last());
+    y1[..d].copy_from_slice(traj.last().expect("adjoint needs a non-empty trajectory"));
     y1[d..2 * d].copy_from_slice(lam_t1);
 
     let iopts = IntegrateOpts {
@@ -112,18 +112,20 @@ pub fn adjoint_backward<F: OdeFunc + ?Sized>(
     };
     let rev = integrate(&aug, t1, t0, &y1, tab, &iopts)?;
 
-    let y0 = rev.last();
+    let y0 = rev.last().expect("reverse solve always has a final state");
     let meter = CostMeter {
         nfe_forward: traj.nfe,
         // Each augmented eval costs one f eval + one VJP.
         nfe_backward: rev.nfe,
         vjp_calls: rev.nfe,
-        // O(N_f): one augmented state; no trajectory checkpoints kept.
+        // O(N_f): one augmented state; no trajectory checkpoints kept —
+        // and therefore nothing to replay (`..Default` zeroes nfe_replay).
         checkpoint_bytes: (2 * d + p) * std::mem::size_of::<f32>(),
         graph_depth: rev.nfe,
         n_steps: traj.len(),
         n_rejected: traj.n_rejected,
         n_reverse_steps: rev.len(),
+        ..Default::default()
     };
 
     Ok(GradResult {
@@ -163,7 +165,7 @@ mod tests {
         for tol in [1e-4, 1e-7] {
             let opts = IntegrateOpts::with_tol(tol, tol * 1e-2);
             let traj = integrate(&f, 0.0, 4.0, &[1.0], tab, &opts).unwrap();
-            let zt = traj.last()[0];
+            let zt = traj.last().unwrap()[0];
             let g = adjoint_backward(
                 &f,
                 tab,
@@ -185,7 +187,7 @@ mod tests {
         let tab = tableau::dopri5();
         let opts = IntegrateOpts::with_tol(1e-7, 1e-9);
         let traj = integrate(&f, 0.0, 3.0, &[1.0], tab, &opts).unwrap();
-        let zt = traj.last()[0];
+        let zt = traj.last().unwrap()[0];
         let g = adjoint_backward(
             &f,
             tab,
@@ -223,8 +225,9 @@ mod tests {
         for tol in [1e-3, 1e-8] {
             let opts = IntegrateOpts::with_tol(tol, tol * 1e-2);
             let fwd = integrate(&f, 0.0, 25.0, &z0, tab, &opts).unwrap();
-            let rev = reverse_state_only(&f, tab, 0.0, 25.0, fwd.last(), &opts).unwrap();
-            errs.push(crate::tensor::max_abs_diff(rev.last(), &z0) as f64);
+            let rev =
+                reverse_state_only(&f, tab, 0.0, 25.0, fwd.last().unwrap(), &opts).unwrap();
+            errs.push(crate::tensor::max_abs_diff(rev.last().unwrap(), &z0) as f64);
         }
         // (f32 state precision floors the tight-tol error, so only a
         // modest separation is guaranteed.)

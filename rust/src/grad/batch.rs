@@ -26,6 +26,7 @@
 
 use super::step_vjp::{step_vjp_batch, StepVjpBatchScratch};
 use super::{CostMeter, GradResult, Method};
+use crate::ckpt::SegmentCache;
 use crate::ode::batch::BatchTrajectory;
 use crate::ode::func::OdeFunc;
 use crate::ode::integrate::IntegrateOpts;
@@ -35,6 +36,14 @@ use crate::ode::tableau::Tableau;
 /// sharing stage recomputation across samples.
 ///
 /// * `lam_t1` — `dL/dz(T)` for all samples, row-major `[B × D]`.
+///
+/// Checkpoints are fetched per sample through a [`SegmentCache`] over the
+/// shared arena: a dense store hands anchors out directly (bit-for-bit the
+/// old behavior); a thinned store ([`crate::ckpt`]) replays each dropped
+/// state from its nearest anchor once per segment — the reverse rounds walk
+/// each sample's indices strictly downward, so every segment replays
+/// exactly once and the amortized overhead is one extra forward step per
+/// dropped state, metered into [`CostMeter::nfe_replay`].
 ///
 /// Returns one [`GradResult`] per sample, with per-sample exact cost meters
 /// (forward NFE, checkpoint bytes, rejected-trial counts).
@@ -70,6 +79,10 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
     let mut dth_p = vec![0.0f32; b * p];
     let mut nv_p = vec![0usize; b];
     let mut scratch = StepVjpBatchScratch::new();
+    // One segment cache per sample: holds at most one inter-anchor segment
+    // (≤ stride × D floats) — the transient memory of the classic
+    // checkpoint/recompute trade. Dense stores never touch it.
+    let mut caches: Vec<SegmentCache> = (0..b).map(|_| SegmentCache::new()).collect();
 
     // Reverse sweep over the saved discretization points (paper Algo 2),
     // vectorized over samples: every round runs one shared-stage step
@@ -81,7 +94,8 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
             let tr = &traj.tracks[i];
             ts_p[a] = tr.ts[k];
             hs_p[a] = tr.hs[k];
-            zs_p[a * d..(a + 1) * d].copy_from_slice(traj.z(i, k));
+            let z_k = caches[i].state(f, tab, &tr.ts, &tr.hs, traj.sample_store(i), k);
+            zs_p[a * d..(a + 1) * d].copy_from_slice(z_k);
             lam_p[a * d..(a + 1) * d].copy_from_slice(&lams[i * d..(i + 1) * d]);
             // Gather the running dθ so the shared sweep accumulates straight
             // onto it (the scatter below copies it back bit-for-bit).
@@ -123,6 +137,8 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
                 meter: CostMeter {
                     nfe_forward: tr.nfe,
                     nfe_backward: nfe_back[i],
+                    nfe_replay: caches[i].nfe_replay,
+                    replay_peak_bytes: caches[i].peak_bytes(),
                     vjp_calls: nvjp_tot[i],
                     // Depth: one chained VJP sweep per accepted step.
                     graph_depth: nvjp_tot[i],

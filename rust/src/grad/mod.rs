@@ -84,6 +84,17 @@ pub struct CostMeter {
     /// `f` evaluations in the backward pass (stage recomputation; ACA's
     /// `(m+1)`-th pass, the adjoint's `N_r` reverse solve).
     pub nfe_backward: usize,
+    /// `f` evaluations spent regenerating **thinned checkpoints** by
+    /// segment replay (see [`crate::ckpt`]). Zero for a dense store; kept
+    /// separate from `nfe_backward` so the Table 1/2 accounting of the
+    /// paper's methods stays honest while the memory budget's recompute
+    /// overhead stays visible.
+    pub nfe_replay: usize,
+    /// Peak bytes of the backward pass's segment-replay buffer
+    /// ([`crate::ckpt::SegmentCache::peak_bytes`]) — the `O(stride × D)`
+    /// transient a thinned store trades its resident budget against. Zero
+    /// for a dense store.
+    pub replay_peak_bytes: usize,
     /// VJP sweeps in the backward pass.
     pub vjp_calls: usize,
     /// Peak bytes held by trajectory checkpoints (`O(N_t)` memory term).

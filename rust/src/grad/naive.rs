@@ -24,6 +24,7 @@
 
 use super::step_vjp::{err_norm_vjp, step_vjp};
 use super::{CostMeter, GradResult};
+use crate::ckpt::SegmentCache;
 use crate::ode::controller::Controller;
 use crate::ode::func::OdeFunc;
 use crate::ode::integrate::{IntegrateOpts, Trajectory};
@@ -60,11 +61,15 @@ pub fn naive_backward<F: OdeFunc + ?Sized>(
     // ν = dL/d(h entering the current step's trial chain from the *previous*
     // accepted step's controller update). Chained right-to-left.
     let mut nu: f64 = 0.0;
+    // Checkpoint access goes through the segment cache so a thinned store
+    // (crate::ckpt) replays dropped states bit-exactly; dense stores hand
+    // them out directly.
+    let mut cache = SegmentCache::new();
 
     for i in (0..n).rev() {
         let t_i = traj.ts[i];
         let h_i = traj.h(i);
-        let z_i = &traj.zs[i];
+        let z_i = traj.state(f, tab, i, &mut cache);
 
         // (1) Adjoint of the accepted step ψ. The *final* step's h was
         // clamped to land exactly on T (h = T − t_{N−1}); autograd through
@@ -145,6 +150,8 @@ pub fn naive_backward<F: OdeFunc + ?Sized>(
 
         lam = lam_next;
     }
+    meter.nfe_replay = cache.nfe_replay;
+    meter.replay_peak_bytes = cache.peak_bytes();
 
     GradResult { dl_dz0: lam, dl_dtheta: dtheta, meter }
 }
@@ -182,7 +189,7 @@ mod tests {
             ..IntegrateOpts::with_tol(1e-6, 1e-8)
         };
         let traj = integrate(&f, 0.0, 4.0, &[1.0], tab, &opts).unwrap();
-        let zt = traj.last()[0];
+        let zt = traj.last().unwrap()[0];
         let exact = f.exact_dl_dz0(1.0, 4.0);
         let g_naive = naive_backward(&f, tab, &traj, &[2.0 * zt], &opts);
         let g_aca = super::super::aca_backward(&f, tab, &traj, &[2.0 * zt]);

@@ -25,13 +25,24 @@
 //!   and one [`ode::OdeFunc::vjp_batch`] pullback per stage, retiring each
 //!   sample as its reverse index underflows — per-sample gradients and
 //!   meters stay bit-identical to the scalar path (`cargo bench --bench
-//!   grad_backward` measures the speedup over per-sample replay). On top of
+//!   grad_backward` measures the speedup over per-sample replay).
+//!   Trajectory state storage is owned by the **checkpoint store**
+//!   ([`ckpt`]): a [`ckpt::CkptPolicy`] per solve — `Dense` (default,
+//!   bit-for-bit the historical behavior), `EveryK`, or `Budgeted` (a byte
+//!   budget held **mid-solve** by live thinning) — with dropped states
+//!   regenerated **bit-exactly** by segment replay from the nearest anchor
+//!   (the recorded `hs` are exact, so replay is the identical float
+//!   computation; `nfe_replay` meters the recompute cost, and `cargo bench
+//!   --bench ckpt_memory` tracks peak bytes vs replay overhead). On top of
 //!   the batched engine sits the **solve server** ([`serve`]): a dynamic
 //!   micro-batching layer that coalesces concurrent solve requests —
-//!   including requests with **different integration spans** (the batch key
-//!   pins dynamics/solver/tolerance/`t0`/direction, not `t1`) — under a
-//!   `max_batch_size`/`max_queue_delay` flush policy, with admission
-//!   control, p50/p95/p99 latency metrics, and `NODAL_SERVE_*` tuning knobs.
+//!   including requests with **entirely different integration spans** (the
+//!   batch key pins dynamics/solver/tolerance/direction; both `t0` and
+//!   `t1` are free per request) — under a `max_batch_size`/
+//!   `max_queue_delay` flush policy, with two-dimensional admission
+//!   control (request count AND projected checkpoint bytes against a
+//!   worker memory budget), p50/p95/p99 latency metrics, and
+//!   `NODAL_SERVE_*` / `NODAL_CKPT_BUDGET_BYTES` tuning knobs.
 //! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
 //!   encoders/decoders/loss heads, AOT-lowered to HLO text.
 //! * **L1 (Pallas, `python/compile/kernels/`)** — fused hot-path kernels
@@ -72,6 +83,28 @@
 //!          bt.steps(0), bt.tracks[0].nfe, grads[0].dl_dz0);
 //! ```
 //!
+//! ## Memory-budgeted checkpoints
+//!
+//! A long-horizon solve no longer has to hold every accepted state: give
+//! the solve a byte budget and the store keeps sparse anchors, replaying
+//! dropped states bit-exactly when the backward pass asks for them —
+//! gradients are bit-identical to the dense store ([`ckpt`]):
+//!
+//! ```no_run
+//! use nodal::ckpt::CkptPolicy;
+//! use nodal::grad::aca_backward;
+//! use nodal::ode::{analytic::VanDerPol, integrate, tableau, IntegrateOpts};
+//!
+//! let f = VanDerPol::new(0.15);
+//! let opts = IntegrateOpts {
+//!     ckpt: CkptPolicy::Budgeted(4 * 1024), // ≤ 4 KiB of state anchors
+//!     ..IntegrateOpts::default()
+//! };
+//! let traj = integrate(&f, 0.0, 100.0, &[2.0, 0.0], tableau::dopri5(), &opts).unwrap();
+//! let g = aca_backward(&f, tableau::dopri5(), &traj, &[1.0, 0.0]);
+//! println!("bytes {} replay-nfe {}", traj.checkpoint_bytes(), g.meter.nfe_replay);
+//! ```
+//!
 //! ## Serving
 //!
 //! Concurrent solve requests from independent callers coalesce dynamically
@@ -92,6 +125,7 @@
 //! ```
 
 pub mod bench;
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -30,7 +30,7 @@ impl NodeSystem {
     }
 
     /// Forward pass: encode + solve. Returns the trajectory (z0 implied by
-    /// `traj.zs[0]`).
+    /// `traj.z(0)`).
     pub fn forward(&self, x: &[f32]) -> Result<Trajectory> {
         let z0 = self.model.encode(x)?;
         integrate(&self.model, 0.0, self.t1, &z0, self.tab, &self.opts)
@@ -40,7 +40,8 @@ impl NodeSystem {
     pub fn loss_grad(&self, x: &[f32], y: &Target) -> Result<(f64, Vec<f32>, CostMeter)> {
         let traj = self.forward(x)?;
         let mut dtheta = vec![0.0f32; self.model.n_params()];
-        let (lam, loss) = self.model.decode_loss_vjp(traj.last(), y, &mut dtheta)?;
+        let (lam, loss) =
+            self.model.decode_loss_vjp(traj.last().expect("non-empty trajectory"), y, &mut dtheta)?;
         let g = grad::backward(&self.model, self.tab, &traj, &lam, self.method, &self.opts)?;
         for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
             *d += s;
@@ -54,6 +55,6 @@ impl NodeSystem {
     /// Inference: predictions for a batch.
     pub fn predict(&self, x: &[f32], y: &Target) -> Result<(f64, Vec<f32>)> {
         let traj = self.forward(x)?;
-        self.model.decode_loss(traj.last(), y)
+        self.model.decode_loss(traj.last().expect("non-empty trajectory"), y)
     }
 }

@@ -232,7 +232,7 @@ mod tests {
             &IntegrateOpts::with_tol(1e-9, 1e-9),
         )
         .unwrap();
-        let zf = traj.last();
+        let zf = traj.last().unwrap();
         let d = ((zf[3] - z0[3]).powi(2) + (zf[4] - z0[4]).powi(2)).sqrt();
         assert!(d < 0.05, "earth drifted {d} AU after one period");
     }
@@ -265,7 +265,7 @@ mod tests {
             &IntegrateOpts::with_tol(1e-9, 1e-9),
         )
         .unwrap();
-        let e1 = energy(traj.last());
+        let e1 = energy(traj.last().unwrap());
         assert!(
             ((e1 - e0) / e0.abs()).abs() < 1e-3,
             "energy drift: {e0} -> {e1}"

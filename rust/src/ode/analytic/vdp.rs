@@ -166,7 +166,7 @@ mod tests {
             &IntegrateOpts::with_tol(1e-6, 1e-8),
         )
         .unwrap();
-        for z in &traj.zs {
+        for z in traj.states() {
             assert!(z[0].abs() < 5.0 && z[1].abs() < 5.0, "unbounded: {z:?}");
         }
     }

@@ -1,14 +1,22 @@
 //! Batched adaptive integration: advance `B` independent solves of the same
 //! dynamics in lock-step rounds, with **per-sample** step-size control and
-//! **per-sample integration spans**.
+//! **per-sample integration spans** (starts *and* endpoints).
 //!
 //! Layout: current states, stage derivatives and stage inputs live in flat
-//! row-major `[B × D]` buffers; accepted checkpoints are appended to one
-//! shared arena ([`BatchTrajectory::zbuf`]-internal) instead of one `Vec`
-//! allocation per accepted step per sample. Each sample keeps its own
+//! row-major `[B × D]` buffers; accepted checkpoints land in one shared
+//! arena ([`BatchTrajectory`]-internal) instead of one `Vec` allocation per
+//! accepted step per sample. Each sample keeps its own
 //! `(ts, hs, errs, trials)` track plus exact `nfe` / `n_rejected`
 //! bookkeeping, so the per-sample cost meters of paper Table 1 are identical
 //! to what `B` separate [`integrate`](crate::ode::integrate) calls report.
+//!
+//! State storage follows the [`CkptPolicy`] of the solve (see
+//! [`crate::ckpt`]): each track records sparse anchors into the shared
+//! arena, thinning **live** under a byte budget; thinned slots return to a
+//! free-list and are recycled, so the arena's physical growth is bounded by
+//! the per-sample budgets, not by `N_t`. Dropped states are regenerated
+//! bit-exactly by segment replay ([`crate::ckpt::SegmentCache`]); `Dense`
+//! (the default) keeps every state, bit-for-bit the previous behavior.
 //!
 //! Equivalence guarantee: every per-sample arithmetic operation (stage
 //! combination, embedded error norm, controller decision, FSAL/stage-0
@@ -20,20 +28,22 @@
 //! over all live samples; what it enables next is an `eval_batch` override
 //! that dispatches one batched HLO call instead of `B` host round trips.
 //!
-//! Spans are per-sample: [`integrate_batch_spans`] takes `t1s: &[f64]` and
-//! integrates sample `i` over `[t0, t1s[i]]` — each sample derives its own
-//! direction, endpoint epsilon and final-step clamp from its own span
-//! (exactly what the scalar loop derives from *its* span, so bit-equality
-//! holds span by span) and retires through the active set at its own `t1`.
-//! Nothing in the checkpoint math couples co-batched samples, so mixed
-//! spans — and even mixed directions — share stage sweeps for the rounds
-//! they are jointly live. [`integrate_batch`] is the shared-span
-//! convenience wrapper.
+//! Spans are fully per-sample: [`integrate_batch_tspans`] takes
+//! `t0s: &[f64]` and `t1s: &[f64]` and integrates sample `i` over
+//! `[t0s[i], t1s[i]]` — each sample derives its own direction, endpoint
+//! epsilon and final-step clamp from its own span (exactly what the scalar
+//! loop derives from *its* span, so bit-equality holds span by span) and
+//! retires through the active set at its own `t1`. Nothing in the
+//! checkpoint math couples co-batched samples, so mixed starts, mixed
+//! endpoints — and even mixed directions — share stage sweeps for the
+//! rounds they are jointly live. [`integrate_batch_spans`] (shared start)
+//! and [`integrate_batch`] (shared span) are convenience wrappers.
 
 use super::controller::Controller;
 use super::func::OdeFunc;
 use super::integrate::{IntegrateOpts, Trajectory, TrialRecord};
 use super::tableau::Tableau;
+use crate::ckpt::{AnchorSource, CheckpointStore, CkptPolicy, Thinner};
 use crate::tensor;
 use anyhow::{bail, ensure, Result};
 
@@ -41,7 +51,8 @@ use anyhow::{bail, ensure, Result};
 /// discretization points (`ts`), the step sizes exactly as stepped (`hs`),
 /// per-step error norms, optional rejected trials, and cost bookkeeping.
 /// Checkpoint states live in the shared arena of the owning
-/// [`BatchTrajectory`]; `slots[k]` names the arena slot of checkpoint `k`.
+/// [`BatchTrajectory`]; the track holds the sparse anchor bookkeeping
+/// (`anchor_idx[p]`'s state sits in arena slot `anchor_slot[p]`).
 #[derive(Debug, Clone, Default)]
 pub struct SampleTrack {
     /// Accepted times `t_0 .. t_{N_t}` (monotone, endpoints exact).
@@ -52,8 +63,17 @@ pub struct SampleTrack {
     pub errs: Vec<f64>,
     /// Rejected trials per accepted step (when recorded).
     pub trials: Vec<Vec<TrialRecord>>,
-    /// Arena slot of each checkpoint (len == `ts.len()`).
-    pub slots: Vec<usize>,
+    /// Stored anchor state-indices, ascending (always contains 0 and the
+    /// most recent state).
+    pub anchor_idx: Vec<usize>,
+    /// Arena slot of each anchor (parallel to `anchor_idx`).
+    pub anchor_slot: Vec<usize>,
+    /// Thinning state machine for this track's policy.
+    thin: Thinner,
+    /// Policy the track was recorded under.
+    policy: CkptPolicy,
+    /// High-water mark of stored state bytes (the budget must bound this).
+    peak_state_bytes: usize,
     /// `f` evaluations spent on this sample.
     pub nfe: usize,
     /// Rejected step attempts for this sample.
@@ -85,20 +105,64 @@ pub struct BatchTrajectory {
     pub dim: usize,
     /// Shared checkpoint arena: slot `s` is `zbuf[s*dim .. (s+1)*dim]`.
     zbuf: Vec<f32>,
+    /// Recycled arena slots of thinned anchors — physical arena growth is
+    /// bounded by the live anchor counts, not by total accepted steps.
+    free: Vec<usize>,
+    drop_scratch: Vec<usize>,
     /// Per-sample checkpoint tracks.
     pub tracks: Vec<SampleTrack>,
 }
 
-impl BatchTrajectory {
-    /// Checkpoint `k` of sample `i`.
-    pub fn z(&self, i: usize, k: usize) -> &[f32] {
-        let s = self.tracks[i].slots[k];
-        &self.zbuf[s * self.dim..(s + 1) * self.dim]
+/// [`AnchorSource`] view of one sample's anchors inside the shared arena —
+/// what a [`crate::ckpt::SegmentCache`] replays from.
+#[derive(Clone, Copy)]
+pub struct SampleStore<'a> {
+    bt: &'a BatchTrajectory,
+    i: usize,
+}
+
+impl<'a> AnchorSource<'a> for SampleStore<'a> {
+    fn dim(self) -> usize {
+        self.bt.dim
     }
 
-    /// Final state `z(T)` of sample `i`.
+    fn stored(self, k: usize) -> Option<&'a [f32]> {
+        let tr = &self.bt.tracks[self.i];
+        let p = crate::ckpt::anchor_pos(tr.policy, &tr.anchor_idx, k)?;
+        let s = tr.anchor_slot[p];
+        Some(&self.bt.zbuf[s * self.bt.dim..(s + 1) * self.bt.dim])
+    }
+
+    fn anchor_at_or_before(self, k: usize) -> usize {
+        crate::ckpt::anchor_floor(&self.bt.tracks[self.i].anchor_idx, k)
+    }
+}
+
+impl BatchTrajectory {
+    /// Checkpoint `k` of sample `i` if it is currently stored (`None` means
+    /// the policy thinned it — replay it through a
+    /// [`crate::ckpt::SegmentCache`] over [`Self::sample_store`]).
+    pub fn stored(&self, i: usize, k: usize) -> Option<&[f32]> {
+        SampleStore { bt: self, i }.stored(k)
+    }
+
+    /// Checkpoint `k` of sample `i`. Panics if the state was thinned;
+    /// dense-store callers (benches, tests) keep the direct path.
+    pub fn z(&self, i: usize, k: usize) -> &[f32] {
+        self.stored(i, k).expect("checkpoint thinned; replay via SegmentCache/sample_store")
+    }
+
+    /// Anchor view of sample `i` for segment replay.
+    pub fn sample_store(&self, i: usize) -> SampleStore<'_> {
+        SampleStore { bt: self, i }
+    }
+
+    /// Final state `z(T)` of sample `i` — the tail anchor, stored under
+    /// every policy (every track holds at least its initial state).
     pub fn last(&self, i: usize) -> &[f32] {
-        self.z(i, self.tracks[i].slots.len() - 1)
+        let tr = &self.tracks[i];
+        let s = *tr.anchor_slot.last().expect("track has no states");
+        &self.zbuf[s * self.dim..(s + 1) * self.dim]
     }
 
     /// Accepted steps `N_t` of sample `i`.
@@ -106,13 +170,13 @@ impl BatchTrajectory {
         self.tracks[i].steps()
     }
 
-    /// Bytes held by sample `i`'s checkpoint store — full accounting (state
-    /// checkpoints, times, step sizes, error norms, and recorded trials),
-    /// matching [`Trajectory::checkpoint_bytes`].
+    /// Bytes held by sample `i`'s checkpoint store — full accounting
+    /// (*stored* state anchors, times, step sizes, error norms, and recorded
+    /// trials), matching [`Trajectory::checkpoint_bytes`].
     pub fn checkpoint_bytes(&self, i: usize) -> usize {
         use std::mem::size_of;
         let tr = &self.tracks[i];
-        tr.slots.len() * self.dim * size_of::<f32>()
+        tr.anchor_idx.len() * self.dim * size_of::<f32>()
             + tr.ts.len() * size_of::<f64>()
             + tr.hs.len() * size_of::<f64>()
             + tr.errs.len() * size_of::<f64>()
@@ -124,19 +188,87 @@ impl BatchTrajectory {
         (0..self.batch).map(|i| self.checkpoint_bytes(i)).sum()
     }
 
+    /// Bytes currently held by sample `i`'s *stored states* (the quantity a
+    /// checkpoint budget bounds; excludes the tiny spine).
+    pub fn state_bytes(&self, i: usize) -> usize {
+        self.tracks[i].anchor_idx.len() * self.dim * std::mem::size_of::<f32>()
+    }
+
+    /// High-water mark of [`Self::state_bytes`] over the solve — a budget
+    /// must bound this *mid-flight*, not just at the end.
+    pub fn peak_state_bytes(&self, i: usize) -> usize {
+        self.tracks[i].peak_state_bytes
+    }
+
     /// Total `f` evaluations across the batch.
     pub fn nfe_total(&self) -> usize {
         self.tracks.iter().map(|t| t.nfe).sum()
     }
 
+    /// Record state `idx` of sample `i`: thin per the track's policy, then
+    /// store into a recycled (or fresh) arena slot. The budget invariant
+    /// holds before and after every call.
+    fn record_state(&mut self, i: usize, idx: usize, z: &[f32]) {
+        let dim = self.dim;
+        {
+            let tr = &mut self.tracks[i];
+            tr.thin.plan_push(&tr.anchor_idx, &mut self.drop_scratch);
+        }
+        if !self.drop_scratch.is_empty() {
+            // One shared compaction sweep: shift the surviving anchors left
+            // and return dropped slots to the free-list.
+            let tr = &mut self.tracks[i];
+            let (idx, slots, free) = (&mut tr.anchor_idx, &mut tr.anchor_slot, &mut self.free);
+            let w = crate::ckpt::compact_drops(idx.len(), &self.drop_scratch, |r, dst| match dst {
+                None => free.push(slots[r]),
+                Some(w) => {
+                    idx[w] = idx[r];
+                    slots[w] = slots[r];
+                }
+            });
+            idx.truncate(w);
+            slots.truncate(w);
+            self.drop_scratch.clear();
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.zbuf[s * dim..(s + 1) * dim].copy_from_slice(z);
+                s
+            }
+            None => {
+                let s = self.zbuf.len() / dim;
+                self.zbuf.extend_from_slice(z);
+                s
+            }
+        };
+        let tr = &mut self.tracks[i];
+        tr.anchor_idx.push(idx);
+        tr.anchor_slot.push(slot);
+        let bytes = tr.anchor_idx.len() * dim * std::mem::size_of::<f32>();
+        tr.peak_state_bytes = tr.peak_state_bytes.max(bytes);
+    }
+
     /// Materialize sample `i` as a standalone [`Trajectory`] (copies the
-    /// checkpoints out of the arena) — the interop path for per-sample
-    /// consumers such as the naive / continuous-adjoint backward passes.
+    /// stored anchors out of the arena, preserving the thinning state) —
+    /// the interop path for per-sample consumers such as the naive /
+    /// continuous-adjoint backward passes.
     pub fn to_trajectory(&self, i: usize) -> Trajectory {
         let tr = &self.tracks[i];
+        let mut buf = Vec::with_capacity(tr.anchor_slot.len() * self.dim);
+        for &s in &tr.anchor_slot {
+            buf.extend_from_slice(&self.zbuf[s * self.dim..(s + 1) * self.dim]);
+        }
         Trajectory {
             ts: tr.ts.clone(),
-            zs: (0..tr.slots.len()).map(|k| self.z(i, k).to_vec()).collect(),
+            store: CheckpointStore::from_parts(
+                self.dim,
+                tr.policy,
+                tr.thin.clone(),
+                tr.ts.len(),
+                tr.anchor_idx.clone(),
+                buf,
+                tr.peak_state_bytes,
+            ),
             hs: tr.hs.clone(),
             errs: tr.errs.clone(),
             trials: tr.trials.clone(),
@@ -148,7 +280,7 @@ impl BatchTrajectory {
 
 /// Integrate `B` independent copies of `dz/dt = f(t, z)` from `(t0, z0_i)`
 /// to a shared `t1` (paper Algo 1, vectorized over samples) — the
-/// shared-span convenience wrapper over [`integrate_batch_spans`].
+/// shared-span convenience wrapper over [`integrate_batch_tspans`].
 ///
 /// `z0` is row-major `[B × D]` with `D = f.dim()`; `B` is inferred. Each
 /// sample runs the exact scalar control flow (per-sample `h`, retries,
@@ -165,25 +297,43 @@ pub fn integrate_batch<F: OdeFunc + ?Sized>(
 ) -> Result<BatchTrajectory> {
     let dim = f.dim();
     ensure!(dim > 0, "dynamics must have a positive dimension");
-    integrate_batch_spans(f, t0, &vec![t1; z0.len() / dim], z0, tab, opts)
+    let b = z0.len() / dim.max(1);
+    integrate_batch_tspans(f, &vec![t0; b], &vec![t1; b], z0, tab, opts)
 }
 
 /// Integrate `B` independent copies of `dz/dt = f(t, z)`, sample `i` over
-/// its **own** span `[t0, t1s[i]]`.
-///
-/// Per-sample span geometry: direction, endpoint epsilon, final-step clamp
-/// and the initial-step bound all derive from `t1s[i]` exactly the way the
-/// scalar [`integrate`](super::integrate) derives them from its span, so
-/// every sample's grid, checkpoints and meters are bit-identical to a
-/// scalar solve over the same `[t0, t1s[i]]`. A sample whose span is zero
-/// (`t1s[i] == t0`) never enters the round loop and costs zero evaluations
-/// — its track is just the initial checkpoint, matching the scalar
-/// zero-span early return. Samples retire from the shared stage sweeps as
-/// they land on their own `t1`, via the same active-set machinery that
-/// already retires fast samples under a shared span.
+/// `[t0, t1s[i]]` — the shared-start wrapper over
+/// [`integrate_batch_tspans`].
 pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
     f: &F,
     t0: f64,
+    t1s: &[f64],
+    z0: &[f32],
+    tab: &Tableau,
+    opts: &IntegrateOpts,
+) -> Result<BatchTrajectory> {
+    integrate_batch_tspans(f, &vec![t0; t1s.len()], t1s, z0, tab, opts)
+}
+
+/// Integrate `B` independent copies of `dz/dt = f(t, z)`, sample `i` over
+/// its **own** span `[t0s[i], t1s[i]]`.
+///
+/// Per-sample span geometry: direction, endpoint epsilon, final-step clamp
+/// and the initial-step bound all derive from `(t0s[i], t1s[i])` exactly
+/// the way the scalar [`integrate`](super::integrate) derives them from its
+/// span, so every sample's grid, checkpoints and meters are bit-identical
+/// to a scalar solve over the same span. A sample whose span is zero
+/// (`t1s[i] == t0s[i]`) never enters the round loop and costs zero
+/// evaluations — its track is just the initial checkpoint, matching the
+/// scalar zero-span early return. Samples retire from the shared stage
+/// sweeps as they land on their own `t1`, via the same active-set
+/// machinery that already retires fast samples under a shared span. No new
+/// engine machinery is needed for per-sample starts: the `t0` that was a
+/// scalar is simply per-sample bookkeeping (which is what lets the serve
+/// layer drop `t0` from its batch key).
+pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
+    f: &F,
+    t0s: &[f64],
     t1s: &[f64],
     z0: &[f32],
     tab: &Tableau,
@@ -203,27 +353,38 @@ pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
         "t1s length {} != batch size {b} (z0 holds {b} samples of dim {dim})",
         t1s.len()
     );
+    ensure!(t0s.len() == b, "t0s length {} != batch size {b}", t0s.len());
     let s = tab.stages;
 
     let mut out = BatchTrajectory {
         batch: b,
         dim,
-        zbuf: z0.to_vec(), // slots 0..b are the initial checkpoints
+        zbuf: Vec::with_capacity(b * dim),
+        free: Vec::new(),
+        drop_scratch: Vec::new(),
         tracks: (0..b)
-            .map(|i| SampleTrack { ts: vec![t0], slots: vec![i], ..Default::default() })
+            .map(|i| SampleTrack {
+                ts: vec![t0s[i]],
+                thin: Thinner::new(opts.ckpt, dim),
+                policy: opts.ckpt,
+                ..Default::default()
+            })
             .collect(),
     };
+    for i in 0..b {
+        out.record_state(i, 0, &z0[i * dim..(i + 1) * dim]);
+    }
 
     // Per-sample span geometry — exactly what the scalar loop computes from
     // its single span, evaluated per sample.
-    let dir: Vec<f64> = t1s.iter().map(|t1| (t1 - t0).signum()).collect();
-    let span: Vec<f64> = t1s.iter().map(|t1| (t1 - t0).abs()).collect();
+    let dir: Vec<f64> = t1s.iter().zip(t0s).map(|(t1, t0)| (t1 - t0).signum()).collect();
+    let span: Vec<f64> = t1s.iter().zip(t0s).map(|(t1, t0)| (t1 - t0).abs()).collect();
     let eps_t: Vec<f64> = span.iter().map(|sp| 1e-12 * sp.max(1.0)).collect();
     let fixed = opts.fixed_h.is_some() || !tab.adaptive();
     let ctrl = opts.controller.unwrap_or_else(|| Controller::for_tableau(tab));
 
     // Per-sample mutable state (indexed by sample id).
-    let mut t = vec![t0; b];
+    let mut t = t0s.to_vec();
     let mut z = z0.to_vec();
     let mut z_next = vec![0.0f32; b * dim];
     let mut k0 = vec![0.0f32; b * dim];
@@ -233,7 +394,7 @@ pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
     let mut trial_buf: Vec<Vec<TrialRecord>> = vec![Vec::new(); b];
 
     for i in 0..b {
-        if t1s[i] == t0 {
+        if t1s[i] == t0s[i] {
             continue; // zero-span: scalar early return — no h init, no nfe
         }
         h[i] = if fixed {
@@ -243,7 +404,7 @@ pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
                 Some(h0) => h0.abs().min(span[i]) * dir[i],
                 None => {
                     let zi = &z[i * dim..(i + 1) * dim];
-                    let hi = ctrl.initial_step(f, t0, zi, dir[i], opts.atol, opts.rtol);
+                    let hi = ctrl.initial_step(f, t0s[i], zi, dir[i], opts.atol, opts.rtol);
                     out.tracks[i].nfe += 1;
                     hi.abs().min(span[i]) * dir[i]
                 }
@@ -387,15 +548,15 @@ pub fn integrate_batch_spans<F: OdeFunc + ?Sized>(
                 continue;
             }
 
-            // Accept: advance state, record the checkpoint into the arena.
+            // Accept: advance state, record the checkpoint into the arena
+            // (thinning live per the track's policy).
             let t_new = if hta == t1s[i] - t[i] { t1s[i] } else { t[i] + hta };
             z[i * dim..(i + 1) * dim].copy_from_slice(&z_next[i * dim..(i + 1) * dim]);
             t[i] = t_new;
-            let slot = out.zbuf.len() / dim;
-            out.zbuf.extend_from_slice(&z[i * dim..(i + 1) * dim]);
+            let idx = out.tracks[i].ts.len();
+            out.record_state(i, idx, &z[i * dim..(i + 1) * dim]);
             let track = &mut out.tracks[i];
             track.ts.push(t_new);
-            track.slots.push(slot);
             track.hs.push(hta);
             track.errs.push(en);
             if opts.record_trials {
@@ -453,7 +614,7 @@ mod tests {
         assert_eq!(bt.tracks[0].ts, traj.ts);
         assert_eq!(bt.tracks[0].hs, traj.hs);
         for k in 0..=traj.len() {
-            assert_eq!(bt.z(0, k), &traj.zs[k][..], "checkpoint {k}");
+            assert_eq!(bt.z(0, k), traj.z(k).unwrap(), "checkpoint {k}");
         }
         assert_eq!(bt.tracks[0].nfe, traj.nfe);
         assert_eq!(bt.checkpoint_bytes(0), traj.checkpoint_bytes());
@@ -470,7 +631,7 @@ mod tests {
         for (i, traj) in refs.iter().enumerate() {
             assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
             assert_eq!(bt.tracks[i].hs, traj.hs, "sample {i} steps");
-            assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+            assert_eq!(bt.last(i), traj.last().unwrap(), "sample {i} endpoint");
             assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
             assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected);
         }
@@ -549,11 +710,37 @@ mod tests {
                 let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
                 assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
                 assert_eq!(bt.tracks[i].hs, traj.hs, "sample {i} steps");
-                assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+                assert_eq!(bt.last(i), traj.last().unwrap(), "sample {i} endpoint");
                 assert_eq!(*bt.tracks[i].ts.last().unwrap(), t1, "sample {i} lands on its t1");
                 assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
                 assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "sample {i} rejected");
                 assert_eq!(bt.checkpoint_bytes(i), traj.checkpoint_bytes(), "sample {i} bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_starts_match_scalar_bitwise() {
+        // Fully per-sample spans: each sample has its own `t0` AND `t1`.
+        // Grids, checkpoints and meters must be bit-identical to scalar
+        // solves over the same `[t0s[i], t1s[i]]` — the bookkeeping that
+        // lets serve drop `t0` from its batch key.
+        let f = VanDerPol::new(0.6);
+        let z0 = [2.0f32, 0.0, -1.0, 0.5, 0.3, -0.8];
+        let t0s = [0.0f64, 0.5, -1.0];
+        let t1s = [1.0f64, 2.5, 0.4];
+        for opts in [IntegrateOpts::with_tol(1e-6, 1e-8), IntegrateOpts::fixed(0.05)] {
+            let tab = if opts.fixed_h.is_some() { tableau::rk4() } else { tableau::dopri5() };
+            let bt = integrate_batch_tspans(&f, &t0s, &t1s, &z0, tab, &opts).unwrap();
+            for i in 0..3 {
+                let traj =
+                    integrate(&f, t0s[i], t1s[i], &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
+                assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
+                assert_eq!(bt.tracks[i].hs, traj.hs, "sample {i} steps");
+                assert_eq!(bt.last(i), traj.last().unwrap(), "sample {i} endpoint");
+                assert_eq!(bt.tracks[i].ts[0], t0s[i], "sample {i} starts at its t0");
+                assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
+                assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "sample {i} rejected");
             }
         }
     }
@@ -572,7 +759,7 @@ mod tests {
         for (i, &t1) in t1s.iter().enumerate() {
             let traj = integrate(&f, 0.0, t1, &z0[i * 2..(i + 1) * 2], tab, &opts).unwrap();
             assert_eq!(bt.tracks[i].ts, traj.ts, "sample {i} grid");
-            assert_eq!(bt.last(i), traj.last(), "sample {i} endpoint");
+            assert_eq!(bt.last(i), traj.last().unwrap(), "sample {i} endpoint");
             assert_eq!(bt.tracks[i].nfe, traj.nfe, "sample {i} nfe");
         }
     }
@@ -591,7 +778,7 @@ mod tests {
         assert_eq!(bt.last(0), &[2.0, 0.0]);
         assert_eq!(bt.tracks[0].nfe, 0, "zero-span sample must cost nothing");
         let traj = integrate(&f.inner, 0.0, 2.0, &z0[2..4], tableau::dopri5(), &opts).unwrap();
-        assert_eq!(bt.last(1), traj.last(), "live neighbor unperturbed");
+        assert_eq!(bt.last(1), traj.last().unwrap(), "live neighbor unperturbed");
         assert_eq!(bt.tracks[1].nfe, traj.nfe);
         assert_eq!(f.evals(), traj.nfe, "batch spent exactly the live sample's evals");
     }
@@ -632,9 +819,47 @@ mod tests {
             let direct = integrate(&f, 0.0, 2.0, &z0[i * 2..(i + 1) * 2], tableau::dopri5(), &opts)
                 .unwrap();
             assert_eq!(tr.ts, direct.ts);
-            assert_eq!(tr.zs, direct.zs);
+            for k in 0..tr.store.len() {
+                assert_eq!(tr.z(k).unwrap(), direct.z(k).unwrap(), "sample {i} state {k}");
+            }
             assert_eq!(tr.hs, direct.hs);
             assert_eq!(tr.checkpoint_bytes(), direct.checkpoint_bytes());
         }
+    }
+
+    #[test]
+    fn budgeted_batch_thins_live_and_recycles_slots() {
+        // A budgeted batched solve must (a) hold each sample's budget at
+        // every accepted step, (b) keep grids and finals bit-identical to
+        // the dense solve, and (c) keep the shared arena's physical size
+        // bounded by the budgets (free-list recycling) instead of N_t.
+        let f = VanDerPol::new(0.6);
+        let z0 = [2.0f32, 0.0, -1.0, 0.5];
+        let opts_dense = IntegrateOpts::fixed(0.01);
+        let tab = tableau::rk4();
+        let dense = integrate_batch(&f, 0.0, 2.0, &z0, tab, &opts_dense).unwrap();
+        let budget = dense.state_bytes(0) / 8;
+        let opts_thin =
+            IntegrateOpts { ckpt: CkptPolicy::Budgeted(budget), ..IntegrateOpts::fixed(0.01) };
+        let thin = integrate_batch(&f, 0.0, 2.0, &z0, tab, &opts_thin).unwrap();
+        for i in 0..2 {
+            assert_eq!(thin.tracks[i].ts, dense.tracks[i].ts, "sample {i} grid");
+            assert_eq!(thin.last(i), dense.last(i), "sample {i} final");
+            assert_eq!(thin.tracks[i].nfe, dense.tracks[i].nfe, "sample {i} nfe");
+            assert!(
+                thin.peak_state_bytes(i) <= budget,
+                "sample {i}: peak {} bytes over budget {budget}",
+                thin.peak_state_bytes(i)
+            );
+            assert!(thin.state_bytes(i) * 4 <= dense.state_bytes(i), "sample {i} thinned ≥4×");
+        }
+        // Physical arena: dense holds every state; thinned must be far
+        // smaller (anchors + recycled slack), proving slots are reused.
+        assert!(
+            thin.zbuf.len() * 4 <= dense.zbuf.len(),
+            "arena {} floats vs dense {} — free-list not recycling",
+            thin.zbuf.len(),
+            dense.zbuf.len()
+        );
     }
 }

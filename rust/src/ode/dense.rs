@@ -20,19 +20,25 @@ pub struct DenseOutput {
 
 impl DenseOutput {
     /// Build an interpolant from a trajectory and its dynamics.
+    ///
+    /// Requires every knot state to be stored (the default
+    /// [`CkptPolicy::Dense`](crate::ckpt::CkptPolicy) — interpolation wants
+    /// all knots anyway, so thinning buys nothing here); panics on a
+    /// thinned store.
     pub fn new<F: OdeFunc + ?Sized>(f: &F, traj: &Trajectory) -> Self {
-        let dim = traj.zs[0].len();
+        let zs: Vec<Vec<f32>> = traj.states().map(|z| z.to_vec()).collect();
+        let dim = zs[0].len();
         let fs = traj
             .ts
             .iter()
-            .zip(&traj.zs)
+            .zip(&zs)
             .map(|(&t, z)| {
                 let mut d = vec![0.0f32; dim];
                 f.eval(t, z, &mut d);
                 d
             })
             .collect();
-        DenseOutput { ts: traj.ts.clone(), zs: traj.zs.clone(), fs }
+        DenseOutput { ts: traj.ts.clone(), zs, fs }
     }
 
     /// Time domain `[t_min, t_max]` covered by the interpolant.
@@ -126,7 +132,7 @@ mod tests {
         let dense = DenseOutput::new(&f, &traj);
         for (i, &t) in traj.ts.iter().enumerate() {
             let z = dense.eval(t);
-            assert!((z[0] - traj.zs[i][0]).abs() < 1e-7, "knot {i}");
+            assert!((z[0] - traj.z(i).unwrap()[0]).abs() < 1e-7, "knot {i}");
         }
     }
 

@@ -12,6 +12,7 @@ use super::controller::Controller;
 use super::func::OdeFunc;
 use super::step::{rk_step, StepScratch};
 use super::tableau::Tableau;
+use crate::ckpt::{CheckpointStore, CkptPolicy, SegmentCache};
 use crate::tensor;
 use anyhow::{bail, Result};
 
@@ -26,12 +27,19 @@ pub struct TrialRecord {
 
 /// Record of one forward integration: the accepted discretization points and
 /// state values (paper Algo 2 "trajectory checkpoint"), plus bookkeeping.
+///
+/// The **spine** — `ts`, `hs`, `errs`, `trials` and the cost counters — is
+/// always dense (`O(N_t)` scalars). State storage is delegated to a
+/// [`CheckpointStore`] behind a [`CkptPolicy`]: `Dense` keeps every state
+/// (bit-for-bit today's behavior); thinned policies keep sparse anchors and
+/// regenerate dropped states bit-exactly through a
+/// [`SegmentCache`] (see [`crate::ckpt`]).
 #[derive(Debug, Clone, Default)]
 pub struct Trajectory {
     /// Accepted times `t_0 .. t_{N_t}` (monotone, endpoints exact).
     pub ts: Vec<f64>,
-    /// State checkpoints `z_0 .. z_{N_t}` at those times.
-    pub zs: Vec<Vec<f32>>,
+    /// State checkpoint storage for `z_0 .. z_{N_t}` (policy-thinned).
+    pub store: CheckpointStore,
     /// Accepted step sizes, stored exactly as used by the stepper (recovering
     /// them from `ts` differences would lose a ulp and break ACA's bit-exact
     /// replay guarantee).
@@ -57,9 +65,38 @@ impl Trajectory {
         self.len() == 0
     }
 
-    /// Final state `z(T)`.
-    pub fn last(&self) -> &[f32] {
-        self.zs.last().expect("empty trajectory")
+    /// Final state `z(T)` — the tail anchor, stored under every policy.
+    /// `None` only for an empty trajectory (e.g. `Trajectory::default()`),
+    /// which used to panic here.
+    pub fn last(&self) -> Option<&[f32]> {
+        self.store.last()
+    }
+
+    /// Checkpoint `z_k` if it is currently stored (`None` means the policy
+    /// thinned it — fetch through [`Self::state`] instead).
+    pub fn z(&self, k: usize) -> Option<&[f32]> {
+        self.store.stored(k)
+    }
+
+    /// Checkpoint `z_k`, replaying from the nearest anchor when it was
+    /// thinned — bit-identical to the dropped forward state (see
+    /// [`crate::ckpt`]). Replay cost accrues in `cache.nfe_replay`.
+    pub fn state<'a, F: OdeFunc + ?Sized>(
+        &'a self,
+        f: &F,
+        tab: &Tableau,
+        k: usize,
+        cache: &'a mut SegmentCache,
+    ) -> &'a [f32] {
+        cache.state(f, tab, &self.ts, &self.hs, &self.store, k)
+    }
+
+    /// Iterate over all stored states `z_0 .. z_{N_t}` in order. Panics if
+    /// any state was thinned — callers that tolerate thinned stores should
+    /// go through [`Self::state`] with a [`SegmentCache`].
+    pub fn states(&self) -> impl Iterator<Item = &[f32]> + '_ {
+        (0..self.store.len())
+            .map(|k| self.z(k).expect("state thinned; fetch via Trajectory::state"))
     }
 
     /// Accepted step size `h_i`, exactly as used in the forward pass.
@@ -69,12 +106,14 @@ impl Trajectory {
 
     /// Bytes held by the checkpoint store (`O(N_f + N_t)` memory column of
     /// paper Table 1 — the `N_t` part; the transient `N_f` part lives in the
-    /// step scratch). Full accounting: state checkpoints, times, step sizes,
-    /// error norms, and any recorded trials — earlier versions omitted the
-    /// `hs`/`errs`/`trials` vectors and under-reported the Table 1 column.
+    /// step scratch). Full accounting: *stored* state checkpoints, times,
+    /// step sizes, error norms, and any recorded trials — earlier versions
+    /// omitted the `hs`/`errs`/`trials` vectors and under-reported the
+    /// Table 1 column. Under a thinning policy the state term counts the
+    /// anchors actually held, which is the point of the budget.
     pub fn checkpoint_bytes(&self) -> usize {
         use std::mem::size_of;
-        self.zs.iter().map(|z| z.len() * size_of::<f32>()).sum::<usize>()
+        self.store.bytes()
             + self.ts.len() * size_of::<f64>()
             + self.hs.len() * size_of::<f64>()
             + self.errs.len() * size_of::<f64>()
@@ -107,6 +146,10 @@ pub struct IntegrateOpts {
     pub record_trials: bool,
     /// Controller overrides; `None` = [`Controller::for_tableau`].
     pub controller: Option<Controller>,
+    /// Checkpoint storage policy (see [`crate::ckpt`]). `Dense` keeps every
+    /// accepted state — bit-for-bit today's behavior; thinned policies bound
+    /// checkpoint memory and replay dropped states bit-exactly on demand.
+    pub ckpt: CkptPolicy,
 }
 
 impl Default for IntegrateOpts {
@@ -119,6 +162,7 @@ impl Default for IntegrateOpts {
             max_steps: 100_000,
             record_trials: false,
             controller: None,
+            ckpt: CkptPolicy::Dense,
         }
     }
 }
@@ -147,9 +191,10 @@ pub fn integrate<F: OdeFunc + ?Sized>(
     opts: &IntegrateOpts,
 ) -> Result<Trajectory> {
     assert_eq!(z0.len(), f.dim(), "state length != f.dim()");
-    let mut traj = Trajectory::default();
+    let mut traj =
+        Trajectory { store: CheckpointStore::new(f.dim(), opts.ckpt), ..Default::default() };
     traj.ts.push(t0);
-    traj.zs.push(z0.to_vec());
+    traj.store.push(z0);
     if t0 == t1 {
         return Ok(traj);
     }
@@ -250,7 +295,7 @@ pub fn integrate<F: OdeFunc + ?Sized>(
         std::mem::swap(&mut z, &mut z_next);
         t = t_new;
         traj.ts.push(t);
-        traj.zs.push(z.clone());
+        traj.store.push(&z);
         traj.hs.push(h_try);
         traj.errs.push(out.err_norm);
         if opts.record_trials {
@@ -286,7 +331,7 @@ mod tests {
             let opts = IntegrateOpts::with_tol(1e-6, 1e-8);
             let traj = integrate(&f, 0.0, 2.0, &[1.0], tab, &opts).unwrap();
             let exact = (-2.0f64).exp();
-            let got = traj.last()[0] as f64;
+            let got = traj.last().unwrap()[0] as f64;
             assert!(
                 (got - exact).abs() < 5e-5,
                 "{}: {} vs {} ({} steps)",
@@ -311,7 +356,7 @@ mod tests {
         ] {
             let traj = integrate(&f, 0.0, 1.0, &[1.0], tab, &IntegrateOpts::fixed(0.01)).unwrap();
             assert_eq!(traj.len(), 100);
-            let got = traj.last()[0] as f64;
+            let got = traj.last().unwrap()[0] as f64;
             assert!((got - exact).abs() < tol, "{}: {} vs {}", tab.name, got, exact);
         }
     }
@@ -322,10 +367,11 @@ mod tests {
         let z0 = [2.0f32, 0.0];
         let opts = IntegrateOpts::with_tol(1e-9, 1e-9);
         let fwd = integrate(&f, 0.0, 5.0, &z0, tableau::dopri5(), &opts).unwrap();
-        let bwd = integrate(&f, 5.0, 0.0, fwd.last(), tableau::dopri5(), &opts).unwrap();
+        let bwd =
+            integrate(&f, 5.0, 0.0, fwd.last().unwrap(), tableau::dopri5(), &opts).unwrap();
         // At tight tolerance the reverse solve recovers z0 well; at loose
         // tolerance it does NOT (paper Fig 4) — see the fig4 experiment.
-        let d = crate::tensor::max_abs_diff(bwd.last(), &z0);
+        let d = crate::tensor::max_abs_diff(bwd.last().unwrap(), &z0);
         assert!(d < 1e-3, "reverse error {d} too large at tight tol");
     }
 
@@ -375,7 +421,7 @@ mod tests {
         for w in traj.ts.windows(2) {
             assert!(w[1] > w[0], "times must increase: {:?}", w);
         }
-        assert_eq!(traj.zs.len(), traj.ts.len());
+        assert_eq!(traj.store.len(), traj.ts.len());
     }
 
     #[test]
@@ -403,7 +449,25 @@ mod tests {
             integrate(&f, 1.0, 1.0, &[3.0, 4.0], tableau::dopri5(), &IntegrateOpts::default())
                 .unwrap();
         assert_eq!(traj.len(), 0);
-        assert_eq!(traj.last(), &[3.0, 4.0]);
+        assert_eq!(traj.last().unwrap(), &[3.0, 4.0]);
+    }
+
+    /// Bugfix: `last()` used to panic on an empty trajectory (the
+    /// zero-states edge a `Trajectory::default()` or a retired zero-span
+    /// record hands to generic consumers). It now reports `None`; any
+    /// solved trajectory — including a zero-span solve — has its initial
+    /// state and reports `Some`.
+    #[test]
+    fn empty_trajectory_last_is_none() {
+        let empty = Trajectory::default();
+        assert!(empty.last().is_none());
+        assert!(empty.z(0).is_none());
+        assert_eq!(empty.len(), 0);
+        let f = Linear::new(1.0, 1);
+        let traj =
+            integrate(&f, 2.0, 2.0, &[7.0], tableau::dopri5(), &IntegrateOpts::default())
+                .unwrap();
+        assert_eq!(traj.last().unwrap(), &[7.0], "zero-span solve keeps its initial state");
     }
 
     #[test]

@@ -16,7 +16,10 @@ pub mod integrate;
 pub mod step;
 pub mod tableau;
 
-pub use batch::{integrate_batch, integrate_batch_spans, BatchTrajectory, SampleTrack};
+pub use batch::{
+    integrate_batch, integrate_batch_spans, integrate_batch_tspans, BatchTrajectory, SampleStore,
+    SampleTrack,
+};
 pub use controller::{Controller, StepDecision};
 pub use func::OdeFunc;
 pub use integrate::{integrate, IntegrateOpts, Trajectory, TrialRecord};

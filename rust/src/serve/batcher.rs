@@ -9,23 +9,26 @@
 //! The server's batcher thread drives the same code with wall time.
 //!
 //! Grouping: requests coalesce by [`BatchKey`] (same dynamics, solver,
-//! start time `t0`, direction, tolerance, gradient flag); the initial state
-//! *and the endpoint `t1`* may differ inside a batch — exactly the axes
-//! `integrate_batch_spans` vectorizes over without changing any per-sample
-//! result. Under mixed-span traffic this is the occupancy lever: requests
-//! that previously split into one group per span now fill one batch.
+//! direction, tolerance, gradient flag); the initial state *and the whole
+//! span `[t0, t1]`* may differ inside a batch — exactly the axes
+//! `integrate_batch_tspans` vectorizes over without changing any
+//! per-sample result. Under mixed-span traffic this is the occupancy
+//! lever: requests that previously split into one group per start time or
+//! endpoint now fill one batch.
 
 use super::request::{BatchKey, ResponseSlot, SolveRequest};
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// A request waiting to be batched, with its completion slot and submit time
-/// (in the server clock's timeline).
+/// A request waiting to be batched, with its completion slot, submit time
+/// (in the server clock's timeline), and the projected checkpoint bytes
+/// charged against the admission memory budget (released on completion).
 pub struct Pending {
     pub req: SolveRequest,
     pub slot: Arc<ResponseSlot>,
     pub submitted: Duration,
+    pub cost: usize,
 }
 
 /// Why a batch left the former.
@@ -181,6 +184,7 @@ mod tests {
             req: SolveRequest::adaptive(dynamics, 0.0, t1, vec![1.0, 0.0], 1e-6, 1e-8),
             slot,
             submitted,
+            cost: 0,
         }
     }
 

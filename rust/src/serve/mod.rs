@@ -18,14 +18,14 @@
 //!                               │ batcher thread
 //!                               ▼
 //!                         BatchFormer  — groups by BatchKey (dynamics,
-//!                               │        solver, t0, direction, tolerance,
-//!                               │        grad flag — z0 AND t1 free per
-//!                               │        request), flushes on
+//!                               │        solver, direction, tolerance,
+//!                               │        grad flag — z0, t0 AND t1 free
+//!                               │        per request), flushes on
 //!                               │        max_batch_size OR max_queue_delay,
 //!                               ▼        whichever trips first
 //!                          work queue ──▶ worker shard (N threads)
-//!                                            │  integrate_batch_spans
-//!                                            │  (one t1 per sample;
+//!                                            │  integrate_batch_tspans
+//!                                            │  (one (t0, t1) per sample;
 //!                                            │  + aca_backward_batch)
 //!                                            ▼
 //!                               per-request ResponseHandle + metrics
@@ -33,7 +33,17 @@
 //!
 //! * [`SolveServer::submit`] returns a [`ResponseHandle`] immediately, or
 //!   [`ServeError::Overloaded`] when `queue_capacity` requests are already
-//!   in flight (admission control — the queue never grows unboundedly).
+//!   in flight (admission control — the queue never grows unboundedly) —
+//!   **or** when admitting the request would push the *projected checkpoint
+//!   bytes* of all in-flight requests past `mem_budget_bytes`. The
+//!   projection upper-bounds what a solve can pin: the state part
+//!   (`dim × (max_steps + 1) × 4`, capped by the per-sample checkpoint
+//!   budget when one is set) plus the never-thinned trajectory spine. The
+//!   budget gates *concurrency*: an idle server always admits one request
+//!   (minimum progress — worker memory is then bounded by that request)
+//!   rather than bricking under a budget below the smallest charge. A
+//!   worker can no longer be OOM'd by traffic that admission control
+//!   happily counted: memory is admitted, not just request count.
 //! * [`SolveServer::drain`] flushes partial batches and blocks until every
 //!   admitted request is answered; [`SolveServer::shutdown`] additionally
 //!   stops the threads (in-flight work is still drained, never dropped).
@@ -54,6 +64,8 @@
 //! | `NODAL_SERVE_MAX_DELAY_US` | max queue delay (µs)        | 500, 0..=10⁶   |
 //! | `NODAL_SERVE_QUEUE_CAP`    | admitted-unanswered cap     | 1024, 1..=10⁶  |
 //! | `NODAL_SERVE_WORKERS`      | worker threads              | [`crate::coordinator::pool::default_workers`], 1..=256 |
+//! | `NODAL_CKPT_BUDGET_BYTES`  | per-sample checkpoint budget (0 = dense) | [`crate::ckpt::env_budget_bytes`], 0 or 64..=2⁴⁰ |
+//! | `NODAL_SERVE_MEM_BUDGET_BYTES` | projected-checkpoint admission budget (0 = unlimited) | 0, 0 or 64..=2⁴⁰ |
 
 pub mod batcher;
 pub mod metrics;
@@ -140,6 +152,18 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Worker threads executing batches.
     pub workers: usize,
+    /// Per-sample checkpoint budget for worker solves (0 = dense storage).
+    /// Nonzero values run every solve under
+    /// [`CkptPolicy::Budgeted`](crate::ckpt::CkptPolicy) — answers are
+    /// bit-identical (segment replay), only the memory a solve can pin
+    /// changes.
+    pub ckpt_budget_bytes: usize,
+    /// Worker memory budget for admission (0 = unlimited): the sum of
+    /// projected checkpoint bytes
+    /// ([`SolveRequest::projected_ckpt_bytes`]) over
+    /// admitted-but-unanswered requests may not exceed this; beyond it
+    /// `submit` sheds load with [`ServeError::Overloaded`].
+    pub mem_budget_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -158,7 +182,8 @@ fn env_clamped(name: &str, default: usize, lo: usize, hi: usize) -> usize {
 }
 
 impl ServeConfig {
-    /// Defaults with `NODAL_SERVE_*` overrides (see module docs).
+    /// Defaults with `NODAL_SERVE_*` / `NODAL_CKPT_*` overrides (see module
+    /// docs).
     pub fn from_env() -> Self {
         ServeConfig {
             max_batch_size: env_clamped("NODAL_SERVE_MAX_BATCH", 16, 1, 1024),
@@ -171,8 +196,19 @@ impl ServeConfig {
             queue_capacity: env_clamped("NODAL_SERVE_QUEUE_CAP", 1024, 1, 1_000_000),
             // Same hard cap as the coordinator pool's NODAL_WORKERS clamp.
             workers: env_clamped("NODAL_SERVE_WORKERS", default_workers(), 1, 256),
+            ckpt_budget_bytes: crate::ckpt::env_budget_bytes(),
+            // 0 = unlimited; nonzero parsed-and-clamped like the ckpt budget.
+            mem_budget_bytes: crate::ckpt::parse_budget_env("NODAL_SERVE_MEM_BUDGET_BYTES"),
         }
     }
+}
+
+/// The admission ledger: how many requests are admitted-but-unanswered and
+/// how many projected checkpoint bytes they can pin in workers.
+#[derive(Default)]
+struct Inflight {
+    count: usize,
+    bytes: usize,
 }
 
 /// Shared server state (registry, queues, clock, metrics, lifecycle flags).
@@ -183,8 +219,9 @@ pub(crate) struct Core {
     pub(crate) metrics: ServeMetrics,
     pub(crate) submit_q: Channel<Pending>,
     pub(crate) work_q: Channel<FormedBatch>,
-    /// Admitted-but-unanswered requests; the admission-control meter.
-    inflight: Mutex<usize>,
+    /// Admitted-but-unanswered requests + their projected checkpoint bytes;
+    /// the admission-control meters.
+    inflight: Mutex<Inflight>,
     idle: Condvar,
     /// `drain()` callers currently waiting — the batcher flushes partial
     /// groups whenever this is non-zero.
@@ -193,16 +230,19 @@ pub(crate) struct Core {
 }
 
 impl Core {
-    /// Deliver a result and release the request's admission slot.
+    /// Deliver a result and release the request's admission slot (count and
+    /// projected bytes — `cost` must be the value charged at admission).
     pub(crate) fn complete(
         &self,
         slot: &ResponseSlot,
+        cost: usize,
         result: Result<SolveResponse, ServeError>,
     ) {
         slot.fulfill(result);
-        let mut n = self.inflight.lock().unwrap();
-        *n -= 1;
-        if *n == 0 {
+        let mut led = self.inflight.lock().unwrap();
+        led.count -= 1;
+        led.bytes = led.bytes.saturating_sub(cost);
+        if led.count == 0 {
             self.idle.notify_all();
         }
     }
@@ -257,6 +297,8 @@ impl SolveServerBuilder {
             max_queue_delay: self.cfg.max_queue_delay,
             queue_capacity: self.cfg.queue_capacity.max(1),
             workers: self.cfg.workers.clamp(1, 256),
+            ckpt_budget_bytes: crate::ckpt::clamp_budget(self.cfg.ckpt_budget_bytes),
+            mem_budget_bytes: crate::ckpt::clamp_budget(self.cfg.mem_budget_bytes),
         };
         let clock = self.clock.unwrap_or_else(|| Arc::new(WallClock::default()));
         let core = Arc::new(Core {
@@ -266,7 +308,7 @@ impl SolveServerBuilder {
             clock,
             registry: self.registry,
             metrics: ServeMetrics::default(),
-            inflight: Mutex::new(0),
+            inflight: Mutex::new(Inflight::default()),
             idle: Condvar::new(),
             drain_waiters: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
@@ -297,21 +339,40 @@ impl SolveServer {
     /// Submit one request. Returns immediately with a handle, or with
     /// [`ServeError::Overloaded`] / [`ServeError::ShuttingDown`] /
     /// a validation error — admission happens before any queuing.
+    ///
+    /// Admission is two-dimensional: request *count* (`queue_capacity`) and
+    /// projected checkpoint *bytes* (`mem_budget_bytes`, when nonzero). The
+    /// byte charge is [`SolveRequest::projected_ckpt_bytes`]'s upper bound
+    /// (budget-capped states + the never-thinned spine), released when the
+    /// request is answered — so a burst of long-horizon solves sheds load
+    /// instead of OOM-ing a worker that a pure count bound would have
+    /// admitted.
     pub fn submit(&self, req: SolveRequest) -> Result<ResponseHandle, ServeError> {
         if self.core.closed.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
-        self.validate(&req)?;
+        let dim = self.validate(&req)?;
+        let cost = req.projected_ckpt_bytes(dim, self.core.cfg.ckpt_budget_bytes);
         {
-            let mut n = self.core.inflight.lock().unwrap();
-            if *n >= self.core.cfg.queue_capacity {
+            let mut led = self.core.inflight.lock().unwrap();
+            let over_count = led.count >= self.core.cfg.queue_capacity;
+            // Minimum-progress rule: the byte budget gates *concurrency* —
+            // with nothing in flight a request is admitted even when its
+            // projection alone exceeds the budget (worker memory is then
+            // bounded by that one request), instead of silently bricking
+            // the server under a budget below the smallest possible charge.
+            let budget = self.core.cfg.mem_budget_bytes;
+            let over_bytes =
+                budget > 0 && led.count > 0 && led.bytes.saturating_add(cost) > budget;
+            if over_count || over_bytes {
                 self.core.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(ServeError::Overloaded);
             }
-            *n += 1;
+            led.count += 1;
+            led.bytes = led.bytes.saturating_add(cost);
         }
         let (handle, slot) = ResponseHandle::new();
-        let pending = Pending { req, slot, submitted: self.core.clock.now() };
+        let pending = Pending { req, slot, submitted: self.core.clock.now(), cost };
         match self.core.submit_q.push(pending) {
             // Count as submitted only once actually queued, so the
             // submitted == completed + failed + rejected ledger balances
@@ -323,13 +384,15 @@ impl SolveServer {
             // Closed between the flag check and the push: release the
             // admission slot and report the shutdown.
             Err(p) => {
-                self.core.complete(&p.slot, Err(ServeError::ShuttingDown));
+                self.core.complete(&p.slot, p.cost, Err(ServeError::ShuttingDown));
                 Err(ServeError::ShuttingDown)
             }
         }
     }
 
-    fn validate(&self, req: &SolveRequest) -> Result<(), ServeError> {
+    /// Validate a request against the registry; returns the dynamics' state
+    /// dimension (the admission byte-charge needs it).
+    fn validate(&self, req: &SolveRequest) -> Result<usize, ServeError> {
         let f = self
             .core
             .registry
@@ -389,7 +452,7 @@ impl SolveServer {
                 }
             }
         }
-        Ok(())
+        Ok(dim)
     }
 
     /// Flush all partial batches and block until every admitted request has
@@ -397,8 +460,8 @@ impl SolveServer {
     pub fn drain(&self) {
         self.core.drain_waiters.fetch_add(1, Ordering::SeqCst);
         self.core.submit_q.kick();
-        let n = self.core.inflight.lock().unwrap();
-        let _n = self.core.idle.wait_while(n, |n| *n > 0).unwrap();
+        let led = self.core.inflight.lock().unwrap();
+        let _led = self.core.idle.wait_while(led, |led| led.count > 0).unwrap();
         self.core.drain_waiters.fetch_sub(1, Ordering::SeqCst);
     }
 
@@ -425,7 +488,14 @@ impl SolveServer {
 
     /// Admitted-but-unanswered requests right now.
     pub fn inflight(&self) -> usize {
-        *self.core.inflight.lock().unwrap()
+        self.core.inflight.lock().unwrap().count
+    }
+
+    /// Projected checkpoint bytes currently charged against the admission
+    /// memory budget ([`SolveRequest::projected_ckpt_bytes`] summed over
+    /// admitted-unanswered requests).
+    pub fn inflight_bytes(&self) -> usize {
+        self.core.inflight.lock().unwrap().bytes
     }
 
     /// The server's configuration (after env clamping).
@@ -500,7 +570,7 @@ fn dispatch(core: &Core, batch: FormedBatch) {
         // closes only after this thread exits); fail the batch cleanly
         // rather than dropping its requests.
         for item in &b.items {
-            core.complete(&item.slot, Err(ServeError::ShuttingDown));
+            core.complete(&item.slot, item.cost, Err(ServeError::ShuttingDown));
         }
     }
 }
@@ -519,21 +589,26 @@ mod tests {
         std::env::set_var("NODAL_SERVE_MAX_DELAY_US", "250");
         std::env::set_var("NODAL_SERVE_QUEUE_CAP", "9999999");
         std::env::set_var("NODAL_SERVE_WORKERS", "3");
+        std::env::set_var("NODAL_SERVE_MEM_BUDGET_BYTES", "12");
         let cfg = ServeConfig::from_env();
         assert_eq!(cfg.max_batch_size, 1, "zero clamps to one");
         assert_eq!(cfg.max_queue_delay, Duration::from_micros(250));
         assert_eq!(cfg.queue_capacity, 1_000_000, "cap clamps high");
         assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.mem_budget_bytes, 64, "nonzero budget clamps up");
 
         std::env::set_var("NODAL_SERVE_MAX_BATCH", "not-a-number");
+        std::env::set_var("NODAL_SERVE_MEM_BUDGET_BYTES", "0");
         let cfg = ServeConfig::from_env();
         assert_eq!(cfg.max_batch_size, 16, "unparseable falls back to default");
+        assert_eq!(cfg.mem_budget_bytes, 0, "0 means unlimited");
 
         for k in [
             "NODAL_SERVE_MAX_BATCH",
             "NODAL_SERVE_MAX_DELAY_US",
             "NODAL_SERVE_QUEUE_CAP",
             "NODAL_SERVE_WORKERS",
+            "NODAL_SERVE_MEM_BUDGET_BYTES",
         ] {
             std::env::remove_var(k);
         }
@@ -542,6 +617,7 @@ mod tests {
         assert_eq!(cfg.max_queue_delay, Duration::from_micros(500));
         assert_eq!(cfg.queue_capacity, 1024);
         assert!(cfg.workers >= 1);
+        assert_eq!(cfg.mem_budget_bytes, 0);
     }
 
     #[test]
@@ -630,6 +706,8 @@ mod tests {
                 max_queue_delay: Duration::ZERO,
                 queue_capacity: 0,
                 workers: 0,
+                ckpt_budget_bytes: 0,
+                mem_budget_bytes: 0,
             })
             .start();
         assert_eq!(server.config().workers, 1);
@@ -639,6 +717,103 @@ mod tests {
             .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
             .unwrap();
         assert!(h.wait().is_ok(), "clamped server must still serve");
+    }
+
+    /// Admission accounts projected checkpoint *bytes*, not just request
+    /// count: a budget sized for exactly one in-flight request sheds the
+    /// second with `Overloaded`, and admits again once the first completes.
+    #[test]
+    fn mem_budget_sheds_load_by_projected_bytes() {
+        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1);
+        // Fixed-step projection for dim 2: exact ⌈0.5/0.1⌉+1 = 6 steps of
+        // states + spine (a few hundred bytes), not the adaptive
+        // max_steps bound.
+        let one = req().projected_ckpt_bytes(2, 0);
+        let server = SolveServer::builder()
+            .register("vdp", VanDerPol::new(0.5))
+            .config(ServeConfig {
+                max_batch_size: 4,
+                // Far-future deadline: requests sit in the former until the
+                // budget test submits both, so the charge overlap is
+                // deterministic.
+                max_queue_delay: Duration::from_secs(3600),
+                queue_capacity: 64,
+                workers: 1,
+                ckpt_budget_bytes: 0,
+                mem_budget_bytes: one, // exactly one request's projection
+            })
+            .start();
+        let h1 = server.submit(req()).unwrap();
+        assert_eq!(server.inflight_bytes(), one, "first request charged its projection");
+        let err = server.submit(req()).unwrap_err();
+        assert_eq!(err, ServeError::Overloaded, "budget must shed the second request");
+        assert_eq!(server.metrics().rejected, 1);
+        server.drain();
+        assert!(h1.wait().is_ok());
+        assert_eq!(server.inflight_bytes(), 0, "completion releases the byte charge");
+        let h3 = server.submit(req()).unwrap();
+        server.drain();
+        assert!(h3.wait().is_ok(), "admission must recover after the charge releases");
+    }
+
+    /// With a per-sample checkpoint budget configured, the admission charge
+    /// of a forward-only adaptive request caps its state part: a memory
+    /// budget sized for three capped charges admits exactly three
+    /// concurrent requests and sheds the fourth.
+    #[test]
+    fn ckpt_budget_caps_admission_charge() {
+        let req = || SolveRequest::adaptive("vdp", 0.0, 0.5, vec![1.0, 0.0], 1e-6, 1e-8);
+        let capped = req().projected_ckpt_bytes(2, 4096);
+        let uncapped = req().projected_ckpt_bytes(2, 0);
+        assert!(capped < uncapped, "the ckpt budget must shrink the admission charge");
+        let server = SolveServer::builder()
+            .register("vdp", VanDerPol::new(0.5))
+            .config(ServeConfig {
+                max_batch_size: 8,
+                // Far-future deadline: admitted requests stay in flight
+                // until drain, so the charge overlap is deterministic.
+                max_queue_delay: Duration::from_secs(3600),
+                queue_capacity: 64,
+                workers: 1,
+                ckpt_budget_bytes: 4096,
+                mem_budget_bytes: 3 * capped,
+            })
+            .start();
+        let hs: Vec<_> = (0..3).map(|_| server.submit(req()).unwrap()).collect();
+        assert_eq!(server.inflight_bytes(), 3 * capped);
+        assert_eq!(
+            server.submit(req()).unwrap_err(),
+            ServeError::Overloaded,
+            "budget sized for three capped charges must shed the fourth"
+        );
+        server.drain();
+        for h in hs {
+            assert!(h.wait().is_ok(), "budget-capped requests must be admitted and served");
+        }
+    }
+
+    /// Minimum-progress rule: a memory budget below even one request's
+    /// projection must not brick an idle server — the first request admits
+    /// (bounding worker memory to itself); the second sheds.
+    #[test]
+    fn mem_budget_below_floor_still_admits_when_idle() {
+        let server = SolveServer::builder()
+            .register("vdp", VanDerPol::new(0.5))
+            .config(ServeConfig {
+                max_batch_size: 8,
+                max_queue_delay: Duration::from_secs(3600),
+                queue_capacity: 64,
+                workers: 1,
+                ckpt_budget_bytes: 0,
+                mem_budget_bytes: 64, // below any request's charge
+            })
+            .start();
+        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1);
+        let h1 = server.submit(req()).expect("idle server must admit one request");
+        assert_eq!(server.submit(req()).unwrap_err(), ServeError::Overloaded);
+        server.drain();
+        assert!(h1.wait().is_ok());
+        assert!(server.submit(req()).is_ok(), "admission recovers once idle again");
     }
 
     #[test]

@@ -4,12 +4,13 @@
 //! t-span, a solver tableau, and a tolerance; optionally it carries a
 //! terminal cotangent `dL/dz(T)` to request the batched ACA backward pass.
 //! Requests that agree on everything except the initial state **and the
-//! endpoint `t1`** (same [`BatchKey`]) can share one
-//! [`crate::ode::integrate_batch_spans`] call — the engine's per-sample
-//! adaptive step control and per-sample spans guarantee the co-batched
-//! results are the ones each request would have gotten alone. The key still
-//! pins `t0` and the integration direction (equal starts, same-sign spans);
-//! only where each sample *stops* is free per request.
+//! span `[t0, t1]`** (same [`BatchKey`]) can share one
+//! [`crate::ode::integrate_batch_tspans`] call — the engine's per-sample
+//! adaptive step control and fully per-sample spans guarantee the
+//! co-batched results are the ones each request would have gotten alone.
+//! The key pins only the integration direction (same-sign spans, a
+//! scheduling-locality choice); where each sample *starts* and *stops* is
+//! free per request.
 
 use crate::grad::GradResult;
 use crate::ode::integrate::IntegrateOpts;
@@ -87,8 +88,9 @@ impl SolveRequest {
     }
 
     /// Coalescing key: requests with equal keys run in one batched solve.
-    /// `t1` is deliberately **not** part of the key — the batched engine
-    /// stops each sample at its own endpoint, so mixed-span requests
+    /// Neither `t0` nor `t1` is part of the key — the batched engine
+    /// integrates each sample over its own `[t0, t1]`
+    /// ([`crate::ode::integrate_batch_tspans`]), so mixed-span requests
     /// coalesce freely (the direction still is: a forward and a backward
     /// solve never share a batch).
     pub fn batch_key(&self) -> BatchKey {
@@ -99,7 +101,6 @@ impl SolveRequest {
         BatchKey {
             dynamics: self.dynamics.clone(),
             tab: self.tab.name,
-            t0: self.t0.to_bits(),
             dir: if self.t1 >= self.t0 { 1 } else { -1 },
             tol_kind,
             tol_a,
@@ -107,21 +108,64 @@ impl SolveRequest {
             wants_grad: self.grad.is_some(),
         }
     }
+
+    /// Upper bound on the checkpoint bytes this request can pin in a
+    /// worker, matching [`Trajectory::checkpoint_bytes`]'s accounting: the
+    /// state part (one f32 state per accepted step, capped by the
+    /// per-sample checkpoint budget when one is configured) **plus** the
+    /// trajectory spine (`ts`/`hs`/`errs` f64s — kept dense under every
+    /// policy, so it is never capped). The admission controller sums this
+    /// over admitted-unanswered requests.
+    ///
+    /// The step bound is exact for fixed-step requests (`⌈span/h⌉`, plus
+    /// one for the clamped final step) and `max_steps` for adaptive ones.
+    /// Gradient requests are **not** budget-capped: their backward pass
+    /// additionally buffers one replay segment (up to the thinned-away
+    /// states of a segment), so the dense bound is the honest charge.
+    ///
+    /// [`Trajectory::checkpoint_bytes`]: crate::ode::Trajectory::checkpoint_bytes
+    pub fn projected_ckpt_bytes(&self, dim: usize, ckpt_budget_bytes: usize) -> usize {
+        let max_steps = self.opts().max_steps;
+        let steps = match self.tol {
+            // Float→int casts saturate, so a degenerate span/h stays sane.
+            Tolerance::Fixed { h } => (((self.t1 - self.t0).abs() / h).ceil() as usize)
+                .saturating_add(1)
+                .min(max_steps),
+            Tolerance::Adaptive { .. } => max_steps,
+        };
+        let states = steps
+            .saturating_add(1)
+            .saturating_mul(dim)
+            .saturating_mul(std::mem::size_of::<f32>());
+        let states = if ckpt_budget_bytes > 0 && self.grad.is_none() {
+            // A Budgeted store never holds fewer than 2 anchors (the
+            // initial state and the tail), so the effective cap has that
+            // floor — charging below it would under-count what the worker
+            // actually pins.
+            states.min(ckpt_budget_bytes.max(2 * dim * std::mem::size_of::<f32>()))
+        } else {
+            states
+        };
+        // Spine: (steps + 1) ts + steps hs + steps errs, all f64 (serve
+        // requests never record trials).
+        let spine =
+            steps.saturating_mul(3).saturating_add(1).saturating_mul(std::mem::size_of::<f64>());
+        states.saturating_add(spine)
+    }
 }
 
-/// What makes two requests co-batchable: same dynamics, solver, start time
-/// `t0`, integration direction and tolerance bits, and the same gradient
-/// flag (a batch either runs the backward pass for all its samples or for
-/// none). The endpoint `t1` is free: the engine integrates each co-batched
-/// sample to its own `t1` ([`crate::ode::integrate_batch_spans`]), retiring
-/// it from the shared stage sweeps when it lands there.
+/// What makes two requests co-batchable: same dynamics, solver, integration
+/// direction and tolerance bits, and the same gradient flag (a batch either
+/// runs the backward pass for all its samples or for none). The span is
+/// free per request: the engine integrates each co-batched sample over its
+/// own `[t0, t1]` ([`crate::ode::integrate_batch_tspans`]), entering the
+/// shared stage sweeps at its own start and retiring at its own endpoint.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub dynamics: String,
     pub tab: &'static str,
-    pub t0: u64,
     /// Sign of `t1 - t0`: kept in the key so forward and backward solves
-    /// group separately even though `t1` itself is not keyed.
+    /// group separately even though the span itself is not keyed.
     pub dir: i8,
     pub tol_kind: u8,
     pub tol_a: u64,
@@ -272,24 +316,25 @@ mod tests {
         assert_eq!(a.batch_key(), b.batch_key());
     }
 
-    /// The endpoint is the other free axis: requests that differ only in
-    /// `t1` (same start, same direction) coalesce — the engine stops each
-    /// sample at its own endpoint.
+    /// The span is the other free axis: requests that differ only in `t0`
+    /// and/or `t1` (same direction) coalesce — the engine integrates each
+    /// sample over its own span.
     #[test]
-    fn mixed_endpoints_share_a_key() {
+    fn mixed_spans_share_a_key() {
         let a = req();
         let mut b = req();
         b.t1 = 6.0;
         b.z0 = vec![-1.0, 0.5];
         assert_eq!(a.batch_key(), b.batch_key(), "t1 must not split batches");
+        let mut c = req();
+        c.t0 = 1.0;
+        c.t1 = 3.5;
+        assert_eq!(a.batch_key(), c.batch_key(), "t0 must not split batches");
     }
 
     #[test]
     fn key_separates_incompatible_requests() {
         let base = req();
-        let mut other = req();
-        other.t0 = 1.0;
-        assert_ne!(base.batch_key(), other.batch_key(), "start time");
         let mut other = req();
         other.t1 = -5.0; // backward span from the same t0
         assert_ne!(base.batch_key(), other.batch_key(), "direction");
@@ -304,6 +349,34 @@ mod tests {
         let mut other = req();
         other.dynamics = "linear".into();
         assert_ne!(base.batch_key(), other.batch_key(), "dynamics");
+    }
+
+    /// Projected checkpoint footprint: per-step state bytes (capped by the
+    /// per-sample checkpoint budget for forward-only requests) plus the
+    /// dense spine — the spine is never thinned, so the cap must not erase
+    /// it; fixed-step requests project their exact step count instead of
+    /// the `max_steps` upper bound; gradient requests stay uncapped (their
+    /// replay cache can transiently reach the dense footprint).
+    #[test]
+    fn projected_bytes_upper_bound_and_budget_cap() {
+        let r = req(); // adaptive → default max_steps = 100_000 bound
+        let spine = (3 * 100_000 + 1) * 8;
+        assert_eq!(r.projected_ckpt_bytes(2, 0), 100_001 * 2 * 4 + spine);
+        assert_eq!(
+            r.projected_ckpt_bytes(2, 4096),
+            4096 + spine,
+            "budget caps the state part only — the spine stays dense"
+        );
+        assert_eq!(r.projected_ckpt_bytes(2, usize::MAX), 100_001 * 2 * 4 + spine);
+
+        // Gradient request: the cap does not apply.
+        let g = req().with_grad(vec![1.0, 0.0]);
+        assert_eq!(g.projected_ckpt_bytes(2, 4096), 100_001 * 2 * 4 + spine);
+
+        // Fixed step over [0, 5] with h = 0.5: exactly 10 steps (+1 for the
+        // final-step clamp margin) instead of the max_steps bound.
+        let f = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.5);
+        assert_eq!(f.projected_ckpt_bytes(2, 0), 12 * 2 * 4 + (3 * 11 + 1) * 8);
     }
 
     #[test]

@@ -1,18 +1,23 @@
 //! Batch execution: a shard of worker threads pulls [`FormedBatch`]es off
 //! the work queue, runs them through the batched engine
-//! ([`crate::ode::integrate_batch_spans`] +
+//! ([`crate::ode::integrate_batch_tspans`] +
 //! [`crate::grad::aca_backward_batch`]), and scatters per-sample results
-//! back to each request's response slot. Co-batched requests share `t0`,
-//! solver and tolerance (the [`super::request::BatchKey`]) but each keeps
-//! its **own endpoint**: the worker hands the engine one `t1` per sample
-//! and every sample retires from the shared stage sweeps at its own `t1`.
-//! Gradient batches share stage sweeps in **both** directions: the forward
-//! solve amortizes `eval_batch` across co-batched requests and the backward
-//! pass runs the shared-stage reverse sweep (`step_vjp_batch` — one
-//! `eval_batch`/`vjp_batch` dispatch per stage per reverse round), so
+//! back to each request's response slot. Co-batched requests share solver
+//! and tolerance (the [`super::request::BatchKey`]) but each keeps its
+//! **own span**: the worker hands the engine one `(t0, t1)` per sample and
+//! every sample enters/retires from the shared stage sweeps at its own
+//! endpoints. Gradient batches share stage sweeps in **both** directions:
+//! the forward solve amortizes `eval_batch` across co-batched requests and
+//! the backward pass runs the shared-stage reverse sweep (`step_vjp_batch`
+//! — one `eval_batch`/`vjp_batch` dispatch per stage per reverse round), so
 //! co-batching gradient traffic costs per-stage dispatch, not per-request.
 //!
-//! Poison isolation: `integrate_batch_spans` fails the whole batch when any
+//! Memory: solves run under the server's per-sample checkpoint budget
+//! (`ServeConfig::ckpt_budget_bytes` → [`crate::ckpt::CkptPolicy`]) — a
+//! thinned store changes nothing about any answer (bit-exact segment
+//! replay), only how many bytes a long solve can pin.
+//!
+//! Poison isolation: `integrate_batch_tspans` fails the whole batch when any
 //! one sample blows up (stiffness, step underflow). A serving layer must not let
 //! one bad request fail its co-batched neighbors, so on batch failure the
 //! worker falls back to per-sample scalar solves — bit-identical to the
@@ -22,9 +27,10 @@
 use super::batcher::FormedBatch;
 use super::request::{RequestStats, ServeError, SolveResponse};
 use super::Core;
+use crate::ckpt::CkptPolicy;
 use crate::coordinator::pool::panic_msg;
 use crate::grad::{aca_backward, aca_backward_batch, GradResult};
-use crate::ode::{integrate, integrate_batch_spans};
+use crate::ode::{integrate, integrate_batch_tspans};
 
 /// Worker thread body: serve batches until the work queue closes and drains.
 ///
@@ -47,7 +53,7 @@ pub(crate) fn worker_loop(core: &Core) {
                 // requests the panicking pass already delivered.
                 if !item.slot.is_fulfilled() {
                     core.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    core.complete(&item.slot, Err(err.clone()));
+                    core.complete(&item.slot, item.cost, Err(err.clone()));
                 }
             }
         }
@@ -66,21 +72,25 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
         // submit() validates ids, so this only guards registry mutation bugs.
         let err = ServeError::UnknownDynamics(batch.key.dynamics.clone());
         for item in &batch.items {
-            core.complete(&item.slot, Err(err.clone()));
+            core.complete(&item.slot, item.cost, Err(err.clone()));
         }
         return;
     };
     let dim = f.dim();
     let first = &batch.items[0].req;
-    // t0/tab/opts are key-equal across the batch; t1 is per-request.
-    let (t0, tab) = (first.t0, first.tab);
-    let opts = first.opts();
+    // tab/opts are key-equal across the batch; the span is per-request. The
+    // worker's solves run under the server's checkpoint budget.
+    let tab = first.tab;
+    let mut opts = first.opts();
+    opts.ckpt = CkptPolicy::from_budget(core.cfg.ckpt_budget_bytes);
     let wants_grad = batch.key.wants_grad;
 
     let mut z0 = Vec::with_capacity(n * dim);
+    let mut t0s = Vec::with_capacity(n);
     let mut t1s = Vec::with_capacity(n);
     for item in &batch.items {
         z0.extend_from_slice(&item.req.z0);
+        t0s.push(item.req.t0);
         t1s.push(item.req.t1);
     }
 
@@ -90,7 +100,7 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     // an integration error does.
     let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<Vec<SampleOutcome>> {
-            let bt = integrate_batch_spans(&*f, t0, &t1s, &z0, tab, &opts)?;
+            let bt = integrate_batch_tspans(&*f, &t0s, &t1s, &z0, tab, &opts)?;
             let grads = wants_grad.then(|| {
                 let mut lam = Vec::with_capacity(n * dim);
                 for item in &batch.items {
@@ -128,13 +138,13 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
             .map(|item| {
                 let one = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || -> SampleOutcome {
-                        match integrate(&*f, t0, item.req.t1, &item.req.z0, tab, &opts) {
+                        match integrate(&*f, item.req.t0, item.req.t1, &item.req.z0, tab, &opts) {
                             Ok(traj) => {
                                 let grad = wants_grad.then(|| {
                                     aca_backward(&*f, tab, &traj, item.req.grad.as_ref().unwrap())
                                 });
                                 Ok((
-                                    traj.last().to_vec(),
+                                    traj.last().expect("non-empty trajectory").to_vec(),
                                     grad,
                                     RequestStats {
                                         steps: traj.len(),
@@ -166,11 +176,11 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                 stats.queue_wait = queue_wait;
                 stats.service = service;
                 core.metrics.record_request(queue_wait, service, stats.nfe);
-                core.complete(&item.slot, Ok(SolveResponse { z_t1, grad, stats }));
+                core.complete(&item.slot, item.cost, Ok(SolveResponse { z_t1, grad, stats }));
             }
             Err(e) => {
                 core.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                core.complete(&item.slot, Err(e));
+                core.complete(&item.slot, item.cost, Err(e));
             }
         }
     }

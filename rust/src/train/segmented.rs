@@ -61,7 +61,7 @@ pub fn segmented_loss_grad(
 
     for k in 0..n_obs {
         let traj = integrate(model, times[k], times[k + 1], &z, tab, opts)?;
-        z = traj.last().to_vec();
+        z = traj.last().expect("non-empty trajectory").to_vec();
         meter.nfe_forward += traj.nfe;
         meter.n_steps += traj.len();
         meter.n_rejected += traj.n_rejected;
@@ -95,6 +95,7 @@ pub fn segmented_loss_grad(
             *d += s;
         }
         meter.nfe_backward += g.meter.nfe_backward;
+        meter.nfe_replay += g.meter.nfe_replay;
         meter.vjp_calls += g.meter.vjp_calls;
         meter.graph_depth += g.meter.graph_depth;
         meter.n_reverse_steps += g.meter.n_reverse_steps;
@@ -117,7 +118,7 @@ pub fn segmented_eval(
     let mut preds = Vec::new();
     for k in 0..targets.len() {
         let traj = integrate(model, times[k], times[k + 1], &z, tab, opts)?;
-        z = traj.last().to_vec();
+        z = traj.last().expect("non-empty trajectory").to_vec();
         let (l, pred) = model.decode_loss(&z, &targets[k])?;
         loss_sum += l;
         preds.push(pred);

@@ -42,6 +42,13 @@ pub struct TrainConfig {
     /// single update (standard gradient accumulation; scale `lr`
     /// accordingly). `1` keeps the scalar per-batch path bit-for-bit.
     pub grad_accum: usize,
+    /// Per-sample checkpoint budget in bytes (0 = dense storage, today's
+    /// behavior). Nonzero runs every solve under
+    /// [`crate::ckpt::CkptPolicy::Budgeted`]: gradients stay bit-identical
+    /// (segment replay), but a long-horizon solve can no longer grow its
+    /// checkpoint memory without bound. Default comes from
+    /// `NODAL_CKPT_BUDGET_BYTES` ([`crate::ckpt::env_budget_bytes`]).
+    pub ckpt_budget_bytes: usize,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -62,6 +69,7 @@ impl Default for TrainConfig {
             max_batches: 0,
             clip: 5.0,
             grad_accum: 1,
+            ckpt_budget_bytes: crate::ckpt::env_budget_bytes(),
             verbose: false,
         }
     }
@@ -99,6 +107,10 @@ impl Trainer {
             atol: self.cfg.atol,
             fixed_h: self.cfg.fixed_h,
             record_trials: self.cfg.method == Method::Naive,
+            // Hand-set budgets go through the same clamp as env/serve ones.
+            ckpt: crate::ckpt::CkptPolicy::from_budget(crate::ckpt::clamp_budget(
+                self.cfg.ckpt_budget_bytes,
+            )),
             ..Default::default()
         }
     }
@@ -115,7 +127,8 @@ impl Trainer {
         let z0 = model.encode(x)?;
         let traj = integrate(model, 0.0, self.cfg.t1, &z0, tab, &opts)?;
         let mut dtheta = vec![0.0f32; model.n_params()];
-        let (lam, loss) = model.decode_loss_vjp(traj.last(), y, &mut dtheta)?;
+        let (lam, loss) =
+            model.decode_loss_vjp(traj.last().expect("non-empty trajectory"), y, &mut dtheta)?;
         let g = grad::backward(model, tab, &traj, &lam, self.cfg.method, &opts)?;
         for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {
             *d += s;
@@ -173,6 +186,7 @@ impl Trainer {
             model.encode_vjp_accum(x, &g.dl_dz0, &mut dtheta)?;
             meter.nfe_forward += g.meter.nfe_forward;
             meter.nfe_backward += g.meter.nfe_backward;
+            meter.nfe_replay += g.meter.nfe_replay;
             meter.vjp_calls += g.meter.vjp_calls;
             meter.checkpoint_bytes += g.meter.checkpoint_bytes;
             meter.graph_depth = meter.graph_depth.max(g.meter.graph_depth);

@@ -17,7 +17,7 @@ fn toy_setup(
         ..IntegrateOpts::with_tol(tol, tol * 1e-2)
     };
     let traj = integrate(&f, 0.0, t_end, &[1.0], tableau::dopri5(), &opts).unwrap();
-    let zt = traj.last()[0];
+    let zt = traj.last().unwrap()[0];
     let lam = vec![2.0 * zt];
     (f, traj, lam, opts)
 }
@@ -112,7 +112,7 @@ fn linear_flow_gradient_is_transpose_of_flow() {
     let lam: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
 
     let traj_v = integrate(&f, 0.0, 1.0, &v, tab, &opts).unwrap();
-    let lhs = nodal::tensor::dot(&lam, traj_v.last());
+    let lhs = nodal::tensor::dot(&lam, traj_v.last().unwrap());
 
     let traj = integrate(&f, 0.0, 1.0, &z0, tab, &opts).unwrap();
     let g = aca_backward(&f, tab, &traj, &lam);
@@ -135,7 +135,7 @@ fn three_body_mass_gradient_descends() {
         let traj = integrate(f, ds.times[0], ds.times[10], &ds.states[0], tab, &opts).unwrap();
         let target = ds.positions(10);
         (0..9)
-            .map(|j| ((traj.last()[j] - target[j]) as f64).powi(2))
+            .map(|j| ((traj.last().unwrap()[j] - target[j]) as f64).powi(2))
             .sum::<f64>()
             / 9.0
     };
@@ -144,7 +144,7 @@ fn three_body_mass_gradient_descends() {
     let target = ds.positions(10);
     let mut lam = vec![0.0f32; 18];
     for j in 0..9 {
-        lam[j] = 2.0 * (traj.last()[j] - target[j]) / 9.0;
+        lam[j] = 2.0 * (traj.last().unwrap()[j] - target[j]) / 9.0;
     }
     let g = aca_backward(&f, tab, &traj, &lam);
     let l0 = loss_of(&f);

@@ -65,7 +65,7 @@ fn prop_grid_monotone_and_exact_endpoints() {
         for w in traj.ts.windows(2) {
             assert!((w[1] - w[0]) * dir > 0.0, "case {case}: non-monotone {w:?}");
         }
-        assert_eq!(traj.zs.len(), traj.ts.len(), "case {case}");
+        assert_eq!(traj.store.len(), traj.ts.len(), "case {case}");
         assert_eq!(traj.errs.len(), traj.len(), "case {case}");
     }
 }
@@ -90,7 +90,7 @@ fn prop_checkpoint_replay_is_bit_exact() {
                 tab,
                 traj.ts[i],
                 traj.h(i),
-                &traj.zs[i],
+                traj.z(i).unwrap(),
                 None,
                 opts.atol,
                 opts.rtol,
@@ -99,7 +99,8 @@ fn prop_checkpoint_replay_is_bit_exact() {
                 &mut scratch,
             );
             assert_eq!(
-                z_next, traj.zs[i + 1],
+                z_next,
+                traj.z(i + 1).unwrap(),
                 "case {case} ({}), step {i}: replay diverged",
                 tab.name
             );
@@ -200,7 +201,7 @@ fn prop_convergence_order() {
         let exact = (-2.0f64).exp();
         let err_at = |h: f64| -> f64 {
             let traj = integrate(&f, 0.0, 2.0, &[1.0], tab, &IntegrateOpts::fixed(h)).unwrap();
-            (traj.last()[0] as f64 - exact).abs().max(1e-12)
+            (traj.last().unwrap()[0] as f64 - exact).abs().max(1e-12)
         };
         let (e1, e2) = (err_at(0.1), err_at(0.05));
         let rate = (e1 / e2).log2();
@@ -333,10 +334,10 @@ fn prop_batch_solves_match_scalar_all_dynamics() {
                 if fixed {
                     assert_eq!(bt.tracks[i].ts, traj.ts, "{ctx}: grid");
                     for k in 0..=traj.len() {
-                        assert_eq!(bt.z(i, k), &traj.zs[k][..], "{ctx}: checkpoint {k}");
+                        assert_eq!(bt.z(i, k), traj.z(k).unwrap(), "{ctx}: checkpoint {k}");
                     }
                 } else {
-                    for (a, e) in bt.last(i).iter().zip(traj.last()) {
+                    for (a, e) in bt.last(i).iter().zip(traj.last().unwrap()) {
                         assert!(rel_close(*a, *e), "{ctx}: endpoint {a} vs {e}");
                     }
                 }
@@ -450,7 +451,7 @@ fn prop_mixed_span_batch_matches_scalar_all_dynamics() {
                 let ctx = format!("{name} case {case} B={b} sample {i} t1={t1}");
                 assert_eq!(bt.tracks[i].ts, traj.ts, "{ctx}: grid");
                 assert_eq!(bt.tracks[i].hs, traj.hs, "{ctx}: step sizes");
-                assert_eq!(bt.last(i), traj.last(), "{ctx}: forward final");
+                assert_eq!(bt.last(i), traj.last().unwrap(), "{ctx}: forward final");
                 assert_eq!(*bt.tracks[i].ts.last().unwrap(), t1, "{ctx}: lands on its t1");
                 assert_eq!(bt.tracks[i].nfe, traj.nfe, "{ctx}: nfe");
                 assert_eq!(bt.tracks[i].n_rejected, traj.n_rejected, "{ctx}: rejected");
@@ -472,6 +473,98 @@ fn prop_mixed_span_batch_matches_scalar_all_dynamics() {
         }
     }
     assert!(saw_mixed_spans, "sweep never drew two distinct spans in one batch");
+}
+
+/// Property: a memory-budgeted checkpoint store changes *where* states
+/// live, never a result bit. For all four analytic dynamics × B ∈ {1, 3, 8}
+/// × fixed/adaptive × policies {dense, every-4th, ~25%-of-dense byte
+/// budget}: grids, step sizes, final states, `dl_dz0`/`dl_dtheta` and every
+/// classic meter are **bit-equal** to the dense store (batched and scalar),
+/// thinned stores actually replay (`nfe_replay > 0`) and hold strictly
+/// fewer checkpoint bytes, and the budgeted store's peak state bytes never
+/// exceed the budget **mid-solve** (up to the documented 2-anchor floor —
+/// the initial state and the tail always fit).
+#[test]
+fn prop_budgeted_ckpt_grads_bit_equal_dense() {
+    use nodal::ckpt::CkptPolicy;
+    let mut rng = Pcg64::seed(1414);
+    let mut saw_replay = false;
+    for (name, f) in all_dynamics() {
+        let d = f.dim();
+        for case in 0..6 {
+            let fixed = case % 2 == 0;
+            let b = [1usize, 3, 8][case % 3];
+            let tab = if fixed { tableau::rk4() } else { tableau::dopri5() };
+            let t1 = rng.range(0.3, 0.8);
+            let z0: Vec<f32> = (0..b * d).map(|_| rng.range(-1.2, 1.2) as f32).collect();
+            let base = if fixed {
+                IntegrateOpts::fixed(rng.range(0.005, 0.02))
+            } else {
+                IntegrateOpts::with_tol(1e-6, 1e-8)
+            };
+            let dense = integrate_batch(&*f, 0.0, t1, &z0, tab, &base).unwrap();
+            let lam: Vec<f32> = (0..b * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let gd = aca_backward_batch(&*f, tab, &dense, &lam);
+
+            // Budget: 25% of the smallest sample's dense state footprint.
+            let min_states = (0..b).map(|i| dense.steps(i) + 1).min().unwrap();
+            let budget = min_states * d * 4 / 4;
+            let floor = 2 * d * 4; // the 2-anchor clamp (z0 + tail)
+            for policy in [CkptPolicy::Dense, CkptPolicy::EveryK(4), CkptPolicy::Budgeted(budget)]
+            {
+                let thinning = policy != CkptPolicy::Dense;
+                let opts = IntegrateOpts { ckpt: policy, ..base.clone() };
+                let bt = integrate_batch(&*f, 0.0, t1, &z0, tab, &opts).unwrap();
+                let gs = aca_backward_batch(&*f, tab, &bt, &lam);
+                // Scalar path under the same policy, pinned via sample 0.
+                let straj = integrate(&*f, 0.0, t1, &z0[..d], tab, &opts).unwrap();
+                let gsc = aca_backward(&*f, tab, &straj, &lam[..d]);
+                let ctx0 = format!("{name} case {case} B={b} {policy:?}");
+                assert_eq!(gsc.dl_dz0, gd[0].dl_dz0, "{ctx0}: scalar dl_dz0");
+                assert_eq!(gsc.dl_dtheta, gd[0].dl_dtheta, "{ctx0}: scalar dl_dtheta");
+                for i in 0..b {
+                    let ctx = format!("{ctx0} sample {i}");
+                    assert_eq!(bt.tracks[i].ts, dense.tracks[i].ts, "{ctx}: grid");
+                    assert_eq!(bt.tracks[i].hs, dense.tracks[i].hs, "{ctx}: step sizes");
+                    assert_eq!(bt.last(i), dense.last(i), "{ctx}: final state");
+                    assert_eq!(bt.tracks[i].nfe, dense.tracks[i].nfe, "{ctx}: nfe");
+                    assert_eq!(gs[i].dl_dz0, gd[i].dl_dz0, "{ctx}: dl_dz0");
+                    assert_eq!(gs[i].dl_dtheta, gd[i].dl_dtheta, "{ctx}: dl_dtheta");
+                    assert_eq!(gs[i].meter.nfe_forward, gd[i].meter.nfe_forward, "{ctx}");
+                    assert_eq!(gs[i].meter.nfe_backward, gd[i].meter.nfe_backward, "{ctx}");
+                    assert_eq!(gs[i].meter.vjp_calls, gd[i].meter.vjp_calls, "{ctx}");
+                    assert_eq!(gs[i].meter.graph_depth, gd[i].meter.graph_depth, "{ctx}");
+                    assert_eq!(gs[i].meter.n_steps, gd[i].meter.n_steps, "{ctx}");
+                    assert_eq!(gs[i].meter.n_rejected, gd[i].meter.n_rejected, "{ctx}");
+                    if thinning {
+                        assert!(
+                            gs[i].meter.checkpoint_bytes <= gd[i].meter.checkpoint_bytes,
+                            "{ctx}: thinned store grew"
+                        );
+                        if bt.steps(i) >= 8 {
+                            assert!(gs[i].meter.nfe_replay > 0, "{ctx}: no replay happened");
+                            saw_replay = true;
+                        }
+                    } else {
+                        assert_eq!(
+                            gs[i].meter.checkpoint_bytes,
+                            gd[i].meter.checkpoint_bytes,
+                            "{ctx}: dense bytes"
+                        );
+                        assert_eq!(gs[i].meter.nfe_replay, 0, "{ctx}: dense must not replay");
+                    }
+                    if policy == CkptPolicy::Budgeted(budget) {
+                        assert!(
+                            bt.peak_state_bytes(i) <= budget.max(floor),
+                            "{ctx}: peak {} bytes over budget {budget} (floor {floor})",
+                            bt.peak_state_bytes(i)
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(saw_replay, "sweep never thinned enough to exercise segment replay");
 }
 
 /// Property: `integrate_batch` + `aca_backward_batch` reproduce per-sample
@@ -516,11 +609,11 @@ fn prop_batch_matches_per_sample_solves() {
                     assert_eq!(bt.tracks[i].ts, traj.ts, "{ctx}: grid");
                     assert_eq!(bt.tracks[i].hs, traj.hs, "{ctx}: step sizes");
                     for k in 0..=traj.len() {
-                        assert_eq!(bt.z(i, k), &traj.zs[k][..], "{ctx}: checkpoint {k}");
+                        assert_eq!(bt.z(i, k), traj.z(k).unwrap(), "{ctx}: checkpoint {k}");
                     }
                     assert_eq!(gb[i].dl_dz0, ga.dl_dz0, "{ctx}: gradient");
                 } else {
-                    for (a, b) in bt.last(i).iter().zip(traj.last()) {
+                    for (a, b) in bt.last(i).iter().zip(traj.last().unwrap()) {
                         assert!(rel_close(*a, *b), "{ctx}: endpoint {a} vs {b}");
                     }
                     for (a, b) in gb[i].dl_dz0.iter().zip(&ga.dl_dz0) {

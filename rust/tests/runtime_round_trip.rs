@@ -120,7 +120,7 @@ fn spiral_full_training_step_all_methods_reduce_loss() {
             let traj = integrate(&model, 0.0, 1.0, &z0, tab, &opts).unwrap();
             let mut dtheta = vec![0.0f32; model.n_params()];
             let (lam, loss) = model
-                .decode_loss_vjp(traj.last(), &target, &mut dtheta)
+                .decode_loss_vjp(traj.last().unwrap(), &target, &mut dtheta)
                 .unwrap();
             let g = grad::backward(&model, tab, &traj, &lam, method, &opts).unwrap();
             for (d, s) in dtheta.iter_mut().zip(&g.dl_dtheta) {

@@ -66,6 +66,8 @@ fn test_config(max_batch: usize, cap: usize, workers: usize) -> ServeConfig {
         max_queue_delay: Duration::from_secs(3600),
         queue_capacity: cap,
         workers,
+        ckpt_budget_bytes: 0,
+        mem_budget_bytes: 0,
     }
 }
 
@@ -114,7 +116,7 @@ fn served_results_match_direct_solves() {
     for (i, (h, z0)) in fixed_handles.into_iter().zip(&fixed_z0).enumerate() {
         let resp = h.wait().unwrap();
         let direct = integrate(&vdp, 0.0, 1.5, z0, tableau::rk4(), &fixed_opts).unwrap();
-        assert_eq!(resp.z_t1, direct.last(), "sample {i}: served != scalar");
+        assert_eq!(resp.z_t1, direct.last().unwrap(), "sample {i}: served != scalar");
         assert_eq!(resp.z_t1, bt.last(i), "sample {i}: served != integrate_batch");
         assert_eq!(resp.stats.nfe, direct.nfe, "sample {i}: nfe accounting");
         assert_eq!(resp.stats.steps, direct.len());
@@ -127,7 +129,7 @@ fn served_results_match_direct_solves() {
     for (i, (h, z0)) in adaptive_handles.into_iter().zip(&adaptive_z0).enumerate() {
         let resp = h.wait().unwrap();
         let direct = integrate(&conv, 0.0, 2.0, z0, tableau::dopri5(), &ad_opts).unwrap();
-        for (a, b) in resp.z_t1.iter().zip(direct.last()) {
+        for (a, b) in resp.z_t1.iter().zip(direct.last().unwrap()) {
             assert!(
                 (a - b).abs() as f64 <= 1e-6 * (b.abs() as f64).max(1.0),
                 "adaptive sample {i}: {a} vs {b}"
@@ -387,7 +389,7 @@ fn mixed_span_forward_batch_runs_once_and_matches_direct() {
     for ((h, &t1), z0) in handles.into_iter().zip(&t1s).zip(&z0s) {
         let resp = h.wait().unwrap();
         let direct = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
-        assert_eq!(resp.z_t1, direct.last(), "t1={t1}: served != direct solve");
+        assert_eq!(resp.z_t1, direct.last().unwrap(), "t1={t1}: served != direct solve");
         assert_eq!(resp.stats.nfe, direct.nfe, "t1={t1}: NFE accounting");
         assert_eq!(resp.stats.steps, direct.len(), "t1={t1}: steps");
         assert_eq!(resp.stats.batch_size, 4, "t1={t1}: co-batched with all four");
@@ -447,13 +449,64 @@ fn mixed_span_gradient_batch_runs_once_and_matches_direct() {
         let resp = h.wait().unwrap();
         let traj = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
         let direct = aca_backward(&vdp, tableau::rk4(), &traj, lam);
-        assert_eq!(resp.z_t1, traj.last(), "t1={t1}: forward");
+        assert_eq!(resp.z_t1, traj.last().unwrap(), "t1={t1}: forward");
         let served = resp.grad.expect("gradient requested");
         assert_eq!(served.dl_dz0, direct.dl_dz0, "t1={t1}: dL/dz0");
         assert_eq!(served.dl_dtheta, direct.dl_dtheta, "t1={t1}: dL/dθ");
         assert_eq!(served.meter.nfe_backward, direct.meter.nfe_backward, "t1={t1}");
         assert_eq!(served.meter.vjp_calls, direct.meter.vjp_calls, "t1={t1}");
         assert_eq!(resp.stats.batch_size, 3, "t1={t1}: co-batched with all three");
+    }
+}
+
+/// Per-sample starts: requests with identical dynamics/solver/tolerance but
+/// three **distinct `t0` values** (and mixed endpoints) now share a key —
+/// `t0` left the `BatchKey` — and execute as ONE `integrate_batch_tspans`
+/// call (dispatch accounting: one executed batch of size 3, exact
+/// stage-sweep counts with dyadic spans, zero scalar entry points), with
+/// every response bit-identical to its direct single-request solve.
+#[test]
+fn mixed_start_batch_runs_once_and_matches_direct() {
+    let vdp = VanDerPol::new(0.5);
+    let (f, scalar_evals, batch_evals, _, _) = EntryCounting::new(vdp.clone());
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("vdp", f)
+        .config(test_config(16, 64, 1))
+        .clock(clock)
+        .start();
+
+    // Dyadic step, starts and endpoints: exact per-sample step counts
+    // 16 / 24 / 16; rounds = the deepest sample's 24.
+    let spans = [(0.0f64, 1.0f64), (0.5, 2.0), (1.0, 2.0)];
+    let z0s: Vec<Vec<f32>> = (0..3).map(|i| vec![0.3 * i as f32 - 0.4, 0.5]).collect();
+    let handles: Vec<_> = spans
+        .iter()
+        .zip(&z0s)
+        .map(|(&(t0, t1), z0)| {
+            server.submit(SolveRequest::fixed("vdp", t0, t1, z0.clone(), 0.0625)).unwrap()
+        })
+        .collect();
+    server.drain();
+
+    let m = server.metrics();
+    assert_eq!(m.batches, 1, "three start times must execute as ONE batch");
+    assert_eq!(m.batch_sizes[3], 1);
+    assert_eq!(
+        scalar_evals.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "no scalar fallback: the batch ran through integrate_batch_tspans alone"
+    );
+    assert_eq!(batch_evals.load(std::sync::atomic::Ordering::SeqCst), 4 * 24);
+
+    let opts = IntegrateOpts::fixed(0.0625);
+    for ((h, &(t0, t1)), z0) in handles.into_iter().zip(&spans).zip(&z0s) {
+        let resp = h.wait().unwrap();
+        let direct = integrate(&vdp, t0, t1, z0, tableau::rk4(), &opts).unwrap();
+        assert_eq!(resp.z_t1, direct.last().unwrap(), "span [{t0},{t1}]: served != direct");
+        assert_eq!(resp.stats.nfe, direct.nfe, "span [{t0},{t1}]: NFE accounting");
+        assert_eq!(resp.stats.steps, direct.len(), "span [{t0},{t1}]: steps");
+        assert_eq!(resp.stats.batch_size, 3, "span [{t0},{t1}]: co-batched with all three");
     }
 }
 
