@@ -40,6 +40,9 @@ impl Runner {
 
     /// Benchmark a closure. The closure should return something observable
     /// (use `std::hint::black_box` inside for values you must not DCE).
+    // Benchmarks are the other sanctioned wall-clock reader (clippy.toml
+    // bans the raw call on solver paths).
+    #[allow(clippy::disallowed_methods)]
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
         // Warm-up + calibration.
         let t0 = Instant::now();

@@ -68,9 +68,10 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
     let mut rem: Vec<usize> = traj.tracks.iter().map(|t| t.steps()).collect();
 
     // Round scratch, packed in active order (slot `a` of a round buffer is
-    // the `a`-th live sample) — no allocation inside the loop beyond the
-    // next-active vec, same discipline as the forward loop.
+    // the `a`-th live sample) — no allocation inside the loop, same
+    // discipline as the forward loop.
     let mut active: Vec<usize> = (0..b).filter(|&i| rem[i] > 0).collect();
+    let mut next_active: Vec<usize> = Vec::with_capacity(b);
     let mut ts_p = vec![0.0f64; b];
     let mut hs_p = vec![0.0f64; b];
     let mut zs_p = vec![0.0f32; b * d];
@@ -87,6 +88,7 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
     // Reverse sweep over the saved discretization points (paper Algo 2),
     // vectorized over samples: every round runs one shared-stage step
     // adjoint over all samples whose reverse index is still in range.
+    // nodal-lint: hot
     while !active.is_empty() {
         let na = active.len();
         for (a, &i) in active.iter().enumerate() {
@@ -114,7 +116,7 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
             &mut nv_p[..na],
             &mut scratch,
         );
-        let mut next_active: Vec<usize> = Vec::with_capacity(na);
+        next_active.clear();
         for (a, &i) in active.iter().enumerate() {
             lams[i * d..(i + 1) * d].copy_from_slice(&dz_p[a * d..(a + 1) * d]);
             dthetas[i * p..(i + 1) * p].copy_from_slice(&dth_p[a * p..(a + 1) * p]);
@@ -125,7 +127,7 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
                 next_active.push(i);
             }
         }
-        active = next_active;
+        std::mem::swap(&mut active, &mut next_active);
     }
 
     (0..b)

@@ -254,6 +254,7 @@ impl StepVjpBatchScratch {
 /// Returns the `f` evaluations spent *per sample* (= `tab.stages`, as in
 /// the scalar path). Explicit `dL/dh` is not offered here: only the naive
 /// method consumes it, and that method has no shared-stage formulation.
+// nodal-lint: hot
 #[allow(clippy::too_many_arguments)]
 pub fn step_vjp_batch<F: OdeFunc + ?Sized>(
     f: &F,

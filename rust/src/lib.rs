@@ -123,6 +123,60 @@
 //!          resp.z_t1, resp.stats.nfe, resp.stats.batch_size);
 //! println!("{}", server.metrics());
 //! ```
+//!
+//! ## Invariants (machine-checked by `nodal-lint`)
+//!
+//! Everything above rests on one guarantee: **the reverse pass replays the
+//! exact float computation the forward pass recorded** (ACA bit-exactness),
+//! and solver results depend only on inputs — never on wall time, hash
+//! order, or an environment variable read mid-solve. These invariants are
+//! enforced by an offline static-analysis pass, `cargo run -p nodal-lint`
+//! (a CI hard gate; report at `results/lint/report.jsonl`), with five
+//! rules:
+//!
+//! 1. **env-knob** — `std::env::var` is read only inside the designated
+//!    parse-and-clamp helpers
+//!    ([`coordinator::pool::default_workers`],
+//!    [`coordinator::report`]'s `results_dir`, [`runtime`]'s
+//!    `artifact_root`, [`ckpt`]'s budget parsers, [`serve`]'s
+//!    `env_clamped`), and every `NODAL_*` knob mentioned anywhere in the
+//!    sources must appear in the table below.
+//! 2. **determinism** — `Instant::now`/`SystemTime::now` only behind the
+//!    injected [`serve::Clock`] or in benchmark/timing modules; no
+//!    `HashMap`/`HashSet` in [`ode`], [`grad`], [`ckpt`] (iteration order
+//!    must never shape a trajectory or a gradient).
+//! 3. **hot-alloc** — regions marked `// nodal-lint: hot` (the stage sweeps
+//!    and solver inner loops) may not allocate: no `vec!`/`Vec::new`/
+//!    `with_capacity`/`collect`/`clone`/`to_vec`/`Box::new`/`String`
+//!    constructors inside the marked block.
+//! 4. **panic-isolation** — no `unwrap`/`expect`/`panic!` family and no
+//!    uncommented constant index in non-test [`serve`] code (one poisoned
+//!    request must degrade, never take down a worker); the
+//!    `lock()/wait()` poison idiom is exempt.
+//! 5. **parity-linkage** — every non-test [`ode::OdeFunc`] impl overriding
+//!    `eval_batch`/`vjp_batch` must be named in a bit-equality test tying
+//!    the batched path to the scalar one.
+//!
+//! A violation is suppressed only by `// nodal-lint: allow(<rule>)
+//! <reason>` with a non-empty reason; a bare `allow` is itself a
+//! diagnostic.
+//!
+//! ### Environment knobs
+//!
+//! The complete set of `NODAL_*` environment variables (the env-knob rule
+//! fails on any knob not listed here):
+//!
+//! | knob | reader | meaning | default, clamp |
+//! |------|--------|---------|----------------|
+//! | `NODAL_WORKERS` | [`coordinator::pool::default_workers`] | coordinator pool threads | available cores, 1..=256 |
+//! | `NODAL_RESULTS` | `coordinator::report::results_dir` | results/report root directory | `results/` |
+//! | `NODAL_ARTIFACTS` | `runtime::artifact_root` | AOT artifact directory | `artifacts/` |
+//! | `NODAL_CKPT_BUDGET_BYTES` | [`ckpt::env_budget_bytes`] | per-sample checkpoint budget (0 = dense) | 0, 0 or 64..=2⁴⁰ |
+//! | `NODAL_SERVE_MAX_BATCH` | [`serve::ServeConfig::from_env`] | max samples per served batch | 16, 1..=1024 |
+//! | `NODAL_SERVE_MAX_DELAY_US` | [`serve::ServeConfig::from_env`] | max queue delay (µs) | 500, 0..=10⁶ |
+//! | `NODAL_SERVE_QUEUE_CAP` | [`serve::ServeConfig::from_env`] | admitted-unanswered cap | 1024, 1..=10⁶ |
+//! | `NODAL_SERVE_WORKERS` | [`serve::ServeConfig::from_env`] | serve worker threads | pool default, 1..=256 |
+//! | `NODAL_SERVE_MEM_BUDGET_BYTES` | [`serve::ServeConfig::from_env`] | projected-checkpoint admission budget (0 = unlimited) | 0, 0 or 64..=2⁴⁰ |
 
 pub mod bench;
 pub mod ckpt;

@@ -81,6 +81,7 @@ impl OdeFunc for ConvFlow {
         self.conv(z, dz, false);
     }
 
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         // Time-invariant linear map: convolve each image in the flat
         // [n × H·W] buffer without per-sample dynamic dispatch. Same kernel
@@ -97,6 +98,7 @@ impl OdeFunc for ConvFlow {
         self.conv(w, wjz, true);
     }
 
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], _zs: &[f32], ws: &[f32], wjzs: &mut [f32], _wjps: &mut [f32]) {
         // Time-invariant linear map: pull each cotangent image back through
         // the flipped kernel without per-sample dynamic dispatch. Same

@@ -55,6 +55,7 @@ impl OdeFunc for Linear {
         }
     }
 
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         // Time-invariant and element-wise: the whole batch is one flat axpy
         // (bit-identical to the per-sample path — same op per element).
@@ -72,6 +73,7 @@ impl OdeFunc for Linear {
         wjp[0] += crate::tensor::dot(w, z) as f32;
     }
 
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
         // Time-invariant and element-wise: the state pullback is one flat
         // sweep over the whole batch; the parameter pullback is one dot per

@@ -137,6 +137,7 @@ impl OdeFunc for ThreeBody {
         self.eval_one(z, dz);
     }
 
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         // Time-invariant: sweep the flat [n × 18] buffer with the inlined
         // per-sample kernel (no per-sample dynamic dispatch); arithmetic is
@@ -151,6 +152,7 @@ impl OdeFunc for ThreeBody {
         self.vjp_one(t, z, w, wjz, wjp);
     }
 
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
         // Sweep the flat [n × 18] buffers with the inlined per-sample kernel
         // (no per-sample dynamic dispatch); each sample's mass pullback

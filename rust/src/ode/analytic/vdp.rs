@@ -53,6 +53,7 @@ impl OdeFunc for VanDerPol {
         self.eval_one(z, dz);
     }
 
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         // Time-invariant: one monomorphized pass over the flat [n × 2]
         // buffer, no per-sample dynamic dispatch. Same arithmetic per sample
@@ -67,6 +68,7 @@ impl OdeFunc for VanDerPol {
         self.vjp_one(z, w, wjz);
     }
 
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], _wjps: &mut [f32]) {
         // Time-invariant, parameter-free: one monomorphized pass over the
         // flat [n × 2] buffers, no per-sample dynamic dispatch. Same

@@ -424,7 +424,9 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
     let mut ts_stage = vec![0.0f64; b];
     let mut ev = vec![0.0f32; dim];
     let mut need_k0: Vec<usize> = Vec::with_capacity(b);
+    let mut next_active: Vec<usize> = Vec::with_capacity(b);
 
+    // nodal-lint: hot
     while !active.is_empty() {
         let na = active.len();
 
@@ -490,9 +492,9 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
         }
 
         // ---- per-sample solution, error estimate, accept/reject ----
-        let mut next_active: Vec<usize> = Vec::with_capacity(na);
+        next_active.clear();
         for (a, &i) in active.iter().enumerate() {
-            let (ar, hta) = (a * dim..(a + 1) * dim, h_try[a]);
+            let (a0, a1, hta) = (a * dim, (a + 1) * dim, h_try[a]);
             // Propagating solution: z_next = z + h Σ b_j k_j (same axpy
             // sequence as `tensor::combine` / `rk_step`).
             {
@@ -500,7 +502,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 zn.copy_from_slice(&z[i * dim..(i + 1) * dim]);
                 for (c, ksj) in tab.b.iter().zip(&ks) {
                     if *c != 0.0 {
-                        tensor::axpy((hta * *c) as f32, &ksj[ar.clone()], zn);
+                        tensor::axpy((hta * *c) as f32, &ksj[a0..a1], zn);
                     }
                 }
             }
@@ -510,7 +512,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 ev.fill(0.0);
                 for (c, ksj) in e.iter().zip(&ks) {
                     if *c != 0.0 {
-                        tensor::axpy((hta * *c) as f32, &ksj[ar.clone()], &mut ev);
+                        tensor::axpy((hta * *c) as f32, &ksj[a0..a1], &mut ev);
                     }
                 }
                 let zi = &z[i * dim..(i + 1) * dim];
@@ -528,7 +530,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                     trial_buf[i].push(TrialRecord { h: hta, err: f64::INFINITY });
                 }
                 h[i] = hta * 0.5;
-                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][ar.clone()]);
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][a0..a1]);
                 k0_valid[i] = true;
                 next_active.push(i);
                 continue;
@@ -542,7 +544,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                     trial_buf[i].push(TrialRecord { h: hta, err: en });
                 }
                 h[i] = dec.h_next;
-                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][ar.clone()]);
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[0][a0..a1]);
                 k0_valid[i] = true;
                 next_active.push(i);
                 continue;
@@ -566,7 +568,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 h[i] = ctrl.decide(hta, en, 0.0).h_next;
             }
             if tab.fsal {
-                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[s - 1][ar]);
+                k0[i * dim..(i + 1) * dim].copy_from_slice(&ks[s - 1][a0..a1]);
                 k0_valid[i] = true;
             } else {
                 k0_valid[i] = false;
@@ -575,7 +577,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 next_active.push(i);
             }
         }
-        active = next_active;
+        std::mem::swap(&mut active, &mut next_active);
     }
 
     Ok(out)

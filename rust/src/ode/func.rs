@@ -32,6 +32,7 @@ pub trait OdeFunc {
     /// relies on. Backends that can amortize dispatch overhead (a single
     /// batched HLO call through the PJRT engine, SIMD over the batch axis)
     /// override this.
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         let d = self.dim();
         debug_assert_eq!(zs.len(), ts.len() * d);
@@ -60,6 +61,7 @@ pub trait OdeFunc {
     /// ([`crate::grad::step_vjp_batch`]) relies on for its per-sample
     /// equivalence guarantee. Backends that can amortize dispatch overhead
     /// (a batched HLO pullback, a flat monomorphized sweep) override this.
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
         let d = self.dim();
         let p = self.n_params();
@@ -131,12 +133,14 @@ impl<F: OdeFunc + ?Sized> OdeFunc for &F {
     fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
         (**self).eval(t, z, dz)
     }
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         (**self).eval_batch(ts, zs, dzs)
     }
     fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
         (**self).vjp(t, z, w, wjz, wjp)
     }
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
         (**self).vjp_batch(ts, zs, ws, wjzs, wjps)
     }
@@ -194,6 +198,7 @@ impl<F: OdeFunc> OdeFunc for CountingFunc<F> {
         self.evals.set(self.evals.get() + 1);
         self.inner.eval(t, z, dz)
     }
+    // nodal-lint: hot
     fn eval_batch(&self, ts: &[f64], zs: &[f32], dzs: &mut [f32]) {
         // Forward to the inner dynamics so wrapping never disables its fast
         // path (the trait default would silently loop `eval` instead); the
@@ -205,6 +210,7 @@ impl<F: OdeFunc> OdeFunc for CountingFunc<F> {
         self.vjps.set(self.vjps.get() + 1);
         self.inner.vjp(t, z, w, wjz, wjp)
     }
+    // nodal-lint: hot
     fn vjp_batch(&self, ts: &[f64], zs: &[f32], ws: &[f32], wjzs: &mut [f32], wjps: &mut [f32]) {
         self.vjps.set(self.vjps.get() + ts.len());
         self.inner.vjp_batch(ts, zs, ws, wjzs, wjps)

@@ -77,6 +77,8 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
         return;
     };
     let dim = f.dim();
+    // Formed batches are never empty (the batcher only flushes non-empty
+    // buckets), so the key-equal fields can be read off the first item.
     let first = &batch.items[0].req;
     // tab/opts are key-equal across the batch; the span is per-request. The
     // worker's solves run under the server's checkpoint budget.
@@ -100,14 +102,27 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     // an integration error does.
     let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<Vec<SampleOutcome>> {
-            let bt = integrate_batch_tspans(&*f, &t0s, &t1s, &z0, tab, &opts)?;
-            let grads = wants_grad.then(|| {
+            // A gradient batch must carry a cotangent on every member (the
+            // batch key pins `wants_grad`); a grad-less straggler is a
+            // batcher bug. Catch it *before* the solve and route the batch
+            // down the per-sample fallback instead of panicking.
+            let lam = if wants_grad {
                 let mut lam = Vec::with_capacity(n * dim);
                 for item in &batch.items {
-                    lam.extend_from_slice(item.req.grad.as_ref().expect("keyed wants_grad"));
+                    match item.req.grad.as_ref() {
+                        Some(g) => lam.extend_from_slice(g),
+                        None => anyhow::bail!(
+                            "request without a cotangent in a wants_grad batch; \
+                             taking the per-sample fallback"
+                        ),
+                    }
                 }
-                aca_backward_batch(&*f, tab, &bt, &lam)
-            });
+                Some(lam)
+            } else {
+                None
+            };
+            let bt = integrate_batch_tspans(&*f, &t0s, &t1s, &z0, tab, &opts)?;
+            let grads = lam.map(|lam| aca_backward_batch(&*f, tab, &bt, &lam));
             Ok((0..n)
                 .map(|i| {
                     let tr = &bt.tracks[i];
@@ -140,11 +155,22 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                     || -> SampleOutcome {
                         match integrate(&*f, item.req.t0, item.req.t1, &item.req.z0, tab, &opts) {
                             Ok(traj) => {
-                                let grad = wants_grad.then(|| {
-                                    aca_backward(&*f, tab, &traj, item.req.grad.as_ref().unwrap())
-                                });
+                                // A grad-less request in a gradient batch
+                                // degrades to a forward-only answer here —
+                                // its healthy neighbors keep their grads.
+                                let grad = match item.req.grad.as_ref() {
+                                    Some(lam) if wants_grad => {
+                                        Some(aca_backward(&*f, tab, &traj, lam))
+                                    }
+                                    _ => None,
+                                };
+                                let Some(z_t1) = traj.last() else {
+                                    return Err(ServeError::Solver(
+                                        "integration returned an empty trajectory".to_string(),
+                                    ));
+                                };
                                 Ok((
-                                    traj.last().expect("non-empty trajectory").to_vec(),
+                                    z_t1.to_vec(),
                                     grad,
                                     RequestStats {
                                         steps: traj.len(),
@@ -183,5 +209,138 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                 core.complete(&item.slot, item.cost, Err(e));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::analytic::VanDerPol;
+    use crate::ode::IntegrateOpts;
+    use crate::serve::batcher::{FlushReason, Pending};
+    use crate::serve::queue::Channel;
+    use crate::serve::request::{ResponseHandle, ResponseSlot, SolveRequest};
+    use crate::serve::{Inflight, ManualClock, ServeConfig, ServeMetrics};
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, AtomicUsize};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    /// A `Core` wired for direct `execute_batch` calls: no threads, manual
+    /// clock, `inflight` pre-charged for the requests the test will deliver
+    /// (each `complete` releases one admission slot).
+    fn test_core(inflight: usize) -> Core {
+        let mut registry: HashMap<String, Arc<dyn crate::ode::OdeFunc + Send + Sync>> =
+            HashMap::new();
+        registry.insert("vdp".to_string(), Arc::new(VanDerPol::new(0.5)));
+        Core {
+            cfg: ServeConfig {
+                max_batch_size: 8,
+                max_queue_delay: Duration::ZERO,
+                queue_capacity: 64,
+                workers: 1,
+                ckpt_budget_bytes: 0,
+                mem_budget_bytes: 0,
+            },
+            clock: ManualClock::new(),
+            registry,
+            metrics: ServeMetrics::default(),
+            submit_q: Channel::bounded(64),
+            work_q: Channel::unbounded(),
+            inflight: Mutex::new(Inflight { count: inflight, bytes: 0 }),
+            idle: Condvar::new(),
+            drain_waiters: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn pend(req: SolveRequest, slot: Arc<ResponseSlot>) -> Pending {
+        Pending { req, slot, submitted: Duration::ZERO, cost: 0 }
+    }
+
+    /// Regression: a grad-less request sharing a `wants_grad` batch (a
+    /// batcher bug — the key pins the grad flag) used to hit
+    /// `req.grad.unwrap()` and panic, failing its healthy co-batched
+    /// neighbor. Now the batch routes down the per-sample fallback: the
+    /// gradient request keeps its (bit-identical) gradient, the straggler
+    /// degrades to a forward-only answer, and nothing reports an error.
+    #[test]
+    fn grad_less_item_in_grad_batch_degrades_instead_of_panicking() {
+        let core = test_core(2);
+        let with_grad = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8)
+            .with_grad(vec![1.0, 0.0]);
+        let without_grad = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.5, -0.5], 1e-6, 1e-8);
+        let key = with_grad.batch_key();
+        assert!(key.wants_grad);
+
+        let (h1, slot1) = ResponseHandle::new();
+        let (h2, slot2) = ResponseHandle::new();
+        let batch = FormedBatch {
+            key,
+            items: vec![pend(with_grad.clone(), slot1), pend(without_grad.clone(), slot2)],
+            reason: FlushReason::Drain,
+            triggered_at: Duration::ZERO,
+        };
+        execute_batch(&core, &batch);
+
+        let r1 = h1.try_take().expect("grad request answered").expect("grad request succeeds");
+        let r2 = h2.try_take().expect("straggler answered").expect("straggler succeeds");
+
+        // Fallback answers are the scalar engine's answers, bit-for-bit.
+        let mut opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+        opts.ckpt = CkptPolicy::from_budget(0);
+        let t1 = integrate(&*core.registry["vdp"], 0.0, 1.0, &with_grad.z0, with_grad.tab, &opts)
+            .unwrap();
+        assert_eq!(r1.z_t1, *t1.last().unwrap());
+        let g = aca_backward(&*core.registry["vdp"], with_grad.tab, &t1, &[1.0, 0.0]);
+        assert_eq!(r1.grad.as_ref().expect("gradient kept").dl_dz0, g.dl_dz0);
+
+        let t2 =
+            integrate(&*core.registry["vdp"], 0.0, 1.0, &without_grad.z0, without_grad.tab, &opts)
+                .unwrap();
+        assert_eq!(r2.z_t1, *t2.last().unwrap());
+        assert!(r2.grad.is_none(), "the straggler degrades to forward-only");
+
+        assert_eq!(
+            core.metrics.failed.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "a batcher bug must not surface as request failures"
+        );
+        assert_eq!(core.inflight.lock().unwrap().count, 0, "both admission slots released");
+    }
+
+    /// The healthy path is unaffected: a well-formed gradient batch runs the
+    /// batched forward + backward and answers every member with a gradient.
+    #[test]
+    fn well_formed_grad_batch_serves_all_members() {
+        let core = test_core(2);
+        let reqs: Vec<SolveRequest> = [vec![2.0, 0.0], vec![1.0, 0.5]]
+            .into_iter()
+            .map(|z0| {
+                SolveRequest::adaptive("vdp", 0.0, 1.0, z0, 1e-6, 1e-8).with_grad(vec![1.0, 0.0])
+            })
+            .collect();
+        let key = reqs[0].batch_key();
+        let (handles, items): (Vec<_>, Vec<_>) = reqs
+            .into_iter()
+            .map(|req| {
+                let (h, slot) = ResponseHandle::new();
+                (h, pend(req, slot))
+            })
+            .unzip();
+        let batch = FormedBatch {
+            key,
+            items,
+            reason: FlushReason::Size,
+            triggered_at: Duration::ZERO,
+        };
+        execute_batch(&core, &batch);
+        for h in handles {
+            let resp = h.try_take().expect("answered").expect("succeeds");
+            assert_eq!(resp.z_t1.len(), 2);
+            assert!(resp.grad.is_some(), "every member of a grad batch gets its gradient");
+            assert_eq!(resp.stats.batch_size, 2);
+        }
+        assert_eq!(core.inflight.lock().unwrap().count, 0);
     }
 }

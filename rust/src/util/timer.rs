@@ -15,6 +15,9 @@ impl Default for Timer {
 }
 
 impl Timer {
+    // This IS the sanctioned wall-clock entry point (clippy.toml bans the
+    // raw call everywhere else).
+    #[allow(clippy::disallowed_methods)]
     pub fn new() -> Self {
         Timer { start: Instant::now() }
     }
@@ -29,6 +32,7 @@ impl Timer {
         self.elapsed_s() * 1e3
     }
 
+    #[allow(clippy::disallowed_methods)]
     pub fn reset(&mut self) {
         self.start = Instant::now();
     }

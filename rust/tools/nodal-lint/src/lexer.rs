@@ -1,0 +1,297 @@
+//! A minimal hand-rolled Rust lexer — just enough fidelity to strip
+//! comments, string/char literals and lifetimes so the scanner can trust
+//! brace balance and identifier matches. No `syn`, no dependencies.
+//!
+//! What it gets right (because the rules depend on it):
+//! * nested block comments;
+//! * raw strings (`r"…"`, `r#"…"#`) and byte strings (`b"…"`, `br#"…"#`) —
+//!   braces inside them must not disturb region tracking;
+//! * `'a` lifetimes vs `'x'` / `'\n'` char literals;
+//! * line comments are captured with their line number, so `// nodal-lint:`
+//!   directives and bound comments can be located.
+
+/// Token class. `text` is meaningful for `Ident`, `Num`, `Str` and `Punct`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `//` comment (regular or doc), with the text after the slashes.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Lexed::default();
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. /// and //! doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            out.comments.push(Comment { line, text: text.trim().to_string() });
+            i = j;
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Identifier / keyword — possibly a raw/byte string prefix.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            let word: String = b[start..j].iter().collect();
+            if matches!(word.as_str(), "r" | "b" | "br" | "rb") && j < n {
+                let raw = word.contains('r');
+                // `r"…"` / `b"…"` directly, or `r#…` only when the hashes
+                // are followed by a quote (so raw identifiers like `r#type`
+                // fall through as plain idents).
+                let is_string = if b[j] == '"' {
+                    true
+                } else if raw && b[j] == '#' {
+                    let mut k = j;
+                    while k < n && b[k] == '#' {
+                        k += 1;
+                    }
+                    k < n && b[k] == '"'
+                } else {
+                    false
+                };
+                if is_string {
+                    let (tok, nj, nl) = lex_string(&b, j, line, raw);
+                    out.toks.push(tok);
+                    i = nj;
+                    line = nl;
+                    continue;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: word, line });
+            i = j;
+            continue;
+        }
+        // Number literal (suffixes ride along; `1.5` lexes as Num '.' Num).
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: b[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let (tok, nj, nl) = lex_string(&b, i, line, false);
+            out.toks.push(tok);
+            i = nj;
+            line = nl;
+            continue;
+        }
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: scan to the closing quote.
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = (j + 1).min(n);
+            } else if i + 2 < n && b[i + 2] == '\'' {
+                // One-char literal: 'x', '-', ' ', '_', …
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i += 3;
+            } else {
+                // Lifetime (or loop label): consume the identifier.
+                let mut j = i + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[i + 1..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Lex a string literal starting at `i` (pointing at `"` or, for raw
+/// strings, at the first `#`). Returns the token, the index just past the
+/// literal, and the updated line counter.
+fn lex_string(b: &[char], mut i: usize, mut line: u32, raw: bool) -> (Tok, usize, u32) {
+    let start_line = line;
+    let mut hashes = 0usize;
+    if raw {
+        while i < b.len() && b[i] == '#' {
+            hashes += 1;
+            i += 1;
+        }
+    }
+    // b[i] is the opening quote.
+    i += 1;
+    let mut val = String::new();
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            val.push(c);
+            i += 1;
+            continue;
+        }
+        if !raw && c == '\\' {
+            // Skip the escape; the exact value is irrelevant to the rules.
+            i = (i + 2).min(b.len());
+            val.push('\u{FFFD}');
+            continue;
+        }
+        if c == '"' {
+            if !raw {
+                i += 1;
+                break;
+            }
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                i += 1 + hashes;
+                break;
+            }
+        }
+        val.push(c);
+        i += 1;
+    }
+    (Tok { kind: TokKind::Str, text: val, line: start_line }, i, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = "let a = \"fn { } unwrap\"; // fn in comment\n/* fn */ call();";
+        assert_eq!(idents(src), vec!["let", "a", "call"]);
+    }
+
+    #[test]
+    fn raw_strings_hide_braces() {
+        let src = "let j = r#\"{\"a\": [1, {\"b\": 2}]}\"#; done();";
+        let l = lex(src);
+        assert!(l.toks.iter().all(|t| t.text != "{"));
+        assert_eq!(idents(src), vec!["let", "j", "done"]);
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_string() {
+        // `r#type` must lex as idents, not swallow the rest of the file.
+        let src = "let r#type = 1; after();";
+        assert!(idents(src).contains(&"after".to_string()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { m('-'); m('\\n'); m('_'); }";
+        let l = lex(src);
+        let lifetimes: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars = l.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 3);
+        // Brace balance must survive.
+        let open = l.toks.iter().filter(|t| t.text == "{").count();
+        let close = l.toks.iter().filter(|t| t.text == "}").count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn line_numbers_and_directive_comments() {
+        let src = "a();\n// nodal-lint: hot\nb();\n";
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 2);
+        assert_eq!(l.comments[0].text, "nodal-lint: hot");
+        let b_tok = l.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ real();";
+        assert_eq!(idents(src), vec!["real"]);
+    }
+}

@@ -1,0 +1,301 @@
+//! `nodal-lint`: an offline static-analysis gate for the nodal codebase.
+//!
+//! The compiler cannot check the disciplines this reproduction depends on:
+//! ACA's correctness claim is that the reverse trajectory is the *recorded*
+//! forward trajectory, enforced as bit-equality between the scalar, batched,
+//! and thinned paths. One stray `HashMap` iteration, wall-clock read, or
+//! allocation in a hot loop silently erodes that. This crate turns the
+//! tribal rules into machine-checked ones, with no dependencies (like the
+//! vendored `anyhow`/`xla`) so it runs fully offline.
+//!
+//! Five rules, each with file:line diagnostics:
+//!
+//! 1. **env-knob** — `std::env::var*` only inside the designated
+//!    parse-and-clamp helpers; every `NODAL_*` literal must appear in the
+//!    main crate's lib.rs knob table.
+//! 2. **determinism** — `Instant::now`/`SystemTime::now` only in `Clock`
+//!    impls, `bench.rs`, `util/timer.rs`, and benches; no `HashMap`/
+//!    `HashSet` in `ode/`, `grad/`, `ckpt/`.
+//! 3. **hot-alloc** — regions marked `// nodal-lint: hot` must not
+//!    allocate (`vec!`, `Vec::new`/`with_capacity`/`from`, `to_vec`,
+//!    `collect`, `clone`, `to_owned`, `to_string`, `Box::new`,
+//!    `String::new`/`from`/`with_capacity`).
+//! 4. **panic-isolation** — no `unwrap`/`expect`/`panic!`-family or
+//!    uncommented constant indexing in `serve/` non-test code; the mutex
+//!    `.lock().unwrap()` poison idiom is allowed.
+//! 5. **parity-linkage** — every non-test `OdeFunc` impl overriding
+//!    `eval_batch`/`vjp_batch` must be named by a bit-equality test.
+//!
+//! Escape hatch: `// nodal-lint: allow(<rule>) <reason>` on the offending
+//! line or the line above. The reason is mandatory; a bare allow is itself
+//! a diagnostic and suppresses nothing.
+
+pub mod lexer;
+pub mod scan;
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub const R_ENV: &str = "env-knob";
+pub const R_DET: &str = "determinism";
+pub const R_HOT: &str = "hot-alloc";
+pub const R_PANIC: &str = "panic-isolation";
+pub const R_PARITY: &str = "parity-linkage";
+/// Pseudo-rule for malformed `nodal-lint:` directives; not allowable.
+pub const R_DIRECTIVE: &str = "directive";
+
+pub const RULES: [&str; 5] = [R_ENV, R_DET, R_HOT, R_PANIC, R_PARITY];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Outcome {
+    /// Sorted by (path, line, rule).
+    pub diags: Vec<Diagnostic>,
+    /// Diagnostics silenced by justified `allow` directives.
+    pub suppressed: usize,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+impl Outcome {
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+}
+
+/// Lint a set of (path, source) pairs. Paths drive the path-scoped rules
+/// (`src/serve/`, `src/ode/`, test-ness, …), so fixture tests can exercise
+/// any rule by choosing virtual paths.
+///
+/// Cross-file rules: the knob table is extracted from every input whose
+/// path ends in `src/lib.rs` (skipped entirely when no such file is in the
+/// set); parity linkage unions bit-test identifiers across all inputs.
+pub fn lint_sources(files: &[(String, String)]) -> Outcome {
+    let mut table: Option<BTreeSet<String>> = None;
+    for (path, src) in files {
+        if path.ends_with("src/lib.rs") {
+            table.get_or_insert_with(BTreeSet::new).extend(scan::knob_names(src));
+        }
+    }
+
+    let facts: Vec<scan::FileFacts> =
+        files.iter().map(|(p, s)| scan::scan_file(p, s)).collect();
+
+    let mut bit_idents: BTreeSet<String> = BTreeSet::new();
+    for f in &facts {
+        bit_idents.extend(f.bit_idents.iter().cloned());
+    }
+
+    let mut diags = Vec::new();
+    let mut suppressed = 0usize;
+    for (f, (path, _)) in facts.into_iter().zip(files) {
+        suppressed += f.suppressed;
+        diags.extend(f.diags);
+
+        let suppress = |rule: &str, line: u32| {
+            f.allows.iter().any(|a| a.rule == rule && a.lo <= line && line <= a.hi)
+        };
+
+        if let Some(tab) = &table {
+            for (name, line) in &f.knob_lits {
+                if !tab.contains(name) {
+                    if suppress(R_ENV, *line) {
+                        suppressed += 1;
+                    } else {
+                        diags.push(Diagnostic {
+                            rule: R_ENV,
+                            path: path.clone(),
+                            line: *line,
+                            msg: format!(
+                                "knob `{name}` is not documented in the lib.rs knob table"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+
+        for (target, line) in &f.overriders {
+            // Single-letter targets are generic parameters (`impl OdeFunc
+            // for &F`): pure forwarding, not a parity surface of their own.
+            if target.chars().count() <= 1 {
+                continue;
+            }
+            if !bit_idents.contains(target) {
+                if suppress(R_PARITY, *line) {
+                    suppressed += 1;
+                } else {
+                    diags.push(Diagnostic {
+                        rule: R_PARITY,
+                        path: path.clone(),
+                        line: *line,
+                        msg: format!(
+                            "`{target}` overrides eval_batch/vjp_batch but no \
+                             bit-equality test names it"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    diags.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Outcome { diags, suppressed, files: files.len() }
+}
+
+/// Walk `rust/src`, `rust/benches`, `rust/tests` under `root` and lint
+/// every `.rs` file, with paths reported relative to `root`. Traversal is
+/// sorted so diagnostics and the report are deterministic.
+pub fn lint_tree(root: &Path) -> std::io::Result<Outcome> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for sub in ["rust/src", "rust/benches", "rust/tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, std::fs::read_to_string(p)?));
+    }
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Write the machine-readable report: a summary line followed by one JSON
+/// object per diagnostic. Hand-rolled serialization — no serde.
+pub fn write_report(path: &Path, out: &Outcome) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(
+        w,
+        "{{\"files\":{},\"diagnostics\":{},\"suppressed\":{}}}",
+        out.files,
+        out.diags.len(),
+        out.suppressed
+    )?;
+    for d in &out.diags {
+        writeln!(
+            w,
+            "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"msg\":\"{}\"}}",
+            json_escape(d.rule),
+            json_escape(&d.path),
+            d.line,
+            json_escape(&d.msg)
+        )?;
+    }
+    w.flush()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut o = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\r' => o.push_str("\\r"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                o.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => o.push(c),
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(path: &str, src: &str) -> (String, String) {
+        (path.to_string(), src.to_string())
+    }
+
+    #[test]
+    fn knob_table_checked_only_when_lib_present() {
+        let user = f(
+            "rust/src/serve/mod.rs",
+            "#[cfg(test)] mod tests { #[test] fn t() { std::env::set_var(\"NODAL_ROGUE\", \"1\"); } }",
+        );
+        // Without a lib.rs in the set the table check is skipped.
+        let out = lint_sources(&[user.clone()]);
+        assert!(out.clean(), "{:?}", out.diags);
+        // With a lib.rs lacking the knob it fires.
+        let lib = f("rust/src/lib.rs", "//! Knobs: `NODAL_WORKERS`.\n");
+        let out = lint_sources(&[lib, user]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert_eq!(out.diags[0].rule, R_ENV);
+    }
+
+    #[test]
+    fn parity_links_across_files() {
+        let imp = f(
+            "rust/src/ode/linear.rs",
+            "impl OdeFunc for Linear { fn vjp_batch(&self) {} }",
+        );
+        let out = lint_sources(&[imp.clone()]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert_eq!(out.diags[0].rule, R_PARITY);
+        let test = f(
+            "rust/tests/parity.rs",
+            "#[test] fn linear_vjp_batch_bit_identical() { let f = Linear::new(-0.5, 2); }",
+        );
+        let out = lint_sources(&[imp, test]);
+        assert!(out.clean(), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn report_is_valid_jsonl_shape() {
+        let out = Outcome {
+            diags: vec![Diagnostic {
+                rule: R_HOT,
+                path: "a\\b.rs".into(),
+                line: 3,
+                msg: "say \"no\"".into(),
+            }],
+            suppressed: 1,
+            files: 2,
+        };
+        let dir = std::env::temp_dir().join("nodal-lint-test");
+        let p = dir.join("report.jsonl");
+        write_report(&p, &out).unwrap();
+        let got = std::fs::read_to_string(&p).unwrap();
+        let mut lines = got.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "{\"files\":2,\"diagnostics\":1,\"suppressed\":1}"
+        );
+        let d = lines.next().unwrap();
+        assert!(d.contains("\\\\b.rs") && d.contains("say \\\"no\\\""), "{d}");
+    }
+}

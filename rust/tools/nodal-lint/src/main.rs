@@ -1,0 +1,49 @@
+//! CLI entry point: `cargo run -p nodal-lint [ROOT]`.
+//!
+//! Lints `rust/src`, `rust/benches`, `rust/tests` under ROOT (default: the
+//! repository root containing this crate), prints diagnostics, writes
+//! `results/lint/report.jsonl` (honouring `NODAL_RESULTS`), and exits
+//! non-zero when the tree is not clean — the CI hard gate.
+
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let root: PathBuf = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        // crate dir = <root>/rust/tools/nodal-lint → third ancestor is <root>.
+        None => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .ancestors()
+            .nth(3)
+            .expect("crate sits three levels below the repo root")
+            .to_path_buf(),
+    };
+
+    let out = match nodal_lint::lint_tree(&root) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("nodal-lint: failed to read tree under {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+
+    let results = std::env::var("NODAL_RESULTS").unwrap_or_else(|_| "results".to_string());
+    let report = root.join(results).join("lint").join("report.jsonl");
+    if let Err(e) = nodal_lint::write_report(&report, &out) {
+        eprintln!("nodal-lint: failed to write {}: {e}", report.display());
+        std::process::exit(2);
+    }
+
+    for d in &out.diags {
+        eprintln!("{}:{}: [{}] {}", d.path, d.line, d.rule, d.msg);
+    }
+    println!(
+        "nodal-lint: {} file(s) scanned, {} diagnostic(s), {} suppressed by allow; report at {}",
+        out.files,
+        out.diags.len(),
+        out.suppressed,
+        report.display()
+    );
+    if !out.clean() {
+        std::process::exit(1);
+    }
+}

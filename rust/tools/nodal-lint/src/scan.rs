@@ -1,0 +1,714 @@
+//! Brace-aware region scanner and the per-file half of the rule engine.
+//!
+//! The scanner walks the token stream once, maintaining a stack of region
+//! contexts (fn / impl / mod / block). A region inherits its parent's
+//! context — test-ness, hot-ness, enclosing `OdeFunc` impl target — so a
+//! check at any token only needs the top of the stack.
+//!
+//! Region classification reads the "header": the tokens accumulated since
+//! the last `{`, `}`, or statement-level `;`. `fn` is checked before
+//! `impl` so `impl Trait` in a signature does not misclassify a function
+//! as an impl block.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{lex, Tok, TokKind};
+use crate::{Diagnostic, RULES, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_PANIC};
+
+/// A `// nodal-lint: allow(<rule>) <reason>` span. Covers the directive's
+/// own line and the next one, so it works both trailing and stand-alone.
+#[derive(Debug, Clone)]
+pub struct AllowSpan {
+    pub rule: String,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+/// Everything the cross-file pass needs from one file.
+#[derive(Debug, Default)]
+pub struct FileFacts {
+    /// Local diagnostics, already filtered through this file's allows.
+    pub diags: Vec<Diagnostic>,
+    /// Count of locally suppressed diagnostics.
+    pub suppressed: usize,
+    /// Allow spans, kept for cross-file rules (parity, knob table).
+    pub allows: Vec<AllowSpan>,
+    /// Non-test `OdeFunc` impls overriding `eval_batch`/`vjp_batch`:
+    /// (target type name, line of the overriding fn).
+    pub overriders: Vec<(String, u32)>,
+    /// Identifiers appearing inside bit-equality test functions.
+    pub bit_idents: BTreeSet<String>,
+    /// `NODAL_*` names found in string literals: (name, line).
+    pub knob_lits: Vec<(String, u32)>,
+}
+
+/// Designated parse-and-clamp helpers: the only non-test places allowed to
+/// read the environment. Matched as (`/`-anchored path suffix, fn name).
+const ENV_HELPERS: &[(&str, &str)] = &[
+    ("pool.rs", "default_workers"),
+    ("report.rs", "results_dir"),
+    ("runtime/mod.rs", "artifact_root"),
+    ("ckpt/mod.rs", "parse_budget_env"),
+    ("ckpt/mod.rs", "env_budget_bytes"),
+    ("serve/mod.rs", "env_clamped"),
+];
+
+/// Methods whose `.unwrap()` propagates poison rather than encoding a
+/// fallible assumption — the one panic idiom `serve/` is allowed.
+const POISON_METHODS: &[&str] =
+    &["lock", "read", "write", "wait", "wait_while", "wait_timeout", "wait_timeout_while"];
+
+#[derive(Clone)]
+struct Ctx {
+    is_test: bool,
+    hot: bool,
+    clock_impl: bool,
+    fn_name: Option<String>,
+    odefunc_target: Option<String>,
+    bit_test: bool,
+}
+
+/// Does a test-fn name advertise a bit-equality / parity check?
+/// Underscore-split for the short markers so `orbit` does not match `bit`.
+pub fn is_bit_marker(name: &str) -> bool {
+    name.split('_').any(|p| matches!(p, "bit" | "bitwise" | "bitexact"))
+        || name.contains("matches_scalar")
+        || name.contains("parity")
+        || name.contains("identical")
+}
+
+/// Extract every `NODAL_[A-Z0-9_]*` name from raw text. Used both on
+/// string-literal contents and on the raw lib.rs source (the knob table
+/// lives in doc comments, which never reach the token stream).
+pub fn knob_names(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 6 <= b.len() {
+        if &b[k..k + 6] == b"NODAL_" {
+            let mut end = k;
+            while end < b.len()
+                && (b[end].is_ascii_uppercase() || b[end].is_ascii_digit() || b[end] == b'_')
+            {
+                end += 1;
+            }
+            out.push(String::from_utf8_lossy(&b[k..end]).into_owned());
+            k = end;
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+fn is_env_designated(path: &str, fn_name: Option<&str>) -> bool {
+    let Some(f) = fn_name else { return false };
+    ENV_HELPERS
+        .iter()
+        .any(|(suf, h)| f == *h && (path == *suf || path.ends_with(&format!("/{suf}"))))
+}
+
+fn diag(rule: &'static str, path: &str, line: u32, msg: String) -> Diagnostic {
+    Diagnostic { rule, path: path.to_string(), line, msg }
+}
+
+/// Back-scan from an `unwrap`/`expect` ident (preceded by `.`) to the
+/// method owning the receiver call: `x.lock().unwrap()` → `lock`.
+fn is_poison_receiver(toks: &[Tok], i: usize) -> bool {
+    if i < 3 || toks[i - 2].text != ")" {
+        return false;
+    }
+    let mut depth = 1i32;
+    let mut j = i - 2;
+    while j > 0 {
+        j -= 1;
+        match toks[j].text.as_str() {
+            ")" => depth += 1,
+            "(" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || j == 0 {
+        return false;
+    }
+    let m = &toks[j - 1];
+    m.kind == TokKind::Ident && POISON_METHODS.contains(&m.text.as_str())
+}
+
+pub fn scan_file(path: &str, src: &str) -> FileFacts {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let comment_lines: BTreeSet<u32> = lexed.comments.iter().map(|c| c.line).collect();
+
+    let file_is_test = path.contains("/tests/") || path.starts_with("tests/");
+    let det_file_exempt = path.ends_with("bench.rs")
+        || path.ends_with("util/timer.rs")
+        || path.contains("/benches/")
+        || path.starts_with("benches/");
+    let in_serve = path.contains("src/serve/");
+    let in_det_mods =
+        ["src/ode/", "src/grad/", "src/ckpt/"].iter().any(|m| path.contains(m));
+
+    // ---- directives ----
+    let mut hot_markers: Vec<u32> = Vec::new();
+    let mut allows: Vec<AllowSpan> = Vec::new();
+    // Directive diagnostics are never themselves suppressible.
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    // Rule diagnostics, pre-suppression.
+    let mut raw: Vec<Diagnostic> = Vec::new();
+
+    for c in &lexed.comments {
+        let Some(rest) = c.text.strip_prefix("nodal-lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot" {
+            hot_markers.push(c.line);
+            continue;
+        }
+        if let Some(arg) = rest.strip_prefix("allow(") {
+            match arg.split_once(')') {
+                Some((rule, reason)) => {
+                    let rule = rule.trim();
+                    if !RULES.contains(&rule) {
+                        diags.push(diag(
+                            R_DIRECTIVE,
+                            path,
+                            c.line,
+                            format!("allow names unknown rule `{rule}`"),
+                        ));
+                    } else if reason.trim().is_empty() {
+                        diags.push(diag(
+                            R_DIRECTIVE,
+                            path,
+                            c.line,
+                            format!("allow({rule}) requires a reason after the closing paren"),
+                        ));
+                    } else {
+                        allows.push(AllowSpan {
+                            rule: rule.to_string(),
+                            lo: c.line,
+                            hi: c.line + 1,
+                        });
+                    }
+                }
+                None => diags.push(diag(
+                    R_DIRECTIVE,
+                    path,
+                    c.line,
+                    "malformed allow directive: missing `)`".to_string(),
+                )),
+            }
+            continue;
+        }
+        diags.push(diag(
+            R_DIRECTIVE,
+            path,
+            c.line,
+            format!("unknown nodal-lint directive `{rest}`"),
+        ));
+    }
+    hot_markers.sort_unstable();
+    let mut hot_iter = hot_markers.into_iter().peekable();
+
+    // ---- single-pass region walk + checks ----
+    let root = Ctx {
+        is_test: file_is_test,
+        hot: false,
+        clock_impl: false,
+        fn_name: None,
+        odefunc_target: None,
+        bit_test: false,
+    };
+    let mut stack: Vec<Ctx> = vec![root];
+    let mut header: Vec<usize> = Vec::new();
+    let mut attrs = String::new();
+    let mut paren = 0i32;
+    let mut brack = 0i32;
+
+    let mut overriders: Vec<(String, u32)> = Vec::new();
+    let mut bit_idents: BTreeSet<String> = BTreeSet::new();
+    let mut knob_lits: Vec<(String, u32)> = Vec::new();
+
+    let ident_text = |ix: usize| -> Option<&str> {
+        toks.get(ix).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+    };
+    let punct_is = |ix: usize, s: &str| toks.get(ix).is_some_and(|t| t.text == s);
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+
+        // Consume attributes `#[...]` / `#![...]`; outer attrs are stashed
+        // for the next region's classification, inner attrs discarded.
+        if t.kind == TokKind::Punct && t.text == "#" {
+            let (inner, lb) = if punct_is(i + 1, "[") {
+                (false, i + 1)
+            } else if punct_is(i + 1, "!") && punct_is(i + 2, "[") {
+                (true, i + 2)
+            } else {
+                (false, usize::MAX)
+            };
+            if lb != usize::MAX {
+                let mut depth = 0i32;
+                let mut j = lb;
+                let mut captured = String::new();
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    if toks[j].kind == TokKind::Ident {
+                        captured.push_str(&toks[j].text);
+                        captured.push(' ');
+                    }
+                    j += 1;
+                }
+                if !inner {
+                    attrs.push_str(&captured);
+                }
+                i = j;
+                continue;
+            }
+        }
+
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "{") => {
+                let mut ctx = classify(
+                    toks,
+                    &header,
+                    &attrs,
+                    stack.last().expect("ctx stack never empty"),
+                    t.line,
+                    &mut overriders,
+                );
+                if let Some(&m) = hot_iter.peek() {
+                    if m <= t.line {
+                        hot_iter.next();
+                        ctx.hot = true;
+                    }
+                }
+                stack.push(ctx);
+                header.clear();
+                attrs.clear();
+            }
+            (TokKind::Punct, "}") => {
+                if stack.len() > 1 {
+                    stack.pop();
+                }
+                header.clear();
+            }
+            (TokKind::Punct, ";") if paren == 0 && brack == 0 => {
+                header.clear();
+                attrs.clear();
+            }
+            _ => {
+                match t.text.as_str() {
+                    "(" => paren += 1,
+                    ")" => paren -= 1,
+                    "[" => brack += 1,
+                    "]" => brack -= 1,
+                    _ => {}
+                }
+                let ctx = stack.last().expect("ctx stack never empty");
+
+                if ctx.bit_test && t.kind == TokKind::Ident {
+                    bit_idents.insert(t.text.clone());
+                }
+
+                // Rule 1a: env reads outside designated helpers.
+                if t.kind == TokKind::Ident
+                    && matches!(t.text.as_str(), "var" | "var_os" | "vars")
+                    && punct_is(i.wrapping_sub(1), ":")
+                    && punct_is(i.wrapping_sub(2), ":")
+                    && ident_text(i.wrapping_sub(3)) == Some("env")
+                    && !ctx.is_test
+                    && !is_env_designated(path, ctx.fn_name.as_deref())
+                {
+                    raw.push(diag(
+                        R_ENV,
+                        path,
+                        t.line,
+                        format!(
+                            "env::{} outside a designated parse-and-clamp helper",
+                            t.text
+                        ),
+                    ));
+                }
+
+                // Rule 1b (cross-file half): collect NODAL_* string literals.
+                if t.kind == TokKind::Str && t.text.contains("NODAL_") {
+                    for name in knob_names(&t.text) {
+                        knob_lits.push((name, t.line));
+                    }
+                }
+
+                // Rule 2a: wall-clock reads.
+                if t.kind == TokKind::Ident
+                    && matches!(t.text.as_str(), "Instant" | "SystemTime")
+                    && punct_is(i + 1, ":")
+                    && punct_is(i + 2, ":")
+                    && ident_text(i + 3) == Some("now")
+                    && !det_file_exempt
+                    && !ctx.clock_impl
+                    && !ctx.is_test
+                {
+                    raw.push(diag(
+                        R_DET,
+                        path,
+                        t.line,
+                        format!(
+                            "{}::now outside a Clock impl, bench.rs, or util/timer.rs",
+                            t.text
+                        ),
+                    ));
+                }
+
+                // Rule 2b: hashed collections in result-affecting modules.
+                if t.kind == TokKind::Ident
+                    && matches!(t.text.as_str(), "HashMap" | "HashSet")
+                    && in_det_mods
+                    && !ctx.is_test
+                {
+                    raw.push(diag(
+                        R_DET,
+                        path,
+                        t.line,
+                        format!(
+                            "{} in a result-affecting module: iteration order can \
+                             change float accumulation; use BTreeMap/BTreeSet or Vec",
+                            t.text
+                        ),
+                    ));
+                }
+
+                // Rule 3: allocations inside `// nodal-lint: hot` regions.
+                if ctx.hot && t.kind == TokKind::Ident {
+                    let alloc: Option<String> = if t.text == "vec" && punct_is(i + 1, "!") {
+                        Some("vec!".to_string())
+                    } else if matches!(t.text.as_str(), "Vec" | "Box" | "String")
+                        && punct_is(i + 1, ":")
+                        && punct_is(i + 2, ":")
+                    {
+                        match (t.text.as_str(), ident_text(i + 3)) {
+                            ("Vec", Some(m @ ("new" | "with_capacity" | "from")))
+                            | ("Box", Some(m @ "new"))
+                            | ("String", Some(m @ ("new" | "with_capacity" | "from"))) => {
+                                Some(format!("{}::{m}", t.text))
+                            }
+                            _ => None,
+                        }
+                    } else if punct_is(i.wrapping_sub(1), ".")
+                        && matches!(
+                            t.text.as_str(),
+                            "to_vec" | "collect" | "clone" | "to_owned" | "to_string"
+                        )
+                    {
+                        Some(format!(".{}()", t.text))
+                    } else {
+                        None
+                    };
+                    if let Some(what) = alloc {
+                        raw.push(diag(
+                            R_HOT,
+                            path,
+                            t.line,
+                            format!("{what} inside a hot region; hoist into reusable scratch"),
+                        ));
+                    }
+                }
+
+                // Rule 4: panic isolation in serve/.
+                if in_serve && !ctx.is_test {
+                    if t.kind == TokKind::Ident
+                        && matches!(
+                            t.text.as_str(),
+                            "panic" | "unreachable" | "todo" | "unimplemented"
+                        )
+                        && punct_is(i + 1, "!")
+                    {
+                        raw.push(diag(
+                            R_PANIC,
+                            path,
+                            t.line,
+                            format!("{}! in serve request-handling code", t.text),
+                        ));
+                    }
+                    if t.kind == TokKind::Ident
+                        && matches!(t.text.as_str(), "unwrap" | "expect")
+                        && punct_is(i.wrapping_sub(1), ".")
+                        && !is_poison_receiver(toks, i)
+                    {
+                        raw.push(diag(
+                            R_PANIC,
+                            path,
+                            t.line,
+                            format!(
+                                ".{}() in serve request-handling code; return an error \
+                                 or route to the per-sample fallback",
+                                t.text
+                            ),
+                        ));
+                    }
+                    // Constant index `x[0]` without a bound comment on this
+                    // or the preceding line.
+                    if t.kind == TokKind::Punct
+                        && t.text == "["
+                        && toks.get(i.wrapping_sub(1)).is_some_and(|p| {
+                            p.kind == TokKind::Ident || p.text == "]" || p.text == ")"
+                        })
+                        && toks.get(i + 1).is_some_and(|n| n.kind == TokKind::Num)
+                        && punct_is(i + 2, "]")
+                        && !comment_lines.contains(&t.line)
+                        && !(t.line > 1 && comment_lines.contains(&(t.line - 1)))
+                    {
+                        raw.push(diag(
+                            R_PANIC,
+                            path,
+                            t.line,
+                            "constant index in serve code without a bound comment \
+                             justifying non-emptiness"
+                                .to_string(),
+                        ));
+                    }
+                }
+
+                header.push(i);
+            }
+        }
+        i += 1;
+    }
+
+    // ---- apply allows to local rule diagnostics ----
+    let mut suppressed = 0usize;
+    for d in raw {
+        if allows.iter().any(|a| a.rule == d.rule && a.lo <= d.line && d.line <= a.hi) {
+            suppressed += 1;
+        } else {
+            diags.push(d);
+        }
+    }
+
+    FileFacts { diags, suppressed, allows, overriders, bit_idents, knob_lits }
+}
+
+/// Classify the region a `{` opens, from the header tokens accumulated
+/// since the last region boundary plus the pending outer attributes.
+fn classify(
+    toks: &[Tok],
+    header: &[usize],
+    attrs: &str,
+    parent: &Ctx,
+    line: u32,
+    overriders: &mut Vec<(String, u32)>,
+) -> Ctx {
+    let mut c = parent.clone();
+    let kw = |k: &str| {
+        header
+            .iter()
+            .position(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text == k)
+    };
+    let next_ident_after = |p: usize| -> Option<String> {
+        header[p + 1..]
+            .iter()
+            .find(|&&ix| toks[ix].kind == TokKind::Ident)
+            .map(|&ix| toks[ix].text.clone())
+    };
+    let attr_test = attrs.split_whitespace().any(|w| w == "test");
+
+    // `fn` before `impl`: an `impl Trait` in a signature must not turn a
+    // function into an impl region.
+    if let Some(p) = kw("fn") {
+        let name = next_ident_after(p);
+        c.fn_name = name.clone();
+        if attr_test {
+            c.is_test = true;
+        }
+        if let (Some(target), Some(n)) = (c.odefunc_target.as_ref(), name.as_deref()) {
+            if !c.is_test && matches!(n, "eval_batch" | "vjp_batch") {
+                overriders.push((target.clone(), line));
+            }
+        }
+        if c.is_test && name.as_deref().is_some_and(is_bit_marker) {
+            c.bit_test = true;
+        }
+        return c;
+    }
+    if let Some(_p) = kw("impl") {
+        if header
+            .iter()
+            .any(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text.contains("Clock"))
+        {
+            c.clock_impl = true;
+        }
+        let has_odefunc = header
+            .iter()
+            .any(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text == "OdeFunc");
+        c.odefunc_target = None;
+        if has_odefunc {
+            // `impl<F: OdeFunc> OdeFunc for Wrapper<F>`: the target is the
+            // first ident after the last `for` (skipping `&`, `mut`).
+            if let Some(fp) = header
+                .iter()
+                .rposition(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text == "for")
+            {
+                c.odefunc_target = next_ident_after(fp).filter(|t| t != "mut");
+            }
+        }
+        return c;
+    }
+    if let Some(p) = kw("mod") {
+        if attr_test || next_ident_after(p).as_deref() == Some("tests") {
+            c.is_test = true;
+        }
+        return c;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_markers_split_on_underscores() {
+        assert!(is_bit_marker("vjp_batch_bit_identical_to_scalar"));
+        assert!(is_bit_marker("default_eval_batch_matches_scalar_and_counts"));
+        assert!(is_bit_marker("thinned_parity_roundtrip"));
+        assert!(!is_bit_marker("orbit_energy_drift"));
+        assert!(!is_bit_marker("habit_tracker"));
+    }
+
+    #[test]
+    fn knob_extraction() {
+        let names = knob_names("set NODAL_WORKERS and NODAL_SERVE_MAX_BATCH=4");
+        assert_eq!(names, vec!["NODAL_WORKERS", "NODAL_SERVE_MAX_BATCH"]);
+    }
+
+    #[test]
+    fn env_read_flagged_outside_designated_helper() {
+        let f = scan_file(
+            "rust/src/ode/mod.rs",
+            "fn sneak() -> usize { std::env::var(\"NODAL_WORKERS\").is_ok() as usize }",
+        );
+        assert_eq!(f.diags.len(), 1, "{:?}", f.diags);
+        assert_eq!(f.diags[0].rule, R_ENV);
+    }
+
+    #[test]
+    fn env_read_ok_in_designated_helper_and_tests() {
+        let f = scan_file(
+            "rust/src/pool.rs",
+            "pub fn default_workers() -> usize { std::env::var(\"NODAL_WORKERS\").map_or(1, |_| 2) }",
+        );
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+        let f = scan_file(
+            "rust/src/pool.rs",
+            "#[cfg(test)] mod tests { #[test] fn t() { std::env::var(\"NODAL_WORKERS\").ok(); } }",
+        );
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+    }
+
+    #[test]
+    fn instant_now_flagged_except_clock_impl() {
+        let f = scan_file(
+            "rust/src/serve/batcher.rs",
+            "fn t() -> Instant { std::time::Instant::now() }",
+        );
+        assert_eq!(f.diags.len(), 1);
+        assert_eq!(f.diags[0].rule, R_DET);
+        let f = scan_file(
+            "rust/src/serve/mod.rs",
+            "impl Clock for WallClock { fn now(&self) -> Instant { Instant::now() } }",
+        );
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+        // `impl Default for WallClock` is also a Clock-typed impl.
+        let f = scan_file(
+            "rust/src/serve/mod.rs",
+            "impl Default for WallClock { fn default() -> Self { WallClock(Instant::now()) } }",
+        );
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+    }
+
+    #[test]
+    fn hashmap_flagged_only_in_det_modules() {
+        let f = scan_file("rust/src/grad/adjoint.rs", "use std::collections::HashMap;");
+        assert_eq!(f.diags.len(), 1);
+        let f = scan_file("rust/src/serve/registry.rs", "use std::collections::HashMap;");
+        assert!(f.diags.is_empty());
+    }
+
+    #[test]
+    fn hot_region_catches_alloc_families() {
+        let src = "// nodal-lint: hot\nfn step() {\n let a = vec![0.0];\n let b: Vec<f32> = Vec::new();\n let c = xs.to_vec();\n let d = xs.iter().collect();\n let e = xs.clone();\n let f = Box::new(1);\n let g = Vec::with_capacity(4);\n}\nfn cold() { let a = vec![1]; }";
+        let f = scan_file("rust/src/ode/step.rs", src);
+        let hot: Vec<_> = f.diags.iter().filter(|d| d.rule == R_HOT).collect();
+        assert_eq!(hot.len(), 7, "{:?}", f.diags);
+    }
+
+    #[test]
+    fn hot_marker_attaches_to_loop_braces_too() {
+        let src = "fn run() {\n // nodal-lint: hot\n while go {\n buf.push(x.clone());\n }\n let post = y.clone();\n}";
+        let f = scan_file("rust/src/grad/batch.rs", src);
+        assert_eq!(f.diags.len(), 1, "{:?}", f.diags);
+        assert_eq!(f.diags[0].line, 4);
+    }
+
+    #[test]
+    fn serve_panics_flagged_poison_allowed() {
+        let src = "fn go(&self) {\n let g = self.inner.lock().unwrap();\n let v = item.grad.as_ref().unwrap();\n let w = item.grad.as_ref().expect(\"grad\");\n panic!(\"boom\");\n}";
+        let f = scan_file("rust/src/serve/worker.rs", src);
+        let p: Vec<_> = f.diags.iter().filter(|d| d.rule == R_PANIC).collect();
+        assert_eq!(p.len(), 3, "{:?}", f.diags);
+        assert!(p.iter().all(|d| d.line != 2), "poison unwrap must pass");
+    }
+
+    #[test]
+    fn serve_constant_index_needs_bound_comment() {
+        let bad = "fn f() { let x = batch.items[0]; }";
+        let f = scan_file("rust/src/serve/worker.rs", bad);
+        assert_eq!(f.diags.len(), 1, "{:?}", f.diags);
+        let good = "fn f() {\n // formed batches are non-empty by construction\n let x = batch.items[0];\n}";
+        let f = scan_file("rust/src/serve/worker.rs", good);
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+    }
+
+    #[test]
+    fn allow_suppresses_with_reason_only() {
+        let with_reason = "fn f() {\n // nodal-lint: allow(panic-isolation) checked above\n let v = g.unwrap();\n}";
+        let f = scan_file("rust/src/serve/worker.rs", with_reason);
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+        assert_eq!(f.suppressed, 1);
+        let without = "fn f() {\n // nodal-lint: allow(panic-isolation)\n let v = g.unwrap();\n}";
+        let f = scan_file("rust/src/serve/worker.rs", without);
+        // Malformed directive diag + the unsuppressed panic diag.
+        assert_eq!(f.diags.len(), 2, "{:?}", f.diags);
+    }
+
+    #[test]
+    fn overriders_and_bit_tests_collected() {
+        let src = "impl OdeFunc for VanDerPol {\n fn eval(&self) {}\n fn eval_batch(&self) {}\n}\nimpl<F: OdeFunc + ?Sized> OdeFunc for &F {\n fn vjp_batch(&self) {}\n}\n#[cfg(test)] mod tests {\n #[test] fn vjp_batch_bit_identical_to_scalar() { let f = VanDerPol::new(1.0); }\n}";
+        let f = scan_file("rust/src/ode/vdp.rs", src);
+        let names: Vec<_> = f.overriders.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["VanDerPol", "F"]);
+        assert!(f.bit_idents.contains("VanDerPol"));
+        assert!(f.diags.is_empty(), "{:?}", f.diags);
+    }
+
+    #[test]
+    fn test_impl_overrides_are_not_overriders() {
+        let src = "#[cfg(test)]\nmod tests {\n struct M;\n impl OdeFunc for M {\n fn eval_batch(&self) {}\n }\n}";
+        let f = scan_file("rust/src/ode/func.rs", src);
+        assert!(f.overriders.is_empty(), "{:?}", f.overriders);
+    }
+}

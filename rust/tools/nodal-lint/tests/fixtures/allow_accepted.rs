@@ -1,0 +1,8 @@
+// Fixture: a justified allow (rule name + reason) suppresses the
+// diagnostic on its own line and the next. Virtual path
+// `rust/src/serve/worker.rs`.
+
+pub fn drain(q: &Queue) -> Item {
+    // nodal-lint: allow(panic-isolation) drain() is only called after poll() returned Ready
+    q.pop().unwrap()
+}

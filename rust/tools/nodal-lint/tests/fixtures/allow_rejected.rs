@@ -1,0 +1,14 @@
+// Fixture: allows that must NOT suppress — one missing its mandatory
+// reason, one naming an unknown rule. Both are directive diagnostics and
+// the underlying panic-isolation diagnostics still fire. Virtual path
+// `rust/src/serve/worker.rs`.
+
+pub fn drain(q: &Queue) -> Item {
+    // nodal-lint: allow(panic-isolation)
+    q.pop().unwrap()
+}
+
+pub fn peek(q: &Queue) -> Item {
+    // nodal-lint: allow(no-such-rule) because reasons
+    q.front().unwrap()
+}

@@ -1,0 +1,11 @@
+// Fixture: result-affecting module (virtual path `rust/src/ode/solver.rs`)
+// reading the wall clock and iterating a HashMap. Four determinism
+// diagnostics: Instant::now, SystemTime::now, and both HashMap mentions.
+
+use std::collections::HashMap;
+
+pub fn step(weights: &HashMap<usize, f64>) -> f64 {
+    let _t0 = std::time::Instant::now();
+    let _stamp = std::time::SystemTime::now();
+    weights.values().sum()
+}

@@ -1,0 +1,28 @@
+// Fixture: wall-clock reads are fine inside Clock impls (virtual path
+// `rust/src/serve/mod.rs`), and HashMap is fine outside ode/grad/ckpt.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub trait Clock {
+    fn now(&self) -> Instant;
+}
+
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        let _warm = Instant::now();
+        WallClock
+    }
+}
+
+pub fn registry() -> HashMap<String, usize> {
+    HashMap::new()
+}

@@ -1,0 +1,6 @@
+// Fixture: an env read smuggled into solver code (virtual path
+// `rust/src/ode/solver.rs`) must be flagged by the env-knob rule.
+
+pub fn step_budget() -> usize {
+    std::env::var("NODAL_WORKERS").map_or(64, |s| s.len())
+}

@@ -1,0 +1,18 @@
+// Fixture: env reads are fine inside the designated parse-and-clamp helper
+// (linted under the virtual path `rust/src/pool.rs`) and inside tests.
+
+pub fn default_workers() -> usize {
+    std::env::var("NODAL_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .clamp(1, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reads_env_freely() {
+        std::env::var("NODAL_WORKERS").ok();
+    }
+}

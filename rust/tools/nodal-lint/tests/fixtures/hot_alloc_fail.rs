@@ -1,0 +1,16 @@
+// Fixture: six allocations inside a `hot` region, one per banned family.
+// Virtual path `rust/src/grad/batch.rs`.
+
+// nodal-lint: hot
+pub fn reverse_sweep(lam: &[f64]) -> Vec<f64> {
+    let a = vec![0.0; lam.len()];
+    let mut b: Vec<f64> = Vec::new();
+    let c = lam.to_vec();
+    let d: Vec<f64> = lam.iter().copied().collect();
+    let e = c.clone();
+    let f = Box::new(e);
+    b.extend_from_slice(&a);
+    b.extend_from_slice(&d);
+    b.extend_from_slice(&f);
+    b
+}

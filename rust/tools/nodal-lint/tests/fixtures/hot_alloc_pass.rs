@@ -1,0 +1,22 @@
+// Fixture: a hot region that reuses pre-sized scratch — no allocation in
+// the marked loop, so the hot-alloc rule stays quiet. The allocations all
+// happen before the marker. Virtual path `rust/src/ode/batch.rs`.
+
+pub fn advance(z: &mut [f64], k: &[f64], rounds: usize) {
+    let mut active: Vec<usize> = (0..z.len()).collect();
+    let mut next_active: Vec<usize> = Vec::with_capacity(active.len());
+    let mut scratch = vec![0.0; z.len()];
+
+    // nodal-lint: hot
+    for _ in 0..rounds {
+        next_active.clear();
+        for &a in &active {
+            scratch[a] = z[a] + k[a];
+            if scratch[a] > 0.0 {
+                next_active.push(a);
+            }
+        }
+        z.copy_from_slice(&scratch);
+        std::mem::swap(&mut active, &mut next_active);
+    }
+}

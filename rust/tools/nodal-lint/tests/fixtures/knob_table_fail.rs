@@ -1,0 +1,6 @@
+// Fixture: references a knob that the lib.rs table does not document.
+// Linted together with knob_table_lib.rs (as `rust/src/lib.rs`).
+
+pub fn results_dir() -> String {
+    std::env::var("NODAL_UNDOCUMENTED_KNOB").unwrap_or_else(|_| "results".to_string())
+}

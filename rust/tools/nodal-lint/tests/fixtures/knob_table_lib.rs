@@ -1,0 +1,8 @@
+//! Fixture: a miniature main-crate lib.rs whose knob table documents only
+//! `NODAL_WORKERS`. Linted under the virtual path `rust/src/lib.rs`.
+//!
+//! | knob            | meaning              |
+//! |-----------------|----------------------|
+//! | `NODAL_WORKERS` | worker thread count  |
+
+pub mod pool;

@@ -1,0 +1,12 @@
+// Fixture: four panic-isolation violations in serve code (virtual path
+// `rust/src/serve/worker.rs`): .unwrap() on request data, .expect(),
+// panic!, and an uncommented constant index.
+
+pub fn execute(batch: &FormedBatch) -> f64 {
+    let lam = batch.items[0].req.grad.as_ref().unwrap();
+    let z = batch.traj.last().expect("non-empty trajectory");
+    if lam.is_empty() {
+        panic!("empty cotangent");
+    }
+    z + lam.len() as f64
+}

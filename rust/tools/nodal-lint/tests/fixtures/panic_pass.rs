@@ -1,0 +1,16 @@
+// Fixture: serve code (virtual path `rust/src/serve/worker.rs`) that
+// handles failure without panicking: poison-idiom unwrap on a mutex,
+// a bound-commented constant index, and error returns elsewhere.
+
+pub fn execute(core: &Core, batch: &FormedBatch) -> Result<(), ServeError> {
+    let mut led = core.inflight.lock().unwrap();
+    // Formed batches are non-empty by construction (batcher never drains
+    // an empty bucket), so indexing the first item is safe.
+    let first = &batch.items[0];
+    let grad = match first.req.grad.as_ref() {
+        Some(g) => g,
+        None => return Err(ServeError::MissingGrad),
+    };
+    led.count += grad.len();
+    Ok(())
+}

@@ -1,0 +1,10 @@
+// Fixture: an OdeFunc impl overriding eval_batch with no bit-equality
+// test anywhere naming the type. Virtual path `rust/src/ode/rogue.rs`.
+
+pub struct RogueFlow;
+
+impl OdeFunc for RogueFlow {
+    fn eval_batch(&self, _t: &[f64], z: &[f64], dz: &mut [f64]) {
+        dz.copy_from_slice(z);
+    }
+}

@@ -1,0 +1,29 @@
+// Fixture: an OdeFunc impl overriding both batch methods (virtual path
+// `rust/src/ode/vdp.rs`). Clean only when linted together with
+// parity_pass_test.rs, whose bit-equality test names VanDerPol.
+
+pub struct VanDerPol {
+    mu: f64,
+}
+
+impl OdeFunc for VanDerPol {
+    fn eval(&self, _t: f64, z: &[f64], dz: &mut [f64]) {
+        dz[0] = z[1] * self.mu;
+    }
+
+    fn eval_batch(&self, _t: &[f64], z: &[f64], dz: &mut [f64]) {
+        dz.copy_from_slice(z);
+    }
+
+    fn vjp_batch(&self, _t: &[f64], z: &[f64], lam: &mut [f64]) {
+        lam.copy_from_slice(z);
+    }
+}
+
+// The generic forwarding impl is exempt: a single-letter target is a
+// generic parameter, not a parity surface of its own.
+impl<F: OdeFunc + ?Sized> OdeFunc for &F {
+    fn eval_batch(&self, t: &[f64], z: &[f64], dz: &mut [f64]) {
+        (**self).eval_batch(t, z, dz)
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: the bit-equality test that links parity_pass_impl.rs. Virtual
+// path `rust/tests/parity.rs`. The marker is the `bit` name segment.
+
+#[test]
+fn vdp_vjp_batch_bit_identical_to_scalar() {
+    let f = VanDerPol { mu: 1.0 };
+    let scalar = run_scalar(&f);
+    let batched = run_batched(&f);
+    assert_eq!(scalar.to_bits(), batched.to_bits());
+}

@@ -1,0 +1,174 @@
+//! Fixture-driven tests for each lint rule (one passing and one failing
+//! snippet per rule, allow accepted/rejected), plus the meta-test that the
+//! real tree is lint-clean.
+//!
+//! Fixtures live in `tests/fixtures/` and are linted under *virtual* paths
+//! so the path-scoped rules (serve/, ode/, tests/) engage exactly as they
+//! would in the real tree.
+
+use std::path::Path;
+
+use nodal_lint::{lint_sources, lint_tree, Outcome, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_PANIC, R_PARITY};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+fn lint_one(virtual_path: &str, name: &str) -> Outcome {
+    lint_sources(&[(virtual_path.to_string(), fixture(name))])
+}
+
+fn rules_of(out: &Outcome) -> Vec<&'static str> {
+    out.diags.iter().map(|d| d.rule).collect()
+}
+
+// ---- rule 1: env-knob ----
+
+#[test]
+fn env_knob_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/pool.rs", "env_knob_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn env_knob_fail_fixture_fires() {
+    let out = lint_one("rust/src/ode/solver.rs", "env_knob_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_ENV], "{:?}", out.diags);
+}
+
+#[test]
+fn knob_table_flags_undocumented_knob() {
+    let lib = ("rust/src/lib.rs".to_string(), fixture("knob_table_lib.rs"));
+    // A documented knob passes…
+    let ok = ("rust/src/pool.rs".to_string(), fixture("env_knob_pass.rs"));
+    let out = lint_sources(&[lib.clone(), ok]);
+    assert!(out.clean(), "{:?}", out.diags);
+    // …an undocumented one is flagged even inside a designated helper.
+    let bad = ("rust/src/report.rs".to_string(), fixture("knob_table_fail.rs"));
+    let out = lint_sources(&[lib, bad]);
+    assert_eq!(rules_of(&out), vec![R_ENV], "{:?}", out.diags);
+    assert!(out.diags[0].msg.contains("NODAL_UNDOCUMENTED_KNOB"), "{:?}", out.diags);
+}
+
+// ---- rule 2: determinism ----
+
+#[test]
+fn determinism_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/serve/mod.rs", "determinism_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn determinism_fail_fixture_fires() {
+    let out = lint_one("rust/src/ode/solver.rs", "determinism_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_DET; 4], "{:?}", out.diags);
+}
+
+// ---- rule 3: hot-alloc ----
+
+#[test]
+fn hot_alloc_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/ode/batch.rs", "hot_alloc_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn hot_alloc_fail_fixture_fires_per_family() {
+    let out = lint_one("rust/src/grad/batch.rs", "hot_alloc_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_HOT; 6], "{:?}", out.diags);
+    for family in ["vec!", "Vec::new", ".to_vec()", ".collect()", ".clone()", "Box::new"] {
+        assert!(
+            out.diags.iter().any(|d| d.msg.contains(family)),
+            "missing {family}: {:?}",
+            out.diags
+        );
+    }
+}
+
+// ---- rule 4: panic-isolation ----
+
+#[test]
+fn panic_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/serve/worker.rs", "panic_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn panic_fail_fixture_fires() {
+    let out = lint_one("rust/src/serve/worker.rs", "panic_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_PANIC; 4], "{:?}", out.diags);
+}
+
+// ---- rule 5: parity-linkage ----
+
+#[test]
+fn parity_unlinked_impl_fires_per_override() {
+    let out = lint_one("rust/src/ode/rogue.rs", "parity_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_PARITY], "{:?}", out.diags);
+    // Both overrides of an unlinked impl are reported.
+    let out = lint_one("rust/src/ode/vdp.rs", "parity_pass_impl.rs");
+    assert_eq!(rules_of(&out), vec![R_PARITY; 2], "{:?}", out.diags);
+}
+
+#[test]
+fn parity_linked_by_cross_file_bit_test_is_clean() {
+    let out = lint_sources(&[
+        ("rust/src/ode/vdp.rs".to_string(), fixture("parity_pass_impl.rs")),
+        ("rust/tests/parity.rs".to_string(), fixture("parity_pass_test.rs")),
+    ]);
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+// ---- escape hatch ----
+
+#[test]
+fn allow_with_reason_suppresses() {
+    let out = lint_one("rust/src/serve/worker.rs", "allow_accepted.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+    assert_eq!(out.suppressed, 1);
+}
+
+#[test]
+fn allow_without_reason_or_with_unknown_rule_is_rejected() {
+    let out = lint_one("rust/src/serve/worker.rs", "allow_rejected.rs");
+    let directives = out.diags.iter().filter(|d| d.rule == R_DIRECTIVE).count();
+    let panics = out.diags.iter().filter(|d| d.rule == R_PANIC).count();
+    assert_eq!((directives, panics), (2, 2), "{:?}", out.diags);
+    assert_eq!(out.suppressed, 0);
+}
+
+// ---- acceptance: every rule has a failing fixture, and the tree is clean ----
+
+#[test]
+fn every_rule_has_a_failing_fixture() {
+    let cases = [
+        (R_ENV, "rust/src/ode/solver.rs", "env_knob_fail.rs"),
+        (R_DET, "rust/src/ode/solver.rs", "determinism_fail.rs"),
+        (R_HOT, "rust/src/grad/batch.rs", "hot_alloc_fail.rs"),
+        (R_PANIC, "rust/src/serve/worker.rs", "panic_fail.rs"),
+        (R_PARITY, "rust/src/ode/rogue.rs", "parity_fail.rs"),
+    ];
+    for (rule, vpath, name) in cases {
+        let out = lint_one(vpath, name);
+        assert!(
+            out.diags.iter().any(|d| d.rule == rule),
+            "fixture {name} did not trip {rule}: {:?}",
+            out.diags
+        );
+    }
+}
+
+#[test]
+fn real_tree_is_lint_clean() {
+    // crate dir = <root>/rust/tools/nodal-lint → third ancestor is <root>.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).ancestors().nth(3).unwrap();
+    let out = lint_tree(root).expect("lint_tree reads the repo");
+    assert!(out.files > 10, "walked only {} files — wrong root?", out.files);
+    let rendered: Vec<String> = out
+        .diags
+        .iter()
+        .map(|d| format!("{}:{}: [{}] {}", d.path, d.line, d.rule, d.msg))
+        .collect();
+    assert!(out.clean(), "real tree is not lint-clean:\n{}", rendered.join("\n"));
+}
