@@ -1,0 +1,110 @@
+//! Distributed gradient-reduction workload: throughput of the fixed
+//! adjacent-pairwise tree combine versus the flat sequential fold, and
+//! the wire-payload savings of grouped leaf bucketing versus one payload
+//! per leaf.
+//!
+//! Before timing anything the bench asserts the reduction contract on
+//! the actual bench inputs: the tree combine is bit-identical across
+//! repeats, bit-identical to an independently written power-of-two
+//! recursive-halving reference, and the flat fold matches its own
+//! sequential reference — determinism is a precondition of the numbers
+//! meaning anything.
+//!
+//! `--smoke` shrinks the timing target for CI; rows append to
+//! `results/bench/dist_reduce.jsonl` via `bench::Runner`.
+
+use nodal::bench::Runner;
+use nodal::dist::reduce::{
+    bucket_leaves, flat_combine, tree_combine, GradLeaf, DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES,
+};
+use nodal::util::Pcg64;
+
+/// Independent reference: recursive halving, which for a power-of-two
+/// world is the same association as `tree_combine`'s round-based sweep.
+fn halving_reference(partials: &[Vec<f32>]) -> Vec<f32> {
+    assert!(partials.len().is_power_of_two());
+    if partials.len() == 1 {
+        return partials[0].clone();
+    }
+    let mid = partials.len() / 2;
+    let mut left = halving_reference(&partials[..mid]);
+    let right = halving_reference(&partials[mid..]);
+    for (a, r) in left.iter_mut().zip(&right) {
+        *a += *r;
+    }
+    left
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn partials(world: usize, n: usize, rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    (0..world)
+        .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+fn bench_world(r: &mut Runner, world: usize, n: usize, rng: &mut Pcg64) {
+    let p = partials(world, n, rng);
+
+    // ---- determinism assertions BEFORE timing ----
+    let tree = tree_combine(&p);
+    assert_eq!(bits(&tree), bits(&tree_combine(&p)), "tree must be bit-stable across runs");
+    assert_eq!(
+        bits(&tree),
+        bits(&halving_reference(&p)),
+        "tree association must equal recursive halving for a power-of-two world"
+    );
+    let flat = flat_combine(&p);
+    let mut seq = p[0].clone();
+    for q in &p[1..] {
+        for (a, b) in seq.iter_mut().zip(q) {
+            *a += *b;
+        }
+    }
+    assert_eq!(bits(&flat), bits(&seq), "flat fold must equal the sequential reference");
+
+    r.bench(&format!("tree_combine_w{world}_n{n}"), || {
+        std::hint::black_box(tree_combine(&p)[0]);
+    });
+    r.bench(&format!("flat_combine_w{world}_n{n}"), || {
+        std::hint::black_box(flat_combine(&p)[0]);
+    });
+    r.record(&format!("elements_per_reduce_w{world}_n{n}"), (world * n) as f64);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut r = Runner::new("dist_reduce");
+    if smoke {
+        r.set_target_s(0.05);
+    }
+    let mut rng = Pcg64::seed(7);
+
+    // A small model's flattened gradient and a large one's.
+    bench_world(&mut r, 8, 1 << 14, &mut rng);
+    bench_world(&mut r, 8, 1 << 18, &mut rng);
+
+    // Payload counts: many small leaves plus a couple of large tensors —
+    // the shape grouped bucketing exists for.
+    let mut leaves: Vec<GradLeaf> = Vec::new();
+    for i in 0..24 {
+        let n = 64 << (i % 6); // 64..=2048 floats, all under the threshold
+        leaves.push(GradLeaf::new(&format!("small{i}"), (0..n).map(|j| j as f32).collect()));
+    }
+    for i in 0..2 {
+        leaves.push(GradLeaf::new(&format!("large{i}"), vec![1.0; 32 * 1024]));
+    }
+    let grouped = bucket_leaves(&leaves, DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES).len();
+    assert!(grouped < leaves.len(), "bucketing must merge the small leaves");
+    println!(
+        "payloads: {} per-leaf -> {} grouped (threshold {} KiB)",
+        leaves.len(),
+        grouped,
+        DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES / 1024
+    );
+    r.record("payloads_per_leaf", leaves.len() as f64);
+    r.record("payloads_grouped", grouped as f64);
+    // Runner::drop saves results/bench/dist_reduce.jsonl.
+}

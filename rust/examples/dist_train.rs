@@ -1,0 +1,80 @@
+//! Real two-process distributed training smoke (a CI hard gate): rank 0
+//! re-execs this binary as rank 1, runs one data-parallel step over
+//! loopback TCP, and asserts the reduced gradient is **bit-identical**
+//! to the single-process `grad_accum_reference` fold.
+//!
+//!     cargo run --release --offline --example dist_train
+//!
+//! Run manually as a worker with
+//! `NODAL_DIST_RANK=1 NODAL_DIST_WORLD_SIZE=2 NODAL_DIST_PORT=<p>`.
+
+use anyhow::Result;
+
+use nodal::dist::{
+    grad_accum_reference, run_root, run_worker, DistConfig, RootOpts, StepSpec, TransportOpts,
+};
+use nodal::ode::analytic::Linear;
+use nodal::ode::{tableau, IntegrateOpts};
+use nodal::util::Pcg64;
+use std::net::TcpListener;
+use std::process::Command;
+
+/// The identical workload every rank derives from the same seed: one
+/// mini-batch of per-sample adaptive spans over a linear flow.
+fn spec(f: &Linear) -> StepSpec<'_> {
+    let (b, d) = (32usize, 4usize);
+    let mut rng = Pcg64::seed(0x51e);
+    StepSpec {
+        f,
+        tab: tableau::by_name("rk45").unwrap(),
+        opts: IntegrateOpts::with_tol(1e-5, 1e-7),
+        t0s: vec![0.0; b],
+        t1s: (0..b).map(|_| rng.range(0.5, 1.5)).collect(),
+        z0: (0..b * d).map(|_| rng.uniform_f32() - 0.5).collect(),
+        lam: vec![1.0; b * d],
+    }
+}
+
+fn main() -> Result<()> {
+    let cfg = DistConfig::from_env();
+    let f = Linear::new(-0.6, 4);
+    let s = spec(&f);
+
+    if cfg.rank != 0 {
+        // Child process: work one step against the parent's coordinator.
+        let g = run_worker(&cfg.root_addr(), cfg.rank, &s, &TransportOpts::default())?;
+        println!("rank {}: members {:?} nfe {}", cfg.rank, g.members, g.nfe);
+        return Ok(());
+    }
+
+    // Parent: bind an ephemeral port, spawn rank 1 as a real process, and
+    // coordinate the step.
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    let exe = std::env::current_exe()?;
+    let mut child = Command::new(exe)
+        .env("NODAL_DIST_RANK", "1")
+        .env("NODAL_DIST_WORLD_SIZE", "2")
+        .env("NODAL_DIST_PORT", port.to_string())
+        .spawn()?;
+
+    let got = run_root(&listener, 2, &s, &RootOpts::default())?;
+    let status = child.wait()?;
+    assert!(status.success(), "worker process failed: {status}");
+    assert_eq!(got.members, vec![0, 1], "both processes must participate");
+    assert_eq!(got.attempts, 1);
+
+    let want = grad_accum_reference(&s, 2)?;
+    let got_bits: Vec<u32> = got.dl_dtheta().iter().map(|x| x.to_bits()).collect();
+    let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "2-process gradient must match the reference bit for bit");
+
+    println!(
+        "2-process step OK: members {:?} attempts {} nfe {} dl_dtheta {:?}",
+        got.members,
+        got.attempts,
+        got.nfe,
+        got.dl_dtheta()
+    );
+    Ok(())
+}

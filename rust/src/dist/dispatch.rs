@@ -1,0 +1,500 @@
+//! Key-affine request dispatcher over a fleet of serve shards.
+//!
+//! The dispatcher owns one long-lived connection per [`ShardServer`]
+//! (`dist::shard`) and routes every [`SolveRequest`] by its
+//! [`BatchKey`] hash, so requests that would coalesce into one batch on
+//! a single server still land on the same shard and keep coalescing.
+//! Two departures from pure hashing:
+//!
+//! * **Work stealing** — when the hash-preferred shard is backed up by
+//!   at least `steal_margin` more in-flight requests than the least
+//!   loaded shard, the request goes to the latter instead. A margin of
+//!   zero disables stealing. Stealing trades batch affinity for
+//!   latency, which is why it only kicks in past a real imbalance.
+//! * **Failover** — a shard whose socket dies is marked unhealthy; its
+//!   pending requests are drained and re-dispatched to the survivors,
+//!   and the hash ring contracts deterministically to the healthy set.
+//!   Responses race benignly: [`ResponseSlot`] is first-write-wins, so
+//!   a late answer from a shard declared dead is simply ignored.
+//!
+//! [`ServeError`]s decoded off the wire — [`ServeError::Overloaded`]
+//! included — surface through [`ResponseHandle::wait`] exactly as they
+//! do in-process, so backpressure crosses the process boundary intact.
+//!
+//! [`ShardServer`]: super::shard::ShardServer
+//! [`BatchKey`]: crate::serve::request::BatchKey
+
+use super::transport::{connect_retry, recv_frame, send_frame, TransportOpts};
+use crate::serve::metrics::{LatencySummary, MetricsSnapshot};
+use crate::serve::request::{
+    BatchKey, ResponseHandle, ResponseSlot, ServeError, SolveRequest, SolveResponse,
+};
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Dispatcher tuning.
+#[derive(Debug, Clone)]
+pub struct DispatcherConfig {
+    /// Steal when the hash-preferred shard has at least this many more
+    /// in-flight requests than the least loaded one. Zero disables.
+    pub steal_margin: usize,
+    /// Connection and I/O behaviour for the shard links.
+    pub transport: TransportOpts,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        DispatcherConfig { steal_margin: 8, transport: TransportOpts::default() }
+    }
+}
+
+/// FNV-1a over every field of the batch key. Stable across runs and
+/// platforms (no `RandomState`), so shard placement is reproducible —
+/// tests can precompute which shard a key lands on.
+pub fn key_hash(key: &BatchKey) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(key.dynamics.as_bytes());
+    eat(&[0xff]); // separator: "ab"+"c" must not collide with "a"+"bc"
+    eat(key.tab.as_bytes());
+    eat(&[0xff]);
+    eat(&[key.dir as u8, key.tol_kind, u8::from(key.wants_grad)]);
+    eat(&key.tol_a.to_le_bytes());
+    eat(&key.tol_b.to_le_bytes());
+    h
+}
+
+/// Pick a shard for `hash` among `loads` (pairs of shard index and
+/// in-flight count for every *healthy* shard, in fixed index order).
+/// The hash-preferred entry wins unless stealing is enabled and it is
+/// at least `steal_margin` busier than the least loaded entry.
+///
+/// Panics on an empty slate; callers check for survivors first.
+pub fn route(hash: u64, loads: &[(usize, usize)], steal_margin: usize) -> usize {
+    assert!(!loads.is_empty(), "route over zero shards");
+    let primary = loads[(hash % loads.len() as u64) as usize];
+    if steal_margin == 0 {
+        return primary.0;
+    }
+    // min_by_key is stable: ties go to the lowest shard index.
+    let least = loads.iter().copied().min_by_key(|&(_, l)| l).unwrap_or(primary);
+    if primary.1 >= least.1 + steal_margin {
+        least.0
+    } else {
+        primary.0
+    }
+}
+
+struct PendingEntry {
+    req: SolveRequest,
+    slot: Arc<ResponseSlot>,
+}
+
+struct ShardConn {
+    addr: String,
+    writer: Mutex<TcpStream>,
+    /// Requests sent but not yet answered, by correlation id. The map
+    /// length doubles as the shard's load figure for routing.
+    pending: Mutex<BTreeMap<u64, PendingEntry>>,
+    healthy: AtomicBool,
+}
+
+struct Inner {
+    shards: Vec<ShardConn>,
+    next_id: AtomicUsize,
+    steal_margin: usize,
+    transport: TransportOpts,
+}
+
+impl Inner {
+    /// Route and send, registering the pending entry *before* the write
+    /// so the response cannot race past an empty map. On a dead socket,
+    /// mark the shard unhealthy and retry on the survivors — unless the
+    /// reader thread's drain already adopted the entry, in which case
+    /// the re-dispatch is its problem and ours is done.
+    fn dispatch(&self, req: SolveRequest, slot: Arc<ResponseSlot>) -> Result<(), ServeError> {
+        let hash = key_hash(&req.batch_key());
+        loop {
+            let loads: Vec<(usize, usize)> = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.healthy.load(Ordering::SeqCst))
+                .map(|(i, s)| (i, s.pending.lock().unwrap().len()))
+                .collect();
+            if loads.is_empty() {
+                return Err(ServeError::ShuttingDown);
+            }
+            let shard = &self.shards[route(hash, &loads, self.steal_margin)];
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst) as u64;
+            shard
+                .pending
+                .lock()
+                .unwrap()
+                .insert(id, PendingEntry { req: req.clone(), slot: slot.clone() });
+            let sent = {
+                let mut w = shard.writer.lock().unwrap();
+                send_frame(&mut *w, &solve_message(id, &req))
+            };
+            if sent.is_ok() {
+                // A write into a dying socket can still "succeed" (the OS
+                // buffers it) after the reader saw EOF and ran its drain.
+                // The reader marks unhealthy *before* draining, so if the
+                // flag is still set here, our entry is either already
+                // adopted by that drain or it is ours to retry — never
+                // silently leaked.
+                if shard.healthy.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                if shard.pending.lock().unwrap().remove(&id).is_some() {
+                    continue; // the drain ran before our insert: retry
+                }
+                return Ok(()); // the drain adopted the entry
+            }
+            shard.healthy.store(false, Ordering::SeqCst);
+            if shard.pending.lock().unwrap().remove(&id).is_some() {
+                continue; // still ours: try the survivors
+            }
+            return Ok(()); // the reader's drain took it
+        }
+    }
+}
+
+fn solve_message(id: u64, req: &SolveRequest) -> Json {
+    obj(vec![
+        ("kind", "solve".into()),
+        ("id", (id as usize).into()),
+        ("req", req.to_json()),
+    ])
+}
+
+/// Client-side front door for a shard fleet. See the module docs.
+pub struct Dispatcher {
+    inner: Arc<Inner>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Dispatcher {
+    /// Dial every shard (with `cfg.transport` retry/backoff) and start a
+    /// reader thread per link. Fails if any shard is unreachable —
+    /// starting degraded is a deployment error, unlike *becoming*
+    /// degraded, which failover handles.
+    pub fn connect(addrs: &[String], cfg: &DispatcherConfig) -> Result<Dispatcher> {
+        let mut shards = Vec::with_capacity(addrs.len());
+        let mut read_halves = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = connect_retry(addr, &cfg.transport)
+                .with_context(|| format!("dial shard {addr}"))?;
+            let read_half = stream.try_clone().context("clone shard stream")?;
+            shards.push(ShardConn {
+                addr: addr.clone(),
+                writer: Mutex::new(stream),
+                pending: Mutex::new(BTreeMap::new()),
+                healthy: AtomicBool::new(true),
+            });
+            read_halves.push(read_half);
+        }
+        let inner = Arc::new(Inner {
+            shards,
+            next_id: AtomicUsize::new(0),
+            steal_margin: cfg.steal_margin,
+            transport: cfg.transport.clone(),
+        });
+        let readers = read_halves
+            .into_iter()
+            .enumerate()
+            .map(|(idx, stream)| {
+                let inner = inner.clone();
+                std::thread::spawn(move || reader_loop(&inner, idx, stream))
+            })
+            .collect();
+        Ok(Dispatcher { inner, readers: Mutex::new(readers) })
+    }
+
+    /// Route `req` to a shard and return a handle, exactly like
+    /// `SolveServer::submit` but across the wire. Admission errors from
+    /// the shard (including `Overloaded`) come back through the handle;
+    /// `Err` here means no healthy shard remains.
+    pub fn submit(&self, req: SolveRequest) -> Result<ResponseHandle, ServeError> {
+        let (handle, slot) = ResponseHandle::new();
+        self.inner.dispatch(req, slot)?;
+        Ok(handle)
+    }
+
+    /// Number of shards still considered healthy.
+    pub fn healthy_shards(&self) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .filter(|s| s.healthy.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Fetch a metrics snapshot from every healthy shard over fresh
+    /// short-lived connections (the long-lived links stay dedicated to
+    /// solve traffic).
+    pub fn metrics(&self) -> Result<DistMetricsReport> {
+        let mut shards = Vec::new();
+        for s in &self.inner.shards {
+            if !s.healthy.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut c = connect_retry(&s.addr, &self.inner.transport)
+                .with_context(|| format!("dial shard {} for metrics", s.addr))?;
+            send_frame(&mut c, &obj(vec![("kind", "metrics".into())]))?;
+            let m = recv_frame(&mut c)?;
+            let snap = MetricsSnapshot::from_json(m.get("snapshot")?)
+                .with_context(|| format!("metrics snapshot from {}", s.addr))?;
+            shards.push((s.addr.clone(), snap));
+        }
+        Ok(DistMetricsReport { shards })
+    }
+
+    /// Close every shard link and join the reader threads. Requests
+    /// still pending when the links drop are fulfilled with
+    /// [`ServeError::ShuttingDown`] by the readers' drain path.
+    pub fn shutdown(&self) {
+        for s in &self.inner.shards {
+            s.healthy.store(false, Ordering::SeqCst);
+            let _ = s.writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        }
+        for h in self.readers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-link reader: decode correlated responses and fulfil their slots.
+/// On EOF (shard death or dispatcher shutdown) drain the link's pending
+/// map and re-dispatch every orphan to the survivors; with none left,
+/// fail the orphans with `ShuttingDown` so no waiter hangs.
+fn reader_loop(inner: &Inner, idx: usize, mut stream: TcpStream) {
+    let shard = &inner.shards[idx];
+    loop {
+        let msg = match recv_frame(&mut stream) {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        if !matches!(msg.opt("kind"), Some(Json::Str(k)) if k == "resp") {
+            continue;
+        }
+        let Ok(id) = msg.get("id").and_then(Json::as_usize) else {
+            continue;
+        };
+        let Some(entry) = shard.pending.lock().unwrap().remove(&(id as u64)) else {
+            continue; // already failed over; late answer loses the race
+        };
+        let ok = matches!(msg.opt("ok"), Some(Json::Bool(true)));
+        let result = if ok {
+            match msg.get("resp").and_then(SolveResponse::from_json) {
+                Ok(r) => Ok(r),
+                Err(e) => Err(ServeError::Solver(format!("undecodable response: {e}"))),
+            }
+        } else {
+            match msg.get("err").and_then(ServeError::from_json) {
+                Ok(e) => Err(e),
+                Err(e) => Err(ServeError::Solver(format!("undecodable error frame: {e}"))),
+            }
+        };
+        entry.slot.fulfill(result);
+    }
+    shard.healthy.store(false, Ordering::SeqCst);
+    let orphans: Vec<PendingEntry> = {
+        let mut pending = shard.pending.lock().unwrap();
+        let ids: Vec<u64> = pending.keys().copied().collect();
+        ids.into_iter().filter_map(|id| pending.remove(&id)).collect()
+    };
+    for e in orphans {
+        if inner.dispatch(e.req, e.slot.clone()).is_err() {
+            e.slot.fulfill(Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
+/// Per-shard snapshots plus a fleet-wide aggregate.
+pub struct DistMetricsReport {
+    pub shards: Vec<(String, MetricsSnapshot)>,
+}
+
+impl DistMetricsReport {
+    /// Merge the shard snapshots into one fleet view. Counters add;
+    /// means are count-weighted; latency quantiles are not recoverable
+    /// from per-shard summaries, so the merged p50/p95/p99 report the
+    /// max across shards — a conservative upper bound, documented as
+    /// such.
+    pub fn totals(&self) -> MetricsSnapshot {
+        let mut t = MetricsSnapshot::default();
+        let mut batch_weight = 0.0f64;
+        for (_, m) in &self.shards {
+            t.submitted += m.submitted;
+            t.completed += m.completed;
+            t.rejected += m.rejected;
+            t.failed += m.failed;
+            t.batches += m.batches;
+            t.nfe_total += m.nfe_total;
+            t.nfe_max = t.nfe_max.max(m.nfe_max);
+            batch_weight += m.mean_batch_size * m.batches as f64;
+            if m.batch_sizes.len() > t.batch_sizes.len() {
+                t.batch_sizes.resize(m.batch_sizes.len(), 0);
+            }
+            for (slot, c) in t.batch_sizes.iter_mut().zip(&m.batch_sizes) {
+                *slot += c;
+            }
+            t.queue_wait = merge_latency(&t.queue_wait, &m.queue_wait);
+            t.service = merge_latency(&t.service, &m.service);
+        }
+        t.mean_batch_size = if t.batches > 0 { batch_weight / t.batches as f64 } else { 0.0 };
+        t.nfe_mean = if t.completed > 0 { t.nfe_total as f64 / t.completed as f64 } else { 0.0 };
+        t
+    }
+}
+
+fn merge_latency(a: &LatencySummary, b: &LatencySummary) -> LatencySummary {
+    let count = a.count + b.count;
+    let mean_ms = if count > 0 {
+        (a.mean_ms * a.count as f64 + b.mean_ms * b.count as f64) / count as f64
+    } else {
+        0.0
+    };
+    LatencySummary {
+        count,
+        mean_ms,
+        p50_ms: a.p50_ms.max(b.p50_ms),
+        p95_ms: a.p95_ms.max(b.p95_ms),
+        p99_ms: a.p99_ms.max(b.p99_ms),
+        max_ms: a.max_ms.max(b.max_ms),
+    }
+}
+
+impl std::fmt::Display for DistMetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (addr, m) in &self.shards {
+            writeln!(f, "-- shard {addr} --")?;
+            write!(f, "{m}")?;
+        }
+        writeln!(f, "-- fleet ({} shards) --", self.shards.len())?;
+        write!(f, "{}", self.totals())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::tableau;
+    use crate::serve::request::Tolerance;
+
+    fn req(dynamics: &str, rtol: f64) -> SolveRequest {
+        SolveRequest {
+            dynamics: dynamics.to_string(),
+            t0: 0.0,
+            t1: 1.0,
+            z0: vec![1.0, 0.0],
+            tab: tableau::by_name("rk45").unwrap(),
+            tol: Tolerance::Adaptive { rtol, atol: 1e-6 },
+            grad: None,
+        }
+    }
+
+    #[test]
+    fn key_hash_is_stable_and_field_sensitive() {
+        let a = key_hash(&req("vdp", 1e-3).batch_key());
+        assert_eq!(a, key_hash(&req("vdp", 1e-3).batch_key()), "same key, same hash");
+        assert_ne!(a, key_hash(&req("linear", 1e-3).batch_key()), "dynamics");
+        assert_ne!(a, key_hash(&req("vdp", 1e-4).batch_key()), "tolerance");
+        let mut g = req("vdp", 1e-3);
+        g.grad = Some(vec![1.0, 0.0]);
+        assert_ne!(a, key_hash(&g.batch_key()), "grad flag");
+    }
+
+    #[test]
+    fn route_prefers_the_hash_shard_until_the_margin_trips() {
+        let loads = vec![(0, 10), (1, 0), (2, 3)];
+        // hash 3 % 3 == 0 -> shard 0, which is 10 ahead of shard 1.
+        assert_eq!(route(3, &loads, 8), 1, "steals to the least loaded");
+        assert_eq!(route(3, &loads, 11), 0, "margin not reached: stays");
+        assert_eq!(route(3, &loads, 0), 0, "margin 0 disables stealing");
+        // hash 4 % 3 == 1 -> already the least loaded shard.
+        assert_eq!(route(4, &loads, 1), 1);
+    }
+
+    #[test]
+    fn route_contracts_deterministically_when_shards_die() {
+        // Healthy set {0,2}: position hash%2 indexes into the survivors.
+        let survivors = vec![(0, 0), (2, 0)];
+        assert_eq!(route(6, &survivors, 8), 0);
+        assert_eq!(route(7, &survivors, 8), 2);
+        // Load ties steal to the lowest index (stable min).
+        let tied = vec![(0, 5), (1, 1), (2, 1)];
+        assert_eq!(route(0, &tied, 4), 1);
+    }
+
+    fn lat(count: u64, ms: f64) -> LatencySummary {
+        LatencySummary { count, mean_ms: ms, p50_ms: ms, p95_ms: ms, p99_ms: ms, max_ms: ms }
+    }
+
+    #[test]
+    fn latency_merge_weights_means_and_bounds_quantiles() {
+        let a = LatencySummary { p95_ms: 2.0, p99_ms: 2.0, max_ms: 2.0, ..lat(3, 1.0) };
+        let b = lat(1, 5.0);
+        let m = merge_latency(&a, &b);
+        assert_eq!(m.count, 4);
+        assert!((m.mean_ms - 2.0).abs() < 1e-12);
+        assert_eq!(m.p95_ms, 5.0);
+        assert_eq!(m.max_ms, 5.0);
+        let z = merge_latency(&LatencySummary::default(), &LatencySummary::default());
+        assert_eq!(z.count, 0);
+        assert_eq!(z.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn totals_aggregate_across_shards() {
+        let a = MetricsSnapshot {
+            submitted: 10,
+            completed: 8,
+            batches: 4,
+            mean_batch_size: 2.0,
+            batch_sizes: vec![0, 1, 3],
+            nfe_total: 80,
+            nfe_max: 20,
+            ..MetricsSnapshot::default()
+        };
+        let b = MetricsSnapshot {
+            submitted: 6,
+            completed: 4,
+            batches: 2,
+            mean_batch_size: 2.0,
+            batch_sizes: vec![0, 0, 1, 1],
+            nfe_total: 100,
+            nfe_max: 50,
+            ..MetricsSnapshot::default()
+        };
+        let report = DistMetricsReport { shards: vec![("a".into(), a), ("b".into(), b)] };
+        let t = report.totals();
+        assert_eq!(t.submitted, 16);
+        assert_eq!(t.completed, 12);
+        assert_eq!(t.batches, 6);
+        assert!((t.mean_batch_size - 2.0).abs() < 1e-12);
+        assert_eq!(t.batch_sizes, vec![0, 1, 4, 1]);
+        assert_eq!(t.nfe_total, 180);
+        assert_eq!(t.nfe_max, 50);
+        assert!((t.nfe_mean - 15.0).abs() < 1e-12);
+    }
+}

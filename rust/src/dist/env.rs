@@ -1,0 +1,139 @@
+//! `NODAL_DIST_*` knob parsing — the **single** parse-and-clamp source for
+//! the distributed subsystem.
+//!
+//! The env-knob rule (lib.rs "Invariants", rule 1) requires every
+//! environment read to happen in a designated helper next to its clamping
+//! logic. For `dist/` those helpers are [`DistConfig::from_env`] and the
+//! shared [`env_usize`] below; nothing else in the subsystem may touch the
+//! environment, and `nodal-lint` enforces exactly that.
+
+/// Hard cap on world size. Far above any realistic deployment of this
+/// trainer; exists so a corrupt `NODAL_DIST_WORLD_SIZE` cannot make rank 0
+/// wait on thousands of peers that will never call in.
+pub const MAX_WORLD: usize = 256;
+
+/// Default coordinator port when `NODAL_DIST_PORT` is unset.
+pub const DEFAULT_PORT: u16 = 7117;
+
+/// Identity of one process in a distributed run, parsed from the
+/// `NODAL_DIST_{RANK,WORLD_SIZE,PORT,HOSTS}` knobs.
+///
+/// Rank 0 is always the coordinator: it binds the listener, owns the
+/// reduction, and is the only rank whose death is fatal to the step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DistConfig {
+    /// This process's rank in `0..world_size`.
+    pub rank: usize,
+    /// Number of cooperating processes; `1` means fully local (no sockets).
+    pub world_size: usize,
+    /// TCP port the rank-0 coordinator listens on.
+    pub port: u16,
+    /// Host list, index-aligned with ranks; empty means single-host
+    /// loopback. Only `hosts[0]` (the coordinator address) is dialed today;
+    /// the rest are recorded for a future hostfile launcher.
+    pub hosts: Vec<String>,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig::local()
+    }
+}
+
+impl DistConfig {
+    /// The single-process default: a world of one, loopback, no sockets.
+    pub fn local() -> Self {
+        DistConfig { rank: 0, world_size: 1, port: DEFAULT_PORT, hosts: Vec::new() }
+    }
+
+    /// Read and clamp the `NODAL_DIST_*` knobs (see the lib.rs knob table).
+    /// Unset or unparseable values fall back to the single-process
+    /// defaults; `rank` is clamped into `0..world_size` so a stray rank can
+    /// never address a slot outside the configured world.
+    pub fn from_env() -> Self {
+        let world_size = env_usize("NODAL_DIST_WORLD_SIZE", 1, 1, MAX_WORLD);
+        let rank = env_usize("NODAL_DIST_RANK", 0, 0, world_size - 1);
+        let port = env_usize("NODAL_DIST_PORT", DEFAULT_PORT as usize, 1, 65535) as u16;
+        let hosts = match std::env::var("NODAL_DIST_HOSTS") {
+            Ok(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|h| !h.is_empty())
+                .map(String::from)
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        DistConfig { rank, world_size, port, hosts }
+    }
+
+    /// Address of the rank-0 coordinator: `hosts[0]` if a host list was
+    /// given, loopback otherwise.
+    pub fn root_addr(&self) -> String {
+        let host = self.hosts.first().map_or("127.0.0.1", String::as_str);
+        format!("{host}:{}", self.port)
+    }
+}
+
+/// Parse-and-clamp one `usize` knob at the source (the same shape as
+/// `serve::mod`'s `env_clamped`; duplicated rather than shared so each
+/// subsystem's designated helper stays next to its own clamping policy).
+fn env_usize(name: &str, default: usize, lo: usize, hi: usize) -> usize {
+    match std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.clamp(lo, hi),
+        None => default,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test mutates every `NODAL_DIST_*` var (tests within a binary may
+    /// run concurrently, so the env mutations live in a single test).
+    #[test]
+    fn from_env_parses_and_clamps_every_knob() {
+        let keys =
+            ["NODAL_DIST_RANK", "NODAL_DIST_WORLD_SIZE", "NODAL_DIST_PORT", "NODAL_DIST_HOSTS"];
+        for k in keys {
+            std::env::remove_var(k);
+        }
+        let d = DistConfig::from_env();
+        assert_eq!(d, DistConfig::local(), "unset env must yield the local default");
+
+        std::env::set_var("NODAL_DIST_WORLD_SIZE", "4");
+        std::env::set_var("NODAL_DIST_RANK", "2");
+        std::env::set_var("NODAL_DIST_PORT", "9001");
+        std::env::set_var("NODAL_DIST_HOSTS", " a.local , b.local,,c.local ");
+        let d = DistConfig::from_env();
+        assert_eq!(d.world_size, 4);
+        assert_eq!(d.rank, 2);
+        assert_eq!(d.port, 9001);
+        assert_eq!(d.hosts, vec!["a.local", "b.local", "c.local"]);
+        assert_eq!(d.root_addr(), "a.local:9001");
+
+        // Out-of-range values clamp instead of erroring.
+        std::env::set_var("NODAL_DIST_WORLD_SIZE", "100000");
+        std::env::set_var("NODAL_DIST_RANK", "100000");
+        std::env::set_var("NODAL_DIST_PORT", "0");
+        let d = DistConfig::from_env();
+        assert_eq!(d.world_size, MAX_WORLD);
+        assert_eq!(d.rank, MAX_WORLD - 1, "rank clamps into the world");
+        assert_eq!(d.port, 1);
+
+        // Garbage falls back to defaults.
+        std::env::set_var("NODAL_DIST_WORLD_SIZE", "not-a-number");
+        std::env::set_var("NODAL_DIST_RANK", "-3");
+        std::env::set_var("NODAL_DIST_PORT", "");
+        std::env::set_var("NODAL_DIST_HOSTS", " , ,");
+        let d = DistConfig::from_env();
+        assert_eq!(d.world_size, 1);
+        assert_eq!(d.rank, 0);
+        assert_eq!(d.port, DEFAULT_PORT);
+        assert!(d.hosts.is_empty(), "blank host entries are dropped");
+        assert_eq!(d.root_addr(), format!("127.0.0.1:{DEFAULT_PORT}"));
+
+        for k in keys {
+            std::env::remove_var(k);
+        }
+    }
+}

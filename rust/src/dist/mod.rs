@@ -1,0 +1,48 @@
+//! Multi-process scale-out: deterministic data-parallel training and a
+//! sharded solve service, two halves of one subsystem sharing a single
+//! TCP transport.
+//!
+//! **Training** (`train`, `reduce`, `env`): rank 0 shards each
+//! mini-batch deterministically across the world ([`shard_range`]),
+//! every rank runs the same forward/backward locally, and the partial
+//! gradients are combined by a fixed adjacent-pairwise tree
+//! ([`tree_combine`]) whose association depends only on rank slots —
+//! never on message arrival order — so a W-rank step is bit-identical
+//! run to run and equal to [`grad_accum_reference`] computed in one
+//! process. Worker death is survived by re-sharding over the remaining
+//! members and bumping an attempt tag that quarantines stale partials.
+//!
+//! **Serving** (`shard`, `dispatch`): each shard is a `SolveServer`
+//! behind a framed TCP endpoint; the [`Dispatcher`] routes requests by
+//! batch-key hash (preserving coalescing), steals work past a load
+//! margin, propagates `Overloaded` backpressure end-to-end, fails over
+//! dead shards by re-dispatching their pending requests, and merges
+//! per-shard metrics into one [`DistMetricsReport`].
+//!
+//! **Transport** (`transport`): length-prefixed JSON frames over
+//! `std::net::TcpStream` with connect retry, bounded backoff, and I/O
+//! timeouts. f32 payloads travel as bit patterns ([`crate::util::json`])
+//! so NaN, -0.0 and infinities survive the wire bit-exactly.
+//!
+//! Everything is testable in-process: threads on loopback sockets stand
+//! in for processes (`rust/tests/dist_integration.rs`), and CI runs a
+//! real two-process smoke (`examples/dist_train.rs`).
+
+pub mod dispatch;
+pub mod env;
+pub mod reduce;
+pub mod shard;
+pub mod train;
+pub mod transport;
+
+pub use dispatch::{key_hash, route, Dispatcher, DispatcherConfig, DistMetricsReport};
+pub use env::DistConfig;
+pub use reduce::{
+    bucket_leaves, flat_combine, tree_combine, GradLeaf, DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES,
+};
+pub use shard::ShardServer;
+pub use train::{
+    grad_accum_reference, local_partial, run_root, run_worker, shard_range, train_step, DistGrad,
+    RootOpts, StepSpec,
+};
+pub use transport::{connect_retry, recv_frame, send_frame, TransportOpts, MAX_FRAME_BYTES};

@@ -1,0 +1,280 @@
+//! Deterministic gradient reduction.
+//!
+//! Floating-point addition is not associative, so "sum the ranks'
+//! gradients" is only reproducible if the association order is pinned.
+//! This module fixes it structurally: partials are stored by **rank slot**
+//! (never by arrival order) and combined by [`tree_combine`], an
+//! adjacent-pairwise binary tree over those slots. The result is
+//! bit-identical run to run, independent of message timing, and equal to
+//! what a single process computes when it folds the same per-shard
+//! partials through the same tree (`train::grad_accum_reference`).
+//!
+//! Small parameter leaves are bucketed into shared payloads below
+//! [`DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES`] so a model with many tiny
+//! tensors does not pay one frame per tensor.
+
+use crate::util::json::{f32_bits, f32s_from_bits, obj, Json};
+use anyhow::{ensure, Result};
+
+/// Leaves smaller than this are packed together into one wire payload;
+/// leaves at or above it travel alone.
+pub const DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES: usize = 64 * 1024;
+
+/// One named gradient tensor (flattened), the unit of reduction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradLeaf {
+    pub name: String,
+    pub values: Vec<f32>,
+}
+
+impl GradLeaf {
+    pub fn new(name: &str, values: Vec<f32>) -> Self {
+        GradLeaf { name: name.to_string(), values }
+    }
+
+    /// Wire size of the values payload.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![("name", self.name.as_str().into()), ("bits", f32_bits(&self.values))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<GradLeaf> {
+        Ok(GradLeaf {
+            name: v.get("name")?.as_str()?.to_string(),
+            values: f32s_from_bits(v.get("bits")?)?,
+        })
+    }
+}
+
+/// `acc[i] += rhs[i]` — the single elementwise combine both reduction
+/// orders are built from.
+pub fn add_into(acc: &mut [f32], rhs: &[f32]) {
+    debug_assert_eq!(acc.len(), rhs.len());
+    for (a, r) in acc.iter_mut().zip(rhs) {
+        *a += *r;
+    }
+}
+
+/// Combine rank partials with a **fixed adjacent-pairwise tree**: round 1
+/// sums slots (0,1), (2,3), …; round 2 sums the survivors pairwise again;
+/// an odd tail carries to the next round unchanged. The association
+/// depends only on the number of slots, never on arrival timing.
+///
+/// All partials must share one length; panics on empty input (a reduction
+/// over zero ranks is a caller bug, not a runtime condition).
+pub fn tree_combine(partials: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!partials.is_empty(), "tree_combine over zero partials");
+    let mut round: Vec<Vec<f32>> = partials.to_vec();
+    while round.len() > 1 {
+        let mut next = Vec::with_capacity(round.len().div_ceil(2));
+        let mut it = round.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                add_into(&mut left, &right);
+            }
+            next.push(left);
+        }
+        round = next;
+    }
+    round.remove(0)
+}
+
+/// Left-to-right sequential fold — the flat baseline [`tree_combine`] is
+/// benchmarked and contrasted against. Same determinism (fixed order),
+/// different association: for more than two slots the two generally
+/// differ in the low bits, which is exactly why the association must be
+/// part of the protocol.
+pub fn flat_combine(partials: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!partials.is_empty(), "flat_combine over zero partials");
+    let mut acc = partials[0].clone();
+    for p in &partials[1..] {
+        add_into(&mut acc, p);
+    }
+    acc
+}
+
+/// Greedily pack leaf indices into payload groups, preserving leaf order:
+/// a leaf at or above `threshold_bytes` travels alone; consecutive small
+/// leaves share a group until adding the next would cross the threshold.
+pub fn bucket_leaves(leaves: &[GradLeaf], threshold_bytes: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_bytes = 0usize;
+    for (i, leaf) in leaves.iter().enumerate() {
+        let b = leaf.bytes();
+        if b >= threshold_bytes {
+            if !cur.is_empty() {
+                groups.push(std::mem::take(&mut cur));
+                cur_bytes = 0;
+            }
+            groups.push(vec![i]);
+            continue;
+        }
+        if !cur.is_empty() && cur_bytes + b > threshold_bytes {
+            groups.push(std::mem::take(&mut cur));
+            cur_bytes = 0;
+        }
+        cur.push(i);
+        cur_bytes += b;
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// Serialize a group of leaves as one payload frame body.
+pub fn leaves_to_json(leaves: &[GradLeaf]) -> Json {
+    Json::Arr(leaves.iter().map(GradLeaf::to_json).collect())
+}
+
+/// Decode [`leaves_to_json`].
+pub fn leaves_from_json(v: &Json) -> Result<Vec<GradLeaf>> {
+    v.as_arr()?.iter().map(GradLeaf::from_json).collect()
+}
+
+/// Tree-combine per-rank leaf sets (each rank's leaves in identical
+/// name order). Errors on shape mismatch between ranks.
+pub fn tree_combine_leaves(per_rank: &[Vec<GradLeaf>]) -> Result<Vec<GradLeaf>> {
+    ensure!(!per_rank.is_empty(), "reduction over zero ranks");
+    let first = &per_rank[0];
+    for (r, leaves) in per_rank.iter().enumerate() {
+        ensure!(
+            leaves.len() == first.len(),
+            "rank slot {r} has {} leaves, slot 0 has {}",
+            leaves.len(),
+            first.len()
+        );
+    }
+    let mut out = Vec::with_capacity(first.len());
+    for (j, proto) in first.iter().enumerate() {
+        let mut slots = Vec::with_capacity(per_rank.len());
+        for (r, leaves) in per_rank.iter().enumerate() {
+            let leaf = &leaves[j];
+            ensure!(
+                leaf.name == proto.name && leaf.values.len() == proto.values.len(),
+                "rank slot {r} leaf {j} ({}, n={}) does not match slot 0 ({}, n={})",
+                leaf.name,
+                leaf.values.len(),
+                proto.name,
+                proto.values.len()
+            );
+            slots.push(leaf.values.clone());
+        }
+        out.push(GradLeaf { name: proto.name.clone(), values: tree_combine(&slots) });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(name: &str, n: usize, scale: f32) -> GradLeaf {
+        GradLeaf::new(name, (0..n).map(|i| scale * (i as f32 + 1.0)).collect())
+    }
+
+    #[test]
+    fn tree_matches_manual_association_for_four_slots() {
+        let p: Vec<Vec<f32>> = vec![vec![0.1, 1.0], vec![0.2, 2.0], vec![0.3, 3.0], vec![0.4, 4.0]];
+        let got = tree_combine(&p);
+        // ((p0+p1)+(p2+p3)), elementwise, in f32.
+        let mut want = Vec::new();
+        for i in 0..2 {
+            want.push((p[0][i] + p[1][i]) + (p[2][i] + p[3][i]));
+        }
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn tree_handles_odd_world_sizes() {
+        // Slots (0,1),(2,3),(4) -> ((01),(23)),(4) -> (((01)(23)),4).
+        let p: Vec<Vec<f32>> = (0..5).map(|r| vec![(r as f32) + 0.5]).collect();
+        let got = tree_combine(&p)[0];
+        let want = ((p[0][0] + p[1][0]) + (p[2][0] + p[3][0])) + p[4][0];
+        assert_eq!(got.to_bits(), want.to_bits());
+        // World of one and two degenerate to identity and a single add.
+        assert_eq!(tree_combine(&p[..1]), p[0]);
+        let two = tree_combine(&p[..2])[0];
+        assert_eq!(two.to_bits(), (p[0][0] + p[1][0]).to_bits());
+    }
+
+    #[test]
+    fn association_actually_matters_in_f32() {
+        // 1e8 swallows a unit in f32, so the tree and the flat fold give
+        // different bits — the reason the association is part of the
+        // protocol, not an implementation detail.
+        let p: Vec<Vec<f32>> = vec![vec![1e8], vec![1.0], vec![-1e8], vec![1.0]];
+        let tree = tree_combine(&p)[0]; // (1e8+1) + (-1e8+1) = 0.0
+        let flat = flat_combine(&p)[0]; // ((1e8+1)-1e8) + 1 = 1.0
+        assert_eq!(tree, 0.0);
+        assert_eq!(flat, 1.0);
+        // And each is individually deterministic across repeats.
+        assert_eq!(tree.to_bits(), tree_combine(&p)[0].to_bits());
+        assert_eq!(flat.to_bits(), flat_combine(&p)[0].to_bits());
+    }
+
+    #[test]
+    fn bucketing_packs_small_leaves_and_isolates_large_ones() {
+        let thr = DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES;
+        let small = thr / 4 / 4; // floats per quarter-threshold leaf
+        let leaves = vec![
+            leaf("w1", small, 1.0),
+            leaf("b1", small, 1.0),
+            leaf("big", thr / 4 + 1, 1.0), // >= threshold bytes: alone
+            leaf("w2", small, 1.0),
+            leaf("b2", small, 1.0),
+            leaf("w3", small, 1.0),
+            leaf("b3", small, 1.0),
+            leaf("b4", small, 1.0), // fifth quarter spills a new group
+        ];
+        let groups = bucket_leaves(&leaves, thr);
+        assert_eq!(groups, vec![vec![0, 1], vec![2], vec![3, 4, 5, 6], vec![7]]);
+        // Order is preserved across the flattened groups.
+        let flat: Vec<usize> = groups.concat();
+        assert_eq!(flat, (0..leaves.len()).collect::<Vec<_>>());
+        // Degenerate threshold: everything travels alone.
+        assert_eq!(bucket_leaves(&leaves, 0).len(), leaves.len());
+        assert!(bucket_leaves(&[], thr).is_empty());
+    }
+
+    #[test]
+    fn leaf_groups_round_trip_bit_exactly() {
+        let mut a = leaf("dl_dtheta", 7, 0.3);
+        a.values[2] = f32::NAN;
+        a.values[5] = -0.0;
+        let b = leaf("aux", 3, -2.0);
+        let j = leaves_to_json(&[a.clone(), b.clone()]);
+        let back = leaves_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "dl_dtheta");
+        let got: Vec<u32> = back[0].values.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = a.values.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "NaN and -0.0 must survive the wire");
+        assert_eq!(back[1], b);
+    }
+
+    #[test]
+    fn leaf_reduction_validates_shapes() {
+        let ok = tree_combine_leaves(&[
+            vec![leaf("a", 2, 1.0), leaf("b", 3, 1.0)],
+            vec![leaf("a", 2, 2.0), leaf("b", 3, 2.0)],
+        ])
+        .unwrap();
+        assert_eq!(ok[0].values, vec![3.0, 6.0]);
+        assert_eq!(ok[1].name, "b");
+        let bad = tree_combine_leaves(&[
+            vec![leaf("a", 2, 1.0)],
+            vec![leaf("a", 3, 1.0)], // wrong length
+        ]);
+        assert!(bad.is_err());
+        let bad = tree_combine_leaves(&[vec![leaf("a", 2, 1.0)], vec![]]);
+        assert!(bad.is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! One serve shard: a [`SolveServer`] behind a TCP endpoint.
+//!
+//! Frame protocol (one JSON object per frame, see `dist::transport`):
+//!
+//! * `{"kind":"solve","id":N,"req":{…}}` → `{"kind":"resp","id":N,…}`
+//!   with either `"ok":true,"resp":{…}` or `"ok":false,"err":{…}` —
+//!   admission errors ([`ServeError::Overloaded`] included) travel on the
+//!   same channel, so backpressure propagates end-to-end.
+//! * `{"kind":"metrics"}` → `{"kind":"metrics","snapshot":{…}}`.
+//! * `{"kind":"shutdown"}` → `{"kind":"bye"}`, then the connection closes.
+//!
+//! Responses are written as each solve completes, so they interleave out
+//! of request order; the `id` is the correlation tag. [`ShardServer`]
+//! drops gracefully (stop intake, drain admitted work, then cut
+//! connections); [`ShardServer::abort`] is the crash lever for tests —
+//! it severs every socket without draining, exactly what a dying process
+//! looks like from the dispatcher's side.
+
+use super::transport::{recv_frame, send_frame};
+use crate::serve::request::{ServeError, SolveRequest, SolveResponse};
+use crate::serve::SolveServer;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A running shard endpoint.
+pub struct ShardServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+    server: Arc<SolveServer>,
+}
+
+impl ShardServer {
+    /// Bind `bind` (use port 0 for an ephemeral test port) and serve
+    /// `server` over it until shutdown.
+    pub fn spawn(server: SolveServer, bind: &str) -> Result<ShardServer> {
+        let server = Arc::new(server);
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind shard at {bind}"))?;
+        let addr = listener.local_addr().context("shard local addr")?.to_string();
+        listener.set_nonblocking(true).context("shard listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (server, stop, conns) = (server.clone(), stop.clone(), conns.clone());
+            std::thread::spawn(move || accept_loop(&listener, &server, &stop, &conns))
+        };
+        Ok(ShardServer { addr, stop, conns, accept: Some(accept), server })
+    }
+
+    /// The bound address (`host:port`) clients dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The shard's underlying server (for registry/metrics access in
+    /// tests and examples).
+    pub fn server(&self) -> &Arc<SolveServer> {
+        &self.server
+    }
+
+    /// Simulate a crash: sever every connection and stop accepting,
+    /// WITHOUT draining. In-flight solves still complete inside the
+    /// server, but their responses hit dead sockets — from a peer's view
+    /// this process died mid-conversation.
+    pub fn abort(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, answer everything already
+    /// admitted (`SolveServer::drain`), then close the connections and
+    /// join the service threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        self.server.drain();
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    server: &Arc<SolveServer>,
+    stop: &AtomicBool,
+    conns: &Mutex<Vec<TcpStream>>,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = s.set_nodelay(true);
+                if let Ok(c) = s.try_clone() {
+                    conns.lock().unwrap().push(c);
+                }
+                let server = server.clone();
+                handlers.push(std::thread::spawn(move || handle_conn(s, &server)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Write one correlated response frame (ok or error) to the shared writer.
+fn respond(writer: &Mutex<TcpStream>, id: usize, result: Result<SolveResponse, ServeError>) {
+    let body = match result {
+        Ok(r) => obj(vec![
+            ("kind", "resp".into()),
+            ("id", id.into()),
+            ("ok", true.into()),
+            ("resp", r.to_json()),
+        ]),
+        Err(e) => obj(vec![
+            ("kind", "resp".into()),
+            ("id", id.into()),
+            ("ok", false.into()),
+            ("err", e.to_json()),
+        ]),
+    };
+    let mut w = writer.lock().unwrap();
+    let _ = send_frame(&mut *w, &body);
+}
+
+fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>) {
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    let writer = Arc::new(Mutex::new(stream));
+    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let msg = match recv_frame(&mut reader) {
+            Ok(m) => m,
+            Err(_) => break, // peer hung up (or timed out): stop serving it
+        };
+        let kind = match msg.get("kind").and_then(Json::as_str) {
+            Ok(k) => k.to_string(),
+            Err(_) => break,
+        };
+        match kind.as_str() {
+            "solve" => {
+                let id = match msg.get("id").and_then(Json::as_usize) {
+                    Ok(id) => id,
+                    Err(_) => break, // uncorrelatable request: protocol error
+                };
+                let req = match msg.get("req").and_then(SolveRequest::from_json) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        respond(&writer, id, Err(ServeError::BadRequest(e.to_string())));
+                        continue;
+                    }
+                };
+                match server.submit(req) {
+                    Ok(handle) => {
+                        // Answer out-of-band when the batch completes; the
+                        // read loop keeps accepting pipelined requests.
+                        let writer = writer.clone();
+                        waiters.push(std::thread::spawn(move || {
+                            let result = handle.wait();
+                            respond(&writer, id, result);
+                        }));
+                    }
+                    Err(e) => respond(&writer, id, Err(e)),
+                }
+            }
+            "metrics" => {
+                let body = obj(vec![
+                    ("kind", "metrics".into()),
+                    ("snapshot", server.metrics().to_json()),
+                ]);
+                let mut w = writer.lock().unwrap();
+                let _ = send_frame(&mut *w, &body);
+            }
+            "shutdown" => {
+                let bye = obj(vec![("kind", "bye".into())]);
+                let mut w = writer.lock().unwrap();
+                let _ = send_frame(&mut *w, &bye);
+                break;
+            }
+            _ => break,
+        }
+    }
+    for w in waiters {
+        let _ = w.join();
+    }
+}

@@ -1,0 +1,184 @@
+//! Length-prefixed JSON framing over `TcpStream` — the one transport both
+//! halves of `dist/` share.
+//!
+//! A frame is a 4-byte big-endian byte length followed by that many bytes
+//! of compact JSON (`util::json`). Float payloads travel as `f32` bit
+//! patterns (`util::json::f32_bits`): a `u32` is exact in a JSON number,
+//! so states and gradients cross the wire bit-exactly — including NaN and
+//! the infinities, which the plain number grammar cannot carry (the codec
+//! writes non-finite numbers as `null` by policy).
+//!
+//! Determinism note: nothing here reads a wall clock. Deadlines are
+//! expressed through socket timeouts (`set_read_timeout`) and bounded
+//! retry loops with `thread::sleep` backoff, so the module stays clean
+//! under the repo-wide `Instant::now` ban.
+
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Hard cap on one frame's byte length. A corrupt or hostile length prefix
+/// must not trigger a multi-gigabyte allocation before the body arrives.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Connection and IO policy shared by the trainer and the dispatcher.
+#[derive(Debug, Clone)]
+pub struct TransportOpts {
+    /// Connect attempts before giving up. Workers routinely start before
+    /// the coordinator's listener is up, so the default is generous.
+    pub connect_attempts: usize,
+    /// Base delay between connect attempts; grows linearly with the
+    /// attempt number, capped at 8× the base.
+    pub backoff: Duration,
+    /// Read/connect timeout applied to established connections — the
+    /// peer-death backstop for a peer that stalls without closing its
+    /// socket.
+    pub io_timeout: Duration,
+}
+
+impl Default for TransportOpts {
+    fn default() -> Self {
+        TransportOpts {
+            connect_attempts: 40,
+            backoff: Duration::from_millis(25),
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Write one framed message and flush it.
+pub fn send_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    let body = msg.to_string();
+    ensure!(body.len() <= MAX_FRAME_BYTES, "frame of {} bytes exceeds cap", body.len());
+    w.write_all(&(body.len() as u32).to_be_bytes()).context("frame header write")?;
+    w.write_all(body.as_bytes()).context("frame body write")?;
+    w.flush().context("frame flush")?;
+    Ok(())
+}
+
+/// Read one framed message, blocking up to the stream's read timeout.
+pub fn recv_frame<R: Read>(r: &mut R) -> Result<Json> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("frame header read")?;
+    let n = u32::from_be_bytes(len) as usize;
+    ensure!(n <= MAX_FRAME_BYTES, "frame of {n} bytes exceeds cap");
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("frame body read")?;
+    let txt = std::str::from_utf8(&buf).context("frame is not UTF-8")?;
+    Json::parse(txt)
+}
+
+/// Connect with bounded retry and linear backoff (workers racing the
+/// coordinator's bind), then apply the IO timeouts to the stream.
+pub fn connect_retry(addr: &str, opts: &TransportOpts) -> Result<TcpStream> {
+    let attempts = opts.connect_attempts.max(1);
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(opts.backoff.saturating_mul(attempt.min(8) as u32));
+        }
+        let resolved: Vec<_> = match addr.to_socket_addrs() {
+            Ok(it) => it.collect(),
+            Err(e) => {
+                last = Some(e);
+                continue;
+            }
+        };
+        for a in &resolved {
+            match TcpStream::connect_timeout(a, opts.io_timeout) {
+                Ok(s) => {
+                    // Small framed messages: batching hurts latency more
+                    // than it saves bytes. Timeout-set failures are not
+                    // fatal; the read path degrades to blocking.
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(opts.io_timeout));
+                    let _ = s.set_write_timeout(Some(opts.io_timeout));
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+    }
+    bail!("connect to {addr} failed after {attempts} attempts: {last:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{f32_bits, f32s_from_bits, obj};
+    use std::io::Cursor;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frame_round_trips_in_memory() {
+        let msg = obj(vec![
+            ("kind", "step".into()),
+            ("attempt", 3usize.into()),
+            ("bits", f32_bits(&[1.5, -0.0, f32::NAN, f32::INFINITY, 1e-45])),
+        ]);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &msg).unwrap();
+        assert_eq!(&buf[..4], &(u32::try_from(buf.len() - 4).unwrap()).to_be_bytes());
+        let back = recv_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(back.get("kind").unwrap().as_str().unwrap(), "step");
+        let bits = f32s_from_bits(back.get("bits").unwrap()).unwrap();
+        let want = [1.5f32, -0.0, f32::NAN, f32::INFINITY, 1e-45];
+        let got: Vec<u32> = bits.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "f32 payloads must round-trip bit-exactly, NaN included");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"junk");
+        let err = recv_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn truncated_body_is_an_error_not_a_hang() {
+        let msg = Json::from("hello");
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &msg).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(recv_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn frame_round_trips_over_loopback_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let msg = recv_frame(&mut s).unwrap();
+            send_frame(&mut s, &msg).unwrap();
+        });
+        let opts = TransportOpts { io_timeout: Duration::from_secs(5), ..Default::default() };
+        let mut s = connect_retry(&addr, &opts).unwrap();
+        let msg = obj(vec![("rank", 1usize.into()), ("bits", f32_bits(&[0.1, 0.2, 0.3]))]);
+        send_frame(&mut s, &msg).unwrap();
+        let back = recv_frame(&mut s).unwrap();
+        assert_eq!(back, msg);
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_with_bounded_attempts() {
+        // Bind-then-drop: the port existed but nothing listens on it now.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = TransportOpts {
+            connect_attempts: 2,
+            backoff: Duration::from_millis(1),
+            io_timeout: Duration::from_millis(200),
+        };
+        let err = connect_retry(&addr, &opts).unwrap_err();
+        assert!(err.to_string().contains("after 2 attempts"), "{err}");
+    }
+}

@@ -124,6 +124,39 @@
 //! println!("{}", server.metrics());
 //! ```
 //!
+//! ## Distributed scale-out
+//!
+//! Both halves of the crate scale past one process over a shared framed
+//! TCP transport ([`dist`]), configured by the `NODAL_DIST_*` knobs
+//! ([`dist::env::DistConfig`]):
+//!
+//! * **Data-parallel training** ([`dist::train`], surfaced as
+//!   [`train::distributed`]) — every rank computes its deterministic
+//!   contiguous shard of the mini-batch locally (batched forward +
+//!   shared-stage ACA backward), and rank 0 combines the partials with a
+//!   fixed adjacent-pairwise **tree reduction** keyed by rank slot, never
+//!   by arrival order. A W-rank step is therefore bit-identical run to
+//!   run and bit-identical to the single-process
+//!   [`dist::train::grad_accum_reference`] fold — the distributed analog
+//!   of ACA's batch-composition invariance. Small parameter leaves are
+//!   bucketed into grouped wire payloads; dead workers are evicted and
+//!   the batch re-partitions deterministically over the survivors
+//!   (`cargo bench --bench dist_reduce` tracks reduce throughput and
+//!   payload counts).
+//! * **Sharded serving** ([`dist::shard`], [`dist::dispatch`]) — each
+//!   shard is a [`serve::SolveServer`] behind a TCP endpoint; the
+//!   [`dist::Dispatcher`] routes requests by batch-key hash so
+//!   coalescing survives sharding, steals work past a load margin,
+//!   propagates `Overloaded` backpressure end-to-end, re-dispatches the
+//!   pending requests of a dead shard to the survivors, and merges
+//!   per-shard metrics into one fleet report.
+//!
+//! All f32 payloads travel as bit patterns ([`util::json`]), so NaN,
+//! `-0.0` and infinities survive the wire bit-exactly. The whole
+//! subsystem is exercised in-process on loopback sockets
+//! (`tests/dist_integration.rs`) and as a real two-process smoke in CI
+//! (`examples/dist_train.rs`).
+//!
 //! ## Invariants (machine-checked by `nodal-lint`)
 //!
 //! Everything above rests on one guarantee: **the reverse pass replays the
@@ -139,8 +172,9 @@
 //!    ([`coordinator::pool::default_workers`],
 //!    [`coordinator::report`]'s `results_dir`, [`runtime`]'s
 //!    `artifact_root`, [`ckpt`]'s budget parsers, [`serve`]'s
-//!    `env_clamped`), and every `NODAL_*` knob mentioned anywhere in the
-//!    sources must appear in the table below.
+//!    `env_clamped`, [`dist::env`]'s `from_env`/`env_usize`), and every
+//!    `NODAL_*` knob mentioned anywhere in the sources must appear in the
+//!    table below.
 //! 2. **determinism** — `Instant::now`/`SystemTime::now` only behind the
 //!    injected [`serve::Clock`] or in benchmark/timing modules; no
 //!    `HashMap`/`HashSet` in [`ode`], [`grad`], [`ckpt`] (iteration order
@@ -177,12 +211,17 @@
 //! | `NODAL_SERVE_QUEUE_CAP` | [`serve::ServeConfig::from_env`] | admitted-unanswered cap | 1024, 1..=10⁶ |
 //! | `NODAL_SERVE_WORKERS` | [`serve::ServeConfig::from_env`] | serve worker threads | pool default, 1..=256 |
 //! | `NODAL_SERVE_MEM_BUDGET_BYTES` | [`serve::ServeConfig::from_env`] | projected-checkpoint admission budget (0 = unlimited) | 0, 0 or 64..=2⁴⁰ |
+//! | `NODAL_DIST_RANK` | [`dist::env::DistConfig::from_env`] | this process's rank | 0, 0..=world−1 |
+//! | `NODAL_DIST_WORLD_SIZE` | [`dist::env::DistConfig::from_env`] | ranks in the training world | 1, 1..=256 |
+//! | `NODAL_DIST_PORT` | [`dist::env::DistConfig::from_env`] | rank-0 coordinator port | 7117, 1..=65535 |
+//! | `NODAL_DIST_HOSTS` | [`dist::env::DistConfig::from_env`] | comma-separated host list (first entry is rank 0) | loopback |
 
 pub mod bench;
 pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod grad;
 pub mod metrics;
 pub mod models;

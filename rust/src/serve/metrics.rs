@@ -242,6 +242,79 @@ impl std::fmt::Display for MetricsSnapshot {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wire codecs: `dist::dispatch` pulls each shard's snapshot over TCP and
+// aggregates them into one report. Counts are exact in a JSON number (they
+// would have to exceed 2^53 events to lose precision); the quantile fields
+// are already lossy summaries, so plain numbers are the honest encoding.
+
+fn u64_field(v: &crate::util::json::Json, key: &str) -> anyhow::Result<u64> {
+    Ok(v.get(key)?.as_usize()? as u64)
+}
+
+fn latency_to_json(l: &LatencySummary) -> crate::util::json::Json {
+    crate::util::json::obj(vec![
+        ("count", (l.count as usize).into()),
+        ("mean_ms", l.mean_ms.into()),
+        ("p50_ms", l.p50_ms.into()),
+        ("p95_ms", l.p95_ms.into()),
+        ("p99_ms", l.p99_ms.into()),
+        ("max_ms", l.max_ms.into()),
+    ])
+}
+
+fn latency_from_json(v: &crate::util::json::Json) -> anyhow::Result<LatencySummary> {
+    Ok(LatencySummary {
+        count: u64_field(v, "count")?,
+        mean_ms: v.get("mean_ms")?.as_f64()?,
+        p50_ms: v.get("p50_ms")?.as_f64()?,
+        p95_ms: v.get("p95_ms")?.as_f64()?,
+        p99_ms: v.get("p99_ms")?.as_f64()?,
+        max_ms: v.get("max_ms")?.as_f64()?,
+    })
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let sizes: Vec<usize> = self.batch_sizes.iter().map(|&s| s as usize).collect();
+        crate::util::json::obj(vec![
+            ("submitted", (self.submitted as usize).into()),
+            ("completed", (self.completed as usize).into()),
+            ("rejected", (self.rejected as usize).into()),
+            ("failed", (self.failed as usize).into()),
+            ("batches", (self.batches as usize).into()),
+            ("mean_batch_size", self.mean_batch_size.into()),
+            ("batch_sizes", sizes.into()),
+            ("queue_wait", latency_to_json(&self.queue_wait)),
+            ("service", latency_to_json(&self.service)),
+            ("nfe_total", (self.nfe_total as usize).into()),
+            ("nfe_mean", self.nfe_mean.into()),
+            ("nfe_max", (self.nfe_max as usize).into()),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<MetricsSnapshot> {
+        let mut batch_sizes = Vec::new();
+        for s in v.get("batch_sizes")?.as_arr()? {
+            batch_sizes.push(s.as_usize()? as u64);
+        }
+        Ok(MetricsSnapshot {
+            submitted: u64_field(v, "submitted")?,
+            completed: u64_field(v, "completed")?,
+            rejected: u64_field(v, "rejected")?,
+            failed: u64_field(v, "failed")?,
+            batches: u64_field(v, "batches")?,
+            mean_batch_size: v.get("mean_batch_size")?.as_f64()?,
+            batch_sizes,
+            queue_wait: latency_from_json(v.get("queue_wait")?)?,
+            service: latency_from_json(v.get("service")?)?,
+            nfe_total: u64_field(v, "nfe_total")?,
+            nfe_mean: v.get("nfe_mean")?.as_f64()?,
+            nfe_max: u64_field(v, "nfe_max")?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,5 +380,25 @@ mod tests {
         assert_eq!(s.nfe_max, 120);
         assert!(s.service.p50_ms > 0.0);
         let _ = format!("{s}"); // Display must not panic
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let m = ServeMetrics::default();
+        m.record_request(Duration::from_micros(10), Duration::from_millis(2), 120);
+        m.record_request(Duration::from_micros(30), Duration::from_millis(4), 80);
+        m.record_batch(2);
+        let s = m.snapshot();
+        let j = crate::util::json::Json::parse(&s.to_json().to_string()).unwrap();
+        let back = MetricsSnapshot::from_json(&j).unwrap();
+        assert_eq!(back.completed, s.completed);
+        assert_eq!(back.batches, s.batches);
+        assert_eq!(back.batch_sizes, s.batch_sizes);
+        assert_eq!(back.nfe_total, s.nfe_total);
+        assert_eq!(back.nfe_max, s.nfe_max);
+        assert_eq!(back.queue_wait.count, s.queue_wait.count);
+        assert_eq!(back.service.p99_ms.to_bits(), s.service.p99_ms.to_bits());
+        assert_eq!(back.mean_batch_size.to_bits(), s.mean_batch_size.to_bits());
+        assert!(MetricsSnapshot::from_json(&crate::util::json::Json::Null).is_err());
     }
 }

@@ -838,4 +838,54 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(server.inflight(), 0);
     }
+
+    /// Graceful-drain contract: `shutdown()` answers every admitted
+    /// request before returning — none dropped, none failed. The manual
+    /// clock never advances and the batch cap is never reached, so all
+    /// ten requests are still sitting in the former when shutdown lands;
+    /// only the drain path can answer them.
+    #[test]
+    fn shutdown_answers_every_admitted_request() {
+        let clock = ManualClock::new();
+        let server = SolveServer::builder()
+            .register("vdp", VanDerPol::new(0.5))
+            .clock(clock)
+            .config(ServeConfig {
+                max_batch_size: 64, // never reached: no size-triggered flush
+                max_queue_delay: Duration::from_secs(3600), // never due
+                queue_capacity: 64,
+                workers: 2,
+                ckpt_budget_bytes: 0,
+                mem_budget_bytes: 0,
+            })
+            .start();
+        // Three distinct batch keys, interleaved, so the drain has to
+        // flush multiple partial batches.
+        let mut handles = Vec::new();
+        for i in 0..10 {
+            let req = match i % 3 {
+                0 => SolveRequest::adaptive("vdp", 0.0, 0.5, vec![1.0, 0.0], 1e-6, 1e-8),
+                1 => SolveRequest::adaptive("vdp", 0.0, 0.5, vec![0.5, 0.1], 1e-5, 1e-8),
+                _ => SolveRequest::fixed("vdp", 0.0, 0.5, vec![2.0, 0.0], 0.1),
+            };
+            handles.push(server.submit(req).unwrap());
+        }
+        assert_eq!(server.inflight(), 10, "all ten admitted, none answered yet");
+        server.shutdown();
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.wait().unwrap_or_else(|e| panic!("request {i} dropped: {e}"));
+            assert_eq!(resp.z_t1.len(), 2);
+        }
+        assert_eq!(server.inflight(), 0);
+        let m = server.metrics();
+        assert_eq!(m.submitted, 10);
+        assert_eq!(m.completed, 10, "shutdown must answer, not drop");
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.rejected, 0);
+        // Post-shutdown submissions bounce cleanly.
+        let err = server
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .unwrap_err();
+        assert_eq!(err, ServeError::ShuttingDown);
+    }
 }

@@ -15,6 +15,7 @@
 use crate::grad::GradResult;
 use crate::ode::integrate::IntegrateOpts;
 use crate::ode::tableau::Tableau;
+use crate::util::json::{f32_bits, f32s_from_bits, obj, Json};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -234,6 +235,180 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+// ---------------------------------------------------------------------------
+// Wire codecs (used by `dist::shard` / `dist::dispatch` to ship requests and
+// responses between processes). Float *state* payloads (`z0`, `lam`,
+// `z_t1`, gradients) travel as f32 bit patterns so answers cross the wire
+// bit-exactly; f64 *scalars* (spans, tolerances) ride as plain JSON numbers
+// — the writer emits the shortest round-tripping form, which is bit-exact
+// for every finite value, and non-finite spans/tolerances are rejected by
+// request validation anyway.
+
+impl SolveRequest {
+    pub fn to_json(&self) -> Json {
+        let (kind, a, b) = match self.tol {
+            Tolerance::Adaptive { rtol, atol } => ("adaptive", rtol, atol),
+            Tolerance::Fixed { h } => ("fixed", h, 0.0),
+        };
+        let mut pairs = vec![
+            ("dynamics", self.dynamics.as_str().into()),
+            ("t0", self.t0.into()),
+            ("t1", self.t1.into()),
+            ("z0", f32_bits(&self.z0)),
+            ("tab", self.tab.name.into()),
+            ("tol_kind", kind.into()),
+            ("tol_a", a.into()),
+            ("tol_b", b.into()),
+        ];
+        if let Some(lam) = &self.grad {
+            pairs.push(("lam", f32_bits(lam)));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<SolveRequest> {
+        let tab_name = v.get("tab")?.as_str()?;
+        let tab = crate::ode::tableau::by_name(tab_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown tableau '{tab_name}'"))?;
+        let tol = match v.get("tol_kind")?.as_str()? {
+            "adaptive" => Tolerance::Adaptive {
+                rtol: v.get("tol_a")?.as_f64()?,
+                atol: v.get("tol_b")?.as_f64()?,
+            },
+            "fixed" => Tolerance::Fixed { h: v.get("tol_a")?.as_f64()? },
+            k => anyhow::bail!("unknown tolerance kind '{k}'"),
+        };
+        let grad = match v.opt("lam") {
+            Some(l) => Some(f32s_from_bits(l)?),
+            None => None,
+        };
+        Ok(SolveRequest {
+            dynamics: v.get("dynamics")?.as_str()?.to_string(),
+            t0: v.get("t0")?.as_f64()?,
+            t1: v.get("t1")?.as_f64()?,
+            z0: f32s_from_bits(v.get("z0")?)?,
+            tab,
+            tol,
+            grad,
+        })
+    }
+}
+
+fn duration_from_ns(v: &Json) -> anyhow::Result<Duration> {
+    let n = v.as_f64()?;
+    anyhow::ensure!(n.is_finite() && n >= 0.0, "bad duration: {n}");
+    Ok(Duration::from_nanos(n as u64))
+}
+
+fn stats_to_json(s: &RequestStats) -> Json {
+    obj(vec![
+        ("steps", s.steps.into()),
+        ("nfe", s.nfe.into()),
+        ("n_rejected", s.n_rejected.into()),
+        ("avg_m", s.avg_m.into()),
+        ("checkpoint_bytes", s.checkpoint_bytes.into()),
+        ("batch_size", s.batch_size.into()),
+        ("queue_wait_ns", (s.queue_wait.as_nanos() as f64).into()),
+        ("service_ns", (s.service.as_nanos() as f64).into()),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> anyhow::Result<RequestStats> {
+    Ok(RequestStats {
+        steps: v.get("steps")?.as_usize()?,
+        nfe: v.get("nfe")?.as_usize()?,
+        n_rejected: v.get("n_rejected")?.as_usize()?,
+        avg_m: v.get("avg_m")?.as_f64()?,
+        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
+        batch_size: v.get("batch_size")?.as_usize()?,
+        queue_wait: duration_from_ns(v.get("queue_wait_ns")?)?,
+        service: duration_from_ns(v.get("service_ns")?)?,
+    })
+}
+
+fn meter_to_json(m: &crate::grad::CostMeter) -> Json {
+    obj(vec![
+        ("nfe_forward", m.nfe_forward.into()),
+        ("nfe_backward", m.nfe_backward.into()),
+        ("nfe_replay", m.nfe_replay.into()),
+        ("replay_peak_bytes", m.replay_peak_bytes.into()),
+        ("vjp_calls", m.vjp_calls.into()),
+        ("checkpoint_bytes", m.checkpoint_bytes.into()),
+        ("graph_depth", m.graph_depth.into()),
+        ("n_steps", m.n_steps.into()),
+        ("n_rejected", m.n_rejected.into()),
+        ("n_reverse_steps", m.n_reverse_steps.into()),
+    ])
+}
+
+fn meter_from_json(v: &Json) -> anyhow::Result<crate::grad::CostMeter> {
+    Ok(crate::grad::CostMeter {
+        nfe_forward: v.get("nfe_forward")?.as_usize()?,
+        nfe_backward: v.get("nfe_backward")?.as_usize()?,
+        nfe_replay: v.get("nfe_replay")?.as_usize()?,
+        replay_peak_bytes: v.get("replay_peak_bytes")?.as_usize()?,
+        vjp_calls: v.get("vjp_calls")?.as_usize()?,
+        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
+        graph_depth: v.get("graph_depth")?.as_usize()?,
+        n_steps: v.get("n_steps")?.as_usize()?,
+        n_rejected: v.get("n_rejected")?.as_usize()?,
+        n_reverse_steps: v.get("n_reverse_steps")?.as_usize()?,
+    })
+}
+
+impl SolveResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("z_t1", f32_bits(&self.z_t1)), ("stats", stats_to_json(&self.stats))];
+        if let Some(g) = &self.grad {
+            pairs.push(("dl_dz0", f32_bits(&g.dl_dz0)));
+            pairs.push(("dl_dtheta", f32_bits(&g.dl_dtheta)));
+            pairs.push(("meter", meter_to_json(&g.meter)));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<SolveResponse> {
+        let grad = match v.opt("dl_dz0") {
+            Some(z) => Some(GradResult {
+                dl_dz0: f32s_from_bits(z)?,
+                dl_dtheta: f32s_from_bits(v.get("dl_dtheta")?)?,
+                meter: meter_from_json(v.get("meter")?)?,
+            }),
+            None => None,
+        };
+        Ok(SolveResponse {
+            z_t1: f32s_from_bits(v.get("z_t1")?)?,
+            grad,
+            stats: stats_from_json(v.get("stats")?)?,
+        })
+    }
+}
+
+impl ServeError {
+    pub fn to_json(&self) -> Json {
+        let (kind, msg) = match self {
+            ServeError::Overloaded => ("overloaded", ""),
+            ServeError::ShuttingDown => ("shutting_down", ""),
+            ServeError::UnknownDynamics(id) => ("unknown_dynamics", id.as_str()),
+            ServeError::BadRequest(m) => ("bad_request", m.as_str()),
+            ServeError::Solver(m) => ("solver", m.as_str()),
+        };
+        obj(vec![("kind", kind.into()), ("msg", msg.into())])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ServeError> {
+        let msg = v.get("msg")?.as_str()?.to_string();
+        Ok(match v.get("kind")?.as_str()? {
+            "overloaded" => ServeError::Overloaded,
+            "shutting_down" => ServeError::ShuttingDown,
+            "unknown_dynamics" => ServeError::UnknownDynamics(msg),
+            "bad_request" => ServeError::BadRequest(msg),
+            "solver" => ServeError::Solver(msg),
+            k => anyhow::bail!("unknown error kind '{k}'"),
+        })
+    }
+}
+
 /// One-shot completion slot shared between a request's handle and the worker
 /// that eventually serves it.
 #[derive(Debug, Default)]
@@ -409,6 +584,97 @@ mod tests {
         let t = std::thread::spawn(move || handle.wait());
         slot.fulfill(Err(ServeError::Overloaded));
         assert_eq!(t.join().unwrap().unwrap_err(), ServeError::Overloaded);
+    }
+
+    #[test]
+    fn request_json_round_trips_bit_exactly() {
+        let mut r = SolveRequest::adaptive("vdp", 0.25, 5.5, vec![2.0, -0.0], 1e-6, 1e-8);
+        r.z0[1] = f32::from_bits(0x0000_0001); // smallest subnormal
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.dynamics, "vdp");
+        assert_eq!(back.t0.to_bits(), r.t0.to_bits());
+        assert_eq!(back.t1.to_bits(), r.t1.to_bits());
+        assert_eq!(back.tab.name, r.tab.name);
+        assert_eq!(back.tol, r.tol);
+        assert!(back.grad.is_none());
+        let got: Vec<u32> = back.z0.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = r.z0.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
+        assert_eq!(back.batch_key(), r.batch_key(), "the key must survive the wire");
+
+        let g = SolveRequest::fixed("linear", 1.0, -2.0, vec![0.5; 3], 0.125)
+            .with_grad(vec![1.0, 0.0, -1.0]);
+        let j = Json::parse(&g.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.tol, Tolerance::Fixed { h: 0.125 });
+        assert_eq!(back.grad, Some(vec![1.0, 0.0, -1.0]));
+        assert_eq!(back.batch_key(), g.batch_key());
+
+        assert!(SolveRequest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut bad = r.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("tab".into(), "nope".into());
+        }
+        assert!(SolveRequest::from_json(&bad).is_err(), "unknown tableau must not decode");
+    }
+
+    #[test]
+    fn response_and_error_json_round_trip() {
+        let resp = SolveResponse {
+            z_t1: vec![1.5, f32::NAN, -0.0],
+            grad: Some(GradResult {
+                dl_dz0: vec![0.25, -0.5, 1e-45],
+                dl_dtheta: vec![3.5],
+                meter: crate::grad::CostMeter {
+                    nfe_forward: 10,
+                    nfe_backward: 20,
+                    nfe_replay: 3,
+                    replay_peak_bytes: 128,
+                    vjp_calls: 5,
+                    checkpoint_bytes: 256,
+                    graph_depth: 7,
+                    n_steps: 11,
+                    n_rejected: 2,
+                    n_reverse_steps: 0,
+                },
+            }),
+            stats: RequestStats {
+                steps: 11,
+                nfe: 44,
+                n_rejected: 2,
+                avg_m: 1.25,
+                checkpoint_bytes: 256,
+                batch_size: 4,
+                queue_wait: Duration::from_micros(250),
+                service: Duration::from_millis(3),
+            },
+        };
+        let j = Json::parse(&resp.to_json().to_string()).unwrap();
+        let back = SolveResponse::from_json(&j).unwrap();
+        let got: Vec<u32> = back.z_t1.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = resp.z_t1.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "NaN and -0.0 states must survive the wire");
+        let bg = back.grad.unwrap();
+        assert_eq!(bg.dl_dtheta, vec![3.5]);
+        assert_eq!(bg.dl_dz0[2].to_bits(), 1e-45f32.to_bits());
+        assert_eq!(bg.meter.nfe_backward, 20);
+        assert_eq!(bg.meter.n_reverse_steps, 0);
+        assert_eq!(back.stats.batch_size, 4);
+        assert_eq!(back.stats.queue_wait, Duration::from_micros(250));
+        assert_eq!(back.stats.service, Duration::from_millis(3));
+
+        for e in [
+            ServeError::Overloaded,
+            ServeError::ShuttingDown,
+            ServeError::UnknownDynamics("ghost".into()),
+            ServeError::BadRequest("z0 length".into()),
+            ServeError::Solver("step underflow".into()),
+        ] {
+            let back = ServeError::from_json(&Json::parse(&e.to_json().to_string()).unwrap());
+            assert_eq!(back.unwrap(), e, "error variants must survive the wire");
+        }
+        assert!(ServeError::from_json(&Json::parse(r#"{"kind":"??","msg":""}"#).unwrap()).is_err());
     }
 
     #[test]

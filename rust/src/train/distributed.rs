@@ -1,0 +1,89 @@
+//! Training-facing surface of the distributed subsystem.
+//!
+//! The mechanics live in [`crate::dist::train`]; this module re-exports
+//! them under `train::` so a training loop swaps `loss_grad_accum` for
+//! [`distributed_step`] without importing `dist` paths, and holds the
+//! end-to-end parity tests tying the two halves together: a W-rank step
+//! over real sockets must be bit-identical to the single-process
+//! [`grad_accum_reference`] fold.
+
+pub use crate::dist::env::DistConfig;
+pub use crate::dist::train::{
+    grad_accum_reference, local_partial, run_root, run_worker, shard_range, DistGrad, RootOpts,
+    StepSpec,
+};
+
+/// One data-parallel training step, dispatched by `cfg` (see
+/// [`crate::dist::train::train_step`]): world 1 is fully local, rank 0
+/// coordinates, other ranks work. The returned gradient is bit-identical
+/// on every surviving rank and to [`grad_accum_reference`] for the same
+/// membership size.
+pub fn distributed_step(
+    cfg: &DistConfig,
+    spec: &StepSpec,
+    opts: &RootOpts,
+) -> anyhow::Result<DistGrad> {
+    crate::dist::train::train_step(cfg, spec, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::TransportOpts;
+    use crate::ode::analytic::Linear;
+    use crate::ode::{tableau, IntegrateOpts};
+    use crate::util::rng::Pcg64;
+
+    fn spec(f: &Linear, b: usize) -> StepSpec<'_> {
+        let d = 3;
+        let mut rng = Pcg64::seed(0x21);
+        StepSpec {
+            f,
+            tab: tableau::by_name("rk45").unwrap(),
+            opts: IntegrateOpts::with_tol(1e-5, 1e-7),
+            t0s: vec![0.0; b],
+            t1s: (0..b).map(|_| rng.range(0.6, 1.4)).collect(),
+            z0: (0..b * d).map(|_| rng.uniform_f32() - 0.5).collect(),
+            lam: vec![1.0; b * d],
+        }
+    }
+
+    /// World 1 takes the no-socket path and still equals the reference.
+    #[test]
+    fn single_rank_step_is_the_local_fold() {
+        let f = Linear::new(-0.6, 3);
+        let s = spec(&f, 5);
+        let got = distributed_step(&DistConfig::default(), &s, &RootOpts::default()).unwrap();
+        assert_eq!(got.members, vec![0]);
+        assert_eq!(got.attempts, 1);
+        let want = grad_accum_reference(&s, 1).unwrap();
+        let got_bits: Vec<u32> = got.dl_dtheta().iter().map(|x| x.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    /// Two real ranks over loopback TCP: the reduced gradient on both
+    /// ranks is bit-identical to the single-process reference.
+    #[test]
+    fn two_rank_step_matches_the_reference_bit_for_bit() {
+        let f = Linear::new(-0.6, 3);
+        let s = spec(&f, 7);
+        let want: Vec<u32> =
+            grad_accum_reference(&s, 2).unwrap().iter().map(|x| x.to_bits()).collect();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (root, worker) = std::thread::scope(|sc| {
+            let w = sc.spawn(|| run_worker(&addr, 1, &s, &TransportOpts::default()));
+            let root = run_root(&listener, 2, &s, &RootOpts::default()).unwrap();
+            (root, w.join().unwrap().unwrap())
+        });
+        assert_eq!(root.members, vec![0, 1]);
+        assert_eq!(root.attempts, 1);
+        let root_bits: Vec<u32> = root.dl_dtheta().iter().map(|x| x.to_bits()).collect();
+        let worker_bits: Vec<u32> = worker.dl_dtheta().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(root_bits, want, "root must match the single-process fold");
+        assert_eq!(worker_bits, want, "the broadcast result must be the same bits");
+        assert_eq!(root.nfe, worker.nfe);
+        assert!(root.nfe > 0);
+    }
+}

@@ -2,11 +2,13 @@
 //! trainer (Fig 7 / Tables 2–3) and segmented integration for losses at
 //! multiple observation times (Tables 4–5).
 
+pub mod distributed;
 pub mod optim;
 pub mod schedule;
 pub mod segmented;
 pub mod trainer;
 
+pub use distributed::distributed_step;
 pub use optim::{clip_grad_norm, Adam, Optimizer, Sgd};
 pub use schedule::LrSchedule;
 pub use segmented::segmented_loss_grad;

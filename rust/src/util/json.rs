@@ -102,7 +102,18 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // Policy: the JSON grammar has no NaN/Infinity form, so
+                    // non-finite numbers serialize as `null` (writing `NaN`
+                    // would produce unparseable output). Transports that
+                    // need non-finite fidelity must use the bit-pattern
+                    // encoding ([`f32_bits`]).
+                    out.push_str("null");
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    // The integer fast path below would print `0` and drop
+                    // the sign bit.
+                    out.push_str("-0");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -186,6 +197,29 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 /// Build an object from pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Encode an `f32` slice as an array of bit patterns. A `u32` is exact in
+/// a JSON number (f64 holds every integer up to 2^53), so this is the
+/// bit-exact wire form for states and gradients — including NaN/Inf/-0.0,
+/// which the plain number grammar cannot carry (see the non-finite `null`
+/// policy in [`Json::to_string`]'s number writer).
+pub fn f32_bits(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(f64::from(x.to_bits()))).collect())
+}
+
+/// Decode [`f32_bits`]; rejects anything that is not an exact `u32`.
+pub fn f32s_from_bits(v: &Json) -> Result<Vec<f32>> {
+    v.as_arr()?
+        .iter()
+        .map(|b| {
+            let n = b.as_f64()?;
+            if !(0.0..=f64::from(u32::MAX)).contains(&n) || n.fract() != 0.0 {
+                bail!("not an f32 bit pattern: {n}");
+            }
+            Ok(f32::from_bits(n as u32))
+        })
+        .collect()
 }
 
 struct Parser<'a> {
@@ -426,5 +460,174 @@ mod tests {
         let v = obj(vec![("x", 1.5.into()), ("name", "m".into()), ("ns", vec![1usize, 2].into())]);
         assert_eq!(v.get("x").unwrap().as_f64().unwrap(), 1.5);
         assert_eq!(v.get("ns").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative(), "parse must keep the sign bit");
+        assert_eq!(Json::Num(0.0).to_string(), "0", "positive zero stays the short form");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Policy: JSON has no NaN/Inf form — they degrade to null rather
+        // than producing unparseable output like "NaN".
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(v).to_string();
+            assert_eq!(s, "null", "{v} must serialize as null");
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+    }
+
+    #[test]
+    fn finite_f64_round_trips_bit_exactly() {
+        let mut rng = crate::util::Pcg64::seed(0x1157);
+        let mut checked = 0;
+        while checked < 500 {
+            let x = f64::from_bits(rng.next_u64());
+            if !x.is_finite() {
+                continue;
+            }
+            let s = Json::Num(x).to_string();
+            let y = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(y.to_bits(), x.to_bits(), "{x:?} -> {s} -> {y:?}");
+            checked += 1;
+        }
+    }
+
+    #[test]
+    fn integer_boundaries_round_trip() {
+        let edges = [
+            0.0,
+            1.0,
+            -1.0,
+            2f64.powi(53),
+            2f64.powi(53) - 1.0,
+            -(2f64.powi(53)),
+            1e15,
+            1e15 - 1.0,
+            -1e15,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+        ];
+        for x in edges {
+            let s = Json::Num(x).to_string();
+            let y = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(y.to_bits(), x.to_bits(), "{x:?} -> {s} -> {y:?}");
+        }
+    }
+
+    /// Random JSON value over every shape: scalars, strings with escapes
+    /// and unicode, arrays, and objects, bounded in depth.
+    fn rand_value(rng: &mut crate::util::Pcg64, depth: usize) -> Json {
+        let top = if depth == 0 { 4 } else { 6 };
+        match rng.below(top) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // Mix exact integers with arbitrary finite doubles.
+                if rng.below(2) == 0 {
+                    Json::Num(rng.below(1 << 20) as f64 - 524_288.0)
+                } else {
+                    loop {
+                        let x = f64::from_bits(rng.next_u64());
+                        if x.is_finite() {
+                            break Json::Num(x);
+                        }
+                    }
+                }
+            }
+            3 => {
+                let alphabet = ['a', '"', '\\', '\n', '\t', '\u{1}', 'é', '世', '🦀', ' '];
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| alphabet[rng.below(alphabet.len())]).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| rand_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{}{i}", rng.below(100)), rand_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn property_random_values_round_trip() {
+        let mut rng = crate::util::Pcg64::seed(0x00de);
+        for case in 0..300 {
+            let v = rand_value(&mut rng, 4);
+            let s = v.to_string();
+            let back = Json::parse(&s).unwrap_or_else(|e| panic!("case {case}: {e}\n{s}"));
+            assert_eq!(back, v, "case {case}: {s}");
+            // Second trip: serialization of the parsed value is stable.
+            assert_eq!(back.to_string(), s, "case {case}");
+        }
+    }
+
+    #[test]
+    fn deeply_nested_round_trips() {
+        let mut v = Json::Num(1.0);
+        for _ in 0..200 {
+            v = Json::Arr(vec![v]);
+        }
+        let s = v.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        let mut o = Json::Bool(true);
+        for i in 0..200 {
+            o = obj(vec![(&format!("k{i}"), o)]);
+        }
+        let s = o.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), o);
+    }
+
+    #[test]
+    fn large_payloads_round_trip() {
+        // The transport frames gradients of this shape; make sure nothing
+        // degrades past 64 KiB of serialized text.
+        let mut rng = crate::util::Pcg64::seed(9);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.normal_f32()).collect();
+        let v = obj(vec![("name", "dl_dtheta".into()), ("bits", f32_bits(&xs))]);
+        let s = v.to_string();
+        assert!(s.len() > 64 * 1024, "payload too small to exercise the path: {}", s.len());
+        let back = Json::parse(&s).unwrap();
+        let ys = f32s_from_bits(back.get("bits").unwrap()).unwrap();
+        let got: Vec<u32> = ys.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
+    }
+
+    #[test]
+    fn f32_bits_carries_every_value_class() {
+        let weird = [
+            0.0f32,
+            -0.0,
+            1.0,
+            f32::NAN,
+            f32::from_bits(0x7fc0_0001), // NaN with a payload
+            f32::from_bits(0xff80_0001), // negative signaling-ish NaN
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            1e-45, // smallest subnormal
+            f32::MAX,
+        ];
+        let s = f32_bits(&weird).to_string();
+        let back = f32s_from_bits(&Json::parse(&s).unwrap()).unwrap();
+        let got: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = weird.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "bit-pattern encoding must be lossless for every class");
+    }
+
+    #[test]
+    fn f32s_from_bits_rejects_non_patterns() {
+        assert!(f32s_from_bits(&Json::parse("[0.5]").unwrap()).is_err());
+        assert!(f32s_from_bits(&Json::parse("[-1]").unwrap()).is_err());
+        assert!(f32s_from_bits(&Json::parse("[4294967296]").unwrap()).is_err());
+        assert!(f32s_from_bits(&Json::parse("[true]").unwrap()).is_err());
+        assert!(f32s_from_bits(&Json::parse("{}").unwrap()).is_err());
+        assert!(f32s_from_bits(&Json::parse("[0,4294967295]").unwrap()).is_ok());
     }
 }

@@ -1,0 +1,6 @@
+// Fixture: an env read outside the designated dist/env.rs helpers —
+// here inside the transport layer — must fire the env-knob rule.
+
+pub fn io_timeout_ms() -> u64 {
+    std::env::var("NODAL_DIST_PORT").map_or(30_000, |s| s.len() as u64)
+}

@@ -1,0 +1,21 @@
+// Fixture: the dist/ parse-and-clamp helpers (`from_env`, `env_usize`)
+// are designated env readers when linted under the virtual path
+// `rust/src/dist/env.rs`.
+
+pub struct DistConfig {
+    pub world_size: usize,
+}
+
+impl DistConfig {
+    pub fn from_env() -> Self {
+        Self { world_size: env_usize("NODAL_DIST_WORLD_SIZE", 1, 1, 256) }
+    }
+}
+
+fn env_usize(name: &str, default: usize, lo: usize, hi: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(default)
+        .clamp(lo, hi)
+}

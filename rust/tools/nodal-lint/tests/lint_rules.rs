@@ -38,6 +38,18 @@ fn env_knob_fail_fixture_fires() {
 }
 
 #[test]
+fn dist_env_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/dist/env.rs", "dist_env_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn dist_env_fail_fixture_fires() {
+    let out = lint_one("rust/src/dist/transport.rs", "dist_env_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_ENV], "{:?}", out.diags);
+}
+
+#[test]
 fn knob_table_flags_undocumented_knob() {
     let lib = ("rust/src/lib.rs".to_string(), fixture("knob_table_lib.rs"));
     // A documented knob passes…
