@@ -24,7 +24,9 @@
 //! [`ShardServer`]: super::shard::ShardServer
 //! [`BatchKey`]: crate::serve::request::BatchKey
 
-use super::transport::{connect_retry, recv_frame, send_frame, TransportOpts};
+use super::transport::{
+    connect_retry, encode_frame, recv_frame, send_frame, write_frame_bytes, TransportOpts,
+};
 use crate::serve::metrics::{LatencySummary, MetricsSnapshot};
 use crate::serve::request::{
     BatchKey, ResponseHandle, ResponseSlot, ServeError, SolveRequest, SolveResponse,
@@ -144,9 +146,15 @@ impl Inner {
                 .lock()
                 .unwrap()
                 .insert(id, PendingEntry { req: req.clone(), slot: slot.clone() });
-            let sent = {
-                let mut w = shard.writer.lock().unwrap();
-                send_frame(&mut *w, &solve_message(id, &req))
+            // Serialize outside the writer lock; hold it only for the
+            // actual socket write so a slow shard cannot stall routing.
+            let sent = match encode_frame(&solve_message(id, &req)) {
+                Ok(bytes) => {
+                    let mut w = shard.writer.lock().unwrap();
+                    // nodal-lint: allow(lock-discipline) the writer mutex must span the socket write so concurrent dispatchers cannot interleave frame bytes
+                    write_frame_bytes(&mut *w, &bytes)
+                }
+                Err(e) => Err(e),
             };
             if sent.is_ok() {
                 // A write into a dying socket can still "succeed" (the OS
@@ -270,7 +278,11 @@ impl Dispatcher {
             s.healthy.store(false, Ordering::SeqCst);
             let _ = s.writer.lock().unwrap().shutdown(std::net::Shutdown::Both);
         }
-        for h in self.readers.lock().unwrap().drain(..) {
+        // Move the handles out first: joining while holding the readers
+        // lock would block any concurrent shutdown caller on the mutex for
+        // the whole join.
+        let handles: Vec<JoinHandle<()>> = self.readers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }

@@ -45,4 +45,7 @@ pub use train::{
     grad_accum_reference, local_partial, run_root, run_worker, shard_range, train_step, DistGrad,
     RootOpts, StepSpec,
 };
-pub use transport::{connect_retry, recv_frame, send_frame, TransportOpts, MAX_FRAME_BYTES};
+pub use transport::{
+    connect_retry, encode_frame, recv_frame, send_frame, write_frame_bytes, TransportOpts,
+    MAX_FRAME_BYTES,
+};

@@ -89,6 +89,7 @@ pub fn tree_combine(partials: &[Vec<f32>]) -> Vec<f32> {
 /// part of the protocol.
 pub fn flat_combine(partials: &[Vec<f32>]) -> Vec<f32> {
     assert!(!partials.is_empty(), "flat_combine over zero partials");
+    // index 0 in bounds: non-emptiness asserted above
     let mut acc = partials[0].clone();
     for p in &partials[1..] {
         add_into(&mut acc, p);
@@ -140,6 +141,7 @@ pub fn leaves_from_json(v: &Json) -> Result<Vec<GradLeaf>> {
 /// name order). Errors on shape mismatch between ranks.
 pub fn tree_combine_leaves(per_rank: &[Vec<GradLeaf>]) -> Result<Vec<GradLeaf>> {
     ensure!(!per_rank.is_empty(), "reduction over zero ranks");
+    // index 0 in bounds: non-emptiness ensured above
     let first = &per_rank[0];
     for (r, leaves) in per_rank.iter().enumerate() {
         ensure!(

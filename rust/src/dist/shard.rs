@@ -16,7 +16,7 @@
 //! it severs every socket without draining, exactly what a dying process
 //! looks like from the dispatcher's side.
 
-use super::transport::{recv_frame, send_frame};
+use super::transport::{encode_frame, recv_frame, write_frame_bytes};
 use crate::serve::request::{ServeError, SolveRequest, SolveResponse};
 use crate::serve::SolveServer;
 use crate::util::json::{obj, Json};
@@ -127,6 +127,16 @@ fn accept_loop(
     }
 }
 
+/// Serialize `body` outside the writer lock, then write it under the lock.
+/// Concurrent waiter threads answer on the same socket, so the guard must
+/// span the socket write to keep each response frame atomic.
+fn send_locked(writer: &Mutex<TcpStream>, body: &Json) {
+    let Ok(bytes) = encode_frame(body) else { return };
+    let mut w = writer.lock().unwrap();
+    // nodal-lint: allow(lock-discipline) the writer mutex must span the socket write so response frames from concurrent waiters stay atomic
+    let _ = write_frame_bytes(&mut *w, &bytes);
+}
+
 /// Write one correlated response frame (ok or error) to the shared writer.
 fn respond(writer: &Mutex<TcpStream>, id: usize, result: Result<SolveResponse, ServeError>) {
     let body = match result {
@@ -143,8 +153,7 @@ fn respond(writer: &Mutex<TcpStream>, id: usize, result: Result<SolveResponse, S
             ("err", e.to_json()),
         ]),
     };
-    let mut w = writer.lock().unwrap();
-    let _ = send_frame(&mut *w, &body);
+    send_locked(writer, &body);
 }
 
 fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>) {
@@ -194,13 +203,10 @@ fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>) {
                     ("kind", "metrics".into()),
                     ("snapshot", server.metrics().to_json()),
                 ]);
-                let mut w = writer.lock().unwrap();
-                let _ = send_frame(&mut *w, &body);
+                send_locked(&writer, &body);
             }
             "shutdown" => {
-                let bye = obj(vec![("kind", "bye".into())]);
-                let mut w = writer.lock().unwrap();
-                let _ = send_frame(&mut *w, &bye);
+                send_locked(&writer, &obj(vec![("kind", "bye".into())]));
                 break;
             }
             _ => break,

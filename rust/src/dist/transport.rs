@@ -48,14 +48,31 @@ impl Default for TransportOpts {
     }
 }
 
-/// Write one framed message and flush it.
-pub fn send_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+/// Serialize one message to its framed byte form (length prefix + body).
+/// Splitting encode from write lets callers do the serialization work
+/// outside any lock and hold a writer guard only for the socket write.
+pub fn encode_frame(msg: &Json) -> Result<Vec<u8>> {
     let body = msg.to_string();
     ensure!(body.len() <= MAX_FRAME_BYTES, "frame of {} bytes exceeds cap", body.len());
-    w.write_all(&(body.len() as u32).to_be_bytes()).context("frame header write")?;
-    w.write_all(body.as_bytes()).context("frame body write")?;
+    let mut bytes = Vec::with_capacity(4 + body.len());
+    bytes.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    bytes.extend_from_slice(body.as_bytes());
+    Ok(bytes)
+}
+
+/// Write pre-encoded frame bytes and flush them. One `write_all` keeps the
+/// frame a single atomic unit from the caller's perspective.
+pub fn write_frame_bytes<W: Write>(w: &mut W, bytes: &[u8]) -> Result<()> {
+    w.write_all(bytes).context("frame write")?;
     w.flush().context("frame flush")?;
     Ok(())
+}
+
+/// Write one framed message and flush it (encode + write in one step, for
+/// callers with exclusive stream access).
+pub fn send_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    let bytes = encode_frame(msg)?;
+    write_frame_bytes(w, &bytes)
 }
 
 /// Read one framed message, blocking up to the stream's read timeout.

@@ -164,8 +164,10 @@
 //! and solver results depend only on inputs — never on wall time, hash
 //! order, or an environment variable read mid-solve. These invariants are
 //! enforced by an offline static-analysis pass, `cargo run -p nodal-lint`
-//! (a CI hard gate; report at `results/lint/report.jsonl`), with five
-//! rules:
+//! (a CI hard gate; report at `results/lint/report.jsonl`), with eight
+//! rules — the last three interprocedural, driven by an intra-crate call
+//! graph (see `nodal-lint`'s `graph` module for its construction and
+//! documented limits):
 //!
 //! 1. **env-knob** — `std::env::var` is read only inside the designated
 //!    parse-and-clamp helpers
@@ -184,12 +186,27 @@
 //!    `with_capacity`/`collect`/`clone`/`to_vec`/`Box::new`/`String`
 //!    constructors inside the marked block.
 //! 4. **panic-isolation** — no `unwrap`/`expect`/`panic!` family and no
-//!    uncommented constant index in non-test [`serve`] code (one poisoned
-//!    request must degrade, never take down a worker); the
-//!    `lock()/wait()` poison idiom is exempt.
+//!    uncommented constant index in non-test [`serve`] or [`dist`] code
+//!    (one poisoned request must degrade, never take down a worker or a
+//!    rank); the `lock()/wait()` poison idiom is exempt.
 //! 5. **parity-linkage** — every non-test [`ode::OdeFunc`] impl overriding
 //!    `eval_batch`/`vjp_batch` must be named in a bit-equality test tying
 //!    the batched path to the scalar one.
+//! 6. **lock-discipline** — in [`dist`] and [`serve`], no mutex guard may
+//!    live across a blocking call (socket I/O, `join`, `sleep`), directly
+//!    or through any function the call graph can reach (a stalled peer
+//!    must never stall every thread sharing the lock); and any pair of
+//!    locks taken nested must be taken in one consistent order everywhere
+//!    (no ABBA deadlock shapes).
+//! 7. **wire-determinism** — in [`dist`], floats reach the wire only as
+//!    `u32`/`u64` bit patterns ([`util::json`]'s `f32_bits` family) —
+//!    never as float JSON (`Json::Num` / `.as_f64()`), whose text
+//!    round-trip would silently drop NaN payloads and `-0.0`.
+//! 8. **transitive hot-alloc** — rule 3 extended through the call graph:
+//!    a function reachable from a `// nodal-lint: hot` region may not
+//!    allocate either, so hoisting an allocation into a helper does not
+//!    launder it off the hot path. Method calls with several same-named
+//!    candidates are counted as unresolved in the report, never guessed.
 //!
 //! A violation is suppressed only by `// nodal-lint: allow(<rule>)
 //! <reason>` with a non-empty reason; a bare `allow` is itself a

@@ -102,12 +102,15 @@ impl ThreeBody {
             }
             wjp[j] += g;
         }
-        // wᵀ∂f/∂z by finite differences (central).
+        // wᵀ∂f/∂z by finite differences (central). Stack buffers: this
+        // runs once per reverse stage inside the hot batched sweep
+        // (vjp_batch → vjp_one), so it must not allocate.
         let n = 18;
         let eps = 1e-4f32;
-        let mut zp = z.to_vec();
-        let mut fp = vec![0.0f32; n];
-        let mut fm = vec![0.0f32; n];
+        let mut zp = [0.0f32; 18];
+        zp.copy_from_slice(z);
+        let mut fp = [0.0f32; 18];
+        let mut fm = [0.0f32; 18];
         for c in 0..n {
             let orig = zp[c];
             zp[c] = orig + eps;

@@ -474,13 +474,18 @@ impl SolveServer {
     pub fn shutdown(&self) {
         self.core.closed.store(true, Ordering::SeqCst);
         self.core.submit_q.close();
-        if let Some(h) = self.batcher.lock().unwrap().take() {
+        // Move the handles out of their mutexes before joining: holding
+        // either lock across a join would block a concurrent shutdown (or
+        // drop) for the whole thread lifetime.
+        let batcher = self.batcher.lock().unwrap().take();
+        if let Some(h) = batcher {
             let _ = h.join();
         }
         // The batcher has dispatched everything it will ever dispatch;
         // closing the work queue lets workers drain the remainder and exit.
         self.core.work_q.close();
-        for h in self.workers.lock().unwrap().drain(..) {
+        let workers: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for h in workers {
             let _ = h.join();
         }
     }

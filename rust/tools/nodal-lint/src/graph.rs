@@ -1,0 +1,577 @@
+//! Symbol table, intra-crate call graph, and the interprocedural rules
+//! (6 lock-discipline, 7's cross-function half lives in `scan`, 8
+//! transitive hot-alloc) built on the per-function facts `scan` collects.
+//!
+//! ## Call-graph construction and its documented limits
+//!
+//! Function definitions are keyed by (module path derived from the file
+//! path, impl owner type, name). Edges are resolved best-effort:
+//!
+//! * **Direct calls** (`foo(…)`, `module::foo(…)`, `Type::foo(…)`,
+//!   `Self::foo(…)`): the candidate set is every non-test `fn` with that
+//!   name. A qualifier chain filters candidates by impl owner or module
+//!   path suffix (`Self` maps to the caller's impl owner; `crate`/`super`
+//!   accept any intra-crate candidate). Multiple survivors resolve to
+//!   *all* of them (conservative over-approximation); zero candidates
+//!   means the call targets std/vendored code and is external. Direct
+//!   intra-crate calls therefore always resolve — they are never counted
+//!   as unresolved.
+//! * **Method calls** (`recv.foo(…)`): there is no type inference, so
+//!   resolution is heuristic. Names on the ambient deny-list (`push`,
+//!   `collect`, `lock`, the condvar `wait*` family, …) are assumed to be
+//!   std and treated as external. A bare `self.foo(…)` resolves to the
+//!   enclosing impl owner's `foo` when it exists. Otherwise a unique
+//!   non-test candidate resolves; **multiple candidates are counted as
+//!   unresolved edges** (reported, not silently dropped) — this is the
+//!   "no trait dispatch" limit: `f.eval_batch(…)` through `&dyn OdeFunc`
+//!   stays unresolved by design.
+//!
+//! Closures are attributed to their enclosing function; test functions
+//! are excluded from the graph entirely (as callers and as candidates).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::{Diagnostic, R_HOT, R_LOCK};
+
+/// One function definition, with the per-body facts the rules consume.
+#[derive(Debug, Clone, Default)]
+pub struct FnFact {
+    pub name: String,
+    /// Impl owner type (`impl Foo { fn bar }` → `Foo`); `None` for free
+    /// functions and trait default methods.
+    pub owner: Option<String>,
+    /// File path (as linted, `/`-separated).
+    pub path: String,
+    pub line: u32,
+    pub is_test: bool,
+    pub calls: Vec<CallFact>,
+    /// Lock acquisitions (`.lock().unwrap()` / `.expect(…)`).
+    pub acqs: Vec<AcqFact>,
+    /// Allocation-family sites anywhere in the body (rule 8 checks these
+    /// for functions reachable from hot regions).
+    pub allocs: Vec<AllocFact>,
+}
+
+/// One call site inside a function body.
+#[derive(Debug, Clone, Default)]
+pub struct CallFact {
+    pub name: String,
+    /// `a::b::name(…)` qualifier chain (empty for plain/method calls).
+    pub quals: Vec<String>,
+    /// `recv.name(…)` — resolved heuristically (see module docs).
+    pub method: bool,
+    /// Method call whose receiver is a bare `self`.
+    pub recv_self: bool,
+    pub line: u32,
+    /// Lock fields whose guards are live at this call site.
+    pub held: Vec<String>,
+    /// Call site lies inside a `// nodal-lint: hot` region.
+    pub in_hot: bool,
+}
+
+/// One `.lock().unwrap()` acquisition site.
+#[derive(Debug, Clone, Default)]
+pub struct AcqFact {
+    /// The field/binding the mutex was reached through (`writer.lock()`
+    /// → `writer`).
+    pub field: String,
+    pub line: u32,
+    /// Lock fields already held when this one is acquired (lock-order
+    /// evidence).
+    pub held: Vec<String>,
+}
+
+/// One allocation-family site.
+#[derive(Debug, Clone, Default)]
+pub struct AllocFact {
+    pub what: String,
+    pub line: u32,
+    /// Inside a lexical hot region (already covered by rule 3; rule 8
+    /// skips these to avoid double-reporting).
+    pub in_hot: bool,
+}
+
+/// Functions that block the calling thread on I/O or another thread,
+/// recognized *by name* at the call site (so `send_frame` through a
+/// trait object still counts). The condvar `wait*` family is exempt by
+/// design: waiting on a condvar with its own guard is the idiom.
+const BLOCKING: &[&str] = &[
+    "send_frame",
+    "recv_frame",
+    "write_frame_bytes",
+    "connect",
+    "connect_timeout",
+    "connect_retry",
+    "accept",
+    "recv",
+    "recv_one",
+    "recv_all",
+    "recv_timeout",
+    "join",
+    "sleep",
+];
+
+/// Method names assumed to be std/ambient (collections, iterators,
+/// atomics, Option/Result, condvars). Method calls with these names are
+/// never resolved intra-crate — the deny-list is what keeps
+/// `queue.push(x)` from resolving to `BatchFormer::push`.
+const AMBIENT: &[&str] = &[
+    "push", "pop", "pop_front", "push_back", "insert", "remove", "get", "get_mut", "len",
+    "is_empty", "is_some", "is_none", "is_ok", "is_err", "is_finite", "clear", "drain", "iter",
+    "iter_mut", "into_iter", "next", "peek", "collect", "clone", "cloned", "copied", "to_vec",
+    "to_string", "to_owned", "extend", "extend_from_slice", "truncate", "resize", "reserve",
+    "take", "replace", "swap", "split_at", "split_at_mut", "copy_from_slice", "fill", "min",
+    "max", "abs", "map", "map_or", "map_err", "and_then", "or_else", "ok_or", "ok_or_else",
+    "unwrap_or", "unwrap_or_else", "unwrap_or_default", "filter", "filter_map", "flat_map",
+    "zip", "enumerate", "rev", "sum", "fold", "all", "any", "position", "find", "count", "last",
+    "first", "keys", "values", "sort", "sort_unstable", "sort_by", "sort_by_key", "chunks",
+    "chunks_exact", "chunks_exact_mut", "windows", "lock", "unwrap", "expect",
+    "get_or_insert_with", "contains", "contains_key", "starts_with", "ends_with", "trim",
+    "split", "splitn", "split_once", "parse", "fetch_add", "fetch_sub", "store", "load",
+    "compare_exchange", "saturating_add", "saturating_sub", "saturating_mul", "wrapping_sub",
+    "checked_add", "checked_mul", "wait", "wait_timeout", "wait_while", "wait_timeout_while",
+    "notify_all", "notify_one", "to_bits", "from_bits", "to_be_bytes", "from_be_bytes",
+    "try_clone", "try_into", "try_from", "into", "from", "as_str", "as_ref", "as_mut",
+    "as_bytes", "as_slice", "set", "flush", "write_all", "read_exact",
+];
+
+/// Result of the interprocedural pass over one source set.
+#[derive(Debug, Default)]
+pub struct GraphOutcome {
+    /// Rule 6 / rule 8 diagnostics (pre-allow; the caller applies allows).
+    pub diags: Vec<Diagnostic>,
+    /// Method-call edges with multiple intra-crate candidates — the
+    /// documented resolution limit, counted rather than silently dropped.
+    pub unresolved: usize,
+}
+
+/// `"rust/src/dist/transport.rs"` → `["dist", "transport"]` (drops a
+/// trailing `mod`/`lib` segment so `dist/mod.rs` is module `dist`).
+fn module_segments(path: &str) -> Vec<&str> {
+    let p = path.strip_suffix(".rs").unwrap_or(path);
+    let p = match p.find("src/") {
+        Some(k) => &p[k + 4..],
+        None => p,
+    };
+    let mut segs: Vec<&str> = p.split('/').filter(|s| !s.is_empty()).collect();
+    if matches!(segs.last(), Some(&"mod") | Some(&"lib")) {
+        segs.pop();
+    }
+    segs
+}
+
+fn in_lock_scope(path: &str) -> bool {
+    path.contains("src/dist/") || path.contains("src/serve/")
+}
+
+enum Res {
+    Resolved(Vec<usize>),
+    Unresolved,
+    External,
+}
+
+struct Graph<'a> {
+    fns: Vec<&'a FnFact>,
+    by_name: BTreeMap<&'a str, Vec<usize>>,
+    mods: Vec<Vec<&'a str>>,
+}
+
+impl<'a> Graph<'a> {
+    fn build(all: &[&'a FnFact]) -> Graph<'a> {
+        let fns: Vec<&FnFact> = all.iter().copied().filter(|f| !f.is_test).collect();
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.as_str()).or_default().push(i);
+        }
+        let mods = fns.iter().map(|f| module_segments(&f.path)).collect();
+        Graph { fns, by_name, mods }
+    }
+
+    fn resolve(&self, caller: usize, c: &CallFact) -> Res {
+        let cands = match self.by_name.get(c.name.as_str()) {
+            Some(v) => v.as_slice(),
+            None => return Res::External,
+        };
+        if c.method {
+            if AMBIENT.contains(&c.name.as_str()) {
+                return Res::External;
+            }
+            if c.recv_self {
+                if let Some(o) = &self.fns[caller].owner {
+                    let own: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&k| self.fns[k].owner.as_deref() == Some(o.as_str()))
+                        .collect();
+                    if !own.is_empty() {
+                        return Res::Resolved(own);
+                    }
+                }
+            }
+            let typed: Vec<usize> =
+                cands.iter().copied().filter(|&k| self.fns[k].owner.is_some()).collect();
+            match typed.len() {
+                0 => Res::External,
+                1 => Res::Resolved(typed),
+                _ => Res::Unresolved,
+            }
+        } else {
+            match c.quals.last().map(String::as_str) {
+                None | Some("crate") | Some("super") => Res::Resolved(cands.to_vec()),
+                Some(q) => {
+                    let q = if q == "Self" {
+                        match &self.fns[caller].owner {
+                            Some(o) => o.as_str(),
+                            None => return Res::External,
+                        }
+                    } else {
+                        q
+                    };
+                    let filtered: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&k| {
+                            self.fns[k].owner.as_deref() == Some(q) || self.mods[k].contains(&q)
+                        })
+                        .collect();
+                    if filtered.is_empty() {
+                        Res::External
+                    } else {
+                        Res::Resolved(filtered)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the interprocedural rules over every collected function fact.
+pub fn analyze(all: &[&FnFact]) -> GraphOutcome {
+    let g = Graph::build(all);
+    let n = g.fns.len();
+
+    // Resolve every call once: per caller, (call index, targets).
+    let mut edges: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); n];
+    let mut unresolved = 0usize;
+    for (i, f) in g.fns.iter().enumerate() {
+        for (ci, c) in f.calls.iter().enumerate() {
+            match g.resolve(i, c) {
+                Res::Resolved(ts) => edges[i].push((ci, ts)),
+                Res::Unresolved => unresolved += 1,
+                Res::External => {}
+            }
+        }
+    }
+
+    // blocks*: the primitive blocking name a function reaches, if any.
+    let mut blocks: Vec<Option<String>> = g
+        .fns
+        .iter()
+        .map(|f| {
+            f.calls
+                .iter()
+                .find(|c| BLOCKING.contains(&c.name.as_str()))
+                .map(|c| c.name.clone())
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            if blocks[i].is_some() {
+                continue;
+            }
+            let hit = edges[i]
+                .iter()
+                .flat_map(|(_, ts)| ts.iter())
+                .find_map(|&t| blocks[t].clone());
+            if let Some(via) = hit {
+                blocks[i] = Some(via);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // acquires*: lock fields a function may take, directly or transitively.
+    let mut acq: Vec<BTreeSet<String>> = g
+        .fns
+        .iter()
+        .map(|f| f.acqs.iter().map(|a| a.field.clone()).collect())
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            let mut add: Vec<String> = Vec::new();
+            for (_, ts) in &edges[i] {
+                for &t in ts {
+                    for fld in &acq[t] {
+                        if !acq[i].contains(fld) {
+                            add.push(fld.clone());
+                        }
+                    }
+                }
+            }
+            for fld in add {
+                acq[i].insert(fld);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // ---- rule 6a: guard live across a blocking call (dist/ + serve/) ----
+    for (i, f) in g.fns.iter().enumerate() {
+        if !in_lock_scope(&f.path) {
+            continue;
+        }
+        let targets = |ci: usize| {
+            edges[i].iter().find(|(k, _)| *k == ci).map(|(_, ts)| ts.as_slice())
+        };
+        for (ci, c) in f.calls.iter().enumerate() {
+            if c.held.is_empty() {
+                continue;
+            }
+            let held = c.held.join("`, `");
+            if BLOCKING.contains(&c.name.as_str()) {
+                diags.push(Diagnostic {
+                    rule: R_LOCK,
+                    path: f.path.clone(),
+                    line: c.line,
+                    msg: format!(
+                        "`{}` blocks while guard(s) `{held}` are held; \
+                         serialize first and drop the guard before blocking",
+                        c.name
+                    ),
+                });
+            } else if let Some(ts) = targets(ci) {
+                if let Some((t, via)) =
+                    ts.iter().find_map(|&t| blocks[t].as_ref().map(|v| (t, v)))
+                {
+                    diags.push(Diagnostic {
+                        rule: R_LOCK,
+                        path: f.path.clone(),
+                        line: c.line,
+                        msg: format!(
+                            "`{}` reaches blocking `{via}` while guard(s) `{held}` \
+                             are held; drop the guard before calling it",
+                            g.fns[t].name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- rule 6b: inconsistent lock acquisition order ----
+    // Evidence: (held, acquired) pairs from direct acquisitions and from
+    // calls into functions that acquire transitively. An inversion is the
+    // same unordered pair seen in both orders anywhere in dist/ + serve/.
+    let mut pairs: BTreeMap<(String, String), Vec<(String, u32)>> = BTreeMap::new();
+    for (i, f) in g.fns.iter().enumerate() {
+        if !in_lock_scope(&f.path) {
+            continue;
+        }
+        for a in &f.acqs {
+            for h in &a.held {
+                if h != &a.field {
+                    pairs
+                        .entry((h.clone(), a.field.clone()))
+                        .or_default()
+                        .push((f.path.clone(), a.line));
+                }
+            }
+        }
+        for (ci, ts) in &edges[i] {
+            let c = &f.calls[*ci];
+            if c.held.is_empty() {
+                continue;
+            }
+            for &t in ts {
+                for fld in &acq[t] {
+                    for h in &c.held {
+                        if h != fld {
+                            pairs
+                                .entry((h.clone(), fld.clone()))
+                                .or_default()
+                                .push((f.path.clone(), c.line));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut order_sites: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for ((a, b), sites) in &pairs {
+        let Some(rev) = pairs.get(&(b.clone(), a.clone())) else { continue };
+        let (opath, oline) = &rev[0];
+        for (path, line) in sites {
+            if order_sites.insert((path.clone(), *line, format!("{a}->{b}"))) {
+                diags.push(Diagnostic {
+                    rule: R_LOCK,
+                    path: path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "lock `{b}` taken while `{a}` is held, but the opposite \
+                         order appears at {opath}:{oline}; pick one order"
+                    ),
+                });
+            }
+        }
+    }
+
+    // ---- rule 8: transitive hot-alloc ----
+    // Seeds: resolved callees of calls made inside hot regions. Walk the
+    // resolved graph from them; any allocation-family site in a reached
+    // body (outside that body's own lexical hot regions, which rule 3
+    // already covers) is on a hot path.
+    let mut chain: BTreeMap<usize, String> = BTreeMap::new();
+    let mut queue: Vec<usize> = Vec::new();
+    for (i, f) in g.fns.iter().enumerate() {
+        for (ci, ts) in &edges[i] {
+            if !f.calls[*ci].in_hot {
+                continue;
+            }
+            for &t in ts {
+                if t != i && !chain.contains_key(&t) {
+                    chain.insert(t, format!("{} -> {}", f.name, g.fns[t].name));
+                    queue.push(t);
+                }
+            }
+        }
+    }
+    let mut seen_alloc: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    while let Some(t) = queue.pop() {
+        let via = chain[&t].clone();
+        for a in &g.fns[t].allocs {
+            if a.in_hot {
+                continue;
+            }
+            if seen_alloc.insert((g.fns[t].path.clone(), a.line, a.what.clone())) {
+                diags.push(Diagnostic {
+                    rule: R_HOT,
+                    path: g.fns[t].path.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "{} in `{}` is on a hot path ({via}); hoist into \
+                         caller-provided scratch",
+                        a.what, g.fns[t].name
+                    ),
+                });
+            }
+        }
+        for (_, ts) in &edges[t] {
+            for &u in ts {
+                if u != t && !chain.contains_key(&u) {
+                    chain.insert(u, format!("{via} -> {}", g.fns[u].name));
+                    queue.push(u);
+                }
+            }
+        }
+    }
+
+    GraphOutcome { diags, unresolved }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn facts(path: &str, src: &str) -> Vec<FnFact> {
+        crate::scan::scan_file(path, src).fns
+    }
+
+    fn run(sources: &[(&str, &str)]) -> GraphOutcome {
+        let all: Vec<Vec<FnFact>> =
+            sources.iter().map(|(p, s)| facts(p, s)).collect();
+        let refs: Vec<&FnFact> = all.iter().flatten().collect();
+        analyze(&refs)
+    }
+
+    #[test]
+    fn module_segments_drop_mod_and_lib() {
+        assert_eq!(module_segments("rust/src/dist/transport.rs"), vec!["dist", "transport"]);
+        assert_eq!(module_segments("rust/src/dist/mod.rs"), vec!["dist"]);
+        assert!(module_segments("rust/src/lib.rs").is_empty());
+    }
+
+    #[test]
+    fn guard_across_blocking_call_direct_and_transitive() {
+        let src = "fn helper(w: &mut T) { send_frame(w, m); }\n\
+                   fn bad(x: &S) {\n let mut w = x.writer.lock().unwrap();\n helper(&mut w);\n}\n\
+                   fn good(x: &S) {\n let b = encode(m);\n let mut w = x.writer.lock().unwrap();\n drop(w);\n helper_b();\n}";
+        let out = run(&[("rust/src/dist/a.rs", src)]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert_eq!(out.diags[0].line, 4);
+        assert!(out.diags[0].msg.contains("send_frame"), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn temp_guard_dies_at_statement_end() {
+        let src = "fn ok(x: &S) {\n x.pending.lock().unwrap().insert(1, 2);\n send_frame(w, m);\n}";
+        let out = run(&[("rust/src/dist/a.rs", src)]);
+        assert!(out.diags.is_empty(), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn for_iterator_guard_lives_through_body() {
+        let src = "fn bad(x: &S) {\n for h in x.readers.lock().unwrap().drain(..) {\n let _ = h.join();\n }\n}";
+        let out = run(&[("rust/src/dist/a.rs", src)]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert_eq!(out.diags[0].line, 3);
+    }
+
+    #[test]
+    fn plain_if_condition_guard_dies_at_brace() {
+        let src = "fn ok(x: &S) {\n if x.pending.lock().unwrap().remove(&id).is_some() {\n send_frame(w, m);\n }\n}";
+        let out = run(&[("rust/src/dist/a.rs", src)]);
+        assert!(out.diags.is_empty(), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn lock_order_inversion_reported_both_sites() {
+        let src = "fn a(x: &S) {\n let g = x.writer.lock().unwrap();\n let p = x.pending.lock().unwrap();\n}\n\
+                   fn b(x: &S) {\n let p = x.pending.lock().unwrap();\n let g = x.writer.lock().unwrap();\n}";
+        let out = run(&[("rust/src/dist/a.rs", src)]);
+        assert_eq!(out.diags.len(), 2, "{:?}", out.diags);
+        assert!(out.diags.iter().all(|d| d.msg.contains("opposite")), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn transitive_hot_alloc_reaches_two_hops() {
+        let src = "fn leaf() -> Vec<f32> { xs.to_vec() }\n\
+                   fn mid() { leaf(); }\n\
+                   // nodal-lint: hot\n\
+                   fn hot_loop() { mid(); }";
+        let out = run(&[("rust/src/grad/a.rs", src)]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert_eq!(out.diags[0].rule, R_HOT);
+        assert!(out.diags[0].msg.contains("hot_loop -> mid -> leaf"), "{:?}", out.diags);
+    }
+
+    #[test]
+    fn ambiguous_method_call_is_counted_not_resolved() {
+        let src = "impl A { fn go(&self) {} }\nimpl B { fn go(&self) {} }\n\
+                   // nodal-lint: hot\n\
+                   fn hot_loop(x: &X) { x.go(); }";
+        let out = run(&[("rust/src/ode/a.rs", src)]);
+        assert!(out.diags.is_empty(), "{:?}", out.diags);
+        assert_eq!(out.unresolved, 1);
+    }
+
+    #[test]
+    fn bare_self_method_resolves_to_owner() {
+        let src = "impl A {\n fn kernel(&self) -> Vec<f32> { xs.to_vec() }\n}\n\
+                   impl B {\n fn kernel(&self) {}\n}\n\
+                   impl Tr for A {\n // nodal-lint: hot\n fn batch(&self) { self.kernel(); }\n}";
+        let out = run(&[("rust/src/ode/a.rs", src)]);
+        assert_eq!(out.diags.len(), 1, "{:?}", out.diags);
+        assert!(out.diags[0].msg.contains("batch -> kernel"), "{:?}", out.diags);
+        assert_eq!(out.unresolved, 0);
+    }
+}

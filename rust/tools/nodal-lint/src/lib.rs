@@ -8,7 +8,7 @@
 //! tribal rules into machine-checked ones, with no dependencies (like the
 //! vendored `anyhow`/`xla`) so it runs fully offline.
 //!
-//! Five rules, each with file:line diagnostics:
+//! Eight rules, each with file:line diagnostics:
 //!
 //! 1. **env-knob** — `std::env::var*` only inside the designated
 //!    parse-and-clamp helpers; every `NODAL_*` literal must appear in the
@@ -21,15 +21,33 @@
 //!    `collect`, `clone`, `to_owned`, `to_string`, `Box::new`,
 //!    `String::new`/`from`/`with_capacity`).
 //! 4. **panic-isolation** — no `unwrap`/`expect`/`panic!`-family or
-//!    uncommented constant indexing in `serve/` non-test code; the mutex
-//!    `.lock().unwrap()` poison idiom is allowed.
+//!    uncommented constant indexing in `serve/` and `dist/` non-test
+//!    code; the mutex `.lock().unwrap()` poison idiom is allowed.
 //! 5. **parity-linkage** — every non-test `OdeFunc` impl overriding
 //!    `eval_batch`/`vjp_batch` must be named by a bit-equality test.
+//! 6. **lock-discipline** *(interprocedural)* — in `dist/` and `serve/`,
+//!    no mutex guard may be live across a blocking call (frame I/O,
+//!    connect/accept, channel recv, `join`, `sleep`), directly or
+//!    transitively through the call graph; and two locks must be taken
+//!    in one consistent order everywhere.
+//! 7. **wire-determinism** — in `dist/`, floats reach the transport only
+//!    as u32/u64 bit patterns: no `Json::Num` construction, `.as_f64()`
+//!    decode, or float-valued `.into()` JSON conversion.
+//! 8. **transitive hot-alloc** *(interprocedural)* — the rule-3
+//!    allocation families are also diagnosed in every function reachable
+//!    from a hot region through resolved call edges (reported under the
+//!    `hot-alloc` rule, so one allow covers both halves).
+//!
+//! Rules 6 and 8 run on an intra-crate call graph; see `graph` for how
+//! edges are resolved and the documented limits (no trait dispatch,
+//! best-effort method calls — unresolved method edges are counted in the
+//! report, never silently dropped).
 //!
 //! Escape hatch: `// nodal-lint: allow(<rule>) <reason>` on the offending
 //! line or the line above. The reason is mandatory; a bare allow is itself
 //! a diagnostic and suppresses nothing.
 
+pub mod graph;
 pub mod lexer;
 pub mod scan;
 
@@ -42,10 +60,12 @@ pub const R_DET: &str = "determinism";
 pub const R_HOT: &str = "hot-alloc";
 pub const R_PANIC: &str = "panic-isolation";
 pub const R_PARITY: &str = "parity-linkage";
+pub const R_LOCK: &str = "lock-discipline";
+pub const R_WIRE: &str = "wire-determinism";
 /// Pseudo-rule for malformed `nodal-lint:` directives; not allowable.
 pub const R_DIRECTIVE: &str = "directive";
 
-pub const RULES: [&str; 5] = [R_ENV, R_DET, R_HOT, R_PANIC, R_PARITY];
+pub const RULES: [&str; 7] = [R_ENV, R_DET, R_HOT, R_PANIC, R_PARITY, R_LOCK, R_WIRE];
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Diagnostic {
@@ -63,6 +83,9 @@ pub struct Outcome {
     pub suppressed: usize,
     /// Number of files scanned.
     pub files: usize,
+    /// Method-call edges the graph could not resolve to a unique
+    /// intra-crate function (see `graph` module docs).
+    pub unresolved: usize,
 }
 
 impl Outcome {
@@ -96,6 +119,32 @@ pub fn lint_sources(files: &[(String, String)]) -> Outcome {
 
     let mut diags = Vec::new();
     let mut suppressed = 0usize;
+
+    // Interprocedural pass: symbol table + call graph over every file's
+    // function facts (rules 6 and 8). Its diagnostics are filtered through
+    // the allows of the file each one lands in.
+    let unresolved = {
+        let all_fns: Vec<&graph::FnFact> =
+            facts.iter().flat_map(|f| f.fns.iter()).collect();
+        let g = graph::analyze(&all_fns);
+        let allow_of: std::collections::BTreeMap<&str, &[scan::AllowSpan]> = files
+            .iter()
+            .zip(&facts)
+            .map(|((p, _), f)| (p.as_str(), f.allows.as_slice()))
+            .collect();
+        for d in g.diags {
+            let allowed = allow_of.get(d.path.as_str()).is_some_and(|al| {
+                al.iter().any(|a| a.rule == d.rule && a.lo <= d.line && d.line <= a.hi)
+            });
+            if allowed {
+                suppressed += 1;
+            } else {
+                diags.push(d);
+            }
+        }
+        g.unresolved
+    };
+
     for (f, (path, _)) in facts.into_iter().zip(files) {
         suppressed += f.suppressed;
         diags.extend(f.diags);
@@ -148,7 +197,7 @@ pub fn lint_sources(files: &[(String, String)]) -> Outcome {
     }
 
     diags.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    Outcome { diags, suppressed, files: files.len() }
+    Outcome { diags, suppressed, files: files.len(), unresolved }
 }
 
 /// Walk `rust/src`, `rust/benches`, `rust/tests` under `root` and lint
@@ -188,19 +237,40 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Write the machine-readable report: a summary line followed by one JSON
-/// object per diagnostic. Hand-rolled serialization — no serde.
+/// Per-rule diagnostic counts in a fixed order (declared rules, then the
+/// directive pseudo-rule), so report summaries diff meaningfully.
+pub fn rule_counts(out: &Outcome) -> Vec<(&'static str, usize)> {
+    RULES
+        .iter()
+        .copied()
+        .chain(std::iter::once(R_DIRECTIVE))
+        .map(|r| (r, out.diags.iter().filter(|d| d.rule == r).count()))
+        .collect()
+}
+
+/// Write the machine-readable report: a summary line (totals plus
+/// per-rule counts and the unresolved-edge count, all in fixed key order
+/// so artifact diffs between commits are meaningful) followed by one JSON
+/// object per diagnostic, sorted by (file, line, rule). Hand-rolled
+/// serialization — no serde.
 pub fn write_report(path: &Path, out: &Outcome) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let rules = rule_counts(out)
+        .iter()
+        .map(|(r, n)| format!("\"{r}\":{n}"))
+        .collect::<Vec<_>>()
+        .join(",");
     writeln!(
         w,
-        "{{\"files\":{},\"diagnostics\":{},\"suppressed\":{}}}",
+        "{{\"files\":{},\"diagnostics\":{},\"suppressed\":{},\
+         \"unresolved_method_calls\":{},\"rules\":{{{rules}}}}}",
         out.files,
         out.diags.len(),
-        out.suppressed
+        out.suppressed,
+        out.unresolved
     )?;
     for d in &out.diags {
         writeln!(
@@ -285,6 +355,7 @@ mod tests {
             }],
             suppressed: 1,
             files: 2,
+            unresolved: 4,
         };
         let dir = std::env::temp_dir().join("nodal-lint-test");
         let p = dir.join("report.jsonl");
@@ -293,7 +364,11 @@ mod tests {
         let mut lines = got.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "{\"files\":2,\"diagnostics\":1,\"suppressed\":1}"
+            "{\"files\":2,\"diagnostics\":1,\"suppressed\":1,\
+             \"unresolved_method_calls\":4,\"rules\":{\"env-knob\":0,\
+             \"determinism\":0,\"hot-alloc\":1,\"panic-isolation\":0,\
+             \"parity-linkage\":0,\"lock-discipline\":0,\
+             \"wire-determinism\":0,\"directive\":0}}"
         );
         let d = lines.next().unwrap();
         assert!(d.contains("\\\\b.rs") && d.contains("say \\\"no\\\""), "{d}");

@@ -1,15 +1,45 @@
-//! CLI entry point: `cargo run -p nodal-lint [ROOT]`.
+//! CLI entry point: `cargo run -p nodal-lint [ROOT] [--rule NAME]`.
 //!
 //! Lints `rust/src`, `rust/benches`, `rust/tests` under ROOT (default: the
-//! repository root containing this crate), prints diagnostics, writes
-//! `results/lint/report.jsonl` (honouring `NODAL_RESULTS`), and exits
-//! non-zero when the tree is not clean — the CI hard gate.
+//! repository root containing this crate), prints diagnostics and a
+//! per-rule summary, writes `results/lint/report.jsonl` (honouring
+//! `NODAL_RESULTS`), and exits non-zero when the tree is not clean — the
+//! CI hard gate. `--rule NAME` restricts the printed diagnostics and the
+//! exit status to one rule, for local iteration; the report always covers
+//! the full tree.
 
 use std::path::{Path, PathBuf};
 
 fn main() {
-    let root: PathBuf = match std::env::args().nth(1) {
-        Some(p) => PathBuf::from(p),
+    let mut root_arg: Option<PathBuf> = None;
+    let mut rule_filter: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--rule" {
+            match args.next() {
+                Some(r) => rule_filter = Some(r),
+                None => {
+                    eprintln!("nodal-lint: --rule requires a rule name");
+                    std::process::exit(2);
+                }
+            }
+        } else {
+            root_arg = Some(PathBuf::from(a));
+        }
+    }
+    if let Some(r) = &rule_filter {
+        if !nodal_lint::RULES.contains(&r.as_str()) && r != nodal_lint::R_DIRECTIVE {
+            eprintln!(
+                "nodal-lint: unknown rule `{r}` (expected one of {}, {})",
+                nodal_lint::RULES.join(", "),
+                nodal_lint::R_DIRECTIVE
+            );
+            std::process::exit(2);
+        }
+    }
+
+    let root: PathBuf = match root_arg {
+        Some(p) => p,
         // crate dir = <root>/rust/tools/nodal-lint → third ancestor is <root>.
         None => Path::new(env!("CARGO_MANIFEST_DIR"))
             .ancestors()
@@ -33,9 +63,20 @@ fn main() {
         std::process::exit(2);
     }
 
-    for d in &out.diags {
+    let shown: Vec<&nodal_lint::Diagnostic> = out
+        .diags
+        .iter()
+        .filter(|d| rule_filter.as_deref().is_none_or(|r| d.rule == r))
+        .collect();
+    for d in &shown {
         eprintln!("{}:{}: [{}] {}", d.path, d.line, d.rule, d.msg);
     }
+    let per_rule = nodal_lint::rule_counts(&out)
+        .iter()
+        .map(|(r, n)| format!("{r}={n}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("nodal-lint: rules: {per_rule} unresolved_method_calls={}", out.unresolved);
     println!(
         "nodal-lint: {} file(s) scanned, {} diagnostic(s), {} suppressed by allow; report at {}",
         out.files,
@@ -43,7 +84,10 @@ fn main() {
         out.suppressed,
         report.display()
     );
-    if !out.clean() {
+    if let Some(r) = &rule_filter {
+        println!("nodal-lint: --rule {r}: {} matching diagnostic(s)", shown.len());
+    }
+    if !shown.is_empty() {
         std::process::exit(1);
     }
 }

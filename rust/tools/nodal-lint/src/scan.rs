@@ -12,8 +12,9 @@
 
 use std::collections::BTreeSet;
 
+use crate::graph::{AcqFact, AllocFact, CallFact, FnFact};
 use crate::lexer::{lex, Tok, TokKind};
-use crate::{Diagnostic, RULES, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_PANIC};
+use crate::{Diagnostic, RULES, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_PANIC, R_WIRE};
 
 /// A `// nodal-lint: allow(<rule>) <reason>` span. Covers the directive's
 /// own line and the next one, so it works both trailing and stand-alone.
@@ -40,6 +41,9 @@ pub struct FileFacts {
     pub bit_idents: BTreeSet<String>,
     /// `NODAL_*` names found in string literals: (name, line).
     pub knob_lits: Vec<(String, u32)>,
+    /// Per-function facts (calls, lock acquisitions, allocation sites)
+    /// consumed by the interprocedural pass in `graph`.
+    pub fns: Vec<FnFact>,
 }
 
 /// Designated parse-and-clamp helpers: the only non-test places allowed to
@@ -68,6 +72,167 @@ struct Ctx {
     fn_name: Option<String>,
     odefunc_target: Option<String>,
     bit_test: bool,
+    /// Enclosing impl's owner type, for the symbol table.
+    owner: Option<String>,
+    /// Index into `FileFacts::fns` of the enclosing function, if any.
+    /// Closures and nested blocks inherit it, so their facts are
+    /// attributed to the enclosing named function.
+    fn_idx: Option<usize>,
+}
+
+/// How long a `.lock().unwrap()` guard lives, by the statement shape it
+/// was created in. The model matches Rust temporary-lifetime rules:
+/// a `let g = …;` binding lives to end of block (or `drop(g)`), a plain
+/// `if`/`while` condition temporary dies at the body `{`, an
+/// `if let`/`while let`/`for`/`match` scrutinee temporary lives through
+/// the construct's body, and any other temporary dies at the `;`.
+#[derive(Clone, Copy, PartialEq)]
+enum GKind {
+    Named,
+    TempStmt,
+    TempCond,
+    TempConstruct,
+}
+
+struct Guard {
+    /// Field/binding the mutex was reached through (`writer.lock()` →
+    /// `writer`) — the identity used for held-set and order tracking.
+    field: String,
+    /// `let` binding name for `drop(binding)` detection (Named only).
+    binding: Option<String>,
+    /// Brace depth the guard's lifetime is anchored to.
+    depth: i32,
+    kind: GKind,
+    /// TempConstruct: body `{` has been entered.
+    entered: bool,
+}
+
+/// Statement shape of the header a lock acquisition appears in.
+enum StmtShape {
+    Let { binding: Option<String> },
+    Cond,
+    Construct,
+    Plain,
+}
+
+fn stmt_shape(toks: &[Tok], header: &[usize]) -> StmtShape {
+    let text = |k: usize| toks[header[k]].text.as_str();
+    if header.is_empty() {
+        return StmtShape::Plain;
+    }
+    match text(0) {
+        "let" => {
+            let mut k = 1;
+            if header.len() > k && text(k) == "mut" {
+                k += 1;
+            }
+            let mut binding = None;
+            if header.len() > k + 1
+                && toks[header[k]].kind == TokKind::Ident
+                && matches!(text(k + 1), "=" | ":")
+            {
+                binding = Some(text(k).to_string());
+            }
+            StmtShape::Let { binding }
+        }
+        "if" | "while" => {
+            if header.len() > 1 && text(1) == "let" {
+                StmtShape::Construct
+            } else {
+                StmtShape::Cond
+            }
+        }
+        "for" | "match" => StmtShape::Construct,
+        _ => StmtShape::Plain,
+    }
+}
+
+/// Deduplicated lock fields currently held, in acquisition order.
+fn held_fields(guards: &[Guard]) -> Vec<String> {
+    let mut h: Vec<String> = Vec::new();
+    for g in guards {
+        if !h.iter().any(|f| f == &g.field) {
+            h.push(g.field.clone());
+        }
+    }
+    h
+}
+
+/// Identifiers that look like calls but are control flow / binders.
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "move", "ref", "break",
+    "continue", "else", "unsafe", "where", "impl", "use", "pub", "let", "mut", "fn", "struct",
+    "enum", "trait", "const", "static", "type", "mod", "crate", "super", "self", "Self", "dyn",
+    "await", "true", "false",
+];
+
+/// Walk backward from the last token of an expression to the start of its
+/// postfix chain (idents, field/method `.`s, `::` pairs, balanced
+/// `(…)`/`[…]` groups). Used by the wire-determinism `.into()` check.
+fn receiver_chain_start(toks: &[Tok], hi: usize) -> usize {
+    let mut j = hi as isize;
+    while j >= 0 {
+        let t = &toks[j as usize];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, ")") | (TokKind::Punct, "]") => {
+                let (open, close) = if t.text == ")" { ("(", ")") } else { ("[", "]") };
+                let mut depth = 1i32;
+                loop {
+                    j -= 1;
+                    if j < 0 {
+                        return 0;
+                    }
+                    let u = &toks[j as usize];
+                    if u.text == close {
+                        depth += 1;
+                    } else if u.text == open {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                }
+                j -= 1;
+            }
+            (TokKind::Ident, _) | (TokKind::Num, _) | (TokKind::Str, _) => j -= 1,
+            (TokKind::Punct, ".") => j -= 1,
+            (TokKind::Punct, ":")
+                if j >= 1 && toks[(j - 1) as usize].text == ":" =>
+            {
+                j -= 2;
+            }
+            _ => break,
+        }
+    }
+    (j + 1) as usize
+}
+
+/// Does the token span contain a float value? (f32/f64-suffixed literal,
+/// a `N.N` literal, or an `as f32`/`as f64` cast.)
+fn span_has_float(toks: &[Tok], lo: usize, hi: usize) -> bool {
+    let mut k = lo;
+    while k <= hi && k < toks.len() {
+        let t = &toks[k];
+        if t.kind == TokKind::Num && (t.text.contains("f32") || t.text.contains("f64")) {
+            return true;
+        }
+        if t.kind == TokKind::Num
+            && k + 2 <= hi
+            && toks[k + 1].text == "."
+            && toks[k + 2].kind == TokKind::Num
+        {
+            return true;
+        }
+        if t.kind == TokKind::Ident
+            && t.text == "as"
+            && k + 1 <= hi
+            && matches!(toks[k + 1].text.as_str(), "f32" | "f64")
+        {
+            return true;
+        }
+        k += 1;
+    }
+    false
 }
 
 /// Does a test-fn name advertise a bit-equality / parity check?
@@ -153,6 +318,7 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
         || path.contains("/benches/")
         || path.starts_with("benches/");
     let in_serve = path.contains("src/serve/");
+    let in_dist = path.contains("src/dist/");
     let in_det_mods =
         ["src/ode/", "src/grad/", "src/ckpt/"].iter().any(|m| path.contains(m));
 
@@ -224,6 +390,8 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
         fn_name: None,
         odefunc_target: None,
         bit_test: false,
+        owner: None,
+        fn_idx: None,
     };
     let mut stack: Vec<Ctx> = vec![root];
     let mut header: Vec<usize> = Vec::new();
@@ -234,6 +402,11 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
     let mut overriders: Vec<(String, u32)> = Vec::new();
     let mut bit_idents: BTreeSet<String> = BTreeSet::new();
     let mut knob_lits: Vec<(String, u32)> = Vec::new();
+    let mut fns: Vec<FnFact> = Vec::new();
+    // Live mutex guards (the lock-discipline lifetime model) and the
+    // brace depth their lifetimes are anchored to.
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut bdepth = 0i32;
 
     let ident_text = |ix: usize| -> Option<&str> {
         toks.get(ix).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
@@ -286,6 +459,16 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
 
         match (t.kind, t.text.as_str()) {
             (TokKind::Punct, "{") => {
+                bdepth += 1;
+                // A plain if/while condition temporary dies at the body
+                // brace; a construct scrutinee temporary enters its body.
+                guards.retain(|g| g.kind != GKind::TempCond);
+                for g in guards.iter_mut() {
+                    if g.kind == GKind::TempConstruct && !g.entered {
+                        g.entered = true;
+                        g.depth = bdepth;
+                    }
+                }
                 let mut ctx = classify(
                     toks,
                     &header,
@@ -293,6 +476,8 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                     stack.last().expect("ctx stack never empty"),
                     t.line,
                     &mut overriders,
+                    path,
+                    &mut fns,
                 );
                 if let Some(&m) = hot_iter.peek() {
                     if m <= t.line {
@@ -305,12 +490,22 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                 attrs.clear();
             }
             (TokKind::Punct, "}") => {
+                bdepth = (bdepth - 1).max(0);
+                let into_else = punct_is(i + 1, "else");
+                guards.retain(|g| match g.kind {
+                    GKind::Named | GKind::TempStmt => g.depth <= bdepth,
+                    GKind::TempConstruct => {
+                        !g.entered || g.depth <= bdepth || into_else
+                    }
+                    GKind::TempCond => false,
+                });
                 if stack.len() > 1 {
                     stack.pop();
                 }
                 header.clear();
             }
             (TokKind::Punct, ";") if paren == 0 && brack == 0 => {
+                guards.retain(|g| !(g.kind == GKind::TempStmt && g.depth >= bdepth));
                 header.clear();
                 attrs.clear();
             }
@@ -395,7 +590,9 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                 }
 
                 // Rule 3: allocations inside `// nodal-lint: hot` regions.
-                if ctx.hot && t.kind == TokKind::Ident {
+                // The family match also feeds the per-function alloc facts
+                // that rule 8 (transitive hot-alloc) checks via the graph.
+                if t.kind == TokKind::Ident {
                     let alloc: Option<String> = if t.text == "vec" && punct_is(i + 1, "!") {
                         Some("vec!".to_string())
                     } else if matches!(t.text.as_str(), "Vec" | "Box" | "String")
@@ -421,17 +618,201 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                         None
                     };
                     if let Some(what) = alloc {
-                        raw.push(diag(
-                            R_HOT,
-                            path,
-                            t.line,
-                            format!("{what} inside a hot region; hoist into reusable scratch"),
-                        ));
+                        if ctx.hot {
+                            raw.push(diag(
+                                R_HOT,
+                                path,
+                                t.line,
+                                format!(
+                                    "{what} inside a hot region; hoist into reusable scratch"
+                                ),
+                            ));
+                        }
+                        if let Some(fi) = ctx.fn_idx {
+                            if !ctx.is_test {
+                                fns[fi].allocs.push(AllocFact {
+                                    what,
+                                    line: t.line,
+                                    in_hot: ctx.hot,
+                                });
+                            }
+                        }
                     }
                 }
 
-                // Rule 4: panic isolation in serve/.
-                if in_serve && !ctx.is_test {
+                // Guard lifetimes: `drop(binding)` releases a named guard.
+                if t.kind == TokKind::Ident
+                    && t.text == "drop"
+                    && punct_is(i + 1, "(")
+                    && punct_is(i + 3, ")")
+                {
+                    if let Some(b) = ident_text(i + 2) {
+                        guards.retain(|g| g.binding.as_deref() != Some(b));
+                    }
+                }
+
+                // Guard acquisition: `<field>.lock().unwrap()` (or
+                // `.expect(…)`). The statement shape decides the lifetime.
+                if t.kind == TokKind::Ident
+                    && t.text == "lock"
+                    && punct_is(i.wrapping_sub(1), ".")
+                    && punct_is(i + 1, "(")
+                    && punct_is(i + 2, ")")
+                    && punct_is(i + 3, ".")
+                    && toks.get(i + 4).is_some_and(|u| {
+                        u.kind == TokKind::Ident
+                            && matches!(u.text.as_str(), "unwrap" | "expect")
+                    })
+                    && punct_is(i + 5, "(")
+                {
+                    // End of the unwrap/expect call: balanced scan.
+                    let mut depth = 0i32;
+                    let mut j = i + 5;
+                    let mut end = usize::MAX;
+                    while j < toks.len() {
+                        match toks[j].text.as_str() {
+                            "(" => depth += 1,
+                            ")" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    end = j;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if end != usize::MAX {
+                        let field = ident_text(i.wrapping_sub(2))
+                            .unwrap_or("<expr>")
+                            .to_string();
+                        let held = held_fields(&guards);
+                        if let Some(fi) = ctx.fn_idx {
+                            fns[fi].acqs.push(AcqFact {
+                                field: field.clone(),
+                                line: t.line,
+                                held: held.clone(),
+                            });
+                        }
+                        let mut binding = None;
+                        let kind = match stmt_shape(toks, &header) {
+                            StmtShape::Let { binding: Some(b) }
+                                if b != "_" && punct_is(end + 1, ";") =>
+                            {
+                                binding = Some(b);
+                                GKind::Named
+                            }
+                            StmtShape::Cond => GKind::TempCond,
+                            StmtShape::Construct => GKind::TempConstruct,
+                            _ => GKind::TempStmt,
+                        };
+                        guards.push(Guard {
+                            field,
+                            binding,
+                            depth: bdepth,
+                            kind,
+                            entered: false,
+                        });
+                    }
+                }
+
+                // Call sites, for the graph: `name(…)`, `a::b::name(…)`,
+                // `recv.name(…)`. Closure bodies attribute to the
+                // enclosing named function via the inherited fn_idx.
+                if t.kind == TokKind::Ident
+                    && punct_is(i + 1, "(")
+                    && !CALL_KEYWORDS.contains(&t.text.as_str())
+                    && !(i >= 1
+                        && toks[i - 1].kind == TokKind::Ident
+                        && toks[i - 1].text == "fn")
+                {
+                    if let Some(fi) = ctx.fn_idx {
+                        let method = punct_is(i.wrapping_sub(1), ".");
+                        let mut quals: Vec<String> = Vec::new();
+                        if !method {
+                            let mut j = i;
+                            while j >= 3
+                                && toks[j - 1].text == ":"
+                                && toks[j - 2].text == ":"
+                                && toks[j - 3].kind == TokKind::Ident
+                            {
+                                quals.push(toks[j - 3].text.clone());
+                                j -= 3;
+                            }
+                            quals.reverse();
+                        }
+                        let recv_self = method
+                            && i >= 2
+                            && toks[i - 2].kind == TokKind::Ident
+                            && toks[i - 2].text == "self";
+                        fns[fi].calls.push(CallFact {
+                            name: t.text.clone(),
+                            quals,
+                            method,
+                            recv_self,
+                            line: t.line,
+                            held: held_fields(&guards),
+                            in_hot: ctx.hot,
+                        });
+                    }
+                }
+
+                // Rule 7: wire determinism in dist/ — floats must reach
+                // the transport as u32/u64 bit patterns, never as JSON
+                // float numbers.
+                if in_dist && !ctx.is_test && t.kind == TokKind::Ident {
+                    if t.text == "Json"
+                        && punct_is(i + 1, ":")
+                        && punct_is(i + 2, ":")
+                        && ident_text(i + 3) == Some("Num")
+                    {
+                        raw.push(diag(
+                            R_WIRE,
+                            path,
+                            t.line,
+                            "Json::Num in dist/ puts a float on the wire; use the \
+                             u32/u64 bit-pattern helpers (util::json::f32_bits)"
+                                .to_string(),
+                        ));
+                    }
+                    if t.text == "as_f64"
+                        && punct_is(i.wrapping_sub(1), ".")
+                        && punct_is(i + 1, "(")
+                    {
+                        raw.push(diag(
+                            R_WIRE,
+                            path,
+                            t.line,
+                            ".as_f64() in dist/ reads a float JSON number off the \
+                             wire; decode bit patterns instead"
+                                .to_string(),
+                        ));
+                    }
+                    if t.text == "into"
+                        && punct_is(i.wrapping_sub(1), ".")
+                        && punct_is(i + 1, "(")
+                        && punct_is(i + 2, ")")
+                        && i >= 2
+                    {
+                        let hi = i - 2;
+                        let lo = receiver_chain_start(toks, hi);
+                        if span_has_float(toks, lo, hi) {
+                            raw.push(diag(
+                                R_WIRE,
+                                path,
+                                t.line,
+                                "float value reaches Json via .into() in dist/; route \
+                                 through the bit-pattern helpers"
+                                    .to_string(),
+                            ));
+                        }
+                    }
+                }
+
+                // Rule 4: panic isolation in serve/ and non-test dist/.
+                if (in_serve || in_dist) && !ctx.is_test {
+                    let scope = if in_serve { "serve request-handling" } else { "dist" };
                     if t.kind == TokKind::Ident
                         && matches!(
                             t.text.as_str(),
@@ -443,7 +824,7 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                             R_PANIC,
                             path,
                             t.line,
-                            format!("{}! in serve request-handling code", t.text),
+                            format!("{}! in {scope} code", t.text),
                         ));
                     }
                     if t.kind == TokKind::Ident
@@ -456,8 +837,8 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                             path,
                             t.line,
                             format!(
-                                ".{}() in serve request-handling code; return an error \
-                                 or route to the per-sample fallback",
+                                ".{}() in {scope} code; return an error or route to \
+                                 the per-sample fallback",
                                 t.text
                             ),
                         ));
@@ -478,9 +859,11 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
                             R_PANIC,
                             path,
                             t.line,
-                            "constant index in serve code without a bound comment \
-                             justifying non-emptiness"
-                                .to_string(),
+                            format!(
+                                "constant index in {} code without a bound comment \
+                                 justifying non-emptiness",
+                                if in_serve { "serve" } else { "dist" }
+                            ),
                         ));
                     }
                 }
@@ -501,11 +884,13 @@ pub fn scan_file(path: &str, src: &str) -> FileFacts {
         }
     }
 
-    FileFacts { diags, suppressed, allows, overriders, bit_idents, knob_lits }
+    FileFacts { diags, suppressed, allows, overriders, bit_idents, knob_lits, fns }
 }
 
 /// Classify the region a `{` opens, from the header tokens accumulated
 /// since the last region boundary plus the pending outer attributes.
+/// Function regions also register a `FnFact` in the symbol table.
+#[allow(clippy::too_many_arguments)]
 fn classify(
     toks: &[Tok],
     header: &[usize],
@@ -513,6 +898,8 @@ fn classify(
     parent: &Ctx,
     line: u32,
     overriders: &mut Vec<(String, u32)>,
+    path: &str,
+    fns: &mut Vec<FnFact>,
 ) -> Ctx {
     let mut c = parent.clone();
     let kw = |k: &str| {
@@ -544,9 +931,22 @@ fn classify(
         if c.is_test && name.as_deref().is_some_and(is_bit_marker) {
             c.bit_test = true;
         }
+        if let Some(n) = name {
+            fns.push(FnFact {
+                name: n,
+                owner: c.owner.clone(),
+                path: path.to_string(),
+                line,
+                is_test: c.is_test,
+                calls: Vec::new(),
+                acqs: Vec::new(),
+                allocs: Vec::new(),
+            });
+            c.fn_idx = Some(fns.len() - 1);
+        }
         return c;
     }
-    if let Some(_p) = kw("impl") {
+    if let Some(p) = kw("impl") {
         if header
             .iter()
             .any(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text.contains("Clock"))
@@ -567,6 +967,38 @@ fn classify(
                 c.odefunc_target = next_ident_after(fp).filter(|t| t != "mut");
             }
         }
+        // General impl owner, for the symbol table: the first ident after
+        // the last `for` (trait impls), else the first ident after the
+        // `impl` keyword's generic parameter list (inherent impls).
+        let mut q = p + 1;
+        if header.len() > q && toks[header[q]].text == "<" {
+            let mut d = 0i32;
+            while q < header.len() {
+                match toks[header[q]].text.as_str() {
+                    "<" => d += 1,
+                    ">" => {
+                        d -= 1;
+                        if d == 0 {
+                            q += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                q += 1;
+            }
+        }
+        c.owner = if let Some(fp) = header
+            .iter()
+            .rposition(|&ix| toks[ix].kind == TokKind::Ident && toks[ix].text == "for")
+        {
+            next_ident_after(fp).filter(|t| t != "mut")
+        } else {
+            header[q..]
+                .iter()
+                .find(|&&ix| toks[ix].kind == TokKind::Ident)
+                .map(|&ix| toks[ix].text.clone())
+        };
         return c;
     }
     if let Some(p) = kw("mod") {
@@ -712,5 +1144,48 @@ mod tests {
         let src = "#[cfg(test)]\nmod tests {\n struct M;\n impl OdeFunc for M {\n fn eval_batch(&self) {}\n }\n}";
         let f = scan_file("rust/src/ode/func.rs", src);
         assert!(f.overriders.is_empty(), "{:?}", f.overriders);
+    }
+
+    #[test]
+    fn wire_rule_fires_only_in_dist() {
+        let src = "fn send(x: f32) {\n let a = Json::Num(1.0);\n let b = v.as_f64();\n let c: Json = (x as f64).into();\n let d: Json = (\"ok\").into();\n}";
+        let f = scan_file("rust/src/dist/transport.rs", src);
+        let wire: Vec<_> = f.diags.iter().filter(|d| d.rule == R_WIRE).collect();
+        assert_eq!(wire.len(), 3, "{:?}", f.diags);
+        let f = scan_file("rust/src/serve/request.rs", src);
+        assert!(f.diags.iter().all(|d| d.rule != R_WIRE), "{:?}", f.diags);
+    }
+
+    #[test]
+    fn float_literal_into_is_flagged_in_dist() {
+        let src = "fn send() { let a: Json = 1.5f32.into(); let b: Json = obj.id.into(); }";
+        let f = scan_file("rust/src/dist/shard.rs", src);
+        let wire: Vec<_> = f.diags.iter().filter(|d| d.rule == R_WIRE).collect();
+        assert_eq!(wire.len(), 1, "{:?}", f.diags);
+    }
+
+    #[test]
+    fn dist_panics_flagged_poison_allowed() {
+        let src = "fn go(&self) {\n let g = self.inner.lock().unwrap();\n let v = frame.first().unwrap();\n}";
+        let f = scan_file("rust/src/dist/dispatch.rs", src);
+        let p: Vec<_> = f.diags.iter().filter(|d| d.rule == R_PANIC).collect();
+        assert_eq!(p.len(), 1, "{:?}", f.diags);
+        assert_eq!(p[0].line, 3);
+        assert!(p[0].msg.contains("dist"), "{:?}", p);
+    }
+
+    #[test]
+    fn fn_facts_record_owner_calls_and_guards() {
+        let src = "impl Shard {\n fn respond(&self) {\n let mut w = self.writer.lock().unwrap();\n send_frame(&mut w, m);\n }\n}";
+        let f = scan_file("rust/src/ode/x.rs", src);
+        assert_eq!(f.fns.len(), 1);
+        let fun = &f.fns[0];
+        assert_eq!(fun.name, "respond");
+        assert_eq!(fun.owner.as_deref(), Some("Shard"));
+        assert_eq!(fun.acqs.len(), 1);
+        assert_eq!(fun.acqs[0].field, "writer");
+        let sf = fun.calls.iter().find(|c| c.name == "send_frame").expect("call recorded");
+        assert_eq!(sf.held, vec!["writer".to_string()]);
+        assert!(!sf.method);
     }
 }

@@ -1,0 +1,25 @@
+// Fixture: allocations reached *transitively* from a hot region — one
+// hop into `stage` (a `vec!`), two hops through `mid` into `leaf` (a
+// `.collect()`). Neither allocation is lexically inside the marked
+// region. Virtual path `rust/src/grad/batch.rs`.
+
+fn leaf(n: usize) -> Vec<u32> {
+    (0..n).collect()
+}
+
+fn mid(n: usize) -> Vec<u32> {
+    leaf(n)
+}
+
+fn stage(buf: &mut Vec<f32>) {
+    let extra = vec![0.0f32; 4];
+    buf.extend_from_slice(&extra);
+}
+
+pub fn hot_loop(buf: &mut Vec<f32>, n: usize) {
+    // nodal-lint: hot
+    for _ in 0..n {
+        stage(buf);
+        let _ = mid(n);
+    }
+}

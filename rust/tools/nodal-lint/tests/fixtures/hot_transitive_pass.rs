@@ -1,0 +1,33 @@
+// Fixture: the hot loop only reaches an allocation-free helper, so the
+// transitive hot-alloc rule stays quiet. The `obj.step(y)` method call
+// has two same-named candidates (`A::step`, `B::step`) and is counted as
+// unresolved rather than guessed. Virtual path `rust/src/ode/batch.rs`.
+
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+pub struct A;
+pub struct B;
+
+impl A {
+    pub fn step(&self, y: &mut [f32]) {
+        axpy(y, 2.0, y.to_vec().as_slice());
+    }
+}
+
+impl B {
+    pub fn step(&self, y: &mut [f32]) {
+        axpy(y, 3.0, y.to_vec().as_slice());
+    }
+}
+
+pub fn sweep(obj: &A, y: &mut [f32], x: &[f32], rounds: usize) {
+    // nodal-lint: hot
+    for _ in 0..rounds {
+        axpy(y, 0.5, x);
+        obj.step(y);
+    }
+}

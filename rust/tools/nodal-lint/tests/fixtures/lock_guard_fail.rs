@@ -1,0 +1,30 @@
+// Fixture: three guard-across-blocking shapes — a direct send under a
+// named guard, a `for` whose iterator keeps the temporary guard alive
+// through the body, and a transitive reach through a helper. Virtual
+// path `rust/src/dist/dispatch.rs`.
+
+use std::sync::Mutex;
+
+fn send_frame(link: &mut Vec<u8>, bytes: &[u8]) {
+    link.extend_from_slice(bytes);
+}
+
+fn flush_link(link: &mut Vec<u8>) {
+    send_frame(link, &[0u8]);
+}
+
+pub fn direct(writer: &Mutex<Vec<u8>>) {
+    let mut w = writer.lock().unwrap();
+    send_frame(&mut w, &[1u8]);
+}
+
+pub fn for_temp(conns: &Mutex<Vec<Vec<u8>>>) {
+    for c in conns.lock().unwrap().iter_mut() {
+        send_frame(c, &[2u8]);
+    }
+}
+
+pub fn transitive(writer: &Mutex<Vec<u8>>) {
+    let mut w = writer.lock().unwrap();
+    flush_link(&mut w);
+}

@@ -1,0 +1,30 @@
+// Fixture: guards are scoped so every blocking call runs guard-free —
+// serialize under the lock, send outside it. Virtual path
+// `rust/src/dist/dispatch.rs`.
+
+use std::sync::Mutex;
+
+fn send_frame(link: &mut Vec<u8>, bytes: &[u8]) {
+    link.extend_from_slice(bytes);
+}
+
+fn encode(n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    out.resize(n, 0u8);
+    out
+}
+
+pub fn dispatch(staged: &Mutex<Vec<u8>>, link: &mut Vec<u8>, n: usize) {
+    let bytes = encode(n);
+    {
+        let mut s = staged.lock().unwrap();
+        s.extend_from_slice(&bytes);
+    }
+    send_frame(link, &bytes);
+}
+
+pub fn flush_staged(staged: &Mutex<Vec<u8>>, link: &mut Vec<u8>) {
+    // Temporary guard: dies at the end of this statement, before the send.
+    let bytes = staged.lock().unwrap().clone();
+    send_frame(link, &bytes);
+}

@@ -1,0 +1,24 @@
+// Fixture: `enqueue` takes `pending` then `writer`; `flush` takes them
+// in the opposite order — the classic ABBA deadlock shape. Both sites
+// are reported, each pointing at the other. Virtual path
+// `rust/src/dist/dispatch.rs`.
+
+use std::sync::Mutex;
+
+pub struct Link {
+    pending: Mutex<Vec<u64>>,
+    writer: Mutex<Vec<u8>>,
+}
+
+pub fn enqueue(link: &Link, id: u64) {
+    let mut pending = link.pending.lock().unwrap();
+    pending.push(id);
+    let mut w = link.writer.lock().unwrap();
+    w.push(id as u8);
+}
+
+pub fn flush(link: &Link) {
+    let mut w = link.writer.lock().unwrap();
+    let pending = link.pending.lock().unwrap();
+    w.push(pending.len() as u8);
+}

@@ -1,0 +1,24 @@
+// Fixture: two functions take the same pair of locks, both in the same
+// `pending` → `writer` order, so no inversion is possible. Virtual path
+// `rust/src/dist/dispatch.rs`.
+
+use std::sync::Mutex;
+
+pub struct Link {
+    pending: Mutex<Vec<u64>>,
+    writer: Mutex<Vec<u8>>,
+}
+
+pub fn enqueue(link: &Link, id: u64) {
+    let mut pending = link.pending.lock().unwrap();
+    pending.push(id);
+    let mut w = link.writer.lock().unwrap();
+    w.push(id as u8);
+}
+
+pub fn retire(link: &Link, id: u64) {
+    let mut pending = link.pending.lock().unwrap();
+    pending.retain(|x| *x != id);
+    let mut w = link.writer.lock().unwrap();
+    w.clear();
+}

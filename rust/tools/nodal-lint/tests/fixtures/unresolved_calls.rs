@@ -1,0 +1,23 @@
+// Fixture: `emit` is defined on two different owners, so `t.emit()`
+// cannot be attributed to either — the edge is counted as unresolved
+// (and reported in the summary), never guessed. Virtual path
+// `rust/src/ode/probe.rs`.
+
+pub struct Tcp;
+pub struct Udp;
+
+impl Tcp {
+    pub fn emit(&self) -> usize {
+        1
+    }
+}
+
+impl Udp {
+    pub fn emit(&self) -> usize {
+        2
+    }
+}
+
+pub fn poke(t: &Tcp) -> usize {
+    t.emit()
+}

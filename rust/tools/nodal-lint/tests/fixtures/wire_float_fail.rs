@@ -1,0 +1,17 @@
+// Fixture: three ways a raw float reaches the JSON wire — constructing
+// `Json::Num`, reading `.as_f64()` off the wire, and a float literal
+// converted via `.into()`. Virtual path `rust/src/dist/reduce.rs`.
+
+use crate::util::json::Json;
+
+pub fn encode(loss: f64) -> Json {
+    Json::Num(loss)
+}
+
+pub fn decode(v: &Json) -> f64 {
+    v.as_f64().unwrap_or(0.0)
+}
+
+pub fn tag() -> Json {
+    1.5f32.into()
+}

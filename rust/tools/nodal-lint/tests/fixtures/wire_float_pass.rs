@@ -1,0 +1,20 @@
+// Fixture: floats cross the wire as u32 bit patterns in both
+// directions, so NaN / -0.0 / infinities survive bit-exactly and the
+// wire-determinism rule stays quiet. Virtual path
+// `rust/src/dist/reduce.rs`.
+
+fn f32_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn f32s_from_bits(bits: &[u32]) -> Vec<f32> {
+    bits.iter().map(|b| f32::from_bits(*b)).collect()
+}
+
+pub fn encode(values: &[f32]) -> Vec<u32> {
+    f32_bits(values)
+}
+
+pub fn decode(bits: &[u32]) -> Vec<f32> {
+    f32s_from_bits(bits)
+}

@@ -8,7 +8,10 @@
 
 use std::path::Path;
 
-use nodal_lint::{lint_sources, lint_tree, Outcome, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_PANIC, R_PARITY};
+use nodal_lint::{
+    lint_sources, lint_tree, Outcome, R_DET, R_DIRECTIVE, R_ENV, R_HOT, R_LOCK, R_PANIC, R_PARITY,
+    R_WIRE,
+};
 
 fn fixture(name: &str) -> String {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
@@ -132,6 +135,100 @@ fn parity_linked_by_cross_file_bit_test_is_clean() {
     assert!(out.clean(), "{:?}", out.diags);
 }
 
+// ---- rule 6: lock-discipline ----
+
+#[test]
+fn lock_guard_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/dist/dispatch.rs", "lock_guard_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+    assert_eq!(out.unresolved, 0, "all calls in the fixture are direct");
+}
+
+#[test]
+fn lock_guard_fail_fixture_fires_direct_for_temp_and_transitive() {
+    let out = lint_one("rust/src/dist/dispatch.rs", "lock_guard_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_LOCK; 3], "{:?}", out.diags);
+    // Direct and for-temp sites name the blocking call; the transitive
+    // site names the helper that reaches it.
+    assert_eq!(
+        out.diags.iter().filter(|d| d.msg.contains("`send_frame` blocks")).count(),
+        2,
+        "{:?}",
+        out.diags
+    );
+    assert!(
+        out.diags.iter().any(|d| d.msg.contains("`flush_link` reaches blocking `send_frame`")),
+        "{:?}",
+        out.diags
+    );
+}
+
+#[test]
+fn lock_order_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/dist/dispatch.rs", "lock_order_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn lock_order_inversion_fires_at_both_sites() {
+    let out = lint_one("rust/src/dist/dispatch.rs", "lock_order_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_LOCK; 2], "{:?}", out.diags);
+    for d in &out.diags {
+        assert!(d.msg.contains("opposite order"), "{:?}", out.diags);
+    }
+}
+
+// ---- rule 7: wire-determinism ----
+
+#[test]
+fn wire_float_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/dist/reduce.rs", "wire_float_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn wire_float_fail_fixture_fires_per_shape() {
+    let out = lint_one("rust/src/dist/reduce.rs", "wire_float_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_WIRE; 3], "{:?}", out.diags);
+    // The same file outside dist/ is not wire-scoped.
+    let out = lint_one("rust/src/serve/mod.rs", "wire_float_fail.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+// ---- rule 8: transitive hot-alloc ----
+
+#[test]
+fn hot_transitive_pass_fixture_is_clean_and_counts_ambiguity() {
+    let out = lint_one("rust/src/ode/batch.rs", "hot_transitive_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+    // `obj.step(y)` has two same-named candidates: counted, not guessed —
+    // so the `.to_vec()` inside the candidates is NOT flagged.
+    assert!(out.unresolved >= 1, "ambiguous method call should be counted");
+}
+
+#[test]
+fn hot_transitive_fail_fixture_fires_through_one_and_two_hops() {
+    let out = lint_one("rust/src/grad/batch.rs", "hot_transitive_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_HOT; 2], "{:?}", out.diags);
+    assert!(
+        out.diags.iter().any(|d| d.msg.contains("(hot_loop -> stage)")),
+        "{:?}",
+        out.diags
+    );
+    assert!(
+        out.diags.iter().any(|d| d.msg.contains("(hot_loop -> mid -> leaf)")),
+        "{:?}",
+        out.diags
+    );
+}
+
+#[test]
+fn unresolved_method_calls_are_counted() {
+    let out = lint_one("rust/src/ode/probe.rs", "unresolved_calls.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+    assert_eq!(out.unresolved, 1, "exactly one ambiguous `emit` edge");
+}
+
 // ---- escape hatch ----
 
 #[test]
@@ -160,6 +257,9 @@ fn every_rule_has_a_failing_fixture() {
         (R_HOT, "rust/src/grad/batch.rs", "hot_alloc_fail.rs"),
         (R_PANIC, "rust/src/serve/worker.rs", "panic_fail.rs"),
         (R_PARITY, "rust/src/ode/rogue.rs", "parity_fail.rs"),
+        (R_LOCK, "rust/src/dist/dispatch.rs", "lock_guard_fail.rs"),
+        (R_WIRE, "rust/src/dist/reduce.rs", "wire_float_fail.rs"),
+        (R_HOT, "rust/src/grad/batch.rs", "hot_transitive_fail.rs"),
     ];
     for (rule, vpath, name) in cases {
         let out = lint_one(vpath, name);
