@@ -20,7 +20,7 @@ use nodal::bench::Runner;
 use nodal::grad::aca_backward;
 use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
 use nodal::ode::integrate;
-use nodal::serve::{ServeConfig, SolveRequest, SolveServer};
+use nodal::serve::{Lane, ServeConfig, SolveRequest, SolveServer};
 use nodal::util::Pcg64;
 use std::sync::Arc;
 use std::time::Duration;
@@ -46,14 +46,16 @@ fn workload(total: usize) -> Vec<SolveRequest> {
                 vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
                 1e-6,
                 1e-8,
-            ),
+            )
+            .unwrap(),
             1 => SolveRequest::fixed(
                 "linear",
                 0.0,
                 1.0 + 0.5 * (i % 3) as f64,
                 (0..16).map(|_| rng.normal_f32()).collect(),
                 0.01,
-            ),
+            )
+            .unwrap(),
             2 => SolveRequest::adaptive(
                 "conv",
                 0.0,
@@ -63,7 +65,8 @@ fn workload(total: usize) -> Vec<SolveRequest> {
                 (0..64).map(|_| rng.normal_f32() * 0.5).collect(),
                 1e-5,
                 1e-7,
-            ),
+            )
+            .unwrap(),
             _ => SolveRequest::adaptive(
                 "vdp",
                 0.0,
@@ -72,6 +75,7 @@ fn workload(total: usize) -> Vec<SolveRequest> {
                 1e-6,
                 1e-8,
             )
+            .unwrap()
             .with_grad(vec![1.0, 0.0]),
         })
         .collect()
@@ -139,6 +143,8 @@ fn main() {
         workers: nodal::coordinator::pool::default_workers(),
         ckpt_budget_bytes: 0,
         mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
     };
     let server = Arc::new(register(SolveServer::builder()).config(cfg).start());
     let srv = r
@@ -168,4 +174,46 @@ fn main() {
     r.record("server_speedup_x", srv_rps / seq_rps);
     r.record("mean_batch_occupancy", m.mean_batch_size);
     server.shutdown();
+
+    // QoS phase: the same mixed multi-tenant traffic with explicit
+    // priorities — the heavyweight conv sweeps ride the batch lane while
+    // vdp/linear stay interactive — against a tight DRR quantum, so no
+    // tenant can monopolize emission. Persists the fairness surface the
+    // scheduler is supposed to move: per-tenant p99 queue wait + req/s.
+    let qos_reqs: Vec<SolveRequest> = workload(total)
+        .into_iter()
+        .map(|mut req| {
+            if req.dynamics == "conv" {
+                req.lane = Lane::Batch;
+            }
+            req
+        })
+        .collect();
+    let qos_cfg = ServeConfig {
+        max_batch_size: 16,
+        max_queue_delay: Duration::from_micros(200),
+        queue_capacity: 1024,
+        workers: nodal::coordinator::pool::default_workers(),
+        ckpt_budget_bytes: 0,
+        mem_budget_bytes: 0,
+        quota_quantum: 4,
+        quota_max_deficit: 16,
+    };
+    let qos_server = Arc::new(register(SolveServer::builder()).config(qos_cfg).start());
+    let qos = r
+        .bench(&format!("server_qos_{CLIENTS}clients_{total}req_mixed_priority"), || {
+            run_server_closed_loop(&qos_server, &qos_reqs)
+        })
+        .clone();
+    let qm = qos_server.metrics();
+    let qos_rps = total as f64 / (qos.mean_ms * 1e-3);
+    println!("\nQoS phase (mixed priority, quantum 4): {qos_rps:.0} req/s");
+    for (key, lat) in &qm.per_key_queue_wait {
+        println!("  [{key}] queue-wait p99 {:.3} ms (n={})", lat.p99_ms, lat.count);
+    }
+    r.record(&format!("server_qos_{total}req_rps"), qos_rps);
+    for (key, lat) in &qm.per_key_queue_wait {
+        r.record(&format!("qos_queue_wait_p99_ms_{key}"), lat.p99_ms);
+    }
+    qos_server.shutdown();
 }

@@ -29,7 +29,8 @@ fn request(rng: &mut Pcg64, i: usize) -> SolveRequest {
             vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
             1e-6,
             1e-8,
-        ),
+        )
+        .unwrap(),
         1 => SolveRequest::adaptive(
             "linear",
             0.0,
@@ -37,8 +38,9 @@ fn request(rng: &mut Pcg64, i: usize) -> SolveRequest {
             (0..3).map(|_| rng.uniform_f32()).collect(),
             1e-5,
             1e-7,
-        ),
-        _ => SolveRequest::fixed("linear", 0.0, 1.0, vec![1.0, -0.5, 0.25], 0.05),
+        )
+        .unwrap(),
+        _ => SolveRequest::fixed("linear", 0.0, 1.0, vec![1.0, -0.5, 0.25], 0.05).unwrap(),
     }
 }
 
@@ -73,7 +75,7 @@ fn main() -> Result<()> {
         .collect();
     for (req, h) in reqs.iter().zip(handles) {
         let resp = h.wait().expect("response");
-        assert_eq!(resp.z_t1, direct(req)?, "served answer drifted from the direct solve");
+        assert_eq!(resp.z_t1(), direct(req)?, "served answer drifted from the direct solve");
     }
     println!("burst 1: 48/48 answers bit-identical to direct solves");
     println!("{}", dispatcher.metrics()?);
@@ -89,7 +91,7 @@ fn main() -> Result<()> {
         .collect();
     for (req, h) in reqs.iter().zip(handles) {
         let resp = h.wait().expect("response after failover");
-        assert_eq!(resp.z_t1, direct(req)?, "failover answer drifted");
+        assert_eq!(resp.z_t1(), direct(req)?, "failover answer drifted");
     }
     println!(
         "burst 2 (shard A dead): 24/24 served by the survivor, {} healthy shard(s)",

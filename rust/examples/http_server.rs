@@ -1,0 +1,132 @@
+//! The HTTP front door end-to-end, over a real loopback socket: spawn the
+//! wire front end on an ephemeral port, then act as a plain HTTP/1.1 client
+//! — liveness probe, forward solve, gradient solve, dense-output grid, and
+//! the metrics route — asserting the served answers bit-identical to direct
+//! engine calls. Everything a curl user would see, checked from Rust.
+//!
+//!     cargo run --release --offline --example http_server
+//!
+//! Against a long-running deployment the same traffic is plain curl:
+//!
+//!     NODAL_HTTP_PORT=7118 cargo run --release --example http_server &
+//!     curl -s localhost:7118/healthz
+//!     curl -s -X POST localhost:7118/v1/solve -d @request.json
+
+use anyhow::{anyhow, Context, Result};
+
+use nodal::ckpt::CkptPolicy;
+use nodal::grad::aca_backward;
+use nodal::ode::analytic::VanDerPol;
+use nodal::ode::dense::DenseOutput;
+use nodal::ode::integrate;
+use nodal::serve::{HttpConfig, HttpServer, SolveRequest, SolveResponse, SolveServer};
+use nodal::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// One round trip as a raw HTTP/1.1 client: write the request, parse the
+/// status line, headers, and `content-length`-framed body.
+fn round_trip(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr).context("connect to front door")?;
+    let req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len());
+    s.write_all(req.as_bytes()).context("write request")?;
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).context("read status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed status line: {line:?}"))?
+        .parse()
+        .context("parse status code")?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).context("read header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().context("parse content-length")?;
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("read body")?;
+    Ok((status, String::from_utf8(body).context("utf8 body")?))
+}
+
+fn solve(addr: &str, req: &SolveRequest) -> Result<SolveResponse> {
+    let (status, body) = round_trip(addr, "POST", "/v1/solve", &req.to_json().to_string())?;
+    if status != 200 {
+        return Err(anyhow!("solve returned {status}: {body}"));
+    }
+    SolveResponse::from_json(&Json::parse(&body)?)
+}
+
+fn main() -> Result<()> {
+    // Ephemeral port so the example never collides with a real deployment;
+    // production binds NODAL_HTTP_PORT via `HttpConfig::from_env()`.
+    let server = Arc::new(SolveServer::builder().register("vdp", VanDerPol::paper()).start());
+    let mut http = HttpServer::spawn_at(server, "127.0.0.1:0", HttpConfig::default())?;
+    let addr = http.addr().to_string();
+    println!("http front door listening on {addr}");
+
+    let (status, body) = round_trip(&addr, "GET", "/healthz", "")?;
+    println!("GET /healthz -> {status} {body}");
+    assert_eq!((status, body.as_str()), (200, "{\"ok\":true}"));
+
+    // Forward solve over the wire, checked bit-for-bit against the direct
+    // engine call (f32 payloads travel as u32 bit patterns, so this holds
+    // exactly, not approximately).
+    let req = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.05)?;
+    let resp = solve(&addr, &req)?;
+    let vdp = VanDerPol::paper();
+    let mut opts = req.opts();
+    opts.ckpt = CkptPolicy::from_budget(0);
+    let traj = integrate(&vdp, 0.0, 5.0, &req.z0, req.tab, &opts)?;
+    assert_eq!(resp.z_t1(), traj.last().expect("nonempty trajectory"));
+    println!("POST /v1/solve (forward) -> z(T) bit-identical to direct integrate");
+
+    // Gradient request: the adjoint results ride the same response.
+    let lam = vec![1.0f32, 0.0];
+    let resp = solve(&addr, &req.clone().with_grad(lam.clone()))?;
+    let g = resp.grad().expect("gradient payload");
+    let direct = aca_backward(&vdp, req.tab, &traj, &lam);
+    assert_eq!(g.dl_dz0, direct.dl_dz0);
+    assert_eq!(g.dl_dtheta, direct.dl_dtheta);
+    println!("POST /v1/solve (gradient) -> dL/dz0, dL/dθ bit-identical to aca_backward");
+
+    // Dense-output grid: one solve, five interpolated observations.
+    let grid = vec![0.0, 1.25, 2.5, 3.75, 5.0];
+    let oreq = SolveRequest::builder("vdp")
+        .span(0.0, 5.0)
+        .state(vec![2.0, 0.0])
+        .fixed(0.05)
+        .observe_at(grid.clone())
+        .build()?;
+    let resp = solve(&addr, &oreq)?;
+    let dense = DenseOutput::new(&vdp, &traj);
+    let zs = resp.observations().expect("observation grid requested");
+    println!("POST /v1/solve (observe_at {} points):", grid.len());
+    for (&t, z) in grid.iter().zip(zs) {
+        assert_eq!(z, &dense.eval(t), "observation at t={t} must match DenseOutput::eval");
+        println!("  z({t:>5.2}) = [{:>8.4}, {:>8.4}]", z[0], z[1]);
+    }
+
+    let (status, body) = round_trip(&addr, "GET", "/v1/metrics", "")?;
+    assert_eq!(status, 200);
+    let m = Json::parse(&body)?;
+    println!(
+        "GET /v1/metrics -> {} submitted, {} completed",
+        m.get("submitted")?.as_usize()?,
+        m.get("completed")?.as_usize()?
+    );
+
+    http.shutdown();
+    println!("front door down; all wire answers matched the engine bit-for-bit");
+    Ok(())
+}

@@ -46,14 +46,14 @@ fn main() -> Result<()> {
                 vec![rng.range(-2.0, 2.0) as f32, rng.range(-2.0, 2.0) as f32],
                 1e-6,
                 1e-8,
-            ),
+            )?,
             1 => SolveRequest::fixed(
                 "linear",
                 0.0,
                 1.0,
                 (0..8).map(|_| rng.normal_f32()).collect(),
                 0.02,
-            ),
+            )?,
             _ => SolveRequest::adaptive(
                 "conv",
                 0.0,
@@ -61,7 +61,7 @@ fn main() -> Result<()> {
                 (0..36).map(|_| rng.normal_f32() * 0.5).collect(),
                 1e-5,
                 1e-7,
-            ),
+            )?,
         };
         let req = if i % 4 == 3 {
             let dim = req.z0.len();
@@ -91,7 +91,7 @@ fn main() -> Result<()> {
             resp.stats.batch_size,
             resp.stats.queue_wait.as_micros(),
             resp.stats.service.as_micros(),
-            if resp.grad.is_some() { "yes" } else { "-" },
+            if resp.grad().is_some() { "yes" } else { "-" },
         );
     }
 
@@ -100,12 +100,29 @@ fn main() -> Result<()> {
     // The serving layer never changes an answer: spot-check one request
     // class against the direct engine call.
     let z0 = vec![2.0f32, 0.0];
-    let h = server.submit(SolveRequest::fixed("vdp", 0.0, 5.0, z0.clone(), 0.05))?;
+    let h = server.submit(SolveRequest::fixed("vdp", 0.0, 5.0, z0.clone(), 0.05)?)?;
     let served = h.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
     let direct =
         integrate(&VanDerPol::paper(), 0.0, 5.0, &z0, tableau::rk4(), &IntegrateOpts::fixed(0.05))?;
-    assert_eq!(served.z_t1, direct.last().unwrap(), "served result must be bit-identical");
+    assert_eq!(served.z_t1(), direct.last().unwrap(), "served result must be bit-identical");
     println!("\nequivalence check: served z(T) == direct integrate z(T) (bit-exact)");
+
+    // Dense-output serving: the typed builder attaches an observation grid
+    // and the response carries the trajectory sampled at those times (each
+    // point bit-equal to `DenseOutput::eval` on a direct solve).
+    let req = SolveRequest::builder("vdp")
+        .span(0.0, 5.0)
+        .state(vec![2.0, 0.0])
+        .fixed(0.05)
+        .observe_at(vec![0.0, 1.25, 2.5, 3.75, 5.0])
+        .build()?;
+    let h = server.submit(req)?;
+    let resp = h.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let obs = resp.observations().expect("observation grid requested");
+    println!("\ndense-output observations of the vdp limit cycle:");
+    for (t, z) in [0.0, 1.25, 2.5, 3.75, 5.0].iter().zip(obs) {
+        println!("  z({t:>5.2}) = [{:>8.4}, {:>8.4}]", z[0], z[1]);
+    }
 
     server.shutdown();
     Ok(())

@@ -72,7 +72,13 @@ pub fn key_hash(key: &BatchKey) -> u64 {
     eat(&[0xff]); // separator: "ab"+"c" must not collide with "a"+"bc"
     eat(key.tab.as_bytes());
     eat(&[0xff]);
-    eat(&[key.dir as u8, key.tol_kind, u8::from(key.wants_grad)]);
+    eat(&[
+        key.dir as u8,
+        key.tol_kind,
+        u8::from(key.wants_grad),
+        u8::from(key.wants_obs),
+        key.lane as u8,
+    ]);
     eat(&key.tol_a.to_le_bytes());
     eat(&key.tol_b.to_le_bytes());
     h
@@ -372,7 +378,17 @@ impl DistMetricsReport {
             }
             t.queue_wait = merge_latency(&t.queue_wait, &m.queue_wait);
             t.service = merge_latency(&t.service, &m.service);
+            // Per-tenant fairness summaries merge key-wise: counts add,
+            // quantiles take the cross-shard max (same conservative bound
+            // as the global summaries).
+            for (k, l) in &m.per_key_queue_wait {
+                match t.per_key_queue_wait.iter_mut().find(|(tk, _)| tk == k) {
+                    Some((_, tl)) => *tl = merge_latency(tl, l),
+                    None => t.per_key_queue_wait.push((k.clone(), *l)),
+                }
+            }
         }
+        t.per_key_queue_wait.sort_by(|a, b| a.0.cmp(&b.0));
         t.mean_batch_size = if t.batches > 0 { batch_weight / t.batches as f64 } else { 0.0 };
         t.nfe_mean = if t.completed > 0 { t.nfe_total as f64 / t.completed as f64 } else { 0.0 };
         t
@@ -411,7 +427,7 @@ impl std::fmt::Display for DistMetricsReport {
 mod tests {
     use super::*;
     use crate::ode::tableau;
-    use crate::serve::request::Tolerance;
+    use crate::serve::request::{Lane, Tolerance};
 
     fn req(dynamics: &str, rtol: f64) -> SolveRequest {
         SolveRequest {
@@ -422,6 +438,8 @@ mod tests {
             tab: tableau::by_name("rk45").unwrap(),
             tol: Tolerance::Adaptive { rtol, atol: 1e-6 },
             grad: None,
+            observe_at: Vec::new(),
+            lane: Lane::Interactive,
         }
     }
 
@@ -434,6 +452,12 @@ mod tests {
         let mut g = req("vdp", 1e-3);
         g.grad = Some(vec![1.0, 0.0]);
         assert_ne!(a, key_hash(&g.batch_key()), "grad flag");
+        let mut o = req("vdp", 1e-3);
+        o.observe_at = vec![0.5];
+        assert_ne!(a, key_hash(&o.batch_key()), "dense-output flag");
+        let mut b = req("vdp", 1e-3);
+        b.lane = Lane::Batch;
+        assert_ne!(a, key_hash(&b.batch_key()), "priority lane");
     }
 
     #[test]
@@ -486,6 +510,7 @@ mod tests {
             batch_sizes: vec![0, 1, 3],
             nfe_total: 80,
             nfe_max: 20,
+            per_key_queue_wait: vec![("linear".into(), lat(3, 1.0)), ("vdp".into(), lat(5, 2.0))],
             ..MetricsSnapshot::default()
         };
         let b = MetricsSnapshot {
@@ -496,6 +521,7 @@ mod tests {
             batch_sizes: vec![0, 0, 1, 1],
             nfe_total: 100,
             nfe_max: 50,
+            per_key_queue_wait: vec![("vdp".into(), lat(1, 9.0))],
             ..MetricsSnapshot::default()
         };
         let report = DistMetricsReport { shards: vec![("a".into(), a), ("b".into(), b)] };
@@ -508,5 +534,11 @@ mod tests {
         assert_eq!(t.nfe_total, 180);
         assert_eq!(t.nfe_max, 50);
         assert!((t.nfe_mean - 15.0).abs() < 1e-12);
+        assert_eq!(t.per_key_queue_wait.len(), 2, "per-tenant entries merge key-wise");
+        assert_eq!(t.per_key_queue_wait[0].0, "linear");
+        assert_eq!(t.per_key_queue_wait[0].1.count, 3);
+        assert_eq!(t.per_key_queue_wait[1].0, "vdp");
+        assert_eq!(t.per_key_queue_wait[1].1.count, 6, "vdp counts add across shards");
+        assert_eq!(t.per_key_queue_wait[1].1.p99_ms, 9.0, "quantiles bound by max");
     }
 }

@@ -1,6 +1,10 @@
 //! One serve shard: a [`SolveServer`] behind a TCP endpoint.
 //!
-//! Frame protocol (one JSON object per frame, see `dist::transport`):
+//! Frame protocol (one JSON object per frame, see `dist::transport`).
+//! Request/response/error bodies are the **versioned wire schema** from
+//! `serve::wire` — the same codecs the HTTP front door uses, carrying a
+//! `"v"` field checked on decode ([`crate::serve::WIRE_VERSION`]) — so
+//! shards and HTTP clients speak one schema:
 //!
 //! * `{"kind":"solve","id":N,"req":{…}}` → `{"kind":"resp","id":N,…}`
 //!   with either `"ok":true,"resp":{…}` or `"ok":false,"err":{…}` —

@@ -41,8 +41,11 @@
 //!   `t1` are free per request) — under a `max_batch_size`/
 //!   `max_queue_delay` flush policy, with two-dimensional admission
 //!   control (request count AND projected checkpoint bytes against a
-//!   worker memory budget), p50/p95/p99 latency metrics, and
-//!   `NODAL_SERVE_*` / `NODAL_CKPT_BUDGET_BYTES` tuning knobs.
+//!   worker memory budget), QoS scheduling (priority lanes + per-dynamics
+//!   deficit quotas), p50/p95/p99 latency metrics (aggregate and
+//!   per-tenant), an HTTP/1.1 front door ([`serve::HttpServer`]), and
+//!   `NODAL_SERVE_*` / `NODAL_HTTP_*` / `NODAL_CKPT_BUDGET_BYTES` tuning
+//!   knobs.
 //! * **L2 (JAX, `python/compile/model.py`)** — model dynamics `f(z, t, θ)`,
 //!   encoders/decoders/loss heads, AOT-lowered to HLO text.
 //! * **L1 (Pallas, `python/compile/kernels/`)** — fused hot-path kernels
@@ -112,16 +115,59 @@
 //!
 //! ```no_run
 //! use nodal::ode::analytic::VanDerPol;
-//! use nodal::serve::{SolveRequest, SolveServer};
+//! use nodal::serve::{Lane, SolveRequest, SolveServer};
 //!
 //! let server = SolveServer::builder().register("vdp", VanDerPol::new(0.15)).start();
-//! let h = server
-//!     .submit(SolveRequest::adaptive("vdp", 0.0, 25.0, vec![2.0, 0.0], 1e-6, 1e-8))
+//! let req = SolveRequest::builder("vdp")
+//!     .span(0.0, 25.0)
+//!     .state(vec![2.0, 0.0])
+//!     .adaptive(1e-6, 1e-8)
+//!     .observe_at(vec![5.0, 10.0, 25.0]) // optional dense-output grid
+//!     .priority(Lane::Interactive)
+//!     .build()
 //!     .unwrap();
-//! let resp = h.wait().unwrap();
+//! let resp = server.submit(req).unwrap().wait().unwrap();
 //! println!("z(T) = {:?}  nfe {}  batched with {} requests",
-//!          resp.z_t1, resp.stats.nfe, resp.stats.batch_size);
+//!          resp.z_t1(), resp.stats.nfe, resp.stats.batch_size);
+//! println!("observed: {:?}", resp.observations());
 //! println!("{}", server.metrics());
+//! ```
+//!
+//! The typed builder validates at `build()` (finite spans, nonzero
+//! tolerances, in-span observation grids), so malformed requests never
+//! reach admission. **QoS model:** every request carries a [`serve::Lane`]
+//! — `Interactive` (the default) flushes before `Batch` on every emission
+//! round — and the batch former schedules tenants (dynamics keys) by
+//! deficit round-robin under the `NODAL_SERVE_QUOTA_*` knobs, so one
+//! tenant's flood cannot starve another's queue. Scheduling only reorders
+//! *emission*: per-request results stay bit-identical to direct solves.
+//! Fairness is observable per tenant via the `per_key_queue_wait` p99
+//! histograms in [`serve::MetricsSnapshot`]. A request may also attach a
+//! dense-output observation grid (`observe_at`): the response carries the
+//! trajectory interpolated at those times, each point bit-equal to
+//! [`ode::dense::DenseOutput`] evaluation on a direct solve.
+//!
+//! ## HTTP front door
+//!
+//! The same server speaks HTTP/1.1 over a vendored `std::net` front end
+//! ([`serve::HttpServer`]) — no framework, fully offline. Requests and
+//! responses use the versioned JSON wire schema ([`serve::WIRE_VERSION`];
+//! unknown versions are a typed [`serve::WireVersionError`]) shared with
+//! the `dist` transport, f32 payloads travelling as u32 bit patterns.
+//! `Overloaded` admission maps to `429` with a `Retry-After` header;
+//! malformed or oversized traffic bounces with `400` before admission:
+//!
+//! ```no_run
+//! use nodal::ode::analytic::VanDerPol;
+//! use nodal::serve::{HttpConfig, HttpServer, SolveServer};
+//! use std::sync::Arc;
+//!
+//! let server = Arc::new(SolveServer::builder().register("vdp", VanDerPol::new(0.15)).start());
+//! let http = HttpServer::spawn(server, HttpConfig::from_env()).unwrap();
+//! println!("POST solves to http://{}/v1/solve", http.addr());
+//! // curl -s localhost:7118/healthz
+//! // curl -s -X POST localhost:7118/v1/solve -d @request.json
+//! // curl -s localhost:7118/v1/metrics
 //! ```
 //!
 //! ## Distributed scale-out
@@ -173,8 +219,9 @@
 //!    parse-and-clamp helpers
 //!    ([`coordinator::pool::default_workers`],
 //!    [`coordinator::report`]'s `results_dir`, [`runtime`]'s
-//!    `artifact_root`, [`ckpt`]'s budget parsers, [`serve`]'s
-//!    `env_clamped`, [`dist::env`]'s `from_env`/`env_usize`), and every
+//!    `artifact_root`, [`ckpt`]'s budget parsers, the `env_clamped`
+//!    helpers in [`serve`] and its HTTP front door,
+//!    [`dist::env`]'s `from_env`/`env_usize`), and every
 //!    `NODAL_*` knob mentioned anywhere in the sources must appear in the
 //!    table below.
 //! 2. **determinism** — `Instant::now`/`SystemTime::now` only behind the
@@ -228,6 +275,10 @@
 //! | `NODAL_SERVE_QUEUE_CAP` | [`serve::ServeConfig::from_env`] | admitted-unanswered cap | 1024, 1..=10⁶ |
 //! | `NODAL_SERVE_WORKERS` | [`serve::ServeConfig::from_env`] | serve worker threads | pool default, 1..=256 |
 //! | `NODAL_SERVE_MEM_BUDGET_BYTES` | [`serve::ServeConfig::from_env`] | projected-checkpoint admission budget (0 = unlimited) | 0, 0 or 64..=2⁴⁰ |
+//! | `NODAL_SERVE_QUOTA_QUANTUM` | [`serve::ServeConfig::from_env`] | DRR quantum: batches a tenant may emit per scheduling round | 32, 1..=1024 |
+//! | `NODAL_SERVE_QUOTA_MAX_DEFICIT` | [`serve::ServeConfig::from_env`] | cap on a tenant's banked DRR deficit | 128, 1..=10⁶ |
+//! | `NODAL_HTTP_PORT` | [`serve::HttpConfig::from_env`] | HTTP front-door port on 127.0.0.1 | 7118, 1..=65535 |
+//! | `NODAL_HTTP_MAX_BODY_BYTES` | [`serve::HttpConfig::from_env`] | largest accepted HTTP request body | 1 MiB, 1 KiB..=64 MiB |
 //! | `NODAL_DIST_RANK` | [`dist::env::DistConfig::from_env`] | this process's rank | 0, 0..=world−1 |
 //! | `NODAL_DIST_WORLD_SIZE` | [`dist::env::DistConfig::from_env`] | ranks in the training world | 1, 1..=256 |
 //! | `NODAL_DIST_PORT` | [`dist::env::DistConfig::from_env`] | rank-0 coordinator port | 7117, 1..=65535 |

@@ -95,6 +95,14 @@ impl DenseOutput {
             .collect()
     }
 
+    /// Evaluate the interpolant at every time in `ts`, in order. This is
+    /// the serving-layer entry point for dense-output observation grids:
+    /// each grid point is exactly [`DenseOutput::eval`] at that time, so a
+    /// served observation is bit-identical to a direct-solve evaluation.
+    pub fn eval_grid(&self, ts: &[f64]) -> Vec<Vec<f32>> {
+        ts.iter().map(|&t| self.eval(t)).collect()
+    }
+
     /// Sample the interpolant on a uniform grid of `n` points (inclusive).
     pub fn sample(&self, n: usize) -> (Vec<f64>, Vec<Vec<f32>>) {
         let (a, b) = (self.ts[0], *self.ts.last().unwrap());
@@ -174,6 +182,18 @@ mod tests {
         let dense = DenseOutput::new(&f, &traj);
         let mid = dense.eval(1.0)[0] as f64;
         assert!((mid - (-1.0f64).exp()).abs() < 1e-4, "{mid}");
+    }
+
+    #[test]
+    fn eval_grid_is_pointwise_eval() {
+        let (f, traj) = make();
+        let dense = DenseOutput::new(&f, &traj);
+        let grid = [0.0, 0.3, 1.1, 1.9, 2.0];
+        let zs = dense.eval_grid(&grid);
+        assert_eq!(zs.len(), grid.len());
+        for (&t, z) in grid.iter().zip(&zs) {
+            assert_eq!(z[0].to_bits(), dense.eval(t)[0].to_bits(), "t={t}");
+        }
     }
 
     #[test]

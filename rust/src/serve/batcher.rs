@@ -9,14 +9,36 @@
 //! The server's batcher thread drives the same code with wall time.
 //!
 //! Grouping: requests coalesce by [`BatchKey`] (same dynamics, solver,
-//! direction, tolerance, gradient flag); the initial state *and the whole
-//! span `[t0, t1]`* may differ inside a batch — exactly the axes
-//! `integrate_batch_tspans` vectorizes over without changing any
-//! per-sample result. Under mixed-span traffic this is the occupancy
-//! lever: requests that previously split into one group per start time or
-//! endpoint now fill one batch.
+//! direction, tolerance, gradient/observation flags, QoS lane); the initial
+//! state *and the whole span `[t0, t1]`* may differ inside a batch —
+//! exactly the axes `integrate_batch_tspans` vectorizes over without
+//! changing any per-sample result. Under mixed-span traffic this is the
+//! occupancy lever: requests that previously split into one group per start
+//! time or endpoint now fill one batch.
+//!
+//! ## QoS: lanes and per-tenant quotas
+//!
+//! Emission (the order flushed batches leave the former, and hence the
+//! order workers pick them up) is **ordering-only QoS** — a ready batch is
+//! never withheld, so no policy here can deadlock or starve traffic
+//! outright. Two levers:
+//!
+//! 1. **Priority lanes**: every ready [`Lane::Interactive`] batch is
+//!    emitted before any [`Lane::Batch`] one.
+//! 2. **Per-tenant deficit round-robin** within a lane: tenants (one per
+//!    dynamics id) take turns; each visit grants `quantum` credits (capped
+//!    at `max_deficit`), and a tenant emits its oldest ready batches while
+//!    its deficit covers their sample counts. One hot dynamics with a deep
+//!    backlog therefore *interleaves* with light tenants instead of
+//!    emitting its whole backlog first — a flooded key's batches and a
+//!    victim key's singleton alternate at roughly `quantum` samples per
+//!    turn.
+//!
+//! Each round visits tenants ordered by their queue-head trigger time, so
+//! when every tenant is under its quantum the emission degenerates to pure
+//! trigger order — light traffic sees no reordering at all.
 
-use super::request::{BatchKey, ResponseSlot, SolveRequest};
+use super::request::{BatchKey, Lane, ResponseSlot, SolveRequest};
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
@@ -62,15 +84,38 @@ struct Group {
 pub struct BatchFormer {
     max_batch: usize,
     max_delay: Duration,
+    /// DRR credits granted per tenant visit (samples).
+    quantum: usize,
+    /// Cap on accumulated credits (≥ `max_batch`, so a full batch always
+    /// eventually fits — a smaller cap could starve a tenant forever).
+    max_deficit: usize,
     groups: Vec<Group>,
     ready: VecDeque<FormedBatch>,
 }
 
 impl BatchFormer {
+    /// Default QoS quotas: `quantum` 32 samples per tenant visit, deficit
+    /// capped at 128 (see [`BatchFormer::with_quota`]).
     pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        Self::with_quota(max_batch, max_delay, 32, 128)
+    }
+
+    /// Full constructor with explicit per-tenant DRR quotas. `quantum` is
+    /// clamped to ≥ 1 and `max_deficit` to ≥ `max(max_batch, quantum)` —
+    /// below `max_batch` a full batch could never afford emission.
+    pub fn with_quota(
+        max_batch: usize,
+        max_delay: Duration,
+        quantum: usize,
+        max_deficit: usize,
+    ) -> Self {
+        let max_batch = max_batch.max(1);
+        let quantum = quantum.max(1);
         BatchFormer {
-            max_batch: max_batch.max(1),
+            max_batch,
             max_delay,
+            quantum,
+            max_deficit: max_deficit.max(max_batch).max(quantum),
             groups: Vec::new(),
             ready: VecDeque::new(),
         }
@@ -109,12 +154,18 @@ impl BatchFormer {
         }
     }
 
-    /// Collect every batch whose flush condition has tripped by `now`:
-    /// size-flushed batches (in the order they filled) and groups whose
-    /// oldest member has waited at least `max_queue_delay`. Batches are
-    /// returned in trigger order — a size flush that fired before another
-    /// group's deadline comes out first.
+    /// Collect every batch whose flush condition has tripped by `now`
+    /// (size-flushed batches and groups whose oldest member has waited at
+    /// least `max_queue_delay`), in QoS emission order: interactive lane
+    /// first, deficit round-robin across tenants within a lane, trigger
+    /// order within a tenant (see the module docs).
     pub fn poll(&mut self, now: Duration) -> Vec<FormedBatch> {
+        let due = self.collect_due(now);
+        self.schedule(due)
+    }
+
+    /// Size/deadline-tripped batches in raw trigger order (pre-QoS).
+    fn collect_due(&mut self, now: Duration) -> Vec<FormedBatch> {
         let mut out: Vec<FormedBatch> = self.ready.drain(..).collect();
         let mut i = 0;
         while i < self.groups.len() {
@@ -131,13 +182,14 @@ impl BatchFormer {
                 i += 1;
             }
         }
-        out.sort_by_key(|b| b.triggered_at);
         out
     }
 
     /// Flush everything regardless of policy (explicit `drain()`/shutdown).
+    /// The flushed batches leave in the same QoS emission order as
+    /// [`BatchFormer::poll`].
     pub fn drain(&mut self, now: Duration) -> Vec<FormedBatch> {
-        let mut out = self.poll(now);
+        let mut out = self.collect_due(now);
         for g in self.groups.drain(..) {
             out.push(FormedBatch {
                 key: g.key,
@@ -146,7 +198,78 @@ impl BatchFormer {
                 triggered_at: now,
             });
         }
+        self.schedule(out)
+    }
+
+    /// QoS emission ordering over one flush set: stable-sort by trigger
+    /// time, split by lane (interactive first), then deficit round-robin
+    /// across tenants within each lane. Ordering-only: every input batch is
+    /// emitted, exactly once.
+    fn schedule(&self, mut batches: Vec<FormedBatch>) -> Vec<FormedBatch> {
+        batches.sort_by_key(|b| b.triggered_at);
+        if batches.len() <= 1 {
+            return batches;
+        }
+        let mut interactive = Vec::new();
+        let mut bulk = Vec::new();
+        for b in batches {
+            match b.key.lane {
+                Lane::Interactive => interactive.push(b),
+                Lane::Batch => bulk.push(b),
+            }
+        }
+        let mut out = Vec::with_capacity(interactive.len() + bulk.len());
+        self.drr_emit(interactive, &mut out);
+        self.drr_emit(bulk, &mut out);
         out
+    }
+
+    /// Deficit round-robin over one lane's batches. Tenants are keyed by
+    /// dynamics id; each round visits tenants in queue-head trigger order
+    /// and grants `quantum` credits per visit, a batch costing its sample
+    /// count. The deficit cap (`max_deficit ≥ max_batch`) guarantees every
+    /// head batch becomes affordable within finitely many rounds, so this
+    /// always terminates having emitted everything.
+    fn drr_emit(&self, batches: Vec<FormedBatch>, out: &mut Vec<FormedBatch>) {
+        // Per-tenant FIFO queues in first-appearance (trigger) order.
+        let mut queues: Vec<(String, VecDeque<FormedBatch>, usize)> = Vec::new();
+        for b in batches {
+            match queues.iter_mut().find(|(t, _, _)| *t == b.key.dynamics) {
+                Some((_, q, _)) => q.push_back(b),
+                None => {
+                    let tenant = b.key.dynamics.clone();
+                    queues.push((tenant, VecDeque::from([b]), 0));
+                }
+            }
+        }
+        while queues.iter().any(|(_, q, _)| !q.is_empty()) {
+            // Stable sort: ties in trigger time keep first-appearance order.
+            let mut order: Vec<usize> =
+                (0..queues.len()).filter(|&i| !queues[i].1.is_empty()).collect();
+            order.sort_by_key(|&i| queues[i].1.front().map(|b| b.triggered_at));
+            for i in order {
+                let (_, q, deficit) = &mut queues[i];
+                *deficit = deficit.saturating_add(self.quantum).min(self.max_deficit);
+                loop {
+                    let cost = match q.front() {
+                        Some(head) => head.items.len(),
+                        None => break,
+                    };
+                    if cost > *deficit {
+                        break;
+                    }
+                    if let Some(b) = q.pop_front() {
+                        *deficit -= cost;
+                        out.push(b);
+                    }
+                }
+                // An emptied tenant keeps no credit: deficits measure
+                // *backlogged* entitlement, not a savings account.
+                if q.is_empty() {
+                    *deficit = 0;
+                }
+            }
+        }
     }
 
     /// Earliest instant at which [`BatchFormer::poll`] would flush something
@@ -181,7 +304,23 @@ mod tests {
     fn pending(dynamics: &str, t1: f64, submitted: Duration) -> Pending {
         let (_, slot) = ResponseHandle::new();
         Pending {
-            req: SolveRequest::adaptive(dynamics, 0.0, t1, vec![1.0, 0.0], 1e-6, 1e-8),
+            req: SolveRequest::adaptive(dynamics, 0.0, t1, vec![1.0, 0.0], 1e-6, 1e-8).unwrap(),
+            slot,
+            submitted,
+            cost: 0,
+        }
+    }
+
+    fn pending_lane(dynamics: &str, lane: Lane, submitted: Duration) -> Pending {
+        let (_, slot) = ResponseHandle::new();
+        Pending {
+            req: SolveRequest::builder(dynamics)
+                .span(0.0, 5.0)
+                .state(vec![1.0, 0.0])
+                .adaptive(1e-6, 1e-8)
+                .priority(lane)
+                .build()
+                .unwrap(),
             slot,
             submitted,
             cost: 0,
@@ -218,7 +357,9 @@ mod tests {
     #[test]
     fn flush_order_is_trigger_order() {
         // Group A (vdp) deadline-expires at t=10; group B (other dynamics)
-        // size-flushes at t=5. Poll at t=12 must yield B before A.
+        // size-flushes at t=5. Poll at t=12 must yield B before A — with
+        // every tenant under its DRR quantum the QoS ordering degenerates
+        // to pure trigger order.
         let mut f = BatchFormer::new(2, ms(10));
         f.push(pending("vdp", 5.0, ms(0)), ms(0));
         f.push(pending("linear", 7.0, ms(4)), ms(4));
@@ -316,5 +457,66 @@ mod tests {
         let out = f.poll(ms(0));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].reason, FlushReason::Size);
+    }
+
+    /// Lane priority: every ready interactive batch is emitted before any
+    /// batch-lane one, even when the batch-lane batch triggered earlier.
+    #[test]
+    fn interactive_lane_emits_before_batch_lane() {
+        let mut f = BatchFormer::new(8, ms(1000));
+        f.push(pending_lane("vdp", Lane::Batch, ms(0)), ms(0));
+        f.push(pending_lane("vdp", Lane::Interactive, ms(5)), ms(5));
+        let out = f.drain(ms(10));
+        assert_eq!(out.len(), 2, "lanes never share a batch");
+        assert_eq!(out[0].key.lane, Lane::Interactive);
+        assert_eq!(out[1].key.lane, Lane::Batch);
+    }
+
+    /// Per-tenant DRR: a hot tenant with a deep ready backlog interleaves
+    /// with a light tenant instead of emitting its whole backlog first —
+    /// the victim's singleton comes out after at most ~quantum samples of
+    /// hot traffic, not after all of it.
+    #[test]
+    fn drr_interleaves_hot_tenant_with_victim() {
+        // quantum 2 = one hot batch per visit; deficit cap 4.
+        let mut f = BatchFormer::with_quota(2, ms(1000), 2, 4);
+        for i in 0..6 {
+            f.push(pending("vdp", 5.0, ms(i)), ms(i)); // 3 size-flushed batches
+        }
+        f.push(pending("linear", 5.0, ms(6)), ms(6)); // the victim singleton
+        let out = f.drain(ms(7));
+        assert_eq!(out.len(), 4);
+        let tenants: Vec<&str> = out.iter().map(|b| b.key.dynamics.as_str()).collect();
+        assert_eq!(
+            tenants,
+            vec!["vdp", "linear", "vdp", "vdp"],
+            "round 1 grants the hot tenant one batch (quantum 2), then the victim"
+        );
+        // Within the hot tenant, its own batches stay in trigger order.
+        let hot: Vec<Duration> = out
+            .iter()
+            .filter(|b| b.key.dynamics == "vdp")
+            .map(|b| b.triggered_at)
+            .collect();
+        assert!(hot.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    /// The deficit cap floors at `max_batch`: even with an absurdly small
+    /// configured cap, a full batch eventually affords emission (otherwise
+    /// its tenant would starve forever on its own backlog).
+    #[test]
+    fn deficit_cap_never_starves_a_full_batch() {
+        let mut f = BatchFormer::with_quota(8, ms(1000), 1, 1); // cap clamps to 8
+        for i in 0..8 {
+            f.push(pending("vdp", 5.0, ms(i)), ms(i)); // one size-flushed batch of 8
+        }
+        f.push(pending("linear", 5.0, ms(8)), ms(8));
+        let out = f.drain(ms(9));
+        assert_eq!(out.len(), 2);
+        assert_eq!(
+            out.iter().filter(|b| b.key.dynamics == "vdp").count(),
+            1,
+            "the full batch must be emitted"
+        );
     }
 }

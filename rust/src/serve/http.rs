@@ -1,0 +1,450 @@
+//! Minimal vendored HTTP/1.1 front door over [`SolveServer`].
+//!
+//! Offline-friendly by construction: plain `std::net::TcpListener`, no TLS,
+//! no external dependencies — JSON bodies use `util/json` and the
+//! **versioned wire schema** from [`super::wire`] (the same codecs the
+//! `dist` shards speak), so an HTTP client and a shard client exchange
+//! byte-compatible payloads. f32 payloads keep the u32-bit-pattern
+//! convention end-to-end.
+//!
+//! Routes:
+//!
+//! * `POST /v1/solve` — body is [`SolveRequest::to_json`] (forward,
+//!   gradient via `lam`, or dense-output via `observe_at`); the response is
+//!   [`SolveResponse::to_json`] on 200, or [`ServeError::to_json`] with the
+//!   mapped status otherwise.
+//! * `GET /v1/metrics` — the server's
+//!   [`MetricsSnapshot`](super::metrics::MetricsSnapshot) as JSON,
+//!   per-tenant queue-wait summaries included.
+//! * `GET /healthz` — liveness probe, `{"ok":true}`.
+//!
+//! Error mapping (admission backpressure reaches clients end-to-end):
+//!
+//! | [`ServeError`]    | status | extra                |
+//! |-------------------|--------|----------------------|
+//! | `Overloaded`      | 429    | `Retry-After: 1`     |
+//! | `BadRequest`      | 400    |                      |
+//! | `UnknownDynamics` | 404    |                      |
+//! | `Solver`          | 500    |                      |
+//! | `ShuttingDown`    | 503    |                      |
+//!
+//! Malformed request lines, unparseable JSON, wrong wire versions, and
+//! bodies above [`HttpConfig::max_body_bytes`] are all rejected with `400`
+//! **before** any submit — a garbage request never reaches a worker.
+//! Connections are keep-alive by default (`Connection: close` honored);
+//! each connection runs one request at a time on its own thread, which is
+//! the right shape for a loopback research server (the batcher, not the
+//! socket count, is the concurrency lever).
+
+use super::request::{ServeError, SolveRequest};
+use super::SolveServer;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Longest accepted request/header line; longer lines poison the
+/// connection (closed after a 400) since the framing can't be trusted.
+const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Header-count cap per request.
+const MAX_HEADERS: usize = 64;
+
+/// `NODAL_HTTP_*` env knob with parse-and-clamp semantics (same contract
+/// as the other `env_clamped` helpers; allowlisted in nodal-lint).
+fn env_clamped(name: &str, default: usize, lo: usize, hi: usize) -> usize {
+    match std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.clamp(lo, hi),
+        None => default,
+    }
+}
+
+/// HTTP front-door tuning.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// TCP port bound on 127.0.0.1 by [`HttpServer::spawn`]
+    /// (`NODAL_HTTP_PORT`).
+    pub port: u16,
+    /// Largest accepted request body in bytes (`NODAL_HTTP_MAX_BODY_BYTES`).
+    /// Oversized bodies bounce with `400` before they are read.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { port: 7118, max_body_bytes: 1 << 20 }
+    }
+}
+
+impl HttpConfig {
+    /// Defaults with `NODAL_HTTP_*` overrides (see the lib.rs knob table).
+    pub fn from_env() -> Self {
+        HttpConfig {
+            port: env_clamped("NODAL_HTTP_PORT", 7118, 1, 65535) as u16,
+            max_body_bytes: env_clamped("NODAL_HTTP_MAX_BODY_BYTES", 1 << 20, 1024, 64 << 20),
+        }
+    }
+}
+
+/// A running HTTP endpoint over a shared [`SolveServer`].
+///
+/// Dropping (or [`HttpServer::shutdown`]) stops the listener and joins the
+/// connection threads. The underlying `SolveServer` is **not** drained —
+/// it is shared state the front door borrows, and other front ends (e.g. a
+/// `dist` shard) may still be serving it.
+pub struct HttpServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+    server: Arc<SolveServer>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:{cfg.port}` and serve until shutdown.
+    pub fn spawn(server: Arc<SolveServer>, cfg: HttpConfig) -> Result<HttpServer> {
+        let bind = format!("127.0.0.1:{}", cfg.port);
+        Self::spawn_at(server, &bind, cfg)
+    }
+
+    /// Bind an explicit address (use port 0 for an ephemeral test port).
+    pub fn spawn_at(server: Arc<SolveServer>, bind: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("bind http front door at {bind}"))?;
+        let addr = listener.local_addr().context("http local addr")?.to_string();
+        listener.set_nonblocking(true).context("http listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (server, stop, conns) = (server.clone(), stop.clone(), conns.clone());
+            let max_body = cfg.max_body_bytes;
+            std::thread::spawn(move || accept_loop(&listener, &server, &stop, &conns, max_body))
+        };
+        Ok(HttpServer { addr, stop, conns, accept: Some(accept), server })
+    }
+
+    /// The bound address (`host:port`) clients dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The front door's underlying server (registry/metrics access in
+    /// tests and examples).
+    pub fn server(&self) -> &Arc<SolveServer> {
+        &self.server
+    }
+
+    /// Stop accepting, sever open connections, and join the service
+    /// threads. Idempotent. Does not drain the shared `SolveServer`.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    server: &Arc<SolveServer>,
+    stop: &AtomicBool,
+    conns: &Mutex<Vec<TcpStream>>,
+    max_body: usize,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = s.set_nodelay(true);
+                if let Ok(c) = s.try_clone() {
+                    conns.lock().unwrap().push(c);
+                }
+                let server = server.clone();
+                handlers.push(std::thread::spawn(move || handle_conn(s, &server, max_body)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// What to do with the connection after answering one request.
+enum ConnState {
+    KeepAlive,
+    Close,
+}
+
+fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>, max_body: usize) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    while let ConnState::KeepAlive = serve_one(&mut reader, &mut writer, server, max_body) {}
+}
+
+/// Read one CRLF-terminated line without ever buffering more than `cap`
+/// bytes. `None` means the connection is unusable (EOF mid-line, I/O
+/// error, over-long line, or non-UTF-8) — callers close it.
+fn read_line_capped<R: BufRead>(r: &mut R, cap: usize) -> Option<String> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(_) => return None,
+        };
+        if chunk.is_empty() {
+            return None; // EOF before the line terminator
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if buf.len() + i > cap {
+                    return None;
+                }
+                buf.extend_from_slice(&chunk[..i]);
+                r.consume(i + 1);
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return String::from_utf8(buf).ok();
+            }
+            None => {
+                let n = chunk.len();
+                if buf.len() + n > cap {
+                    return None;
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+            }
+        }
+    }
+}
+
+/// Status line + reason for a [`ServeError`] (see the module-level table).
+fn status_for(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::Overloaded => (429, "Too Many Requests"),
+        ServeError::BadRequest(_) => (400, "Bad Request"),
+        ServeError::UnknownDynamics(_) => (404, "Not Found"),
+        ServeError::Solver(_) => (500, "Internal Server Error"),
+        ServeError::ShuttingDown => (503, "Service Unavailable"),
+    }
+}
+
+fn write_response(
+    writer: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    retry_after: Option<u64>,
+    keep_alive: bool,
+    body: &str,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        body.len()
+    );
+    if let Some(secs) = retry_after {
+        head.push_str(&format!("retry-after: {secs}\r\n"));
+    }
+    head.push_str(if keep_alive {
+        "connection: keep-alive\r\n\r\n"
+    } else {
+        "connection: close\r\n\r\n"
+    });
+    writer.write_all(head.as_bytes())?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()
+}
+
+/// Answer a protocol-level defect with `400` and a `ServeError::BadRequest`
+/// JSON body; the caller decides whether the connection survives.
+fn reject(writer: &mut TcpStream, msg: &str, keep_alive: bool) -> ConnState {
+    let body = ServeError::BadRequest(msg.to_string()).to_json().to_string();
+    let _ = write_response(writer, 400, "Bad Request", None, keep_alive, &body);
+    if keep_alive {
+        ConnState::KeepAlive
+    } else {
+        ConnState::Close
+    }
+}
+
+/// Serve exactly one HTTP request off the connection.
+fn serve_one(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    server: &Arc<SolveServer>,
+    max_body: usize,
+) -> ConnState {
+    let Some(request_line) = read_line_capped(reader, MAX_LINE_BYTES) else {
+        return ConnState::Close;
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return reject(writer, "malformed request line", false),
+    };
+
+    let mut content_length = 0usize;
+    let mut keep_alive = true;
+    let mut oversized = false;
+    let mut terminated = false;
+    for _ in 0..MAX_HEADERS {
+        let Some(h) = read_line_capped(reader, MAX_LINE_BYTES) else {
+            return ConnState::Close;
+        };
+        if h.is_empty() {
+            terminated = true;
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            // A header without a colon is a framing error.
+            return reject(writer, "malformed header", false);
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            match value.parse::<usize>() {
+                Ok(n) if n <= max_body => content_length = n,
+                Ok(_) => oversized = true,
+                Err(_) => return reject(writer, "unparseable content-length", false),
+            }
+        } else if name.eq_ignore_ascii_case("connection") {
+            keep_alive = !value.eq_ignore_ascii_case("close");
+        }
+    }
+    if !terminated {
+        return reject(writer, "too many headers", false);
+    }
+    if oversized {
+        // Refuse before reading a byte of the body; the unread bytes make
+        // the connection unframeable, so it closes.
+        return reject(writer, "request body exceeds max_body_bytes", false);
+    }
+    let mut body = vec![0u8; content_length];
+    if reader.read_exact(&mut body).is_err() {
+        return ConnState::Close;
+    }
+
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/v1/solve") => {
+            // Decode fully — JSON syntax, wire version, schema — before any
+            // submit, so garbage never reaches admission or a worker.
+            let decoded = std::str::from_utf8(&body)
+                .map_err(anyhow::Error::from)
+                .and_then(Json::parse)
+                .and_then(|j| SolveRequest::from_json(&j));
+            let req = match decoded {
+                Ok(r) => r,
+                Err(e) => {
+                    let msg = format!("undecodable solve request: {e}");
+                    return reject(writer, &msg, keep_alive);
+                }
+            };
+            let result = match server.submit(req) {
+                Ok(handle) => handle.wait(),
+                Err(e) => Err(e),
+            };
+            match result {
+                Ok(resp) => {
+                    let body = resp.to_json().to_string();
+                    let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
+                }
+                Err(e) => {
+                    let (status, reason) = status_for(&e);
+                    let retry = matches!(e, ServeError::Overloaded).then_some(1);
+                    let body = e.to_json().to_string();
+                    let _ = write_response(writer, status, reason, retry, keep_alive, &body);
+                }
+            }
+        }
+        ("GET", "/v1/metrics") => {
+            let body = server.metrics().to_json().to_string();
+            let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
+        }
+        ("GET", "/healthz") => {
+            let _ = write_response(writer, 200, "OK", None, keep_alive, "{\"ok\":true}");
+        }
+        ("GET", _) | ("POST", _) => {
+            let _ = write_response(writer, 404, "Not Found", None, keep_alive, "{}");
+        }
+        _ => {
+            let _ = write_response(writer, 405, "Method Not Allowed", None, keep_alive, "{}");
+        }
+    }
+    if keep_alive {
+        ConnState::KeepAlive
+    } else {
+        ConnState::Close
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// All `NODAL_HTTP_*` cases in ONE test: the process environment is
+    /// shared across parallel test threads.
+    #[test]
+    fn config_env_parse_and_clamp() {
+        std::env::set_var("NODAL_HTTP_PORT", "99999");
+        std::env::set_var("NODAL_HTTP_MAX_BODY_BYTES", "1");
+        let cfg = HttpConfig::from_env();
+        assert_eq!(cfg.port, 65535, "port clamps to the u16 range");
+        assert_eq!(cfg.max_body_bytes, 1024, "body cap clamps up to the floor");
+
+        std::env::set_var("NODAL_HTTP_PORT", "not-a-number");
+        let cfg = HttpConfig::from_env();
+        assert_eq!(cfg.port, 7118, "unparseable falls back to default");
+
+        for k in ["NODAL_HTTP_PORT", "NODAL_HTTP_MAX_BODY_BYTES"] {
+            std::env::remove_var(k);
+        }
+        let cfg = HttpConfig::from_env();
+        assert_eq!(cfg.port, 7118);
+        assert_eq!(cfg.max_body_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn read_line_capped_handles_crlf_eof_and_caps() {
+        let mut r = Cursor::new(b"GET / HTTP/1.1\r\nplain-lf\nrest".to_vec());
+        assert_eq!(read_line_capped(&mut r, 64).as_deref(), Some("GET / HTTP/1.1"));
+        assert_eq!(read_line_capped(&mut r, 64).as_deref(), Some("plain-lf"));
+        assert_eq!(read_line_capped(&mut r, 64), None, "EOF mid-line is unusable");
+
+        let long = vec![b'a'; 100];
+        let mut r = Cursor::new([&long[..], b"\r\n"].concat());
+        assert_eq!(read_line_capped(&mut r, 10), None, "over-cap line refused");
+        let mut r = Cursor::new([&long[..], b"\r\n"].concat());
+        assert!(read_line_capped(&mut r, 200).is_some(), "under-cap line accepted");
+
+        let mut r = Cursor::new(vec![0xff, 0xfe, b'\n']);
+        assert_eq!(read_line_capped(&mut r, 64), None, "non-UTF-8 refused");
+    }
+
+    #[test]
+    fn status_mapping_matches_the_table() {
+        assert_eq!(status_for(&ServeError::Overloaded).0, 429);
+        assert_eq!(status_for(&ServeError::BadRequest(String::new())).0, 400);
+        assert_eq!(status_for(&ServeError::UnknownDynamics(String::new())).0, 404);
+        assert_eq!(status_for(&ServeError::Solver(String::new())).0, 500);
+        assert_eq!(status_for(&ServeError::ShuttingDown).0, 503);
+    }
+}

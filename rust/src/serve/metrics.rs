@@ -7,6 +7,7 @@
 //! (within a factor of 2), which is what a serving dashboard needs; exact
 //! per-request numbers ride on every [`super::SolveResponse`].
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -151,6 +152,10 @@ pub struct ServeMetrics {
     pub service: LogHistogram,
     /// `batch_sizes[s]` counts executed batches of size `s` (index 0 unused).
     batch_sizes: Mutex<Vec<u64>>,
+    /// Per-tenant (per-dynamics-key) queue-wait histograms — the fairness
+    /// signal for the QoS scheduler: under a single-tenant flood, the other
+    /// tenants' p99 here must stay bounded.
+    per_key_queue_wait: Mutex<BTreeMap<String, LogHistogram>>,
 }
 
 impl ServeMetrics {
@@ -162,15 +167,35 @@ impl ServeMetrics {
         sizes[size] += 1;
     }
 
-    pub fn record_request(&self, queue_wait: Duration, service: Duration, nfe: usize) {
-        self.queue_wait.record(queue_wait.as_nanos().min(u64::MAX as u128) as u64);
+    pub fn record_request(
+        &self,
+        tenant: &str,
+        queue_wait: Duration,
+        service: Duration,
+        nfe: usize,
+    ) {
+        let qw_ns = queue_wait.as_nanos().min(u64::MAX as u128) as u64;
+        self.queue_wait.record(qw_ns);
         self.service.record(service.as_nanos().min(u64::MAX as u128) as u64);
         self.nfe.record(nfe as u64);
+        self.per_key_queue_wait
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_default()
+            .record(qw_ns);
         self.completed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Point-in-time copy of every aggregate.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let per_key_queue_wait: Vec<(String, LatencySummary)> = self
+            .per_key_queue_wait
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), LatencySummary::from_hist(h)))
+            .collect();
         let sizes = self.batch_sizes.lock().unwrap().clone();
         // The size histogram is the single source of truth for batch counts.
         let batches: u64 = sizes.iter().sum();
@@ -185,6 +210,7 @@ impl ServeMetrics {
             batch_sizes: sizes,
             queue_wait: LatencySummary::from_hist(&self.queue_wait),
             service: LatencySummary::from_hist(&self.service),
+            per_key_queue_wait,
             nfe_total: self.nfe.sum(),
             nfe_mean: self.nfe.mean(),
             nfe_max: self.nfe.max(),
@@ -205,6 +231,8 @@ pub struct MetricsSnapshot {
     pub batch_sizes: Vec<u64>,
     pub queue_wait: LatencySummary,
     pub service: LatencySummary,
+    /// Per-tenant queue-wait summaries, sorted by tenant key.
+    pub per_key_queue_wait: Vec<(String, LatencySummary)>,
     pub nfe_total: u64,
     pub nfe_mean: f64,
     pub nfe_max: u64,
@@ -228,6 +256,13 @@ impl std::fmt::Display for MetricsSnapshot {
             "queue-wait ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}",
             q.mean_ms, q.p50_ms, q.p95_ms, q.p99_ms, q.max_ms
         )?;
+        for (k, q) in &self.per_key_queue_wait {
+            writeln!(
+                f,
+                "  [{k}] queue-wait ms: p50 {:.3}  p99 {:.3}  max {:.3}  (n={})",
+                q.p50_ms, q.p99_ms, q.max_ms, q.count
+            )?;
+        }
         let s = &self.service;
         writeln!(
             f,
@@ -287,6 +322,15 @@ impl MetricsSnapshot {
             ("batch_sizes", sizes.into()),
             ("queue_wait", latency_to_json(&self.queue_wait)),
             ("service", latency_to_json(&self.service)),
+            (
+                "per_key_queue_wait",
+                crate::util::json::Json::Obj(
+                    self.per_key_queue_wait
+                        .iter()
+                        .map(|(k, l)| (k.clone(), latency_to_json(l)))
+                        .collect(),
+                ),
+            ),
             ("nfe_total", (self.nfe_total as usize).into()),
             ("nfe_mean", self.nfe_mean.into()),
             ("nfe_max", (self.nfe_max as usize).into()),
@@ -308,6 +352,13 @@ impl MetricsSnapshot {
             batch_sizes,
             queue_wait: latency_from_json(v.get("queue_wait")?)?,
             service: latency_from_json(v.get("service")?)?,
+            per_key_queue_wait: {
+                let mut per_key = Vec::new();
+                for (k, l) in v.get("per_key_queue_wait")?.as_obj()? {
+                    per_key.push((k.clone(), latency_from_json(l)?));
+                }
+                per_key
+            },
             nfe_total: u64_field(v, "nfe_total")?,
             nfe_mean: v.get("nfe_mean")?.as_f64()?,
             nfe_max: u64_field(v, "nfe_max")?,
@@ -370,8 +421,8 @@ mod tests {
     #[test]
     fn request_recording_rolls_up() {
         let m = ServeMetrics::default();
-        m.record_request(Duration::from_micros(10), Duration::from_millis(2), 120);
-        m.record_request(Duration::from_micros(30), Duration::from_millis(4), 80);
+        m.record_request("vdp", Duration::from_micros(10), Duration::from_millis(2), 120);
+        m.record_request("vdp", Duration::from_micros(30), Duration::from_millis(4), 80);
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
         assert_eq!(s.queue_wait.count, 2);
@@ -382,11 +433,33 @@ mod tests {
         let _ = format!("{s}"); // Display must not panic
     }
 
+    /// Per-tenant queue waits are split by key and sorted: one slow tenant's
+    /// latency shows up under its key only, not smeared over the others.
+    #[test]
+    fn per_key_queue_wait_splits_tenants() {
+        let m = ServeMetrics::default();
+        for _ in 0..4 {
+            m.record_request("hot", Duration::from_millis(50), Duration::from_millis(1), 10);
+        }
+        m.record_request("calm", Duration::from_micros(20), Duration::from_millis(1), 10);
+        let s = m.snapshot();
+        assert_eq!(s.per_key_queue_wait.len(), 2);
+        assert_eq!(s.per_key_queue_wait[0].0, "calm", "sorted by key");
+        assert_eq!(s.per_key_queue_wait[1].0, "hot");
+        let (calm, hot) = (s.per_key_queue_wait[0].1, s.per_key_queue_wait[1].1);
+        assert_eq!(calm.count, 1);
+        assert_eq!(hot.count, 4);
+        assert!(calm.p99_ms < 1.0, "calm tenant keeps its own p99: {}", calm.p99_ms);
+        assert!(hot.p99_ms >= 50.0, "hot tenant owns its latency: {}", hot.p99_ms);
+        // The global histogram still aggregates everything.
+        assert_eq!(s.queue_wait.count, 5);
+    }
+
     #[test]
     fn snapshot_json_round_trips() {
         let m = ServeMetrics::default();
-        m.record_request(Duration::from_micros(10), Duration::from_millis(2), 120);
-        m.record_request(Duration::from_micros(30), Duration::from_millis(4), 80);
+        m.record_request("vdp", Duration::from_micros(10), Duration::from_millis(2), 120);
+        m.record_request("linear", Duration::from_micros(30), Duration::from_millis(4), 80);
         m.record_batch(2);
         let s = m.snapshot();
         let j = crate::util::json::Json::parse(&s.to_json().to_string()).unwrap();
@@ -399,6 +472,12 @@ mod tests {
         assert_eq!(back.queue_wait.count, s.queue_wait.count);
         assert_eq!(back.service.p99_ms.to_bits(), s.service.p99_ms.to_bits());
         assert_eq!(back.mean_batch_size.to_bits(), s.mean_batch_size.to_bits());
+        assert_eq!(back.per_key_queue_wait.len(), 2);
+        for ((bk, bl), (sk, sl)) in back.per_key_queue_wait.iter().zip(&s.per_key_queue_wait) {
+            assert_eq!(bk, sk);
+            assert_eq!(bl.count, sl.count);
+            assert_eq!(bl.p99_ms.to_bits(), sl.p99_ms.to_bits());
+        }
         assert!(MetricsSnapshot::from_json(&crate::util::json::Json::Null).is_err());
     }
 }

@@ -19,17 +19,26 @@
 //!                               ▼
 //!                         BatchFormer  — groups by BatchKey (dynamics,
 //!                               │        solver, direction, tolerance,
-//!                               │        grad flag — z0, t0 AND t1 free
-//!                               │        per request), flushes on
-//!                               │        max_batch_size OR max_queue_delay,
-//!                               ▼        whichever trips first
+//!                               │        grad/observe flags, QoS lane —
+//!                               │        z0, t0 AND t1 free per request),
+//!                               │        flushes on max_batch_size OR
+//!                               │        max_queue_delay, whichever trips
+//!                               │        first; emits interactive lane
+//!                               ▼        first, DRR across tenants
 //!                          work queue ──▶ worker shard (N threads)
 //!                                            │  integrate_batch_tspans
 //!                                            │  (one (t0, t1) per sample;
-//!                                            │  + aca_backward_batch)
+//!                                            │  + aca_backward_batch
+//!                                            │  + DenseOutput observation)
 //!                                            ▼
 //!                               per-request ResponseHandle + metrics
 //! ```
+//!
+//! External clients reach `submit` through two wire carriers speaking the
+//! same versioned JSON schema ([`wire`]): the HTTP front door ([`http`])
+//! and the sharded TCP protocol (`crate::dist`). QoS — priority lanes and
+//! per-tenant (per-dynamics) deficit-round-robin quotas — lives in the
+//! [`batcher::BatchFormer`]'s emission ordering; see its module docs.
 //!
 //! * [`SolveServer::submit`] returns a [`ResponseHandle`] immediately, or
 //!   [`ServeError::Overloaded`] when `queue_capacity` requests are already
@@ -66,18 +75,28 @@
 //! | `NODAL_SERVE_WORKERS`      | worker threads              | [`crate::coordinator::pool::default_workers`], 1..=256 |
 //! | `NODAL_CKPT_BUDGET_BYTES`  | per-sample checkpoint budget (0 = dense) | [`crate::ckpt::env_budget_bytes`], 0 or 64..=2⁴⁰ |
 //! | `NODAL_SERVE_MEM_BUDGET_BYTES` | projected-checkpoint admission budget (0 = unlimited) | 0, 0 or 64..=2⁴⁰ |
+//! | `NODAL_SERVE_QUOTA_QUANTUM` | DRR samples per tenant visit | 32, 1..=1024 |
+//! | `NODAL_SERVE_QUOTA_MAX_DEFICIT` | DRR deficit cap (samples)  | 128, 1..=10⁶  |
+//!
+//! The HTTP front door's own knobs (`NODAL_HTTP_*`) are documented in
+//! [`http`].
 
 pub mod batcher;
+pub mod http;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod wire;
 mod worker;
 
 pub use batcher::{BatchFormer, FlushReason, FormedBatch, Pending};
+pub use http::{HttpConfig, HttpServer};
 pub use metrics::{LatencySummary, MetricsSnapshot, ServeMetrics};
 pub use request::{
-    BatchKey, RequestStats, ResponseHandle, ServeError, SolveRequest, SolveResponse, Tolerance,
+    BatchKey, Lane, Payload, RequestStats, ResponseHandle, ServeError, SolveRequest,
+    SolveRequestBuilder, SolveResponse, Tolerance,
 };
+pub use wire::{WireVersionError, WIRE_VERSION};
 
 use crate::coordinator::pool::default_workers;
 use crate::ode::OdeFunc;
@@ -168,6 +187,13 @@ pub struct ServeConfig {
     /// admitted-but-unanswered requests may not exceed this; beyond it
     /// `submit` sheds load with [`ServeError::Overloaded`].
     pub mem_budget_bytes: usize,
+    /// QoS: deficit-round-robin credits (samples) granted per tenant per
+    /// emission visit (see [`batcher::BatchFormer::with_quota`]).
+    pub quota_quantum: usize,
+    /// QoS: cap on a tenant's accumulated DRR credits; floored at
+    /// `max(max_batch_size, quota_quantum)` by the former so a full batch
+    /// always eventually affords emission.
+    pub quota_max_deficit: usize,
 }
 
 impl Default for ServeConfig {
@@ -203,6 +229,8 @@ impl ServeConfig {
             ckpt_budget_bytes: crate::ckpt::env_budget_bytes(),
             // 0 = unlimited; nonzero parsed-and-clamped like the ckpt budget.
             mem_budget_bytes: crate::ckpt::parse_budget_env("NODAL_SERVE_MEM_BUDGET_BYTES"),
+            quota_quantum: env_clamped("NODAL_SERVE_QUOTA_QUANTUM", 32, 1, 1024),
+            quota_max_deficit: env_clamped("NODAL_SERVE_QUOTA_MAX_DEFICIT", 128, 1, 1_000_000),
         }
     }
 }
@@ -303,6 +331,8 @@ impl SolveServerBuilder {
             workers: self.cfg.workers.clamp(1, 256),
             ckpt_budget_bytes: crate::ckpt::clamp_budget(self.cfg.ckpt_budget_bytes),
             mem_budget_bytes: crate::ckpt::clamp_budget(self.cfg.mem_budget_bytes),
+            quota_quantum: self.cfg.quota_quantum.clamp(1, 1024),
+            quota_max_deficit: self.cfg.quota_max_deficit.clamp(1, 1_000_000),
         };
         let clock = self.clock.unwrap_or_else(|| Arc::new(WallClock::default()));
         let core = Arc::new(Core {
@@ -396,6 +426,13 @@ impl SolveServer {
 
     /// Validate a request against the registry; returns the dynamics' state
     /// dimension (the admission byte-charge needs it).
+    ///
+    /// Shape validation (span, tolerances, finiteness, grad/observe
+    /// exclusivity) already ran in [`SolveRequestBuilder::build`], but
+    /// requests are plain-old-data — a hand-rolled struct literal bypasses
+    /// the builder — so admission re-runs
+    /// [`SolveRequest::validate_shape`] and adds the registry-dependent
+    /// checks (dynamics existence, state dimension).
     fn validate(&self, req: &SolveRequest) -> Result<usize, ServeError> {
         let f = self
             .core
@@ -409,53 +446,7 @@ impl SolveServer {
                 req.z0.len()
             )));
         }
-        if !req.z0.iter().all(|v| v.is_finite()) {
-            return Err(ServeError::BadRequest("non-finite initial state".into()));
-        }
-        if let Some(lam) = &req.grad {
-            if lam.len() != dim {
-                return Err(ServeError::BadRequest(format!(
-                    "grad cotangent length {} != dynamics dim {dim}",
-                    lam.len()
-                )));
-            }
-            if !lam.iter().all(|v| v.is_finite()) {
-                return Err(ServeError::BadRequest("non-finite cotangent".into()));
-            }
-        }
-        if !req.t0.is_finite() || !req.t1.is_finite() {
-            return Err(ServeError::BadRequest("non-finite time span".into()));
-        }
-        // A zero-length span is an identity solve; letting it reach the
-        // solver wastes a batch slot and (before per-span batching) used to
-        // depend on engine edge-case behavior. Reject it at admission so the
-        // caller hears about the no-op immediately.
-        if req.t0 == req.t1 {
-            return Err(ServeError::BadRequest(format!(
-                "zero-length span: t0 == t1 == {}",
-                req.t0
-            )));
-        }
-        match req.tol {
-            Tolerance::Adaptive { rtol, atol } => {
-                if !req.tab.adaptive() {
-                    return Err(ServeError::BadRequest(format!(
-                        "tableau {} has no embedded error estimate; use Tolerance::Fixed",
-                        req.tab.name
-                    )));
-                }
-                if !(rtol > 0.0) || !(atol >= 0.0) {
-                    return Err(ServeError::BadRequest(format!(
-                        "bad tolerances rtol={rtol} atol={atol}"
-                    )));
-                }
-            }
-            Tolerance::Fixed { h } => {
-                if !(h > 0.0) || !h.is_finite() {
-                    return Err(ServeError::BadRequest(format!("bad fixed step h={h}")));
-                }
-            }
-        }
+        req.validate_shape()?;
         Ok(dim)
     }
 
@@ -521,7 +512,12 @@ impl Drop for SolveServer {
 
 /// The batch-former thread: pull submissions, coalesce, dispatch.
 fn batcher_loop(core: &Core) {
-    let mut former = BatchFormer::new(core.cfg.max_batch_size, core.cfg.max_queue_delay);
+    let mut former = BatchFormer::with_quota(
+        core.cfg.max_batch_size,
+        core.cfg.max_queue_delay,
+        core.cfg.quota_quantum,
+        core.cfg.quota_max_deficit,
+    );
     let mut pulled: Vec<Pending> = Vec::new();
     loop {
         // Receive before flushing. While a drain() is waiting the receive is
@@ -599,12 +595,16 @@ mod tests {
         std::env::set_var("NODAL_SERVE_QUEUE_CAP", "9999999");
         std::env::set_var("NODAL_SERVE_WORKERS", "3");
         std::env::set_var("NODAL_SERVE_MEM_BUDGET_BYTES", "12");
+        std::env::set_var("NODAL_SERVE_QUOTA_QUANTUM", "0");
+        std::env::set_var("NODAL_SERVE_QUOTA_MAX_DEFICIT", "99999999");
         let cfg = ServeConfig::from_env();
         assert_eq!(cfg.max_batch_size, 1, "zero clamps to one");
         assert_eq!(cfg.max_queue_delay, Duration::from_micros(250));
         assert_eq!(cfg.queue_capacity, 1_000_000, "cap clamps high");
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.mem_budget_bytes, 64, "nonzero budget clamps up");
+        assert_eq!(cfg.quota_quantum, 1, "zero quantum clamps to one");
+        assert_eq!(cfg.quota_max_deficit, 1_000_000, "deficit cap clamps high");
 
         std::env::set_var("NODAL_SERVE_MAX_BATCH", "not-a-number");
         std::env::set_var("NODAL_SERVE_MEM_BUDGET_BYTES", "0");
@@ -618,6 +618,8 @@ mod tests {
             "NODAL_SERVE_QUEUE_CAP",
             "NODAL_SERVE_WORKERS",
             "NODAL_SERVE_MEM_BUDGET_BYTES",
+            "NODAL_SERVE_QUOTA_QUANTUM",
+            "NODAL_SERVE_QUOTA_MAX_DEFICIT",
         ] {
             std::env::remove_var(k);
         }
@@ -627,6 +629,8 @@ mod tests {
         assert_eq!(cfg.queue_capacity, 1024);
         assert!(cfg.workers >= 1);
         assert_eq!(cfg.mem_budget_bytes, 0);
+        assert_eq!(cfg.quota_quantum, 32);
+        assert_eq!(cfg.quota_max_deficit, 128);
     }
 
     #[test]
@@ -644,21 +648,25 @@ mod tests {
     fn submit_validation_errors() {
         let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
         let err = server
-            .submit(SolveRequest::adaptive("nope", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8))
+            .submit(SolveRequest::adaptive("nope", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap())
             .unwrap_err();
         assert!(matches!(err, ServeError::UnknownDynamics(_)), "{err}");
 
         let err = server
-            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0], 1e-6, 1e-8))
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0], 1e-6, 1e-8).unwrap())
             .unwrap_err();
         assert!(matches!(err, ServeError::BadRequest(_)), "dim mismatch: {err}");
 
-        let err = server
-            .submit(SolveRequest::fixed("vdp", 0.0, 1.0, vec![1.0, 0.0], -0.1))
-            .unwrap_err();
+        // Shape errors that the builder already rejects must ALSO bounce at
+        // submit when the request is hand-mutated past the builder (the
+        // fields are pub; admission re-validates).
+        let mut bad_h = SolveRequest::fixed("vdp", 0.0, 1.0, vec![1.0, 0.0], 0.1).unwrap();
+        bad_h.tol = Tolerance::Fixed { h: -0.1 };
+        let err = server.submit(bad_h).unwrap_err();
         assert!(matches!(err, ServeError::BadRequest(_)), "negative h: {err}");
 
-        let mut bad_tab = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8);
+        let mut bad_tab =
+            SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
         bad_tab.tab = crate::ode::tableau::rk4();
         let err = server.submit(bad_tab).unwrap_err();
         assert!(matches!(err, ServeError::BadRequest(_)), "fixed tab + tol: {err}");
@@ -666,27 +674,35 @@ mod tests {
         let err = server
             .submit(
                 SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8)
+                    .unwrap()
                     .with_grad(vec![1.0]),
             )
             .unwrap_err();
         assert!(matches!(err, ServeError::BadRequest(_)), "lam mismatch: {err}");
 
+        let mut combo =
+            SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
+        combo.grad = Some(vec![1.0, 0.0]);
+        combo.observe_at = vec![0.5];
+        let err = server.submit(combo).unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "grad+observe: {err}");
+
         server.shutdown();
         let err = server
-            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8))
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap())
             .unwrap_err();
         assert_eq!(err, ServeError::ShuttingDown);
     }
 
     /// Admission bugfix: a zero-length span used to sail through validation
-    /// (t0/t1 are finite) and reach the solver. It must bounce at submit.
+    /// (t0/t1 are finite) and reach the solver. It now bounces at `build()`
+    /// — and a hand-rolled struct literal that skips the builder still
+    /// bounces at submit.
     #[test]
     fn zero_span_rejected_at_admission() {
-        let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
         for t in [0.0, 2.5, -1.0] {
-            let err = server
-                .submit(SolveRequest::adaptive("vdp", t, t, vec![1.0, 0.0], 1e-6, 1e-8))
-                .unwrap_err();
+            let err =
+                SolveRequest::adaptive("vdp", t, t, vec![1.0, 0.0], 1e-6, 1e-8).unwrap_err();
             match err {
                 ServeError::BadRequest(msg) => {
                     assert!(msg.contains("zero-length span"), "{msg}")
@@ -694,12 +710,28 @@ mod tests {
                 other => panic!("zero span must be BadRequest, got {other:?}"),
             }
         }
+        let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
+        let literal = SolveRequest {
+            dynamics: "vdp".into(),
+            t0: 2.5,
+            t1: 2.5,
+            z0: vec![1.0, 0.0],
+            tab: crate::ode::tableau::dopri5(),
+            tol: Tolerance::Adaptive { rtol: 1e-6, atol: 1e-8 },
+            grad: None,
+            observe_at: Vec::new(),
+            lane: Lane::Interactive,
+        };
+        match server.submit(literal).unwrap_err() {
+            ServeError::BadRequest(msg) => assert!(msg.contains("zero-length span"), "{msg}"),
+            other => panic!("zero span must be BadRequest, got {other:?}"),
+        }
         // Nothing was admitted: the ledger is untouched and a real request
         // still goes through.
         assert_eq!(server.inflight(), 0);
         assert_eq!(server.metrics().submitted, 0);
         let h = server
-            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1).unwrap())
             .unwrap();
         assert!(h.wait().is_ok());
     }
@@ -717,13 +749,15 @@ mod tests {
                 workers: 0,
                 ckpt_budget_bytes: 0,
                 mem_budget_bytes: 0,
+                quota_quantum: 0,
+                quota_max_deficit: 0,
             })
             .start();
         assert_eq!(server.config().workers, 1);
         assert_eq!(server.config().queue_capacity, 1);
         assert_eq!(server.config().max_batch_size, 1);
         let h = server
-            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1).unwrap())
             .unwrap();
         assert!(h.wait().is_ok(), "clamped server must still serve");
     }
@@ -733,7 +767,7 @@ mod tests {
     /// second with `Overloaded`, and admits again once the first completes.
     #[test]
     fn mem_budget_sheds_load_by_projected_bytes() {
-        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1);
+        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1).unwrap();
         // Fixed-step projection for dim 2: exact ⌈0.5/0.1⌉+1 = 6 steps of
         // states + spine (a few hundred bytes), not the adaptive
         // max_steps bound.
@@ -750,6 +784,8 @@ mod tests {
                 workers: 1,
                 ckpt_budget_bytes: 0,
                 mem_budget_bytes: one, // exactly one request's projection
+                quota_quantum: 32,
+                quota_max_deficit: 128,
             })
             .start();
         let h1 = server.submit(req()).unwrap();
@@ -771,7 +807,8 @@ mod tests {
     /// concurrent requests and sheds the fourth.
     #[test]
     fn ckpt_budget_caps_admission_charge() {
-        let req = || SolveRequest::adaptive("vdp", 0.0, 0.5, vec![1.0, 0.0], 1e-6, 1e-8);
+        let req =
+            || SolveRequest::adaptive("vdp", 0.0, 0.5, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
         let capped = req().projected_ckpt_bytes(2, 4096);
         let uncapped = req().projected_ckpt_bytes(2, 0);
         assert!(capped < uncapped, "the ckpt budget must shrink the admission charge");
@@ -786,6 +823,8 @@ mod tests {
                 workers: 1,
                 ckpt_budget_bytes: 4096,
                 mem_budget_bytes: 3 * capped,
+                quota_quantum: 32,
+                quota_max_deficit: 128,
             })
             .start();
         let hs: Vec<_> = (0..3).map(|_| server.submit(req()).unwrap()).collect();
@@ -815,9 +854,11 @@ mod tests {
                 workers: 1,
                 ckpt_budget_bytes: 0,
                 mem_budget_bytes: 64, // below any request's charge
+                quota_quantum: 32,
+                quota_max_deficit: 128,
             })
             .start();
-        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1);
+        let req = || SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1).unwrap();
         let h1 = server.submit(req()).expect("idle server must admit one request");
         assert_eq!(server.submit(req()).unwrap_err(), ServeError::Overloaded);
         server.drain();
@@ -829,10 +870,10 @@ mod tests {
     fn smoke_submit_and_wait() {
         let server = SolveServer::builder().register("vdp", VanDerPol::new(0.5)).start();
         let h = server
-            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8))
+            .submit(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8).unwrap())
             .unwrap();
         let resp = h.wait().unwrap();
-        assert_eq!(resp.z_t1.len(), 2);
+        assert_eq!(resp.z_t1().len(), 2);
         assert!(resp.stats.nfe > 0);
         assert!(resp.stats.batch_size >= 1);
         // `wait` can return between the slot fulfillment and the admission
@@ -862,6 +903,8 @@ mod tests {
                 workers: 2,
                 ckpt_budget_bytes: 0,
                 mem_budget_bytes: 0,
+                quota_quantum: 32,
+                quota_max_deficit: 128,
             })
             .start();
         // Three distinct batch keys, interleaved, so the drain has to
@@ -873,13 +916,13 @@ mod tests {
                 1 => SolveRequest::adaptive("vdp", 0.0, 0.5, vec![0.5, 0.1], 1e-5, 1e-8),
                 _ => SolveRequest::fixed("vdp", 0.0, 0.5, vec![2.0, 0.0], 0.1),
             };
-            handles.push(server.submit(req).unwrap());
+            handles.push(server.submit(req.unwrap()).unwrap());
         }
         assert_eq!(server.inflight(), 10, "all ten admitted, none answered yet");
         server.shutdown();
         for (i, h) in handles.into_iter().enumerate() {
             let resp = h.wait().unwrap_or_else(|e| panic!("request {i} dropped: {e}"));
-            assert_eq!(resp.z_t1.len(), 2);
+            assert_eq!(resp.z_t1().len(), 2);
         }
         assert_eq!(server.inflight(), 0);
         let m = server.metrics();
@@ -889,7 +932,7 @@ mod tests {
         assert_eq!(m.rejected, 0);
         // Post-shutdown submissions bounce cleanly.
         let err = server
-            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1))
+            .submit(SolveRequest::fixed("vdp", 0.0, 0.5, vec![1.0, 0.0], 0.1).unwrap())
             .unwrap_err();
         assert_eq!(err, ServeError::ShuttingDown);
     }

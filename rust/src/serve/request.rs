@@ -2,20 +2,28 @@
 //!
 //! A [`SolveRequest`] names a registered dynamics, one initial state, a
 //! t-span, a solver tableau, and a tolerance; optionally it carries a
-//! terminal cotangent `dL/dz(T)` to request the batched ACA backward pass.
-//! Requests that agree on everything except the initial state **and the
-//! span `[t0, t1]`** (same [`BatchKey`]) can share one
-//! [`crate::ode::integrate_batch_tspans`] call — the engine's per-sample
-//! adaptive step control and fully per-sample spans guarantee the
-//! co-batched results are the ones each request would have gotten alone.
-//! The key pins only the integration direction (same-sign spans, a
-//! scheduling-locality choice); where each sample *starts* and *stops* is
-//! free per request.
+//! terminal cotangent `dL/dz(T)` to request the batched ACA backward pass,
+//! **or** a dense-output observation grid `observe_at` to request the
+//! interpolated trajectory at client-chosen times. Requests that agree on
+//! everything except the initial state **and the span `[t0, t1]`** (same
+//! [`BatchKey`]) can share one [`crate::ode::integrate_batch_tspans`] call —
+//! the engine's per-sample adaptive step control and fully per-sample spans
+//! guarantee the co-batched results are the ones each request would have
+//! gotten alone. The key pins only the integration direction (same-sign
+//! spans, a scheduling-locality choice); where each sample *starts* and
+//! *stops* is free per request.
+//!
+//! Construction goes through the typed builder ([`SolveRequest::builder`]):
+//! validation — span, tolerances, state finiteness, grid finiteness — runs
+//! in [`SolveRequestBuilder::build`], so a malformed request fails at
+//! construction instead of deep inside a worker. The [`SolveRequest::adaptive`]
+//! / [`SolveRequest::fixed`] constructors are thin wrappers over the builder.
+//!
+//! Wire codecs for these types live in [`super::wire`].
 
 use crate::grad::GradResult;
 use crate::ode::integrate::IntegrateOpts;
 use crate::ode::tableau::Tableau;
-use crate::util::json::{f32_bits, f32s_from_bits, obj, Json};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -26,6 +34,37 @@ pub enum Tolerance {
     Adaptive { rtol: f64, atol: f64 },
     /// Fixed step size `h > 0`.
     Fixed { h: f64 },
+}
+
+/// QoS priority lane of one request. Lanes are part of the [`BatchKey`]
+/// (batches never mix lanes) and the batch former always emits every ready
+/// interactive batch before any batch-lane one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Lane {
+    /// Latency-sensitive traffic: emitted first.
+    #[default]
+    Interactive,
+    /// Throughput traffic: emitted after the interactive lane.
+    Batch,
+}
+
+impl Lane {
+    /// Wire name of the lane (see [`super::wire`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+        }
+    }
+
+    /// Inverse of [`Lane::as_str`].
+    pub fn from_name(s: &str) -> Option<Lane> {
+        match s {
+            "interactive" => Some(Lane::Interactive),
+            "batch" => Some(Lane::Batch),
+            _ => None,
+        }
+    }
 }
 
 /// One solve submitted to the server: a single sample (`z0.len() == dim`).
@@ -45,39 +84,249 @@ pub struct SolveRequest {
     /// `Some(dL/dz(T))` requests the batched ACA backward pass; length must
     /// equal `dim()`.
     pub grad: Option<Vec<f32>>,
+    /// Non-empty requests dense output: the worker evaluates the stored
+    /// interpolant ([`crate::ode::DenseOutput`]) at each grid point,
+    /// bit-equal to a direct solve. Points outside the span clamp to the
+    /// nearest endpoint (the interpolant's own clamping rule). Mutually
+    /// exclusive with `grad`.
+    pub observe_at: Vec<f64>,
+    /// QoS priority lane (see [`Lane`]).
+    pub lane: Lane,
+}
+
+/// Typed builder for [`SolveRequest`]; all validation happens in
+/// [`SolveRequestBuilder::build`].
+///
+/// ```
+/// use rust_pallas::serve::{Lane, SolveRequest};
+/// let req = SolveRequest::builder("vdp")
+///     .span(0.0, 5.0)
+///     .state(vec![2.0, 0.0])
+///     .adaptive(1e-6, 1e-8)
+///     .observe_at(vec![1.0, 2.5, 4.0])
+///     .priority(Lane::Interactive)
+///     .build()
+///     .unwrap();
+/// assert_eq!(req.observe_at.len(), 3);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SolveRequestBuilder {
+    dynamics: String,
+    t0: f64,
+    t1: f64,
+    z0: Vec<f32>,
+    tab: Option<&'static Tableau>,
+    tol: Option<Tolerance>,
+    grad: Option<Vec<f32>>,
+    observe_at: Vec<f64>,
+    lane: Lane,
+}
+
+impl SolveRequestBuilder {
+    /// Integration span `[t0, t1]` (backward spans `t1 < t0` are legal).
+    pub fn span(mut self, t0: f64, t1: f64) -> Self {
+        self.t0 = t0;
+        self.t1 = t1;
+        self
+    }
+
+    /// Initial state `z(t0)`.
+    pub fn state(mut self, z0: Vec<f32>) -> Self {
+        self.z0 = z0;
+        self
+    }
+
+    /// Adaptive stepping at `(rtol, atol)`; the tableau defaults to dopri5
+    /// unless [`SolveRequestBuilder::tableau`] overrides it.
+    pub fn adaptive(mut self, rtol: f64, atol: f64) -> Self {
+        self.tol = Some(Tolerance::Adaptive { rtol, atol });
+        self
+    }
+
+    /// Fixed stepping at `h`; the tableau defaults to rk4 unless
+    /// [`SolveRequestBuilder::tableau`] overrides it.
+    pub fn fixed(mut self, h: f64) -> Self {
+        self.tol = Some(Tolerance::Fixed { h });
+        self
+    }
+
+    /// Override the solver tableau (adaptive tolerances require a tableau
+    /// with an embedded error estimate — checked in `build`).
+    pub fn tableau(mut self, tab: &'static Tableau) -> Self {
+        self.tab = Some(tab);
+        self
+    }
+
+    /// Attach a terminal cotangent `dL/dz(T)`, requesting the batched ACA
+    /// backward pass. Mutually exclusive with `observe_at`.
+    pub fn grad(mut self, lam_t1: Vec<f32>) -> Self {
+        self.grad = Some(lam_t1);
+        self
+    }
+
+    /// Request dense output at these times (see
+    /// [`SolveRequest::observe_at`]).
+    pub fn observe_at(mut self, ts: Vec<f64>) -> Self {
+        self.observe_at = ts;
+        self
+    }
+
+    /// QoS priority lane (defaults to [`Lane::Interactive`]).
+    pub fn priority(mut self, lane: Lane) -> Self {
+        self.lane = lane;
+        self
+    }
+
+    /// Validate and construct the request. Every shape error — missing or
+    /// non-positive step policy, non-finite or zero-length span, non-finite
+    /// state / cotangent / grid, adaptive tolerances on a fixed-step-only
+    /// tableau, grad+observe combination — is rejected **here**, not at
+    /// admission and not deep inside a worker.
+    pub fn build(self) -> Result<SolveRequest, ServeError> {
+        let tol = self.tol.ok_or_else(|| {
+            ServeError::BadRequest(
+                "no step-size policy: call .adaptive(rtol, atol) or .fixed(h)".into(),
+            )
+        })?;
+        let tab = self.tab.unwrap_or_else(|| match tol {
+            Tolerance::Adaptive { .. } => crate::ode::tableau::dopri5(),
+            Tolerance::Fixed { .. } => crate::ode::tableau::rk4(),
+        });
+        let req = SolveRequest {
+            dynamics: self.dynamics,
+            t0: self.t0,
+            t1: self.t1,
+            z0: self.z0,
+            tab,
+            tol,
+            grad: self.grad,
+            observe_at: self.observe_at,
+            lane: self.lane,
+        };
+        req.validate_shape()?;
+        Ok(req)
+    }
 }
 
 impl SolveRequest {
-    /// Forward-only request with adaptive tolerances and dopri5.
-    pub fn adaptive(dynamics: &str, t0: f64, t1: f64, z0: Vec<f32>, rtol: f64, atol: f64) -> Self {
-        SolveRequest {
+    /// Start building a request for the dynamics registered under
+    /// `dynamics` (see [`SolveRequestBuilder`]).
+    pub fn builder(dynamics: &str) -> SolveRequestBuilder {
+        SolveRequestBuilder {
             dynamics: dynamics.to_string(),
-            t0,
-            t1,
-            z0,
-            tab: crate::ode::tableau::dopri5(),
-            tol: Tolerance::Adaptive { rtol, atol },
+            t0: 0.0,
+            t1: 0.0,
+            z0: Vec::new(),
+            tab: None,
+            tol: None,
             grad: None,
+            observe_at: Vec::new(),
+            lane: Lane::Interactive,
         }
     }
 
-    /// Forward-only fixed-step request.
-    pub fn fixed(dynamics: &str, t0: f64, t1: f64, z0: Vec<f32>, h: f64) -> Self {
-        SolveRequest {
-            dynamics: dynamics.to_string(),
-            t0,
-            t1,
-            z0,
-            tab: crate::ode::tableau::rk4(),
-            tol: Tolerance::Fixed { h },
-            grad: None,
-        }
+    /// Forward-only request with adaptive tolerances and dopri5 — a thin
+    /// wrapper over [`SolveRequest::builder`]; fails like
+    /// [`SolveRequestBuilder::build`] does (bad tolerances, bad span, …).
+    pub fn adaptive(
+        dynamics: &str,
+        t0: f64,
+        t1: f64,
+        z0: Vec<f32>,
+        rtol: f64,
+        atol: f64,
+    ) -> Result<SolveRequest, ServeError> {
+        SolveRequest::builder(dynamics).span(t0, t1).state(z0).adaptive(rtol, atol).build()
+    }
+
+    /// Forward-only fixed-step request — a thin wrapper over
+    /// [`SolveRequest::builder`]; fails like [`SolveRequestBuilder::build`]
+    /// does (non-finite or non-positive `h`, bad span, …).
+    pub fn fixed(
+        dynamics: &str,
+        t0: f64,
+        t1: f64,
+        z0: Vec<f32>,
+        h: f64,
+    ) -> Result<SolveRequest, ServeError> {
+        SolveRequest::builder(dynamics).span(t0, t1).state(z0).fixed(h).build()
     }
 
     /// Attach a terminal cotangent, turning this into a gradient request.
+    /// (Post-build mutation: the server re-validates shape at admission, so
+    /// a mismatched cotangent still bounces before any queuing.)
     pub fn with_grad(mut self, lam_t1: Vec<f32>) -> Self {
         self.grad = Some(lam_t1);
         self
+    }
+
+    /// Shape validation shared by [`SolveRequestBuilder::build`] and the
+    /// server's admission check (requests are plain-old-data, so admission
+    /// re-validates against hand-rolled struct literals). Everything here is
+    /// registry-independent; the server additionally checks the dynamics
+    /// exists and `z0.len() == dim()`.
+    pub(crate) fn validate_shape(&self) -> Result<(), ServeError> {
+        if !self.t0.is_finite() || !self.t1.is_finite() {
+            return Err(ServeError::BadRequest("non-finite time span".into()));
+        }
+        // A zero-length span is an identity solve; letting it reach the
+        // solver wastes a batch slot and (before per-span batching) used to
+        // depend on engine edge-case behavior. Reject it at construction so
+        // the caller hears about the no-op immediately.
+        if self.t0 == self.t1 {
+            return Err(ServeError::BadRequest(format!(
+                "zero-length span: t0 == t1 == {}",
+                self.t0
+            )));
+        }
+        if self.z0.is_empty() {
+            return Err(ServeError::BadRequest("empty initial state".into()));
+        }
+        if !self.z0.iter().all(|v| v.is_finite()) {
+            return Err(ServeError::BadRequest("non-finite initial state".into()));
+        }
+        match self.tol {
+            Tolerance::Adaptive { rtol, atol } => {
+                if !self.tab.adaptive() {
+                    return Err(ServeError::BadRequest(format!(
+                        "tableau {} has no embedded error estimate; use Tolerance::Fixed",
+                        self.tab.name
+                    )));
+                }
+                // `!(x > 0.0)` is NaN-safe: NaN fails every comparison.
+                if !(rtol > 0.0) || !rtol.is_finite() || !(atol >= 0.0) || !atol.is_finite() {
+                    return Err(ServeError::BadRequest(format!(
+                        "bad tolerances rtol={rtol} atol={atol}"
+                    )));
+                }
+            }
+            Tolerance::Fixed { h } => {
+                if !(h > 0.0) || !h.is_finite() {
+                    return Err(ServeError::BadRequest(format!("bad fixed step h={h}")));
+                }
+            }
+        }
+        if let Some(lam) = &self.grad {
+            if lam.len() != self.z0.len() {
+                return Err(ServeError::BadRequest(format!(
+                    "grad cotangent length {} != state length {}",
+                    lam.len(),
+                    self.z0.len()
+                )));
+            }
+            if !lam.iter().all(|v| v.is_finite()) {
+                return Err(ServeError::BadRequest("non-finite cotangent".into()));
+            }
+        }
+        if !self.observe_at.iter().all(|t| t.is_finite()) {
+            return Err(ServeError::BadRequest("non-finite observation time".into()));
+        }
+        if self.grad.is_some() && !self.observe_at.is_empty() {
+            return Err(ServeError::BadRequest(
+                "gradient and dense-output observation are mutually exclusive".into(),
+            ));
+        }
+        Ok(())
     }
 
     /// The solver options this request maps to.
@@ -107,6 +356,8 @@ impl SolveRequest {
             tol_a,
             tol_b,
             wants_grad: self.grad.is_some(),
+            wants_obs: !self.observe_at.is_empty(),
+            lane: self.lane,
         }
     }
 
@@ -115,14 +366,19 @@ impl SolveRequest {
     /// state part (one f32 state per accepted step, capped by the
     /// per-sample checkpoint budget when one is configured) **plus** the
     /// trajectory spine (`ts`/`hs`/`errs` f64s — kept dense under every
-    /// policy, so it is never capped). The admission controller sums this
-    /// over admitted-unanswered requests.
+    /// policy, so it is never capped), **plus** the observation buffer for
+    /// dense-output requests (one f32 state and one f64 time per grid
+    /// point). The admission controller sums this over admitted-unanswered
+    /// requests.
     ///
     /// The step bound is exact for fixed-step requests (`⌈span/h⌉`, plus
     /// one for the clamped final step) and `max_steps` for adaptive ones.
     /// Gradient requests are **not** budget-capped: their backward pass
     /// additionally buffers one replay segment (up to the thinned-away
     /// states of a segment), so the dense bound is the honest charge.
+    /// Dense-output requests are not capped either: interpolation needs
+    /// every knot, so the worker runs them under dense storage regardless
+    /// of the per-sample budget.
     ///
     /// [`Trajectory::checkpoint_bytes`]: crate::ode::Trajectory::checkpoint_bytes
     pub fn projected_ckpt_bytes(&self, dim: usize, ckpt_budget_bytes: usize) -> usize {
@@ -138,29 +394,38 @@ impl SolveRequest {
             .saturating_add(1)
             .saturating_mul(dim)
             .saturating_mul(std::mem::size_of::<f32>());
-        let states = if ckpt_budget_bytes > 0 && self.grad.is_none() {
-            // A Budgeted store never holds fewer than 2 anchors (the
-            // initial state and the tail), so the effective cap has that
-            // floor — charging below it would under-count what the worker
-            // actually pins.
-            states.min(ckpt_budget_bytes.max(2 * dim * std::mem::size_of::<f32>()))
-        } else {
-            states
-        };
+        let states =
+            if ckpt_budget_bytes > 0 && self.grad.is_none() && self.observe_at.is_empty() {
+                // A Budgeted store never holds fewer than 2 anchors (the
+                // initial state and the tail), so the effective cap has that
+                // floor — charging below it would under-count what the worker
+                // actually pins.
+                states.min(ckpt_budget_bytes.max(2 * dim * std::mem::size_of::<f32>()))
+            } else {
+                states
+            };
         // Spine: (steps + 1) ts + steps hs + steps errs, all f64 (serve
         // requests never record trials).
         let spine =
             steps.saturating_mul(3).saturating_add(1).saturating_mul(std::mem::size_of::<f64>());
-        states.saturating_add(spine)
+        // Observation buffer: one interpolated f32 state plus the f64 grid
+        // point per observation time.
+        let obs = self.observe_at.len().saturating_mul(
+            dim.saturating_mul(std::mem::size_of::<f32>())
+                .saturating_add(std::mem::size_of::<f64>()),
+        );
+        states.saturating_add(spine).saturating_add(obs)
     }
 }
 
 /// What makes two requests co-batchable: same dynamics, solver, integration
-/// direction and tolerance bits, and the same gradient flag (a batch either
-/// runs the backward pass for all its samples or for none). The span is
-/// free per request: the engine integrates each co-batched sample over its
-/// own `[t0, t1]` ([`crate::ode::integrate_batch_tspans`]), entering the
-/// shared stage sweeps at its own start and retiring at its own endpoint.
+/// direction and tolerance bits, the same gradient flag (a batch either
+/// runs the backward pass for all its samples or for none), the same
+/// dense-output flag (observation batches run under dense checkpoint
+/// storage), and the same QoS lane. The span is free per request: the
+/// engine integrates each co-batched sample over its own `[t0, t1]`
+/// ([`crate::ode::integrate_batch_tspans`]), entering the shared stage
+/// sweeps at its own start and retiring at its own endpoint.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub dynamics: String,
@@ -172,6 +437,11 @@ pub struct BatchKey {
     pub tol_a: u64,
     pub tol_b: u64,
     pub wants_grad: bool,
+    /// True for dense-output batches — they force dense checkpoint storage,
+    /// so they never mix with budget-thinned forward traffic.
+    pub wants_obs: bool,
+    /// QoS lane; batches never mix lanes.
+    pub lane: Lane,
 }
 
 /// Per-request timing and solver-cost report.
@@ -195,15 +465,55 @@ pub struct RequestStats {
     pub service: Duration,
 }
 
+/// What one answered request carries: exactly one of the three request
+/// classes, with no `Option` stacking — a forward solve is not "a gradient
+/// response with `None` gradients".
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Forward-only solve: the final state.
+    Forward { z_t1: Vec<f32> },
+    /// Gradient solve: the final state plus the ACA backward result.
+    Gradient { z_t1: Vec<f32>, grad: GradResult },
+    /// Dense-output solve: the final state plus the interpolant evaluated
+    /// at each requested `observe_at` point, in request order.
+    Observed { z_t1: Vec<f32>, zs: Vec<Vec<f32>> },
+}
+
 /// The server's answer to one [`SolveRequest`].
 #[derive(Debug, Clone)]
 pub struct SolveResponse {
-    /// Final state `z(t1)`.
-    pub z_t1: Vec<f32>,
-    /// `Some` iff the request asked for gradients.
-    pub grad: Option<GradResult>,
+    /// The class-specific payload (see [`Payload`]).
+    pub payload: Payload,
     /// Timing and solver-cost bookkeeping.
     pub stats: RequestStats,
+}
+
+impl SolveResponse {
+    /// Final state `z(t1)` — present in every payload class.
+    pub fn z_t1(&self) -> &[f32] {
+        match &self.payload {
+            Payload::Forward { z_t1 }
+            | Payload::Gradient { z_t1, .. }
+            | Payload::Observed { z_t1, .. } => z_t1,
+        }
+    }
+
+    /// The ACA backward result, iff this answered a gradient request.
+    pub fn grad(&self) -> Option<&GradResult> {
+        match &self.payload {
+            Payload::Gradient { grad, .. } => Some(grad),
+            _ => None,
+        }
+    }
+
+    /// The interpolated states (one per `observe_at` point, in request
+    /// order), iff this answered a dense-output request.
+    pub fn observations(&self) -> Option<&[Vec<f32>]> {
+        match &self.payload {
+            Payload::Observed { zs, .. } => Some(zs),
+            _ => None,
+        }
+    }
 }
 
 /// Why the server refused or failed a request.
@@ -234,180 +544,6 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
-
-// ---------------------------------------------------------------------------
-// Wire codecs (used by `dist::shard` / `dist::dispatch` to ship requests and
-// responses between processes). Float *state* payloads (`z0`, `lam`,
-// `z_t1`, gradients) travel as f32 bit patterns so answers cross the wire
-// bit-exactly; f64 *scalars* (spans, tolerances) ride as plain JSON numbers
-// — the writer emits the shortest round-tripping form, which is bit-exact
-// for every finite value, and non-finite spans/tolerances are rejected by
-// request validation anyway.
-
-impl SolveRequest {
-    pub fn to_json(&self) -> Json {
-        let (kind, a, b) = match self.tol {
-            Tolerance::Adaptive { rtol, atol } => ("adaptive", rtol, atol),
-            Tolerance::Fixed { h } => ("fixed", h, 0.0),
-        };
-        let mut pairs = vec![
-            ("dynamics", self.dynamics.as_str().into()),
-            ("t0", self.t0.into()),
-            ("t1", self.t1.into()),
-            ("z0", f32_bits(&self.z0)),
-            ("tab", self.tab.name.into()),
-            ("tol_kind", kind.into()),
-            ("tol_a", a.into()),
-            ("tol_b", b.into()),
-        ];
-        if let Some(lam) = &self.grad {
-            pairs.push(("lam", f32_bits(lam)));
-        }
-        obj(pairs)
-    }
-
-    pub fn from_json(v: &Json) -> anyhow::Result<SolveRequest> {
-        let tab_name = v.get("tab")?.as_str()?;
-        let tab = crate::ode::tableau::by_name(tab_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown tableau '{tab_name}'"))?;
-        let tol = match v.get("tol_kind")?.as_str()? {
-            "adaptive" => Tolerance::Adaptive {
-                rtol: v.get("tol_a")?.as_f64()?,
-                atol: v.get("tol_b")?.as_f64()?,
-            },
-            "fixed" => Tolerance::Fixed { h: v.get("tol_a")?.as_f64()? },
-            k => anyhow::bail!("unknown tolerance kind '{k}'"),
-        };
-        let grad = match v.opt("lam") {
-            Some(l) => Some(f32s_from_bits(l)?),
-            None => None,
-        };
-        Ok(SolveRequest {
-            dynamics: v.get("dynamics")?.as_str()?.to_string(),
-            t0: v.get("t0")?.as_f64()?,
-            t1: v.get("t1")?.as_f64()?,
-            z0: f32s_from_bits(v.get("z0")?)?,
-            tab,
-            tol,
-            grad,
-        })
-    }
-}
-
-fn duration_from_ns(v: &Json) -> anyhow::Result<Duration> {
-    let n = v.as_f64()?;
-    anyhow::ensure!(n.is_finite() && n >= 0.0, "bad duration: {n}");
-    Ok(Duration::from_nanos(n as u64))
-}
-
-fn stats_to_json(s: &RequestStats) -> Json {
-    obj(vec![
-        ("steps", s.steps.into()),
-        ("nfe", s.nfe.into()),
-        ("n_rejected", s.n_rejected.into()),
-        ("avg_m", s.avg_m.into()),
-        ("checkpoint_bytes", s.checkpoint_bytes.into()),
-        ("batch_size", s.batch_size.into()),
-        ("queue_wait_ns", (s.queue_wait.as_nanos() as f64).into()),
-        ("service_ns", (s.service.as_nanos() as f64).into()),
-    ])
-}
-
-fn stats_from_json(v: &Json) -> anyhow::Result<RequestStats> {
-    Ok(RequestStats {
-        steps: v.get("steps")?.as_usize()?,
-        nfe: v.get("nfe")?.as_usize()?,
-        n_rejected: v.get("n_rejected")?.as_usize()?,
-        avg_m: v.get("avg_m")?.as_f64()?,
-        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
-        batch_size: v.get("batch_size")?.as_usize()?,
-        queue_wait: duration_from_ns(v.get("queue_wait_ns")?)?,
-        service: duration_from_ns(v.get("service_ns")?)?,
-    })
-}
-
-fn meter_to_json(m: &crate::grad::CostMeter) -> Json {
-    obj(vec![
-        ("nfe_forward", m.nfe_forward.into()),
-        ("nfe_backward", m.nfe_backward.into()),
-        ("nfe_replay", m.nfe_replay.into()),
-        ("replay_peak_bytes", m.replay_peak_bytes.into()),
-        ("vjp_calls", m.vjp_calls.into()),
-        ("checkpoint_bytes", m.checkpoint_bytes.into()),
-        ("graph_depth", m.graph_depth.into()),
-        ("n_steps", m.n_steps.into()),
-        ("n_rejected", m.n_rejected.into()),
-        ("n_reverse_steps", m.n_reverse_steps.into()),
-    ])
-}
-
-fn meter_from_json(v: &Json) -> anyhow::Result<crate::grad::CostMeter> {
-    Ok(crate::grad::CostMeter {
-        nfe_forward: v.get("nfe_forward")?.as_usize()?,
-        nfe_backward: v.get("nfe_backward")?.as_usize()?,
-        nfe_replay: v.get("nfe_replay")?.as_usize()?,
-        replay_peak_bytes: v.get("replay_peak_bytes")?.as_usize()?,
-        vjp_calls: v.get("vjp_calls")?.as_usize()?,
-        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
-        graph_depth: v.get("graph_depth")?.as_usize()?,
-        n_steps: v.get("n_steps")?.as_usize()?,
-        n_rejected: v.get("n_rejected")?.as_usize()?,
-        n_reverse_steps: v.get("n_reverse_steps")?.as_usize()?,
-    })
-}
-
-impl SolveResponse {
-    pub fn to_json(&self) -> Json {
-        let mut pairs = vec![("z_t1", f32_bits(&self.z_t1)), ("stats", stats_to_json(&self.stats))];
-        if let Some(g) = &self.grad {
-            pairs.push(("dl_dz0", f32_bits(&g.dl_dz0)));
-            pairs.push(("dl_dtheta", f32_bits(&g.dl_dtheta)));
-            pairs.push(("meter", meter_to_json(&g.meter)));
-        }
-        obj(pairs)
-    }
-
-    pub fn from_json(v: &Json) -> anyhow::Result<SolveResponse> {
-        let grad = match v.opt("dl_dz0") {
-            Some(z) => Some(GradResult {
-                dl_dz0: f32s_from_bits(z)?,
-                dl_dtheta: f32s_from_bits(v.get("dl_dtheta")?)?,
-                meter: meter_from_json(v.get("meter")?)?,
-            }),
-            None => None,
-        };
-        Ok(SolveResponse {
-            z_t1: f32s_from_bits(v.get("z_t1")?)?,
-            grad,
-            stats: stats_from_json(v.get("stats")?)?,
-        })
-    }
-}
-
-impl ServeError {
-    pub fn to_json(&self) -> Json {
-        let (kind, msg) = match self {
-            ServeError::Overloaded => ("overloaded", ""),
-            ServeError::ShuttingDown => ("shutting_down", ""),
-            ServeError::UnknownDynamics(id) => ("unknown_dynamics", id.as_str()),
-            ServeError::BadRequest(m) => ("bad_request", m.as_str()),
-            ServeError::Solver(m) => ("solver", m.as_str()),
-        };
-        obj(vec![("kind", kind.into()), ("msg", msg.into())])
-    }
-
-    pub fn from_json(v: &Json) -> anyhow::Result<ServeError> {
-        let msg = v.get("msg")?.as_str()?.to_string();
-        Ok(match v.get("kind")?.as_str()? {
-            "overloaded" => ServeError::Overloaded,
-            "shutting_down" => ServeError::ShuttingDown,
-            "unknown_dynamics" => ServeError::UnknownDynamics(msg),
-            "bad_request" => ServeError::BadRequest(msg),
-            "solver" => ServeError::Solver(msg),
-            k => anyhow::bail!("unknown error kind '{k}'"),
-        })
-    }
-}
 
 /// One-shot completion slot shared between a request's handle and the worker
 /// that eventually serves it.
@@ -480,7 +616,7 @@ mod tests {
     use super::*;
 
     fn req() -> SolveRequest {
-        SolveRequest::adaptive("vdp", 0.0, 5.0, vec![2.0, 0.0], 1e-6, 1e-8)
+        SolveRequest::adaptive("vdp", 0.0, 5.0, vec![2.0, 0.0], 1e-6, 1e-8).unwrap()
     }
 
     #[test]
@@ -524,14 +660,20 @@ mod tests {
         let mut other = req();
         other.dynamics = "linear".into();
         assert_ne!(base.batch_key(), other.batch_key(), "dynamics");
+        let mut other = req();
+        other.observe_at = vec![1.0, 2.0];
+        assert_ne!(base.batch_key(), other.batch_key(), "dense-output flag");
+        let mut other = req();
+        other.lane = Lane::Batch;
+        assert_ne!(base.batch_key(), other.batch_key(), "lane");
     }
 
     /// Projected checkpoint footprint: per-step state bytes (capped by the
     /// per-sample checkpoint budget for forward-only requests) plus the
     /// dense spine — the spine is never thinned, so the cap must not erase
     /// it; fixed-step requests project their exact step count instead of
-    /// the `max_steps` upper bound; gradient requests stay uncapped (their
-    /// replay cache can transiently reach the dense footprint).
+    /// the `max_steps` upper bound; gradient and dense-output requests stay
+    /// uncapped (the replay cache / interpolant needs the dense footprint).
     #[test]
     fn projected_bytes_upper_bound_and_budget_cap() {
         let r = req(); // adaptive → default max_steps = 100_000 bound
@@ -550,16 +692,176 @@ mod tests {
 
         // Fixed step over [0, 5] with h = 0.5: exactly 10 steps (+1 for the
         // final-step clamp margin) instead of the max_steps bound.
-        let f = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.5);
+        let f = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.5).unwrap();
         assert_eq!(f.projected_ckpt_bytes(2, 0), 12 * 2 * 4 + (3 * 11 + 1) * 8);
+
+        // Dense-output request: the observation buffer is charged on top
+        // (one f32 state + one f64 time per grid point), and the per-sample
+        // budget no longer caps the state part — interpolation pins every
+        // knot.
+        let mut o = req();
+        o.observe_at = vec![1.0, 2.0, 3.0];
+        let obs = 3 * (2 * 4 + 8);
+        assert_eq!(o.projected_ckpt_bytes(2, 0), 100_001 * 2 * 4 + spine + obs);
+        assert_eq!(
+            o.projected_ckpt_bytes(2, 4096),
+            100_001 * 2 * 4 + spine + obs,
+            "dense-output requests run dense: the ckpt budget must not cap the charge"
+        );
     }
 
     #[test]
     fn fixed_vs_adaptive_keys_differ() {
-        let a = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.01);
+        let a = SolveRequest::fixed("vdp", 0.0, 5.0, vec![2.0, 0.0], 0.01).unwrap();
         let mut b = req();
         b.tab = a.tab;
         assert_ne!(a.batch_key(), b.batch_key());
+    }
+
+    #[test]
+    fn builder_matches_thin_wrappers() {
+        let a = SolveRequest::builder("vdp")
+            .span(0.0, 5.0)
+            .state(vec![2.0, 0.0])
+            .adaptive(1e-6, 1e-8)
+            .build()
+            .unwrap();
+        let b = req();
+        assert_eq!(a.batch_key(), b.batch_key());
+        assert_eq!(a.z0, b.z0);
+        assert_eq!(a.lane, Lane::Interactive, "default lane is interactive");
+        assert!(a.observe_at.is_empty());
+
+        let f = SolveRequest::builder("vdp")
+            .span(0.0, 5.0)
+            .state(vec![2.0, 0.0])
+            .fixed(0.5)
+            .build()
+            .unwrap();
+        assert_eq!(f.tab.name, "rk4", "fixed defaults to rk4");
+        assert_eq!(f.tol, Tolerance::Fixed { h: 0.5 });
+
+        let o = SolveRequest::builder("vdp")
+            .span(0.0, 5.0)
+            .state(vec![2.0, 0.0])
+            .adaptive(1e-6, 1e-8)
+            .observe_at(vec![1.0, 2.5])
+            .priority(Lane::Batch)
+            .build()
+            .unwrap();
+        assert_eq!(o.lane, Lane::Batch);
+        assert!(o.batch_key().wants_obs);
+    }
+
+    /// Satellite bugfix: the old ctors silently accepted non-finite / zero
+    /// `h` / `rtol` / `atol` and deferred the failure deep into the worker.
+    /// One case per bad-input class, all rejected at `build()`.
+    #[test]
+    fn build_rejects_bad_step_policy() {
+        let base = || SolveRequest::builder("vdp").span(0.0, 1.0).state(vec![1.0, 0.0]);
+        for h in [0.0, -0.1, f64::NAN, f64::INFINITY] {
+            let err = base().fixed(h).build().unwrap_err();
+            assert!(matches!(err, ServeError::BadRequest(_)), "h={h}: {err}");
+        }
+        for (rtol, atol) in [
+            (0.0, 1e-8),
+            (-1e-6, 1e-8),
+            (f64::NAN, 1e-8),
+            (f64::INFINITY, 1e-8),
+            (1e-6, -1e-8),
+            (1e-6, f64::NAN),
+            (1e-6, f64::INFINITY),
+        ] {
+            let err = base().adaptive(rtol, atol).build().unwrap_err();
+            assert!(
+                matches!(err, ServeError::BadRequest(_)),
+                "rtol={rtol} atol={atol}: {err}"
+            );
+        }
+        // The thin wrappers reject the same inputs (they delegate to build).
+        assert!(SolveRequest::fixed("vdp", 0.0, 1.0, vec![1.0, 0.0], f64::NAN).is_err());
+        assert!(SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 0.0, 1e-8).is_err());
+        // No step policy at all.
+        let err = base().build().unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "{err}");
+        // Adaptive tolerances on a fixed-step-only tableau.
+        let err = base()
+            .adaptive(1e-6, 1e-8)
+            .tableau(crate::ode::tableau::rk4())
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_bad_span_and_state() {
+        let mk = |t0: f64, t1: f64, z0: Vec<f32>| {
+            SolveRequest::builder("vdp").span(t0, t1).state(z0).adaptive(1e-6, 1e-8).build()
+        };
+        let err = mk(2.5, 2.5, vec![1.0, 0.0]).unwrap_err();
+        match err {
+            ServeError::BadRequest(msg) => assert!(msg.contains("zero-length span"), "{msg}"),
+            other => panic!("zero span must be BadRequest, got {other:?}"),
+        }
+        assert!(mk(f64::NAN, 1.0, vec![1.0, 0.0]).is_err(), "NaN t0");
+        assert!(mk(0.0, f64::INFINITY, vec![1.0, 0.0]).is_err(), "infinite t1");
+        assert!(mk(0.0, 1.0, vec![]).is_err(), "empty state");
+        assert!(mk(0.0, 1.0, vec![1.0, f32::NAN]).is_err(), "non-finite state");
+    }
+
+    #[test]
+    fn build_rejects_bad_grad_and_grid() {
+        let base = || {
+            SolveRequest::builder("vdp").span(0.0, 1.0).state(vec![1.0, 0.0]).adaptive(1e-6, 1e-8)
+        };
+        assert!(base().grad(vec![1.0]).build().is_err(), "cotangent length mismatch");
+        assert!(base().grad(vec![1.0, f32::NAN]).build().is_err(), "non-finite cotangent");
+        assert!(base().observe_at(vec![0.5, f64::NAN]).build().is_err(), "non-finite grid");
+        assert!(
+            base().grad(vec![1.0, 0.0]).observe_at(vec![0.5]).build().is_err(),
+            "grad + observe are mutually exclusive"
+        );
+        assert!(base().observe_at(vec![0.25, 0.75]).build().is_ok());
+    }
+
+    #[test]
+    fn response_accessors_match_payload_class() {
+        let fwd = SolveResponse {
+            payload: Payload::Forward { z_t1: vec![1.0, 2.0] },
+            stats: RequestStats::default(),
+        };
+        assert_eq!(fwd.z_t1(), &[1.0, 2.0]);
+        assert!(fwd.grad().is_none());
+        assert!(fwd.observations().is_none());
+
+        let obs = SolveResponse {
+            payload: Payload::Observed { z_t1: vec![3.0], zs: vec![vec![1.0], vec![2.0]] },
+            stats: RequestStats::default(),
+        };
+        assert_eq!(obs.z_t1(), &[3.0]);
+        assert_eq!(obs.observations().map(<[Vec<f32>]>::len), Some(2));
+
+        let grad = SolveResponse {
+            payload: Payload::Gradient {
+                z_t1: vec![4.0],
+                grad: GradResult {
+                    dl_dz0: vec![0.5],
+                    dl_dtheta: vec![],
+                    meter: Default::default(),
+                },
+            },
+            stats: RequestStats::default(),
+        };
+        assert_eq!(grad.z_t1(), &[4.0]);
+        assert_eq!(grad.grad().map(|g| g.dl_dz0.clone()), Some(vec![0.5]));
+    }
+
+    #[test]
+    fn lane_names_round_trip() {
+        for lane in [Lane::Interactive, Lane::Batch] {
+            assert_eq!(Lane::from_name(lane.as_str()), Some(lane));
+        }
+        assert_eq!(Lane::from_name("express"), None);
     }
 
     #[test]
@@ -587,103 +889,12 @@ mod tests {
     }
 
     #[test]
-    fn request_json_round_trips_bit_exactly() {
-        let mut r = SolveRequest::adaptive("vdp", 0.25, 5.5, vec![2.0, -0.0], 1e-6, 1e-8);
-        r.z0[1] = f32::from_bits(0x0000_0001); // smallest subnormal
-        let j = Json::parse(&r.to_json().to_string()).unwrap();
-        let back = SolveRequest::from_json(&j).unwrap();
-        assert_eq!(back.dynamics, "vdp");
-        assert_eq!(back.t0.to_bits(), r.t0.to_bits());
-        assert_eq!(back.t1.to_bits(), r.t1.to_bits());
-        assert_eq!(back.tab.name, r.tab.name);
-        assert_eq!(back.tol, r.tol);
-        assert!(back.grad.is_none());
-        let got: Vec<u32> = back.z0.iter().map(|x| x.to_bits()).collect();
-        let exp: Vec<u32> = r.z0.iter().map(|x| x.to_bits()).collect();
-        assert_eq!(got, exp);
-        assert_eq!(back.batch_key(), r.batch_key(), "the key must survive the wire");
-
-        let g = SolveRequest::fixed("linear", 1.0, -2.0, vec![0.5; 3], 0.125)
-            .with_grad(vec![1.0, 0.0, -1.0]);
-        let j = Json::parse(&g.to_json().to_string()).unwrap();
-        let back = SolveRequest::from_json(&j).unwrap();
-        assert_eq!(back.tol, Tolerance::Fixed { h: 0.125 });
-        assert_eq!(back.grad, Some(vec![1.0, 0.0, -1.0]));
-        assert_eq!(back.batch_key(), g.batch_key());
-
-        assert!(SolveRequest::from_json(&Json::parse("{}").unwrap()).is_err());
-        let mut bad = r.to_json();
-        if let Json::Obj(m) = &mut bad {
-            m.insert("tab".into(), "nope".into());
-        }
-        assert!(SolveRequest::from_json(&bad).is_err(), "unknown tableau must not decode");
-    }
-
-    #[test]
-    fn response_and_error_json_round_trip() {
-        let resp = SolveResponse {
-            z_t1: vec![1.5, f32::NAN, -0.0],
-            grad: Some(GradResult {
-                dl_dz0: vec![0.25, -0.5, 1e-45],
-                dl_dtheta: vec![3.5],
-                meter: crate::grad::CostMeter {
-                    nfe_forward: 10,
-                    nfe_backward: 20,
-                    nfe_replay: 3,
-                    replay_peak_bytes: 128,
-                    vjp_calls: 5,
-                    checkpoint_bytes: 256,
-                    graph_depth: 7,
-                    n_steps: 11,
-                    n_rejected: 2,
-                    n_reverse_steps: 0,
-                },
-            }),
-            stats: RequestStats {
-                steps: 11,
-                nfe: 44,
-                n_rejected: 2,
-                avg_m: 1.25,
-                checkpoint_bytes: 256,
-                batch_size: 4,
-                queue_wait: Duration::from_micros(250),
-                service: Duration::from_millis(3),
-            },
-        };
-        let j = Json::parse(&resp.to_json().to_string()).unwrap();
-        let back = SolveResponse::from_json(&j).unwrap();
-        let got: Vec<u32> = back.z_t1.iter().map(|x| x.to_bits()).collect();
-        let exp: Vec<u32> = resp.z_t1.iter().map(|x| x.to_bits()).collect();
-        assert_eq!(got, exp, "NaN and -0.0 states must survive the wire");
-        let bg = back.grad.unwrap();
-        assert_eq!(bg.dl_dtheta, vec![3.5]);
-        assert_eq!(bg.dl_dz0[2].to_bits(), 1e-45f32.to_bits());
-        assert_eq!(bg.meter.nfe_backward, 20);
-        assert_eq!(bg.meter.n_reverse_steps, 0);
-        assert_eq!(back.stats.batch_size, 4);
-        assert_eq!(back.stats.queue_wait, Duration::from_micros(250));
-        assert_eq!(back.stats.service, Duration::from_millis(3));
-
-        for e in [
-            ServeError::Overloaded,
-            ServeError::ShuttingDown,
-            ServeError::UnknownDynamics("ghost".into()),
-            ServeError::BadRequest("z0 length".into()),
-            ServeError::Solver("step underflow".into()),
-        ] {
-            let back = ServeError::from_json(&Json::parse(&e.to_json().to_string()).unwrap());
-            assert_eq!(back.unwrap(), e, "error variants must survive the wire");
-        }
-        assert!(ServeError::from_json(&Json::parse(r#"{"kind":"??","msg":""}"#).unwrap()).is_err());
-    }
-
-    #[test]
     fn opts_round_trip() {
         let o = req().opts();
         assert_eq!(o.rtol, 1e-6);
         assert_eq!(o.atol, 1e-8);
         assert!(o.fixed_h.is_none());
-        let o = SolveRequest::fixed("vdp", 0.0, 1.0, vec![0.0, 0.0], 0.05).opts();
+        let o = SolveRequest::fixed("vdp", 0.0, 1.0, vec![0.0, 0.0], 0.05).unwrap().opts();
         assert_eq!(o.fixed_h, Some(0.05));
     }
 }

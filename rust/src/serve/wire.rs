@@ -1,0 +1,477 @@
+//! Versioned JSON wire schema for [`SolveRequest`] / [`SolveResponse`] /
+//! [`ServeError`] — spoken **verbatim** by both transports: the HTTP front
+//! door ([`super::http`]) and the `dist::transport` frames between the
+//! dispatcher and TCP shards. One schema, two carriers.
+//!
+//! Every wire object carries a `"v"` field ([`WIRE_VERSION`]); decoding an
+//! object with a different version fails with the typed
+//! [`WireVersionError`] (downcastable through `anyhow`), so a schema bump
+//! is a clean protocol error instead of a shape-dependent parse failure.
+//!
+//! Float *state* payloads (`z0`, `lam`, `z_t1`, gradients, observed
+//! states) travel as f32 bit patterns ([`f32_bits`]) so answers cross the
+//! wire bit-exactly; f64 *scalars* (spans, tolerances, observation times)
+//! ride as plain JSON numbers — the writer emits the shortest
+//! round-tripping form, which is bit-exact for every finite value, and
+//! non-finite values are rejected by request validation anyway.
+
+use crate::grad::GradResult;
+use crate::util::json::{f32_bits, f32s_from_bits, obj, Json};
+use std::time::Duration;
+
+use super::request::{
+    Lane, Payload, RequestStats, ServeError, SolveRequest, SolveResponse, Tolerance,
+};
+
+/// Current wire schema version. Bump on any incompatible change to the
+/// request/response/error JSON shapes below.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Typed decode failure: the peer speaks a different wire schema version.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireVersionError {
+    /// The version the peer sent.
+    pub got: u64,
+}
+
+impl std::fmt::Display for WireVersionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unsupported wire version {} (this side speaks {WIRE_VERSION})", self.got)
+    }
+}
+
+impl std::error::Error for WireVersionError {}
+
+/// Check the `"v"` field of a wire object: missing → malformed; present
+/// but different → [`WireVersionError`].
+fn expect_version(v: &Json) -> anyhow::Result<()> {
+    let got = v
+        .get("v")
+        .map_err(|_| anyhow::anyhow!("missing wire version field 'v'"))?
+        .as_usize()? as u64;
+    if got != WIRE_VERSION {
+        return Err(WireVersionError { got }.into());
+    }
+    Ok(())
+}
+
+impl SolveRequest {
+    pub fn to_json(&self) -> Json {
+        let (kind, a, b) = match self.tol {
+            Tolerance::Adaptive { rtol, atol } => ("adaptive", rtol, atol),
+            Tolerance::Fixed { h } => ("fixed", h, 0.0),
+        };
+        let mut pairs = vec![
+            ("v", (WIRE_VERSION as usize).into()),
+            ("dynamics", self.dynamics.as_str().into()),
+            ("t0", self.t0.into()),
+            ("t1", self.t1.into()),
+            ("z0", f32_bits(&self.z0)),
+            ("tab", self.tab.name.into()),
+            ("tol_kind", kind.into()),
+            ("tol_a", a.into()),
+            ("tol_b", b.into()),
+            ("lane", self.lane.as_str().into()),
+        ];
+        if let Some(lam) = &self.grad {
+            pairs.push(("lam", f32_bits(lam)));
+        }
+        if !self.observe_at.is_empty() {
+            pairs.push(("observe_at", self.observe_at.clone().into()));
+        }
+        obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<SolveRequest> {
+        expect_version(v)?;
+        let tab_name = v.get("tab")?.as_str()?;
+        let tab = crate::ode::tableau::by_name(tab_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown tableau '{tab_name}'"))?;
+        let tol = match v.get("tol_kind")?.as_str()? {
+            "adaptive" => Tolerance::Adaptive {
+                rtol: v.get("tol_a")?.as_f64()?,
+                atol: v.get("tol_b")?.as_f64()?,
+            },
+            "fixed" => Tolerance::Fixed { h: v.get("tol_a")?.as_f64()? },
+            k => anyhow::bail!("unknown tolerance kind '{k}'"),
+        };
+        let grad = match v.opt("lam") {
+            Some(l) => Some(f32s_from_bits(l)?),
+            None => None,
+        };
+        // Missing lane decodes as Interactive: hand-written HTTP requests
+        // should not have to know about QoS to get served.
+        let lane = match v.opt("lane") {
+            Some(l) => {
+                let name = l.as_str()?;
+                Lane::from_name(name).ok_or_else(|| anyhow::anyhow!("unknown lane '{name}'"))?
+            }
+            None => Lane::Interactive,
+        };
+        let observe_at = match v.opt("observe_at") {
+            Some(ts) => {
+                ts.as_arr()?.iter().map(Json::as_f64).collect::<anyhow::Result<Vec<f64>>>()?
+            }
+            None => Vec::new(),
+        };
+        Ok(SolveRequest {
+            dynamics: v.get("dynamics")?.as_str()?.to_string(),
+            t0: v.get("t0")?.as_f64()?,
+            t1: v.get("t1")?.as_f64()?,
+            z0: f32s_from_bits(v.get("z0")?)?,
+            tab,
+            tol,
+            grad,
+            observe_at,
+            lane,
+        })
+    }
+}
+
+fn duration_from_ns(v: &Json) -> anyhow::Result<Duration> {
+    let n = v.as_f64()?;
+    anyhow::ensure!(n.is_finite() && n >= 0.0, "bad duration: {n}");
+    Ok(Duration::from_nanos(n as u64))
+}
+
+fn stats_to_json(s: &RequestStats) -> Json {
+    obj(vec![
+        ("steps", s.steps.into()),
+        ("nfe", s.nfe.into()),
+        ("n_rejected", s.n_rejected.into()),
+        ("avg_m", s.avg_m.into()),
+        ("checkpoint_bytes", s.checkpoint_bytes.into()),
+        ("batch_size", s.batch_size.into()),
+        ("queue_wait_ns", (s.queue_wait.as_nanos() as f64).into()),
+        ("service_ns", (s.service.as_nanos() as f64).into()),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> anyhow::Result<RequestStats> {
+    Ok(RequestStats {
+        steps: v.get("steps")?.as_usize()?,
+        nfe: v.get("nfe")?.as_usize()?,
+        n_rejected: v.get("n_rejected")?.as_usize()?,
+        avg_m: v.get("avg_m")?.as_f64()?,
+        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
+        batch_size: v.get("batch_size")?.as_usize()?,
+        queue_wait: duration_from_ns(v.get("queue_wait_ns")?)?,
+        service: duration_from_ns(v.get("service_ns")?)?,
+    })
+}
+
+fn meter_to_json(m: &crate::grad::CostMeter) -> Json {
+    obj(vec![
+        ("nfe_forward", m.nfe_forward.into()),
+        ("nfe_backward", m.nfe_backward.into()),
+        ("nfe_replay", m.nfe_replay.into()),
+        ("replay_peak_bytes", m.replay_peak_bytes.into()),
+        ("vjp_calls", m.vjp_calls.into()),
+        ("checkpoint_bytes", m.checkpoint_bytes.into()),
+        ("graph_depth", m.graph_depth.into()),
+        ("n_steps", m.n_steps.into()),
+        ("n_rejected", m.n_rejected.into()),
+        ("n_reverse_steps", m.n_reverse_steps.into()),
+    ])
+}
+
+fn meter_from_json(v: &Json) -> anyhow::Result<crate::grad::CostMeter> {
+    Ok(crate::grad::CostMeter {
+        nfe_forward: v.get("nfe_forward")?.as_usize()?,
+        nfe_backward: v.get("nfe_backward")?.as_usize()?,
+        nfe_replay: v.get("nfe_replay")?.as_usize()?,
+        replay_peak_bytes: v.get("replay_peak_bytes")?.as_usize()?,
+        vjp_calls: v.get("vjp_calls")?.as_usize()?,
+        checkpoint_bytes: v.get("checkpoint_bytes")?.as_usize()?,
+        graph_depth: v.get("graph_depth")?.as_usize()?,
+        n_steps: v.get("n_steps")?.as_usize()?,
+        n_rejected: v.get("n_rejected")?.as_usize()?,
+        n_reverse_steps: v.get("n_reverse_steps")?.as_usize()?,
+    })
+}
+
+impl SolveResponse {
+    pub fn to_json(&self) -> Json {
+        let payload = match &self.payload {
+            Payload::Forward { z_t1 } => {
+                obj(vec![("kind", "forward".into()), ("z_t1", f32_bits(z_t1))])
+            }
+            Payload::Gradient { z_t1, grad } => obj(vec![
+                ("kind", "gradient".into()),
+                ("z_t1", f32_bits(z_t1)),
+                ("dl_dz0", f32_bits(&grad.dl_dz0)),
+                ("dl_dtheta", f32_bits(&grad.dl_dtheta)),
+                ("meter", meter_to_json(&grad.meter)),
+            ]),
+            Payload::Observed { z_t1, zs } => obj(vec![
+                ("kind", "observed".into()),
+                ("z_t1", f32_bits(z_t1)),
+                ("zs", Json::Arr(zs.iter().map(|z| f32_bits(z)).collect())),
+            ]),
+        };
+        obj(vec![
+            ("v", (WIRE_VERSION as usize).into()),
+            ("payload", payload),
+            ("stats", stats_to_json(&self.stats)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<SolveResponse> {
+        expect_version(v)?;
+        let p = v.get("payload")?;
+        let z_t1 = f32s_from_bits(p.get("z_t1")?)?;
+        let payload = match p.get("kind")?.as_str()? {
+            "forward" => Payload::Forward { z_t1 },
+            "gradient" => Payload::Gradient {
+                z_t1,
+                grad: GradResult {
+                    dl_dz0: f32s_from_bits(p.get("dl_dz0")?)?,
+                    dl_dtheta: f32s_from_bits(p.get("dl_dtheta")?)?,
+                    meter: meter_from_json(p.get("meter")?)?,
+                },
+            },
+            "observed" => Payload::Observed {
+                z_t1,
+                zs: p
+                    .get("zs")?
+                    .as_arr()?
+                    .iter()
+                    .map(f32s_from_bits)
+                    .collect::<anyhow::Result<Vec<Vec<f32>>>>()?,
+            },
+            k => anyhow::bail!("unknown payload kind '{k}'"),
+        };
+        Ok(SolveResponse { payload, stats: stats_from_json(v.get("stats")?)? })
+    }
+}
+
+impl ServeError {
+    pub fn to_json(&self) -> Json {
+        let (kind, msg) = match self {
+            ServeError::Overloaded => ("overloaded", ""),
+            ServeError::ShuttingDown => ("shutting_down", ""),
+            ServeError::UnknownDynamics(id) => ("unknown_dynamics", id.as_str()),
+            ServeError::BadRequest(m) => ("bad_request", m.as_str()),
+            ServeError::Solver(m) => ("solver", m.as_str()),
+        };
+        obj(vec![
+            ("v", (WIRE_VERSION as usize).into()),
+            ("kind", kind.into()),
+            ("msg", msg.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ServeError> {
+        expect_version(v)?;
+        let msg = v.get("msg")?.as_str()?.to_string();
+        Ok(match v.get("kind")?.as_str()? {
+            "overloaded" => ServeError::Overloaded,
+            "shutting_down" => ServeError::ShuttingDown,
+            "unknown_dynamics" => ServeError::UnknownDynamics(msg),
+            "bad_request" => ServeError::BadRequest(msg),
+            "solver" => ServeError::Solver(msg),
+            k => anyhow::bail!("unknown error kind '{k}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_round_trips_bit_exactly() {
+        let mut r = SolveRequest::adaptive("vdp", 0.25, 5.5, vec![2.0, -0.0], 1e-6, 1e-8).unwrap();
+        r.z0[1] = f32::from_bits(0x0000_0001); // smallest subnormal
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.dynamics, "vdp");
+        assert_eq!(back.t0.to_bits(), r.t0.to_bits());
+        assert_eq!(back.t1.to_bits(), r.t1.to_bits());
+        assert_eq!(back.tab.name, r.tab.name);
+        assert_eq!(back.tol, r.tol);
+        assert!(back.grad.is_none());
+        assert!(back.observe_at.is_empty());
+        assert_eq!(back.lane, Lane::Interactive);
+        let got: Vec<u32> = back.z0.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = r.z0.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
+        assert_eq!(back.batch_key(), r.batch_key(), "the key must survive the wire");
+
+        let g = SolveRequest::fixed("linear", 1.0, -2.0, vec![0.5; 3], 0.125)
+            .unwrap()
+            .with_grad(vec![1.0, 0.0, -1.0]);
+        let j = Json::parse(&g.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.tol, Tolerance::Fixed { h: 0.125 });
+        assert_eq!(back.grad, Some(vec![1.0, 0.0, -1.0]));
+        assert_eq!(back.batch_key(), g.batch_key());
+
+        // Dense-output grid and lane survive the wire; the grid rides as
+        // plain f64 numbers, whose shortest form round-trips bit-exactly.
+        let o = SolveRequest::builder("vdp")
+            .span(0.0, 5.0)
+            .state(vec![2.0, 0.0])
+            .adaptive(1e-6, 1e-8)
+            .observe_at(vec![0.1, 2.5, 4.999999999999999])
+            .priority(Lane::Batch)
+            .build()
+            .unwrap();
+        let j = Json::parse(&o.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        let got: Vec<u64> = back.observe_at.iter().map(|t| t.to_bits()).collect();
+        let exp: Vec<u64> = o.observe_at.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(got, exp, "grid must round-trip bit-exactly");
+        assert_eq!(back.lane, Lane::Batch);
+        assert_eq!(back.batch_key(), o.batch_key());
+
+        assert!(SolveRequest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut bad = r.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("tab".into(), "nope".into());
+        }
+        assert!(SolveRequest::from_json(&bad).is_err(), "unknown tableau must not decode");
+    }
+
+    #[test]
+    fn missing_lane_decodes_as_interactive() {
+        let r = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("lane");
+        }
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.lane, Lane::Interactive);
+        // …but a present-and-bogus lane is an error, not a default.
+        if let Json::Obj(m) = &mut j {
+            m.insert("lane".into(), "express".into());
+        }
+        assert!(SolveRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_wire_version_is_a_typed_error() {
+        let r = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), 2.0.into());
+        }
+        let err = SolveRequest::from_json(&j).unwrap_err();
+        let ver = err.downcast_ref::<WireVersionError>().expect("typed version error");
+        assert_eq!(ver.got, 2);
+        assert!(ver.to_string().contains("unsupported wire version 2"), "{ver}");
+        // A missing version field is malformed (not a version mismatch).
+        if let Json::Obj(m) = &mut j {
+            m.remove("v");
+        }
+        let err = SolveRequest::from_json(&j).unwrap_err();
+        assert!(err.downcast_ref::<WireVersionError>().is_none());
+        assert!(err.to_string().contains("missing wire version"), "{err}");
+
+        // The same gate guards responses and errors.
+        let resp = SolveResponse {
+            payload: Payload::Forward { z_t1: vec![1.0] },
+            stats: RequestStats::default(),
+        };
+        let mut j = resp.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), 7.0.into());
+        }
+        let err = SolveResponse::from_json(&j).unwrap_err();
+        assert_eq!(err.downcast_ref::<WireVersionError>(), Some(&WireVersionError { got: 7 }));
+        let mut j = ServeError::Overloaded.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), 0.0.into());
+        }
+        let err = ServeError::from_json(&j).unwrap_err();
+        assert_eq!(err.downcast_ref::<WireVersionError>(), Some(&WireVersionError { got: 0 }));
+    }
+
+    #[test]
+    fn response_and_error_json_round_trip() {
+        let resp = SolveResponse {
+            payload: Payload::Gradient {
+                z_t1: vec![1.5, f32::NAN, -0.0],
+                grad: GradResult {
+                    dl_dz0: vec![0.25, -0.5, 1e-45],
+                    dl_dtheta: vec![3.5],
+                    meter: crate::grad::CostMeter {
+                        nfe_forward: 10,
+                        nfe_backward: 20,
+                        nfe_replay: 3,
+                        replay_peak_bytes: 128,
+                        vjp_calls: 5,
+                        checkpoint_bytes: 256,
+                        graph_depth: 7,
+                        n_steps: 11,
+                        n_rejected: 2,
+                        n_reverse_steps: 0,
+                    },
+                },
+            },
+            stats: RequestStats {
+                steps: 11,
+                nfe: 44,
+                n_rejected: 2,
+                avg_m: 1.25,
+                checkpoint_bytes: 256,
+                batch_size: 4,
+                queue_wait: Duration::from_micros(250),
+                service: Duration::from_millis(3),
+            },
+        };
+        let j = Json::parse(&resp.to_json().to_string()).unwrap();
+        let back = SolveResponse::from_json(&j).unwrap();
+        let got: Vec<u32> = back.z_t1().iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = resp.z_t1().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp, "NaN and -0.0 states must survive the wire");
+        let bg = back.grad().expect("gradient payload");
+        assert_eq!(bg.dl_dtheta, vec![3.5]);
+        assert_eq!(bg.dl_dz0[2].to_bits(), 1e-45f32.to_bits());
+        assert_eq!(bg.meter.nfe_backward, 20);
+        assert_eq!(bg.meter.n_reverse_steps, 0);
+        assert_eq!(back.stats.batch_size, 4);
+        assert_eq!(back.stats.queue_wait, Duration::from_micros(250));
+        assert_eq!(back.stats.service, Duration::from_millis(3));
+
+        // Forward and observed payloads keep their class across the wire.
+        let fwd = SolveResponse {
+            payload: Payload::Forward { z_t1: vec![2.0] },
+            stats: RequestStats::default(),
+        };
+        let back = SolveResponse::from_json(&Json::parse(&fwd.to_json().to_string()).unwrap())
+            .unwrap();
+        assert!(back.grad().is_none());
+        assert!(back.observations().is_none());
+
+        let obs = SolveResponse {
+            payload: Payload::Observed {
+                z_t1: vec![1.0, 2.0],
+                zs: vec![vec![0.5, -0.0], vec![f32::NAN, 1e-45]],
+            },
+            stats: RequestStats::default(),
+        };
+        let back = SolveResponse::from_json(&Json::parse(&obs.to_json().to_string()).unwrap())
+            .unwrap();
+        let zs = back.observations().expect("observed payload");
+        assert_eq!(zs.len(), 2);
+        assert_eq!(zs[1][0].to_bits(), f32::NAN.to_bits(), "observed states keep their bits");
+        assert_eq!(zs[1][1].to_bits(), 1e-45f32.to_bits());
+        assert_eq!(zs[0][1].to_bits(), (-0.0f32).to_bits());
+
+        for e in [
+            ServeError::Overloaded,
+            ServeError::ShuttingDown,
+            ServeError::UnknownDynamics("ghost".into()),
+            ServeError::BadRequest("z0 length".into()),
+            ServeError::Solver("step underflow".into()),
+        ] {
+            let back = ServeError::from_json(&Json::parse(&e.to_json().to_string()).unwrap());
+            assert_eq!(back.unwrap(), e, "error variants must survive the wire");
+        }
+        assert!(ServeError::from_json(
+            &Json::parse(r#"{"v":1,"kind":"??","msg":""}"#).unwrap()
+        )
+        .is_err());
+    }
+}

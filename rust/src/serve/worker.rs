@@ -12,6 +12,16 @@
 //! — one `eval_batch`/`vjp_batch` dispatch per stage per reverse round), so
 //! co-batching gradient traffic costs per-stage dispatch, not per-request.
 //!
+//! Dense-output batches (`BatchKey::wants_obs`) additionally build a
+//! [`DenseOutput`] interpolant per sample and evaluate it at the request's
+//! `observe_at` grid. Such batches run under the **dense** checkpoint
+//! policy regardless of the server budget — the interpolant needs every
+//! knot, and the admission charge already billed the full store
+//! (`projected_ckpt_bytes` never caps an observing request). Because the
+//! batch engine's per-sample trajectories are bit-identical to scalar
+//! solves, each served observation is bit-equal to `DenseOutput::eval` on a
+//! direct solve.
+//!
 //! Memory: solves run under the server's per-sample checkpoint budget
 //! (`ServeConfig::ckpt_budget_bytes` → [`crate::ckpt::CkptPolicy`]) — a
 //! thinned store changes nothing about any answer (bit-exact segment
@@ -25,11 +35,12 @@
 //! offending samples report [`ServeError::Solver`].
 
 use super::batcher::FormedBatch;
-use super::request::{RequestStats, ServeError, SolveResponse};
+use super::request::{Payload, RequestStats, ServeError, SolveResponse};
 use super::Core;
 use crate::ckpt::CkptPolicy;
 use crate::coordinator::pool::panic_msg;
-use crate::grad::{aca_backward, aca_backward_batch, GradResult};
+use crate::grad::{aca_backward, aca_backward_batch};
+use crate::ode::dense::DenseOutput;
 use crate::ode::{integrate, integrate_batch_tspans};
 
 /// Worker thread body: serve batches until the work queue closes and drains.
@@ -60,7 +71,7 @@ pub(crate) fn worker_loop(core: &Core) {
     }
 }
 
-type SampleOutcome = Result<(Vec<f32>, Option<GradResult>, RequestStats), ServeError>;
+type SampleOutcome = Result<(Payload, RequestStats), ServeError>;
 
 /// Run one formed batch and deliver every member's response.
 pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
@@ -81,11 +92,16 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     // buckets), so the key-equal fields can be read off the first item.
     let first = &batch.items[0].req;
     // tab/opts are key-equal across the batch; the span is per-request. The
-    // worker's solves run under the server's checkpoint budget.
+    // worker's solves run under the server's checkpoint budget — except
+    // dense-output batches, which need every knot stored (see module docs).
     let tab = first.tab;
     let mut opts = first.opts();
     opts.ckpt = CkptPolicy::from_budget(core.cfg.ckpt_budget_bytes);
     let wants_grad = batch.key.wants_grad;
+    let wants_obs = batch.key.wants_obs;
+    if wants_obs {
+        opts.ckpt = CkptPolicy::from_budget(0);
+    }
 
     let mut z0 = Vec::with_capacity(n * dim);
     let mut t0s = Vec::with_capacity(n);
@@ -126,9 +142,22 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
             Ok((0..n)
                 .map(|i| {
                     let tr = &bt.tracks[i];
+                    let z_t1 = bt.last(i).to_vec();
+                    let payload = if wants_obs {
+                        // Per-sample interpolant over the (dense) per-sample
+                        // trajectory — identical knots to a direct solve, so
+                        // identical observations.
+                        let traj = bt.to_trajectory(i);
+                        let dense = DenseOutput::new(&*f, &traj);
+                        let zs = dense.eval_grid(&batch.items[i].req.observe_at);
+                        Payload::Observed { z_t1, zs }
+                    } else if let Some(g) = grads.as_ref() {
+                        Payload::Gradient { z_t1, grad: g[i].clone() }
+                    } else {
+                        Payload::Forward { z_t1 }
+                    };
                     Ok((
-                        bt.last(i).to_vec(),
-                        grads.as_ref().map(|g| g[i].clone()),
+                        payload,
                         RequestStats {
                             steps: tr.steps(),
                             nfe: tr.nfe,
@@ -155,23 +184,33 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                     || -> SampleOutcome {
                         match integrate(&*f, item.req.t0, item.req.t1, &item.req.z0, tab, &opts) {
                             Ok(traj) => {
-                                // A grad-less request in a gradient batch
-                                // degrades to a forward-only answer here —
-                                // its healthy neighbors keep their grads.
-                                let grad = match item.req.grad.as_ref() {
-                                    Some(lam) if wants_grad => {
-                                        Some(aca_backward(&*f, tab, &traj, lam))
-                                    }
-                                    _ => None,
-                                };
                                 let Some(z_t1) = traj.last() else {
                                     return Err(ServeError::Solver(
                                         "integration returned an empty trajectory".to_string(),
                                     ));
                                 };
+                                let z_t1 = z_t1.to_vec();
+                                let payload = if wants_obs {
+                                    // `opts.ckpt` is dense for observing
+                                    // batches, so every knot is stored.
+                                    let dense = DenseOutput::new(&*f, &traj);
+                                    let zs = dense.eval_grid(&item.req.observe_at);
+                                    Payload::Observed { z_t1, zs }
+                                } else {
+                                    // A grad-less request in a gradient
+                                    // batch degrades to a forward-only
+                                    // answer here — its healthy neighbors
+                                    // keep their grads.
+                                    match item.req.grad.as_ref() {
+                                        Some(lam) if wants_grad => Payload::Gradient {
+                                            z_t1,
+                                            grad: aca_backward(&*f, tab, &traj, lam),
+                                        },
+                                        _ => Payload::Forward { z_t1 },
+                                    }
+                                };
                                 Ok((
-                                    z_t1.to_vec(),
-                                    grad,
+                                    payload,
                                     RequestStats {
                                         steps: traj.len(),
                                         nfe: traj.nfe,
@@ -197,12 +236,12 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     for (item, outcome) in batch.items.iter().zip(outcomes) {
         let queue_wait = started.saturating_sub(item.submitted);
         match outcome {
-            Ok((z_t1, grad, mut stats)) => {
+            Ok((payload, mut stats)) => {
                 stats.batch_size = n;
                 stats.queue_wait = queue_wait;
                 stats.service = service;
-                core.metrics.record_request(queue_wait, service, stats.nfe);
-                core.complete(&item.slot, item.cost, Ok(SolveResponse { z_t1, grad, stats }));
+                core.metrics.record_request(&batch.key.dynamics, queue_wait, service, stats.nfe);
+                core.complete(&item.slot, item.cost, Ok(SolveResponse { payload, stats }));
             }
             Err(e) => {
                 core.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -241,6 +280,8 @@ mod tests {
                 workers: 1,
                 ckpt_budget_bytes: 0,
                 mem_budget_bytes: 0,
+                quota_quantum: 32,
+                quota_max_deficit: 128,
             },
             clock: ManualClock::new(),
             registry,
@@ -268,8 +309,10 @@ mod tests {
     fn grad_less_item_in_grad_batch_degrades_instead_of_panicking() {
         let core = test_core(2);
         let with_grad = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8)
+            .unwrap()
             .with_grad(vec![1.0, 0.0]);
-        let without_grad = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.5, -0.5], 1e-6, 1e-8);
+        let without_grad =
+            SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.5, -0.5], 1e-6, 1e-8).unwrap();
         let key = with_grad.batch_key();
         assert!(key.wants_grad);
 
@@ -291,15 +334,15 @@ mod tests {
         opts.ckpt = CkptPolicy::from_budget(0);
         let t1 = integrate(&*core.registry["vdp"], 0.0, 1.0, &with_grad.z0, with_grad.tab, &opts)
             .unwrap();
-        assert_eq!(r1.z_t1, *t1.last().unwrap());
+        assert_eq!(r1.z_t1(), t1.last().unwrap());
         let g = aca_backward(&*core.registry["vdp"], with_grad.tab, &t1, &[1.0, 0.0]);
-        assert_eq!(r1.grad.as_ref().expect("gradient kept").dl_dz0, g.dl_dz0);
+        assert_eq!(r1.grad().expect("gradient kept").dl_dz0, g.dl_dz0);
 
         let t2 =
             integrate(&*core.registry["vdp"], 0.0, 1.0, &without_grad.z0, without_grad.tab, &opts)
                 .unwrap();
-        assert_eq!(r2.z_t1, *t2.last().unwrap());
-        assert!(r2.grad.is_none(), "the straggler degrades to forward-only");
+        assert_eq!(r2.z_t1(), t2.last().unwrap());
+        assert!(r2.grad().is_none(), "the straggler degrades to forward-only");
 
         assert_eq!(
             core.metrics.failed.load(std::sync::atomic::Ordering::Relaxed),
@@ -317,7 +360,9 @@ mod tests {
         let reqs: Vec<SolveRequest> = [vec![2.0, 0.0], vec![1.0, 0.5]]
             .into_iter()
             .map(|z0| {
-                SolveRequest::adaptive("vdp", 0.0, 1.0, z0, 1e-6, 1e-8).with_grad(vec![1.0, 0.0])
+                SolveRequest::adaptive("vdp", 0.0, 1.0, z0, 1e-6, 1e-8)
+                    .unwrap()
+                    .with_grad(vec![1.0, 0.0])
             })
             .collect();
         let key = reqs[0].batch_key();
@@ -337,9 +382,67 @@ mod tests {
         execute_batch(&core, &batch);
         for h in handles {
             let resp = h.try_take().expect("answered").expect("succeeds");
-            assert_eq!(resp.z_t1.len(), 2);
-            assert!(resp.grad.is_some(), "every member of a grad batch gets its gradient");
+            assert_eq!(resp.z_t1().len(), 2);
+            assert!(resp.grad().is_some(), "every member of a grad batch gets its gradient");
             assert_eq!(resp.stats.batch_size, 2);
+        }
+        assert_eq!(core.inflight.lock().unwrap().count, 0);
+    }
+
+    /// Dense-output serving contract: a co-batched observation request's
+    /// grid values are bit-identical to building a `DenseOutput` over a
+    /// direct scalar solve and calling `eval` — even when the server runs a
+    /// thinning checkpoint budget (observing batches force the dense
+    /// policy).
+    #[test]
+    fn observed_batch_is_bit_equal_to_direct_dense_eval() {
+        let mut core = test_core(2);
+        core.cfg.ckpt_budget_bytes = 4096; // thinning budget; obs must override
+        let grid = vec![0.0, 0.25, 0.9, 1.0];
+        let reqs: Vec<SolveRequest> = [vec![2.0, 0.0], vec![1.0, 0.5]]
+            .into_iter()
+            .map(|z0| {
+                SolveRequest::builder("vdp")
+                    .span(0.0, 1.0)
+                    .state(z0)
+                    .adaptive(1e-6, 1e-8)
+                    .observe_at(grid.clone())
+                    .build()
+                    .unwrap()
+            })
+            .collect();
+        let key = reqs[0].batch_key();
+        assert!(key.wants_obs);
+        let (handles, items): (Vec<_>, Vec<_>) = reqs
+            .iter()
+            .map(|req| {
+                let (h, slot) = ResponseHandle::new();
+                (h, pend(req.clone(), slot))
+            })
+            .unzip();
+        let batch = FormedBatch {
+            key,
+            items,
+            reason: FlushReason::Size,
+            triggered_at: Duration::ZERO,
+        };
+        execute_batch(&core, &batch);
+        for (h, req) in handles.into_iter().zip(&reqs) {
+            let resp = h.try_take().expect("answered").expect("succeeds");
+            let mut opts = IntegrateOpts::with_tol(1e-6, 1e-8);
+            opts.ckpt = CkptPolicy::from_budget(0);
+            let traj =
+                integrate(&*core.registry["vdp"], 0.0, 1.0, &req.z0, req.tab, &opts).unwrap();
+            assert_eq!(resp.z_t1(), traj.last().unwrap());
+            let dense = DenseOutput::new(&*core.registry["vdp"], &traj);
+            let zs = resp.observations().expect("observation payload");
+            assert_eq!(zs.len(), grid.len());
+            for (&t, z) in grid.iter().zip(zs) {
+                let direct = dense.eval(t);
+                let got: Vec<u32> = z.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = direct.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "t={t}");
+            }
         }
         assert_eq!(core.inflight.lock().unwrap().count, 0);
     }

@@ -221,7 +221,7 @@ fn shard_server(cfg: Option<ServeConfig>) -> SolveServer {
 
 fn serve_req(rtol: f64, rng: &mut Pcg64) -> SolveRequest {
     let z0: Vec<f32> = (0..3).map(|_| rng.uniform_f32() + 0.1).collect();
-    SolveRequest::adaptive("linear", 0.0, 1.0, z0, rtol, 1e-8)
+    SolveRequest::adaptive("linear", 0.0, 1.0, z0, rtol, 1e-8).unwrap()
 }
 
 /// Ground truth for a served request: the direct scalar solve.
@@ -277,7 +277,7 @@ fn dispatcher_preserves_answers_and_survives_shard_death() {
     let handles: Vec<_> = reqs.iter().map(|r| dispatcher.submit(r.clone()).unwrap()).collect();
     for (req, h) in reqs.iter().zip(handles) {
         let resp = h.wait().unwrap();
-        assert_eq!(bits(&resp.z_t1), bits(&direct_solve(req)), "served answer drifted");
+        assert_eq!(bits(resp.z_t1()), bits(&direct_solve(req)), "served answer drifted");
     }
     let report = dispatcher.metrics().unwrap();
     assert_eq!(report.shards.len(), 2);
@@ -298,7 +298,7 @@ fn dispatcher_preserves_answers_and_survives_shard_death() {
     let handles: Vec<_> = reqs.iter().map(|r| dispatcher.submit(r.clone()).unwrap()).collect();
     for (req, h) in reqs.iter().zip(handles) {
         let resp = h.wait().unwrap();
-        assert_eq!(bits(&resp.z_t1), bits(&direct_solve(req)), "failover answer drifted");
+        assert_eq!(bits(resp.z_t1()), bits(&direct_solve(req)), "failover answer drifted");
     }
     assert_eq!(dispatcher.healthy_shards(), 1, "exactly one shard must remain");
     dispatcher.shutdown();
@@ -316,6 +316,8 @@ fn overload_backpressure_propagates_end_to_end() {
         workers: 1,
         ckpt_budget_bytes: 0,
         mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
     };
     let shard = ShardServer::spawn(shard_server(Some(cfg)), "127.0.0.1:0").unwrap();
     let dispatcher =
@@ -350,5 +352,5 @@ fn overload_backpressure_propagates_end_to_end() {
         assert_eq!(r.as_ref().unwrap_err(), &ServeError::Overloaded);
     }
     let resp = results[0].as_ref().unwrap();
-    assert_eq!(bits(&resp.z_t1), bits(&direct_solve(&reqs[0])), "admitted answer drifted");
+    assert_eq!(bits(resp.z_t1()), bits(&direct_solve(&reqs[0])), "admitted answer drifted");
 }

@@ -1,0 +1,308 @@
+//! End-to-end tests of the HTTP front door, driven by a hand-rolled
+//! raw-socket HTTP/1.1 client (no client library — the test must not trust
+//! the code under test to frame its own traffic).
+//!
+//! The load-bearing claims: served answers (forward, gradient,
+//! dense-output) are bit-identical to direct engine calls; admission
+//! backpressure surfaces as `429` with a `Retry-After` header; and
+//! protocol-level garbage (malformed JSON, wrong wire version, oversized
+//! bodies, broken request lines) bounces with `400` before any request
+//! reaches admission or a worker.
+
+use nodal::ckpt::CkptPolicy;
+use nodal::grad::aca_backward;
+use nodal::ode::analytic::VanDerPol;
+use nodal::ode::dense::DenseOutput;
+use nodal::ode::integrate;
+use nodal::serve::{
+    HttpConfig, HttpServer, ServeConfig, ServeError, SolveRequest, SolveResponse, SolveServer,
+};
+use nodal::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One parsed HTTP response: status, lower-cased headers, body.
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Write one request. An explicit `content-length` is always sent (zero for
+/// bodyless requests) so the server's framing is exercised uniformly.
+fn send_request(s: &mut TcpStream, method: &str, path: &str, body: &str) {
+    let req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len());
+    s.write_all(req.as_bytes()).unwrap();
+}
+
+/// Read one response off the wire; `None` means the peer closed it.
+fn read_response(r: &mut BufReader<TcpStream>) -> Option<Response> {
+    let mut line = String::new();
+    if r.read_line(&mut line).ok()? == 0 {
+        return None;
+    }
+    let status: u16 = line.split_whitespace().nth(1)?.parse().ok()?;
+    let mut headers = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).ok()?;
+        let h = h.trim_end().to_string();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':')?;
+        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim().to_string());
+        if k == "content-length" {
+            len = v.parse().ok()?;
+        }
+        headers.push((k, v));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).ok()?;
+    Some(Response { status, headers, body: String::from_utf8(body).ok()? })
+}
+
+/// Connect a raw client to the front door: (write half, buffered read half).
+fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(addr).unwrap();
+    let r = BufReader::new(s.try_clone().unwrap());
+    (s, r)
+}
+
+fn spawn_front_door(cfg: ServeConfig, http_cfg: HttpConfig) -> (Arc<SolveServer>, HttpServer) {
+    let server =
+        Arc::new(SolveServer::builder().register("vdp", VanDerPol::new(0.5)).config(cfg).start());
+    let http = HttpServer::spawn_at(server.clone(), "127.0.0.1:0", http_cfg).unwrap();
+    (server, http)
+}
+
+fn fast_flush_config() -> ServeConfig {
+    ServeConfig {
+        max_batch_size: 8,
+        // Tiny deadline: singleton batches flush on the next batcher tick
+        // instead of waiting for co-traffic (HTTP requests block their
+        // connection until answered).
+        max_queue_delay: Duration::from_micros(50),
+        queue_capacity: 64,
+        workers: 2,
+        ckpt_budget_bytes: 0,
+        mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
+    }
+}
+
+/// Forward, gradient, and dense-output requests over ONE keep-alive
+/// connection: every payload class decodes from the wire bit-identical to
+/// the direct engine call, and the liveness/metrics routes answer on the
+/// same socket afterwards.
+#[test]
+fn http_round_trip_matches_direct_solves_on_one_connection() {
+    let (server, mut http) = spawn_front_door(fast_flush_config(), HttpConfig::default());
+    let vdp = VanDerPol::new(0.5);
+    let (mut w, mut r) = connect(http.addr());
+
+    // Forward request: bit-identical endpoint.
+    let req = SolveRequest::fixed("vdp", 0.0, 1.5, vec![2.0, 0.0], 0.05).unwrap();
+    send_request(&mut w, "POST", "/v1/solve", &req.to_json().to_string());
+    let resp = read_response(&mut r).expect("forward response");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let solved = SolveResponse::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+    let mut opts = req.opts();
+    opts.ckpt = CkptPolicy::from_budget(0);
+    let traj = integrate(&vdp, 0.0, 1.5, &req.z0, req.tab, &opts).unwrap();
+    assert_eq!(bits(solved.z_t1()), bits(traj.last().unwrap()), "forward drifted over HTTP");
+
+    // Gradient request on the SAME connection (keep-alive): dL/dz0 and
+    // dL/dθ cross the wire bit-exactly.
+    let lam = vec![1.0f32, 0.0];
+    let greq = SolveRequest::fixed("vdp", 0.0, 1.5, vec![2.0, 0.0], 0.05)
+        .unwrap()
+        .with_grad(lam.clone());
+    send_request(&mut w, "POST", "/v1/solve", &greq.to_json().to_string());
+    let resp = read_response(&mut r).expect("gradient response");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let solved = SolveResponse::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+    let direct = aca_backward(&vdp, greq.tab, &traj, &lam);
+    let served = solved.grad().expect("gradient payload");
+    assert_eq!(bits(&served.dl_dz0), bits(&direct.dl_dz0), "dL/dz0 drifted over HTTP");
+    assert_eq!(bits(&served.dl_dtheta), bits(&direct.dl_dtheta), "dL/dθ drifted over HTTP");
+
+    // Dense-output request, still the same connection: every observation
+    // bit-equal to `DenseOutput::eval` on the direct solve.
+    let grid = vec![0.1, 0.75, 1.4999];
+    let oreq = SolveRequest::builder("vdp")
+        .span(0.0, 1.5)
+        .state(vec![2.0, 0.0])
+        .fixed(0.05)
+        .observe_at(grid.clone())
+        .build()
+        .unwrap();
+    send_request(&mut w, "POST", "/v1/solve", &oreq.to_json().to_string());
+    let resp = read_response(&mut r).expect("observed response");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let solved = SolveResponse::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+    let dense = DenseOutput::new(&vdp, &traj);
+    let zs = solved.observations().expect("observed payload");
+    assert_eq!(zs.len(), grid.len());
+    for (&t, z) in grid.iter().zip(zs) {
+        assert_eq!(bits(z), bits(&dense.eval(t)), "observation at t={t} drifted over HTTP");
+    }
+
+    // Unknown dynamics maps to 404 with the typed error body.
+    let ghost = SolveRequest::fixed("ghost", 0.0, 1.0, vec![1.0], 0.1).unwrap();
+    send_request(&mut w, "POST", "/v1/solve", &ghost.to_json().to_string());
+    let resp = read_response(&mut r).expect("ghost response");
+    assert_eq!(resp.status, 404);
+    let err = ServeError::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+    assert!(matches!(err, ServeError::UnknownDynamics(_)), "{err:?}");
+
+    // Liveness and metrics still answer on the same socket.
+    send_request(&mut w, "GET", "/healthz", "");
+    let resp = read_response(&mut r).expect("healthz response");
+    assert_eq!((resp.status, resp.body.as_str()), (200, "{\"ok\":true}"));
+    send_request(&mut w, "GET", "/v1/metrics", "");
+    let resp = read_response(&mut r).expect("metrics response");
+    assert_eq!(resp.status, 200);
+    let m = Json::parse(&resp.body).unwrap();
+    assert_eq!(m.get("submitted").unwrap().as_usize().unwrap(), 3, "three admitted solves");
+
+    http.shutdown();
+    server.shutdown();
+}
+
+/// Admission backpressure crosses the HTTP boundary: with a one-slot
+/// admission cap and a parked first request, the second solve answers
+/// `429 Too Many Requests` carrying `Retry-After` and the typed
+/// `overloaded` body — and the parked request still completes once drained.
+#[test]
+fn overloaded_maps_to_429_with_retry_after() {
+    let cfg = ServeConfig {
+        max_batch_size: 8,
+        max_queue_delay: Duration::from_secs(3600), // park until drain
+        queue_capacity: 1,
+        workers: 1,
+        ckpt_budget_bytes: 0,
+        mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
+    };
+    let (server, mut http) = spawn_front_door(cfg, HttpConfig::default());
+    let addr = http.addr().to_string();
+    let req = SolveRequest::fixed("vdp", 0.0, 1.0, vec![2.0, 0.0], 0.1).unwrap();
+
+    std::thread::scope(|sc| {
+        let parked = {
+            let (addr, req) = (addr.clone(), req.clone());
+            sc.spawn(move || {
+                let (mut w, mut r) = connect(&addr);
+                send_request(&mut w, "POST", "/v1/solve", &req.to_json().to_string());
+                read_response(&mut r).expect("parked request must eventually answer")
+            })
+        };
+        // Wait until the first request holds the only admission slot.
+        for _ in 0..400 {
+            if server.inflight() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(server.inflight(), 1, "the parked request must be admitted");
+
+        let (mut w, mut r) = connect(&addr);
+        send_request(&mut w, "POST", "/v1/solve", &req.to_json().to_string());
+        let resp = read_response(&mut r).expect("shed request answers immediately");
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"), "429 must carry Retry-After");
+        let err = ServeError::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+        assert_eq!(err, ServeError::Overloaded);
+
+        // Release the parked request and check it was served, not dropped.
+        server.drain();
+        let resp = parked.join().unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let solved = SolveResponse::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+        let vdp = VanDerPol::new(0.5);
+        let mut opts = req.opts();
+        opts.ckpt = CkptPolicy::from_budget(0);
+        let traj = integrate(&vdp, 0.0, 1.0, &req.z0, req.tab, &opts).unwrap();
+        assert_eq!(bits(solved.z_t1()), bits(traj.last().unwrap()));
+    });
+    http.shutdown();
+    server.shutdown();
+}
+
+/// Protocol-level garbage is rejected with `400` BEFORE admission: after a
+/// malformed-JSON body, a wrong wire version, an oversized body, and a
+/// broken request line, the server has admitted zero requests and executed
+/// zero batches.
+#[test]
+fn garbage_never_reaches_a_worker() {
+    let http_cfg = HttpConfig { port: 0, max_body_bytes: 1024 };
+    let (server, mut http) = spawn_front_door(fast_flush_config(), http_cfg);
+
+    // Malformed JSON: 400, and the connection survives (framing is intact).
+    let (mut w, mut r) = connect(http.addr());
+    send_request(&mut w, "POST", "/v1/solve", "{not json");
+    let resp = read_response(&mut r).expect("malformed-JSON response");
+    assert_eq!(resp.status, 400);
+    let err = ServeError::from_json(&Json::parse(&resp.body).unwrap()).unwrap();
+    assert!(matches!(err, ServeError::BadRequest(_)), "{err:?}");
+    send_request(&mut w, "GET", "/healthz", "");
+    assert_eq!(read_response(&mut r).expect("conn survives").status, 200);
+
+    // Wrong wire version: a typed 400, same connection.
+    let good = SolveRequest::fixed("vdp", 0.0, 1.0, vec![2.0, 0.0], 0.1).unwrap();
+    let mut versioned = good.to_json();
+    if let Json::Obj(m) = &mut versioned {
+        m.insert("v".into(), 99.0.into());
+    }
+    send_request(&mut w, "POST", "/v1/solve", &versioned.to_string());
+    let resp = read_response(&mut r).expect("wrong-version response");
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("unsupported wire version 99"), "{}", resp.body);
+
+    // Oversized body: refused from the content-length header alone — the
+    // 400 arrives without the body ever being sent, then the connection
+    // closes (the unread bytes make it unframeable).
+    let (mut w, mut r) = connect(http.addr());
+    w.write_all(b"POST /v1/solve HTTP/1.1\r\ncontent-length: 2048\r\n\r\n").unwrap();
+    let resp = read_response(&mut r).expect("oversized response");
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("max_body_bytes"), "{}", resp.body);
+    assert!(read_response(&mut r).is_none(), "oversized poisons the connection");
+
+    // Broken request line: 400, connection closed.
+    let (mut w, mut r) = connect(http.addr());
+    w.write_all(b"BLARG\r\n\r\n").unwrap();
+    let resp = read_response(&mut r).expect("broken-line response");
+    assert_eq!(resp.status, 400);
+    assert!(read_response(&mut r).is_none(), "broken framing poisons the connection");
+
+    // Unknown routes and methods get their own statuses, still pre-submit.
+    let (mut w, mut r) = connect(http.addr());
+    send_request(&mut w, "GET", "/nope", "");
+    assert_eq!(read_response(&mut r).expect("404 route").status, 404);
+    send_request(&mut w, "DELETE", "/v1/solve", "");
+    assert_eq!(read_response(&mut r).expect("405 method").status, 405);
+
+    // The acceptance claim: none of the above touched the solve pipeline.
+    let m = server.metrics();
+    assert_eq!(m.submitted, 0, "garbage must never be admitted");
+    assert_eq!(m.batches, 0, "garbage must never dispatch a batch");
+    http.shutdown();
+    server.shutdown();
+}

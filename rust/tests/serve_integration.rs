@@ -6,8 +6,10 @@
 //! behavior is forced with a condition-variable-gated dynamics instead of
 //! timing races.
 
+use nodal::ckpt::CkptPolicy;
 use nodal::grad::aca_backward;
 use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
+use nodal::ode::dense::DenseOutput;
 use nodal::ode::{integrate, integrate_batch, tableau, IntegrateOpts, OdeFunc};
 use nodal::serve::{Clock, ManualClock, ServeConfig, ServeError, SolveRequest, SolveServer};
 use nodal::util::Pcg64;
@@ -68,6 +70,8 @@ fn test_config(max_batch: usize, cap: usize, workers: usize) -> ServeConfig {
         workers,
         ckpt_budget_bytes: 0,
         mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
     }
 }
 
@@ -96,14 +100,18 @@ fn served_results_match_direct_solves() {
     let fixed_handles: Vec<_> = fixed_z0
         .iter()
         .map(|z0| {
-            server.submit(SolveRequest::fixed("vdp", 0.0, 1.5, z0.clone(), 0.05)).unwrap()
+            server
+                .submit(SolveRequest::fixed("vdp", 0.0, 1.5, z0.clone(), 0.05).unwrap())
+                .unwrap()
         })
         .collect();
     let adaptive_handles: Vec<_> = adaptive_z0
         .iter()
         .map(|z0| {
             server
-                .submit(SolveRequest::adaptive("conv", 0.0, 2.0, z0.clone(), 1e-6, 1e-8))
+                .submit(
+                    SolveRequest::adaptive("conv", 0.0, 2.0, z0.clone(), 1e-6, 1e-8).unwrap(),
+                )
                 .unwrap()
         })
         .collect();
@@ -116,8 +124,8 @@ fn served_results_match_direct_solves() {
     for (i, (h, z0)) in fixed_handles.into_iter().zip(&fixed_z0).enumerate() {
         let resp = h.wait().unwrap();
         let direct = integrate(&vdp, 0.0, 1.5, z0, tableau::rk4(), &fixed_opts).unwrap();
-        assert_eq!(resp.z_t1, direct.last().unwrap(), "sample {i}: served != scalar");
-        assert_eq!(resp.z_t1, bt.last(i), "sample {i}: served != integrate_batch");
+        assert_eq!(resp.z_t1(), direct.last().unwrap(), "sample {i}: served != scalar");
+        assert_eq!(resp.z_t1(), bt.last(i), "sample {i}: served != integrate_batch");
         assert_eq!(resp.stats.nfe, direct.nfe, "sample {i}: nfe accounting");
         assert_eq!(resp.stats.steps, direct.len());
         assert!(resp.stats.batch_size >= 1);
@@ -129,7 +137,7 @@ fn served_results_match_direct_solves() {
     for (i, (h, z0)) in adaptive_handles.into_iter().zip(&adaptive_z0).enumerate() {
         let resp = h.wait().unwrap();
         let direct = integrate(&conv, 0.0, 2.0, z0, tableau::dopri5(), &ad_opts).unwrap();
-        for (a, b) in resp.z_t1.iter().zip(direct.last().unwrap()) {
+        for (a, b) in resp.z_t1().iter().zip(direct.last().unwrap()) {
             assert!(
                 (a - b).abs() as f64 <= 1e-6 * (b.abs() as f64).max(1.0),
                 "adaptive sample {i}: {a} vs {b}"
@@ -166,6 +174,7 @@ fn served_gradients_match_aca_backward() {
             server
                 .submit(
                     SolveRequest::fixed("vdp", 0.0, 1.0, z0.clone(), 0.02)
+                        .unwrap()
                         .with_grad(lam.clone()),
                 )
                 .unwrap()
@@ -177,7 +186,7 @@ fn served_gradients_match_aca_backward() {
         let resp = h.wait().unwrap();
         let traj = integrate(&vdp, 0.0, 1.0, z0, tableau::rk4(), &opts).unwrap();
         let direct = aca_backward(&vdp, tableau::rk4(), &traj, lam);
-        let served = resp.grad.expect("gradient requested");
+        let served = resp.grad().expect("gradient requested");
         assert_eq!(served.dl_dz0, direct.dl_dz0, "sample {i}: dL/dz0");
         assert_eq!(served.meter.nfe_backward, direct.meter.nfe_backward, "sample {i}");
     }
@@ -199,7 +208,7 @@ fn overloaded_on_full_queue_then_recovers() {
     // the gate must open before SolveServer::drop joins the gated worker.
     let opener = GateOpener(gate);
 
-    let req = || SolveRequest::fixed("gated", 0.0, 1.0, vec![1.0, 0.0], 0.25);
+    let req = || SolveRequest::fixed("gated", 0.0, 1.0, vec![1.0, 0.0], 0.25).unwrap();
     let handles: Vec<_> = (0..4).map(|_| server.submit(req()).unwrap()).collect();
     let err = server.submit(req()).unwrap_err();
     assert_eq!(err, ServeError::Overloaded, "capacity 4 must bounce the 5th request");
@@ -229,13 +238,10 @@ fn drain_flushes_partial_batches_without_deadline() {
     let handles: Vec<_> = (0..3)
         .map(|i| {
             server
-                .submit(SolveRequest::fixed(
-                    "linear",
-                    0.0,
-                    1.0,
-                    vec![i as f32, 1.0, -1.0, 0.5],
-                    0.1,
-                ))
+                .submit(
+                    SolveRequest::fixed("linear", 0.0, 1.0, vec![i as f32, 1.0, -1.0, 0.5], 0.1)
+                        .unwrap(),
+                )
                 .unwrap()
         })
         .collect();
@@ -261,7 +267,9 @@ fn shutdown_drains_in_flight_requests() {
     let handles: Vec<_> = (0..32)
         .map(|i| {
             server
-                .submit(SolveRequest::fixed("linear", 0.0, 1.0, vec![i as f32, -1.0], 0.05))
+                .submit(
+                    SolveRequest::fixed("linear", 0.0, 1.0, vec![i as f32, -1.0], 0.05).unwrap(),
+                )
                 .unwrap()
         })
         .collect();
@@ -272,7 +280,7 @@ fn shutdown_drains_in_flight_requests() {
     }
     assert_eq!(
         server
-            .submit(SolveRequest::fixed("linear", 0.0, 1.0, vec![0.0, 0.0], 0.05))
+            .submit(SolveRequest::fixed("linear", 0.0, 1.0, vec![0.0, 0.0], 0.05).unwrap())
             .unwrap_err(),
         ServeError::ShuttingDown
     );
@@ -367,7 +375,9 @@ fn mixed_span_forward_batch_runs_once_and_matches_direct() {
         .iter()
         .zip(&z0s)
         .map(|(&t1, z0)| {
-            server.submit(SolveRequest::fixed("vdp", 0.0, t1, z0.clone(), 0.0625)).unwrap()
+            server
+                .submit(SolveRequest::fixed("vdp", 0.0, t1, z0.clone(), 0.0625).unwrap())
+                .unwrap()
         })
         .collect();
     server.drain();
@@ -389,7 +399,7 @@ fn mixed_span_forward_batch_runs_once_and_matches_direct() {
     for ((h, &t1), z0) in handles.into_iter().zip(&t1s).zip(&z0s) {
         let resp = h.wait().unwrap();
         let direct = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
-        assert_eq!(resp.z_t1, direct.last().unwrap(), "t1={t1}: served != direct solve");
+        assert_eq!(resp.z_t1(), direct.last().unwrap(), "t1={t1}: served != direct solve");
         assert_eq!(resp.stats.nfe, direct.nfe, "t1={t1}: NFE accounting");
         assert_eq!(resp.stats.steps, direct.len(), "t1={t1}: steps");
         assert_eq!(resp.stats.batch_size, 4, "t1={t1}: co-batched with all four");
@@ -424,6 +434,7 @@ fn mixed_span_gradient_batch_runs_once_and_matches_direct() {
             server
                 .submit(
                     SolveRequest::fixed("vdp", 0.0, t1, z0.clone(), 0.0625)
+                        .unwrap()
                         .with_grad(lam.clone()),
                 )
                 .unwrap()
@@ -449,8 +460,8 @@ fn mixed_span_gradient_batch_runs_once_and_matches_direct() {
         let resp = h.wait().unwrap();
         let traj = integrate(&vdp, 0.0, t1, z0, tableau::rk4(), &opts).unwrap();
         let direct = aca_backward(&vdp, tableau::rk4(), &traj, lam);
-        assert_eq!(resp.z_t1, traj.last().unwrap(), "t1={t1}: forward");
-        let served = resp.grad.expect("gradient requested");
+        assert_eq!(resp.z_t1(), traj.last().unwrap(), "t1={t1}: forward");
+        let served = resp.grad().expect("gradient requested");
         assert_eq!(served.dl_dz0, direct.dl_dz0, "t1={t1}: dL/dz0");
         assert_eq!(served.dl_dtheta, direct.dl_dtheta, "t1={t1}: dL/dθ");
         assert_eq!(served.meter.nfe_backward, direct.meter.nfe_backward, "t1={t1}");
@@ -484,7 +495,9 @@ fn mixed_start_batch_runs_once_and_matches_direct() {
         .iter()
         .zip(&z0s)
         .map(|(&(t0, t1), z0)| {
-            server.submit(SolveRequest::fixed("vdp", t0, t1, z0.clone(), 0.0625)).unwrap()
+            server
+                .submit(SolveRequest::fixed("vdp", t0, t1, z0.clone(), 0.0625).unwrap())
+                .unwrap()
         })
         .collect();
     server.drain();
@@ -503,7 +516,7 @@ fn mixed_start_batch_runs_once_and_matches_direct() {
     for ((h, &(t0, t1)), z0) in handles.into_iter().zip(&spans).zip(&z0s) {
         let resp = h.wait().unwrap();
         let direct = integrate(&vdp, t0, t1, z0, tableau::rk4(), &opts).unwrap();
-        assert_eq!(resp.z_t1, direct.last().unwrap(), "span [{t0},{t1}]: served != direct");
+        assert_eq!(resp.z_t1(), direct.last().unwrap(), "span [{t0},{t1}]: served != direct");
         assert_eq!(resp.stats.nfe, direct.nfe, "span [{t0},{t1}]: NFE accounting");
         assert_eq!(resp.stats.steps, direct.len(), "span [{t0},{t1}]: steps");
         assert_eq!(resp.stats.batch_size, 3, "span [{t0},{t1}]: co-batched with all three");
@@ -541,7 +554,7 @@ fn panicking_sample_is_contained_and_isolated() {
         .config(test_config(16, 64, 1))
         .clock(clock)
         .start();
-    let mk = |z0: Vec<f32>| SolveRequest::fixed("mine", 0.0, 1.0, z0, 0.1);
+    let mk = |z0: Vec<f32>| SolveRequest::fixed("mine", 0.0, 1.0, z0, 0.1).unwrap();
     let good = server.submit(mk(vec![0.5, 1.0])).unwrap();
     let bad = server.submit(mk(vec![9.0, 0.0])).unwrap(); // first eval panics
     server.drain();
@@ -572,7 +585,7 @@ fn poison_sample_is_isolated_from_its_batch() {
     // The huge initial state overflows `y1²` to infinity, so its solve
     // rejects every trial down to step-size underflow; the tame state
     // co-batched under the same key must still answer.
-    let mk = |z0: Vec<f32>| SolveRequest::adaptive("vdp", 0.0, 4.0, z0, 1e-9, 1e-12);
+    let mk = |z0: Vec<f32>| SolveRequest::adaptive("vdp", 0.0, 4.0, z0, 1e-9, 1e-12).unwrap();
     let good = server.submit(mk(vec![0.05, 0.0])).unwrap();
     let bad = server.submit(mk(vec![f32::MAX.sqrt(), 1.0])).unwrap();
     server.drain();
@@ -580,4 +593,159 @@ fn poison_sample_is_isolated_from_its_batch() {
     let bad = bad.wait();
     assert!(good.is_ok(), "healthy neighbor failed: {good:?}");
     assert!(matches!(bad, Err(ServeError::Solver(_))), "poison must fail alone: {bad:?}");
+}
+
+/// Dense-output acceptance property: across dynamics × {fixed, adaptive},
+/// every served observation grid is bit-identical to building a
+/// [`DenseOutput`] over the direct scalar solve and calling `eval` at each
+/// grid time, and the endpoint matches too. The batch engine's per-sample
+/// bit-equality plus the worker's dense-policy override make this exact,
+/// not approximate.
+#[test]
+fn served_observations_match_direct_dense_eval() {
+    let vdp = VanDerPol::new(0.5);
+    let lin = Linear::new(-0.3, 3);
+    let server = SolveServer::builder()
+        .register("vdp", vdp.clone())
+        .register("linear", lin.clone())
+        .config(test_config(8, 64, 2))
+        .start();
+
+    let grid = vec![0.1, 0.33, 0.5, 0.999, 1.4];
+    let mut rng = Pcg64::seed(7);
+    // (dynamics, dim, fixed step or None=adaptive) × 2 samples each, all
+    // submitted up front so compatible pairs co-batch.
+    let combos: [(&str, usize, Option<f64>); 4] =
+        [("vdp", 2, Some(0.05)), ("vdp", 2, None), ("linear", 3, Some(0.05)), ("linear", 3, None)];
+    let mut cases = Vec::new();
+    for &(name, dim, h) in &combos {
+        for _ in 0..2 {
+            let z0: Vec<f32> = (0..dim).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let b = SolveRequest::builder(name).span(0.0, 1.5).state(z0).observe_at(grid.clone());
+            let b = match h {
+                Some(h) => b.fixed(h),
+                None => b.adaptive(1e-6, 1e-8),
+            };
+            let req = b.build().unwrap();
+            let handle = server.submit(req.clone()).unwrap();
+            cases.push((name, req, handle));
+        }
+    }
+    server.drain();
+
+    for (i, (name, req, handle)) in cases.into_iter().enumerate() {
+        let resp = handle.wait().unwrap();
+        // The reference: a direct scalar solve with a dense store and a
+        // DenseOutput interpolant evaluated pointwise on the same grid.
+        let mut opts = req.opts();
+        opts.ckpt = CkptPolicy::from_budget(0);
+        let (z_t1_direct, direct): (Vec<f32>, Vec<Vec<f32>>) = if name == "vdp" {
+            let traj = integrate(&vdp, req.t0, req.t1, &req.z0, req.tab, &opts).unwrap();
+            let dense = DenseOutput::new(&vdp, &traj);
+            (traj.last().unwrap().to_vec(), grid.iter().map(|&t| dense.eval(t)).collect())
+        } else {
+            let traj = integrate(&lin, req.t0, req.t1, &req.z0, req.tab, &opts).unwrap();
+            let dense = DenseOutput::new(&lin, &traj);
+            (traj.last().unwrap().to_vec(), grid.iter().map(|&t| dense.eval(t)).collect())
+        };
+        assert_eq!(resp.z_t1(), z_t1_direct, "case {i} ({name}): endpoint");
+        let zs = resp.observations().expect("observation payload");
+        assert_eq!(zs.len(), grid.len(), "case {i} ({name}): grid length");
+        for ((&t, served), want) in grid.iter().zip(zs).zip(&direct) {
+            let got_bits: Vec<u32> = served.iter().map(|v| v.to_bits()).collect();
+            let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "case {i} ({name}): observation at t={t}");
+        }
+    }
+}
+
+/// A linear dynamics that advances a shared [`ManualClock`] on every
+/// evaluation: execution order becomes a deterministic function of batch
+/// scheduling, so queue-wait metrics can be asserted exactly, without
+/// sleeps.
+struct TickingLinear {
+    inner: Linear,
+    clock: Arc<ManualClock>,
+    tick: Duration,
+}
+
+impl OdeFunc for TickingLinear {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn eval(&self, t: f64, z: &[f32], dz: &mut [f32]) {
+        self.clock.advance(self.tick);
+        self.inner.eval(t, z, dz);
+    }
+    fn vjp(&self, t: f64, z: &[f32], w: &[f32], wjz: &mut [f32], wjp: &mut [f32]) {
+        self.inner.vjp(t, z, w, wjz, wjp);
+    }
+}
+
+/// Fairness regression (the QoS acceptance test): a tenant flooding the
+/// queue with many batches must not starve a calm tenant. Deficit
+/// round-robin interleaves the calm tenant's single batch right after the
+/// hot tenant's first one, so the calm tenant's per-key p99 queue wait
+/// stays strictly below the hot tenant's own — under plain FIFO emission
+/// (all hot batches first) the inequality flips.
+#[test]
+fn flooding_tenant_does_not_starve_calm_tenant() {
+    let clock = ManualClock::new();
+    let tick = Duration::from_millis(1);
+    let mk_dyn = || TickingLinear { inner: Linear::new(-0.5, 2), clock: clock.clone(), tick };
+    let mut cfg = test_config(64, 64, 1);
+    // One hot batch per DRR visit: the calm tenant flushes in round one.
+    cfg.quota_quantum = 2;
+    cfg.quota_max_deficit = 2; // clamps up to max_batch internally
+    let server = SolveServer::builder()
+        .register("hot", mk_dyn())
+        .register("calm", mk_dyn())
+        .config(cfg)
+        .clock(clock.clone())
+        .start();
+
+    // Hot tenant: 6 requests across 3 distinct fixed steps = 3 batch keys
+    // of 2 samples each. Calm tenant: one batch of 2. All submitted at
+    // virtual time zero; nothing flushes (max_batch 64, huge deadline)
+    // until drain() emits everything in DRR order onto the single worker.
+    let mut handles = Vec::new();
+    for &h in &[0.25f64, 0.125, 0.0625] {
+        for i in 0..2 {
+            let req = SolveRequest::fixed("hot", 0.0, 1.0, vec![0.1 * i as f32, 1.0], h).unwrap();
+            handles.push(server.submit(req).unwrap());
+        }
+    }
+    for i in 0..2 {
+        let req =
+            SolveRequest::fixed("calm", 0.0, 1.0, vec![0.2 * i as f32, -1.0], 0.25).unwrap();
+        handles.push(server.submit(req).unwrap());
+    }
+    server.drain();
+    for (i, h) in handles.into_iter().enumerate() {
+        assert!(h.wait().is_ok(), "request {i} starved or failed");
+    }
+
+    let m = server.metrics();
+    let wait = |key: &str| {
+        m.per_key_queue_wait
+            .iter()
+            .find(|(k, _)| k == key)
+            .unwrap_or_else(|| panic!("no per-key queue-wait for {key}"))
+            .1
+    };
+    let hot = wait("hot");
+    let calm = wait("calm");
+    assert_eq!(hot.count, 6, "all hot requests recorded");
+    assert_eq!(calm.count, 2, "all calm requests recorded");
+    // DRR emission order is hot₁, calm, hot₂, hot₃; every eval ticks the
+    // clock, so the calm batch waits only behind hot₁ while the last hot
+    // batch waits behind everything — the calm tenant's p99 must sit
+    // strictly below the flooding tenant's.
+    assert!(
+        calm.p99_ms < hot.p99_ms,
+        "calm tenant starved: calm p99 {} ms >= hot p99 {} ms",
+        calm.p99_ms,
+        hot.p99_ms
+    );
+    assert!(calm.max_ms < hot.max_ms, "calm {} vs hot {}", calm.max_ms, hot.max_ms);
 }

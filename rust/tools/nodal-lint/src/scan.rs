@@ -55,6 +55,7 @@ const ENV_HELPERS: &[(&str, &str)] = &[
     ("ckpt/mod.rs", "parse_budget_env"),
     ("ckpt/mod.rs", "env_budget_bytes"),
     ("serve/mod.rs", "env_clamped"),
+    ("serve/http.rs", "env_clamped"),
     ("dist/env.rs", "from_env"),
     ("dist/env.rs", "env_usize"),
 ];

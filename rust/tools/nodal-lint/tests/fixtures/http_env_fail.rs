@@ -1,0 +1,14 @@
+// Fixture: the same helper name OUTSIDE the designated file (virtual path
+// `rust/src/serve/wire.rs`) must be flagged — the env-knob allowlist is
+// (path suffix, fn name) pairs, never fn name alone.
+
+fn env_clamped(name: &str, default: usize) -> usize {
+    match std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n,
+        None => default,
+    }
+}
+
+pub fn sneak_port() -> usize {
+    env_clamped("NODAL_HTTP_PORT", 7118)
+}

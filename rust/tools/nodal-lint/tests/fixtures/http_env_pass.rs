@@ -1,0 +1,14 @@
+// Fixture: the HTTP front door's parse-and-clamp helper (virtual path
+// `rust/src/serve/http.rs`) is a designated env reader — `NODAL_HTTP_*`
+// knobs are parsed and clamped there and nowhere else.
+
+fn env_clamped(name: &str, default: usize, lo: usize, hi: usize) -> usize {
+    match std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.clamp(lo, hi),
+        None => default,
+    }
+}
+
+pub fn max_body_bytes() -> usize {
+    env_clamped("NODAL_HTTP_MAX_BODY_BYTES", 1 << 20, 1024, 64 << 20)
+}
