@@ -28,8 +28,26 @@ use std::sync::Arc;
 /// One round trip as a raw HTTP/1.1 client: write the request, parse the
 /// status line, headers, and `content-length`-framed body.
 fn round_trip(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let (status, _, body) = round_trip_with(addr, method, path, &[], body)?;
+    Ok((status, body))
+}
+
+/// Like [`round_trip`], with extra request headers; also returns the
+/// response headers, lower-cased.
+fn round_trip_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut s = TcpStream::connect(addr).context("connect to front door")?;
-    let req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len());
+    let mut req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n", body.len());
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
     s.write_all(req.as_bytes()).context("write request")?;
     let mut r = BufReader::new(s);
     let mut line = String::new();
@@ -40,6 +58,7 @@ fn round_trip(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, 
         .ok_or_else(|| anyhow!("malformed status line: {line:?}"))?
         .parse()
         .context("parse status code")?;
+    let mut resp_headers = Vec::new();
     let mut len = 0usize;
     loop {
         let mut h = String::new();
@@ -49,14 +68,16 @@ fn round_trip(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, 
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                len = v.trim().parse().context("parse content-length")?;
+            let (k, v) = (k.trim().to_ascii_lowercase(), v.trim().to_string());
+            if k == "content-length" {
+                len = v.parse().context("parse content-length")?;
             }
+            resp_headers.push((k, v));
         }
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body).context("read body")?;
-    Ok((status, String::from_utf8(body).context("utf8 body")?))
+    Ok((status, resp_headers, String::from_utf8(body).context("utf8 body")?))
 }
 
 fn solve(addr: &str, req: &SolveRequest) -> Result<SolveResponse> {
@@ -69,9 +90,13 @@ fn solve(addr: &str, req: &SolveRequest) -> Result<SolveResponse> {
 
 fn main() -> Result<()> {
     // Ephemeral port so the example never collides with a real deployment;
-    // production binds NODAL_HTTP_PORT via `HttpConfig::from_env()`.
+    // production binds NODAL_HTTP_PORT via the same `from_env` defaults.
+    // `from_env` also picks up `NODAL_TRACE_SAMPLE_N` / `NODAL_TRACE_DIR`,
+    // so CI's traced smoke leaves its JSONL export under results/trace.
     let server = Arc::new(SolveServer::builder().register("vdp", VanDerPol::paper()).start());
-    let mut http = HttpServer::spawn_at(server, "127.0.0.1:0", HttpConfig::default())?;
+    let cfg = HttpConfig::from_env();
+    let trace_dir = cfg.trace.dir.clone();
+    let mut http = HttpServer::spawn_at(server, "127.0.0.1:0", cfg)?;
     let addr = http.addr().to_string();
     println!("http front door listening on {addr}");
 
@@ -125,6 +150,38 @@ fn main() -> Result<()> {
         m.get("submitted")?.as_usize()?,
         m.get("completed")?.as_usize()?
     );
+
+    // Prometheus exposition of the same snapshot, for scrape-based setups.
+    let (status, _, prom) =
+        round_trip_with(&addr, "GET", "/v1/metrics?format=prometheus", &[], "")?;
+    assert_eq!(status, 200);
+    assert!(prom.contains("nodal_requests_completed_total"), "prometheus body:\n{prom}");
+    println!(
+        "GET /v1/metrics?format=prometheus -> {} lines of text exposition",
+        prom.lines().count()
+    );
+
+    // Traced solve: an `x-nodal-trace` header turns on tracing for that one
+    // request, the id echoes back, and the stitched span tree is queryable
+    // (and exported as JSONL under the configured trace dir).
+    let id = "00000000000000e5";
+    let (status, headers, _) = round_trip_with(
+        &addr,
+        "POST",
+        "/v1/solve",
+        &[("x-nodal-trace", id)],
+        &req.to_json().to_string(),
+    )?;
+    assert_eq!(status, 200);
+    let echoed = headers.iter().find(|(k, _)| k == "x-nodal-trace").map(|(_, v)| v.as_str());
+    assert_eq!(echoed, Some(id), "trace id must echo on the response");
+    let (status, _, body) = round_trip_with(&addr, "GET", &format!("/v1/trace/{id}"), &[], "")?;
+    assert_eq!(status, 200, "trace route: {body}");
+    let spans = Json::parse(&body)?.get("spans")?.as_arr().context("spans array")?.len();
+    assert!(spans >= 4, "expected at least http/admission/queue/solve spans, got {spans}");
+    let exported = trace_dir.join(format!("{id}.jsonl"));
+    assert!(exported.is_file(), "JSONL export missing at {}", exported.display());
+    println!("traced solve {id} -> {spans} spans via /v1/trace, JSONL at {}", exported.display());
 
     http.shutdown();
     println!("front door down; all wire answers matched the engine bit-for-bit");

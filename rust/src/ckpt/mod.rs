@@ -38,7 +38,11 @@
 //! the amortized overhead is one extra forward evaluation per *dropped*
 //! state — ANODE's recompute bound. Replay evaluations are metered into
 //! [`CostMeter::nfe_replay`](crate::grad::CostMeter::nfe_replay), never into
-//! `nfe_backward`, so the paper's Table 1/2 accounting stays honest.
+//! `nfe_backward`, so the paper's Table 1/2 accounting stays honest. The
+//! same meter feeds the tracing layer: a traced request's `replay` span
+//! (see [`crate::obs`]) carries `nfe_replay` and `replay_peak_bytes`, so
+//! per-request replay cost is attributed in the trace exactly as it is in
+//! the aggregate tables.
 //!
 //! `Budgeted` thins **live**: whenever storing the next state would push the
 //! anchor count over `budget / (4D)`, the keep-stride doubles and off-stride

@@ -21,16 +21,28 @@
 //! included — surface through [`ResponseHandle::wait`] exactly as they
 //! do in-process, so backpressure crosses the process boundary intact.
 //!
+//! **Tracing.** A traced request's [`TraceCtx`] crosses the wire inside
+//! the solve frame: the dispatcher records a `dispatch` event span tagged
+//! with the chosen shard (plus `steal`/`failover` events when routing
+//! departs from the hash), re-parents the context under that event, and
+//! the shard's spans come back piggybacked on the `resp` frame — ingested
+//! into the local [`TraceStore`](crate::obs::TraceStore) *before* the
+//! waiter is fulfilled, so one request routed through the dispatcher
+//! yields a single stitched cross-process trace.
+//!
 //! [`ShardServer`]: super::shard::ShardServer
 //! [`BatchKey`]: crate::serve::request::BatchKey
+//! [`TraceCtx`]: crate::obs::TraceCtx
 
 use super::transport::{
     connect_retry, encode_frame, recv_frame, send_frame, write_frame_bytes, TransportOpts,
 };
-use crate::serve::metrics::{LatencySummary, MetricsSnapshot};
+use crate::obs::{self, SpanRec};
+use crate::serve::metrics::MetricsSnapshot;
 use crate::serve::request::{
     BatchKey, ResponseHandle, ResponseSlot, ServeError, SolveRequest, SolveResponse,
 };
+use crate::serve::{Clock, SolveFrontend, Waiter, WallClock};
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -38,6 +50,7 @@ use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Dispatcher tuning.
 #[derive(Debug, Clone)]
@@ -124,6 +137,7 @@ struct Inner {
     next_id: AtomicUsize,
     steal_margin: usize,
     transport: TransportOpts,
+    clock: Arc<dyn Clock>,
 }
 
 impl Inner {
@@ -132,7 +146,7 @@ impl Inner {
     /// mark the shard unhealthy and retry on the survivors — unless the
     /// reader thread's drain already adopted the entry, in which case
     /// the re-dispatch is its problem and ours is done.
-    fn dispatch(&self, req: SolveRequest, slot: Arc<ResponseSlot>) -> Result<(), ServeError> {
+    fn dispatch(&self, mut req: SolveRequest, slot: Arc<ResponseSlot>) -> Result<(), ServeError> {
         let hash = key_hash(&req.batch_key());
         loop {
             let loads: Vec<(usize, usize)> = self
@@ -145,7 +159,24 @@ impl Inner {
             if loads.is_empty() {
                 return Err(ServeError::ShuttingDown);
             }
-            let shard = &self.shards[route(hash, &loads, self.steal_margin)];
+            let chosen = route(hash, &loads, self.steal_margin);
+            let primary = loads[(hash % loads.len() as u64) as usize].0;
+            if let Some(ctx) = req.trace {
+                // The routing decision becomes an event span tagged with
+                // the chosen shard; downstream (shard-side) spans parent
+                // to it, stitching the cross-process trace.
+                let at = self.clock.now();
+                let mut ev_ctx = ctx;
+                ev_ctx.shard = chosen as i64;
+                let ev = SpanRec::event(ev_ctx, obs::DISPATCH, at);
+                obs::record(ev);
+                if chosen != primary {
+                    obs::record(SpanRec::event(ev.ctx(), obs::STEAL, at));
+                }
+                obs::publish();
+                req.trace = Some(ev.ctx());
+            }
+            let shard = &self.shards[chosen];
             let id = self.next_id.fetch_add(1, Ordering::SeqCst) as u64;
             shard
                 .pending
@@ -206,6 +237,18 @@ impl Dispatcher {
     /// starting degraded is a deployment error, unlike *becoming*
     /// degraded, which failover handles.
     pub fn connect(addrs: &[String], cfg: &DispatcherConfig) -> Result<Dispatcher> {
+        Self::connect_with_clock(addrs, cfg, Arc::new(WallClock::default()))
+    }
+
+    /// [`Dispatcher::connect`] with an injected clock for the dispatch /
+    /// steal / failover event timestamps (tests use a
+    /// [`ManualClock`](crate::serve::ManualClock) for deterministic
+    /// traces).
+    pub fn connect_with_clock(
+        addrs: &[String],
+        cfg: &DispatcherConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Dispatcher> {
         let mut shards = Vec::with_capacity(addrs.len());
         let mut read_halves = Vec::with_capacity(addrs.len());
         for addr in addrs {
@@ -225,6 +268,7 @@ impl Dispatcher {
             next_id: AtomicUsize::new(0),
             steal_margin: cfg.steal_margin,
             transport: cfg.transport.clone(),
+            clock,
         });
         let readers = read_halves
             .into_iter()
@@ -300,6 +344,24 @@ impl Drop for Dispatcher {
     }
 }
 
+/// The dispatcher can sit directly behind the HTTP front door: submit
+/// routes across the fleet, metrics merge shard snapshots bucket-exactly,
+/// and spans are stamped off the injected clock.
+impl SolveFrontend for Dispatcher {
+    fn submit_front(&self, req: SolveRequest) -> Result<Waiter, ServeError> {
+        let handle = self.submit(req)?;
+        Ok(Box::new(move || handle.wait()))
+    }
+
+    fn metrics_front(&self) -> MetricsSnapshot {
+        self.metrics().map(|r| r.totals()).unwrap_or_default()
+    }
+
+    fn now(&self) -> Duration {
+        self.inner.clock.now()
+    }
+}
+
 /// Per-link reader: decode correlated responses and fulfil their slots.
 /// On EOF (shard death or dispatcher shutdown) drain the link's pending
 /// map and re-dispatch every orphan to the survivors; with none left,
@@ -320,6 +382,19 @@ fn reader_loop(inner: &Inner, idx: usize, mut stream: TcpStream) {
         let Some(entry) = shard.pending.lock().unwrap().remove(&(id as u64)) else {
             continue; // already failed over; late answer loses the race
         };
+        // Piggybacked shard-side spans join the local store BEFORE the
+        // waiter is fulfilled, so the stitched trace is complete by the
+        // time the requester wakes. Spans the shard left untagged get
+        // this link's shard index.
+        if let Some(spans_json) = msg.opt("spans") {
+            let mut spans = obs::spans_from_json(spans_json);
+            for s in &mut spans {
+                if s.shard < 0 {
+                    s.shard = idx as i64;
+                }
+            }
+            obs::global().ingest(&spans);
+        }
         let ok = matches!(msg.opt("ok"), Some(Json::Bool(true)));
         let result = if ok {
             match msg.get("resp").and_then(SolveResponse::from_json) {
@@ -341,6 +416,10 @@ fn reader_loop(inner: &Inner, idx: usize, mut stream: TcpStream) {
         ids.into_iter().filter_map(|id| pending.remove(&id)).collect()
     };
     for e in orphans {
+        if let Some(ctx) = e.req.trace {
+            obs::record(SpanRec::event(ctx, obs::FAILOVER, inner.clock.now()));
+            obs::publish();
+        }
         if inner.dispatch(e.req, e.slot.clone()).is_err() {
             e.slot.fulfill(Err(ServeError::ShuttingDown));
         }
@@ -354,10 +433,13 @@ pub struct DistMetricsReport {
 
 impl DistMetricsReport {
     /// Merge the shard snapshots into one fleet view. Counters add;
-    /// means are count-weighted; latency quantiles are not recoverable
-    /// from per-shard summaries, so the merged p50/p95/p99 report the
-    /// max across shards — a conservative upper bound, documented as
-    /// such.
+    /// means are count-weighted; latency summaries carry their raw
+    /// histogram bucket counts across the wire, so the merge is
+    /// **bucket-wise exact** ([`LatencySummary::merge`]): a fleet p99 is
+    /// bit-identical to the p99 of one histogram fed every shard's
+    /// stream, not a lossy max-bound over pre-computed floats.
+    ///
+    /// [`LatencySummary::merge`]: crate::serve::metrics::LatencySummary::merge
     pub fn totals(&self) -> MetricsSnapshot {
         let mut t = MetricsSnapshot::default();
         let mut batch_weight = 0.0f64;
@@ -369,6 +451,10 @@ impl DistMetricsReport {
             t.batches += m.batches;
             t.nfe_total += m.nfe_total;
             t.nfe_max = t.nfe_max.max(m.nfe_max);
+            t.http_conns_accepted += m.http_conns_accepted;
+            t.http_conns_active += m.http_conns_active;
+            t.http_conns_reused += m.http_conns_reused;
+            t.http_reqs_per_conn = t.http_reqs_per_conn.merge(&m.http_reqs_per_conn);
             batch_weight += m.mean_batch_size * m.batches as f64;
             if m.batch_sizes.len() > t.batch_sizes.len() {
                 t.batch_sizes.resize(m.batch_sizes.len(), 0);
@@ -376,15 +462,14 @@ impl DistMetricsReport {
             for (slot, c) in t.batch_sizes.iter_mut().zip(&m.batch_sizes) {
                 *slot += c;
             }
-            t.queue_wait = merge_latency(&t.queue_wait, &m.queue_wait);
-            t.service = merge_latency(&t.service, &m.service);
-            // Per-tenant fairness summaries merge key-wise: counts add,
-            // quantiles take the cross-shard max (same conservative bound
-            // as the global summaries).
+            t.queue_wait = t.queue_wait.merge(&m.queue_wait);
+            t.service = t.service.merge(&m.service);
+            // Per-tenant fairness summaries merge key-wise with the same
+            // bucket-exact kernel as the global summaries.
             for (k, l) in &m.per_key_queue_wait {
                 match t.per_key_queue_wait.iter_mut().find(|(tk, _)| tk == k) {
-                    Some((_, tl)) => *tl = merge_latency(tl, l),
-                    None => t.per_key_queue_wait.push((k.clone(), *l)),
+                    Some((_, tl)) => *tl = tl.merge(l),
+                    None => t.per_key_queue_wait.push((k.clone(), l.clone())),
                 }
             }
         }
@@ -392,23 +477,6 @@ impl DistMetricsReport {
         t.mean_batch_size = if t.batches > 0 { batch_weight / t.batches as f64 } else { 0.0 };
         t.nfe_mean = if t.completed > 0 { t.nfe_total as f64 / t.completed as f64 } else { 0.0 };
         t
-    }
-}
-
-fn merge_latency(a: &LatencySummary, b: &LatencySummary) -> LatencySummary {
-    let count = a.count + b.count;
-    let mean_ms = if count > 0 {
-        (a.mean_ms * a.count as f64 + b.mean_ms * b.count as f64) / count as f64
-    } else {
-        0.0
-    };
-    LatencySummary {
-        count,
-        mean_ms,
-        p50_ms: a.p50_ms.max(b.p50_ms),
-        p95_ms: a.p95_ms.max(b.p95_ms),
-        p99_ms: a.p99_ms.max(b.p99_ms),
-        max_ms: a.max_ms.max(b.max_ms),
     }
 }
 
@@ -427,6 +495,7 @@ impl std::fmt::Display for DistMetricsReport {
 mod tests {
     use super::*;
     use crate::ode::tableau;
+    use crate::serve::metrics::{LatencySummary, LogHistogram};
     use crate::serve::request::{Lane, Tolerance};
 
     fn req(dynamics: &str, rtol: f64) -> SolveRequest {
@@ -440,6 +509,7 @@ mod tests {
             grad: None,
             observe_at: Vec::new(),
             lane: Lane::Interactive,
+            trace: None,
         }
     }
 
@@ -482,26 +552,37 @@ mod tests {
         assert_eq!(route(0, &tied, 4), 1);
     }
 
-    fn lat(count: u64, ms: f64) -> LatencySummary {
-        LatencySummary { count, mean_ms: ms, p50_ms: ms, p95_ms: ms, p99_ms: ms, max_ms: ms }
+    /// A summary built the same way a live shard builds one: every value
+    /// through a [`LogHistogram`], then `from_parts` over its raw state.
+    fn lat(values_ns: &[u64]) -> LatencySummary {
+        let h = LogHistogram::default();
+        for &v in values_ns {
+            h.record(v);
+        }
+        LatencySummary::from_parts(h.count(), h.sum(), h.max(), h.bucket_counts())
     }
 
+    /// The satellite regression: merging two shards' summaries of
+    /// disjoint streams is **bit-identical** to one histogram fed both
+    /// streams — quantiles included, not a max-bound.
     #[test]
-    fn latency_merge_weights_means_and_bounds_quantiles() {
-        let a = LatencySummary { p95_ms: 2.0, p99_ms: 2.0, max_ms: 2.0, ..lat(3, 1.0) };
-        let b = lat(1, 5.0);
-        let m = merge_latency(&a, &b);
-        assert_eq!(m.count, 4);
-        assert!((m.mean_ms - 2.0).abs() < 1e-12);
-        assert_eq!(m.p95_ms, 5.0);
-        assert_eq!(m.max_ms, 5.0);
-        let z = merge_latency(&LatencySummary::default(), &LatencySummary::default());
-        assert_eq!(z.count, 0);
-        assert_eq!(z.mean_ms, 0.0);
+    fn two_shard_merge_equals_single_histogram_fed_both_streams() {
+        let stream_a: Vec<u64> = (1..=40u64).map(|i| i * 130_000).collect();
+        let stream_b: Vec<u64> = (1..=15u64).map(|i| i * i * 1_900_000).collect();
+        let a = MetricsSnapshot { queue_wait: lat(&stream_a), ..MetricsSnapshot::default() };
+        let b = MetricsSnapshot { queue_wait: lat(&stream_b), ..MetricsSnapshot::default() };
+        let report = DistMetricsReport { shards: vec![("a".into(), a), ("b".into(), b)] };
+        let merged = report.totals().queue_wait;
+
+        let both: Vec<u64> = stream_a.iter().chain(&stream_b).copied().collect();
+        assert_eq!(merged, lat(&both), "fleet summary == single-histogram summary");
+        assert!(merged.p99_ms > 0.0, "non-degenerate quantiles");
     }
 
     #[test]
     fn totals_aggregate_across_shards() {
+        let vdp_a = [2_000_000u64; 5];
+        let vdp_b = [9_000_000u64];
         let a = MetricsSnapshot {
             submitted: 10,
             completed: 8,
@@ -510,7 +591,12 @@ mod tests {
             batch_sizes: vec![0, 1, 3],
             nfe_total: 80,
             nfe_max: 20,
-            per_key_queue_wait: vec![("linear".into(), lat(3, 1.0)), ("vdp".into(), lat(5, 2.0))],
+            http_conns_accepted: 3,
+            http_conns_reused: 1,
+            per_key_queue_wait: vec![
+                ("linear".into(), lat(&[1_000_000; 3])),
+                ("vdp".into(), lat(&vdp_a)),
+            ],
             ..MetricsSnapshot::default()
         };
         let b = MetricsSnapshot {
@@ -521,7 +607,8 @@ mod tests {
             batch_sizes: vec![0, 0, 1, 1],
             nfe_total: 100,
             nfe_max: 50,
-            per_key_queue_wait: vec![("vdp".into(), lat(1, 9.0))],
+            http_conns_accepted: 2,
+            per_key_queue_wait: vec![("vdp".into(), lat(&vdp_b))],
             ..MetricsSnapshot::default()
         };
         let report = DistMetricsReport { shards: vec![("a".into(), a), ("b".into(), b)] };
@@ -534,11 +621,14 @@ mod tests {
         assert_eq!(t.nfe_total, 180);
         assert_eq!(t.nfe_max, 50);
         assert!((t.nfe_mean - 15.0).abs() < 1e-12);
+        assert_eq!(t.http_conns_accepted, 5, "door counters add across shards");
+        assert_eq!(t.http_conns_reused, 1);
         assert_eq!(t.per_key_queue_wait.len(), 2, "per-tenant entries merge key-wise");
         assert_eq!(t.per_key_queue_wait[0].0, "linear");
         assert_eq!(t.per_key_queue_wait[0].1.count, 3);
         assert_eq!(t.per_key_queue_wait[1].0, "vdp");
         assert_eq!(t.per_key_queue_wait[1].1.count, 6, "vdp counts add across shards");
-        assert_eq!(t.per_key_queue_wait[1].1.p99_ms, 9.0, "quantiles bound by max");
+        let vdp_both: Vec<u64> = vdp_a.iter().chain(&vdp_b).copied().collect();
+        assert_eq!(t.per_key_queue_wait[1].1, lat(&vdp_both), "per-tenant merge is exact");
     }
 }

@@ -9,7 +9,11 @@
 //! * `{"kind":"solve","id":N,"req":{…}}` → `{"kind":"resp","id":N,…}`
 //!   with either `"ok":true,"resp":{…}` or `"ok":false,"err":{…}` —
 //!   admission errors ([`ServeError::Overloaded`] included) travel on the
-//!   same channel, so backpressure propagates end-to-end.
+//!   same channel, so backpressure propagates end-to-end. A traced
+//!   request's locally recorded spans ride back on the same frame as a
+//!   `"spans"` array (taken from the shard's
+//!   [`TraceStore`](crate::obs::TraceStore) exactly once), which is how
+//!   the dispatcher stitches one cross-process trace.
 //! * `{"kind":"metrics"}` → `{"kind":"metrics","snapshot":{…}}`.
 //! * `{"kind":"shutdown"}` → `{"kind":"bye"}`, then the connection closes.
 //!
@@ -21,6 +25,7 @@
 //! looks like from the dispatcher's side.
 
 use super::transport::{encode_frame, recv_frame, write_frame_bytes};
+use crate::obs::{self, SpanRec};
 use crate::serve::request::{ServeError, SolveRequest, SolveResponse};
 use crate::serve::SolveServer;
 use crate::util::json::{obj, Json};
@@ -141,23 +146,34 @@ fn send_locked(writer: &Mutex<TcpStream>, body: &Json) {
     let _ = write_frame_bytes(&mut *w, &bytes);
 }
 
-/// Write one correlated response frame (ok or error) to the shared writer.
-fn respond(writer: &Mutex<TcpStream>, id: usize, result: Result<SolveResponse, ServeError>) {
-    let body = match result {
-        Ok(r) => obj(vec![
-            ("kind", "resp".into()),
+/// Write one correlated response frame (ok or error) to the shared writer,
+/// piggybacking the solve's recorded spans when the request was traced
+/// (span JSON carries only integers and hex strings, so the frame stays
+/// wire-deterministic).
+fn respond(
+    writer: &Mutex<TcpStream>,
+    id: usize,
+    result: Result<SolveResponse, ServeError>,
+    spans: &[SpanRec],
+) {
+    let mut pairs = match result {
+        Ok(r) => vec![
+            ("kind", Json::from("resp")),
             ("id", id.into()),
             ("ok", true.into()),
             ("resp", r.to_json()),
-        ]),
-        Err(e) => obj(vec![
-            ("kind", "resp".into()),
+        ],
+        Err(e) => vec![
+            ("kind", Json::from("resp")),
             ("id", id.into()),
             ("ok", false.into()),
             ("err", e.to_json()),
-        ]),
+        ],
     };
-    send_locked(writer, &body);
+    if !spans.is_empty() {
+        pairs.push(("spans", obs::spans_to_json(spans)));
+    }
+    send_locked(writer, &obj(pairs));
 }
 
 fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>) {
@@ -185,21 +201,27 @@ fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>) {
                 let req = match msg.get("req").and_then(SolveRequest::from_json) {
                     Ok(r) => r,
                     Err(e) => {
-                        respond(&writer, id, Err(ServeError::BadRequest(e.to_string())));
+                        respond(&writer, id, Err(ServeError::BadRequest(e.to_string())), &[]);
                         continue;
                     }
                 };
+                let trace = req.trace.map(|c| c.trace);
                 match server.submit(req) {
                     Ok(handle) => {
                         // Answer out-of-band when the batch completes; the
                         // read loop keeps accepting pipelined requests.
                         let writer = writer.clone();
                         waiters.push(std::thread::spawn(move || {
+                            // Emitters publish before fulfilling, so by the
+                            // time wait() returns the solve's spans are in
+                            // the local store; hand them back exactly once.
                             let result = handle.wait();
-                            respond(&writer, id, result);
+                            let spans =
+                                trace.map(|t| obs::global().take(t)).unwrap_or_default();
+                            respond(&writer, id, result, &spans);
                         }));
                     }
-                    Err(e) => respond(&writer, id, Err(e)),
+                    Err(e) => respond(&writer, id, Err(e), &[]),
                 }
             }
             "metrics" => {

@@ -12,6 +12,13 @@
 //! expressed through socket timeouts (`set_read_timeout`) and bounded
 //! retry loops with `thread::sleep` backoff, so the module stays clean
 //! under the repo-wide `Instant::now` ban.
+//!
+//! Trace context rides *inside* the framed messages, not in the framing:
+//! a solve frame's request body carries the optional `trace` /
+//! `trace_parent` / `trace_shard` fields (see `serve::request`), and a
+//! shard's `resp` frame may carry a `"spans"` array of integer/hex-only
+//! span objects (see [`crate::obs`]) — both stay within the
+//! wire-determinism rule because no float fields are involved.
 
 use crate::util::json::Json;
 use anyhow::{bail, ensure, Context, Result};

@@ -91,6 +91,7 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
     // nodal-lint: hot
     while !active.is_empty() {
         let na = active.len();
+        crate::obs::hot_count(crate::obs::CTR_REV_ROUNDS, 1);
         for (a, &i) in active.iter().enumerate() {
             let k = rem[i] - 1;
             let tr = &traj.tracks[i];
@@ -104,6 +105,9 @@ pub fn aca_backward_batch<F: OdeFunc + ?Sized>(
             dth_p[a * p..(a + 1) * p].copy_from_slice(&dthetas[i * p..(i + 1) * p]);
             nv_p[a] = 0;
         }
+        // One `eval_batch` + `vjp_batch` dispatch per stage inside the
+        // shared-stage step adjoint.
+        crate::obs::hot_count(crate::obs::CTR_REV_SWEEPS, tab.stages as u64);
         let nfe_each = step_vjp_batch(
             f,
             tab,

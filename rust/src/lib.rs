@@ -203,6 +203,39 @@
 //! (`tests/dist_integration.rs`) and as a real two-process smoke in CI
 //! (`examples/dist_train.rs`).
 //!
+//! ## Observability
+//!
+//! Every layer above emits **structured spans** into [`obs`], a
+//! zero-dependency tracing subsystem, so one request's cost decomposes
+//! exactly the way the paper argues about cost. The span taxonomy follows
+//! a solve through the stack: `http_request` → `admission` →
+//! `queue_wait` (per request, with its QoS lane and DRR deferral count) →
+//! `batch_form` (flush reason and size) → `solve` → `forward` (active-set
+//! rounds, `eval_batch` stage sweeps, NFE) → `reverse` (reverse rounds,
+//! `vjp_batch` sweeps, NFE) → `replay` (`SegmentCache` recompute cost,
+//! `nfe_replay` attributed); `dispatch`/`steal`/`failover` events mark
+//! dist routing, and shard-side spans carry their shard id so a
+//! [`dist::Dispatcher`]-routed solve stitches into **one cross-process
+//! trace** (span context rides inside the wire frames). Per-span NFE
+//! attribution sums to the request's `CostMeter` totals.
+//!
+//! **Sampling:** the HTTP front door traces any request carrying an
+//! `x-nodal-trace` header (echoed back on the response), and every Nth
+//! unsolicited request when `NODAL_TRACE_SAMPLE_N` > 0. Traces are served
+//! live at `GET /v1/trace/<id>` and exported as deterministic JSONL under
+//! `NODAL_TRACE_DIR` (default `<results>/trace/`); `GET /v1/metrics`
+//! additionally speaks Prometheus text exposition (`Accept: text/plain`
+//! or `GET /metrics`), histograms included as cumulative buckets.
+//!
+//! **Answer-neutrality contract:** tracing never touches the float path.
+//! Span timestamps come only from the injected [`serve::Clock`] (traces
+//! are deterministic under a `ManualClock`), hot loops contain only
+//! thread-local integer counters ([`obs::hot_count`]), and span emission
+//! happens outside the solver loops against a preallocated per-thread
+//! recorder — so solves with tracing on and off are **bit-identical**
+//! (grids, finals, gradients, meters; property-tested across all four
+//! analytic dynamics), and disabled tracing costs a few integer adds.
+//!
 //! ## Invariants (machine-checked by `nodal-lint`)
 //!
 //! Everything above rests on one guarantee: **the reverse pass replays the
@@ -221,7 +254,7 @@
 //!    [`coordinator::report`]'s `results_dir`, [`runtime`]'s
 //!    `artifact_root`, [`ckpt`]'s budget parsers, the `env_clamped`
 //!    helpers in [`serve`] and its HTTP front door,
-//!    [`dist::env`]'s `from_env`/`env_usize`), and every
+//!    [`dist::env`]'s `from_env`/`env_usize`, [`obs::trace_env`]), and every
 //!    `NODAL_*` knob mentioned anywhere in the sources must appear in the
 //!    table below.
 //! 2. **determinism** — `Instant::now`/`SystemTime::now` only behind the
@@ -279,6 +312,8 @@
 //! | `NODAL_SERVE_QUOTA_MAX_DEFICIT` | [`serve::ServeConfig::from_env`] | cap on a tenant's banked DRR deficit | 128, 1..=10⁶ |
 //! | `NODAL_HTTP_PORT` | [`serve::HttpConfig::from_env`] | HTTP front-door port on 127.0.0.1 | 7118, 1..=65535 |
 //! | `NODAL_HTTP_MAX_BODY_BYTES` | [`serve::HttpConfig::from_env`] | largest accepted HTTP request body | 1 MiB, 1 KiB..=64 MiB |
+//! | `NODAL_TRACE_SAMPLE_N` | [`obs::trace_env`] | trace every Nth unsolicited HTTP request (0 = header-only) | 0, 0..=10⁶ |
+//! | `NODAL_TRACE_DIR` | [`obs::trace_env`] | trace JSONL export directory | `<results>/trace` |
 //! | `NODAL_DIST_RANK` | [`dist::env::DistConfig::from_env`] | this process's rank | 0, 0..=world−1 |
 //! | `NODAL_DIST_WORLD_SIZE` | [`dist::env::DistConfig::from_env`] | ranks in the training world | 1, 1..=256 |
 //! | `NODAL_DIST_PORT` | [`dist::env::DistConfig::from_env`] | rank-0 coordinator port | 7117, 1..=65535 |
@@ -293,6 +328,7 @@ pub mod dist;
 pub mod grad;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod ode;
 pub mod runtime;
 pub mod serve;

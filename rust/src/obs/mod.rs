@@ -1,0 +1,705 @@
+//! Structured tracing: request-scoped spans from the HTTP socket down to
+//! the stage sweeps, with zero dependencies and zero hot-path allocation.
+//!
+//! The paper's claim is a *cost* claim — ACA wins because NFE, checkpoint
+//! memory and wall time are lower for the same gradient — so the serving
+//! stack must be able to answer "where did *this* request's 40 ms go?":
+//! queue wait, DRR deferral, forward rounds, per-stage sweeps, segment
+//! replay, reverse rounds. This module provides the span vocabulary, the
+//! per-thread recorder, the cross-thread trace store, and the JSONL/JSON
+//! codecs; the serve/dist layers emit into it.
+//!
+//! ## Design: preallocated per-thread recorder
+//!
+//! Spans are recorded into a thread-local, fixed-capacity `Vec<SpanRec>`
+//! ([`record`]). `SpanRec` is `Copy` with `&'static str` names and a
+//! fixed-size attribute array, so recording is a bounds check plus a
+//! memcpy — **no allocation once the buffer exists** (workers call
+//! [`thread_init`] at startup; other threads fault the buffer in on their
+//! first non-hot `record`). When the buffer is full, spans are dropped and
+//! counted, never reallocated — this is what makes recorder calls legal
+//! near `// nodal-lint: hot` regions. Inside the hot loops themselves only
+//! [`hot_count`] is used: a thread-local integer add with no branch on
+//! sampling state, cheap enough to run unconditionally.
+//!
+//! ## Why timestamps only come from [`Clock`](crate::serve::Clock)
+//!
+//! This module never reads a time source. Every `start`/`end` is a
+//! [`Duration`] handed in by the caller, who got it from the injected
+//! serve-layer clock. That is what makes traces *deterministic*: under
+//! [`ManualClock`](crate::serve::ManualClock) a scripted test asserts the
+//! exact span tree **and the exact durations**, and the determinism lint
+//! rule (no raw `Instant::now` outside the clock) keeps it that way.
+//!
+//! ## Answer neutrality
+//!
+//! Tracing never touches the float path: span emission happens strictly
+//! outside the solver loops, and the in-loop counters are integer adds.
+//! Solves with tracing on and off are bit-identical (grids, finals,
+//! gradients, meters) — property-tested in `tests/proptests.rs`.
+//!
+//! ## Knobs
+//!
+//! * `NODAL_TRACE_SAMPLE_N` — trace every Nth unsolicited HTTP request
+//!   (0 = off; an `x-nodal-trace` header always traces). Parsed and
+//!   clamped only by [`trace_env`], the designated env helper.
+//! * `NODAL_TRACE_DIR` — JSONL export directory; defaults to
+//!   `<results>/trace/` under `NODAL_RESULTS`.
+
+use crate::util::json::{obj, Json};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Identifiers and context
+
+/// A 64-bit trace identifier; crosses the wire and HTTP headers as 16
+/// lower-hex characters. Zero is reserved ("no trace").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// The canonical 16-char lower-hex form (`x-nodal-trace` header value,
+    /// wire field, JSONL file stem).
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the canonical form; rejects anything but exactly 16 hex
+    /// digits, and the reserved all-zero id.
+    pub fn parse_hex(s: &str) -> Option<TraceId> {
+        if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        match u64::from_str_radix(s, 16) {
+            Ok(0) | Err(_) => None,
+            Ok(v) => Some(TraceId(v)),
+        }
+    }
+}
+
+/// Mint a fresh trace id from a process-wide sequence mixed with the
+/// caller's clock reading (splitmix64 finalizer). No wall-clock or RNG is
+/// consulted, so minting is deterministic under a `ManualClock`.
+pub fn mint(now: Duration) -> TraceId {
+    static TRACE_SEQ: AtomicU64 = AtomicU64::new(1);
+    let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut z = seq ^ (now.as_nanos() as u64);
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    TraceId(if z == 0 { 1 } else { z })
+}
+
+/// Propagated trace context: rides inside a
+/// [`SolveRequest`](crate::serve::SolveRequest) (never part of the batch
+/// key) and inside dist wire frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// The trace every downstream span joins.
+    pub trace: TraceId,
+    /// Span id downstream spans parent to (0 = root).
+    pub parent: u64,
+    /// Shard index stamped on downstream spans (−1 = front door / local).
+    pub shard: i64,
+}
+
+impl TraceCtx {
+    /// A root context for `trace`: parent 0, front-door shard.
+    pub fn root(trace: TraceId) -> TraceCtx {
+        TraceCtx { trace, parent: 0, shard: -1 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span taxonomy (closed name/key vocabulary — this is also the interning
+// table the wire decoder maps onto, so names stay `&'static str`).
+
+/// Root span for one HTTP request (attr: `status`).
+pub const HTTP_REQUEST: &str = "http_request";
+/// Admission-control decision at submit time.
+pub const ADMISSION: &str = "admission";
+/// Submit → batch flush, per request (attrs: `lane`, `deferred`).
+pub const QUEUE_WAIT: &str = "queue_wait";
+/// Batch flush → worker dispatch (attrs: `reason`, `size`).
+pub const BATCH_FORM: &str = "batch_form";
+/// One request's solve inside a worker batch (attr: `batch_size`).
+pub const SOLVE: &str = "solve";
+/// Forward integration (attrs: `nfe`, `rounds`, `sweeps`).
+pub const FORWARD: &str = "forward";
+/// ACA reverse sweep (attrs: `nfe`, `rounds`, `sweeps`).
+pub const REVERSE: &str = "reverse";
+/// Segment-cache replay cost, child of `reverse` (attrs: `nfe`, `bytes`).
+pub const REPLAY: &str = "replay";
+/// Per-sample scalar fallback after a poisoned batch (attr: `nfe`).
+pub const FALLBACK: &str = "fallback";
+/// Dispatcher routing decision (attr: `shard`).
+pub const DISPATCH: &str = "dispatch";
+/// Work-stealing event: routed off the hash-primary shard.
+pub const STEAL: &str = "steal";
+/// Dead-shard re-dispatch event.
+pub const FAILOVER: &str = "failover";
+
+static SPAN_NAMES: [&str; 12] = [
+    HTTP_REQUEST,
+    ADMISSION,
+    QUEUE_WAIT,
+    BATCH_FORM,
+    SOLVE,
+    FORWARD,
+    REVERSE,
+    REPLAY,
+    FALLBACK,
+    DISPATCH,
+    STEAL,
+    FAILOVER,
+];
+
+static ATTR_KEYS: [&str; 10] = [
+    "lane", "deferred", "reason", "size", "batch_size", "nfe", "rounds", "sweeps", "bytes",
+    "status",
+];
+
+fn intern(table: &'static [&'static str], s: &str) -> &'static str {
+    table.iter().find(|t| **t == s).copied().unwrap_or("unknown")
+}
+
+/// Attribute slots per span; extra attrs are silently dropped.
+pub const MAX_ATTRS: usize = 6;
+
+/// One recorded span. `Copy` with a fixed attribute array so the
+/// per-thread recorder never allocates per span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Owning trace (a raw [`TraceId`]).
+    pub trace: u64,
+    /// This span's id (process-unique; remapped dense on JSONL export).
+    pub span: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Taxonomy name (see the module constants).
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Shard index (−1 = front door / local process).
+    pub shard: i64,
+    /// `("", 0)` marks an empty slot.
+    pub attrs: [(&'static str, u64); MAX_ATTRS],
+}
+
+fn next_span_id() -> u64 {
+    static SPAN_SEQ: AtomicU64 = AtomicU64::new(1);
+    SPAN_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+fn dur_ns(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+impl SpanRec {
+    /// A span with a freshly minted id under `ctx.parent`.
+    pub fn new(ctx: TraceCtx, name: &'static str, start: Duration, end: Duration) -> SpanRec {
+        SpanRec {
+            trace: ctx.trace.0,
+            span: next_span_id(),
+            parent: ctx.parent,
+            name,
+            start_ns: dur_ns(start),
+            end_ns: dur_ns(end),
+            shard: ctx.shard,
+            attrs: [("", 0); MAX_ATTRS],
+        }
+    }
+
+    /// A zero-duration event span (dispatch / steal / failover markers).
+    pub fn event(ctx: TraceCtx, name: &'static str, at: Duration) -> SpanRec {
+        SpanRec::new(ctx, name, at, at)
+    }
+
+    /// Attach an attribute (dropped silently when all slots are taken).
+    pub fn attr(mut self, key: &'static str, val: u64) -> SpanRec {
+        for slot in self.attrs.iter_mut() {
+            if slot.0.is_empty() {
+                *slot = (key, val);
+                break;
+            }
+        }
+        self
+    }
+
+    /// The context downstream spans use to parent to this span.
+    pub fn ctx(&self) -> TraceCtx {
+        TraceCtx { trace: TraceId(self.trace), parent: self.span, shard: self.shard }
+    }
+
+    /// Attribute lookup (first match).
+    pub fn get_attr(&self, key: &str) -> Option<u64> {
+        self.attrs.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread recorder
+
+/// Fixed recorder capacity per thread — spans past this are dropped (and
+/// counted), never reallocated into.
+const RECORDER_CAP: usize = 256;
+
+/// Forward active-set rounds (one per `while !active.is_empty()` pass).
+pub const CTR_FWD_ROUNDS: usize = 0;
+/// Forward `eval_batch` stage sweeps.
+pub const CTR_FWD_SWEEPS: usize = 1;
+/// Reverse rounds (one shared-stage adjoint step over the live set).
+pub const CTR_REV_ROUNDS: usize = 2;
+/// Reverse `eval_batch`/`vjp_batch` stage sweeps.
+pub const CTR_REV_SWEEPS: usize = 3;
+const N_CTRS: usize = 4;
+
+struct Recorder {
+    spans: Vec<SpanRec>,
+    dropped: u64,
+    counters: [u64; N_CTRS],
+}
+
+thread_local! {
+    static RECORDER: RefCell<Recorder> =
+        const { RefCell::new(Recorder { spans: Vec::new(), dropped: 0, counters: [0; N_CTRS] }) };
+}
+
+/// Preallocate this thread's span buffer. Workers call this once at
+/// startup so that no later `record` allocates; threads that skip it pay
+/// one allocation on their first (non-hot) `record`.
+pub fn thread_init() {
+    RECORDER.with(|r| {
+        let mut rec = r.borrow_mut();
+        let len = rec.spans.len();
+        rec.spans.reserve(RECORDER_CAP.saturating_sub(len));
+    });
+}
+
+/// Record a span into this thread's buffer. Never called from hot regions
+/// (only [`hot_count`] is); outside them the one-time buffer fault-in is
+/// acceptable.
+pub fn record(span: SpanRec) {
+    RECORDER.with(|r| {
+        let mut rec = r.borrow_mut();
+        if rec.spans.capacity() == 0 {
+            rec.spans.reserve(RECORDER_CAP);
+        }
+        if rec.spans.len() < rec.spans.capacity() {
+            rec.spans.push(span);
+        } else {
+            rec.dropped += 1;
+        }
+    });
+}
+
+/// Bump a hot-loop counter: a thread-local integer add, the only obs call
+/// legal *inside* `// nodal-lint: hot` regions (no allocation, no branch
+/// on sampling state, no float contact).
+#[inline]
+pub fn hot_count(counter: usize, n: u64) {
+    RECORDER.with(|r| {
+        if let Some(slot) = r.borrow_mut().counters.get_mut(counter) {
+            *slot += n;
+        }
+    });
+}
+
+/// Snapshot this thread's hot counters (monotonic; callers diff around a
+/// region of interest).
+pub fn counters() -> [u64; N_CTRS] {
+    RECORDER.with(|r| r.borrow().counters)
+}
+
+/// Spans dropped on this thread because the recorder was full.
+pub fn dropped() -> u64 {
+    RECORDER.with(|r| r.borrow().dropped)
+}
+
+/// Move this thread's recorded spans into the global [`TraceStore`]
+/// (keeping the preallocated buffer). Emitters publish *before* they
+/// fulfill a response, so a trace is complete in the store by the time its
+/// requester wakes.
+pub fn publish() {
+    RECORDER.with(|r| {
+        let mut rec = r.borrow_mut();
+        if !rec.spans.is_empty() {
+            global().ingest(&rec.spans);
+            rec.spans.clear();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Global trace store
+
+/// Traces retained in memory (oldest evicted first).
+const MAX_TRACES: usize = 256;
+/// Spans retained per trace (later spans dropped).
+const MAX_SPANS_PER_TRACE: usize = 1024;
+
+struct StoreInner {
+    traces: BTreeMap<u64, Vec<SpanRec>>,
+    order: VecDeque<u64>,
+}
+
+/// Process-wide span sink: threads [`publish`] into it, the HTTP layer and
+/// the dist reply path read/stitch out of it. Bounded in both dimensions;
+/// a trace's spans are kept in arrival order, which a happens-before
+/// emission chain (submit → batch → worker → respond) makes deterministic.
+pub struct TraceStore {
+    inner: Mutex<StoreInner>,
+}
+
+/// The process-wide store.
+pub fn global() -> &'static TraceStore {
+    static GLOBAL: OnceLock<TraceStore> = OnceLock::new();
+    GLOBAL.get_or_init(|| TraceStore {
+        inner: Mutex::new(StoreInner { traces: BTreeMap::new(), order: VecDeque::new() }),
+    })
+}
+
+impl TraceStore {
+    /// Append spans to their traces (creating and, at capacity, evicting).
+    pub fn ingest(&self, spans: &[SpanRec]) {
+        let mut inner = self.inner.lock().unwrap();
+        for s in spans {
+            if s.trace == 0 {
+                continue;
+            }
+            if !inner.traces.contains_key(&s.trace) {
+                while inner.order.len() >= MAX_TRACES {
+                    if let Some(old) = inner.order.pop_front() {
+                        inner.traces.remove(&old);
+                    }
+                }
+                inner.order.push_back(s.trace);
+                inner.traces.insert(s.trace, Vec::new());
+            }
+            if let Some(list) = inner.traces.get_mut(&s.trace) {
+                if list.len() < MAX_SPANS_PER_TRACE {
+                    list.push(*s);
+                }
+            }
+        }
+    }
+
+    /// Copy of a trace's spans, stably ordered by `start_ns` (arrival order
+    /// breaks ties). Empty when unknown.
+    pub fn get(&self, trace: TraceId) -> Vec<SpanRec> {
+        let inner = self.inner.lock().unwrap();
+        let mut spans = inner.traces.get(&trace.0).cloned().unwrap_or_default();
+        drop(inner);
+        spans.sort_by_key(|s| s.start_ns);
+        spans
+    }
+
+    /// Remove and return a trace (same ordering as [`TraceStore::get`]).
+    /// The dist shard uses this to hand a solve's spans back to the
+    /// dispatcher exactly once.
+    pub fn take(&self, trace: TraceId) -> Vec<SpanRec> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut spans = inner.traces.remove(&trace.0).unwrap_or_default();
+        inner.order.retain(|t| *t != trace.0);
+        drop(inner);
+        spans.sort_by_key(|s| s.start_ns);
+        spans
+    }
+
+    /// Export one trace as deterministic JSONL: spans in [`TraceStore::get`]
+    /// order, ids remapped dense (1..n) so the file does not depend on the
+    /// process-global id sequence. Returns the written path
+    /// (`<dir>/<hex>.jsonl`).
+    pub fn flush_jsonl(&self, trace: TraceId, dir: &Path) -> std::io::Result<PathBuf> {
+        let spans = remap_ids(self.get(trace));
+        std::fs::create_dir_all(dir)?;
+        let mut out = String::new();
+        for s in &spans {
+            out.push_str(&span_to_json(s).to_string());
+            out.push('\n');
+        }
+        let path = dir.join(format!("{}.jsonl", trace.to_hex()));
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Remap span ids to dense 1..n in list order, rewriting parent edges
+/// (parents outside the list become roots).
+fn remap_ids(spans: Vec<SpanRec>) -> Vec<SpanRec> {
+    let mut map: BTreeMap<u64, u64> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        map.insert(s.span, (i + 1) as u64);
+    }
+    spans
+        .into_iter()
+        .map(|mut s| {
+            s.parent = map.get(&s.parent).copied().unwrap_or(0);
+            s.span = map.get(&s.span).copied().unwrap_or(0);
+            s
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Env knobs
+
+/// Parsed `NODAL_TRACE_*` configuration.
+#[derive(Debug, Clone)]
+pub struct TraceKnobs {
+    /// Trace every Nth unsolicited request (0 = only header-solicited).
+    pub sample_n: u64,
+    /// JSONL export directory.
+    pub dir: PathBuf,
+}
+
+impl Default for TraceKnobs {
+    fn default() -> Self {
+        TraceKnobs { sample_n: 0, dir: crate::coordinator::report::results_dir().join("trace") }
+    }
+}
+
+/// Designated parse-and-clamp reader for the `NODAL_TRACE_*` knobs (the
+/// only place they are read; allowlisted in nodal-lint). `sample_n` clamps
+/// to `0..=10⁶`; an unset or empty `NODAL_TRACE_DIR` falls back to
+/// `<results>/trace` under `NODAL_RESULTS`.
+pub fn trace_env() -> TraceKnobs {
+    let sample_n = match std::env::var("NODAL_TRACE_SAMPLE_N")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+    {
+        Some(n) => n.clamp(0, 1_000_000),
+        None => 0,
+    };
+    let dir = match std::env::var("NODAL_TRACE_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => crate::coordinator::report::results_dir().join("trace"),
+    };
+    TraceKnobs { sample_n, dir }
+}
+
+// ---------------------------------------------------------------------------
+// JSON codecs (integers and hex strings only — no float fields, so these
+// are safe for dist frames under the wire-determinism rule)
+
+/// One span as a JSON object (trace as hex string; ids/times as exact
+/// integers — span ids and process-relative nanos stay far below 2⁵³).
+pub fn span_to_json(s: &SpanRec) -> Json {
+    let mut attrs: Vec<(&str, Json)> = Vec::new();
+    for (k, v) in s.attrs.iter() {
+        if !k.is_empty() {
+            attrs.push((*k, (*v as usize).into()));
+        }
+    }
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("trace", TraceId(s.trace).to_hex().into()),
+        ("span", (s.span as usize).into()),
+        ("parent", (s.parent as usize).into()),
+        ("name", s.name.into()),
+        ("start_ns", (s.start_ns as usize).into()),
+        ("end_ns", (s.end_ns as usize).into()),
+        ("attrs", obj(attrs)),
+    ];
+    if s.shard >= 0 {
+        pairs.push(("shard", (s.shard as usize).into()));
+    }
+    obj(pairs)
+}
+
+/// Decode one span; `name` and attr keys are interned against the closed
+/// taxonomy (unknown names decode as `"unknown"`, never as new strings).
+pub fn span_from_json(v: &Json) -> anyhow::Result<SpanRec> {
+    let trace = TraceId::parse_hex(v.get("trace")?.as_str()?)
+        .ok_or_else(|| anyhow::anyhow!("bad trace id"))?;
+    let mut attrs = [("", 0u64); MAX_ATTRS];
+    if let Some(Json::Obj(m)) = v.opt("attrs") {
+        for (slot, (k, val)) in attrs.iter_mut().zip(m.iter()) {
+            *slot = (intern(&ATTR_KEYS, k), val.as_usize()? as u64);
+        }
+    }
+    Ok(SpanRec {
+        trace: trace.0,
+        span: v.get("span")?.as_usize()? as u64,
+        parent: v.get("parent")?.as_usize()? as u64,
+        name: intern(&SPAN_NAMES, v.get("name")?.as_str()?),
+        start_ns: v.get("start_ns")?.as_usize()? as u64,
+        end_ns: v.get("end_ns")?.as_usize()? as u64,
+        shard: match v.opt("shard") {
+            Some(s) => s.as_usize()? as i64,
+            None => -1,
+        },
+        attrs,
+    })
+}
+
+/// A span list as a JSON array (piggybacked on dist `resp` frames).
+pub fn spans_to_json(spans: &[SpanRec]) -> Json {
+    Json::Arr(spans.iter().map(span_to_json).collect())
+}
+
+/// Decode a span list (tolerates an absent/non-array value as empty).
+pub fn spans_from_json(v: &Json) -> Vec<SpanRec> {
+    match v {
+        Json::Arr(items) => items.iter().filter_map(|s| span_from_json(s).ok()).collect(),
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns(n: u64) -> Duration {
+        Duration::from_nanos(n)
+    }
+
+    #[test]
+    fn trace_id_hex_round_trips_and_rejects_garbage() {
+        let id = TraceId(0x0123_4567_89ab_cdef);
+        assert_eq!(id.to_hex(), "0123456789abcdef");
+        assert_eq!(TraceId::parse_hex(&id.to_hex()), Some(id));
+        assert_eq!(TraceId::parse_hex("0123456789abcde"), None, "15 chars");
+        assert_eq!(TraceId::parse_hex("0123456789abcdeg"), None, "non-hex");
+        assert_eq!(TraceId::parse_hex("0000000000000000"), None, "reserved zero");
+        assert_eq!(TraceId::parse_hex(""), None);
+    }
+
+    #[test]
+    fn minting_is_deterministic_in_sequence_and_nonzero() {
+        let a = mint(ns(5));
+        let b = mint(ns(5));
+        assert_ne!(a.0, 0);
+        assert_ne!(a, b, "sequence makes same-instant mints distinct");
+    }
+
+    #[test]
+    fn record_publish_take_round_trip() {
+        let trace = mint(ns(1));
+        let ctx = TraceCtx::root(trace);
+        let root = SpanRec::new(ctx, SOLVE, ns(10), ns(50)).attr("batch_size", 3);
+        record(root);
+        record(SpanRec::new(root.ctx(), FORWARD, ns(10), ns(30)).attr("nfe", 120));
+        publish();
+        let spans = global().get(trace);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, SOLVE);
+        assert_eq!(spans[1].parent, spans[0].span, "child parents to the solve span");
+        assert_eq!(spans[1].get_attr("nfe"), Some(120));
+        let taken = global().take(trace);
+        assert_eq!(taken, spans);
+        assert!(global().get(trace).is_empty(), "take removes the trace");
+    }
+
+    #[test]
+    fn recorder_drops_past_capacity_without_reallocating() {
+        thread_init();
+        let trace = mint(ns(2));
+        let ctx = TraceCtx::root(trace);
+        for _ in 0..600 {
+            record(SpanRec::event(ctx, STEAL, ns(1)));
+        }
+        assert!(dropped() > 0, "over-capacity spans are counted, not grown into");
+        publish();
+        let spans = global().take(trace);
+        assert!(spans.len() <= 256, "recorder capacity bounds one thread's burst");
+    }
+
+    #[test]
+    fn span_json_round_trips_with_interned_names() {
+        let trace = mint(ns(3));
+        let mut ctx = TraceCtx::root(trace);
+        ctx.shard = 1;
+        let s = SpanRec::new(ctx, REPLAY, ns(7), ns(9)).attr("nfe", 40).attr("bytes", 1024);
+        let j = Json::parse(&span_to_json(&s).to_string()).unwrap();
+        let back = span_from_json(&j).unwrap();
+        // Attrs travel as a key-sorted object, so compare semantically.
+        assert_eq!(
+            (back.trace, back.span, back.parent, back.name),
+            (s.trace, s.span, s.parent, s.name)
+        );
+        assert_eq!((back.start_ns, back.end_ns, back.shard), (s.start_ns, s.end_ns, s.shard));
+        assert_eq!(back.get_attr("nfe"), Some(40));
+        assert_eq!(back.get_attr("bytes"), Some(1024));
+        assert!(std::ptr::eq(back.name, REPLAY), "decoded name is the interned static");
+
+        // Unknown names/keys intern to "unknown", never allocate new strings.
+        let mut m = match span_to_json(&s) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("name".into(), "mystery".into());
+        let back = span_from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.name, "unknown");
+    }
+
+    #[test]
+    fn flush_jsonl_remaps_ids_densely() {
+        let trace = mint(ns(4));
+        let ctx = TraceCtx::root(trace);
+        let root = SpanRec::new(ctx, HTTP_REQUEST, ns(0), ns(100));
+        let child = SpanRec::new(root.ctx(), SOLVE, ns(10), ns(90));
+        global().ingest(&[root, child]);
+        let dir = std::env::temp_dir()
+            .join(format!("nodal-obs-test-{}-{}", std::process::id(), trace.to_hex()));
+        let path = global().flush_jsonl(trace, &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = span_from_json(&Json::parse(lines[0]).unwrap()).unwrap();
+        let second = span_from_json(&Json::parse(lines[1]).unwrap()).unwrap();
+        assert_eq!((first.span, first.parent), (1, 0), "dense ids from 1");
+        assert_eq!((second.span, second.parent), (2, 1), "parent edge preserved");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_caps_spans_per_trace() {
+        let trace = mint(ns(6));
+        let ctx = TraceCtx::root(trace);
+        let burst: Vec<SpanRec> =
+            (0..1500).map(|_| SpanRec::event(ctx, FAILOVER, ns(1))).collect();
+        global().ingest(&burst);
+        assert_eq!(global().take(trace).len(), 1024, "per-trace span cap");
+    }
+
+    /// All `NODAL_TRACE_*` cases in ONE test: the process environment is
+    /// shared across parallel test threads.
+    #[test]
+    fn trace_env_parse_and_clamp() {
+        std::env::set_var("NODAL_TRACE_SAMPLE_N", "999999999");
+        std::env::set_var("NODAL_TRACE_DIR", "/tmp/custom-trace");
+        let k = trace_env();
+        assert_eq!(k.sample_n, 1_000_000, "sample stride clamps");
+        assert_eq!(k.dir, PathBuf::from("/tmp/custom-trace"));
+
+        std::env::set_var("NODAL_TRACE_SAMPLE_N", "not-a-number");
+        std::env::set_var("NODAL_TRACE_DIR", "");
+        let k = trace_env();
+        assert_eq!(k.sample_n, 0, "unparseable falls back to off");
+        assert!(k.dir.ends_with("trace"), "empty dir falls back to <results>/trace");
+
+        for v in ["NODAL_TRACE_SAMPLE_N", "NODAL_TRACE_DIR"] {
+            std::env::remove_var(v);
+        }
+        let k = trace_env();
+        assert_eq!(k.sample_n, 0);
+        assert!(k.dir.ends_with("trace"));
+    }
+
+    #[test]
+    fn hot_counters_accumulate_per_thread() {
+        let before = counters();
+        hot_count(CTR_FWD_ROUNDS, 3);
+        hot_count(CTR_FWD_SWEEPS, 12);
+        hot_count(99, 7); // out-of-range is ignored, never panics
+        let after = counters();
+        assert_eq!(after[CTR_FWD_ROUNDS] - before[CTR_FWD_ROUNDS], 3);
+        assert_eq!(after[CTR_FWD_SWEEPS] - before[CTR_FWD_SWEEPS], 12);
+    }
+}

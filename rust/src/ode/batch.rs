@@ -429,6 +429,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
     // nodal-lint: hot
     while !active.is_empty() {
         let na = active.len();
+        crate::obs::hot_count(crate::obs::CTR_FWD_ROUNDS, 1);
 
         // ---- step setup: per-sample trial size, clamped onto its own t1 ----
         for (a, &i) in active.iter().enumerate() {
@@ -465,6 +466,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 ts_stage[p] = t[i];
             }
             let np = need_k0.len();
+            crate::obs::hot_count(crate::obs::CTR_FWD_SWEEPS, 1);
             f.eval_batch(&ts_stage[..np], &us[..np * dim], &mut dz_scratch[..np * dim]);
             for (p, &a) in need_k0.iter().enumerate() {
                 ks[0][a * dim..(a + 1) * dim]
@@ -485,6 +487,7 @@ pub fn integrate_batch_tspans<F: OdeFunc + ?Sized>(
                 }
                 ts_stage[a] = t[i] + tab.c[j] * h_try[a];
             }
+            crate::obs::hot_count(crate::obs::CTR_FWD_SWEEPS, 1);
             f.eval_batch(&ts_stage[..na], &us[..na * dim], &mut ks[j][..na * dim]);
             for &i in &active {
                 out.tracks[i].nfe += 1;

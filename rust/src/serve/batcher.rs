@@ -71,6 +71,11 @@ pub struct FormedBatch {
     pub reason: FlushReason,
     /// When the flush condition tripped (virtual/server time).
     pub triggered_at: Duration,
+    /// How many DRR rounds this batch sat at its tenant's queue head
+    /// unaffordable (cost above the deficit) before emission. Zero on light
+    /// traffic; surfaces in the `batch_form` trace span as the QoS-induced
+    /// share of the batch's wait.
+    pub deferred: u64,
 }
 
 struct Group {
@@ -150,6 +155,7 @@ impl BatchFormer {
                 items: g.items,
                 reason: FlushReason::Size,
                 triggered_at: now,
+                deferred: 0,
             });
         }
     }
@@ -177,6 +183,7 @@ impl BatchFormer {
                     items: g.items,
                     reason: FlushReason::Deadline,
                     triggered_at: deadline,
+                    deferred: 0,
                 });
             } else {
                 i += 1;
@@ -196,6 +203,7 @@ impl BatchFormer {
                 items: g.items,
                 reason: FlushReason::Drain,
                 triggered_at: now,
+                deferred: 0,
             });
         }
         self.schedule(out)
@@ -256,6 +264,11 @@ impl BatchFormer {
                         None => break,
                     };
                     if cost > *deficit {
+                        // The head couldn't afford this round; remember the
+                        // QoS-induced wait for the batch_form trace span.
+                        if let Some(head) = q.front_mut() {
+                            head.deferred += 1;
+                        }
                         break;
                     }
                     if let Some(b) = q.pop_front() {
@@ -499,6 +512,11 @@ mod tests {
             .map(|b| b.triggered_at)
             .collect();
         assert!(hot.windows(2).all(|w| w[0] <= w[1]));
+        // QoS-induced waits are attributed: the hot tenant's second and
+        // third batches each sat out one round unaffordable; everything
+        // emitted on its first eligible round reports zero.
+        let deferred: Vec<u64> = out.iter().map(|b| b.deferred).collect();
+        assert_eq!(deferred, vec![0, 0, 1, 1]);
     }
 
     /// The deficit cap floors at `max_batch`: even with an absurdly small

@@ -1,11 +1,13 @@
-//! Minimal vendored HTTP/1.1 front door over [`SolveServer`].
+//! Minimal vendored HTTP/1.1 front door over a [`SolveFrontend`].
 //!
 //! Offline-friendly by construction: plain `std::net::TcpListener`, no TLS,
 //! no external dependencies — JSON bodies use `util/json` and the
 //! **versioned wire schema** from [`super::wire`] (the same codecs the
 //! `dist` shards speak), so an HTTP client and a shard client exchange
 //! byte-compatible payloads. f32 payloads keep the u32-bit-pattern
-//! convention end-to-end.
+//! convention end-to-end. The door serves anything implementing
+//! [`SolveFrontend`] — a local [`SolveServer`] or a multi-shard
+//! `dist::Dispatcher` — through the same socket loop.
 //!
 //! Routes:
 //!
@@ -13,10 +15,27 @@
 //!   gradient via `lam`, or dense-output via `observe_at`); the response is
 //!   [`SolveResponse::to_json`] on 200, or [`ServeError::to_json`] with the
 //!   mapped status otherwise.
-//! * `GET /v1/metrics` — the server's
-//!   [`MetricsSnapshot`](super::metrics::MetricsSnapshot) as JSON,
-//!   per-tenant queue-wait summaries included.
+//! * `GET /v1/metrics` — the frontend's
+//!   [`MetricsSnapshot`](super::metrics::MetricsSnapshot) as JSON with the
+//!   door's keep-alive connection counters overlaid;
+//!   `?format=prometheus` renders the same snapshot as Prometheus text
+//!   exposition instead.
+//! * `GET /v1/trace/<id>` — a stored trace's spans as JSON (404 when the
+//!   id is unknown or malformed).
 //! * `GET /healthz` — liveness probe, `{"ok":true}`.
+//!
+//! ## Tracing
+//!
+//! A solve request carrying an `x-nodal-trace` header (16 lower-hex chars)
+//! is always traced under that id — an unparseable value still traces,
+//! under a freshly minted id. Without the header, every
+//! [`TraceKnobs::sample_n`]-th request is traced (0 disables sampling).
+//! Traced requests get a root `http_request` span and an `admission` span;
+//! downstream spans (queue wait, batch formation, solve phases) join via
+//! the context propagated inside the [`SolveRequest`]. Spans are published
+//! and the JSONL export written **before** the response bytes go out, so a
+//! client that got the echoed `x-nodal-trace` header back can immediately
+//! `GET /v1/trace/<id>` and see the complete tree.
 //!
 //! Error mapping (admission backpressure reaches clients end-to-end):
 //!
@@ -34,15 +53,19 @@
 //! Connections are keep-alive by default (`Connection: close` honored);
 //! each connection runs one request at a time on its own thread, which is
 //! the right shape for a loopback research server (the batcher, not the
-//! socket count, is the concurrency lever).
+//! socket count, is the concurrency lever). Per-connection accounting
+//! (accepted/active/reused, requests per connection) lives in
+//! [`ConnMetrics`] owned by the door, not the solver.
 
-use super::request::{ServeError, SolveRequest};
+use super::metrics::{ConnMetrics, MetricsSnapshot};
+use super::request::{ServeError, SolveRequest, SolveResponse};
 use super::SolveServer;
-use crate::util::json::Json;
+use crate::obs::{self, SpanRec, TraceCtx, TraceId, TraceKnobs};
+use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -52,6 +75,10 @@ use std::time::Duration;
 const MAX_LINE_BYTES: usize = 8 * 1024;
 /// Header-count cap per request.
 const MAX_HEADERS: usize = 64;
+
+const JSON_TYPE: &str = "application/json";
+/// Prometheus text exposition format version scrapers expect.
+const PROM_TYPE: &str = "text/plain; version=0.0.4";
 
 /// `NODAL_HTTP_*` env knob with parse-and-clamp semantics (same contract
 /// as the other `env_clamped` helpers; allowlisted in nodal-lint).
@@ -71,36 +98,87 @@ pub struct HttpConfig {
     /// Largest accepted request body in bytes (`NODAL_HTTP_MAX_BODY_BYTES`).
     /// Oversized bodies bounce with `400` before they are read.
     pub max_body_bytes: usize,
+    /// Tracing knobs: sampling stride for unsolicited requests
+    /// (`NODAL_TRACE_SAMPLE_N`) and the JSONL export directory
+    /// (`NODAL_TRACE_DIR`).
+    pub trace: TraceKnobs,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { port: 7118, max_body_bytes: 1 << 20 }
+        HttpConfig { port: 7118, max_body_bytes: 1 << 20, trace: TraceKnobs::default() }
     }
 }
 
 impl HttpConfig {
-    /// Defaults with `NODAL_HTTP_*` overrides (see the lib.rs knob table).
+    /// Defaults with `NODAL_HTTP_*` / `NODAL_TRACE_*` overrides (see the
+    /// lib.rs knob table).
     pub fn from_env() -> Self {
         HttpConfig {
             port: env_clamped("NODAL_HTTP_PORT", 7118, 1, 65535) as u16,
             max_body_bytes: env_clamped("NODAL_HTTP_MAX_BODY_BYTES", 1 << 20, 1024, 64 << 20),
+            trace: obs::trace_env(),
         }
     }
 }
 
-/// A running HTTP endpoint over a shared [`SolveServer`].
+/// Blocking response waiter returned by [`SolveFrontend::submit_front`].
+pub type Waiter = Box<dyn FnOnce() -> Result<SolveResponse, ServeError> + Send>;
+
+/// What the HTTP door needs from whatever sits behind it — a local
+/// [`SolveServer`] or a multi-shard `dist::Dispatcher`. Submission is
+/// split from waiting so the `admission` span measures the admission
+/// decision, not the solve.
+pub trait SolveFrontend: Send + Sync {
+    /// Admission decision: `Ok` hands back a blocking waiter for the
+    /// response, `Err` is the mapped rejection.
+    fn submit_front(&self, req: SolveRequest) -> Result<Waiter, ServeError>;
+    /// Metrics snapshot (merged across shards behind a dispatcher).
+    fn metrics_front(&self) -> MetricsSnapshot;
+    /// A reading of the frontend's injected clock — the only time source
+    /// the door stamps spans with, keeping traces deterministic under
+    /// [`ManualClock`](super::ManualClock).
+    fn now(&self) -> Duration;
+}
+
+impl SolveFrontend for SolveServer {
+    fn submit_front(&self, req: SolveRequest) -> Result<Waiter, ServeError> {
+        let handle = self.submit(req)?;
+        Ok(Box::new(move || handle.wait()))
+    }
+
+    fn metrics_front(&self) -> MetricsSnapshot {
+        self.metrics()
+    }
+
+    fn now(&self) -> Duration {
+        self.core.clock.now()
+    }
+}
+
+/// State every connection thread shares: the frontend, the door's
+/// connection metrics, and the tracing configuration.
+struct FrontShared {
+    front: Arc<dyn SolveFrontend>,
+    conn: ConnMetrics,
+    trace: TraceKnobs,
+    /// Unsolicited-solve counter driving `sample_n` selection.
+    sample_seq: AtomicU64,
+    max_body: usize,
+}
+
+/// A running HTTP endpoint over a shared [`SolveFrontend`].
 ///
 /// Dropping (or [`HttpServer::shutdown`]) stops the listener and joins the
-/// connection threads. The underlying `SolveServer` is **not** drained —
-/// it is shared state the front door borrows, and other front ends (e.g. a
+/// connection threads. The underlying frontend is **not** drained — it is
+/// shared state the front door borrows, and other front ends (e.g. a
 /// `dist` shard) may still be serving it.
 pub struct HttpServer {
     addr: String,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
     accept: Option<JoinHandle<()>>,
-    server: Arc<SolveServer>,
+    shared: Arc<FrontShared>,
 }
 
 impl HttpServer {
@@ -112,18 +190,34 @@ impl HttpServer {
 
     /// Bind an explicit address (use port 0 for an ephemeral test port).
     pub fn spawn_at(server: Arc<SolveServer>, bind: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        Self::spawn_front_at(server, bind, cfg)
+    }
+
+    /// Bind an explicit address over any [`SolveFrontend`] (the `dist`
+    /// dispatcher enters here).
+    pub fn spawn_front_at(
+        front: Arc<dyn SolveFrontend>,
+        bind: &str,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
         let listener =
             TcpListener::bind(bind).with_context(|| format!("bind http front door at {bind}"))?;
         let addr = listener.local_addr().context("http local addr")?.to_string();
         listener.set_nonblocking(true).context("http listener nonblocking")?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let shared = Arc::new(FrontShared {
+            front,
+            conn: ConnMetrics::default(),
+            trace: cfg.trace.clone(),
+            sample_seq: AtomicU64::new(0),
+            max_body: cfg.max_body_bytes,
+        });
         let accept = {
-            let (server, stop, conns) = (server.clone(), stop.clone(), conns.clone());
-            let max_body = cfg.max_body_bytes;
-            std::thread::spawn(move || accept_loop(&listener, &server, &stop, &conns, max_body))
+            let (shared, stop, conns) = (shared.clone(), stop.clone(), conns.clone());
+            std::thread::spawn(move || accept_loop(&listener, &shared, &stop, &conns))
         };
-        Ok(HttpServer { addr, stop, conns, accept: Some(accept), server })
+        Ok(HttpServer { addr, stop, conns, accept: Some(accept), shared })
     }
 
     /// The bound address (`host:port`) clients dial.
@@ -131,14 +225,14 @@ impl HttpServer {
         &self.addr
     }
 
-    /// The front door's underlying server (registry/metrics access in
-    /// tests and examples).
-    pub fn server(&self) -> &Arc<SolveServer> {
-        &self.server
+    /// The door's keep-alive connection counters (overlaid onto
+    /// `/v1/metrics` snapshots).
+    pub fn conn_metrics(&self) -> &ConnMetrics {
+        &self.shared.conn
     }
 
     /// Stop accepting, sever open connections, and join the service
-    /// threads. Idempotent. Does not drain the shared `SolveServer`.
+    /// threads. Idempotent. Does not drain the shared frontend.
     pub fn shutdown(&mut self) {
         if self.accept.is_none() {
             return;
@@ -161,10 +255,9 @@ impl Drop for HttpServer {
 
 fn accept_loop(
     listener: &TcpListener,
-    server: &Arc<SolveServer>,
+    shared: &Arc<FrontShared>,
     stop: &AtomicBool,
     conns: &Mutex<Vec<TcpStream>>,
-    max_body: usize,
 ) {
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
@@ -174,8 +267,8 @@ fn accept_loop(
                 if let Ok(c) = s.try_clone() {
                     conns.lock().unwrap().push(c);
                 }
-                let server = server.clone();
-                handlers.push(std::thread::spawn(move || handle_conn(s, &server, max_body)));
+                let shared = shared.clone();
+                handlers.push(std::thread::spawn(move || handle_conn(s, &shared)));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
@@ -194,11 +287,14 @@ enum ConnState {
     Close,
 }
 
-fn handle_conn(stream: TcpStream, server: &Arc<SolveServer>, max_body: usize) {
+fn handle_conn(stream: TcpStream, shared: &FrontShared) {
     let Ok(read_half) = stream.try_clone() else { return };
+    shared.conn.opened();
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    while let ConnState::KeepAlive = serve_one(&mut reader, &mut writer, server, max_body) {}
+    let mut served = 0u64;
+    while let ConnState::KeepAlive = serve_one(&mut reader, &mut writer, shared, &mut served) {}
+    shared.conn.closed(served);
 }
 
 /// Read one CRLF-terminated line without ever buffering more than `cap`
@@ -249,20 +345,25 @@ fn status_for(e: &ServeError) -> (u16, &'static str) {
     }
 }
 
-fn write_response(
+fn write_response_full(
     writer: &mut TcpStream,
     status: u16,
     reason: &str,
     retry_after: Option<u64>,
     keep_alive: bool,
+    content_type: &str,
+    trace: Option<&str>,
     body: &str,
 ) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\n",
         body.len()
     );
     if let Some(secs) = retry_after {
         head.push_str(&format!("retry-after: {secs}\r\n"));
+    }
+    if let Some(id) = trace {
+        head.push_str(&format!("x-nodal-trace: {id}\r\n"));
     }
     head.push_str(if keep_alive {
         "connection: keep-alive\r\n\r\n"
@@ -272,6 +373,17 @@ fn write_response(
     writer.write_all(head.as_bytes())?;
     writer.write_all(body.as_bytes())?;
     writer.flush()
+}
+
+fn write_response(
+    writer: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    retry_after: Option<u64>,
+    keep_alive: bool,
+    body: &str,
+) -> std::io::Result<()> {
+    write_response_full(writer, status, reason, retry_after, keep_alive, JSON_TYPE, None, body)
 }
 
 /// Answer a protocol-level defect with `400` and a `ServeError::BadRequest`
@@ -286,16 +398,99 @@ fn reject(writer: &mut TcpStream, msg: &str, keep_alive: bool) -> ConnState {
     }
 }
 
+/// Span timestamps are u64 nanos off the frontend's injected clock.
+fn ns_of(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// Trace-or-not decision for one solve request: an `x-nodal-trace` header
+/// always traces (a parseable id is adopted, anything else gets a freshly
+/// minted one); without the header every `sample_n`-th request is traced
+/// (0 = never).
+fn resolve_trace(shared: &FrontShared, header: Option<&str>, now: Duration) -> Option<TraceId> {
+    if let Some(h) = header {
+        return Some(TraceId::parse_hex(h.trim()).unwrap_or_else(|| obs::mint(now)));
+    }
+    let n = shared.trace.sample_n;
+    if n == 0 {
+        return None;
+    }
+    let seq = shared.sample_seq.fetch_add(1, Ordering::Relaxed);
+    (seq % n == 0).then(|| obs::mint(now))
+}
+
+/// Handle a decoded `POST /v1/solve`: resolve tracing, submit through the
+/// frontend, emit the `http_request` + `admission` spans, publish and
+/// export the JSONL **before** the response bytes go out (the trace is
+/// queryable the instant the client wakes), then answer with the trace id
+/// echoed in `x-nodal-trace`.
+fn solve_route(
+    writer: &mut TcpStream,
+    shared: &FrontShared,
+    mut req: SolveRequest,
+    trace_header: Option<&str>,
+    keep_alive: bool,
+) {
+    let front = &*shared.front;
+    let t0 = front.now();
+    let traced = resolve_trace(shared, trace_header, t0);
+    let mut root = traced.map(|t| SpanRec::new(TraceCtx::root(t), obs::HTTP_REQUEST, t0, t0));
+    let mut adm = root.as_ref().map(|r| SpanRec::new(r.ctx(), obs::ADMISSION, t0, t0));
+    if let Some(a) = &adm {
+        req.trace = Some(a.ctx());
+    }
+    let submitted = front.submit_front(req);
+    if let Some(a) = adm.as_mut() {
+        a.end_ns = ns_of(front.now());
+    }
+    let result = match submitted {
+        Ok(wait) => wait(),
+        Err(e) => Err(e),
+    };
+    let (status, reason, retry) = match &result {
+        Ok(_) => (200, "OK", None),
+        Err(e) => {
+            let (s, r) = status_for(e);
+            (s, r, matches!(e, ServeError::Overloaded).then_some(1))
+        }
+    };
+    if let (Some(r), Some(a)) = (root.as_mut(), adm) {
+        r.end_ns = ns_of(front.now());
+        *r = r.attr("status", status as u64);
+        obs::record(*r);
+        obs::record(a);
+        obs::publish();
+        let _ = obs::global().flush_jsonl(TraceId(r.trace), &shared.trace.dir);
+    }
+    let body = match &result {
+        Ok(resp) => resp.to_json().to_string(),
+        Err(e) => e.to_json().to_string(),
+    };
+    let hex = traced.map(|t| t.to_hex());
+    let _ = write_response_full(
+        writer,
+        status,
+        reason,
+        retry,
+        keep_alive,
+        JSON_TYPE,
+        hex.as_deref(),
+        &body,
+    );
+}
+
 /// Serve exactly one HTTP request off the connection.
 fn serve_one(
     reader: &mut BufReader<TcpStream>,
     writer: &mut TcpStream,
-    server: &Arc<SolveServer>,
-    max_body: usize,
+    shared: &FrontShared,
+    served: &mut u64,
 ) -> ConnState {
     let Some(request_line) = read_line_capped(reader, MAX_LINE_BYTES) else {
         return ConnState::Close;
     };
+    shared.conn.record_request(*served);
+    *served += 1;
     let mut parts = request_line.split_whitespace();
     let (method, path) = match (parts.next(), parts.next()) {
         (Some(m), Some(p)) => (m.to_string(), p.to_string()),
@@ -306,6 +501,7 @@ fn serve_one(
     let mut keep_alive = true;
     let mut oversized = false;
     let mut terminated = false;
+    let mut trace_header: Option<String> = None;
     for _ in 0..MAX_HEADERS {
         let Some(h) = read_line_capped(reader, MAX_LINE_BYTES) else {
             return ConnState::Close;
@@ -321,12 +517,14 @@ fn serve_one(
         let value = value.trim();
         if name.eq_ignore_ascii_case("content-length") {
             match value.parse::<usize>() {
-                Ok(n) if n <= max_body => content_length = n,
+                Ok(n) if n <= shared.max_body => content_length = n,
                 Ok(_) => oversized = true,
                 Err(_) => return reject(writer, "unparseable content-length", false),
             }
         } else if name.eq_ignore_ascii_case("connection") {
             keep_alive = !value.eq_ignore_ascii_case("close");
+        } else if name.eq_ignore_ascii_case("x-nodal-trace") {
+            trace_header = Some(value.to_string());
         }
     }
     if !terminated {
@@ -342,7 +540,11 @@ fn serve_one(
         return ConnState::Close;
     }
 
-    match (method.as_str(), path.as_str()) {
+    let (path_base, query) = match path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (path.as_str(), None),
+    };
+    match (method.as_str(), path_base) {
         ("POST", "/v1/solve") => {
             // Decode fully — JSON syntax, wire version, schema — before any
             // submit, so garbage never reaches admission or a worker.
@@ -357,26 +559,34 @@ fn serve_one(
                     return reject(writer, &msg, keep_alive);
                 }
             };
-            let result = match server.submit(req) {
-                Ok(handle) => handle.wait(),
-                Err(e) => Err(e),
-            };
-            match result {
-                Ok(resp) => {
-                    let body = resp.to_json().to_string();
-                    let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
-                }
-                Err(e) => {
-                    let (status, reason) = status_for(&e);
-                    let retry = matches!(e, ServeError::Overloaded).then_some(1);
-                    let body = e.to_json().to_string();
-                    let _ = write_response(writer, status, reason, retry, keep_alive, &body);
-                }
-            }
+            solve_route(writer, shared, req, trace_header.as_deref(), keep_alive);
         }
         ("GET", "/v1/metrics") => {
-            let body = server.metrics().to_json().to_string();
-            let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
+            let mut snap = shared.front.metrics_front();
+            shared.conn.annotate(&mut snap);
+            if query == Some("format=prometheus") {
+                let text = snap.to_prometheus();
+                let _ = write_response_full(
+                    writer, 200, "OK", None, keep_alive, PROM_TYPE, None, &text,
+                );
+            } else {
+                let body = snap.to_json().to_string();
+                let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
+            }
+        }
+        ("GET", p) if p.starts_with("/v1/trace/") => {
+            let spans = TraceId::parse_hex(&p["/v1/trace/".len()..])
+                .map(|t| obs::global().get(t))
+                .filter(|s| !s.is_empty());
+            match spans {
+                Some(spans) => {
+                    let body = obj(vec![("spans", obs::spans_to_json(&spans))]).to_string();
+                    let _ = write_response(writer, 200, "OK", None, keep_alive, &body);
+                }
+                None => {
+                    let _ = write_response(writer, 404, "Not Found", None, keep_alive, "{}");
+                }
+            }
         }
         ("GET", "/healthz") => {
             let _ = write_response(writer, 200, "OK", None, keep_alive, "{\"ok\":true}");
@@ -446,5 +656,45 @@ mod tests {
         assert_eq!(status_for(&ServeError::UnknownDynamics(String::new())).0, 404);
         assert_eq!(status_for(&ServeError::Solver(String::new())).0, 500);
         assert_eq!(status_for(&ServeError::ShuttingDown).0, 503);
+    }
+
+    /// The sampling decision is pure arithmetic over the shared counter:
+    /// a header always wins, `sample_n = 0` never samples, and stride N
+    /// picks every Nth unsolicited request.
+    #[test]
+    fn resolve_trace_header_and_sampling_rules() {
+        struct NullFront;
+        impl SolveFrontend for NullFront {
+            fn submit_front(&self, _req: SolveRequest) -> Result<Waiter, ServeError> {
+                Err(ServeError::ShuttingDown)
+            }
+            fn metrics_front(&self) -> MetricsSnapshot {
+                MetricsSnapshot::default()
+            }
+            fn now(&self) -> Duration {
+                Duration::ZERO
+            }
+        }
+        let mk = |n: u64| FrontShared {
+            front: Arc::new(NullFront),
+            conn: ConnMetrics::default(),
+            trace: TraceKnobs { sample_n: n, dir: std::env::temp_dir() },
+            sample_seq: AtomicU64::new(0),
+            max_body: 1024,
+        };
+        let t = Duration::from_nanos(42);
+
+        let off = mk(0);
+        assert_eq!(resolve_trace(&off, None, t), None, "sampling off, no header");
+        let id = resolve_trace(&off, Some("00000000000000ab"), t);
+        assert_eq!(id, Some(TraceId(0xab)), "valid header id is adopted");
+        let minted = resolve_trace(&off, Some("not-a-trace-id"), t);
+        assert!(minted.is_some(), "bad header still traces under a minted id");
+        assert_ne!(minted, Some(TraceId(0)), "minted ids are nonzero");
+
+        let every2 = mk(2);
+        let picks: Vec<bool> =
+            (0..4).map(|_| resolve_trace(&every2, None, t).is_some()).collect();
+        assert_eq!(picks, vec![true, false, true, false], "stride-2 sampling");
     }
 }

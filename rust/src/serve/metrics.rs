@@ -8,6 +8,7 @@
 //! per-request numbers ride on every [`super::SolveResponse`].
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -76,28 +77,39 @@ impl LogHistogram {
     /// cumulative count reaches `q` of the total (0 when empty). Accurate to
     /// bucket resolution (a factor of 2).
     pub fn quantile(&self, q: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
-        let mut cum = 0u64;
-        let mut last_nonempty = 0usize;
-        for (i, c) in self.counts.iter().enumerate() {
-            let c = c.load(Ordering::Relaxed);
-            if c > 0 {
-                last_nonempty = i;
-            }
-            cum += c;
-            if cum >= target {
-                return upper_edge(i);
-            }
-        }
-        // Racing concurrent records can make `total` momentarily exceed the
-        // bucket sum (both are Relaxed); bound the answer by the largest
-        // recorded bucket instead of falling through to u64::MAX.
-        upper_edge(last_nonempty)
+        quantile_from_buckets(&self.bucket_counts(), self.count(), q)
     }
+
+    /// Point-in-time copy of the raw per-bucket counts — the lossless form
+    /// that crosses the dist wire so merged fleet quantiles are exactly as
+    /// accurate as single-shard ones.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Shared quantile kernel over a bucket-count vector: the upper edge of
+/// the first bucket whose cumulative count reaches `q` of `n`. Racing
+/// concurrent records can make `n` momentarily exceed the bucket sum (all
+/// loads are Relaxed); the answer is then bounded by the largest recorded
+/// bucket instead of falling through to `u64::MAX`.
+fn quantile_from_buckets(buckets: &[u64], n: u64, q: f64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    let mut last_nonempty = 0usize;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c > 0 {
+            last_nonempty = i;
+        }
+        cum += c;
+        if cum >= target {
+            return upper_edge(i);
+        }
+    }
+    upper_edge(last_nonempty)
 }
 
 fn upper_edge(bucket: usize) -> u64 {
@@ -108,10 +120,21 @@ fn upper_edge(bucket: usize) -> u64 {
     }
 }
 
-/// Quantile summary of one latency histogram, in milliseconds.
-#[derive(Debug, Clone, Copy, Default)]
+/// Quantile summary of one latency histogram, in milliseconds, carrying
+/// the **raw parts** (count, exact sum, max, per-bucket counts) it was
+/// derived from. The parts are what cross the dist wire: two summaries
+/// merge bucket-wise ([`LatencySummary::merge`]) and re-derive their
+/// quantiles, so a fleet-merged p99 is exactly as accurate as a
+/// single-shard one — not a lossy max-bound over pre-computed floats.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencySummary {
     pub count: u64,
+    /// Exact sum of recorded nanoseconds.
+    pub sum_ns: u64,
+    /// Largest recorded value in nanoseconds.
+    pub max_ns: u64,
+    /// Raw log₂ bucket counts (empty encodes as all-zero).
+    pub buckets: Vec<u64>,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -120,16 +143,144 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    fn from_hist(h: &LogHistogram) -> Self {
+    /// The single constructor every path funnels through (live snapshot,
+    /// wire decode, cross-shard merge): derived fields are a pure function
+    /// of the parts, so equal parts give bit-equal summaries.
+    pub fn from_parts(count: u64, sum_ns: u64, max_ns: u64, buckets: Vec<u64>) -> Self {
         let ns_to_ms = 1e-6;
+        let mean_ns = if count == 0 { 0.0 } else { sum_ns as f64 / count as f64 };
         LatencySummary {
-            count: h.count(),
-            mean_ms: h.mean() * ns_to_ms,
-            p50_ms: h.quantile(0.50) as f64 * ns_to_ms,
-            p95_ms: h.quantile(0.95) as f64 * ns_to_ms,
-            p99_ms: h.quantile(0.99) as f64 * ns_to_ms,
-            max_ms: h.max() as f64 * ns_to_ms,
+            mean_ms: mean_ns * ns_to_ms,
+            p50_ms: quantile_from_buckets(&buckets, count, 0.50) as f64 * ns_to_ms,
+            p95_ms: quantile_from_buckets(&buckets, count, 0.95) as f64 * ns_to_ms,
+            p99_ms: quantile_from_buckets(&buckets, count, 0.99) as f64 * ns_to_ms,
+            max_ms: max_ns as f64 * ns_to_ms,
+            count,
+            sum_ns,
+            max_ns,
+            buckets,
         }
+    }
+
+    fn from_hist(h: &LogHistogram) -> Self {
+        Self::from_parts(h.count(), h.sum(), h.max(), h.bucket_counts())
+    }
+
+    /// Bucket-wise exact merge: counts and sums add, maxima take the max,
+    /// buckets add slot-wise; quantiles are re-derived from the merged
+    /// buckets. Merging the per-shard summaries of two disjoint streams
+    /// yields bit-exactly the summary of one histogram fed both streams.
+    pub fn merge(&self, other: &LatencySummary) -> LatencySummary {
+        let n = self.buckets.len().max(other.buckets.len());
+        let mut buckets = vec![0u64; n];
+        for (i, slot) in buckets.iter_mut().enumerate() {
+            *slot = self.buckets.get(i).copied().unwrap_or(0)
+                + other.buckets.get(i).copied().unwrap_or(0);
+        }
+        LatencySummary::from_parts(
+            self.count + other.count,
+            self.sum_ns.saturating_add(other.sum_ns),
+            self.max_ns.max(other.max_ns),
+            buckets,
+        )
+    }
+}
+
+/// Raw-unit summary of a count histogram (requests per connection):
+/// the same bucket-exact parts as [`LatencySummary`], without the
+/// nanosecond→ms interpretation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CountSummary {
+    pub count: u64,
+    /// Exact sum of recorded values.
+    pub sum: u64,
+    pub max: u64,
+    /// Raw log₂ bucket counts.
+    pub buckets: Vec<u64>,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+}
+
+impl CountSummary {
+    /// Derived fields are a pure function of the parts (see
+    /// [`LatencySummary::from_parts`]).
+    pub fn from_parts(count: u64, sum: u64, max: u64, buckets: Vec<u64>) -> Self {
+        CountSummary {
+            mean: if count == 0 { 0.0 } else { sum as f64 / count as f64 },
+            p50: quantile_from_buckets(&buckets, count, 0.50),
+            p99: quantile_from_buckets(&buckets, count, 0.99),
+            count,
+            sum,
+            max,
+            buckets,
+        }
+    }
+
+    fn from_hist(h: &LogHistogram) -> Self {
+        Self::from_parts(h.count(), h.sum(), h.max(), h.bucket_counts())
+    }
+
+    /// Bucket-wise exact merge (see [`LatencySummary::merge`]).
+    pub fn merge(&self, other: &CountSummary) -> CountSummary {
+        let n = self.buckets.len().max(other.buckets.len());
+        let mut buckets = vec![0u64; n];
+        for (i, slot) in buckets.iter_mut().enumerate() {
+            *slot = self.buckets.get(i).copied().unwrap_or(0)
+                + other.buckets.get(i).copied().unwrap_or(0);
+        }
+        CountSummary::from_parts(
+            self.count + other.count,
+            self.sum.saturating_add(other.sum),
+            self.max.max(other.max),
+            buckets,
+        )
+    }
+}
+
+/// Keep-alive connection accounting for the HTTP front door: owned by the
+/// [`HttpServer`](super::HttpServer) (not the `SolveServer` — several
+/// front ends can share one solver), overlaid onto the snapshot at render
+/// time.
+#[derive(Debug, Default)]
+pub struct ConnMetrics {
+    /// Connections accepted since startup.
+    pub accepted: AtomicU64,
+    /// Connections currently open.
+    pub active: AtomicU64,
+    /// Keep-alive reuses: requests served on an already-used connection.
+    pub reused: AtomicU64,
+    /// Requests served per connection, recorded at connection close.
+    pub reqs_per_conn: LogHistogram,
+}
+
+impl ConnMetrics {
+    /// Record one request served on a connection that has already served
+    /// `served_before` requests.
+    pub fn record_request(&self, served_before: u64) {
+        if served_before > 0 {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Connection opened.
+    pub fn opened(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        self.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connection closed after serving `served` requests.
+    pub fn closed(&self, served: u64) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.reqs_per_conn.record(served);
+    }
+
+    /// Overlay these counters onto a solver snapshot.
+    pub fn annotate(&self, snap: &mut MetricsSnapshot) {
+        snap.http_conns_accepted = self.accepted.load(Ordering::Relaxed);
+        snap.http_conns_active = self.active.load(Ordering::Relaxed);
+        snap.http_conns_reused = self.reused.load(Ordering::Relaxed);
+        snap.http_reqs_per_conn = CountSummary::from_hist(&self.reqs_per_conn);
     }
 }
 
@@ -214,6 +365,10 @@ impl ServeMetrics {
             nfe_total: self.nfe.sum(),
             nfe_mean: self.nfe.mean(),
             nfe_max: self.nfe.max(),
+            http_conns_accepted: 0,
+            http_conns_active: 0,
+            http_conns_reused: 0,
+            http_reqs_per_conn: CountSummary::default(),
         }
     }
 }
@@ -236,6 +391,13 @@ pub struct MetricsSnapshot {
     pub nfe_total: u64,
     pub nfe_mean: f64,
     pub nfe_max: u64,
+    /// HTTP front-door connection counters. Zero unless a front door is
+    /// attached and overlays them via [`ConnMetrics::annotate`].
+    pub http_conns_accepted: u64,
+    pub http_conns_active: u64,
+    pub http_conns_reused: u64,
+    /// Requests served per keep-alive connection (recorded at close).
+    pub http_reqs_per_conn: CountSummary,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -288,25 +450,63 @@ fn u64_field(v: &crate::util::json::Json, key: &str) -> anyhow::Result<u64> {
 }
 
 fn latency_to_json(l: &LatencySummary) -> crate::util::json::Json {
+    // Only the raw parts cross the wire — exact u64s. The ms quantiles are
+    // re-derived on decode through the same `from_parts`, so the decoded
+    // summary is bit-identical AND two decoded summaries can merge without
+    // quantile loss.
+    let buckets: Vec<usize> = l.buckets.iter().map(|&b| b as usize).collect();
     crate::util::json::obj(vec![
         ("count", (l.count as usize).into()),
-        ("mean_ms", l.mean_ms.into()),
-        ("p50_ms", l.p50_ms.into()),
-        ("p95_ms", l.p95_ms.into()),
-        ("p99_ms", l.p99_ms.into()),
-        ("max_ms", l.max_ms.into()),
+        ("sum_ns", (l.sum_ns as usize).into()),
+        ("max_ns", (l.max_ns as usize).into()),
+        ("buckets", buckets.into()),
     ])
 }
 
 fn latency_from_json(v: &crate::util::json::Json) -> anyhow::Result<LatencySummary> {
-    Ok(LatencySummary {
-        count: u64_field(v, "count")?,
-        mean_ms: v.get("mean_ms")?.as_f64()?,
-        p50_ms: v.get("p50_ms")?.as_f64()?,
-        p95_ms: v.get("p95_ms")?.as_f64()?,
-        p99_ms: v.get("p99_ms")?.as_f64()?,
-        max_ms: v.get("max_ms")?.as_f64()?,
-    })
+    let mut buckets = Vec::new();
+    for b in v.get("buckets")?.as_arr()? {
+        buckets.push(b.as_usize()? as u64);
+    }
+    Ok(LatencySummary::from_parts(
+        u64_field(v, "count")?,
+        u64_field(v, "sum_ns")?,
+        u64_field(v, "max_ns")?,
+        buckets,
+    ))
+}
+
+fn count_to_json(c: &CountSummary) -> crate::util::json::Json {
+    let buckets: Vec<usize> = c.buckets.iter().map(|&b| b as usize).collect();
+    crate::util::json::obj(vec![
+        ("count", (c.count as usize).into()),
+        ("sum", (c.sum as usize).into()),
+        ("max", (c.max as usize).into()),
+        ("buckets", buckets.into()),
+    ])
+}
+
+fn count_from_json(v: &crate::util::json::Json) -> anyhow::Result<CountSummary> {
+    let mut buckets = Vec::new();
+    for b in v.get("buckets")?.as_arr()? {
+        buckets.push(b.as_usize()? as u64);
+    }
+    Ok(CountSummary::from_parts(
+        u64_field(v, "count")?,
+        u64_field(v, "sum")?,
+        u64_field(v, "max")?,
+        buckets,
+    ))
+}
+
+/// Tolerant u64: missing key decodes as 0 so snapshots from peers predating
+/// a field still parse (the additive-fields evolution rule, as in
+/// [`super::wire`]).
+fn u64_opt(v: &crate::util::json::Json, key: &str) -> anyhow::Result<u64> {
+    match v.opt(key) {
+        Some(x) => Ok(x.as_usize()? as u64),
+        None => Ok(0),
+    }
 }
 
 impl MetricsSnapshot {
@@ -334,6 +534,10 @@ impl MetricsSnapshot {
             ("nfe_total", (self.nfe_total as usize).into()),
             ("nfe_mean", self.nfe_mean.into()),
             ("nfe_max", (self.nfe_max as usize).into()),
+            ("http_conns_accepted", (self.http_conns_accepted as usize).into()),
+            ("http_conns_active", (self.http_conns_active as usize).into()),
+            ("http_conns_reused", (self.http_conns_reused as usize).into()),
+            ("http_reqs_per_conn", count_to_json(&self.http_reqs_per_conn)),
         ])
     }
 
@@ -362,8 +566,134 @@ impl MetricsSnapshot {
             nfe_total: u64_field(v, "nfe_total")?,
             nfe_mean: v.get("nfe_mean")?.as_f64()?,
             nfe_max: u64_field(v, "nfe_max")?,
+            http_conns_accepted: u64_opt(v, "http_conns_accepted")?,
+            http_conns_active: u64_opt(v, "http_conns_active")?,
+            http_conns_reused: u64_opt(v, "http_conns_reused")?,
+            http_reqs_per_conn: match v.opt("http_reqs_per_conn") {
+                Some(c) => count_from_json(c)?,
+                None => CountSummary::default(),
+            },
         })
     }
+
+    /// Prometheus text exposition (version 0.0.4) of this snapshot, served
+    /// by the front door at `GET /metrics` alongside the JSON form at
+    /// `GET /v1/metrics`. Deterministic: a given snapshot always renders to
+    /// the same bytes (maps are sorted, floats use Rust's shortest
+    /// round-trip `Display`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let counters = [
+            ("nodal_requests_submitted_total", "requests admitted", self.submitted),
+            ("nodal_requests_completed_total", "requests answered", self.completed),
+            ("nodal_requests_rejected_total", "requests shed by admission", self.rejected),
+            ("nodal_requests_failed_total", "requests failed in the solver", self.failed),
+            ("nodal_batches_total", "batches executed", self.batches),
+            ("nodal_nfe_total", "forward f evaluations served", self.nfe_total),
+            (
+                "nodal_http_connections_accepted_total",
+                "connections accepted",
+                self.http_conns_accepted,
+            ),
+            (
+                "nodal_http_keepalive_reuses_total",
+                "requests on an already-used connection",
+                self.http_conns_reused,
+            ),
+        ];
+        for (name, help, v) in counters {
+            prom_counter(&mut out, name, help, v);
+        }
+        let gauges = [
+            ("nodal_nfe_max", "largest per-request NFE", self.nfe_max),
+            ("nodal_http_connections_active", "connections open now", self.http_conns_active),
+        ];
+        for (name, help, v) in gauges {
+            prom_gauge(&mut out, name, help, v);
+        }
+        out.push_str("# TYPE nodal_batch_size_count gauge\n");
+        for (size, &c) in self.batch_sizes.iter().enumerate() {
+            if c > 0 {
+                let _ = writeln!(out, "nodal_batch_size_count{{size=\"{size}\"}} {c}");
+            }
+        }
+        let latencies = [
+            ("nodal_queue_wait_seconds", "submit to batch start", &self.queue_wait),
+            ("nodal_service_seconds", "batch start to response", &self.service),
+        ];
+        for (name, help, l) in latencies {
+            prom_latency(&mut out, name, help, "", l);
+        }
+        if !self.per_key_queue_wait.is_empty() {
+            let name = "nodal_tenant_queue_wait_seconds";
+            let _ = writeln!(out, "# HELP {name} per-tenant submit to batch start");
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (tenant, l) in &self.per_key_queue_wait {
+                let labels = format!("tenant=\"{}\",", prom_escape(tenant));
+                let sum_s = l.sum_ns as f64 * 1e-9;
+                prom_hist_series(&mut out, name, &labels, l.count, sum_s, &l.buckets, 1e-9);
+            }
+        }
+        let rc = &self.http_reqs_per_conn;
+        let name = "nodal_http_requests_per_connection";
+        let _ = writeln!(out, "# HELP {name} requests served per keep-alive connection");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        prom_hist_series(&mut out, name, "", rc.count, rc.sum as f64, &rc.buckets, 1.0);
+        out
+    }
+}
+
+fn prom_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
+}
+
+fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}");
+}
+
+/// One `<name>_bucket{le=...}` series (cumulative, Prometheus convention)
+/// plus `_sum`/`_count`, from raw log₂ bucket counts. `scale` converts a
+/// bucket's upper edge into the exposition unit (1e-9 for ns→s histograms,
+/// 1.0 for plain counts). Empty buckets are elided; bucket 63's edge is
+/// `u64::MAX`, which the trailing `+Inf` series already covers.
+fn prom_hist_series(
+    out: &mut String,
+    name: &str,
+    labels: &str,
+    count: u64,
+    sum: f64,
+    buckets: &[u64],
+    scale: f64,
+) {
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        cum += c;
+        if c == 0 || i >= 63 {
+            continue;
+        }
+        let le = upper_edge(i) as f64 * scale;
+        let _ = writeln!(out, "{name}_bucket{{{labels}le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}le=\"+Inf\"}} {count}");
+    let base = labels.trim_end_matches(',');
+    if base.is_empty() {
+        let _ = writeln!(out, "{name}_sum {sum}");
+        let _ = writeln!(out, "{name}_count {count}");
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{base}}} {sum}");
+        let _ = writeln!(out, "{name}_count{{{base}}} {count}");
+    }
+}
+
+/// Histogram exposition of a [`LatencySummary`] in seconds, with its own
+/// HELP/TYPE header (single-series metrics).
+fn prom_latency(out: &mut String, name: &str, help: &str, labels: &str, l: &LatencySummary) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} histogram");
+    prom_hist_series(out, name, labels, l.count, l.sum_ns as f64 * 1e-9, &l.buckets, 1e-9);
 }
 
 #[cfg(test)]
@@ -446,7 +776,7 @@ mod tests {
         assert_eq!(s.per_key_queue_wait.len(), 2);
         assert_eq!(s.per_key_queue_wait[0].0, "calm", "sorted by key");
         assert_eq!(s.per_key_queue_wait[1].0, "hot");
-        let (calm, hot) = (s.per_key_queue_wait[0].1, s.per_key_queue_wait[1].1);
+        let (calm, hot) = (&s.per_key_queue_wait[0].1, &s.per_key_queue_wait[1].1);
         assert_eq!(calm.count, 1);
         assert_eq!(hot.count, 4);
         assert!(calm.p99_ms < 1.0, "calm tenant keeps its own p99: {}", calm.p99_ms);
@@ -479,5 +809,110 @@ mod tests {
             assert_eq!(bl.p99_ms.to_bits(), sl.p99_ms.to_bits());
         }
         assert!(MetricsSnapshot::from_json(&crate::util::json::Json::Null).is_err());
+    }
+
+    /// The lossless-merge contract behind cross-shard aggregation: merging
+    /// the summaries of two disjoint streams is bit-identical to summarizing
+    /// one histogram fed both streams. (The dist-level regression lives in
+    /// `dist::dispatch`; this is the kernel.)
+    #[test]
+    fn merged_summaries_equal_single_histogram() {
+        let a = LogHistogram::default();
+        let b = LogHistogram::default();
+        let both = LogHistogram::default();
+        for v in [800u64, 1_200, 950_000, 2_000_000] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [65u64, 70, 500_000_000] {
+            b.record(v);
+            both.record(v);
+        }
+        let merged = LatencySummary::from_hist(&a).merge(&LatencySummary::from_hist(&b));
+        assert_eq!(merged, LatencySummary::from_hist(&both));
+        // Sanity: the merged p99 sees b's outlier even though a never did.
+        assert!(merged.p99_ms >= 500.0, "merged p99 covers the outlier: {}", merged.p99_ms);
+        // Merging with an empty (all-default) summary is the identity.
+        assert_eq!(merged.merge(&LatencySummary::default()), merged);
+    }
+
+    #[test]
+    fn conn_metrics_overlay_and_reuse_counting() {
+        let c = ConnMetrics::default();
+        c.opened();
+        c.opened();
+        c.record_request(0); // first request on conn 1: not a reuse
+        c.record_request(1);
+        c.record_request(2);
+        c.record_request(0); // first request on conn 2
+        c.closed(3);
+        let mut s = MetricsSnapshot::default();
+        c.annotate(&mut s);
+        assert_eq!(s.http_conns_accepted, 2);
+        assert_eq!(s.http_conns_active, 1);
+        assert_eq!(s.http_conns_reused, 2);
+        assert_eq!(s.http_reqs_per_conn.count, 1);
+        assert_eq!(s.http_reqs_per_conn.sum, 3);
+        assert_eq!(s.http_reqs_per_conn.max, 3);
+        // And the overlay survives the wire codec exactly.
+        let j = crate::util::json::Json::parse(&s.to_json().to_string()).unwrap();
+        let back = MetricsSnapshot::from_json(&j).unwrap();
+        assert_eq!(back.http_reqs_per_conn, s.http_reqs_per_conn);
+        assert_eq!(back.http_conns_reused, 2);
+    }
+
+    /// Snapshots from peers that predate the connection fields still parse
+    /// (additive evolution, mirroring the wire's tolerant-optional rule).
+    #[test]
+    fn from_json_tolerates_missing_conn_fields() {
+        let m = ServeMetrics::default();
+        m.record_request("vdp", Duration::from_micros(10), Duration::from_millis(2), 7);
+        let mut j = match crate::util::json::Json::parse(&m.snapshot().to_json().to_string()) {
+            Ok(crate::util::json::Json::Obj(map)) => map,
+            other => panic!("snapshot must encode as an object: {other:?}"),
+        };
+        let added =
+            ["http_conns_accepted", "http_conns_active", "http_conns_reused", "http_reqs_per_conn"];
+        for k in added {
+            j.remove(k);
+        }
+        let back = MetricsSnapshot::from_json(&crate::util::json::Json::Obj(j)).unwrap();
+        assert_eq!(back.http_conns_accepted, 0);
+        assert_eq!(back.http_reqs_per_conn, CountSummary::default());
+        assert_eq!(back.completed, 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_deterministic_and_complete() {
+        let m = ServeMetrics::default();
+        m.record_request("vdp", Duration::from_micros(10), Duration::from_millis(2), 120);
+        m.record_request("li\"near", Duration::from_micros(30), Duration::from_millis(4), 80);
+        m.record_batch(2);
+        let s = m.snapshot();
+        let text = s.to_prometheus();
+        assert_eq!(text, s.to_prometheus(), "same snapshot, same bytes");
+        for needle in [
+            "# TYPE nodal_requests_completed_total counter",
+            "nodal_requests_completed_total 2",
+            "nodal_batch_size_count{size=\"2\"} 1",
+            "# TYPE nodal_queue_wait_seconds histogram",
+            "nodal_queue_wait_seconds_bucket{le=\"+Inf\"} 2",
+            "nodal_queue_wait_seconds_count 2",
+            "nodal_tenant_queue_wait_seconds_bucket{tenant=\"vdp\",le=\"+Inf\"} 1",
+            "nodal_tenant_queue_wait_seconds_count{tenant=\"li\\\"near\"} 1",
+            "nodal_nfe_total 200",
+            "# TYPE nodal_http_requests_per_connection histogram",
+            "nodal_http_requests_per_connection_count 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Cumulative le-buckets are non-decreasing within each series.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("nodal_service_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative buckets must not decrease: {line}");
+            last = v;
+        }
+        assert_eq!(last, 2);
     }
 }

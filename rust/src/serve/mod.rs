@@ -90,8 +90,8 @@ pub mod wire;
 mod worker;
 
 pub use batcher::{BatchFormer, FlushReason, FormedBatch, Pending};
-pub use http::{HttpConfig, HttpServer};
-pub use metrics::{LatencySummary, MetricsSnapshot, ServeMetrics};
+pub use http::{HttpConfig, HttpServer, SolveFrontend, Waiter};
+pub use metrics::{ConnMetrics, CountSummary, LatencySummary, MetricsSnapshot, ServeMetrics};
 pub use request::{
     BatchKey, Lane, Payload, RequestStats, ResponseHandle, ServeError, SolveRequest,
     SolveRequestBuilder, SolveResponse, Tolerance,
@@ -570,6 +570,7 @@ fn batcher_loop(core: &Core) {
 }
 
 fn dispatch(core: &Core, batch: FormedBatch) {
+    record_batch_spans(core, &batch);
     if let Err(b) = core.work_q.push(batch) {
         // Unreachable in normal operation (the work queue is unbounded and
         // closes only after this thread exits); fail the batch cleanly
@@ -577,6 +578,33 @@ fn dispatch(core: &Core, batch: FormedBatch) {
         for item in &b.items {
             core.complete(&item.slot, item.cost, Err(ServeError::ShuttingDown));
         }
+    }
+}
+
+/// Trace hook on the batcher thread: one `queue_wait` + one `batch_form`
+/// span per traced item, published to the global store *before* the batch
+/// reaches the work queue — so by the time a worker fulfills the response
+/// the spans are already stitchable. Untraced traffic skips everything.
+fn record_batch_spans(core: &Core, batch: &FormedBatch) {
+    use crate::obs::{self, SpanRec};
+    let mut any = false;
+    let now = core.clock.now();
+    for item in &batch.items {
+        let Some(ctx) = item.req.trace else { continue };
+        any = true;
+        obs::record(
+            SpanRec::new(ctx, obs::QUEUE_WAIT, item.submitted, batch.triggered_at)
+                .attr("lane", batch.key.lane as u64)
+                .attr("deferred", batch.deferred),
+        );
+        obs::record(
+            SpanRec::new(ctx, obs::BATCH_FORM, batch.triggered_at, now)
+                .attr("reason", batch.reason as u64)
+                .attr("size", batch.items.len() as u64),
+        );
+    }
+    if any {
+        obs::publish();
     }
 }
 
@@ -721,6 +749,7 @@ mod tests {
             grad: None,
             observe_at: Vec::new(),
             lane: Lane::Interactive,
+            trace: None,
         };
         match server.submit(literal).unwrap_err() {
             ServeError::BadRequest(msg) => assert!(msg.contains("zero-length span"), "{msg}"),

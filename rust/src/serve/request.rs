@@ -22,6 +22,7 @@
 //! Wire codecs for these types live in [`super::wire`].
 
 use crate::grad::GradResult;
+use crate::obs::TraceCtx;
 use crate::ode::integrate::IntegrateOpts;
 use crate::ode::tableau::Tableau;
 use std::sync::{Arc, Condvar, Mutex};
@@ -92,13 +93,18 @@ pub struct SolveRequest {
     pub observe_at: Vec<f64>,
     /// QoS priority lane (see [`Lane`]).
     pub lane: Lane,
+    /// Observability context ([`crate::obs`]): when set, every layer the
+    /// request crosses emits spans into this trace. **Never** part of the
+    /// [`BatchKey`] — traced and untraced requests coalesce freely, which
+    /// is what keeps tracing answer-neutral.
+    pub trace: Option<TraceCtx>,
 }
 
 /// Typed builder for [`SolveRequest`]; all validation happens in
 /// [`SolveRequestBuilder::build`].
 ///
 /// ```
-/// use rust_pallas::serve::{Lane, SolveRequest};
+/// use nodal::serve::{Lane, SolveRequest};
 /// let req = SolveRequest::builder("vdp")
 ///     .span(0.0, 5.0)
 ///     .state(vec![2.0, 0.0])
@@ -120,6 +126,7 @@ pub struct SolveRequestBuilder {
     grad: Option<Vec<f32>>,
     observe_at: Vec<f64>,
     lane: Lane,
+    trace: Option<TraceCtx>,
 }
 
 impl SolveRequestBuilder {
@@ -177,6 +184,14 @@ impl SolveRequestBuilder {
         self
     }
 
+    /// Attach an observability trace context (see [`crate::obs`]): spans
+    /// for this request's queue wait, batch formation, and solve phases
+    /// join `ctx.trace`, parented under `ctx.parent`.
+    pub fn trace(mut self, ctx: TraceCtx) -> Self {
+        self.trace = Some(ctx);
+        self
+    }
+
     /// Validate and construct the request. Every shape error — missing or
     /// non-positive step policy, non-finite or zero-length span, non-finite
     /// state / cotangent / grid, adaptive tolerances on a fixed-step-only
@@ -202,6 +217,7 @@ impl SolveRequestBuilder {
             grad: self.grad,
             observe_at: self.observe_at,
             lane: self.lane,
+            trace: self.trace,
         };
         req.validate_shape()?;
         Ok(req)
@@ -222,6 +238,7 @@ impl SolveRequest {
             grad: None,
             observe_at: Vec::new(),
             lane: Lane::Interactive,
+            trace: None,
         }
     }
 

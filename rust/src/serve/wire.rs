@@ -79,6 +79,17 @@ impl SolveRequest {
         if !self.observe_at.is_empty() {
             pairs.push(("observe_at", self.observe_at.clone().into()));
         }
+        // Trace context rides as optional fields (same tolerance pattern as
+        // `lane`): hex trace id, parent span id, and — only when routed by
+        // a dispatcher — the target shard index. No version bump needed;
+        // old peers ignore the extra fields, absent fields decode as None.
+        if let Some(ctx) = self.trace {
+            pairs.push(("trace", ctx.trace.to_hex().into()));
+            pairs.push(("trace_parent", (ctx.parent as usize).into()));
+            if ctx.shard >= 0 {
+                pairs.push(("trace_shard", (ctx.shard as usize).into()));
+            }
+        }
         obj(pairs)
     }
 
@@ -114,6 +125,25 @@ impl SolveRequest {
             }
             None => Vec::new(),
         };
+        let trace = match v.opt("trace") {
+            Some(t) => {
+                let hex = t.as_str()?;
+                let id = crate::obs::TraceId::parse_hex(hex)
+                    .ok_or_else(|| anyhow::anyhow!("bad trace id '{hex}'"))?;
+                Some(crate::obs::TraceCtx {
+                    trace: id,
+                    parent: match v.opt("trace_parent") {
+                        Some(p) => p.as_usize()? as u64,
+                        None => 0,
+                    },
+                    shard: match v.opt("trace_shard") {
+                        Some(s) => s.as_usize()? as i64,
+                        None => -1,
+                    },
+                })
+            }
+            None => None,
+        };
         Ok(SolveRequest {
             dynamics: v.get("dynamics")?.as_str()?.to_string(),
             t0: v.get("t0")?.as_f64()?,
@@ -124,6 +154,7 @@ impl SolveRequest {
             grad,
             observe_at,
             lane,
+            trace,
         })
     }
 }
@@ -331,6 +362,39 @@ mod tests {
             m.insert("tab".into(), "nope".into());
         }
         assert!(SolveRequest::from_json(&bad).is_err(), "unknown tableau must not decode");
+    }
+
+    #[test]
+    fn trace_context_rides_optionally_and_round_trips() {
+        use crate::obs::{TraceCtx, TraceId};
+        // Untraced requests put no trace fields on the wire and decode
+        // back as untraced (the pre-trace schema, bit for bit).
+        let plain = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
+        let j = plain.to_json();
+        assert!(j.opt("trace").is_none(), "no trace fields for untraced requests");
+        assert!(SolveRequest::from_json(&j).unwrap().trace.is_none());
+
+        // A full context — including a dispatcher-stamped shard — survives.
+        let ctx = TraceCtx { trace: TraceId(0xdead_beef_0000_0001), parent: 42, shard: 1 };
+        let mut traced = plain.clone();
+        traced.trace = Some(ctx);
+        let j = Json::parse(&traced.to_json().to_string()).unwrap();
+        let back = SolveRequest::from_json(&j).unwrap();
+        assert_eq!(back.trace, Some(ctx));
+        assert_eq!(back.batch_key(), plain.batch_key(), "trace never joins the key");
+
+        // Front-door contexts (shard −1) omit the shard field and decode
+        // back to −1; a malformed trace id is an error, not a default.
+        let mut front = plain.clone();
+        front.trace = Some(TraceCtx { trace: TraceId(7), parent: 0, shard: -1 });
+        let j = front.to_json();
+        assert!(j.opt("trace_shard").is_none());
+        assert_eq!(SolveRequest::from_json(&j).unwrap().trace.unwrap().shard, -1);
+        let mut bad = front.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("trace".into(), "xyz".into());
+        }
+        assert!(SolveRequest::from_json(&bad).is_err());
     }
 
     #[test]

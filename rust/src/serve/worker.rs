@@ -40,8 +40,10 @@ use super::Core;
 use crate::ckpt::CkptPolicy;
 use crate::coordinator::pool::panic_msg;
 use crate::grad::{aca_backward, aca_backward_batch};
+use crate::obs::{self, SpanRec};
 use crate::ode::dense::DenseOutput;
 use crate::ode::{integrate, integrate_batch_tspans};
+use std::time::Duration;
 
 /// Worker thread body: serve batches until the work queue closes and drains.
 ///
@@ -53,6 +55,9 @@ use crate::ode::{integrate, integrate_batch_tspans};
 /// `drain`/`shutdown`. Instead the panicking batch's undelivered requests
 /// are failed with [`ServeError::Solver`] and the worker keeps serving.
 pub(crate) fn worker_loop(core: &Core) {
+    // Preallocate this thread's span recorder up front: no later record()
+    // call on this thread allocates, traced batch or not.
+    obs::thread_init();
     while let Some(batch) = core.work_q.recv_one() {
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| execute_batch(core, &batch)));
@@ -72,6 +77,26 @@ pub(crate) fn worker_loop(core: &Core) {
 }
 
 type SampleOutcome = Result<(Payload, RequestStats), ServeError>;
+
+/// Clock readings and hot-counter snapshots bracketing the batched
+/// attempt's phases — what turns one executed batch into per-item
+/// `forward`/`reverse` spans with exact (ManualClock-deterministic)
+/// durations and round/sweep counts. Captured unconditionally (three clock
+/// reads and three thread-local copies per *batch*, nowhere near the hot
+/// loops); only read when the batch carries traced items.
+#[derive(Clone, Copy, Default)]
+struct PhaseMarks {
+    fwd_start: Duration,
+    fwd_end: Duration,
+    bwd_end: Duration,
+    ctr_before: [u64; 4],
+    ctr_mid: [u64; 4],
+    ctr_after: [u64; 4],
+}
+
+fn ctr_delta(before: &[u64; 4], after: &[u64; 4], i: usize) -> u64 {
+    after[i].saturating_sub(before[i])
+}
 
 /// Run one formed batch and deliver every member's response.
 pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
@@ -116,6 +141,7 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
     // like it is error-contained: a dynamics whose `eval` or `vjp` panics on
     // one sample's state sends the batch down the same per-sample fallback
     // an integration error does.
+    let mut marks = PhaseMarks::default();
     let batched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<Vec<SampleOutcome>> {
             // A gradient batch must carry a cotangent on every member (the
@@ -137,8 +163,14 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
             } else {
                 None
             };
+            marks.ctr_before = obs::counters();
+            marks.fwd_start = core.clock.now();
             let bt = integrate_batch_tspans(&*f, &t0s, &t1s, &z0, tab, &opts)?;
+            marks.fwd_end = core.clock.now();
+            marks.ctr_mid = obs::counters();
             let grads = lam.map(|lam| aca_backward_batch(&*f, tab, &bt, &lam));
+            marks.bwd_end = core.clock.now();
+            marks.ctr_after = obs::counters();
             Ok((0..n)
                 .map(|i| {
                     let tr = &bt.tracks[i];
@@ -171,6 +203,7 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                 .collect())
         },
     ));
+    let fell_back = !matches!(batched, Ok(Ok(_)));
     let outcomes: Vec<SampleOutcome> = match batched {
         Ok(Ok(v)) => v,
         // Per-sample fallback: isolate the poison sample(s) — error or
@@ -232,7 +265,11 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
             .collect(),
     };
 
-    let service = core.clock.now().saturating_sub(started);
+    let done = core.clock.now();
+    let service = done.saturating_sub(started);
+    // Spans go to the global store *before* any response is fulfilled, so
+    // a trace is complete by the time its requester wakes.
+    record_solve_spans(batch, &outcomes, &marks, started, done, fell_back);
     for (item, outcome) in batch.items.iter().zip(outcomes) {
         let queue_wait = started.saturating_sub(item.submitted);
         match outcome {
@@ -248,6 +285,71 @@ pub(crate) fn execute_batch(core: &Core, batch: &FormedBatch) {
                 core.complete(&item.slot, item.cost, Err(e));
             }
         }
+    }
+}
+
+/// Per-item span trees for one executed batch. Batched path:
+/// `solve → forward [→ reverse [→ replay]]`, with NFE attribution drawn
+/// from the same [`crate::grad::CostMeter`] the response carries (so
+/// forward + reverse + replay NFE sums to the meter totals by
+/// construction) and round/sweep counts from the hot-counter deltas around
+/// each phase. Fallback path: `solve → fallback`. Untraced items emit
+/// nothing.
+fn record_solve_spans(
+    batch: &FormedBatch,
+    outcomes: &[SampleOutcome],
+    marks: &PhaseMarks,
+    started: Duration,
+    done: Duration,
+    fell_back: bool,
+) {
+    let n = batch.items.len() as u64;
+    let mut any = false;
+    for (item, outcome) in batch.items.iter().zip(outcomes) {
+        let Some(ctx) = item.req.trace else { continue };
+        any = true;
+        let solve = SpanRec::new(ctx, obs::SOLVE, started, done).attr("batch_size", n);
+        obs::record(solve);
+        let inner = solve.ctx();
+        if fell_back {
+            let span = SpanRec::new(inner, obs::FALLBACK, started, done);
+            obs::record(match outcome {
+                Ok((_, stats)) => span.attr("nfe", stats.nfe as u64),
+                Err(_) => span.attr("status", 1),
+            });
+            continue;
+        }
+        let meter = match outcome {
+            Ok((Payload::Gradient { grad, .. }, _)) => Some(&grad.meter),
+            _ => None,
+        };
+        let fwd_nfe = match outcome {
+            Ok((_, stats)) => stats.nfe as u64,
+            Err(_) => 0,
+        };
+        obs::record(
+            SpanRec::new(inner, obs::FORWARD, marks.fwd_start, marks.fwd_end)
+                .attr("nfe", fwd_nfe)
+                .attr("rounds", ctr_delta(&marks.ctr_before, &marks.ctr_mid, obs::CTR_FWD_ROUNDS))
+                .attr("sweeps", ctr_delta(&marks.ctr_before, &marks.ctr_mid, obs::CTR_FWD_SWEEPS)),
+        );
+        if let Some(m) = meter {
+            let rev = SpanRec::new(inner, obs::REVERSE, marks.fwd_end, marks.bwd_end)
+                .attr("nfe", m.nfe_backward as u64)
+                .attr("rounds", ctr_delta(&marks.ctr_mid, &marks.ctr_after, obs::CTR_REV_ROUNDS))
+                .attr("sweeps", ctr_delta(&marks.ctr_mid, &marks.ctr_after, obs::CTR_REV_SWEEPS));
+            obs::record(rev);
+            if m.nfe_replay > 0 {
+                obs::record(
+                    SpanRec::event(rev.ctx(), obs::REPLAY, marks.bwd_end)
+                        .attr("nfe", m.nfe_replay as u64)
+                        .attr("bytes", m.replay_peak_bytes as u64),
+                );
+            }
+        }
+    }
+    if any {
+        obs::publish();
     }
 }
 
@@ -323,6 +425,7 @@ mod tests {
             items: vec![pend(with_grad.clone(), slot1), pend(without_grad.clone(), slot2)],
             reason: FlushReason::Drain,
             triggered_at: Duration::ZERO,
+            deferred: 0,
         };
         execute_batch(&core, &batch);
 
@@ -378,6 +481,7 @@ mod tests {
             items,
             reason: FlushReason::Size,
             triggered_at: Duration::ZERO,
+            deferred: 0,
         };
         execute_batch(&core, &batch);
         for h in handles {
@@ -425,6 +529,7 @@ mod tests {
             items,
             reason: FlushReason::Size,
             triggered_at: Duration::ZERO,
+            deferred: 0,
         };
         execute_batch(&core, &batch);
         for (h, req) in handles.into_iter().zip(&reqs) {
@@ -445,5 +550,74 @@ mod tests {
             }
         }
         assert_eq!(core.inflight.lock().unwrap().count, 0);
+    }
+
+    /// Traced gradient batch under a thinning checkpoint budget: the span
+    /// tree is `solve → forward, reverse → replay`, and the per-span NFE
+    /// attribution sums exactly to the response's `CostMeter` totals.
+    #[test]
+    fn traced_grad_batch_emits_attributed_span_tree() {
+        let mut core = test_core(1);
+        core.cfg.ckpt_budget_bytes = 64; // tiny budget → thinning → replay
+        let trace = crate::obs::mint(Duration::from_nanos(77));
+        let ctx = crate::obs::TraceCtx::root(trace);
+        let mut req = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![2.0, 0.0], 1e-6, 1e-8)
+            .unwrap()
+            .with_grad(vec![1.0, 0.0]);
+        req.trace = Some(ctx);
+        let key = req.batch_key();
+        let (h, slot) = ResponseHandle::new();
+        let batch = FormedBatch {
+            key,
+            items: vec![pend(req, slot)],
+            reason: FlushReason::Drain,
+            triggered_at: Duration::ZERO,
+            deferred: 0,
+        };
+        execute_batch(&core, &batch);
+        let resp = h.try_take().expect("answered").expect("succeeds");
+        let meter = resp.grad().expect("gradient").meter.clone();
+        assert!(meter.nfe_replay > 0, "the tiny budget must force replay");
+
+        let spans = crate::obs::global().take(trace);
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec![obs::SOLVE, obs::FORWARD, obs::REVERSE, obs::REPLAY]);
+        let (solve, fwd, rev, replay) = (&spans[0], &spans[1], &spans[2], &spans[3]);
+        assert_eq!(solve.parent, 0, "root context");
+        assert_eq!(solve.get_attr("batch_size"), Some(1));
+        assert_eq!(fwd.parent, solve.span);
+        assert_eq!(rev.parent, solve.span);
+        assert_eq!(replay.parent, rev.span, "replay is attributed under reverse");
+        assert!(fwd.get_attr("rounds").unwrap() > 0, "forward active-set rounds counted");
+        assert!(fwd.get_attr("sweeps").unwrap() > 0, "forward stage sweeps counted");
+        assert!(rev.get_attr("rounds").unwrap() > 0, "reverse rounds counted");
+        assert!(rev.get_attr("sweeps").unwrap() > 0, "reverse stage sweeps counted");
+        assert!(replay.get_attr("bytes").unwrap() > 0, "replay buffer bytes attributed");
+        let span_nfe = fwd.get_attr("nfe").unwrap()
+            + rev.get_attr("nfe").unwrap()
+            + replay.get_attr("nfe").unwrap();
+        let meter_nfe = (meter.nfe_forward + meter.nfe_backward + meter.nfe_replay) as u64;
+        assert_eq!(span_nfe, meter_nfe, "span NFE attribution sums to the CostMeter");
+    }
+
+    /// An untraced batch leaves no footprint in the trace store and a
+    /// traced batch's spans never leak into another trace.
+    #[test]
+    fn untraced_batch_records_nothing() {
+        let core = test_core(1);
+        let probe = crate::obs::mint(Duration::from_nanos(78));
+        let req = SolveRequest::adaptive("vdp", 0.0, 1.0, vec![1.0, 0.0], 1e-6, 1e-8).unwrap();
+        let key = req.batch_key();
+        let (h, slot) = ResponseHandle::new();
+        let batch = FormedBatch {
+            key,
+            items: vec![pend(req, slot)],
+            reason: FlushReason::Drain,
+            triggered_at: Duration::ZERO,
+            deferred: 0,
+        };
+        execute_batch(&core, &batch);
+        assert!(h.try_take().expect("answered").is_ok());
+        assert!(crate::obs::global().get(probe).is_empty());
     }
 }

@@ -8,7 +8,9 @@
 //! step still completes against the smaller world's reference; the
 //! sharded serve dispatcher returns answers bit-identical to direct
 //! solves, survives a shard crash, and propagates `Overloaded`
-//! backpressure across the wire.
+//! backpressure across the wire; and one traced HTTP request routed
+//! through the dispatcher yields a single stitched cross-process JSONL
+//! trace whose NFE attribution sums to the response's `CostMeter`.
 
 use nodal::dist::reduce::leaves_from_json;
 use nodal::dist::train::{hello_message, partial_messages};
@@ -17,11 +19,18 @@ use nodal::dist::{
     run_worker, send_frame, shard_range, Dispatcher, DispatcherConfig, DistGrad, RootOpts,
     ShardServer, StepSpec, TransportOpts, DEFAULT_GROUPED_REDUCE_THRESHOLD_BYTES,
 };
+use nodal::obs;
 use nodal::ode::analytic::{Linear, ThreeBody};
 use nodal::ode::{integrate, tableau, IntegrateOpts, OdeFunc};
-use nodal::serve::{ServeConfig, ServeError, SolveRequest, SolveServer, Tolerance};
+use nodal::serve::{
+    HttpConfig, HttpServer, ServeConfig, ServeError, SolveRequest, SolveResponse, SolveServer,
+    Tolerance,
+};
+use nodal::util::json::Json;
 use nodal::util::Pcg64;
-use std::net::TcpListener;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn bits(xs: &[f32]) -> Vec<u32> {
@@ -353,4 +362,167 @@ fn overload_backpressure_propagates_end_to_end() {
     }
     let resp = results[0].as_ref().unwrap();
     assert_eq!(bits(resp.z_t1()), bits(&direct_solve(&reqs[0])), "admitted answer drifted");
+}
+
+// ---------------------------------------------------------------------------
+// Cross-process trace stitching.
+
+/// Minimal raw HTTP client (same discipline as `http_integration.rs`: the
+/// test frames its own traffic instead of trusting the code under test).
+fn send_http(s: &mut TcpStream, method: &str, path: &str, hdrs: &[(&str, &str)], body: &str) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n", body.len());
+    for (k, v) in hdrs {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
+    s.write_all(req.as_bytes()).unwrap();
+}
+
+/// Read one response: status, lower-cased headers, body.
+fn read_http(r: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_string();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').unwrap();
+        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim().to_string());
+        if k == "content-length" {
+            len = v.parse().unwrap();
+        }
+        headers.push((k, v));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8(body).unwrap())
+}
+
+/// The PR's acceptance bar: one traced gradient request through the HTTP
+/// front door, routed by the dispatcher across a two-shard fleet running a
+/// thinning checkpoint budget, yields a **single stitched JSONL trace** —
+/// front-door spans, the routing event tagged with the chosen shard, and
+/// the shard-side queue-wait / batch-formation / solve / forward / reverse
+/// / replay phases all under one trace id, with per-span NFE attribution
+/// summing exactly to the `CostMeter` the response itself carries.
+#[test]
+fn traced_dispatcher_solve_yields_one_stitched_jsonl_trace() {
+    let cfg = ServeConfig {
+        max_batch_size: 8,
+        // Tiny deadline: the singleton batch flushes on the next batcher
+        // tick (the HTTP request blocks its connection until answered).
+        max_queue_delay: Duration::from_micros(50),
+        queue_capacity: 64,
+        workers: 1,
+        ckpt_budget_bytes: 64, // tiny budget → thinned store → segment replay
+        mem_budget_bytes: 0,
+        quota_quantum: 32,
+        quota_max_deficit: 128,
+    };
+    let shard_a = ShardServer::spawn(shard_server(Some(cfg.clone())), "127.0.0.1:0").unwrap();
+    let shard_b = ShardServer::spawn(shard_server(Some(cfg)), "127.0.0.1:0").unwrap();
+    let addrs = vec![shard_a.addr().to_string(), shard_b.addr().to_string()];
+    let dispatcher = Arc::new(Dispatcher::connect(&addrs, &DispatcherConfig::default()).unwrap());
+
+    let dir = std::env::temp_dir().join(format!("nodal-trace-dist-{}", std::process::id()));
+    let http_cfg = HttpConfig {
+        trace: obs::TraceKnobs { sample_n: 0, dir: dir.clone() },
+        ..HttpConfig::default()
+    };
+    let mut http =
+        HttpServer::spawn_front_at(dispatcher.clone(), "127.0.0.1:0", http_cfg).unwrap();
+
+    // 20 fixed rk4 steps of a dim-3 state: far past the 64-byte budget, so
+    // the backward pass must replay thinned segments.
+    let id = "00000000000000d1";
+    let req = SolveRequest::fixed("linear", 0.0, 1.0, vec![0.4, -0.2, 0.9], 0.05)
+        .unwrap()
+        .with_grad(vec![1.0, 1.0, 1.0]);
+    let mut w = TcpStream::connect(http.addr()).unwrap();
+    let mut r = BufReader::new(w.try_clone().unwrap());
+    send_http(&mut w, "POST", "/v1/solve", &[("x-nodal-trace", id)], &req.to_json().to_string());
+    let (status, headers, body) = read_http(&mut r);
+    assert_eq!(status, 200, "{body}");
+    let echoed = headers.iter().find(|(k, _)| k == "x-nodal-trace").map(|(_, v)| v.as_str());
+    assert_eq!(echoed, Some(id), "trace id echoes on the response");
+    let resp = SolveResponse::from_json(&Json::parse(&body).unwrap()).unwrap();
+    let meter = resp.grad().expect("gradient payload").meter.clone();
+    assert!(meter.nfe_replay > 0, "the tiny budget must force segment replay");
+
+    // The JSONL export was written before the response bytes, so it is
+    // complete by now: one file, one trace, every phase stitched in.
+    let text = std::fs::read_to_string(dir.join(format!("{id}.jsonl"))).unwrap();
+    let spans: Vec<obs::SpanRec> = text
+        .lines()
+        .map(|l| obs::span_from_json(&Json::parse(l).unwrap()).unwrap())
+        .collect();
+    let find = |name: &str| {
+        let hits: Vec<&obs::SpanRec> = spans.iter().filter(|s| s.name == name).collect();
+        assert_eq!(hits.len(), 1, "expected exactly one {name} span");
+        *hits[0]
+    };
+    let http_span = find(obs::HTTP_REQUEST);
+    let adm = find(obs::ADMISSION);
+    let dispatch = find(obs::DISPATCH);
+    let qw = find(obs::QUEUE_WAIT);
+    let bf = find(obs::BATCH_FORM);
+    let solve = find(obs::SOLVE);
+    let fwd = find(obs::FORWARD);
+    let rev = find(obs::REVERSE);
+    let replay = find(obs::REPLAY);
+
+    // One stitched tree: front door → routing event → shard-side phases.
+    assert_eq!(http_span.parent, 0, "http_request is the root");
+    assert_eq!(http_span.get_attr("status"), Some(200));
+    assert_eq!(adm.parent, http_span.span);
+    assert_eq!(dispatch.parent, adm.span, "routing hangs off admission");
+    for phase in [&qw, &bf, &solve] {
+        assert_eq!(phase.parent, dispatch.span, "{} under dispatch", phase.name);
+    }
+    assert_eq!(fwd.parent, solve.span);
+    assert_eq!(rev.parent, solve.span);
+    assert_eq!(replay.parent, rev.span, "replay is attributed under reverse");
+
+    // Every shard-side span is tagged with the one shard the router chose.
+    let chosen = dispatch.shard;
+    assert!(chosen == 0 || chosen == 1, "chosen shard index, got {chosen}");
+    for phase in [&qw, &bf, &solve, &fwd, &rev, &replay] {
+        assert_eq!(phase.shard, chosen, "{} tagged with the serving shard", phase.name);
+    }
+    assert_eq!(http_span.shard, -1, "front-door spans are shard-agnostic");
+
+    // NFE attribution: per-phase span attrs reproduce the CostMeter the
+    // response carries, and their sum is the request's total f-eval bill.
+    assert_eq!(fwd.get_attr("nfe"), Some(meter.nfe_forward as u64));
+    assert_eq!(rev.get_attr("nfe"), Some(meter.nfe_backward as u64));
+    assert_eq!(replay.get_attr("nfe"), Some(meter.nfe_replay as u64));
+    let span_nfe = fwd.get_attr("nfe").unwrap()
+        + rev.get_attr("nfe").unwrap()
+        + replay.get_attr("nfe").unwrap();
+    assert_eq!(
+        span_nfe,
+        (meter.nfe_forward + meter.nfe_backward + meter.nfe_replay) as u64,
+        "span NFE attribution sums to the CostMeter totals"
+    );
+    assert!(fwd.get_attr("rounds").unwrap() > 0, "forward active-set rounds counted");
+    assert!(fwd.get_attr("sweeps").unwrap() > 0, "forward stage sweeps counted");
+
+    // The trace route serves the same stitched tree it exported.
+    send_http(&mut w, "GET", &format!("/v1/trace/{id}"), &[], "");
+    let (status, _, body) = read_http(&mut r);
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    let served = obs::spans_from_json(doc.get("spans").unwrap());
+    assert_eq!(served.len(), spans.len(), "route and JSONL agree on the span count");
+
+    http.shutdown();
+    dispatcher.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

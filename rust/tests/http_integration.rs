@@ -43,7 +43,23 @@ impl Response {
 /// Write one request. An explicit `content-length` is always sent (zero for
 /// bodyless requests) so the server's framing is exercised uniformly.
 fn send_request(s: &mut TcpStream, method: &str, path: &str, body: &str) {
-    let req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}", body.len());
+    send_request_with(s, method, path, &[], body);
+}
+
+/// Like [`send_request`], with extra request headers.
+fn send_request_with(
+    s: &mut TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\ncontent-length: {}\r\n", body.len());
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
     s.write_all(req.as_bytes()).unwrap();
 }
 
@@ -251,7 +267,7 @@ fn overloaded_maps_to_429_with_retry_after() {
 /// zero batches.
 #[test]
 fn garbage_never_reaches_a_worker() {
-    let http_cfg = HttpConfig { port: 0, max_body_bytes: 1024 };
+    let http_cfg = HttpConfig { max_body_bytes: 1024, ..HttpConfig::default() };
     let (server, mut http) = spawn_front_door(fast_flush_config(), http_cfg);
 
     // Malformed JSON: 400, and the connection survives (framing is intact).
@@ -305,4 +321,75 @@ fn garbage_never_reaches_a_worker() {
     assert_eq!(m.batches, 0, "garbage must never dispatch a batch");
     http.shutdown();
     server.shutdown();
+}
+
+/// An `x-nodal-trace` request header turns on tracing for that one request:
+/// the id echoes back on the response, `GET /v1/trace/<id>` then serves the
+/// full span tree (front-door spans plus queue/batch/solve phases), the
+/// JSONL export lands in the configured directory, unknown and malformed
+/// ids answer 404, and the Prometheus metrics view answers next to JSON —
+/// all on one keep-alive connection.
+#[test]
+fn trace_header_round_trips_and_trace_route_serves_spans() {
+    use nodal::obs::{self, TraceKnobs};
+
+    let dir = std::env::temp_dir().join(format!("nodal-trace-http-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let http_cfg = HttpConfig {
+        trace: TraceKnobs { sample_n: 0, dir: dir.clone() },
+        ..HttpConfig::default()
+    };
+    let (server, mut http) = spawn_front_door(fast_flush_config(), http_cfg);
+    let (mut w, mut r) = connect(http.addr());
+
+    let id = "00000000000000ab";
+    let req = SolveRequest::fixed("vdp", 0.0, 1.0, vec![2.0, 0.0], 0.1).unwrap();
+    let hdrs = [("x-nodal-trace", id)];
+    send_request_with(&mut w, "POST", "/v1/solve", &hdrs, &req.to_json().to_string());
+    let resp = read_response(&mut r).expect("traced solve response");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.header("x-nodal-trace"), Some(id), "trace id echoes on the response");
+
+    // The trace route serves the stitched span tree for that id. The
+    // response bytes were written only after publish + export, so this
+    // read-after-answer is not racy.
+    send_request(&mut w, "GET", &format!("/v1/trace/{id}"), "");
+    let resp = read_response(&mut r).expect("trace route response");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let doc = Json::parse(&resp.body).unwrap();
+    let spans = obs::spans_from_json(doc.get("spans").unwrap());
+    let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+    for want in ["http_request", "admission", "queue_wait", "batch_form", "solve", "forward"] {
+        assert!(names.contains(&want), "missing {want} span in {names:?}");
+    }
+    let root = spans.iter().find(|s| s.name == "http_request").unwrap();
+    assert_eq!(root.parent, 0, "http_request is the trace root");
+    assert_eq!(root.get_attr("status"), Some(200), "root records the HTTP status");
+    let solve = spans.iter().find(|s| s.name == "solve").unwrap();
+    let fwd = spans.iter().find(|s| s.name == "forward").unwrap();
+    assert_eq!(fwd.parent, solve.span, "forward nests under solve");
+
+    // Deterministic JSONL export landed under the configured directory.
+    assert!(dir.join(format!("{id}.jsonl")).is_file(), "trace export written");
+
+    // Unknown and malformed ids are 404s, same connection.
+    send_request(&mut w, "GET", "/v1/trace/00000000000000ff", "");
+    assert_eq!(read_response(&mut r).expect("unknown id").status, 404);
+    send_request(&mut w, "GET", "/v1/trace/zzz", "");
+    assert_eq!(read_response(&mut r).expect("malformed id").status, 404);
+
+    // Prometheus exposition rides the same metrics route.
+    send_request(&mut w, "GET", "/v1/metrics?format=prometheus", "");
+    let resp = read_response(&mut r).expect("prometheus response");
+    assert_eq!(resp.status, 200);
+    assert!(
+        resp.header("content-type").unwrap_or("").starts_with("text/plain"),
+        "prometheus view is text exposition"
+    );
+    assert!(resp.body.contains("nodal_requests_completed_total 1"), "{}", resp.body);
+    assert!(resp.body.contains("nodal_http_connections_accepted_total 1"), "{}", resp.body);
+
+    http.shutdown();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -567,6 +567,92 @@ fn prop_budgeted_ckpt_grads_bit_equal_dense() {
     assert!(saw_replay, "sweep never thinned enough to exercise segment replay");
 }
 
+/// Property: tracing is answer-neutral — the same request solved with and
+/// without a trace context yields bit-identical payloads (final states,
+/// `dl_dz0`, `dl_dtheta`, and every cost-meter field) across all four
+/// analytic dynamics, fixed and adaptive, forward and gradient classes.
+/// The trace context is deliberately excluded from the batch key, and no
+/// solver code path may branch on it; this pins that contract.
+#[test]
+fn prop_tracing_on_off_is_bit_neutral_all_dynamics() {
+    use nodal::obs::{self, TraceCtx};
+    use nodal::serve::{Payload, ServeConfig, SolveRequest, SolveServer};
+    use std::time::Duration;
+
+    let server = SolveServer::builder()
+        .register("linear", Linear::new(-0.6, 3))
+        .register("vdp", VanDerPol::new(0.4))
+        .register("threebody", ThreeBody::new([1e-3, 8e-4, 1.2e-3]))
+        .register("convflow", ConvFlow::random(4, 4, 5, 0.4))
+        .config(ServeConfig {
+            max_batch_size: 8,
+            max_queue_delay: Duration::from_micros(200),
+            queue_capacity: 64,
+            workers: 2,
+            ckpt_budget_bytes: 0,
+            mem_budget_bytes: 0,
+            quota_quantum: 32,
+            quota_max_deficit: 128,
+        })
+        .start();
+
+    let mut rng = Pcg64::seed(1515);
+    for (name, f) in all_dynamics() {
+        let d = f.dim();
+        for case in 0..4 {
+            let fixed = case % 2 == 0;
+            let grad = case >= 2;
+            let t1 = rng.range(0.2, 0.6);
+            let z0: Vec<f32> = (0..d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let lam: Vec<f32> = (0..d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let mk = || {
+                let r = if fixed {
+                    SolveRequest::fixed(name, 0.0, t1, z0.clone(), 0.02).unwrap()
+                } else {
+                    SolveRequest::adaptive(name, 0.0, t1, z0.clone(), 1e-6, 1e-8).unwrap()
+                };
+                if grad {
+                    r.with_grad(lam.clone())
+                } else {
+                    r
+                }
+            };
+            let plain = server.submit(mk()).unwrap().wait().unwrap();
+            let id = obs::mint(Duration::from_nanos(1 + case as u64));
+            let mut req = mk();
+            req.trace = Some(TraceCtx::root(id));
+            let traced = server.submit(req).unwrap().wait().unwrap();
+            let spans = obs::global().take(id);
+            assert!(!spans.is_empty(), "{name} case {case}: traced run recorded nothing");
+
+            let ctx = format!("{name} case {case}");
+            match (&plain.payload, &traced.payload) {
+                (Payload::Forward { z_t1: a }, Payload::Forward { z_t1: b }) => {
+                    assert_eq!(a, b, "{ctx}: final state");
+                }
+                (
+                    Payload::Gradient { z_t1: a, grad: ga },
+                    Payload::Gradient { z_t1: b, grad: gb },
+                ) => {
+                    assert_eq!(a, b, "{ctx}: final state");
+                    assert_eq!(ga.dl_dz0, gb.dl_dz0, "{ctx}: dl_dz0");
+                    assert_eq!(ga.dl_dtheta, gb.dl_dtheta, "{ctx}: dl_dtheta");
+                    assert_eq!(ga.meter.nfe_forward, gb.meter.nfe_forward, "{ctx}: nfe_f");
+                    assert_eq!(ga.meter.nfe_backward, gb.meter.nfe_backward, "{ctx}: nfe_b");
+                    assert_eq!(ga.meter.nfe_replay, gb.meter.nfe_replay, "{ctx}: nfe_r");
+                    assert_eq!(ga.meter.vjp_calls, gb.meter.vjp_calls, "{ctx}: vjps");
+                    assert_eq!(ga.meter.n_steps, gb.meter.n_steps, "{ctx}: steps");
+                    assert_eq!(ga.meter.n_rejected, gb.meter.n_rejected, "{ctx}: rejected");
+                }
+                _ => panic!("{ctx}: payload classes diverged"),
+            }
+            assert_eq!(plain.stats.nfe, traced.stats.nfe, "{ctx}: stats nfe");
+            assert_eq!(plain.stats.steps, traced.stats.steps, "{ctx}: stats steps");
+            assert_eq!(plain.stats.n_rejected, traced.stats.n_rejected, "{ctx}: stats rej");
+        }
+    }
+}
+
 /// Property: `integrate_batch` + `aca_backward_batch` reproduce per-sample
 /// `integrate` + `aca_backward` — bit-exact on the fixed-step path and to
 /// ≤ 1e-6 relative on the adaptive path — for B ∈ {1, 3, 8} across random

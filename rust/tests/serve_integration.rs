@@ -11,7 +11,10 @@ use nodal::grad::aca_backward;
 use nodal::ode::analytic::{ConvFlow, Linear, VanDerPol};
 use nodal::ode::dense::DenseOutput;
 use nodal::ode::{integrate, integrate_batch, tableau, IntegrateOpts, OdeFunc};
-use nodal::serve::{Clock, ManualClock, ServeConfig, ServeError, SolveRequest, SolveServer};
+use nodal::obs::{self, TraceCtx};
+use nodal::serve::{
+    Clock, FlushReason, Lane, ManualClock, ServeConfig, ServeError, SolveRequest, SolveServer,
+};
 use nodal::util::Pcg64;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -732,6 +735,7 @@ fn flooding_tenant_does_not_starve_calm_tenant() {
             .find(|(k, _)| k == key)
             .unwrap_or_else(|| panic!("no per-key queue-wait for {key}"))
             .1
+            .clone()
     };
     let hot = wait("hot");
     let calm = wait("calm");
@@ -748,4 +752,77 @@ fn flooding_tenant_does_not_starve_calm_tenant() {
         hot.p99_ms
     );
     assert!(calm.max_ms < hot.max_ms, "calm {} vs hot {}", calm.max_ms, hot.max_ms);
+}
+
+/// Deterministic tracing under [`ManualClock`]: a scripted 3-request
+/// mixed-lane scenario (two interactive requests co-batch, one batch-lane
+/// request rides alone) must produce *exactly* the expected span tree per
+/// trace — names, parent edges, attributes, and nanosecond-exact
+/// durations. The clock never advances during execution (plain `Linear`
+/// dynamics), so every post-submit timestamp lands on the drain instant
+/// and queue waits equal the scripted submission offsets.
+#[test]
+fn traced_mixed_lane_batch_yields_exact_span_trees() {
+    let clock = ManualClock::new();
+    let server = SolveServer::builder()
+        .register("linear", Linear::new(-0.5, 2))
+        .config(test_config(64, 64, 1))
+        .clock(clock.clone())
+        .start();
+
+    let ids: Vec<_> = (1..=3u64).map(|i| obs::mint(Duration::from_nanos(i))).collect();
+    let mk = |i: usize, lane: Lane, id: obs::TraceId| {
+        let mut req =
+            SolveRequest::fixed("linear", 0.0, 1.0, vec![0.1 * (i + 1) as f32, -1.0], 0.25)
+                .unwrap();
+        req.lane = lane;
+        req.trace = Some(TraceCtx::root(id));
+        req
+    };
+    // Script: submissions at 1/2/3 ms of virtual time; nothing flushes
+    // (max_batch 64, huge deadline) until drain() at 10 ms.
+    clock.set(Duration::from_millis(1));
+    let a = server.submit(mk(0, Lane::Interactive, ids[0])).unwrap();
+    clock.set(Duration::from_millis(2));
+    let b = server.submit(mk(1, Lane::Interactive, ids[1])).unwrap();
+    clock.set(Duration::from_millis(3));
+    let c = server.submit(mk(2, Lane::Batch, ids[2])).unwrap();
+    clock.set(Duration::from_millis(10));
+    server.drain();
+    let (ra, rb, rc) = (a.wait().unwrap(), b.wait().unwrap(), c.wait().unwrap());
+
+    let ms = |n: u64| n * 1_000_000;
+    let check = |id: obs::TraceId, submitted_ms: u64, lane: Lane, size: u64, nfe: usize| {
+        let spans = obs::global().take(id);
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec![obs::QUEUE_WAIT, obs::BATCH_FORM, obs::SOLVE, obs::FORWARD],
+            "span tree for trace {}",
+            id.to_hex()
+        );
+        let (qw, bf, solve, fwd) = (&spans[0], &spans[1], &spans[2], &spans[3]);
+        for s in &spans {
+            assert_eq!(s.trace, id.0, "all spans join the request's trace");
+        }
+        // Queue wait runs from the scripted submission instant to the
+        // drain-triggered flush — exact to the nanosecond.
+        assert_eq!((qw.start_ns, qw.end_ns), (ms(submitted_ms), ms(10)), "queue wait");
+        assert_eq!(qw.get_attr("lane"), Some(lane as u64));
+        assert_eq!(qw.get_attr("deferred"), Some(0), "light traffic: no DRR deferral");
+        assert_eq!((bf.start_ns, bf.end_ns), (ms(10), ms(10)), "batch forms at drain");
+        assert_eq!(bf.get_attr("reason"), Some(FlushReason::Drain as u64));
+        assert_eq!(bf.get_attr("size"), Some(size));
+        assert_eq!((solve.start_ns, solve.end_ns), (ms(10), ms(10)));
+        assert_eq!(solve.get_attr("batch_size"), Some(size));
+        assert_eq!(qw.parent, 0, "phase spans parent to the root context");
+        assert_eq!(fwd.parent, solve.span, "forward nests under solve");
+        assert_eq!(fwd.get_attr("nfe"), Some(nfe as u64));
+        // rk4 over t ∈ [0, 1] at h = 0.25: 4 rounds, 4 stage sweeps each.
+        assert_eq!(fwd.get_attr("rounds"), Some(4));
+        assert_eq!(fwd.get_attr("sweeps"), Some(16));
+    };
+    check(ids[0], 1, Lane::Interactive, 2, ra.stats.nfe);
+    check(ids[1], 2, Lane::Interactive, 2, rb.stats.nfe);
+    check(ids[2], 3, Lane::Batch, 1, rc.stats.nfe);
 }

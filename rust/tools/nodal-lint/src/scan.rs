@@ -56,6 +56,7 @@ const ENV_HELPERS: &[(&str, &str)] = &[
     ("ckpt/mod.rs", "env_budget_bytes"),
     ("serve/mod.rs", "env_clamped"),
     ("serve/http.rs", "env_clamped"),
+    ("obs/mod.rs", "trace_env"),
     ("dist/env.rs", "from_env"),
     ("dist/env.rs", "env_usize"),
 ];

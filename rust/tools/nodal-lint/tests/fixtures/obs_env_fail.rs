@@ -1,0 +1,10 @@
+// Fixture: the same helper name OUTSIDE the designated file (virtual path
+// `rust/src/obs/export.rs`) must be flagged — the env-knob allowlist is
+// (path suffix, fn name) pairs, never fn name alone.
+
+pub fn trace_env() -> u64 {
+    match std::env::var("NODAL_TRACE_SAMPLE_N").ok().and_then(|v| v.parse::<u64>().ok()) {
+        Some(n) => n,
+        None => 0,
+    }
+}

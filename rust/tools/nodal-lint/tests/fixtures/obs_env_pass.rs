@@ -1,0 +1,18 @@
+// Fixture: the tracing subsystem's parse-and-clamp helper (virtual path
+// `rust/src/obs/mod.rs`) is a designated env reader — `NODAL_TRACE_*`
+// knobs are parsed and clamped there and nowhere else.
+
+pub fn trace_env() -> (u64, String) {
+    let sample_n = match std::env::var("NODAL_TRACE_SAMPLE_N")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+    {
+        Some(n) => n.clamp(0, 1_000_000),
+        None => 0,
+    };
+    let dir = match std::env::var("NODAL_TRACE_DIR") {
+        Ok(d) if !d.is_empty() => d,
+        _ => String::from("results/trace"),
+    };
+    (sample_n, dir)
+}

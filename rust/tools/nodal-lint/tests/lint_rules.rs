@@ -66,6 +66,19 @@ fn http_env_fail_fixture_fires_outside_the_designated_file() {
 }
 
 #[test]
+fn obs_env_pass_fixture_is_clean() {
+    let out = lint_one("rust/src/obs/mod.rs", "obs_env_pass.rs");
+    assert!(out.clean(), "{:?}", out.diags);
+}
+
+#[test]
+fn obs_env_fail_fixture_fires_outside_the_designated_file() {
+    // Same helper name, wrong file: the allowlist is (path, fn) pairs.
+    let out = lint_one("rust/src/obs/export.rs", "obs_env_fail.rs");
+    assert_eq!(rules_of(&out), vec![R_ENV], "{:?}", out.diags);
+}
+
+#[test]
 fn knob_table_flags_undocumented_knob() {
     let lib = ("rust/src/lib.rs".to_string(), fixture("knob_table_lib.rs"));
     // A documented knob passes…
@@ -267,6 +280,7 @@ fn every_rule_has_a_failing_fixture() {
     let cases = [
         (R_ENV, "rust/src/ode/solver.rs", "env_knob_fail.rs"),
         (R_ENV, "rust/src/serve/wire.rs", "http_env_fail.rs"),
+        (R_ENV, "rust/src/obs/export.rs", "obs_env_fail.rs"),
         (R_DET, "rust/src/ode/solver.rs", "determinism_fail.rs"),
         (R_HOT, "rust/src/grad/batch.rs", "hot_alloc_fail.rs"),
         (R_PANIC, "rust/src/serve/worker.rs", "panic_fail.rs"),
